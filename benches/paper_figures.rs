@@ -1,0 +1,57 @@
+//! Regenerates EVERY table and figure of the paper's evaluation and times
+//! each stage (the `cargo bench` target for the reproduction itself).
+//!
+//! Set `PISA_BENCH_SCALE=1.0` to regenerate the EXPERIMENTS.md numbers
+//! exactly (≈1–2 min); the default 0.25 keeps the shape at reduced size.
+
+use pisa_nmc::coordinator::{analyze_suite, figures, run_suite};
+use pisa_nmc::runtime::Runtime;
+use pisa_nmc::testkit::bench::{bench, bench_scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    println!("== paper figure/table regeneration (scale {scale}) ==\n");
+
+    // Tables are config renders — timed for completeness, printed once.
+    bench("table1_render", 2, 20, None, figures::table1);
+    bench("table2_render", 2, 20, None, || figures::table2(scale));
+    println!("\n{}", figures::table1());
+    println!("{}", figures::table2(scale));
+
+    // The profiling pass dominates; do it once and time it.
+    let mut apps = Vec::new();
+    bench("suite_profile_and_simulate", 0, 1, None, || {
+        apps = run_suite(scale, 42, 8).expect("suite");
+    });
+
+    let rt = Runtime::load_default().ok();
+    println!(
+        "analytics engine: {}",
+        if rt.is_some() { "pjrt" } else { "native (run `make artifacts`)" }
+    );
+    let mut analytics = None;
+    bench("suite_analytics (entropy+spatial+pca)", 0, 3, None, || {
+        analytics = Some(analyze_suite(&apps, rt.as_ref()).expect("analytics"));
+    });
+    let analytics = analytics.unwrap();
+
+    let figs: Vec<(&str, String)> = vec![
+        ("fig3a", figures::fig3a(&apps, &analytics).0),
+        ("fig3b", figures::fig3b(&apps, &analytics).0),
+        ("fig3c", figures::fig3c(&apps).0),
+        ("fig4", figures::fig4(&apps).0),
+        ("fig5", figures::fig5(&apps, &analytics).0),
+        ("fig6", figures::fig6(&apps, &analytics).0),
+    ];
+    for (name, text) in &figs {
+        bench(&format!("{name}_render"), 1, 10, None, || match *name {
+            "3a" => figures::fig3a(&apps, &analytics).0.len(),
+            _ => text.len(),
+        });
+    }
+    println!();
+    for (_, text) in figs {
+        println!("{text}");
+    }
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): interpreter dispatch,
+//! each streaming analyzer, the machine simulators and the PJRT artifact
+//! call. These are the numbers the optimization pass tracks.
+
+use pisa_nmc::analysis::{
+    BblpAnalyzer, DlpAnalyzer, IlpAnalyzer, MemEntropyAnalyzer, MixAnalyzer, PbblpAnalyzer,
+    ReuseAnalyzer,
+};
+use pisa_nmc::interp::{run_program, Instrument, NullInstrument};
+use pisa_nmc::ir::ProgramBuilder;
+use pisa_nmc::runtime::Runtime;
+use pisa_nmc::sim::{collect, simulate_host, simulate_nmc};
+use pisa_nmc::testkit::bench::bench;
+use pisa_nmc::util::Rng;
+use pisa_nmc::workloads::by_name;
+
+/// Medium workload used across micro benches (~1.4M dynamic instrs).
+fn workload() -> pisa_nmc::ir::Program {
+    by_name("gesummv").unwrap().build(128, 42)
+}
+
+fn dyn_instrs(p: &pisa_nmc::ir::Program) -> u64 {
+    let (out, _) = run_program(p, &mut NullInstrument).unwrap();
+    out.stats.dyn_instrs
+}
+
+fn run_with(p: &pisa_nmc::ir::Program, sink: &mut dyn Instrument) {
+    run_program(p, sink).unwrap();
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== hot-path microbenchmarks ==\n");
+    let prog = workload();
+    let n = dyn_instrs(&prog);
+    println!("workload: gesummv n=128, {n} dynamic instructions\n");
+
+    bench("interp_dispatch (NullInstrument)", 1, 8, Some((n, "instr")), || {
+        run_with(&prog, &mut NullInstrument)
+    });
+    bench("analyzer_mix", 1, 5, Some((n, "instr")), || {
+        let mut a = MixAnalyzer::new();
+        run_with(&prog, &mut a);
+    });
+    bench("analyzer_mem_entropy", 1, 5, Some((n, "instr")), || {
+        let mut a = MemEntropyAnalyzer::new();
+        run_with(&prog, &mut a);
+        std::hint::black_box(a.finalize(4096));
+    });
+    bench("analyzer_reuse (8 line sizes, exact)", 1, 3, Some((n, "instr")), || {
+        let mut a = ReuseAnalyzer::new();
+        run_with(&prog, &mut a);
+        std::hint::black_box(a.finalize());
+    });
+    bench("analyzer_ilp (4 windows + inf)", 1, 3, Some((n, "instr")), || {
+        let mut a = IlpAnalyzer::new(prog.func.n_regs);
+        run_with(&prog, &mut a);
+    });
+    bench("analyzer_dlp", 1, 5, Some((n, "instr")), || {
+        let mut a = DlpAnalyzer::for_program(&prog);
+        run_with(&prog, &mut a);
+    });
+    bench("analyzer_bblp (4 windows)", 1, 3, Some((n, "instr")), || {
+        let mut a = BblpAnalyzer::new(prog.func.n_regs);
+        run_with(&prog, &mut a);
+        std::hint::black_box(a.finalize());
+    });
+    bench("analyzer_pbblp", 1, 5, Some((n, "instr")), || {
+        let mut a = PbblpAnalyzer::new(&prog);
+        run_with(&prog, &mut a);
+        std::hint::black_box(a.finalize());
+    });
+
+    // standalone structure benches
+    let mut rng = Rng::new(7);
+    let addrs: Vec<u64> = (0..200_000).map(|_| 0x1_0000 + rng.below(1 << 16) * 8).collect();
+    bench("reuse_fenwick_200k_random", 1, 5, Some((200_000, "access")), || {
+        let mut a = ReuseAnalyzer::new();
+        for &ad in &addrs {
+            a.record(ad);
+        }
+        std::hint::black_box(a.finalize());
+    });
+
+    let regions = collect(&prog)?;
+    bench("sim_host", 1, 5, Some((n, "instr")), || {
+        std::hint::black_box(simulate_host(&regions, 2.5))
+    });
+    bench("sim_nmc (32 PEs, 32 vaults)", 1, 5, Some((n, "instr")), || {
+        std::hint::black_box(simulate_nmc(&regions))
+    });
+
+    // DRAM timing model alone
+    bench("dram_model_1M_requests", 1, 3, Some((1_000_000, "req")), || {
+        let mut d = pisa_nmc::sim::dram::Dram::new(pisa_nmc::sim::DramConfig::hmc_vault());
+        let mut now = 0u64;
+        let mut rng = Rng::new(1);
+        for _ in 0..1_000_000 {
+            let s = d.request(rng.below(1 << 24) * 64, now);
+            now = s.done;
+        }
+        std::hint::black_box(d.row_hit_rate())
+    });
+
+    if let Ok(rt) = Runtime::load_default() {
+        let g = rt.manifest().shape("G")?;
+        let b = rt.manifest().shape("B")?;
+        let counts = vec![1.0f32; g * b];
+        let weights = vec![1.0f32; g * b];
+        bench("pjrt_entropy_execute (16x4096)", 2, 20, None, || {
+            std::hint::black_box(rt.execute("entropy", &[&counts, &weights]).unwrap())
+        });
+        let x = vec![0.5f32; rt.manifest().shape("N")? * 4];
+        let mask = vec![1.0f32; rt.manifest().shape("N")?];
+        bench("pjrt_pca4_execute", 2, 20, None, || {
+            std::hint::black_box(rt.execute("pca4", &[&x, &mask]).unwrap())
+        });
+    } else {
+        println!("(pjrt benches skipped: run `make artifacts`)");
+    }
+
+    // end-to-end single app
+    let k = by_name("mvt").unwrap();
+    bench("profile_app_end_to_end (mvt n=96)", 1, 3, None, || {
+        std::hint::black_box(pisa_nmc::coordinator::profile_app(k.as_ref(), 96, 1).unwrap())
+    });
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Characterize the full 12-kernel suite (paper Fig 3a/3b/3c) without
+//! running the machine simulators' EDP comparison details — the
+//! platform-independent half of the pipeline, rendered as the three
+//! characterization figures.
+//!
+//! ```bash
+//! cargo run --release --example characterize_suite -- [scale]
+//! ```
+
+use pisa_nmc::coordinator::{analyze_suite, figures, run_suite};
+use pisa_nmc::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0.25);
+
+    eprintln!("profiling suite at scale {scale} ...");
+    let apps = run_suite(scale, 42, 8)?;
+
+    // PJRT analytics when artifacts exist; native otherwise.
+    let rt = Runtime::load_default().ok();
+    if rt.is_some() {
+        eprintln!("analytics engine: pjrt (AOT JAX/Pallas artifacts)");
+    } else {
+        eprintln!("analytics engine: native (run `make artifacts` for the pjrt path)");
+    }
+    let analytics = analyze_suite(&apps, rt.as_ref())?;
+
+    print!("{}", figures::fig3a(&apps, &analytics).0);
+    println!();
+    print!("{}", figures::fig3b(&apps, &analytics).0);
+    println!();
+    print!("{}", figures::fig3c(&apps).0);
+
+    // the paper's headline observation on this data
+    let gs = apps.iter().position(|a| a.name == "gramschmidt").unwrap();
+    let spat_gs = analytics.spatial[gs].iter().sum::<f64>() / analytics.spatial[gs].len() as f64;
+    let mean_spat: f64 = analytics
+        .spatial
+        .iter()
+        .map(|s| s.iter().sum::<f64>() / s.len() as f64)
+        .sum::<f64>()
+        / apps.len() as f64;
+    println!(
+        "\ngramschmidt mean spatial locality {spat_gs:.3} vs suite mean {mean_spat:.3} — \
+         the paper's flagship cache-hostile kernel"
+    );
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Quickstart: profile one kernel end-to-end and print its PISA-NMC
+//! metrics + host-vs-NMC EDP verdict.
+//!
+//! ```bash
+//! cargo run --release --example quickstart            # defaults: atax
+//! cargo run --release --example quickstart -- gramschmidt 96
+//! ```
+
+use pisa_nmc::coordinator::profile_app;
+use pisa_nmc::workloads::by_name;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let name = args.first().map(|s| s.as_str()).unwrap_or("atax");
+    let kernel = by_name(name)?;
+    let n = args
+        .get(1)
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or_else(|| kernel.default_n() / 4);
+
+    println!("profiling {name} (n={n}) ...");
+    let r = profile_app(kernel.as_ref(), n, 42)?;
+
+    println!("\n== platform-independent metrics (paper §II) ==");
+    println!("dynamic instructions : {}", r.metrics.exec.dyn_instrs);
+    println!(
+        "memory entropy       : {:.2} bits @1B → {:.2} bits @1KB",
+        r.metrics.mem_entropy.entropies[0],
+        r.metrics.mem_entropy.entropies[10]
+    );
+    println!("entropy_diff_mem     : {:.4}  (Fig 5 metric)", r.metrics.mem_entropy.entropy_diff);
+    println!("spat_8B_16B          : {:.4}  (Fig 3b / Fig 6 feature)", r.metrics.spatial.spat_8b_16b());
+    println!("DLP                  : {:.2}", r.metrics.dlp.dlp);
+    println!(
+        "BBLP_1..4            : {:?}",
+        r.metrics
+            .bblp
+            .values
+            .iter()
+            .map(|v| (v * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+    println!("PBBLP                : {:.1}", r.metrics.pbblp.pbblp);
+    println!("ILP (inf window)     : {:.2}", r.metrics.ilp.inf);
+
+    println!("\n== machine comparison (paper Fig 4) ==");
+    println!(
+        "host : {:.3} ms, {:.3} mJ  (DRAM lines {})",
+        r.cmp.host.time_s * 1e3,
+        r.cmp.host.energy_j * 1e3,
+        r.cmp.host.dram_lines
+    );
+    println!(
+        "NMC  : {:.3} ms, {:.3} mJ  (parallel fraction {:.0}%)",
+        r.cmp.nmc.time_s * 1e3,
+        r.cmp.nmc.energy_j * 1e3,
+        r.cmp.nmc.parallel_fraction * 100.0
+    );
+    println!(
+        "EDP improvement      : {:.2}x  → {}",
+        r.cmp.edp_improvement(),
+        if r.cmp.nmc_suitable() {
+            "OFFLOAD to NMC"
+        } else {
+            "keep on host"
+        }
+    );
+    Ok(())
+}

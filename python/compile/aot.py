@@ -1,0 +1,113 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT lowered.compiler_ir("hlo") protos, NOT .serialize()) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (what the published `xla` 0.1.6 crate links)
+rejects (`proto.id() <= INT_MAX`). The HLO text parser reassigns ids, so
+text round-trips cleanly. See /opt/xla-example/load_hlo/.
+
+Emitted artifacts (all fp32, shapes below are the runtime ABI):
+
+  entropy.hlo.txt  (counts [G,B], weights [G,B]) -> (H [G], diff [])
+  spatial.hlo.txt  (hist [L,D], binv [D])        -> (avg [L], scores [L-1])
+  pca4.hlo.txt     (x [N,4], mask [N])           -> (scores [N,2], loadings
+                                                     [4,2], eig [2], evr [2])
+  pca8.hlo.txt     same with F=8
+  model.hlo.txt    analysis_suite: all of the above fused in one module
+  manifest.json    shape/ABI manifest consumed by rust/src/runtime
+
+Usage: cd python && python -m compile.aot --out ../artifacts/model.hlo.txt
+Python runs only here (and in pytest); never on the Rust analysis path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---- Fixed AOT shapes (the runtime ABI) -----------------------------------
+G = 16     # max granularity rows (rust uses 11: shifts 0..10)
+B = 4096   # count-of-counts slots per granularity
+L = 8      # line sizes: 8B..1KB (2^3..2^10)
+D = 64     # log2 reuse-distance bins per line size
+N = 16     # max applications in one PCA batch (paper uses 12)
+K = 2      # principal components
+PCA_FEATURES = (4, 8)  # paper Fig 6 uses 4 features; 8 for extended analysis
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    """name -> (hlo_text, input_shapes, output_shapes)."""
+    arts = {}
+
+    def add(name, fn, specs):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        outs = jax.eval_shape(fn, *specs)
+        leaves = jax.tree_util.tree_leaves(outs)
+        arts[name] = (
+            text,
+            [list(s.shape) for s in specs],
+            [list(o.shape) for o in leaves],
+        )
+
+    add("entropy", model.entropy_graph, [f32(G, B), f32(G, B)])
+    add("spatial", model.spatial_graph, [f32(L, D), f32(D)])
+    for f in PCA_FEATURES:
+        add(f"pca{f}", lambda x, m: model.pca_graph(x, m, k=K), [f32(N, f), f32(N)])
+    add(
+        "model",
+        model.analysis_suite,
+        [f32(G, B), f32(G, B), f32(L, D), f32(D), f32(N, PCA_FEATURES[0]), f32(N)],
+    )
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the model.hlo.txt stamp; siblings written next to it")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(outdir, exist_ok=True)
+
+    arts = lower_all()
+    manifest = {
+        "abi": 1,
+        "shapes": {"G": G, "B": B, "L": L, "D": D, "N": N, "K": K,
+                   "pca_features": list(PCA_FEATURES)},
+        "artifacts": {},
+    }
+    for name, (text, ins, outs) in arts.items():
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt", "inputs": ins, "outputs": outs,
+        }
+        print(f"wrote {path} ({len(text)} chars, in={ins} out={outs})")
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(outdir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

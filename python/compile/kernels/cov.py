@@ -1,0 +1,103 @@
+"""Pallas kernel: MXU-shaped X^T·Y tile matmul (covariance building block).
+
+Input  : x [N, F], y [N, K]  (fp32)
+Output : x^T @ y  [F, K]
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * The contraction runs over N — the grid's innermost axis — so each program
+    multiplies a [BN, BF]ᵀ × [BN, BK] tile pair on the MXU and accumulates
+    into a VMEM scratch [BF, BK]. This is the classic k-inner matmul schedule:
+    output tile stays resident in VMEM, input tiles stream HBM→VMEM.
+  * Block sizes default to (BN, BF, BK) = (128, 128, 128): MXU-native for
+    fp32 (128×128 systolic array); the PCA problem here is tiny (N≈12, F≈8)
+    so a single tile suffices, but the schedule scales to the large
+    "many-windows × many-metrics" matrices the coordinator can batch.
+  * On a real TPU the inputs would be bf16 with fp32 accumulation; inputs
+    here are metric matrices of magnitude ~1–30 where fp32 is exact enough
+    and keeps the oracle comparison tight.
+
+The standardization (mean/std) and 1/(n-1) scaling that turn X^T X into a
+covariance live in model.py as traced jnp — they are O(NF), not hot.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_MXU = 128
+
+
+def _xty_kernel(x_ref, y_ref, o_ref, acc_ref):
+    """Accumulate x_tileᵀ @ y_tile over the contraction (innermost) grid axis."""
+    kn = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kn == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # [BN, BF]ᵀ × [BN, BK] → [BF, BK] on the MXU; fp32 accumulate.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kn == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_f", "block_k"))
+def matmul_xt_y(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    block_n: int = _MXU,
+    block_f: int = _MXU,
+    block_k: int = _MXU,
+) -> jnp.ndarray:
+    """X^T @ Y via a Pallas tiled matmul. Shapes are zero-padded to blocks
+    (zero rows contribute nothing to the contraction)."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    n, f = x.shape
+    n2, k = y.shape
+    assert n == n2, f"contraction mismatch: {n} vs {n2}"
+    npad = -(-n // block_n) * block_n
+    fpad = -(-f // block_f) * block_f
+    kpad = -(-k // block_k) * block_k
+    xp = jnp.zeros((npad, fpad), jnp.float32).at[:n, :f].set(x)
+    yp = jnp.zeros((npad, kpad), jnp.float32).at[:n, :k].set(y)
+
+    grid = (fpad // block_f, kpad // block_k, npad // block_n)
+    out = pl.pallas_call(
+        _xty_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_f), lambda i, j, kn: (kn, i)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, kn: (kn, j)),
+        ],
+        out_specs=pl.BlockSpec((block_f, block_k), lambda i, j, kn: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((fpad, kpad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_f, block_k), jnp.float32)],
+        interpret=True,
+    )(xp, yp)
+    return out[:f, :k]
+
+
+def covariance(x: jnp.ndarray, **blocks) -> jnp.ndarray:
+    """Column-standardized covariance C = Z^T Z / (n-1), Z from the Pallas
+    matmul. Matches ref.covariance_ref."""
+    x = x.astype(jnp.float32)
+    n = x.shape[0]
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    sd = jnp.std(x, axis=0, keepdims=True)
+    z = jnp.where(sd > 1e-6, (x - mu) / jnp.maximum(sd, 1e-6), 0.0)
+    return matmul_xt_y(z, z, **blocks) / jnp.float32(max(n - 1, 1))

@@ -1,0 +1,119 @@
+"""Pallas kernel: batched weighted Shannon-entropy reduction.
+
+The Rust analyzers count exact per-address occurrences (HashMap) and compress
+the count *multiset* into a fixed-shape count-of-counts form: for each
+distinct count value c with multiplicity w, one slot (c, w). Entropy only
+depends on the count multiset:
+
+    H = -sum_b  w_b * (c_b / T) * log2(c_b / T),    T = sum_b w_b * c_b
+
+so a trace with millions of unique addresses reduces EXACTLY to a few
+thousand (c, w) slots — that is what makes an AOT'd fixed-shape [G, B] kernel
+able to compute exact memory entropy (paper §II-A). Plain histograms are the
+w == 1 special case.
+
+Input  : counts  [G, B]  — per-granularity distinct count values (0 = empty)
+         weights [G, B]  — multiplicity of each count value
+Output : H       [G]     — Shannon entropy in bits per granularity row
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * grid = (G / BG, B / BB): each program owns a [BG, BB] tile in VMEM; the
+    bucket axis streams block-by-block (HBM→VMEM schedule in the BlockSpec
+    index_map), the granularity axis is tiled across sublanes.
+  * A VMEM scratch accumulator [BG, 1] carries partial -w·p·log2(p) sums
+    across the bucket-block loop; totals are precomputed (one jnp reduction)
+    so the kernel is single-pass and the accumulator never leaves VMEM.
+  * BB is a multiple of 128 lanes, BG a multiple of 8 sublanes — exactly the
+    fp32 native VMEM tile, so the reduction vectorizes fully on the VPU.
+
+interpret=True everywhere in this repo: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; correctness is validated against ref.entropy_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# fp32 native tile on TPU is (8, 128); keep blocks multiples of that.
+_SUBLANE = 8
+_LANE = 128
+_LOG2E = 1.4426950408889634
+
+
+def _entropy_kernel(total_ref, counts_ref, weights_ref, out_ref, acc_ref):
+    """One [BG, BB] tile: accumulate -w*p*log2(p) into acc, flush on last block."""
+    bj = pl.program_id(1)
+    nbj = pl.num_programs(1)
+
+    @pl.when(bj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    counts = counts_ref[...].astype(jnp.float32)  # [BG, BB]
+    weights = weights_ref[...].astype(jnp.float32)  # [BG, BB]
+    total = total_ref[...].astype(jnp.float32)  # [BG, 1] row totals (>=0)
+    p = counts / jnp.maximum(total, 1.0)
+    # w * p * log2(p) with the 0*log(0)=0 convention; max() keeps log finite.
+    plogp = jnp.where(p > 0, weights * p * (jnp.log(jnp.maximum(p, 1e-38)) * _LOG2E), 0.0)
+    acc_ref[...] += -jnp.sum(plogp, axis=1, keepdims=True)
+
+    @pl.when(bj == nbj - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "block_b"))
+def entropy_weighted(
+    counts: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    block_g: int = _SUBLANE,
+    block_b: int = 4 * _LANE,
+) -> jnp.ndarray:
+    """Weighted Shannon entropy (bits) per row: counts/weights [G, B] → [G].
+
+    Rows may be all-zero (entropy 0). G and B are padded up to block
+    multiples; padding slots have weight 0 so they contribute nothing.
+    """
+    counts = counts.astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+    g, b = counts.shape
+    gp = -(-g // block_g) * block_g
+    bp = -(-b // block_b) * block_b
+    cp = jnp.zeros((gp, bp), jnp.float32).at[:g, :b].set(counts)
+    wp = jnp.zeros((gp, bp), jnp.float32).at[:g, :b].set(weights)
+    totals = jnp.sum(cp * wp, axis=1, keepdims=True)  # [gp, 1]
+
+    grid = (gp // block_g, bp // block_b)
+    out = pl.pallas_call(
+        _entropy_kernel,
+        grid=grid,
+        in_specs=[
+            # row totals: broadcast along the bucket-block axis
+            pl.BlockSpec((block_g, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_g, block_b), lambda i, j: (i, j)),
+            pl.BlockSpec((block_g, block_b), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_g, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_g, 1), jnp.float32)],
+        interpret=True,
+    )(totals, cp, wp)
+    return out[:g, 0]
+
+
+def entropy(counts: jnp.ndarray, **blocks) -> jnp.ndarray:
+    """Plain-histogram entropy: the weights == 1 special case."""
+    return entropy_weighted(counts, jnp.ones_like(counts, dtype=jnp.float32), **blocks)
+
+
+def entropy_diff(entropies: jnp.ndarray) -> jnp.ndarray:
+    """Paper Fig-5 derived metric: mean consecutive entropy drop (traced-jnp;
+    the heavy part is the histogram reduction above, this is O(G))."""
+    d = entropies[..., :-1] - entropies[..., 1:]
+    return jnp.mean(d, axis=-1)

@@ -1,0 +1,128 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package is
+checked against the function of the same name here (pytest + hypothesis sweeps
+in python/tests/). Keep these boring and obviously-correct.
+
+Math background (paper §II):
+
+* Memory entropy: Shannon entropy over the distribution of accessed memory
+  addresses, computed at several granularities g (address >> g). Given a
+  bucket-count histogram ``counts[b]`` the entropy is
+  ``H = -sum_b p_b * log2(p_b)`` with ``p_b = counts[b] / sum(counts)``.
+  Empty buckets contribute 0.
+
+* entropy_diff_mem (paper Fig 5): mean of consecutive differences of the
+  per-granularity entropies, i.e. ``mean(H[g] - H[g+1])`` — the average
+  entropy *drop* when doubling the access granularity. High values indicate
+  the address stream loses randomness quickly with coarser lines (good for
+  conventional caches → NOT an NMC candidate).
+
+* Spatial locality (paper §II-A, after Gu et al.): from average data-temporal
+  reuse (DTR) distances ``d[l]`` measured at line size ``2^l``, the score for
+  doubling l→l+1 is the relative reduction ``(d[l] - d[l+1]) / d[l]``,
+  clamped to [0, 1] (a growing DTR under larger lines means no spatial reuse).
+
+* Covariance: ``C = Z^T Z / (n - 1)`` where Z is the column-standardized
+  metric matrix. The Pallas kernel computes the raw ``X^T Y`` product tile;
+  standardization and scaling live in the (traced-jnp) model layer.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def entropy_ref(counts: jnp.ndarray) -> jnp.ndarray:
+    """Shannon entropy (bits) per row of a [G, B] count matrix."""
+    counts = counts.astype(jnp.float32)
+    total = jnp.sum(counts, axis=-1, keepdims=True)
+    p = jnp.where(total > 0, counts / jnp.maximum(total, 1.0), 0.0)
+    plogp = jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-38)), 0.0)
+    return -jnp.sum(plogp, axis=-1)
+
+
+def entropy_weighted_ref(counts: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Count-of-counts entropy: H = -sum w_b (c_b/T) log2(c_b/T), T = sum w·c.
+
+    Equals entropy_ref on the expanded histogram where count value c_b is
+    repeated w_b times; this identity is property-tested in the suite.
+    """
+    counts = counts.astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+    total = jnp.sum(counts * weights, axis=-1, keepdims=True)
+    p = jnp.where(total > 0, counts / jnp.maximum(total, 1.0), 0.0)
+    plogp = jnp.where(p > 0, weights * p * jnp.log2(jnp.maximum(p, 1e-38)), 0.0)
+    return -jnp.sum(plogp, axis=-1)
+
+
+def entropy_diff_ref(entropies: jnp.ndarray) -> jnp.ndarray:
+    """Paper Fig-5 metric: mean consecutive entropy drop across granularities.
+
+    entropies: [..., G] with G >= 2, ordered fine→coarse.
+    """
+    d = entropies[..., :-1] - entropies[..., 1:]
+    return jnp.mean(d, axis=-1)
+
+
+def matmul_xt_y_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """X^T @ Y for X:[N,F], Y:[N,K] -> [F,K] in fp32."""
+    return jnp.matmul(x.astype(jnp.float32).T, y.astype(jnp.float32))
+
+
+def covariance_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Column-standardized covariance C = Z^T Z / (n-1) for X:[N,F]."""
+    x = x.astype(jnp.float32)
+    n = x.shape[0]
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    sd = jnp.std(x, axis=0, keepdims=True)
+    # near-constant columns standardize to exact zero (an epsilon divisor
+    # would amplify fp32 mean-rounding noise by ~1e12)
+    z = jnp.where(sd > 1e-6, (x - mu) / jnp.maximum(sd, 1e-6), 0.0)
+    return jnp.matmul(z.T, z) / jnp.float32(max(n - 1, 1))
+
+
+def spatial_score_ref(avg_dtr: jnp.ndarray) -> jnp.ndarray:
+    """Spatial-locality scores from per-line-size mean DTR distances.
+
+    avg_dtr: [..., L] mean reuse distances at line sizes 2^l (fine→coarse).
+    Returns [..., L-1] scores in [0, 1]; score[l] ≈ 1 means doubling the line
+    from 2^l to 2^(l+1) halves the reuse distance (perfect spatial reuse).
+    """
+    d0 = avg_dtr[..., :-1]
+    d1 = avg_dtr[..., 1:]
+    score = (d0 - d1) / jnp.maximum(d0, 1e-12)
+    return jnp.clip(score, 0.0, 1.0)
+
+
+def weighted_mean_hist_ref(hist: jnp.ndarray, bin_values: jnp.ndarray) -> jnp.ndarray:
+    """Mean of a distribution given a histogram [L, D] and bin values [D]."""
+    hist = hist.astype(jnp.float32)
+    total = jnp.sum(hist, axis=-1)
+    s = jnp.sum(hist * bin_values[None, :], axis=-1)
+    return jnp.where(total > 0, s / jnp.maximum(total, 1.0), 0.0)
+
+
+def pca_ref(x: jnp.ndarray, k: int = 2):
+    """Dense PCA oracle via eigh on the standardized covariance.
+
+    Returns (scores [N,k], loadings [F,k], explained_variance_ratio [k]).
+    Signs are normalized so each loading column's max-|.| element is >= 0.
+    """
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    sd = jnp.std(x, axis=0, keepdims=True)
+    z = jnp.where(sd > 1e-6, (x - mu) / jnp.maximum(sd, 1e-6), 0.0)
+    c = jnp.matmul(z.T, z) / jnp.float32(max(x.shape[0] - 1, 1))
+    w, v = jnp.linalg.eigh(c)  # ascending
+    order = jnp.argsort(-w)
+    w = w[order][:k]
+    v = v[:, order][:, :k]
+    # deterministic sign: flip columns whose max-abs entry is negative
+    idx = jnp.argmax(jnp.abs(v), axis=0)
+    signs = jnp.sign(v[idx, jnp.arange(k)])
+    signs = jnp.where(signs == 0, 1.0, signs)
+    v = v * signs[None, :]
+    scores = jnp.matmul(z, v)
+    evr = w / jnp.maximum(jnp.sum(jnp.maximum(w, 0.0)), 1e-12)
+    return scores, v, evr

@@ -1,0 +1,73 @@
+"""Pallas kernel: spatial-locality scores from reuse-distance histograms.
+
+Input  : hist [L, D]   — per-line-size log2-binned DTR histograms
+         binv [1, D]   — representative distance value per bin
+Output : avg  [L]      — mean reuse distance per line size
+         (score [L-1] is derived from avg in traced jnp — O(L))
+
+The Rust analyzers bin exact Olken reuse distances into D=64 log2 buckets per
+line size l ∈ {8B … 1KB}; this kernel collapses each [1, D] row into its mean
+distance, which spatial_score() turns into the paper's §II-A locality score
+(relative DTR reduction when doubling the line).
+
+TPU mapping: one grid row per (line-size block); the D axis fits one VMEM
+block (D=64 ≤ 128 lanes → padded to 128). The kernel is a fused
+weighted-sum + count-sum over the lane axis, i.e. two VPU reductions per row
+in a single pass — memory-bound, one HBM read of the histogram.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SUBLANE = 8
+_LANE = 128
+
+
+def _wmean_kernel(hist_ref, binv_ref, out_ref):
+    hist = hist_ref[...].astype(jnp.float32)  # [BL, D]
+    binv = binv_ref[...].astype(jnp.float32)  # [1, D]
+    total = jnp.sum(hist, axis=1, keepdims=True)
+    s = jnp.sum(hist * binv, axis=1, keepdims=True)
+    out_ref[...] = jnp.where(total > 0, s / jnp.maximum(total, 1.0), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l",))
+def weighted_mean_hist(hist: jnp.ndarray, bin_values: jnp.ndarray, *, block_l: int = _SUBLANE) -> jnp.ndarray:
+    """Mean of the binned distribution per row: hist [L, D], bin_values [D] → [L]."""
+    hist = hist.astype(jnp.float32)
+    l, d = hist.shape
+    lp = -(-l // block_l) * block_l
+    dp = -(-d // _LANE) * _LANE
+    hp = jnp.zeros((lp, dp), jnp.float32).at[:l, :d].set(hist)
+    bp = jnp.zeros((1, dp), jnp.float32).at[0, :d].set(bin_values.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        _wmean_kernel,
+        grid=(lp // block_l,),
+        in_specs=[
+            pl.BlockSpec((block_l, dp), lambda i: (i, 0)),
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lp, 1), jnp.float32),
+        interpret=True,
+    )(hp, bp)
+    return out[:l, 0]
+
+
+def spatial_score(avg_dtr: jnp.ndarray) -> jnp.ndarray:
+    """Paper §II-A spatial-locality score: relative DTR reduction per line-size
+    doubling, clamped to [0, 1]. avg_dtr [..., L] fine→coarse → [..., L-1]."""
+    d0 = avg_dtr[..., :-1]
+    d1 = avg_dtr[..., 1:]
+    return jnp.clip((d0 - d1) / jnp.maximum(d0, 1e-12), 0.0, 1.0)
+
+
+def spatial_from_hist(hist: jnp.ndarray, bin_values: jnp.ndarray) -> jnp.ndarray:
+    """Fused: histograms [L, D] → locality scores [L-1]."""
+    return spatial_score(weighted_mean_hist(hist, bin_values))

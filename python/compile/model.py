@@ -1,0 +1,119 @@
+"""L2: the PISA-NMC analytics compute graphs (JAX, calling the Pallas kernels).
+
+Three graphs, AOT-lowered by aot.py to HLO text and executed from the Rust
+coordinator through PJRT (python never runs at analysis time):
+
+  entropy_graph   counts/weights [G, B]        -> (H [G], entropy_diff scalar)
+                  exact memory entropy per granularity from count-of-counts
+                  (paper Fig 3a) + the Fig-5 derived metric.
+
+  spatial_graph   hist [L, D], binv [D]        -> (avg_dtr [L], scores [L-1])
+                  mean reuse distance per line size and the SSII-A spatial-
+                  locality score per line-size doubling (paper Fig 3b).
+
+  pca_graph       x [N, F], mask [N]           -> (scores [N, K], loadings
+                  [F, K], eigenvalues [K], explained_variance_ratio [K])
+                  masked standardization -> Pallas covariance -> power
+                  iteration with Hotelling deflation (paper Fig 6).
+
+Shapes are fixed at AOT time (see aot.py SHAPES); the Rust side pads with
+mask/weight zeros. All graphs are pure fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import cov as cov_k
+from compile.kernels import entropy as entropy_k
+from compile.kernels import spatial as spatial_k
+
+# Power-iteration budget. The covariance matrices here are tiny (F <= 8) and
+# well-separated after standardization; 96 iterations converges far below
+# fp32 resolution and keeps the unrolled HLO compact.
+POWER_ITERS = 96
+
+
+def entropy_graph(counts: jnp.ndarray, weights: jnp.ndarray):
+    """[G, B] count-of-counts -> per-granularity entropy + Fig-5 diff metric."""
+    h = entropy_k.entropy_weighted(counts, weights)
+    return h, entropy_k.entropy_diff(h)
+
+
+def spatial_graph(hist: jnp.ndarray, bin_values: jnp.ndarray):
+    """[L, D] DTR histograms -> mean DTR per line size + locality scores."""
+    avg = spatial_k.weighted_mean_hist(hist, bin_values)
+    return avg, spatial_k.spatial_score(avg)
+
+
+def _masked_standardize(x: jnp.ndarray, mask: jnp.ndarray):
+    """Standardize columns over the masked (valid) rows only; padded rows
+    come out as exact zeros so they vanish from the covariance."""
+    m = mask.astype(jnp.float32)[:, None]  # [N, 1]
+    n_eff = jnp.maximum(jnp.sum(m), 1.0)
+    mu = jnp.sum(x * m, axis=0, keepdims=True) / n_eff
+    var = jnp.sum(((x - mu) ** 2) * m, axis=0, keepdims=True) / n_eff
+    sd = jnp.sqrt(var)
+    # near-constant columns standardize to exact zero (see kernels/ref.py)
+    z = jnp.where(sd > 1e-6, (x - mu) / jnp.maximum(sd, 1e-6), 0.0) * m
+    return z, n_eff
+
+
+def _power_iteration(c: jnp.ndarray, k: int):
+    """Top-k eigenpairs of symmetric PSD c via power iteration + deflation.
+
+    Deterministic start vectors (basis-aligned with a small full-ones tilt so
+    a start orthogonal to the eigenvector cannot occur for these matrices).
+    """
+    f = c.shape[0]
+    eigvals = []
+    eigvecs = []
+    for j in range(k):
+        v0 = jnp.ones((f,), jnp.float32) + 2.0 * jax.nn.one_hot(j, f, dtype=jnp.float32)
+        v0 = v0 / jnp.linalg.norm(v0)
+
+        def body(_, v, c=c):
+            w = c @ v
+            return w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
+
+        v = jax.lax.fori_loop(0, POWER_ITERS, body, v0)
+        lam = v @ (c @ v)
+        eigvals.append(lam)
+        eigvecs.append(v)
+        c = c - lam * jnp.outer(v, v)  # Hotelling deflation
+    return jnp.stack(eigvals), jnp.stack(eigvecs, axis=1)  # [K], [F, K]
+
+
+def pca_graph(x: jnp.ndarray, mask: jnp.ndarray, k: int = 2):
+    """Masked PCA: standardize -> Pallas covariance -> power iteration.
+
+    Sign convention matches ref.pca_ref: each loading column is flipped so
+    its max-|.| element is positive (stable across eigensolvers).
+    """
+    x = x.astype(jnp.float32)
+    z, n_eff = _masked_standardize(x, mask)
+    c = cov_k.matmul_xt_y(z, z) / jnp.maximum(n_eff - 1.0, 1.0)
+    eigvals, v = _power_iteration(c, k)
+
+    idx = jnp.argmax(jnp.abs(v), axis=0)
+    signs = jnp.sign(v[idx, jnp.arange(k)])
+    signs = jnp.where(signs == 0, 1.0, signs)
+    v = v * signs[None, :]
+
+    scores = z @ v  # [N, K]; padded rows are zero rows
+    pos = jnp.maximum(eigvals, 0.0)
+    evr = pos / jnp.maximum(jnp.sum(pos), 1e-12)
+    return scores, v, eigvals, evr
+
+
+def analysis_suite(counts, weights, hist, bin_values, x, mask):
+    """Combined one-call module: everything the coordinator needs per run.
+
+    Returned flat tuple order is the runtime ABI -- keep in sync with
+    rust/src/runtime/artifacts.rs and aot.py's manifest.
+    """
+    h, hdiff = entropy_graph(counts, weights)
+    avg, scores_sp = spatial_graph(hist, bin_values)
+    scores_pca, loadings, eigvals, evr = pca_graph(x, mask)
+    return h, hdiff, avg, scores_sp, scores_pca, loadings, eigvals, evr

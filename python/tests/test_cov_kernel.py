@@ -1,0 +1,100 @@
+"""Pallas X^T·Y / covariance kernel vs the pure-jnp oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+from compile.kernels.cov import covariance, matmul_xt_y
+
+hypothesis.settings.register_profile(
+    "pallas", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("pallas")
+
+
+def _rand(shape, seed):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+class TestMatmulXtY:
+    def test_identity_contraction(self):
+        x = jnp.eye(4, dtype=jnp.float32)
+        y = jnp.arange(8, dtype=jnp.float32).reshape(4, 2)
+        np.testing.assert_allclose(np.asarray(matmul_xt_y(x, y)), np.asarray(y), rtol=1e-6)
+
+    def test_matches_ref_small(self):
+        x, y = _rand((12, 4), 0), _rand((12, 3), 1)
+        np.testing.assert_allclose(
+            np.asarray(matmul_xt_y(x, y)), np.asarray(ref.matmul_xt_y_ref(x, y)),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_matches_ref_multi_tile(self):
+        """Shapes that exceed one 128-block on every axis — exercises the
+        contraction-axis accumulator across grid steps."""
+        x, y = _rand((300, 150), 2), _rand((300, 200), 3)
+        np.testing.assert_allclose(
+            np.asarray(matmul_xt_y(x, y, block_n=128, block_f=128, block_k=128)),
+            np.asarray(ref.matmul_xt_y_ref(x, y)),
+            rtol=1e-3, atol=1e-2,
+        )
+
+    @hypothesis.given(
+        n=st.integers(1, 200), f=st.integers(1, 40), k=st.integers(1, 40),
+        seed=st.integers(0, 10_000),
+    )
+    def test_matches_ref_any_shape(self, n, f, k, seed):
+        x, y = _rand((n, f), seed), _rand((n, k), seed + 1)
+        np.testing.assert_allclose(
+            np.asarray(matmul_xt_y(x, y)), np.asarray(ref.matmul_xt_y_ref(x, y)),
+            rtol=1e-3, atol=1e-3,
+        )
+
+    @hypothesis.given(bn=st.sampled_from([128, 256]), seed=st.integers(0, 100))
+    def test_block_shape_invariance(self, bn, seed):
+        x, y = _rand((137, 9), seed), _rand((137, 5), seed + 7)
+        np.testing.assert_allclose(
+            np.asarray(matmul_xt_y(x, y, block_n=bn)),
+            np.asarray(ref.matmul_xt_y_ref(x, y)),
+            rtol=1e-3, atol=1e-3,
+        )
+
+
+class TestCovariance:
+    def test_matches_ref(self):
+        x = _rand((12, 8), 4)
+        np.testing.assert_allclose(
+            np.asarray(covariance(x)), np.asarray(ref.covariance_ref(x)),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_diagonal_is_n_over_n_minus_1(self):
+        """Standardized columns have population variance 1, so the sample-
+        normalized diagonal is n/(n-1)."""
+        x = _rand((40, 5), 5)
+        c = np.asarray(covariance(x))
+        np.testing.assert_allclose(np.diag(c), np.full(5, 40.0 / 39.0), rtol=1e-4)
+
+    def test_symmetric_psd(self):
+        x = _rand((30, 6), 6)
+        c = np.asarray(covariance(x))
+        np.testing.assert_allclose(c, c.T, atol=1e-4)
+        w = np.linalg.eigvalsh(c)
+        assert (w > -1e-3).all()
+
+    def test_constant_column_zero_cov(self):
+        x = np.array(_rand((20, 3), 7), copy=True)
+        x[:, 1] = 3.14
+        c = np.asarray(covariance(jnp.asarray(x)))
+        np.testing.assert_allclose(c[1, :], 0.0, atol=1e-4)
+        np.testing.assert_allclose(c[:, 1], 0.0, atol=1e-4)
+
+    @hypothesis.given(n=st.integers(2, 64), f=st.integers(1, 12), seed=st.integers(0, 10_000))
+    def test_matches_ref_any_shape(self, n, f, seed):
+        x = _rand((n, f), seed)
+        np.testing.assert_allclose(
+            np.asarray(covariance(x)), np.asarray(ref.covariance_ref(x)),
+            rtol=1e-3, atol=1e-3,
+        )

@@ -1,0 +1,125 @@
+"""Pallas entropy kernel vs the pure-jnp oracle (the core L1 signal)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.entropy import entropy, entropy_diff, entropy_weighted
+
+hypothesis.settings.register_profile(
+    "pallas", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("pallas")
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+class TestEntropyBasics:
+    def test_uniform_histogram_is_log2_b(self):
+        c = jnp.ones((1, 256), jnp.float32)
+        h = entropy(c)
+        np.testing.assert_allclose(np.asarray(h), [8.0], rtol=1e-5)
+
+    def test_single_hot_bucket_is_zero(self):
+        c = jnp.zeros((1, 128), jnp.float32).at[0, 17].set(1000.0)
+        np.testing.assert_allclose(np.asarray(entropy(c)), [0.0], atol=1e-6)
+
+    def test_all_zero_row_is_zero(self):
+        c = jnp.zeros((3, 128), jnp.float32).at[1, :].set(1.0)
+        h = np.asarray(entropy(c))
+        assert h[0] == 0.0 and h[2] == 0.0
+        np.testing.assert_allclose(h[1], 7.0, rtol=1e-5)
+
+    def test_matches_ref_random(self):
+        c = jnp.asarray(_rng(3).integers(0, 1000, (11, 700)).astype(np.float32))
+        np.testing.assert_allclose(
+            np.asarray(entropy(c)), np.asarray(ref.entropy_ref(c)), rtol=1e-4, atol=1e-5
+        )
+
+    def test_two_equal_buckets_one_bit(self):
+        c = jnp.zeros((1, 128), jnp.float32).at[0, 0].set(5.0).at[0, 99].set(5.0)
+        np.testing.assert_allclose(np.asarray(entropy(c)), [1.0], rtol=1e-6)
+
+
+class TestEntropyWeighted:
+    def test_weighted_equals_expanded(self):
+        """Count-of-counts identity: (c, w) == histogram with c repeated w times."""
+        rng = _rng(7)
+        counts = rng.integers(1, 20, 40).astype(np.float32)
+        weights = rng.integers(1, 6, 40).astype(np.float32)
+        expanded = np.concatenate([np.full(int(w), c) for c, w in zip(counts, weights)])
+        h_w = entropy_weighted(jnp.asarray(counts[None]), jnp.asarray(weights[None]))
+        h_e = ref.entropy_ref(jnp.asarray(expanded[None]))
+        np.testing.assert_allclose(np.asarray(h_w), np.asarray(h_e), rtol=1e-4)
+
+    def test_weighted_matches_weighted_ref(self):
+        rng = _rng(11)
+        c = jnp.asarray(rng.integers(0, 500, (5, 300)).astype(np.float32))
+        w = jnp.asarray(rng.integers(0, 8, (5, 300)).astype(np.float32))
+        np.testing.assert_allclose(
+            np.asarray(entropy_weighted(c, w)),
+            np.asarray(ref.entropy_weighted_ref(c, w)),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    def test_zero_weight_slots_ignored(self):
+        c = jnp.asarray([[4.0, 999.0, 4.0]])
+        w = jnp.asarray([[1.0, 0.0, 1.0]])
+        np.testing.assert_allclose(np.asarray(entropy_weighted(c, w)), [1.0], rtol=1e-5)
+
+
+class TestEntropyHypothesis:
+    @hypothesis.given(
+        g=st.integers(1, 17),
+        b=st.integers(1, 600),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_any_shape(self, g, b, seed):
+        c = jnp.asarray(_rng(seed).integers(0, 100, (g, b)).astype(np.float32))
+        np.testing.assert_allclose(
+            np.asarray(entropy(c)), np.asarray(ref.entropy_ref(c)), rtol=1e-4, atol=1e-4
+        )
+
+    @hypothesis.given(
+        block_g=st.sampled_from([8, 16]),
+        block_b=st.sampled_from([128, 256, 512]),
+        seed=st.integers(0, 1000),
+    )
+    def test_block_shape_invariance(self, block_g, block_b, seed):
+        """Entropy must not depend on the VMEM tiling."""
+        c = jnp.asarray(_rng(seed).integers(0, 50, (11, 777)).astype(np.float32))
+        h = entropy(c, block_g=block_g, block_b=block_b)
+        np.testing.assert_allclose(
+            np.asarray(h), np.asarray(ref.entropy_ref(c)), rtol=1e-4, atol=1e-4
+        )
+
+    @hypothesis.given(seed=st.integers(0, 2**31 - 1))
+    def test_entropy_bounded_by_log2_support(self, seed):
+        c = jnp.asarray(_rng(seed).integers(0, 10, (4, 256)).astype(np.float32))
+        h = np.asarray(entropy(c))
+        support = np.asarray((c > 0).sum(axis=1))
+        bound = np.log2(np.maximum(support, 1))
+        assert (h <= bound + 1e-3).all()
+        assert (h >= -1e-4).all()
+
+
+class TestEntropyDiff:
+    def test_fig5_metric(self):
+        h = jnp.asarray([10.0, 9.0, 7.0, 7.0])
+        np.testing.assert_allclose(np.asarray(entropy_diff(h)), 1.0, rtol=1e-6)
+
+    def test_matches_ref(self):
+        h = jnp.asarray(_rng(5).uniform(0, 20, (11,)).astype(np.float32))
+        np.testing.assert_allclose(
+            np.asarray(entropy_diff(h)), np.asarray(ref.entropy_diff_ref(h)), rtol=1e-5
+        )
+
+    def test_constant_entropy_zero_diff(self):
+        h = jnp.full((6,), 4.25, jnp.float32)
+        np.testing.assert_allclose(np.asarray(entropy_diff(h)), 0.0, atol=1e-6)

@@ -1,0 +1,129 @@
+"""L2 graph tests: PCA vs dense eigh oracle, masking semantics, suite ABI."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "pallas", deadline=None, max_examples=15, derandomize=True
+)
+hypothesis.settings.load_profile("pallas")
+
+
+def _metrics_matrix(n, f, seed):
+    """Synthetic metric matrices shaped like the real feature tables:
+    positive, different column scales, correlated columns."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(n, 2))
+    mix = rng.normal(size=(2, f))
+    x = base @ mix + 0.3 * rng.normal(size=(n, f)) + 5.0
+    return jnp.asarray(x.astype(np.float32))
+
+
+class TestPcaGraph:
+    def test_matches_eigh_oracle(self):
+        x = _metrics_matrix(12, 4, 0)
+        mask = jnp.ones((12,), jnp.float32)
+        scores, load, eig, evr = model.pca_graph(x, mask)
+        scores_r, load_r, evr_r = ref.pca_ref(x)
+        np.testing.assert_allclose(np.asarray(load), np.asarray(load_r), rtol=5e-3, atol=5e-3)
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(scores_r), rtol=5e-3, atol=1e-2)
+        np.testing.assert_allclose(np.asarray(evr), np.asarray(evr_r), rtol=5e-3, atol=5e-3)
+
+    def test_padding_rows_inert(self):
+        """Appending masked-off rows must not change the valid-row results."""
+        x12 = _metrics_matrix(12, 4, 1)
+        m12 = jnp.ones((12,), jnp.float32)
+        s12, l12, e12, _ = model.pca_graph(x12, m12)
+
+        x16 = jnp.concatenate([x12, jnp.full((4, 4), 1e3, jnp.float32)], axis=0)
+        m16 = jnp.concatenate([m12, jnp.zeros((4,), jnp.float32)])
+        s16, l16, e16, _ = model.pca_graph(x16, m16)
+
+        np.testing.assert_allclose(np.asarray(l16), np.asarray(l12), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s16[:12]), np.asarray(s12), rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(s16[12:]), 0.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(e16), np.asarray(e12), rtol=1e-4)
+
+    def test_loadings_orthonormal(self):
+        x = _metrics_matrix(14, 6, 2)
+        _, load, _, _ = model.pca_graph(x, jnp.ones((14,), jnp.float32))
+        g = np.asarray(load).T @ np.asarray(load)
+        np.testing.assert_allclose(g, np.eye(2), atol=5e-3)
+
+    def test_eigenvalues_descending_nonnegative(self):
+        x = _metrics_matrix(12, 4, 3)
+        _, _, eig, evr = model.pca_graph(x, jnp.ones((12,), jnp.float32))
+        eig = np.asarray(eig)
+        assert eig[0] >= eig[1] >= -1e-4
+        assert abs(np.asarray(evr).sum() - 1.0) < 1e-3 or np.asarray(evr).sum() <= 1.0
+
+    def test_two_clusters_separate_on_pc1(self):
+        """Quadrant semantics used for Fig 6: well-separated app clusters get
+        opposite-sign PC1 scores."""
+        a = np.tile([1.0, 1.0, 10.0, 10.0], (6, 1))
+        b = np.tile([10.0, 10.0, 1.0, 1.0], (6, 1))
+        x = jnp.asarray(np.concatenate([a, b]) + 0.01 * np.random.default_rng(4).normal(size=(12, 4)))
+        scores, _, _, _ = model.pca_graph(x.astype(jnp.float32), jnp.ones((12,), jnp.float32))
+        pc1 = np.asarray(scores)[:, 0]
+        assert (np.sign(pc1[:6]) == np.sign(pc1[0])).all()
+        assert (np.sign(pc1[6:]) == -np.sign(pc1[0])).all()
+
+    @hypothesis.given(seed=st.integers(0, 5000), f=st.sampled_from([4, 8]))
+    def test_matches_oracle_random(self, seed, f):
+        x = _metrics_matrix(12, f, seed)
+        scores, load, eig, _ = model.pca_graph(x, jnp.ones((12,), jnp.float32))
+        _, load_r, _ = ref.pca_ref(x)
+        # Compare the spanned subspace (eigvec pairs can swap when nearly
+        # degenerate): projection matrices must match.
+        p = np.asarray(load) @ np.asarray(load).T
+        pr = np.asarray(load_r) @ np.asarray(load_r).T
+        gap = np.abs(np.asarray(eig)[0] - np.asarray(eig)[1])
+        if gap > 1e-2:  # well-separated → subspace comparison is stable
+            np.testing.assert_allclose(p, pr, atol=2e-2)
+
+
+class TestEntropyGraph:
+    def test_matches_refs(self):
+        rng = np.random.default_rng(5)
+        c = jnp.asarray(rng.integers(0, 100, (11, 500)).astype(np.float32))
+        w = jnp.asarray(rng.integers(1, 5, (11, 500)).astype(np.float32))
+        h, d = model.entropy_graph(c, w)
+        hr = ref.entropy_weighted_ref(c, w)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(d), np.asarray(ref.entropy_diff_ref(hr)), rtol=1e-3, atol=1e-4)
+
+
+class TestSpatialGraph:
+    def test_matches_refs(self):
+        rng = np.random.default_rng(6)
+        h = jnp.asarray(rng.integers(0, 30, (8, 64)).astype(np.float32))
+        bv = jnp.asarray((2.0 ** np.arange(64)).astype(np.float32))
+        avg, sc = model.spatial_graph(h, bv)
+        avg_r = ref.weighted_mean_hist_ref(h, bv)
+        np.testing.assert_allclose(np.asarray(avg), np.asarray(avg_r), rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(sc), np.asarray(ref.spatial_score_ref(avg_r)), rtol=1e-4, atol=1e-5)
+
+
+class TestAnalysisSuite:
+    def test_suite_equals_parts(self):
+        """The fused model.hlo.txt module must return exactly the per-graph
+        results, in the documented ABI order."""
+        rng = np.random.default_rng(7)
+        c = jnp.asarray(rng.integers(0, 50, (16, 256)).astype(np.float32))
+        w = jnp.asarray(rng.integers(1, 4, (16, 256)).astype(np.float32))
+        hist = jnp.asarray(rng.integers(0, 20, (8, 64)).astype(np.float32))
+        bv = jnp.asarray((2.0 ** np.arange(64)).astype(np.float32))
+        x = _metrics_matrix(16, 4, 8)
+        mask = jnp.concatenate([jnp.ones((12,)), jnp.zeros((4,))]).astype(jnp.float32)
+
+        out = model.analysis_suite(c, w, hist, bv, x, mask)
+        h, hd = model.entropy_graph(c, w)
+        avg, sc = model.spatial_graph(hist, bv)
+        ps, pl_, pe, pevr = model.pca_graph(x, mask)
+        for got, want in zip(out, (h, hd, avg, sc, ps, pl_, pe, pevr)):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,84 @@
+"""Pallas spatial-locality kernel vs the pure-jnp oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+from compile.kernels.spatial import spatial_from_hist, spatial_score, weighted_mean_hist
+
+hypothesis.settings.register_profile(
+    "pallas", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("pallas")
+
+
+def _bins(d=64):
+    return jnp.asarray((2.0 ** np.arange(d)).astype(np.float32))
+
+
+class TestWeightedMean:
+    def test_point_mass(self):
+        h = jnp.zeros((1, 64), jnp.float32).at[0, 5].set(10.0)
+        np.testing.assert_allclose(np.asarray(weighted_mean_hist(h, _bins())), [32.0], rtol=1e-6)
+
+    def test_empty_row_is_zero(self):
+        h = jnp.zeros((3, 64), jnp.float32).at[1, 0].set(4.0)
+        out = np.asarray(weighted_mean_hist(h, _bins()))
+        assert out[0] == 0.0 and out[2] == 0.0 and out[1] == 1.0
+
+    def test_matches_ref_random(self):
+        h = jnp.asarray(np.random.default_rng(0).integers(0, 30, (8, 64)).astype(np.float32))
+        np.testing.assert_allclose(
+            np.asarray(weighted_mean_hist(h, _bins())),
+            np.asarray(ref.weighted_mean_hist_ref(h, _bins())),
+            rtol=1e-5,
+        )
+
+    @hypothesis.given(l=st.integers(1, 12), d=st.integers(2, 128), seed=st.integers(0, 10_000))
+    def test_matches_ref_any_shape(self, l, d, seed):
+        h = jnp.asarray(np.random.default_rng(seed).integers(0, 20, (l, d)).astype(np.float32))
+        bv = jnp.asarray(np.random.default_rng(seed + 1).uniform(0, 100, d).astype(np.float32))
+        np.testing.assert_allclose(
+            np.asarray(weighted_mean_hist(h, bv)),
+            np.asarray(ref.weighted_mean_hist_ref(h, bv)),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+class TestSpatialScore:
+    def test_perfect_halving_is_half(self):
+        """DTR halving per line-size doubling → score 0.5 everywhere."""
+        avg = jnp.asarray([64.0, 32.0, 16.0, 8.0])
+        np.testing.assert_allclose(np.asarray(spatial_score(avg)), [0.5, 0.5, 0.5], rtol=1e-6)
+
+    def test_no_reduction_is_zero(self):
+        avg = jnp.asarray([10.0, 10.0, 10.0])
+        np.testing.assert_allclose(np.asarray(spatial_score(avg)), [0.0, 0.0], atol=1e-6)
+
+    def test_growth_clamped_to_zero(self):
+        avg = jnp.asarray([10.0, 20.0])
+        np.testing.assert_allclose(np.asarray(spatial_score(avg)), [0.0], atol=1e-6)
+
+    def test_matches_ref(self):
+        avg = jnp.asarray(np.random.default_rng(2).uniform(1, 1e6, 8).astype(np.float32))
+        np.testing.assert_allclose(
+            np.asarray(spatial_score(avg)), np.asarray(ref.spatial_score_ref(avg)), rtol=1e-5
+        )
+
+    @hypothesis.given(seed=st.integers(0, 2**31 - 1))
+    def test_scores_in_unit_interval(self, seed):
+        avg = jnp.asarray(np.random.default_rng(seed).uniform(0, 1e7, 8).astype(np.float32))
+        s = np.asarray(spatial_score(avg))
+        assert (s >= 0.0).all() and (s <= 1.0).all()
+
+
+class TestFused:
+    def test_spatial_from_hist_pipeline(self):
+        h = jnp.asarray(np.random.default_rng(3).integers(0, 40, (8, 64)).astype(np.float32))
+        got = np.asarray(spatial_from_hist(h, _bins()))
+        want = np.asarray(
+            ref.spatial_score_ref(ref.weighted_mean_hist_ref(h, _bins()))
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

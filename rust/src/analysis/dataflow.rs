@@ -1,0 +1,205 @@
+//! Shared dynamic-dataflow machinery for the parallelism metrics (ILP, DLP,
+//! BBLP): last-writer tracking over registers and memory granules, and the
+//! classic "depth = 1 + max(producer depths)" recurrence under an idealized
+//! machine (infinite resources, perfect renaming — dependencies only).
+
+use crate::interp::InstrEvent;
+use crate::util::FastMap;
+
+/// Memory dependences are tracked at 8-byte granularity — every value in
+/// the mini-IR is at most 8 bytes and buffers are 64B-aligned, so this is
+/// exact for the workloads here.
+pub const MEM_GRANULE_SHIFT: u8 = 3;
+
+/// Dataflow-depth tracker with O(1) generation-based reset (used by the
+/// windowed ILP variants: resetting per window must not reallocate).
+#[derive(Debug, Clone)]
+pub struct DepthTracker {
+    reg_depth: Vec<(u32, u32)>, // (gen, depth)
+    mem_depth: FastMap<u64, (u32, u32)>,
+    /// Registers whose dependences are ignored (per-reg mask). Used by the
+    /// DLP analyzer to exclude induction-variable chains: a vectorizer
+    /// strength-reduces the counter, so the i → i+1 chain must not serialize
+    /// otherwise-independent iterations.
+    ignore: Vec<bool>,
+    gen: u32,
+    pub max_depth: u32,
+    pub count: u64,
+}
+
+impl DepthTracker {
+    pub fn new(n_regs: u16) -> Self {
+        DepthTracker {
+            reg_depth: vec![(0, 0); n_regs as usize],
+            mem_depth: FastMap::default(),
+            ignore: vec![false; n_regs as usize],
+            gen: 1,
+            max_depth: 0,
+            count: 0,
+        }
+    }
+
+    /// Ignore dependences through `regs` (loop counters).
+    pub fn with_ignored(n_regs: u16, regs: &[u16]) -> Self {
+        let mut t = Self::new(n_regs);
+        for &r in regs {
+            if (r as usize) < t.ignore.len() {
+                t.ignore[r as usize] = true;
+            }
+        }
+        t
+    }
+
+    /// Forget all dependences (window boundary). O(1).
+    pub fn reset(&mut self) {
+        self.gen += 1;
+        self.max_depth = 0;
+        self.count = 0;
+    }
+
+    /// Record one executed instruction; returns its dataflow depth.
+    #[inline]
+    pub fn observe(&mut self, ev: &InstrEvent) -> u32 {
+        let mut prod = 0u32;
+        for &s in ev.sources() {
+            if self.ignore[s as usize] {
+                continue;
+            }
+            let (g, d) = self.reg_depth[s as usize];
+            if g == self.gen {
+                prod = prod.max(d);
+            }
+        }
+        if let Some(m) = ev.mem {
+            let granule = m.addr >> MEM_GRANULE_SHIFT;
+            if m.is_store {
+                // store depends on its sources only (handled above); it
+                // *defines* the granule below.
+                let d = prod + 1;
+                self.mem_depth.insert(granule, (self.gen, d));
+                self.count += 1;
+                self.max_depth = self.max_depth.max(d);
+                return d;
+            } else if let Some(&(g, d)) = self.mem_depth.get(&granule) {
+                if g == self.gen {
+                    prod = prod.max(d);
+                }
+            }
+        }
+        let d = prod + 1;
+        if let Some(dst) = ev.dst {
+            self.reg_depth[dst as usize] = (self.gen, d);
+        }
+        self.count += 1;
+        self.max_depth = self.max_depth.max(d);
+        d
+    }
+
+    /// Parallelism of everything seen since the last reset.
+    pub fn parallelism(&self) -> f64 {
+        if self.max_depth == 0 {
+            return 0.0;
+        }
+        self.count as f64 / self.max_depth as f64
+    }
+}
+
+/// Growable bitset over u32 keys with insertion counting — tracks the
+/// distinct dataflow levels each opcode occupies (DLP) without a HashSet's
+/// per-entry overhead.
+#[derive(Debug, Clone, Default)]
+pub struct LevelSet {
+    words: Vec<u64>,
+    distinct: u64,
+}
+
+impl LevelSet {
+    /// Insert `level`; returns true if newly inserted.
+    #[inline]
+    pub fn insert(&mut self, level: u32) -> bool {
+        let w = (level >> 6) as usize;
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        let bit = 1u64 << (level & 63);
+        if self.words[w] & bit == 0 {
+            self.words[w] |= bit;
+            self.distinct += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn len(&self) -> u64 {
+        self.distinct
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.distinct == 0
+    }
+}
+
+/// Helper constructing an InstrEvent for unit tests of the trackers.
+#[cfg(test)]
+pub fn test_event(op: crate::ir::Op, dst: Option<u16>, srcs: &[u16]) -> InstrEvent {
+    let mut s = [0u16; 3];
+    s[..srcs.len()].copy_from_slice(srcs);
+    InstrEvent {
+        op,
+        dst,
+        srcs: s,
+        n_srcs: srcs.len() as u8,
+        mem: None,
+        block: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::MemAccess;
+    use crate::ir::Op;
+
+    #[test]
+    fn independent_chain_depths() {
+        let mut t = DepthTracker::new(8);
+        // two independent adds: both depth 1
+        assert_eq!(t.observe(&test_event(Op::Add, Some(0), &[4, 5])), 1);
+        assert_eq!(t.observe(&test_event(Op::Add, Some(1), &[6, 7])), 1);
+        // dependent on both: depth 2
+        assert_eq!(t.observe(&test_event(Op::Add, Some(2), &[0, 1])), 2);
+        assert!((t.parallelism() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_carried_dependence() {
+        let mut t = DepthTracker::new(4);
+        let mut store = test_event(Op::Store, None, &[0, 1]);
+        store.mem = Some(MemAccess { addr: 0x100, size: 8, is_store: true });
+        let d_store = t.observe(&store);
+        let mut load = test_event(Op::Load, Some(2), &[3]);
+        load.mem = Some(MemAccess { addr: 0x100, size: 8, is_store: false });
+        let d_load = t.observe(&load);
+        assert_eq!(d_load, d_store + 1, "load must depend on prior store");
+    }
+
+    #[test]
+    fn reset_clears_dependences() {
+        let mut t = DepthTracker::new(4);
+        t.observe(&test_event(Op::Add, Some(0), &[1, 2]));
+        t.observe(&test_event(Op::Add, Some(0), &[0, 0])); // depth 2
+        assert_eq!(t.max_depth, 2);
+        t.reset();
+        assert_eq!(t.observe(&test_event(Op::Add, Some(3), &[0, 0])), 1);
+    }
+
+    #[test]
+    fn levelset_counts_distinct() {
+        let mut s = LevelSet::default();
+        assert!(s.insert(3));
+        assert!(!s.insert(3));
+        assert!(s.insert(1000));
+        assert_eq!(s.len(), 2);
+    }
+}

@@ -1,0 +1,197 @@
+//! Data-level parallelism (paper §II-B, Fig 3c).
+//!
+//! The paper "specializes ILP per opcode in order to estimate DLP": if
+//! several dynamic instances of the *same* opcode sit at the *same* global
+//! dataflow level, an idealized SIMD unit could execute them as one vector
+//! instruction. So per opcode o:
+//!
+//! ```text
+//! ILP_o = count_o / (#distinct dataflow levels where o occurs)
+//! ```
+//!
+//! which is exactly the mean vector length a level-synchronous vectorizer
+//! would achieve. The program-level DLP is the count-weighted mean of ILP_o
+//! over *vectorizable* opcodes (arithmetic + memory; control/moves excluded,
+//! see [`Op::vectorizable`]).
+//!
+//! Dependences through loop-induction registers are excluded from the depth
+//! recurrence (a vectorizer strength-reduces the counter); without this,
+//! the i → i+1 chain would place every iteration of even a perfectly
+//! data-parallel loop at a distinct level and DLP would degenerate to 1.
+
+use super::dataflow::{DepthTracker, LevelSet};
+use crate::interp::{Instrument, TraceEvent};
+use crate::ir::Op;
+use crate::util::Json;
+
+/// Streaming DLP analyzer.
+pub struct DlpAnalyzer {
+    depth: DepthTracker,
+    levels: Vec<LevelSet>,       // per opcode
+    counts: [u64; Op::COUNT],    // per opcode
+}
+
+/// Finalized DLP numbers.
+#[derive(Debug, Clone)]
+pub struct DlpResult {
+    /// Count-weighted mean vector length over vectorizable opcodes.
+    pub dlp: f64,
+    /// Per-opcode (mnemonic, count, ILP_o) for ops that occurred.
+    pub per_op: Vec<(&'static str, u64, f64)>,
+}
+
+impl DlpAnalyzer {
+    /// `counters`: the program's loop-induction registers (from
+    /// `Program::loops`), excluded from the dependence recurrence.
+    pub fn new(n_regs: u16, counters: &[u16]) -> Self {
+        DlpAnalyzer {
+            depth: DepthTracker::with_ignored(n_regs, counters),
+            levels: (0..Op::COUNT).map(|_| LevelSet::default()).collect(),
+            counts: [0; Op::COUNT],
+        }
+    }
+
+    pub fn for_program(prog: &crate::ir::Program) -> Self {
+        let counters: Vec<u16> = prog
+            .loops
+            .iter()
+            .map(|l| l.counter)
+            .filter(|&c| c != u16::MAX)
+            .collect();
+        Self::new(prog.func.n_regs, &counters)
+    }
+
+    pub fn finalize(&self) -> DlpResult {
+        let mut per_op = Vec::new();
+        let mut weighted = 0.0;
+        let mut weight = 0u64;
+        for i in 0..Op::COUNT {
+            let c = self.counts[i];
+            if c == 0 {
+                continue;
+            }
+            let op = Op::from_index(i).unwrap();
+            let lv = self.levels[i].len().max(1);
+            let ilp_o = c as f64 / lv as f64;
+            per_op.push((op.mnemonic(), c, ilp_o));
+            if op.vectorizable() {
+                weighted += ilp_o * c as f64;
+                weight += c;
+            }
+        }
+        DlpResult {
+            dlp: if weight == 0 { 0.0 } else { weighted / weight as f64 },
+            per_op,
+        }
+    }
+}
+
+impl Instrument for DlpAnalyzer {
+    #[inline]
+    fn on_event(&mut self, ev: &TraceEvent) {
+        if let TraceEvent::Instr(i) = ev {
+            let d = self.depth.observe(i);
+            let idx = i.op.index();
+            self.counts[idx] += 1;
+            self.levels[idx].insert(d);
+        }
+    }
+}
+
+impl DlpResult {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("dlp", self.dlp);
+        let mut ops = Json::obj();
+        for (name, count, ilp_o) in &self.per_op {
+            let mut o = Json::obj();
+            o.set("count", *count);
+            o.set("ilp", *ilp_o);
+            ops.set(name, o);
+        }
+        j.set("per_op", ops);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::run_program;
+    use crate::ir::ProgramBuilder;
+
+    fn dlp_of(p: &crate::ir::Program) -> DlpResult {
+        let mut a = DlpAnalyzer::for_program(p);
+        run_program(p, &mut a).unwrap();
+        a.finalize()
+    }
+
+    #[test]
+    fn elementwise_map_has_high_dlp() {
+        // a[i] = a[i] * 2 — every fmul is independent; dataflow levels are
+        // shared across iterations (same loop-body structure), so ILP_fmul
+        // is high.
+        let mut b = ProgramBuilder::new("map");
+        let data: Vec<f64> = (0..512).map(|i| i as f64).collect();
+        let a = b.alloc_f64_init("a", &data);
+        let n = b.const_i(512);
+        let two = b.const_f(2.0);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(a, i);
+            let w = b.fmul(v, two);
+            b.store_f64(a, i, w);
+        });
+        let r = dlp_of(&b.finish(None));
+        let fmul = r.per_op.iter().find(|(n, _, _)| *n == "fmul").unwrap();
+        assert!(fmul.2 > 4.0, "fmul vector length {}", fmul.2);
+        assert!(r.dlp > 2.0, "dlp {}", r.dlp);
+    }
+
+    #[test]
+    fn reduction_has_low_dlp() {
+        // acc += a[i] — every fadd is chained: one new dataflow level per
+        // iteration ⇒ ILP_fadd ≈ 1.
+        let mut b = ProgramBuilder::new("red");
+        let data: Vec<f64> = (0..512).map(|i| i as f64).collect();
+        let a = b.alloc_f64_init("a", &data);
+        let acc = b.const_f(0.0);
+        let n = b.const_i(512);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(a, i);
+            let s = b.fadd(acc, v);
+            b.assign(acc, s);
+        });
+        let r = dlp_of(&b.finish(Some(acc)));
+        let fadd = r.per_op.iter().find(|(n, _, _)| *n == "fadd").unwrap();
+        assert!(fadd.2 < 1.5, "fadd vector length {}", fadd.2);
+    }
+
+    #[test]
+    fn map_beats_reduction() {
+        let build_map = || {
+            let mut b = ProgramBuilder::new("m");
+            let a = b.alloc_f64("a", 256);
+            let n = b.const_i(256);
+            let c = b.const_f(1.5);
+            b.counted_loop(n, |b, i| {
+                let v = b.load_f64(a, i);
+                let w = b.fmul(v, c);
+                b.store_f64(a, i, w);
+            });
+            b.finish(None)
+        };
+        let build_red = || {
+            let mut b = ProgramBuilder::new("r");
+            let a = b.alloc_f64("a", 256);
+            let acc = b.const_f(0.0);
+            let n = b.const_i(256);
+            b.counted_loop(n, |b, i| {
+                let v = b.load_f64(a, i);
+                let s = b.fadd(acc, v);
+                b.assign(acc, s);
+            });
+            b.finish(Some(acc))
+        };
+        assert!(dlp_of(&build_map()).dlp > dlp_of(&build_red()).dlp);
+    }
+}

@@ -1,0 +1,200 @@
+//! Instruction-level parallelism (PISA baseline; feeds the host model and
+//! the DLP/BBLP family).
+//!
+//! ILP_w: the trace is partitioned into consecutive windows of w dynamic
+//! instructions; within each window the dataflow-critical-path parallelism
+//! `count / depth` is computed (register + memory dependences, idealized
+//! machine); ILP_w is the instruction-weighted mean over windows. ILP_∞
+//! treats the whole trace as one window. Window sizes follow PISA's
+//! convention of scheduling-scope-limited ILP.
+
+use super::dataflow::DepthTracker;
+use crate::interp::{Instrument, TraceEvent};
+use crate::util::Json;
+
+/// Finite scheduling windows analyzed (instructions).
+pub const ILP_WINDOWS: [usize; 4] = [32, 64, 128, 256];
+
+#[derive(Debug, Clone)]
+struct WindowedIlp {
+    window: usize,
+    tracker: DepthTracker,
+    in_window: usize,
+    weighted_sum: f64, // Σ window_count · window_parallelism
+    weight: u64,       // Σ window_count
+}
+
+impl WindowedIlp {
+    fn flush(&mut self) {
+        if self.tracker.count > 0 {
+            self.weighted_sum += self.tracker.parallelism() * self.tracker.count as f64;
+            self.weight += self.tracker.count;
+        }
+        self.tracker.reset();
+        self.in_window = 0;
+    }
+
+    fn value(&self) -> f64 {
+        // include the trailing partial window
+        let mut sum = self.weighted_sum;
+        let mut w = self.weight;
+        if self.tracker.count > 0 {
+            sum += self.tracker.parallelism() * self.tracker.count as f64;
+            w += self.tracker.count;
+        }
+        if w == 0 {
+            0.0
+        } else {
+            sum / w as f64
+        }
+    }
+}
+
+/// Streaming ILP analyzer (all window sizes + ∞ in one pass).
+#[derive(Debug, Clone)]
+pub struct IlpAnalyzer {
+    windows: Vec<WindowedIlp>,
+    inf: DepthTracker,
+}
+
+/// Finalized ILP numbers.
+#[derive(Debug, Clone)]
+pub struct IlpResult {
+    /// (window size, ILP_w), ascending; plus `inf`.
+    pub windowed: Vec<(usize, f64)>,
+    pub inf: f64,
+    pub instrs: u64,
+    pub critical_path: u32,
+}
+
+impl IlpAnalyzer {
+    pub fn new(n_regs: u16) -> Self {
+        IlpAnalyzer {
+            windows: ILP_WINDOWS
+                .iter()
+                .map(|&w| WindowedIlp {
+                    window: w,
+                    tracker: DepthTracker::new(n_regs),
+                    in_window: 0,
+                    weighted_sum: 0.0,
+                    weight: 0,
+                })
+                .collect(),
+            inf: DepthTracker::new(n_regs),
+        }
+    }
+
+    pub fn finalize(&self) -> IlpResult {
+        IlpResult {
+            windowed: self.windows.iter().map(|w| (w.window, w.value())).collect(),
+            inf: self.inf.parallelism(),
+            instrs: self.inf.count,
+            critical_path: self.inf.max_depth,
+        }
+    }
+}
+
+impl Instrument for IlpAnalyzer {
+    #[inline]
+    fn on_event(&mut self, ev: &TraceEvent) {
+        if let TraceEvent::Instr(i) = ev {
+            self.inf.observe(i);
+            for w in &mut self.windows {
+                w.tracker.observe(i);
+                w.in_window += 1;
+                if w.in_window >= w.window {
+                    w.flush();
+                }
+            }
+        }
+    }
+}
+
+impl IlpResult {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        for (w, v) in &self.windowed {
+            j.set(&format!("ilp_{w}"), *v);
+        }
+        j.set("ilp_inf", self.inf);
+        j.set("instrs", self.instrs);
+        j.set("critical_path", self.critical_path as u64);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::run_program;
+    use crate::ir::ProgramBuilder;
+
+    fn ilp_of(p: &crate::ir::Program) -> IlpResult {
+        let mut a = IlpAnalyzer::new(p.func.n_regs);
+        run_program(p, &mut a).unwrap();
+        a.finalize()
+    }
+
+    #[test]
+    fn serial_chain_has_ilp_near_one() {
+        // x = x + x repeated: a pure serial dependence chain (plus the loop
+        // bookkeeping, which is itself serial on the counter).
+        let mut b = ProgramBuilder::new("serial");
+        let x = b.const_f(1.000001);
+        let n = b.const_i(2000);
+        b.counted_loop(n, |b, _i| {
+            let y = b.fmul(x, x);
+            b.assign(x, y);
+        });
+        let p = b.finish(Some(x));
+        let r = ilp_of(&p);
+        assert!(r.inf < 3.0, "serial ILP_inf {}", r.inf);
+    }
+
+    #[test]
+    fn independent_stores_have_high_ilp() {
+        // a[i] = c : iterations independent except the counter chain →
+        // dataflow ILP well above the serial case.
+        let mut b = ProgramBuilder::new("par");
+        let a = b.alloc_f64("a", 2048);
+        let n = b.const_i(2048);
+        b.counted_loop(n, |b, i| {
+            let v = b.const_f(3.0);
+            b.store_f64(a, i, v);
+        });
+        let p = b.finish(None);
+        let r = ilp_of(&p);
+        assert!(r.inf > 2.5, "parallel ILP_inf {}", r.inf);
+    }
+
+    #[test]
+    fn windowed_ilp_not_above_longer_windows_for_uniform_code() {
+        let mut b = ProgramBuilder::new("w");
+        let a = b.alloc_f64("a", 1024);
+        let n = b.const_i(1024);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(a, i);
+            let w = b.fadd(v, v);
+            b.store_f64(a, i, w);
+        });
+        let p = b.finish(None);
+        let r = ilp_of(&p);
+        assert_eq!(r.windowed.len(), ILP_WINDOWS.len());
+        for (w, v) in &r.windowed {
+            assert!(*v >= 1.0, "ILP_{w} = {v} must be >= 1");
+            assert!(*v <= r.inf * 1.5 + 1.0);
+        }
+    }
+
+    #[test]
+    fn counts_match_trace() {
+        let mut b = ProgramBuilder::new("c");
+        let x = b.const_i(1);
+        let y = b.const_i(2);
+        b.add(x, y);
+        let p = b.finish(None);
+        let r = ilp_of(&p);
+        assert_eq!(r.instrs, 3);
+        assert_eq!(r.critical_path, 2); // consts at depth 1, add at 2
+    }
+}

@@ -1,0 +1,305 @@
+//! Memory-entropy analyzer (paper §II-A, Fig 3a and Fig 5).
+//!
+//! Shannon entropy of the accessed-address distribution at granularities
+//! `addr >> g` for g = 0..=10 (byte up to 1 KiB granules). The stream is
+//! counted once at byte granularity; coarser granularities are *folded*
+//! exactly at finalization (counts at g+1 are sums of child buckets at g),
+//! so the per-access hot path is a single hash update.
+//!
+//! For the AOT entropy artifact the exact per-address count multiset is
+//! compressed to count-of-counts form — see `python/compile/kernels/
+//! entropy.py`: entropy depends only on the multiset of counts, so (count
+//! value, multiplicity) pairs reproduce the exact entropy with a fixed
+//! [G, B] shape. If an application has more than B distinct count values
+//! (rare: counts are heavily repeated), adjacent values are merged
+//! weight-proportionally and the introduced error is bounded and recorded.
+
+use crate::util::FastMap;
+
+use crate::interp::{Instrument, TraceEvent};
+use crate::util::stats::shannon_entropy_counts;
+use crate::util::Json;
+
+/// Granularity shifts analyzed (2^0 .. 2^10 bytes).
+pub const SHIFTS: std::ops::RangeInclusive<u8> = 0..=10;
+pub const N_GRANULARITIES: usize = 11;
+
+/// Streaming byte-granularity address counter.
+#[derive(Debug, Clone, Default)]
+pub struct MemEntropyAnalyzer {
+    counts: FastMap<u64, u32>,
+    accesses: u64,
+}
+
+/// Finalized entropy results.
+#[derive(Debug, Clone)]
+pub struct MemEntropyResult {
+    /// Shannon entropy in bits per granularity (index = shift, fine→coarse).
+    pub entropies: Vec<f64>,
+    /// Paper Fig-5 metric: mean consecutive entropy drop.
+    pub entropy_diff: f64,
+    /// Count-of-counts per granularity: (count value, multiplicity) pairs.
+    pub count_of_counts: Vec<Vec<(u32, u64)>>,
+    /// Total dynamic accesses.
+    pub accesses: u64,
+    /// Distinct byte addresses touched (memory footprint proxy).
+    pub unique_addrs: u64,
+    /// True if any granularity needed lossy merging to fit `max_slots`.
+    pub merged: bool,
+}
+
+impl MemEntropyAnalyzer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&mut self, addr: u64) {
+        *self.counts.entry(addr).or_insert(0) += 1;
+        self.accesses += 1;
+    }
+
+    /// Fold byte-granularity counts to all granularities and compute exact
+    /// entropies + the count-of-counts compression (`max_slots` = the AOT
+    /// artifact's B dimension).
+    pub fn finalize(&self, max_slots: usize) -> MemEntropyResult {
+        let mut entropies = Vec::with_capacity(N_GRANULARITIES);
+        let mut coc = Vec::with_capacity(N_GRANULARITIES);
+        let mut merged = false;
+
+        let mut cur: FastMap<u64, u64> =
+            self.counts.iter().map(|(&a, &c)| (a, c as u64)).collect();
+        for shift in SHIFTS {
+            if shift > 0 {
+                let mut next: FastMap<u64, u64> =
+                    FastMap::with_capacity_and_hasher(cur.len() / 2 + 1, Default::default());
+                for (&a, &c) in &cur {
+                    *next.entry(a >> 1).or_insert(0) += c;
+                }
+                cur = next;
+            }
+            entropies.push(shannon_entropy_counts(cur.values().copied()));
+
+            // count-of-counts
+            let mut multiset: FastMap<u64, u64> = FastMap::default();
+            for &c in cur.values() {
+                *multiset.entry(c).or_insert(0) += 1;
+            }
+            let mut pairs: Vec<(u32, u64)> = multiset
+                .into_iter()
+                .map(|(c, m)| (c.min(u32::MAX as u64) as u32, m))
+                .collect();
+            pairs.sort_by_key(|&(c, _)| c);
+            if pairs.len() > max_slots {
+                merged = true;
+                pairs = merge_pairs(pairs, max_slots);
+            }
+            coc.push(pairs);
+        }
+
+        let diffs: Vec<f64> = entropies.windows(2).map(|w| w[0] - w[1]).collect();
+        let entropy_diff = if diffs.is_empty() {
+            0.0
+        } else {
+            diffs.iter().sum::<f64>() / diffs.len() as f64
+        };
+
+        MemEntropyResult {
+            entropies,
+            entropy_diff,
+            count_of_counts: coc,
+            accesses: self.accesses,
+            unique_addrs: self.counts.len() as u64,
+            merged,
+        }
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.accesses
+    }
+}
+
+/// Merge sorted (count, mult) pairs down to `target` slots by combining
+/// adjacent count values into their weighted mean. Total mass (Σ c·m) and
+/// total multiplicity are preserved; the entropy error is O(Δc/c) per merge
+/// and merges only happen between adjacent (≈equal) counts.
+fn merge_pairs(mut pairs: Vec<(u32, u64)>, target: usize) -> Vec<(u32, u64)> {
+    while pairs.len() > target {
+        // halve by merging adjacent pairs
+        let mut out = Vec::with_capacity(pairs.len() / 2 + 1);
+        let mut it = pairs.chunks_exact(2);
+        for ch in &mut it {
+            let (c0, m0) = ch[0];
+            let (c1, m1) = ch[1];
+            let mass = c0 as u64 * m0 + c1 as u64 * m1;
+            let m = m0 + m1;
+            out.push((((mass + m / 2) / m).max(1) as u32, m));
+        }
+        if let [last] = it.remainder() {
+            out.push(*last);
+        }
+        pairs = out;
+    }
+    pairs
+}
+
+impl Instrument for MemEntropyAnalyzer {
+    #[inline]
+    fn on_event(&mut self, ev: &TraceEvent) {
+        if let TraceEvent::Instr(i) = ev {
+            if let Some(m) = i.mem {
+                self.record(m.addr);
+            }
+        }
+    }
+}
+
+impl MemEntropyResult {
+    /// Pack count-of-counts into the fixed [G, B] fp32 matrices the entropy
+    /// artifact expects (rows beyond `N_GRANULARITIES` stay zero).
+    pub fn to_artifact_inputs(&self, g_rows: usize, b_slots: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut counts = vec![0f32; g_rows * b_slots];
+        let mut weights = vec![0f32; g_rows * b_slots];
+        for (g, pairs) in self.count_of_counts.iter().enumerate().take(g_rows) {
+            for (s, &(c, m)) in pairs.iter().enumerate().take(b_slots) {
+                counts[g * b_slots + s] = c as f32;
+                weights[g * b_slots + s] = m as f32;
+            }
+        }
+        (counts, weights)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("entropies", self.entropies.clone());
+        j.set("entropy_diff", self.entropy_diff);
+        j.set("accesses", self.accesses);
+        j.set("unique_addrs", self.unique_addrs);
+        j.set("merged", self.merged);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::collections::HashMap;
+
+    fn analyze(addrs: &[u64]) -> MemEntropyResult {
+        let mut a = MemEntropyAnalyzer::new();
+        for &ad in addrs {
+            a.record(ad);
+        }
+        a.finalize(4096)
+    }
+
+    /// O(n) oracle: entropy computed from a plain histogram at granularity g.
+    fn naive_entropy(addrs: &[u64], shift: u8) -> f64 {
+        let mut h: HashMap<u64, u64> = HashMap::new();
+        for &a in addrs {
+            *h.entry(a >> shift).or_insert(0) += 1;
+        }
+        shannon_entropy_counts(h.values().copied())
+    }
+
+    #[test]
+    fn uniform_64_addresses() {
+        let addrs: Vec<u64> = (0..64u64).collect();
+        let r = analyze(&addrs);
+        assert!((r.entropies[0] - 6.0).abs() < 1e-9); // 64 distinct bytes
+        assert!((r.entropies[1] - 5.0).abs() < 1e-9); // 32 2B granules
+        assert!((r.entropies[6] - 0.0).abs() < 1e-9); // one 64B line
+        assert!(r.entropy_diff > 0.0);
+    }
+
+    #[test]
+    fn matches_naive_fold_random() {
+        let mut rng = Rng::new(21);
+        let addrs: Vec<u64> = (0..5000).map(|_| 0x1_0000 + rng.below(1 << 14) * 8).collect();
+        let r = analyze(&addrs);
+        for shift in SHIFTS {
+            let want = naive_entropy(&addrs, shift);
+            let got = r.entropies[shift as usize];
+            assert!(
+                (got - want).abs() < 1e-9,
+                "shift {shift}: got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn count_of_counts_preserves_entropy() {
+        let mut rng = Rng::new(5);
+        let addrs: Vec<u64> = (0..20_000).map(|_| rng.below(3000) * 4).collect();
+        let r = analyze(&addrs);
+        for (g, pairs) in r.count_of_counts.iter().enumerate() {
+            // recompute entropy from the compressed form
+            let total: u64 = pairs.iter().map(|&(c, m)| c as u64 * m).sum();
+            let h: f64 = -pairs
+                .iter()
+                .map(|&(c, m)| {
+                    let p = c as f64 / total as f64;
+                    m as f64 * p * p.log2()
+                })
+                .sum::<f64>();
+            assert!(
+                (h - r.entropies[g]).abs() < 1e-9,
+                "granularity {g}: {h} vs {}",
+                r.entropies[g]
+            );
+        }
+    }
+
+    #[test]
+    fn single_address_stream_zero_entropy() {
+        let r = analyze(&vec![0x4000; 1000]);
+        assert!(r.entropies.iter().all(|&h| h == 0.0));
+        assert_eq!(r.unique_addrs, 1);
+    }
+
+    #[test]
+    fn merging_caps_slots_and_stays_close() {
+        // force > max_slots distinct count values
+        let mut a = MemEntropyAnalyzer::new();
+        let mut t = 0u64;
+        for addr in 0..300u64 {
+            for _ in 0..=addr {
+                a.record(addr * 8);
+                t += 1;
+            }
+        }
+        assert!(t > 0);
+        let r = a.finalize(64);
+        assert!(r.merged);
+        for pairs in &r.count_of_counts {
+            assert!(pairs.len() <= 64);
+        }
+        // merged entropy from compressed form still close to exact
+        let pairs = &r.count_of_counts[0];
+        let total: u64 = pairs.iter().map(|&(c, m)| c as u64 * m).sum();
+        let h: f64 = -pairs
+            .iter()
+            .map(|&(c, m)| {
+                let p = c as f64 / total as f64;
+                m as f64 * p * p.log2()
+            })
+            .sum::<f64>();
+        assert!((h - r.entropies[0]).abs() < 0.05, "{h} vs {}", r.entropies[0]);
+    }
+
+    #[test]
+    fn artifact_packing_shapes() {
+        let addrs: Vec<u64> = (0..256u64).map(|i| i * 8).collect();
+        let r = analyze(&addrs);
+        let (c, w) = r.to_artifact_inputs(16, 4096);
+        assert_eq!(c.len(), 16 * 4096);
+        assert_eq!(w.len(), 16 * 4096);
+        // row 0: single count value (1) with multiplicity 256
+        assert_eq!(c[0], 1.0);
+        assert_eq!(w[0], 256.0);
+        assert_eq!(c[1], 0.0);
+        // rows >= 11 all zero
+        assert!(c[11 * 4096..].iter().all(|&v| v == 0.0));
+    }
+}

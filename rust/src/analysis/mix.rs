@@ -1,0 +1,149 @@
+//! Instruction-mix analyzer (PISA baseline metric).
+//!
+//! Counts dynamic instructions per opcode and per class; the mix fractions
+//! feed the machine models' cost estimates and the report's
+//! characterization table.
+
+use crate::interp::{Instrument, TraceEvent};
+use crate::ir::{Op, OpClass};
+use crate::util::Json;
+
+/// Dynamic instruction mix.
+#[derive(Debug, Clone)]
+pub struct MixAnalyzer {
+    pub per_op: [u64; Op::COUNT],
+    pub branches: u64,
+    pub blocks: u64,
+}
+
+impl Default for MixAnalyzer {
+    fn default() -> Self {
+        MixAnalyzer {
+            per_op: [0; Op::COUNT],
+            branches: 0,
+            blocks: 0,
+        }
+    }
+}
+
+impl MixAnalyzer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.per_op.iter().sum::<u64>() + self.branches
+    }
+
+    pub fn count_class(&self, class: OpClass) -> u64 {
+        (0..Op::COUNT)
+            .filter(|&i| Op::from_index(i).unwrap().class() == class)
+            .map(|i| self.per_op[i])
+            .sum()
+    }
+
+    /// Fraction of dynamic instructions in `class` (branches included in the
+    /// denominator as control instructions).
+    pub fn fraction(&self, class: OpClass) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            return 0.0;
+        }
+        self.count_class(class) as f64 / t as f64
+    }
+
+    pub fn control_fraction(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            return 0.0;
+        }
+        self.branches as f64 / t as f64
+    }
+
+    /// Loads+stores per instruction — the "memory intensity" the paper's
+    /// intro argues drives NMC benefit.
+    pub fn memory_fraction(&self) -> f64 {
+        self.fraction(OpClass::Load) + self.fraction(OpClass::Store)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("total", self.total());
+        j.set("blocks", self.blocks);
+        j.set("branches", self.branches);
+        let mut ops = Json::obj();
+        for i in 0..Op::COUNT {
+            if self.per_op[i] > 0 {
+                ops.set(Op::from_index(i).unwrap().mnemonic(), self.per_op[i]);
+            }
+        }
+        j.set("per_op", ops);
+        let mut cls = Json::obj();
+        for (name, c) in [
+            ("int_arith", OpClass::IntArith),
+            ("float_arith", OpClass::FloatArith),
+            ("compare", OpClass::Compare),
+            ("convert", OpClass::Convert),
+            ("data_move", OpClass::DataMove),
+            ("load", OpClass::Load),
+            ("store", OpClass::Store),
+        ] {
+            cls.set(name, self.fraction(c));
+        }
+        cls.set("control", self.control_fraction());
+        j.set("class_fractions", cls);
+        j
+    }
+}
+
+impl Instrument for MixAnalyzer {
+    #[inline]
+    fn on_event(&mut self, ev: &TraceEvent) {
+        match ev {
+            TraceEvent::Instr(i) => self.per_op[i.op.index()] += 1,
+            TraceEvent::Branch { .. } => self.branches += 1,
+            TraceEvent::BlockEnter { .. } => self.blocks += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::run_program;
+    use crate::ir::ProgramBuilder;
+
+    #[test]
+    fn counts_loop_mix() {
+        let mut b = ProgramBuilder::new("t");
+        let a = b.alloc_f64_init("a", &[1.0, 2.0, 3.0, 4.0]);
+        let n = b.const_i(4);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(a, i);
+            let w = b.fmul(v, v);
+            b.store_f64(a, i, w);
+        });
+        let p = b.finish(None);
+        let mut mix = MixAnalyzer::new();
+        run_program(&p, &mut mix).unwrap();
+        assert_eq!(mix.per_op[Op::Load.index()], 4);
+        assert_eq!(mix.per_op[Op::Store.index()], 4);
+        assert_eq!(mix.per_op[Op::FMul.index()], 4);
+        assert_eq!(mix.branches, 5);
+        assert!(mix.memory_fraction() > 0.0);
+        let total_fracs: f64 = [
+            OpClass::IntArith,
+            OpClass::FloatArith,
+            OpClass::Compare,
+            OpClass::Convert,
+            OpClass::DataMove,
+            OpClass::Load,
+            OpClass::Store,
+        ]
+        .iter()
+        .map(|&c| mix.fraction(c))
+        .sum::<f64>()
+            + mix.control_fraction();
+        assert!((total_fracs - 1.0).abs() < 1e-12);
+    }
+}

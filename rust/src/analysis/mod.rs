@@ -1,0 +1,213 @@
+//! The PISA-NMC metric analyzers (paper §II).
+//!
+//! Every analyzer implements [`crate::interp::Instrument`] and consumes the
+//! dynamic event stream exactly once; [`profile`] fans a single execution
+//! out to all of them (the paper's single-pass instrumented run) and
+//! produces an [`AppMetrics`] with every §II metric:
+//!
+//! | metric | module | paper figure |
+//! |---|---|---|
+//! | instruction mix        | [`mix`]         | (baseline) |
+//! | branch entropy         | [`branch`]      | (baseline) |
+//! | memory entropy         | [`mem_entropy`] | Fig 3a, Fig 5 |
+//! | DTR / spatial locality | [`reuse`], [`spatial`] | Fig 3b |
+//! | ILP (windowed)         | [`ilp`]         | (baseline) |
+//! | DLP                    | [`dlp`]         | Fig 3c |
+//! | BBLP (windowed)        | [`bblp`]        | Fig 3c |
+//! | PBBLP                  | [`pbblp`]       | Fig 3c |
+
+pub mod bblp;
+pub mod branch;
+pub mod dataflow;
+pub mod dlp;
+pub mod ilp;
+pub mod mem_entropy;
+pub mod mix;
+pub mod pbblp;
+pub mod reuse;
+pub mod spatial;
+
+use anyhow::Result;
+
+pub use bblp::{BblpAnalyzer, BblpResult};
+pub use branch::BranchAnalyzer;
+pub use dlp::{DlpAnalyzer, DlpResult};
+pub use ilp::{IlpAnalyzer, IlpResult};
+pub use mem_entropy::{MemEntropyAnalyzer, MemEntropyResult};
+pub use mix::MixAnalyzer;
+pub use pbblp::{PbblpAnalyzer, PbblpResult};
+pub use reuse::{ReuseAnalyzer, ReuseResult};
+pub use spatial::SpatialResult;
+
+use crate::interp::{run_program, ExecStats, Fanout};
+use crate::ir::Program;
+use crate::util::Json;
+
+/// All §II metrics for one application run (PISA's JSON result object).
+#[derive(Debug, Clone)]
+pub struct AppMetrics {
+    pub name: String,
+    pub mix: MixAnalyzer,
+    pub branch: BranchAnalyzer,
+    pub mem_entropy: MemEntropyResult,
+    pub reuse: ReuseResult,
+    pub spatial: SpatialResult,
+    pub ilp: IlpResult,
+    pub dlp: DlpResult,
+    pub bblp: BblpResult,
+    pub pbblp: PbblpResult,
+    pub exec: ExecStats,
+}
+
+/// Count-of-counts slots the entropy artifact accepts (see aot.py `B`).
+pub const ENTROPY_SLOTS: usize = 4096;
+
+/// Run `prog` once, streaming the trace through every analyzer.
+pub fn profile(prog: &Program) -> Result<AppMetrics> {
+    crate::ir::verify::verify_ok(prog);
+    let n_regs = prog.func.n_regs;
+    let mut mix = MixAnalyzer::new();
+    let mut branch = BranchAnalyzer::new();
+    let mut ment = MemEntropyAnalyzer::new();
+    let mut reuse = ReuseAnalyzer::new();
+    let mut ilp = IlpAnalyzer::new(n_regs);
+    let mut dlp = DlpAnalyzer::for_program(prog);
+    let mut bblp = BblpAnalyzer::new(n_regs);
+    let mut pbblp = PbblpAnalyzer::new(prog);
+
+    let (out, _machine) = {
+        let mut fan = Fanout::new(vec![
+            &mut mix,
+            &mut branch,
+            &mut ment,
+            &mut reuse,
+            &mut ilp,
+            &mut dlp,
+            &mut bblp,
+            &mut pbblp,
+        ]);
+        run_program(prog, &mut fan)?
+    };
+
+    let mem_entropy = ment.finalize(ENTROPY_SLOTS);
+    let reuse_res = reuse.finalize();
+    let spatial = spatial::from_reuse(&reuse_res);
+    Ok(AppMetrics {
+        name: prog.func.name.clone(),
+        mix,
+        branch,
+        mem_entropy,
+        reuse: reuse_res,
+        spatial,
+        ilp: ilp.finalize(),
+        dlp: dlp.finalize(),
+        bblp: bblp.finalize(),
+        pbblp: pbblp.finalize(),
+        exec: out.stats,
+    })
+}
+
+impl AppMetrics {
+    /// The paper's four Fig-6 PCA features, in artifact column order:
+    /// [BBLP_1, PBBLP, entropy_diff_mem, spat_8B_16B].
+    pub fn pca4_features(&self) -> [f64; 4] {
+        [
+            self.bblp.bblp_1(),
+            self.pbblp.pbblp,
+            self.mem_entropy.entropy_diff,
+            self.spatial.spat_8b_16b(),
+        ]
+    }
+
+    /// Extended 8-feature vector for the pca8 artifact:
+    /// pca4 + [DLP, ILP_inf, memory entropy @64B, branch entropy].
+    pub fn pca8_features(&self) -> [f64; 8] {
+        let p4 = self.pca4_features();
+        [
+            p4[0],
+            p4[1],
+            p4[2],
+            p4[3],
+            self.dlp.dlp,
+            self.ilp.inf,
+            self.mem_entropy.entropies[6],
+            self.branch.weighted_entropy(),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.as_str());
+        j.set("instruction_mix", self.mix.to_json());
+        j.set("branch", self.branch.to_json());
+        j.set("memory_entropy", self.mem_entropy.to_json());
+        j.set("reuse", self.reuse.to_json());
+        j.set("spatial_locality", self.spatial.to_json());
+        j.set("ilp", self.ilp.to_json());
+        j.set("dlp", self.dlp.to_json());
+        j.set("bblp", self.bblp.to_json());
+        j.set("pbblp", self.pbblp.to_json());
+        j.set("dyn_instrs", self.exec.dyn_instrs);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+
+    fn tiny_program() -> Program {
+        let mut b = ProgramBuilder::new("tiny");
+        let data: Vec<f64> = (0..64).map(|i| (i % 7) as f64).collect();
+        let a = b.alloc_f64_init("a", &data);
+        let o = b.alloc_f64("o", 64);
+        let n = b.const_i(64);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(a, i);
+            let w = b.fmul(v, v);
+            b.store_f64(o, i, w);
+        });
+        b.finish(None)
+    }
+
+    #[test]
+    fn profile_produces_all_metrics() {
+        let m = profile(&tiny_program()).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert!(m.exec.dyn_instrs > 0);
+        assert_eq!(m.mem_entropy.entropies.len(), 11);
+        assert_eq!(m.reuse.avg_dtr.len(), 8);
+        assert_eq!(m.spatial.scores.len(), 7);
+        assert_eq!(m.bblp.values.len(), 4);
+        assert!(m.pbblp.pbblp > 32.0, "map loop should be data-parallel");
+        assert!(m.dlp.dlp > 1.0);
+        assert!(m.ilp.inf >= 1.0);
+    }
+
+    #[test]
+    fn feature_vectors_consistent() {
+        let m = profile(&tiny_program()).unwrap();
+        let p4 = m.pca4_features();
+        let p8 = m.pca8_features();
+        assert_eq!(&p4[..], &p8[..4]);
+        assert!(p4.iter().all(|v| v.is_finite()));
+        assert!(p8.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn json_report_has_sections() {
+        let m = profile(&tiny_program()).unwrap();
+        let s = m.to_json().to_string_pretty();
+        for key in [
+            "instruction_mix",
+            "memory_entropy",
+            "spatial_locality",
+            "dlp",
+            "bblp",
+            "pbblp",
+        ] {
+            assert!(s.contains(key), "missing {key}");
+        }
+    }
+}

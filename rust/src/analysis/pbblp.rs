@@ -1,0 +1,302 @@
+//! Potential basic-block-level parallelism (paper §II-B, Fig 3c).
+//!
+//! PBBLP "tries in a fast and straightforward manner to estimate the
+//! basic-block level parallelism in data-parallel loops": loop iterations
+//! are the tasks. Using the builder's structured `LoopInfo` (the stand-in
+//! for LLVM's LoopInfo pass), each loop *invocation* is tracked on a stack;
+//! within an invocation, iteration i depends on iteration j < i when i reads
+//! a register or memory granule last written by j — **excluding the
+//! induction register**, which every iteration trivially chains through.
+//!
+//! Per invocation: ratio = iterations / critical-iteration-chain-length.
+//! A data-parallel loop scores ratio = trip count (all iterations could run
+//! at once); a reduction scores ≈ 1. PBBLP is the iteration-weighted mean
+//! of the ratios. Instructions inside nested loops are attributed to the
+//! innermost active invocation (the paper's "fast and straightforward"
+//! approximation).
+
+use std::collections::HashMap;
+use crate::util::FastMap;
+
+use super::dataflow::MEM_GRANULE_SHIFT;
+use crate::interp::{Instrument, TraceEvent};
+use crate::ir::{BlockId, LoopInfo, Program, Reg};
+use crate::util::Json;
+
+#[derive(Debug)]
+struct Invocation {
+    loop_idx: usize,
+    /// Index of the currently open iteration (None between iterations —
+    /// during header evaluation — and before the first body entry).
+    open_iter: Option<u64>,
+    reg_writer: FastMap<Reg, u64>,
+    mem_writer: FastMap<u64, u64>,
+    iter_depths: Vec<u32>,
+    cur_dep: u32,
+    max_depth: u32,
+}
+
+impl Invocation {
+    fn new(loop_idx: usize) -> Self {
+        Invocation {
+            loop_idx,
+            open_iter: None,
+            reg_writer: FastMap::default(),
+            mem_writer: FastMap::default(),
+            iter_depths: Vec::new(),
+            cur_dep: 0,
+            max_depth: 0,
+        }
+    }
+
+    fn open_iteration(&mut self) {
+        debug_assert!(self.open_iter.is_none());
+        self.open_iter = Some(self.iter_depths.len() as u64);
+        self.cur_dep = 0;
+    }
+
+    fn close_iteration(&mut self) {
+        if self.open_iter.take().is_some() {
+            let d = self.cur_dep + 1;
+            self.iter_depths.push(d);
+            self.max_depth = self.max_depth.max(d);
+        }
+    }
+}
+
+/// Streaming PBBLP analyzer (constructed per program: needs its LoopInfo).
+pub struct PbblpAnalyzer {
+    header_of: HashMap<BlockId, usize>,
+    loops: Vec<LoopInfo>,
+    stack: Vec<Invocation>,
+    weighted_sum: f64,
+    weight: u64,
+    invocations: u64,
+}
+
+/// Finalized PBBLP numbers.
+#[derive(Debug, Clone)]
+pub struct PbblpResult {
+    /// Iteration-weighted mean of per-invocation (iters / critical chain).
+    pub pbblp: f64,
+    pub invocations: u64,
+    pub iterations: u64,
+}
+
+impl PbblpAnalyzer {
+    pub fn new(prog: &Program) -> Self {
+        PbblpAnalyzer {
+            header_of: prog
+                .loops
+                .iter()
+                .enumerate()
+                .map(|(i, l)| (l.header, i))
+                .collect(),
+            loops: prog.loops.clone(),
+            stack: Vec::new(),
+            weighted_sum: 0.0,
+            weight: 0,
+            invocations: 0,
+        }
+    }
+
+    fn pop_invocation(&mut self) {
+        let mut inv = self.stack.pop().expect("pop on empty loop stack");
+        inv.close_iteration(); // no-op if already closed at header
+        let iters = inv.iter_depths.len() as u64;
+        if iters > 0 {
+            let ratio = iters as f64 / inv.max_depth.max(1) as f64;
+            self.weighted_sum += ratio * iters as f64;
+            self.weight += iters;
+        }
+        self.invocations += 1;
+    }
+
+    pub fn finalize(&mut self) -> PbblpResult {
+        while !self.stack.is_empty() {
+            self.pop_invocation();
+        }
+        PbblpResult {
+            pbblp: if self.weight == 0 {
+                1.0 // no loops executed: trivially serial
+            } else {
+                self.weighted_sum / self.weight as f64
+            },
+            invocations: self.invocations,
+            iterations: self.weight,
+        }
+    }
+}
+
+impl Instrument for PbblpAnalyzer {
+    fn on_event(&mut self, ev: &TraceEvent) {
+        match ev {
+            TraceEvent::BlockEnter { block } => {
+                // 1) re-entering the active loop's header closes an iteration
+                if let Some(top) = self.stack.last_mut() {
+                    let li = self.loops[top.loop_idx];
+                    if *block == li.header {
+                        top.close_iteration();
+                        return;
+                    }
+                    if *block == li.body {
+                        top.open_iteration();
+                        return;
+                    }
+                    if *block == li.exit {
+                        self.pop_invocation();
+                        return;
+                    }
+                }
+                // 2) entering some loop's header for the first time
+                if let Some(&idx) = self.header_of.get(block) {
+                    self.stack.push(Invocation::new(idx));
+                }
+            }
+            TraceEvent::Instr(i) => {
+                let Some(top) = self.stack.last_mut() else {
+                    return;
+                };
+                let Some(cur) = top.open_iter else {
+                    return; // header evaluation, not an iteration body
+                };
+                let counter = self.loops[top.loop_idx].counter;
+                let mut dep = top.cur_dep;
+                for &s in i.sources() {
+                    if s == counter {
+                        continue;
+                    }
+                    if let Some(&j) = top.reg_writer.get(&s) {
+                        if j != cur {
+                            dep = dep.max(top.iter_depths[j as usize]);
+                        }
+                    }
+                }
+                if let Some(m) = i.mem {
+                    let granule = m.addr >> MEM_GRANULE_SHIFT;
+                    if m.is_store {
+                        top.mem_writer.insert(granule, cur);
+                    } else if let Some(&j) = top.mem_writer.get(&granule) {
+                        if j != cur {
+                            dep = dep.max(top.iter_depths[j as usize]);
+                        }
+                    }
+                }
+                if let Some(d) = i.dst {
+                    if d != counter {
+                        top.reg_writer.insert(d, cur);
+                    }
+                }
+                top.cur_dep = dep;
+            }
+            TraceEvent::Branch { .. } => {}
+        }
+    }
+}
+
+impl PbblpResult {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("pbblp", self.pbblp);
+        j.set("invocations", self.invocations);
+        j.set("iterations", self.iterations);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::run_program;
+    use crate::ir::ProgramBuilder;
+
+    fn pbblp_of(p: &crate::ir::Program) -> PbblpResult {
+        let mut a = PbblpAnalyzer::new(p);
+        run_program(p, &mut a).unwrap();
+        a.finalize()
+    }
+
+    #[test]
+    fn data_parallel_loop_scores_trip_count() {
+        // a[i] = 2·b[i]: no cross-iteration deps → ratio = N.
+        let mut b = ProgramBuilder::new("par");
+        let src: Vec<f64> = (0..128).map(|i| i as f64).collect();
+        let bb = b.alloc_f64_init("b", &src);
+        let aa = b.alloc_f64("a", 128);
+        let n = b.const_i(128);
+        let two = b.const_f(2.0);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(bb, i);
+            let w = b.fmul(v, two);
+            b.store_f64(aa, i, w);
+        });
+        let r = pbblp_of(&b.finish(None));
+        assert_eq!(r.iterations, 128);
+        assert!((r.pbblp - 128.0).abs() < 1e-9, "pbblp {}", r.pbblp);
+    }
+
+    #[test]
+    fn reduction_scores_near_one() {
+        let mut b = ProgramBuilder::new("red");
+        let src: Vec<f64> = (0..128).map(|i| i as f64).collect();
+        let aa = b.alloc_f64_init("a", &src);
+        let acc = b.const_f(0.0);
+        let n = b.const_i(128);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(aa, i);
+            let s = b.fadd(acc, v);
+            b.assign(acc, s);
+        });
+        let r = pbblp_of(&b.finish(Some(acc)));
+        assert!((r.pbblp - 1.0).abs() < 1e-9, "pbblp {}", r.pbblp);
+    }
+
+    #[test]
+    fn recurrence_through_memory_is_serial() {
+        // a[i] = a[i-1] + 1 : loop-carried memory dep.
+        let mut b = ProgramBuilder::new("rec");
+        let aa = b.alloc_f64("a", 129);
+        let one = b.const_i(1);
+        let n = b.const_i(128);
+        let fone = b.const_f(1.0);
+        b.counted_loop(n, |b, i| {
+            let prev = b.load_f64(aa, i);
+            let v = b.fadd(prev, fone);
+            let ip1 = b.add(i, one);
+            b.store_f64(aa, ip1, v);
+        });
+        let r = pbblp_of(&b.finish(None));
+        assert!(r.pbblp < 1.5, "pbblp {}", r.pbblp);
+    }
+
+    #[test]
+    fn nested_loop_attributes_to_innermost() {
+        // outer 4 × inner 32, inner is data-parallel → inner invocations
+        // dominate the weight: PBBLP close to 32.
+        let mut b = ProgramBuilder::new("nest");
+        let aa = b.alloc_f64("a", 4 * 32);
+        let n = b.const_i(4);
+        let m = b.const_i(32);
+        b.counted_loop(n, |b, i| {
+            b.counted_loop(m, |b, j| {
+                let idx = b.idx2(i, j, 32);
+                let c = b.const_f(1.0);
+                b.store_f64(aa, idx, c);
+            });
+        });
+        let r = pbblp_of(&b.finish(None));
+        assert_eq!(r.invocations, 5);
+        assert_eq!(r.iterations, 4 + 4 * 32);
+        assert!(r.pbblp > 25.0, "pbblp {}", r.pbblp);
+    }
+
+    #[test]
+    fn no_loops_defaults_to_one() {
+        let mut b = ProgramBuilder::new("flat");
+        let x = b.const_f(1.0);
+        b.fadd(x, x);
+        let r = pbblp_of(&b.finish(None));
+        assert_eq!(r.pbblp, 1.0);
+        assert_eq!(r.invocations, 0);
+    }
+}

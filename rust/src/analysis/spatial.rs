@@ -1,0 +1,147 @@
+//! Spatial-locality score (paper §II-A, Fig 3b), derived from the exact DTR
+//! results of [`super::reuse`].
+//!
+//! score(l→l+1) = clamp((d_l − d_{l+1}) / d_l, 0, 1): the relative reduction
+//! in mean reuse distance when the line size doubles. Near 1 ⇒ strong
+//! spatial reuse (doubling the line halves the stack distance); near 0 ⇒
+//! the extra bytes fetched with each line are never used — the paper's
+//! signature of an NMC-friendly (cache-hostile) access pattern.
+//!
+//! The native implementation here is the reference; the coordinator also
+//! routes the binned histograms through the AOT `spatial.hlo.txt` Pallas
+//! artifact and cross-checks the two (they differ only by log2-binning of
+//! the distance distribution).
+
+use super::reuse::{ReuseResult, LINE_SHIFTS, N_LINE_SIZES};
+use crate::util::Json;
+
+/// Finalized spatial-locality scores.
+#[derive(Debug, Clone)]
+pub struct SpatialResult {
+    /// score[l] for doubling LINE_SHIFTS[l] → LINE_SHIFTS[l+1]; length L-1.
+    pub scores: Vec<f64>,
+    /// Mean DTR per line size (copied from the reuse result for reporting).
+    pub avg_dtr: Vec<f64>,
+}
+
+/// Compute scores from mean DTR distances.
+pub fn spatial_scores(avg_dtr: &[f64]) -> Vec<f64> {
+    avg_dtr
+        .windows(2)
+        .map(|w| {
+            if w[0] <= 1e-12 {
+                0.0
+            } else {
+                ((w[0] - w[1]) / w[0]).clamp(0.0, 1.0)
+            }
+        })
+        .collect()
+}
+
+pub fn from_reuse(r: &ReuseResult) -> SpatialResult {
+    SpatialResult {
+        scores: spatial_scores(&r.avg_dtr),
+        avg_dtr: r.avg_dtr.clone(),
+    }
+}
+
+impl SpatialResult {
+    /// The paper's Fig-6 PCA feature: score for the 8B→16B doubling.
+    pub fn spat_8b_16b(&self) -> f64 {
+        self.scores.first().copied().unwrap_or(0.0)
+    }
+
+    /// Mean score across all doublings (overall spatial-locality summary,
+    /// used in the Fig 3b characterization).
+    pub fn mean_score(&self) -> f64 {
+        if self.scores.is_empty() {
+            0.0
+        } else {
+            self.scores.iter().sum::<f64>() / self.scores.len() as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        let labels: Vec<Json> = LINE_SHIFTS
+            .windows(2)
+            .map(|w| Json::Str(format!("spat_{}B_{}B", 1u64 << w[0], 1u64 << w[1])))
+            .collect();
+        j.set("labels", labels);
+        j.set("scores", self.scores.clone());
+        j.set("avg_dtr", self.avg_dtr.clone());
+        j.set("spat_8B_16B", self.spat_8b_16b());
+        j.set("mean_score", self.mean_score());
+        j
+    }
+}
+
+/// Label helper for figures: e.g. index 0 → "spat_8B_16B".
+pub fn score_label(idx: usize) -> String {
+    assert!(idx + 1 < N_LINE_SIZES);
+    format!(
+        "spat_{}B_{}B",
+        1u64 << LINE_SHIFTS[idx],
+        1u64 << LINE_SHIFTS[idx + 1]
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::reuse::ReuseAnalyzer;
+
+    #[test]
+    fn halving_distances_scores_half() {
+        let scores = spatial_scores(&[64.0, 32.0, 16.0, 8.0]);
+        assert_eq!(scores, vec![0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn growth_clamps_to_zero() {
+        let scores = spatial_scores(&[10.0, 20.0, 5.0]);
+        assert_eq!(scores[0], 0.0);
+        assert!((scores[1] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_distance_guard() {
+        assert_eq!(spatial_scores(&[0.0, 0.0]), vec![0.0]);
+    }
+
+    #[test]
+    fn sequential_stream_scores_high_random_scores_low() {
+        // sequential 8B walk → strong score at small line sizes
+        let mut seq = ReuseAnalyzer::new();
+        for i in 0..8192u64 {
+            seq.record(0x1_0000 + i * 8);
+        }
+        let s_seq = from_reuse(&seq.finalize());
+
+        // random large-stride walk → no spatial reuse below the stride
+        let mut rng = crate::util::Rng::new(4);
+        let mut rnd = ReuseAnalyzer::new();
+        for _ in 0..8192 {
+            rnd.record(0x1_0000 + rng.below(4096) * 1024);
+        }
+        let s_rnd = from_reuse(&rnd.finalize());
+
+        assert!(
+            s_seq.spat_8b_16b() > 0.4,
+            "sequential 8B→16B score {}",
+            s_seq.spat_8b_16b()
+        );
+        assert!(
+            s_rnd.spat_8b_16b() < 0.05,
+            "random 8B→16B score {}",
+            s_rnd.spat_8b_16b()
+        );
+        assert!(s_seq.mean_score() > s_rnd.mean_score());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(score_label(0), "spat_8B_16B");
+        assert_eq!(score_label(6), "spat_512B_1024B");
+    }
+}

@@ -1,0 +1,154 @@
+//! Hand-rolled CLI (no clap in the offline vendor set).
+//!
+//! ```text
+//! pisa-nmc pipeline [--scale F] [--seed N] [--threads N] [--no-pjrt] [--out FILE]
+//! pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--json]
+//! pisa-nmc figure {3a|3b|3c|4|5|6} [pipeline flags]
+//! pisa-nmc table {1|2} [--scale F]
+//! pisa-nmc validate [--n N]
+//! pisa-nmc ir --kernel NAME [--n N]
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+/// Flags that take a value; everything else is boolean.
+const VALUE_FLAGS: &[&str] = &["scale", "seed", "threads", "out", "kernel", "n"];
+
+pub fn parse(argv: &[String]) -> Result<Args> {
+    let mut a = Args::default();
+    let mut it = argv.iter().peekable();
+    a.command = it
+        .next()
+        .cloned()
+        .ok_or_else(|| anyhow!("no command; try `pisa-nmc help`"))?;
+    while let Some(arg) = it.next() {
+        if let Some(name) = arg.strip_prefix("--") {
+            if VALUE_FLAGS.contains(&name) {
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow!("--{name} requires a value"))?;
+                a.flags.push((name.to_string(), Some(v.clone())));
+            } else {
+                a.flags.push((name.to_string(), None));
+            }
+        } else {
+            a.positional.push(arg.clone());
+        }
+    }
+    Ok(a)
+}
+
+impl Args {
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: '{v}' is not a number")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+
+    /// One positional argument (e.g. the figure id).
+    pub fn positional1(&self) -> Result<&str> {
+        match self.positional.as_slice() {
+            [one] => Ok(one),
+            _ => bail!("expected exactly one argument, got {:?}", self.positional),
+        }
+    }
+}
+
+pub const HELP: &str = "\
+pisa-nmc — Platform-Independent Software Analysis for Near-Memory Computing
+(reproduction of Corda et al., cs.PF 2019; see DESIGN.md)
+
+USAGE:
+  pisa-nmc pipeline [--scale F] [--seed N] [--threads N] [--no-pjrt] [--out FILE]
+        full suite: profile 12 kernels, run host+NMC sims, PJRT analytics,
+        print every table and figure (writes JSON report with --out)
+  pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--json]
+        profile a single kernel and print its metrics
+  pisa-nmc figure {3a|3b|3c|4|5|6} [pipeline flags]
+        regenerate one paper figure
+  pisa-nmc table {1|2} [--scale F]
+        print a paper table
+  pisa-nmc validate [--n N]
+        run every kernel against its native oracle
+  pisa-nmc ir --kernel NAME [--n N]
+        dump a kernel's mini-IR
+  pisa-nmc help
+
+Artifacts are searched in ./artifacts (or $PISA_NMC_ARTIFACTS); build them
+with `make artifacts`. --no-pjrt forces the native analytics fallback.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = args(&["figure", "3a", "--scale", "0.5", "--no-pjrt"]);
+        assert_eq!(a.command, "figure");
+        assert_eq!(a.positional1().unwrap(), "3a");
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.5);
+        assert!(a.has("no-pjrt"));
+        assert!(!a.has("json"));
+    }
+
+    #[test]
+    fn value_flag_requires_value() {
+        assert!(parse(&["analyze".into(), "--kernel".into()]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = args(&["pipeline", "--scale", "abc"]);
+        assert!(a.get_f64("scale", 1.0).is_err());
+    }
+}

@@ -1,0 +1,424 @@
+//! Figure/table regeneration (paper §IV): packs pipeline results into each
+//! figure's data series, routing the numeric analytics through the PJRT
+//! artifacts when available (the system path) with the native analyzers as
+//! fallback and cross-check.
+
+use anyhow::Result;
+
+use super::pca::{pca, Pca};
+use super::pipeline::AppResult;
+use crate::analysis::reuse::{bin_values, N_DIST_BINS, N_LINE_SIZES};
+use crate::analysis::spatial::score_label;
+use crate::report::{bar_chart, scatter, Table};
+use crate::runtime::Runtime;
+use crate::util::Json;
+use crate::workloads::registry;
+
+/// Which engine produced the analytics numbers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    Pjrt,
+    Native,
+}
+
+impl Engine {
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Pjrt => "pjrt",
+            Engine::Native => "native",
+        }
+    }
+}
+
+/// Suite-level analytics: per-app entropy/spatial series + the PCA plane.
+pub struct SuiteAnalytics {
+    pub engine: Engine,
+    /// [app][granularity 0..=10] memory entropy (bits).
+    pub entropies: Vec<Vec<f64>>,
+    /// [app] Fig-5 metric.
+    pub entropy_diff: Vec<f64>,
+    /// [app][line-size doubling 0..7] spatial score.
+    pub spatial: Vec<Vec<f64>>,
+    /// PCA over the paper's 4 features.
+    pub pca: Pca,
+    /// Max |pjrt - native| seen across cross-checked quantities (0 when
+    /// engine == Native).
+    pub max_crosscheck_err: f64,
+}
+
+/// Run the L2/L1 analytics for the suite. With a runtime, every app's
+/// entropy + spatial reduction and the suite PCA execute as AOT artifacts;
+/// native values are computed anyway and compared.
+pub fn analyze_suite(apps: &[AppResult], rt: Option<&Runtime>) -> Result<SuiteAnalytics> {
+    let native_entropies: Vec<Vec<f64>> = apps
+        .iter()
+        .map(|a| a.metrics.mem_entropy.entropies.clone())
+        .collect();
+    let native_diff: Vec<f64> = apps
+        .iter()
+        .map(|a| a.metrics.mem_entropy.entropy_diff)
+        .collect();
+    let native_spatial: Vec<Vec<f64>> =
+        apps.iter().map(|a| a.metrics.spatial.scores.clone()).collect();
+    let features: Vec<Vec<f64>> = apps
+        .iter()
+        .map(|a| a.metrics.pca4_features().to_vec())
+        .collect();
+
+    let Some(rt) = rt else {
+        let mask = vec![true; apps.len()];
+        return Ok(SuiteAnalytics {
+            engine: Engine::Native,
+            entropies: native_entropies,
+            entropy_diff: native_diff,
+            spatial: native_spatial,
+            pca: pca(&features, &mask, 2),
+            max_crosscheck_err: 0.0,
+        });
+    };
+
+    let g = rt.manifest().shape("G")?;
+    let b = rt.manifest().shape("B")?;
+    let n_cap = rt.manifest().shape("N")?;
+    let mut err = 0.0f64;
+
+    let mut entropies = Vec::with_capacity(apps.len());
+    let mut entropy_diff = Vec::with_capacity(apps.len());
+    let mut spatial = Vec::with_capacity(apps.len());
+    for (ai, a) in apps.iter().enumerate() {
+        // entropy artifact
+        let (counts, weights) = a.metrics.mem_entropy.to_artifact_inputs(g, b);
+        let out = rt.execute("entropy", &[&counts, &weights])?;
+        let h: Vec<f64> = out[0][..native_entropies[ai].len()]
+            .iter()
+            .map(|&v| v as f64)
+            .collect();
+        // diff over the REAL granularity rows (the artifact's padded rows
+        // would drag zeros in, so recompute the O(G) mean from h)
+        let d: f64 = h.windows(2).map(|w| w[0] - w[1]).sum::<f64>() / (h.len() - 1) as f64;
+        for (x, y) in h.iter().zip(&native_entropies[ai]) {
+            err = err.max((x - y).abs());
+        }
+        entropies.push(h);
+        entropy_diff.push(d);
+
+        // spatial artifact (binned — compared loosely against exact native)
+        let hist = a.metrics.reuse.to_artifact_hist();
+        let binv: Vec<f32> = bin_values().to_vec();
+        debug_assert_eq!(hist.len(), N_LINE_SIZES * N_DIST_BINS);
+        let out = rt.execute("spatial", &[&hist, &binv])?;
+        spatial.push(out[1].iter().map(|&v| v as f64).collect());
+    }
+
+    // PCA artifact over the paper's 4 features, padded to N rows
+    anyhow::ensure!(apps.len() <= n_cap, "suite larger than pca artifact N");
+    let mut x = vec![0f32; n_cap * 4];
+    let mut mask = vec![0f32; n_cap];
+    for (i, f) in features.iter().enumerate() {
+        mask[i] = 1.0;
+        for (j, &v) in f.iter().enumerate() {
+            x[i * 4 + j] = v as f32;
+        }
+    }
+    let out = rt.execute("pca4", &[&x, &mask])?;
+    let scores: Vec<Vec<f64>> = (0..apps.len())
+        .map(|i| vec![out[0][i * 2] as f64, out[0][i * 2 + 1] as f64])
+        .collect();
+    let loadings: Vec<Vec<f64>> = (0..4)
+        .map(|j| vec![out[1][j * 2] as f64, out[1][j * 2 + 1] as f64])
+        .collect();
+    let eigenvalues: Vec<f64> = out[2].iter().map(|&v| v as f64).collect();
+    let evr: Vec<f64> = out[3].iter().map(|&v| v as f64).collect();
+
+    // cross-check against native PCA (subspace-level: compare |scores|)
+    let native_pca = pca(&features, &vec![true; apps.len()], 2);
+    for (s_pjrt, s_nat) in scores.iter().zip(&native_pca.scores) {
+        err = err.max((s_pjrt[0].abs() - s_nat[0].abs()).abs());
+    }
+
+    Ok(SuiteAnalytics {
+        engine: Engine::Pjrt,
+        entropies,
+        entropy_diff,
+        spatial,
+        pca: Pca {
+            scores,
+            loadings,
+            eigenvalues,
+            explained_variance_ratio: evr,
+        },
+        max_crosscheck_err: err,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// renderers
+
+fn app_names(apps: &[AppResult]) -> Vec<String> {
+    apps.iter().map(|a| a.name.clone()).collect()
+}
+
+/// Fig 3a: memory entropy per app × granularity.
+pub fn fig3a(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
+    let mut t = Table::new(&["app", "g=1B", "g=4B", "g=16B", "g=64B", "g=256B", "g=1KB"]);
+    let picks = [0usize, 2, 4, 6, 8, 10];
+    let mut j = Json::obj();
+    for (i, name) in app_names(apps).iter().enumerate() {
+        let h = &an.entropies[i];
+        t.row(
+            std::iter::once(name.clone())
+                .chain(picks.iter().map(|&p| format!("{:.2}", h[p])))
+                .collect(),
+        );
+        j.set(name, h.clone());
+    }
+    let mut out = Json::obj();
+    out.set("figure", "3a");
+    out.set("metric", "memory entropy (bits) by granularity shift");
+    out.set("engine", an.engine.name());
+    out.set("series", j);
+    (format!("Fig 3a — memory entropy [{}]\n{}", an.engine.name(), t.render()), out)
+}
+
+/// Fig 3b: spatial locality per app × line doubling.
+pub fn fig3b(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
+    let labels: Vec<String> = (0..N_LINE_SIZES - 1).map(score_label).collect();
+    let mut headers = vec!["app".to_string()];
+    headers.extend(labels.clone());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    let mut j = Json::obj();
+    for (i, name) in app_names(apps).iter().enumerate() {
+        let s = &an.spatial[i];
+        t.row(
+            std::iter::once(name.clone())
+                .chain(s.iter().map(|v| format!("{v:.3}")))
+                .collect(),
+        );
+        j.set(name, s.clone());
+    }
+    let mut out = Json::obj();
+    out.set("figure", "3b");
+    out.set("metric", "spatial locality score per line-size doubling");
+    out.set("engine", an.engine.name());
+    out.set("series", j);
+    (format!("Fig 3b — spatial locality [{}]\n{}", an.engine.name(), t.render()), out)
+}
+
+/// Fig 3c: parallelism characterization (DLP, BBLP_1..4, PBBLP).
+pub fn fig3c(apps: &[AppResult]) -> (String, Json) {
+    let mut t = Table::new(&["app", "DLP", "BBLP_1", "BBLP_2", "BBLP_3", "BBLP_4", "PBBLP"]);
+    let mut j = Json::obj();
+    for a in apps {
+        let b = &a.metrics.bblp.values;
+        t.row(vec![
+            a.name.clone(),
+            format!("{:.2}", a.metrics.dlp.dlp),
+            format!("{:.2}", b[0]),
+            format!("{:.2}", b[1]),
+            format!("{:.2}", b[2]),
+            format!("{:.2}", b[3]),
+            format!("{:.1}", a.metrics.pbblp.pbblp),
+        ]);
+        let mut o = Json::obj();
+        o.set("dlp", a.metrics.dlp.dlp);
+        o.set("bblp", b.clone());
+        o.set("pbblp", a.metrics.pbblp.pbblp);
+        j.set(&a.name, o);
+    }
+    let mut out = Json::obj();
+    out.set("figure", "3c");
+    out.set("metric", "parallelism characterization");
+    out.set("series", j);
+    (format!("Fig 3c — parallelism\n{}", t.render()), out)
+}
+
+/// Fig 4: EDP improvement host→NMC.
+pub fn fig4(apps: &[AppResult]) -> (String, Json) {
+    let items: Vec<(String, f64)> = apps
+        .iter()
+        .map(|a| (a.name.clone(), a.cmp.edp_improvement()))
+        .collect();
+    let mut j = Json::obj();
+    for a in apps {
+        j.set(&a.name, a.cmp.to_json());
+    }
+    let mut out = Json::obj();
+    out.set("figure", "4");
+    out.set("metric", "EDP_host / EDP_nmc (>1 means NMC suitable)");
+    out.set("series", j);
+    let chart = bar_chart("Fig 4 — EDP improvement (host/NMC)", &items, 48);
+    (chart, out)
+}
+
+/// Fig 5: the entropy-difference metric.
+pub fn fig5(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
+    let items: Vec<(String, f64)> = app_names(apps)
+        .into_iter()
+        .zip(an.entropy_diff.iter().copied())
+        .collect();
+    let mut j = Json::obj();
+    for (name, v) in &items {
+        j.set(name, *v);
+    }
+    let mut out = Json::obj();
+    out.set("figure", "5");
+    out.set("metric", "entropy_diff_mem (mean entropy drop per granularity doubling)");
+    out.set("engine", an.engine.name());
+    out.set("series", j);
+    let chart = bar_chart(
+        &format!("Fig 5 — entropy_diff_mem [{}]", an.engine.name()),
+        &items,
+        48,
+    );
+    (chart, out)
+}
+
+/// Fig 6: the PCA biplot (scores + loadings + quadrants).
+pub fn fig6(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
+    let pts: Vec<(String, f64, f64)> = app_names(apps)
+        .into_iter()
+        .enumerate()
+        .map(|(i, n)| (n, an.pca.scores[i][0], an.pca.scores[i][1]))
+        .collect();
+    let plot = scatter(&pts, 64, 21);
+
+    let feature_names = ["BBLP_1", "PBBLP", "entropy_diff_mem", "spat_8B_16B"];
+    let mut lt = Table::new(&["feature", "PC1", "PC2"]);
+    for (j, name) in feature_names.iter().enumerate() {
+        lt.row(vec![
+            name.to_string(),
+            format!("{:+.3}", an.pca.loadings[j][0]),
+            format!("{:+.3}", an.pca.loadings[j][1]),
+        ]);
+    }
+
+    let mut qt = Table::new(&["app", "PC1", "PC2", "quadrant", "EDP>1"]);
+    let mut j = Json::obj();
+    for (i, a) in apps.iter().enumerate() {
+        let (x, y) = (an.pca.scores[i][0], an.pca.scores[i][1]);
+        let quad = match (x >= 0.0, y >= 0.0) {
+            (true, true) => "I",
+            (false, true) => "II",
+            (false, false) => "III",
+            (true, false) => "IV",
+        };
+        qt.row(vec![
+            a.name.clone(),
+            format!("{x:+.3}"),
+            format!("{y:+.3}"),
+            quad.to_string(),
+            format!("{}", a.cmp.nmc_suitable()),
+        ]);
+        let mut o = Json::obj();
+        o.set("pc1", x);
+        o.set("pc2", y);
+        o.set("quadrant", quad);
+        o.set("nmc_suitable", a.cmp.nmc_suitable());
+        j.set(&a.name, o);
+    }
+
+    let mut out = Json::obj();
+    out.set("figure", "6");
+    out.set("engine", an.engine.name());
+    out.set("apps", j);
+    let mut loads = Json::obj();
+    for (jj, name) in feature_names.iter().enumerate() {
+        loads.set(name, an.pca.loadings[jj].clone());
+    }
+    out.set("loadings", loads);
+    out.set("explained_variance_ratio", an.pca.explained_variance_ratio.clone());
+
+    let text = format!(
+        "Fig 6 — PCA of [BBLP_1, PBBLP, entropy_diff_mem, spat_8B_16B] [{}]\n\
+         explained variance: PC1 {:.1}%  PC2 {:.1}%\n\n{}\n{}\n{}",
+        an.engine.name(),
+        an.pca.explained_variance_ratio[0] * 100.0,
+        an.pca.explained_variance_ratio[1] * 100.0,
+        plot,
+        lt.render(),
+        qt.render()
+    );
+    (text, out)
+}
+
+/// Table 1: host + NMC system characteristics.
+pub fn table1() -> String {
+    let h = crate::sim::HostConfig::default();
+    let n = crate::sim::NmcConfig::default();
+    let mut t = Table::new(&["Architecture", "CPU", "Cache per core", "Memory"]);
+    t.row(vec![
+        "IBM Power9 (Host)".into(),
+        format!("4 cores (SMT4) @ {} GHz, {}-wide", h.freq_ghz, h.issue_width),
+        format!("L1 {} KB / L2 {} KB / L3 {} MB", h.l1_kb, h.l2_kb, h.l3_kb / 1024),
+        format!("DDR4 RDIMM, {} GB/s", h.dram_bw_gbs),
+    ]);
+    t.row(vec![
+        "NMC".into(),
+        format!(
+            "{} single-issue in-order cores @ {} GHz",
+            n.n_pes, n.freq_ghz
+        ),
+        format!(
+            "L1-I/D {}-way, {} lines x {} B ({} KB)",
+            n.l1_ways, n.l1_lines, n.line_bytes,
+            n.l1_lines * n.line_bytes / 1024
+        ),
+        format!(
+            "HMC, {} stacked layers, {} vaults, SerDes {} GB/s",
+            n.stacked_layers, n.n_vaults, n.link_gbs
+        ),
+    ]);
+    format!("Table 1 — system characteristics\n{}", t.render())
+}
+
+/// Table 2: benchmark parameters (paper values + this repo's scaled sizes).
+pub fn table2(scale: f64) -> String {
+    let mut t = Table::new(&["suite", "kernel", "param", "paper value", "this run (scaled)"]);
+    for k in registry() {
+        let info = k.info();
+        t.row(vec![
+            info.suite.name().into(),
+            info.name.into(),
+            info.param_name.into(),
+            info.paper_value.into(),
+            format!("{}", crate::workloads::scaled_n(k.as_ref(), scale)),
+        ]);
+    }
+    format!("Table 2 — benchmark parameters\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::run_suite;
+
+    fn tiny_apps() -> Vec<AppResult> {
+        run_suite(0.08, 3, 4).unwrap()
+    }
+
+    #[test]
+    fn native_analytics_and_all_figures_render() {
+        let apps = tiny_apps();
+        let an = analyze_suite(&apps, None).unwrap();
+        assert_eq!(an.engine, Engine::Native);
+        assert_eq!(an.entropies.len(), 12);
+        assert_eq!(an.spatial[0].len(), 7);
+
+        let (s3a, j3a) = fig3a(&apps, &an);
+        assert!(s3a.contains("gramschmidt"));
+        assert!(j3a.get("series").is_some());
+        let (s3b, _) = fig3b(&apps, &an);
+        assert!(s3b.contains("spat_8B_16B"));
+        let (s3c, _) = fig3c(&apps);
+        assert!(s3c.contains("PBBLP"));
+        let (s4, _) = fig4(&apps);
+        assert!(s4.contains("EDP"));
+        let (s5, _) = fig5(&apps, &an);
+        assert!(s5.contains("entropy_diff"));
+        let (s6, _) = fig6(&apps, &an);
+        assert!(s6.contains("quadrant"));
+        assert!(table1().contains("Power9"));
+        assert!(table2(1.0).contains("8000"));
+    }
+}

@@ -1,0 +1,92 @@
+//! L3 coordination: the PISA-NMC profiling pipeline.
+//!
+//! [`pipeline`] fans the workload suite across worker threads (one
+//! instrumented execution per app feeding all analyzers + the task trace,
+//! then both machine models); [`figures`] routes the numeric analytics
+//! through the AOT PJRT artifacts and regenerates every paper figure and
+//! table; [`pca`] is the native mirror of the PCA artifact used for
+//! fallback and cross-checking.
+
+pub mod figures;
+pub mod pca;
+pub mod pipeline;
+
+pub use figures::{analyze_suite, Engine, SuiteAnalytics};
+pub use pca::{pca, Pca};
+pub use pipeline::{profile_app, run_suite, AppResult};
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::util::Json;
+
+/// Everything one `pisa-nmc pipeline` run produces.
+pub struct PipelineReport {
+    pub apps: Vec<AppResult>,
+    pub analytics: SuiteAnalytics,
+    pub scale: f64,
+    pub seed: u64,
+}
+
+/// Run the full pipeline: profile suite → artifacts analytics → report.
+pub fn run_pipeline(
+    scale: f64,
+    seed: u64,
+    threads: usize,
+    rt: Option<&Runtime>,
+) -> Result<PipelineReport> {
+    let apps = run_suite(scale, seed, threads)?;
+    let analytics = analyze_suite(&apps, rt)?;
+    Ok(PipelineReport { apps, analytics, scale, seed })
+}
+
+impl PipelineReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("scale", self.scale);
+        j.set("seed", self.seed);
+        j.set("engine", self.analytics.engine.name());
+        j.set("crosscheck_err", self.analytics.max_crosscheck_err);
+        let mut apps = Json::obj();
+        for (i, a) in self.apps.iter().enumerate() {
+            let mut o = a.metrics.to_json();
+            o.set("n", a.n);
+            o.set("edp", a.cmp.to_json());
+            o.set("pca_scores", self.analytics.pca.scores[i].clone());
+            apps.set(&a.name, o);
+        }
+        j.set("apps", apps);
+        for (name, (_, fig)) in [
+            ("fig3a", figures::fig3a(&self.apps, &self.analytics)),
+            ("fig3b", figures::fig3b(&self.apps, &self.analytics)),
+            ("fig5", figures::fig5(&self.apps, &self.analytics)),
+            ("fig6", figures::fig6(&self.apps, &self.analytics)),
+        ] {
+            j.set(name, fig);
+        }
+        j.set("fig3c", figures::fig3c(&self.apps).1);
+        j.set("fig4", figures::fig4(&self.apps).1);
+        j
+    }
+
+    /// Render every figure/table as one text report.
+    pub fn render_all(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&figures::table1());
+        s.push('\n');
+        s.push_str(&figures::table2(self.scale));
+        s.push('\n');
+        for text in [
+            figures::fig3a(&self.apps, &self.analytics).0,
+            figures::fig3b(&self.apps, &self.analytics).0,
+            figures::fig3c(&self.apps).0,
+            figures::fig4(&self.apps).0,
+            figures::fig5(&self.apps, &self.analytics).0,
+            figures::fig6(&self.apps, &self.analytics).0,
+        ] {
+            s.push_str(&text);
+            s.push('\n');
+        }
+        s
+    }
+}

@@ -1,0 +1,222 @@
+//! Native PCA (standardize → covariance → power iteration with deflation).
+//!
+//! Mirrors `python/compile/model.py::pca_graph` exactly — same masking, the
+//! same sign convention, the same deflation — so the coordinator can (a)
+//! run without artifacts and (b) cross-check the PJRT path bit-for-bit-ish
+//! (fp32 vs f64 differences only). The AOT artifact remains the primary
+//! path in the pipeline.
+
+/// PCA output: scores [n][k], loadings [f][k], eigenvalues [k], evr [k].
+#[derive(Debug, Clone)]
+pub struct Pca {
+    pub scores: Vec<Vec<f64>>,
+    pub loadings: Vec<Vec<f64>>,
+    pub eigenvalues: Vec<f64>,
+    pub explained_variance_ratio: Vec<f64>,
+}
+
+const POWER_ITERS: usize = 96;
+
+/// Standardize columns over masked rows; masked-off rows become zero.
+fn standardize(x: &[Vec<f64>], mask: &[bool]) -> (Vec<Vec<f64>>, f64) {
+    let n = x.len();
+    let f = x[0].len();
+    let n_eff = mask.iter().filter(|&&m| m).count().max(1) as f64;
+    let mut mu = vec![0.0; f];
+    for (row, &m) in x.iter().zip(mask) {
+        if m {
+            for j in 0..f {
+                mu[j] += row[j];
+            }
+        }
+    }
+    for v in &mut mu {
+        *v /= n_eff;
+    }
+    let mut var = vec![0.0; f];
+    for (row, &m) in x.iter().zip(mask) {
+        if m {
+            for j in 0..f {
+                var[j] += (row[j] - mu[j]) * (row[j] - mu[j]);
+            }
+        }
+    }
+    let sd: Vec<f64> = var.iter().map(|v| (v / n_eff).sqrt()).collect();
+    let mut z = vec![vec![0.0; f]; n];
+    for i in 0..n {
+        if mask[i] {
+            for j in 0..f {
+                // near-constant columns standardize to exact zero (see
+                // kernels/ref.py for why not an epsilon divisor)
+                z[i][j] = if sd[j] > 1e-6 {
+                    (x[i][j] - mu[j]) / sd[j]
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+    (z, n_eff)
+}
+
+fn matvec(c: &[Vec<f64>], v: &[f64]) -> Vec<f64> {
+    c.iter().map(|row| row.iter().zip(v).map(|(a, b)| a * b).sum()).collect()
+}
+
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Masked PCA with k components.
+pub fn pca(x: &[Vec<f64>], mask: &[bool], k: usize) -> Pca {
+    assert!(!x.is_empty());
+    let n = x.len();
+    let f = x[0].len();
+    assert_eq!(mask.len(), n);
+
+    let (z, n_eff) = standardize(x, mask);
+    // covariance C = Zᵀ Z / (n_eff - 1)
+    let denom = (n_eff - 1.0).max(1.0);
+    let mut c = vec![vec![0.0; f]; f];
+    for row in &z {
+        for a in 0..f {
+            for b in 0..f {
+                c[a][b] += row[a] * row[b];
+            }
+        }
+    }
+    for row in &mut c {
+        for v in row.iter_mut() {
+            *v /= denom;
+        }
+    }
+
+    let mut eigenvalues = Vec::with_capacity(k);
+    let mut loadings = vec![vec![0.0; k]; f];
+    for comp in 0..k {
+        // deterministic start: ones with a tilt toward axis `comp`
+        let mut v: Vec<f64> = (0..f)
+            .map(|j| 1.0 + if j == comp { 2.0 } else { 0.0 })
+            .collect();
+        let nv = norm(&v);
+        v.iter_mut().for_each(|x| *x /= nv);
+        for _ in 0..POWER_ITERS {
+            let w = matvec(&c, &v);
+            let nw = norm(&w).max(1e-30);
+            v = w.into_iter().map(|x| x / nw).collect();
+        }
+        let cv = matvec(&c, &v);
+        let lam: f64 = v.iter().zip(&cv).map(|(a, b)| a * b).sum();
+        // sign convention: max-|.| element positive
+        let mut imax = 0;
+        for j in 1..f {
+            if v[j].abs() > v[imax].abs() {
+                imax = j;
+            }
+        }
+        if v[imax] < 0.0 {
+            v.iter_mut().for_each(|x| *x = -*x);
+        }
+        for j in 0..f {
+            loadings[j][comp] = v[j];
+        }
+        eigenvalues.push(lam);
+        // Hotelling deflation
+        for a in 0..f {
+            for b in 0..f {
+                c[a][b] -= lam * v[a] * v[b];
+            }
+        }
+    }
+
+    let scores: Vec<Vec<f64>> = z
+        .iter()
+        .map(|row| {
+            (0..k)
+                .map(|comp| row.iter().enumerate().map(|(j, &v)| v * loadings[j][comp]).sum())
+                .collect()
+        })
+        .collect();
+    let pos_sum: f64 = eigenvalues.iter().map(|&l| l.max(0.0)).sum::<f64>().max(1e-12);
+    let evr = eigenvalues.iter().map(|&l| l.max(0.0) / pos_sum).collect();
+
+    Pca { scores, loadings, eigenvalues, explained_variance_ratio: evr }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cluster_data() -> (Vec<Vec<f64>>, Vec<bool>) {
+        let mut x = Vec::new();
+        for i in 0..12 {
+            let (hi, lo) = if i < 6 { (10.0, 1.0) } else { (1.0, 10.0) };
+            x.push(vec![
+                hi + 0.01 * (i % 3) as f64,
+                hi,
+                lo,
+                lo + 0.01 * (i % 2) as f64,
+            ]);
+        }
+        (x, vec![true; 12])
+    }
+
+    #[test]
+    fn separates_clusters_on_pc1() {
+        let (x, mask) = cluster_data();
+        let p = pca(&x, &mask, 2);
+        let s0 = p.scores[0][0].signum();
+        assert!(p.scores[..6].iter().all(|s| s[0].signum() == s0));
+        assert!(p.scores[6..].iter().all(|s| s[0].signum() == -s0));
+        assert!(p.explained_variance_ratio[0] > 0.5);
+    }
+
+    #[test]
+    fn loadings_orthonormal() {
+        let mut rng = Rng::new(3);
+        let x: Vec<Vec<f64>> = (0..20)
+            .map(|_| (0..5).map(|_| rng.normal()).collect())
+            .collect();
+        let p = pca(&x, &vec![true; 20], 2);
+        let dot = |a: usize, b: usize| -> f64 {
+            (0..5).map(|j| p.loadings[j][a] * p.loadings[j][b]).sum()
+        };
+        assert!((dot(0, 0) - 1.0).abs() < 1e-6);
+        assert!((dot(1, 1) - 1.0).abs() < 1e-6);
+        assert!(dot(0, 1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn eigenvalues_descending_and_scores_variance_matches() {
+        let mut rng = Rng::new(5);
+        let x: Vec<Vec<f64>> = (0..40)
+            .map(|i| {
+                let t = i as f64 / 4.0;
+                vec![t + 0.1 * rng.normal(), 2.0 * t + 0.1 * rng.normal(), rng.normal()]
+            })
+            .collect();
+        let p = pca(&x, &vec![true; 40], 2);
+        assert!(p.eigenvalues[0] >= p.eigenvalues[1]);
+        // PC1 score variance ≈ λ1 (up to n vs n-1 normalization)
+        let mean: f64 = p.scores.iter().map(|s| s[0]).sum::<f64>() / 40.0;
+        let var: f64 = p.scores.iter().map(|s| (s[0] - mean).powi(2)).sum::<f64>() / 39.0;
+        assert!((var - p.eigenvalues[0]).abs() / p.eigenvalues[0] < 0.05);
+    }
+
+    #[test]
+    fn masked_rows_are_inert() {
+        let (mut x, _) = cluster_data();
+        x.push(vec![1e6, -1e6, 0.0, 42.0]);
+        let mut mask = vec![true; 12];
+        mask.push(false);
+        let p_pad = pca(&x, &mask, 2);
+        let p_ref = pca(&x[..12].to_vec(), &vec![true; 12], 2);
+        for j in 0..4 {
+            for c in 0..2 {
+                assert!((p_pad.loadings[j][c] - p_ref.loadings[j][c]).abs() < 1e-9);
+            }
+        }
+        assert!(p_pad.scores[12].iter().all(|&s| s.abs() < 1e-12));
+    }
+}

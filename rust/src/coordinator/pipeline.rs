@@ -1,0 +1,170 @@
+//! The profiling pipeline: fan the 12 workloads out over worker threads,
+//! run each through one instrumented execution (all analyzers + the task
+//! trace in a single pass) and both machine models, then post-process the
+//! numeric analytics through the PJRT artifacts on the main thread.
+//!
+//! Rust owns the event loop and process topology (L3 of the architecture);
+//! the PJRT artifacts own the batched numeric analytics (L2/L1). Worker
+//! count is bounded by `available_parallelism`; jobs stream through a
+//! bounded channel so a slow workload cannot pile up unbounded memory.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::analysis::{self, AppMetrics};
+use crate::interp::{run_program, Fanout};
+use crate::sim::{self, EdpComparison, Region, TaskTraceCollector};
+use crate::workloads::{registry, scaled_n, Kernel};
+
+/// Per-application pipeline output.
+#[derive(Debug, Clone)]
+pub struct AppResult {
+    pub name: String,
+    pub n: usize,
+    pub metrics: AppMetrics,
+    pub cmp: EdpComparison,
+}
+
+/// Profile one kernel: single instrumented execution feeding every analyzer
+/// *and* the task-trace collector, then both machine simulations.
+pub fn profile_app(k: &dyn Kernel, n: usize, seed: u64) -> Result<AppResult> {
+    let prog = k.build(n, seed);
+    crate::ir::verify::verify_ok(&prog);
+    let n_regs = prog.func.n_regs;
+
+    let mut mix = analysis::MixAnalyzer::new();
+    let mut branch = analysis::BranchAnalyzer::new();
+    let mut ment = analysis::MemEntropyAnalyzer::new();
+    let mut reuse = analysis::ReuseAnalyzer::new();
+    let mut ilp = analysis::IlpAnalyzer::new(n_regs);
+    let mut dlp = analysis::DlpAnalyzer::for_program(&prog);
+    let mut bblp = analysis::BblpAnalyzer::new(n_regs);
+    let mut pbblp = analysis::PbblpAnalyzer::new(&prog);
+    let mut tasks = TaskTraceCollector::new(&prog);
+
+    let (out, _machine) = {
+        let mut fan = Fanout::new(vec![
+            &mut mix,
+            &mut branch,
+            &mut ment,
+            &mut reuse,
+            &mut ilp,
+            &mut dlp,
+            &mut bblp,
+            &mut pbblp,
+            &mut tasks,
+        ]);
+        run_program(&prog, &mut fan).with_context(|| format!("running {}", k.info().name))?
+    };
+
+    let mem_entropy = ment.finalize(analysis::ENTROPY_SLOTS);
+    let reuse_res = reuse.finalize();
+    let spatial = analysis::spatial::from_reuse(&reuse_res);
+    let ilp_res = ilp.finalize();
+    let metrics = AppMetrics {
+        name: prog.func.name.clone(),
+        mix,
+        branch,
+        mem_entropy,
+        reuse: reuse_res,
+        spatial,
+        ilp: ilp_res,
+        dlp: dlp.finalize(),
+        bblp: bblp.finalize(),
+        pbblp: pbblp.finalize(),
+        exec: out.stats,
+    };
+
+    // both machine models consume the same region trace
+    let regions: Vec<Region> = tasks.finalize();
+    let ilp256 = metrics
+        .ilp
+        .windowed
+        .iter()
+        .find(|(w, _)| *w == 256)
+        .map(|(_, v)| *v)
+        .unwrap_or(metrics.ilp.inf);
+    let cmp = EdpComparison {
+        app: metrics.name.clone(),
+        host: sim::simulate_host(&regions, ilp256),
+        nmc: sim::simulate_nmc(&regions),
+    };
+
+    Ok(AppResult { name: metrics.name.clone(), n, metrics, cmp })
+}
+
+/// Run the whole suite, `scale` applied to every kernel's default size.
+/// Results come back in registry order regardless of completion order.
+pub fn run_suite(scale: f64, seed: u64, threads: usize) -> Result<Vec<AppResult>> {
+    let kernels = registry();
+    let n_jobs = kernels.len();
+    let threads = threads
+        .max(1)
+        .min(n_jobs)
+        .min(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4));
+
+    // job queue: indices into the registry, pulled by workers
+    let jobs: Mutex<Vec<usize>> = Mutex::new((0..n_jobs).rev().collect());
+    let (tx, rx) = mpsc::channel::<(usize, Result<AppResult>)>();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let jobs = &jobs;
+            scope.spawn(move || loop {
+                let Some(idx) = jobs.lock().unwrap().pop() else {
+                    break;
+                };
+                // fresh registry per thread: Kernel is stateless
+                let k = &registry()[idx];
+                let n = scaled_n(k.as_ref(), scale);
+                let res = profile_app(k.as_ref(), n, seed);
+                if tx.send((idx, res)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+
+        let mut slots: Vec<Option<AppResult>> = (0..n_jobs).map(|_| None).collect();
+        for (idx, res) in rx {
+            slots[idx] = Some(res?);
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.with_context(|| format!("job {i} produced no result")))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::by_name;
+
+    #[test]
+    fn profile_app_end_to_end() {
+        let k = by_name("gesummv").unwrap();
+        let r = profile_app(k.as_ref(), 20, 1).unwrap();
+        assert_eq!(r.name, "gesummv");
+        assert!(r.metrics.exec.dyn_instrs > 1000);
+        assert!(r.cmp.host.time_s > 0.0 && r.cmp.nmc.time_s > 0.0);
+        assert_eq!(r.cmp.host.dyn_instrs, r.cmp.nmc.dyn_instrs);
+    }
+
+    #[test]
+    fn tiny_suite_runs_in_order() {
+        let rs = run_suite(0.08, 7, 4).unwrap();
+        assert_eq!(rs.len(), 12);
+        let names: Vec<_> = rs.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names[0], "atax");
+        assert_eq!(names[11], "kmeans");
+        for r in &rs {
+            assert!(r.metrics.exec.dyn_instrs > 0, "{}", r.name);
+            assert!(r.cmp.edp_improvement() > 0.0, "{}", r.name);
+        }
+    }
+}

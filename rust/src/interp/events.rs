@@ -1,0 +1,156 @@
+//! The instrumentation event stream — PISA's analysis-library call interface.
+//!
+//! In PISA, an LLVM pass inserts calls to an external analysis library before
+//! every IR instruction; here the execution engine emits one [`TraceEvent`]
+//! per dynamic instruction / block entry / conditional branch, and analyzers
+//! implement [`Instrument`]. Events are plain `Copy` data so they can also be
+//! batched over a channel to worker threads (see `coordinator::pipeline`).
+
+use crate::ir::{BlockId, Op, Reg};
+
+/// One dynamic memory access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemAccess {
+    pub addr: u64,
+    pub size: u8,
+    pub is_store: bool,
+}
+
+/// One executed instruction, with enough operand structure for dependency
+/// analyses (ILP/DLP/BBLP) to rebuild the dataflow graph on the fly.
+#[derive(Debug, Clone, Copy)]
+pub struct InstrEvent {
+    pub op: Op,
+    pub dst: Option<Reg>,
+    pub srcs: [Reg; 3],
+    pub n_srcs: u8,
+    pub mem: Option<MemAccess>,
+    /// Static basic block the instruction belongs to.
+    pub block: BlockId,
+}
+
+impl InstrEvent {
+    pub fn sources(&self) -> &[Reg] {
+        &self.srcs[..self.n_srcs as usize]
+    }
+}
+
+/// The dynamic trace alphabet.
+#[derive(Debug, Clone, Copy)]
+pub enum TraceEvent {
+    /// Control entered a basic block (one per dynamic BB instance).
+    BlockEnter { block: BlockId },
+    /// One executed instruction.
+    Instr(InstrEvent),
+    /// A *conditional* branch resolved. `block` identifies the static branch
+    /// site (the block it terminates).
+    Branch { block: BlockId, taken: bool },
+}
+
+/// Analyzer interface. `on_event` is the hot path — called once per dynamic
+/// event; implementations must not allocate per call on common paths.
+pub trait Instrument {
+    fn on_event(&mut self, ev: &TraceEvent);
+}
+
+/// No-op sink (pure execution, oracle validation runs).
+pub struct NullInstrument;
+
+impl Instrument for NullInstrument {
+    #[inline]
+    fn on_event(&mut self, _ev: &TraceEvent) {}
+}
+
+/// Fan-out to several analyzers in one pass over the trace.
+pub struct Fanout<'a> {
+    pub sinks: Vec<&'a mut dyn Instrument>,
+}
+
+impl<'a> Fanout<'a> {
+    pub fn new(sinks: Vec<&'a mut dyn Instrument>) -> Self {
+        Fanout { sinks }
+    }
+}
+
+impl Instrument for Fanout<'_> {
+    #[inline]
+    fn on_event(&mut self, ev: &TraceEvent) {
+        for s in self.sinks.iter_mut() {
+            s.on_event(ev);
+        }
+    }
+}
+
+/// Event counter (tests, quick stats).
+#[derive(Default, Debug, Clone)]
+pub struct Counter {
+    pub instrs: u64,
+    pub blocks: u64,
+    pub branches: u64,
+    pub loads: u64,
+    pub stores: u64,
+}
+
+impl Instrument for Counter {
+    fn on_event(&mut self, ev: &TraceEvent) {
+        match ev {
+            TraceEvent::BlockEnter { .. } => self.blocks += 1,
+            TraceEvent::Branch { .. } => self.branches += 1,
+            TraceEvent::Instr(i) => {
+                self.instrs += 1;
+                if let Some(m) = i.mem {
+                    if m.is_store {
+                        self.stores += 1;
+                    } else {
+                        self.loads += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn instr_ev(op: Op) -> TraceEvent {
+        TraceEvent::Instr(InstrEvent {
+            op,
+            dst: Some(0),
+            srcs: [0; 3],
+            n_srcs: 0,
+            mem: None,
+            block: 0,
+        })
+    }
+
+    #[test]
+    fn counter_counts() {
+        let mut c = Counter::default();
+        c.on_event(&TraceEvent::BlockEnter { block: 0 });
+        c.on_event(&instr_ev(Op::ConstI));
+        c.on_event(&TraceEvent::Instr(InstrEvent {
+            op: Op::Load,
+            dst: Some(1),
+            srcs: [0; 3],
+            n_srcs: 1,
+            mem: Some(MemAccess { addr: 64, size: 8, is_store: false }),
+            block: 0,
+        }));
+        c.on_event(&TraceEvent::Branch { block: 0, taken: true });
+        assert_eq!((c.blocks, c.instrs, c.loads, c.branches), (1, 2, 1, 1));
+    }
+
+    #[test]
+    fn fanout_reaches_all() {
+        let mut a = Counter::default();
+        let mut b = Counter::default();
+        {
+            let mut f = Fanout::new(vec![&mut a, &mut b]);
+            f.on_event(&instr_ev(Op::Add));
+        }
+        assert_eq!(a.instrs, 1);
+        assert_eq!(b.instrs, 1);
+    }
+}

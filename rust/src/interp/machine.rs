@@ -1,0 +1,309 @@
+//! The execution engine: runs a program concretely and emits the
+//! instrumentation stream (PISA's instrumented-binary run, §II Fig 1).
+
+use anyhow::{bail, Context, Result};
+
+use super::events::{Instrument, InstrEvent, MemAccess, TraceEvent};
+use super::memory::Memory;
+use crate::ir::{Imm, Op, Program, Terminator, Value};
+
+/// Execution statistics returned with every run.
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub dyn_instrs: u64,
+    pub dyn_blocks: u64,
+    pub dyn_branches: u64,
+    pub mem_reads: u64,
+    pub mem_writes: u64,
+}
+
+/// Result of a completed run.
+#[derive(Debug)]
+pub struct Outcome {
+    pub ret: Option<Value>,
+    pub stats: ExecStats,
+}
+
+/// A loaded program plus its memory image. Keeping the machine around after
+/// `run` lets workloads validate output buffers against native oracles.
+pub struct Machine<'p> {
+    prog: &'p Program,
+    pub mem: Memory,
+    regs: Vec<Value>,
+    /// Hard cap on dynamic instructions — a malformed workload must not hang
+    /// the profiling pipeline.
+    pub instr_limit: u64,
+}
+
+impl<'p> Machine<'p> {
+    pub fn new(prog: &'p Program) -> Result<Self> {
+        let mem = Memory::new(prog.mem_bytes, &prog.data)?;
+        Ok(Machine {
+            prog,
+            mem,
+            regs: vec![Value::I(0); prog.func.n_regs as usize],
+            instr_limit: 2_000_000_000,
+        })
+    }
+
+    #[inline]
+    fn reg(&self, r: u16) -> Value {
+        self.regs[r as usize]
+    }
+
+    /// Execute to completion, streaming events into `instr`.
+    pub fn run(&mut self, sink: &mut dyn Instrument) -> Result<Outcome> {
+        let mut stats = ExecStats::default();
+        let mut bb = 0u32;
+        let blocks = &self.prog.func.blocks;
+        loop {
+            let block = blocks
+                .get(bb as usize)
+                .with_context(|| format!("bad block id {bb}"))?;
+            stats.dyn_blocks += 1;
+            sink.on_event(&TraceEvent::BlockEnter { block: bb });
+
+            for ins in &block.instrs {
+                stats.dyn_instrs += 1;
+                if stats.dyn_instrs > self.instr_limit {
+                    bail!(
+                        "instruction limit exceeded ({}) in {}",
+                        self.instr_limit,
+                        self.prog.func.name
+                    );
+                }
+                let s = ins.sources();
+                let mut mem_ev: Option<MemAccess> = None;
+                let result: Option<Value> = match ins.op {
+                    Op::ConstI => match ins.imm {
+                        Imm::I(v) => Some(Value::I(v)),
+                        _ => bail!("consti without int imm"),
+                    },
+                    Op::ConstF => match ins.imm {
+                        Imm::F(v) => Some(Value::F(v)),
+                        _ => bail!("constf without float imm"),
+                    },
+                    Op::Mov => Some(self.reg(s[0])),
+                    Op::Select => Some(if self.reg(s[0]).truthy() {
+                        self.reg(s[1])
+                    } else {
+                        self.reg(s[2])
+                    }),
+                    Op::Add => Some(Value::I(self.reg(s[0]).as_i().wrapping_add(self.reg(s[1]).as_i()))),
+                    Op::Sub => Some(Value::I(self.reg(s[0]).as_i().wrapping_sub(self.reg(s[1]).as_i()))),
+                    Op::Mul => Some(Value::I(self.reg(s[0]).as_i().wrapping_mul(self.reg(s[1]).as_i()))),
+                    Op::Div => {
+                        let d = self.reg(s[1]).as_i();
+                        if d == 0 {
+                            bail!("integer division by zero in {}", self.prog.func.name);
+                        }
+                        Some(Value::I(self.reg(s[0]).as_i().wrapping_div(d)))
+                    }
+                    Op::Rem => {
+                        let d = self.reg(s[1]).as_i();
+                        if d == 0 {
+                            bail!("integer remainder by zero in {}", self.prog.func.name);
+                        }
+                        Some(Value::I(self.reg(s[0]).as_i().wrapping_rem(d)))
+                    }
+                    Op::And => Some(Value::I(self.reg(s[0]).as_i() & self.reg(s[1]).as_i())),
+                    Op::Or => Some(Value::I(self.reg(s[0]).as_i() | self.reg(s[1]).as_i())),
+                    Op::Xor => Some(Value::I(self.reg(s[0]).as_i() ^ self.reg(s[1]).as_i())),
+                    Op::Shl => Some(Value::I(
+                        self.reg(s[0]).as_i().wrapping_shl(self.reg(s[1]).as_i() as u32),
+                    )),
+                    Op::Shr => Some(Value::I(
+                        (self.reg(s[0]).as_i() as u64).wrapping_shr(self.reg(s[1]).as_i() as u32)
+                            as i64,
+                    )),
+                    Op::FAdd => Some(Value::F(self.reg(s[0]).as_f() + self.reg(s[1]).as_f())),
+                    Op::FSub => Some(Value::F(self.reg(s[0]).as_f() - self.reg(s[1]).as_f())),
+                    Op::FMul => Some(Value::F(self.reg(s[0]).as_f() * self.reg(s[1]).as_f())),
+                    Op::FDiv => Some(Value::F(self.reg(s[0]).as_f() / self.reg(s[1]).as_f())),
+                    Op::FNeg => Some(Value::F(-self.reg(s[0]).as_f())),
+                    Op::FSqrt => Some(Value::F(self.reg(s[0]).as_f().sqrt())),
+                    Op::FExp => Some(Value::F(self.reg(s[0]).as_f().exp())),
+                    Op::FAbs => Some(Value::F(self.reg(s[0]).as_f().abs())),
+                    Op::FMin => Some(Value::F(self.reg(s[0]).as_f().min(self.reg(s[1]).as_f()))),
+                    Op::FMax => Some(Value::F(self.reg(s[0]).as_f().max(self.reg(s[1]).as_f()))),
+                    Op::IToF => Some(Value::F(self.reg(s[0]).as_i() as f64)),
+                    Op::FToI => Some(Value::I(self.reg(s[0]).as_f() as i64)),
+                    Op::CmpEq => Some(Value::I((self.reg(s[0]).as_i() == self.reg(s[1]).as_i()) as i64)),
+                    Op::CmpNe => Some(Value::I((self.reg(s[0]).as_i() != self.reg(s[1]).as_i()) as i64)),
+                    Op::CmpLt => Some(Value::I((self.reg(s[0]).as_i() < self.reg(s[1]).as_i()) as i64)),
+                    Op::CmpLe => Some(Value::I((self.reg(s[0]).as_i() <= self.reg(s[1]).as_i()) as i64)),
+                    Op::CmpGt => Some(Value::I((self.reg(s[0]).as_i() > self.reg(s[1]).as_i()) as i64)),
+                    Op::CmpGe => Some(Value::I((self.reg(s[0]).as_i() >= self.reg(s[1]).as_i()) as i64)),
+                    Op::FCmpEq => Some(Value::I((self.reg(s[0]).as_f() == self.reg(s[1]).as_f()) as i64)),
+                    Op::FCmpLt => Some(Value::I((self.reg(s[0]).as_f() < self.reg(s[1]).as_f()) as i64)),
+                    Op::FCmpLe => Some(Value::I((self.reg(s[0]).as_f() <= self.reg(s[1]).as_f()) as i64)),
+                    Op::FCmpGt => Some(Value::I((self.reg(s[0]).as_f() > self.reg(s[1]).as_f()) as i64)),
+                    Op::Load => {
+                        let addr = self.reg(s[0]).as_i() as u64;
+                        let raw = self.mem.load(addr, ins.size)?;
+                        stats.mem_reads += 1;
+                        mem_ev = Some(MemAccess { addr, size: ins.size, is_store: false });
+                        Some(if ins.size == 8 && ins.fp {
+                            Value::F(f64::from_bits(raw))
+                        } else {
+                            Value::I(raw as i64)
+                        })
+                    }
+                    Op::Store => {
+                        let addr = self.reg(s[1]).as_i() as u64;
+                        let raw = match self.reg(s[0]) {
+                            Value::F(v) if ins.size == 8 && ins.fp => v.to_bits(),
+                            Value::F(v) if !ins.fp => (v as i64) as u64,
+                            v => v.as_i() as u64,
+                        };
+                        self.mem.store(addr, ins.size, raw)?;
+                        stats.mem_writes += 1;
+                        mem_ev = Some(MemAccess { addr, size: ins.size, is_store: true });
+                        None
+                    }
+                };
+                if let (Some(d), Some(v)) = (ins.dst, result) {
+                    self.regs[d as usize] = v;
+                }
+                sink.on_event(&TraceEvent::Instr(InstrEvent {
+                    op: ins.op,
+                    dst: ins.dst,
+                    srcs: ins.srcs,
+                    n_srcs: ins.n_srcs,
+                    mem: mem_ev,
+                    block: bb,
+                }));
+            }
+
+            match &block.term {
+                Terminator::Jmp(t) => bb = *t,
+                Terminator::Br { cond, then_, else_ } => {
+                    let taken = self.reg(*cond).truthy();
+                    stats.dyn_branches += 1;
+                    sink.on_event(&TraceEvent::Branch { block: bb, taken });
+                    bb = if taken { *then_ } else { *else_ };
+                }
+                Terminator::Ret(r) => {
+                    let ret = r.map(|r| self.reg(r));
+                    return Ok(Outcome { ret, stats });
+                }
+            }
+        }
+    }
+}
+
+/// One-shot convenience: build a machine, run, return outcome and machine
+/// (for post-run buffer inspection).
+pub fn run_program<'p>(
+    prog: &'p Program,
+    sink: &mut dyn Instrument,
+) -> Result<(Outcome, Machine<'p>)> {
+    let mut m = Machine::new(prog)?;
+    let out = m.run(sink)?;
+    Ok((out, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::events::{Counter, NullInstrument};
+    use crate::ir::ProgramBuilder;
+
+    #[test]
+    fn arithmetic_and_return() {
+        let mut b = ProgramBuilder::new("t");
+        let x = b.const_f(2.0);
+        let y = b.const_f(0.25);
+        let z = b.fdiv(x, y); // 8.0
+        let w = b.fsqrt(z); // ~2.828
+        let p = b.finish(Some(w));
+        let mut sink = NullInstrument;
+        let (out, _) = run_program(&p, &mut sink).unwrap();
+        let v = match out.ret.unwrap() {
+            Value::F(v) => v,
+            _ => panic!(),
+        };
+        assert!((v - 8.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loop_sums_array() {
+        let data: Vec<f64> = (1..=10).map(|v| v as f64).collect();
+        let mut b = ProgramBuilder::new("sum");
+        let a = b.alloc_f64_init("a", &data);
+        let acc = b.const_f(0.0);
+        let n = b.const_i(10);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(a, i);
+            let s = b.fadd(acc, v);
+            b.assign(acc, s);
+        });
+        let p = b.finish(Some(acc));
+        let mut c = Counter::default();
+        let (out, _) = run_program(&p, &mut c).unwrap();
+        assert_eq!(out.ret.unwrap().as_f(), 55.0);
+        assert_eq!(c.loads, 10);
+        assert_eq!(out.stats.dyn_branches, 11); // 10 taken + 1 exit
+    }
+
+    #[test]
+    fn store_then_load_roundtrips() {
+        let mut b = ProgramBuilder::new("rw");
+        let a = b.alloc_f64("a", 4);
+        let idx = b.const_i(2);
+        let v = b.const_f(9.5);
+        b.store_f64(a, idx, v);
+        let r = b.load_f64(a, idx);
+        let p = b.finish(Some(r));
+        let (out, m) = run_program(&p, &mut NullInstrument).unwrap();
+        assert_eq!(out.ret.unwrap().as_f(), 9.5);
+        let buf = p.buffer("a").unwrap();
+        assert_eq!(m.mem.read_f64_slice(buf.base, 4).unwrap()[2], 9.5);
+    }
+
+    #[test]
+    fn if_then_else_takes_right_arm() {
+        let mut b = ProgramBuilder::new("sel");
+        let out_buf = b.alloc_f64("o", 1);
+        let one = b.const_i(1);
+        let two = b.const_i(2);
+        let c = b.cmp_lt(two, one); // false
+        let zero = b.const_i(0);
+        b.if_then_else(
+            c,
+            |b| {
+                let v = b.const_f(111.0);
+                b.store_f64(out_buf, zero, v);
+            },
+            |b| {
+                let v = b.const_f(222.0);
+                b.store_f64(out_buf, zero, v);
+            },
+        );
+        let p = b.finish(None);
+        let (_, m) = run_program(&p, &mut NullInstrument).unwrap();
+        assert_eq!(m.mem.load_f64(p.buffer("o").unwrap().base).unwrap(), 222.0);
+    }
+
+    #[test]
+    fn instr_limit_guards_infinite_loop() {
+        let mut b = ProgramBuilder::new("inf");
+        b.while_loop(|b| b.const_i(1), |b| {
+            b.const_i(42);
+        });
+        let p = b.finish(None);
+        let mut m = Machine::new(&p).unwrap();
+        m.instr_limit = 10_000;
+        assert!(m.run(&mut NullInstrument).is_err());
+    }
+
+    #[test]
+    fn division_by_zero_is_error_not_panic() {
+        let mut b = ProgramBuilder::new("dz");
+        let x = b.const_i(1);
+        let z = b.const_i(0);
+        b.div(x, z);
+        let p = b.finish(None);
+        assert!(run_program(&p, &mut NullInstrument).is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Flat byte-addressed virtual memory for the execution engine.
+
+use anyhow::{bail, Result};
+
+/// The program memory image. Addresses are virtual (start at the builder's
+/// base), stored in one contiguous byte vector for speed; the dynamic trace
+/// reports the *virtual* addresses, which is what every memory metric and
+/// both machine simulators consume.
+pub struct Memory {
+    bytes: Vec<u8>,
+}
+
+impl Memory {
+    /// Build an image of `size` bytes and install the initial data segments.
+    pub fn new(size: u64, data: &[(u64, Vec<u8>)]) -> Result<Memory> {
+        if size > (1 << 34) {
+            bail!("memory image too large: {size} bytes");
+        }
+        let mut bytes = vec![0u8; size as usize];
+        for (base, d) in data {
+            let b = *base as usize;
+            if b + d.len() > bytes.len() {
+                bail!("data segment at 0x{base:x} overflows image");
+            }
+            bytes[b..b + d.len()].copy_from_slice(d);
+        }
+        Ok(Memory { bytes })
+    }
+
+    #[inline]
+    pub fn load(&self, addr: u64, size: u8) -> Result<u64> {
+        let a = addr as usize;
+        let s = size as usize;
+        let Some(slice) = self.bytes.get(a..a + s) else {
+            bail!("load out of bounds: 0x{addr:x}+{size}");
+        };
+        let mut buf = [0u8; 8];
+        buf[..s].copy_from_slice(slice);
+        Ok(u64::from_le_bytes(buf))
+    }
+
+    #[inline]
+    pub fn store(&mut self, addr: u64, size: u8, value: u64) -> Result<()> {
+        let a = addr as usize;
+        let s = size as usize;
+        let Some(slice) = self.bytes.get_mut(a..a + s) else {
+            bail!("store out of bounds: 0x{addr:x}+{size}");
+        };
+        slice.copy_from_slice(&value.to_le_bytes()[..s]);
+        Ok(())
+    }
+
+    pub fn load_f64(&self, addr: u64) -> Result<f64> {
+        Ok(f64::from_bits(self.load(addr, 8)?))
+    }
+
+    pub fn store_f64(&mut self, addr: u64, v: f64) -> Result<()> {
+        self.store(addr, 8, v.to_bits())
+    }
+
+    /// Read a whole f64 buffer back out (oracle validation in workloads).
+    pub fn read_f64_slice(&self, base: u64, len: usize) -> Result<Vec<f64>> {
+        (0..len)
+            .map(|i| self.load_f64(base + 8 * i as u64))
+            .collect()
+    }
+
+    pub fn read_i64_slice(&self, base: u64, len: usize) -> Result<Vec<i64>> {
+        (0..len)
+            .map(|i| Ok(self.load(base + 8 * i as u64, 8)? as i64))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_sizes() {
+        let mut m = Memory::new(4096, &[]).unwrap();
+        for (size, val) in [(1u8, 0xABu64), (2, 0xBEEF), (4, 0xDEADBEEF), (8, u64::MAX - 7)] {
+            m.store(128, size, val).unwrap();
+            assert_eq!(m.load(128, size).unwrap(), val);
+        }
+    }
+
+    #[test]
+    fn f64_roundtrip() {
+        let mut m = Memory::new(1024, &[]).unwrap();
+        m.store_f64(64, -3.25).unwrap();
+        assert_eq!(m.load_f64(64).unwrap(), -3.25);
+    }
+
+    #[test]
+    fn initial_data_installed() {
+        let bytes: Vec<u8> = 7.5f64.to_le_bytes().to_vec();
+        let m = Memory::new(256, &[(16, bytes)]).unwrap();
+        assert_eq!(m.load_f64(16).unwrap(), 7.5);
+    }
+
+    #[test]
+    fn oob_rejected() {
+        let m = Memory::new(64, &[]).unwrap();
+        assert!(m.load(60, 8).is_err());
+        assert!(m.load(64, 1).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Execution engine + instrumentation event stream (PISA's run phase).
+
+pub mod events;
+pub mod machine;
+pub mod memory;
+
+pub use events::{Counter, Fanout, Instrument, InstrEvent, MemAccess, NullInstrument, TraceEvent};
+pub use machine::{run_program, ExecStats, Machine, Outcome};
+pub use memory::Memory;

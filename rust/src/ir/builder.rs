@@ -1,0 +1,593 @@
+//! Structured program builder — the public authoring API for workloads.
+//!
+//! The builder plays the role of clang in the PISA flow: it is how C-like
+//! kernels become analyzable IR. Control flow is structured (counted loops,
+//! while loops, if/else); the builder records `LoopInfo` for every loop it
+//! emits, which is what the PBBLP analyzer consumes in lieu of LLVM's
+//! LoopInfo pass.
+//!
+//! ```no_run
+//! use pisa_nmc::ir::builder::ProgramBuilder;
+//! let mut b = ProgramBuilder::new("dot");
+//! let a = b.alloc_f64_init("a", &[1.0, 2.0, 3.0]);
+//! let x = b.alloc_f64_init("x", &[4.0, 5.0, 6.0]);
+//! let acc = b.const_f(0.0);
+//! let n = b.const_i(3);
+//! b.counted_loop(n, |b, i| {
+//!     let ai = b.load_f64(a, i);
+//!     let xi = b.load_f64(x, i);
+//!     let p = b.fmul(ai, xi);
+//!     let s = b.fadd(acc, p);
+//!     b.assign(acc, s);
+//! });
+//! let prog = b.finish(Some(acc));
+//! ```
+
+use super::func::{Block, Buffer, Function, LoopInfo, Program};
+use super::instr::{BlockId, Imm, Instr, Reg, Terminator};
+use super::op::Op;
+
+/// Typed handle to an allocated buffer. `Copy` so closures can capture it.
+#[derive(Debug, Clone, Copy)]
+pub struct BufRef {
+    pub base: u64,
+    pub elem: u8,
+    pub len: u64,
+}
+
+impl BufRef {
+    pub fn len_bytes(&self) -> u64 {
+        self.len * self.elem as u64
+    }
+}
+
+struct ProtoBlock {
+    name: String,
+    instrs: Vec<Instr>,
+    term: Option<Terminator>,
+}
+
+/// Builder state. Blocks are created eagerly and terminators patched as the
+/// structured constructs close.
+pub struct ProgramBuilder {
+    name: String,
+    blocks: Vec<ProtoBlock>,
+    cur: BlockId,
+    next_reg: u16,
+    buffers: Vec<Buffer>,
+    data: Vec<(u64, Vec<u8>)>,
+    next_addr: u64,
+    loops: Vec<LoopInfo>,
+}
+
+/// Buffers start above the null page and are 64-byte aligned so line-granule
+/// analyses don't see accidental buffer overlap inside one cache line.
+const BASE_ADDR: u64 = 0x1_0000;
+const ALIGN: u64 = 64;
+
+impl ProgramBuilder {
+    pub fn new(name: &str) -> Self {
+        ProgramBuilder {
+            name: name.to_string(),
+            blocks: vec![ProtoBlock {
+                name: "entry".into(),
+                instrs: Vec::new(),
+                term: None,
+            }],
+            cur: 0,
+            next_reg: 0,
+            buffers: Vec::new(),
+            data: Vec::new(),
+            next_addr: BASE_ADDR,
+            loops: Vec::new(),
+        }
+    }
+
+    // ---- registers & raw emission ---------------------------------------
+
+    fn fresh(&mut self) -> Reg {
+        let r = self.next_reg;
+        self.next_reg = self
+            .next_reg
+            .checked_add(1)
+            .expect("register file overflow (>65535 virtual registers)");
+        r
+    }
+
+    fn push(&mut self, i: Instr) {
+        self.blocks[self.cur as usize].instrs.push(i);
+    }
+
+    /// Emit `op` over `srcs` into a fresh destination register.
+    pub fn emit(&mut self, op: Op, srcs: &[Reg]) -> Reg {
+        debug_assert_eq!(srcs.len(), op.arity(), "{:?} arity", op);
+        debug_assert!(op.has_dst(), "use emit_void for {:?}", op);
+        let dst = self.fresh();
+        self.emit_into(dst, op, srcs);
+        dst
+    }
+
+    /// Emit `op` into an existing destination (register mutation — used for
+    /// loop-carried accumulators).
+    pub fn emit_into(&mut self, dst: Reg, op: Op, srcs: &[Reg]) {
+        let mut s = [0 as Reg; 3];
+        s[..srcs.len()].copy_from_slice(srcs);
+        self.push(Instr {
+            op,
+            dst: Some(dst),
+            srcs: s,
+            n_srcs: srcs.len() as u8,
+            imm: Imm::None,
+            size: 0,
+            fp: false,
+        });
+    }
+
+    // ---- constants & moves ----------------------------------------------
+
+    pub fn const_i(&mut self, v: i64) -> Reg {
+        let dst = self.fresh();
+        self.push(Instr {
+            op: Op::ConstI,
+            dst: Some(dst),
+            srcs: [0; 3],
+            n_srcs: 0,
+            imm: Imm::I(v),
+            size: 0,
+            fp: false,
+        });
+        dst
+    }
+
+    pub fn const_f(&mut self, v: f64) -> Reg {
+        let dst = self.fresh();
+        self.push(Instr {
+            op: Op::ConstF,
+            dst: Some(dst),
+            srcs: [0; 3],
+            n_srcs: 0,
+            imm: Imm::F(v),
+            size: 0,
+            fp: false,
+        });
+        dst
+    }
+
+    /// `dst <- src` into an existing register (loop-carried update).
+    pub fn assign(&mut self, dst: Reg, src: Reg) {
+        self.emit_into(dst, Op::Mov, &[src]);
+    }
+
+    // ---- binary/unary sugar -----------------------------------------------
+
+    pub fn add(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::Add, &[a, b])
+    }
+    pub fn sub(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::Sub, &[a, b])
+    }
+    pub fn mul(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::Mul, &[a, b])
+    }
+    pub fn div(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::Div, &[a, b])
+    }
+    pub fn rem(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::Rem, &[a, b])
+    }
+    pub fn and(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::And, &[a, b])
+    }
+    pub fn xor(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::Xor, &[a, b])
+    }
+    pub fn shl(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::Shl, &[a, b])
+    }
+    pub fn shr(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::Shr, &[a, b])
+    }
+    pub fn fadd(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::FAdd, &[a, b])
+    }
+    pub fn fsub(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::FSub, &[a, b])
+    }
+    pub fn fmul(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::FMul, &[a, b])
+    }
+    pub fn fdiv(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::FDiv, &[a, b])
+    }
+    pub fn fneg(&mut self, a: Reg) -> Reg {
+        self.emit(Op::FNeg, &[a])
+    }
+    pub fn fsqrt(&mut self, a: Reg) -> Reg {
+        self.emit(Op::FSqrt, &[a])
+    }
+    pub fn fexp(&mut self, a: Reg) -> Reg {
+        self.emit(Op::FExp, &[a])
+    }
+    pub fn fabs(&mut self, a: Reg) -> Reg {
+        self.emit(Op::FAbs, &[a])
+    }
+    pub fn fmin(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::FMin, &[a, b])
+    }
+    pub fn fmax(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::FMax, &[a, b])
+    }
+    pub fn itof(&mut self, a: Reg) -> Reg {
+        self.emit(Op::IToF, &[a])
+    }
+    pub fn ftoi(&mut self, a: Reg) -> Reg {
+        self.emit(Op::FToI, &[a])
+    }
+    pub fn cmp_lt(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::CmpLt, &[a, b])
+    }
+    pub fn cmp_le(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::CmpLe, &[a, b])
+    }
+    pub fn cmp_gt(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::CmpGt, &[a, b])
+    }
+    pub fn cmp_eq(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::CmpEq, &[a, b])
+    }
+    pub fn cmp_ne(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::CmpNe, &[a, b])
+    }
+    pub fn fcmp_lt(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::FCmpLt, &[a, b])
+    }
+    pub fn fcmp_gt(&mut self, a: Reg, b: Reg) -> Reg {
+        self.emit(Op::FCmpGt, &[a, b])
+    }
+    pub fn select(&mut self, c: Reg, t: Reg, f: Reg) -> Reg {
+        self.emit(Op::Select, &[c, t, f])
+    }
+
+    /// a + imm (emits a const + add; common enough to deserve sugar).
+    pub fn add_i(&mut self, a: Reg, imm: i64) -> Reg {
+        let c = self.const_i(imm);
+        self.add(a, c)
+    }
+
+    pub fn mul_i(&mut self, a: Reg, imm: i64) -> Reg {
+        let c = self.const_i(imm);
+        self.mul(a, c)
+    }
+
+    // ---- memory -----------------------------------------------------------
+
+    fn alloc_raw(&mut self, name: &str, len: u64, elem: u8, init: Option<Vec<u8>>) -> BufRef {
+        let bytes = len * elem as u64;
+        let base = self.next_addr;
+        self.next_addr += (bytes + ALIGN - 1) / ALIGN * ALIGN;
+        self.buffers.push(Buffer {
+            name: name.to_string(),
+            base,
+            len_bytes: bytes,
+            elem,
+        });
+        if let Some(d) = init {
+            assert_eq!(d.len() as u64, bytes);
+            self.data.push((base, d));
+        }
+        BufRef { base, elem, len }
+    }
+
+    /// Zero-initialized f64 array.
+    pub fn alloc_f64(&mut self, name: &str, len: usize) -> BufRef {
+        self.alloc_raw(name, len as u64, 8, Some(vec![0u8; len * 8]))
+    }
+
+    pub fn alloc_f64_init(&mut self, name: &str, data: &[f64]) -> BufRef {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.alloc_raw(name, data.len() as u64, 8, Some(bytes))
+    }
+
+    pub fn alloc_i64(&mut self, name: &str, len: usize) -> BufRef {
+        self.alloc_raw(name, len as u64, 8, Some(vec![0u8; len * 8]))
+    }
+
+    pub fn alloc_i64_init(&mut self, name: &str, data: &[i64]) -> BufRef {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.alloc_raw(name, data.len() as u64, 8, Some(bytes))
+    }
+
+    /// Byte address `buf.base + idx * buf.elem` as a register.
+    pub fn addr_of(&mut self, buf: BufRef, idx: Reg) -> Reg {
+        let off = self.mul_i(idx, buf.elem as i64);
+        self.add_i(off, buf.base as i64)
+    }
+
+    fn load_sized(&mut self, buf: BufRef, idx: Reg, size: u8, fp: bool) -> Reg {
+        let addr = self.addr_of(buf, idx);
+        let dst = self.fresh();
+        self.push(Instr {
+            op: Op::Load,
+            dst: Some(dst),
+            srcs: [addr, 0, 0],
+            n_srcs: 1,
+            imm: Imm::None,
+            size,
+            fp,
+        });
+        dst
+    }
+
+    fn store_sized(&mut self, buf: BufRef, idx: Reg, val: Reg, size: u8, fp: bool) {
+        let addr = self.addr_of(buf, idx);
+        self.push(Instr {
+            op: Op::Store,
+            dst: None,
+            srcs: [val, addr, 0],
+            n_srcs: 2,
+            imm: Imm::None,
+            size,
+            fp,
+        });
+    }
+
+    pub fn load_f64(&mut self, buf: BufRef, idx: Reg) -> Reg {
+        self.load_sized(buf, idx, 8, true)
+    }
+    pub fn store_f64(&mut self, buf: BufRef, idx: Reg, val: Reg) {
+        self.store_sized(buf, idx, val, 8, true)
+    }
+    pub fn load_i64(&mut self, buf: BufRef, idx: Reg) -> Reg {
+        self.load_sized(buf, idx, 8, false)
+    }
+    pub fn store_i64(&mut self, buf: BufRef, idx: Reg, val: Reg) {
+        self.store_sized(buf, idx, val, 8, false)
+    }
+
+    /// Row-major 2D index: `buf[i * ncols + j]`.
+    pub fn idx2(&mut self, i: Reg, j: Reg, ncols: i64) -> Reg {
+        let r = self.mul_i(i, ncols);
+        self.add(r, j)
+    }
+
+    pub fn load_f64_2d(&mut self, buf: BufRef, i: Reg, j: Reg, ncols: i64) -> Reg {
+        let idx = self.idx2(i, j, ncols);
+        self.load_f64(buf, idx)
+    }
+
+    pub fn store_f64_2d(&mut self, buf: BufRef, i: Reg, j: Reg, ncols: i64, val: Reg) {
+        let idx = self.idx2(i, j, ncols);
+        self.store_f64(buf, idx, val)
+    }
+
+    // ---- control flow ------------------------------------------------------
+
+    fn new_block(&mut self, name: String) -> BlockId {
+        self.blocks.push(ProtoBlock {
+            name,
+            instrs: Vec::new(),
+            term: None,
+        });
+        (self.blocks.len() - 1) as BlockId
+    }
+
+    fn seal(&mut self, term: Terminator) {
+        let b = &mut self.blocks[self.cur as usize];
+        assert!(b.term.is_none(), "block {} already sealed", b.name);
+        b.term = Some(term);
+    }
+
+    /// `for i in 0..n` — the workhorse. Returns after positioning the builder
+    /// at the loop exit block.
+    pub fn counted_loop(&mut self, n: Reg, body: impl FnOnce(&mut Self, Reg)) {
+        let zero = self.const_i(0);
+        self.loop_range(zero, n, body)
+    }
+
+    /// `for i in lo..hi` (step 1).
+    pub fn loop_range(&mut self, lo: Reg, hi: Reg, body: impl FnOnce(&mut Self, Reg)) {
+        let id = self.loops.len();
+        let i = self.fresh();
+        self.emit_into(i, Op::Mov, &[lo]);
+
+        let header = self.new_block(format!("loop{id}.header"));
+        let body_bb = self.new_block(format!("loop{id}.body"));
+        let exit = self.new_block(format!("loop{id}.exit"));
+
+        self.seal(Terminator::Jmp(header));
+
+        self.cur = header;
+        let cond = self.cmp_lt(i, hi);
+        self.seal(Terminator::Br {
+            cond,
+            then_: body_bb,
+            else_: exit,
+        });
+
+        self.loops.push(LoopInfo {
+            header,
+            body: body_bb,
+            exit,
+            counter: i,
+        });
+
+        self.cur = body_bb;
+        body(self, i);
+        // latch: i += 1; jmp header (in whatever block the body ended in)
+        let one = self.const_i(1);
+        self.emit_into(i, Op::Add, &[i, one]);
+        self.seal(Terminator::Jmp(header));
+
+        self.cur = exit;
+    }
+
+    /// `while cond()` — cond is re-evaluated in the header each iteration.
+    pub fn while_loop(
+        &mut self,
+        cond: impl Fn(&mut Self) -> Reg,
+        body: impl FnOnce(&mut Self),
+    ) {
+        let id = self.loops.len();
+        let header = self.new_block(format!("while{id}.header"));
+        let body_bb = self.new_block(format!("while{id}.body"));
+        let exit = self.new_block(format!("while{id}.exit"));
+
+        self.seal(Terminator::Jmp(header));
+
+        self.cur = header;
+        let c = cond(self);
+        self.seal(Terminator::Br {
+            cond: c,
+            then_: body_bb,
+            else_: exit,
+        });
+
+        // while-loops have no structured induction register; record u16::MAX
+        // so PBBLP treats every loop-carried dep as real.
+        self.loops.push(LoopInfo {
+            header,
+            body: body_bb,
+            exit,
+            counter: Reg::MAX,
+        });
+
+        self.cur = body_bb;
+        body(self);
+        self.seal(Terminator::Jmp(header));
+
+        self.cur = exit;
+    }
+
+    /// `if cond { then }`.
+    pub fn if_then(&mut self, cond: Reg, then: impl FnOnce(&mut Self)) {
+        let then_bb = self.new_block("if.then".into());
+        let join = self.new_block("if.join".into());
+        self.seal(Terminator::Br {
+            cond,
+            then_: then_bb,
+            else_: join,
+        });
+        self.cur = then_bb;
+        then(self);
+        self.seal(Terminator::Jmp(join));
+        self.cur = join;
+    }
+
+    /// `if cond { then } else { other }`.
+    pub fn if_then_else(
+        &mut self,
+        cond: Reg,
+        then: impl FnOnce(&mut Self),
+        other: impl FnOnce(&mut Self),
+    ) {
+        let then_bb = self.new_block("if.then".into());
+        let else_bb = self.new_block("if.else".into());
+        let join = self.new_block("if.join".into());
+        self.seal(Terminator::Br {
+            cond,
+            then_: then_bb,
+            else_: else_bb,
+        });
+        self.cur = then_bb;
+        then(self);
+        self.seal(Terminator::Jmp(join));
+        self.cur = else_bb;
+        other(self);
+        self.seal(Terminator::Jmp(join));
+        self.cur = join;
+    }
+
+    // ---- finish -------------------------------------------------------------
+
+    pub fn finish(mut self, ret: Option<Reg>) -> Program {
+        self.seal(Terminator::Ret(ret));
+        let blocks = self
+            .blocks
+            .into_iter()
+            .map(|p| Block {
+                name: p.name,
+                instrs: p.instrs,
+                term: p.term.expect("unterminated block"),
+            })
+            .collect();
+        Program {
+            func: Function {
+                name: self.name,
+                blocks,
+                n_regs: self.next_reg,
+            },
+            buffers: self.buffers,
+            mem_bytes: self.next_addr,
+            data: self.data,
+            loops: self.loops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_straight_line() {
+        let mut b = ProgramBuilder::new("t");
+        let x = b.const_f(2.0);
+        let y = b.const_f(3.0);
+        let z = b.fmul(x, y);
+        let p = b.finish(Some(z));
+        assert_eq!(p.func.blocks.len(), 1);
+        assert_eq!(p.func.blocks[0].instrs.len(), 3);
+        assert!(matches!(p.func.blocks[0].term, Terminator::Ret(Some(_))));
+    }
+
+    #[test]
+    fn counted_loop_shape() {
+        let mut b = ProgramBuilder::new("t");
+        let n = b.const_i(10);
+        b.counted_loop(n, |b, i| {
+            b.add_i(i, 1);
+        });
+        let p = b.finish(None);
+        // entry, header, body, exit
+        assert_eq!(p.func.blocks.len(), 4);
+        assert_eq!(p.loops.len(), 1);
+        let li = p.loops[0];
+        assert_eq!(li.header, 1);
+        assert_eq!(li.body, 2);
+        assert_eq!(li.exit, 3);
+        assert_ne!(li.counter, Reg::MAX);
+    }
+
+    #[test]
+    fn nested_loops_record_two_infos() {
+        let mut b = ProgramBuilder::new("t");
+        let n = b.const_i(3);
+        b.counted_loop(n, |b, _i| {
+            let m = b.const_i(2);
+            b.counted_loop(m, |b, j| {
+                b.add_i(j, 0);
+            });
+        });
+        let p = b.finish(None);
+        assert_eq!(p.loops.len(), 2);
+    }
+
+    #[test]
+    fn buffers_aligned_and_disjoint() {
+        let mut b = ProgramBuilder::new("t");
+        let a = b.alloc_f64("a", 3);
+        let c = b.alloc_f64("c", 100);
+        assert_eq!(a.base % 64, 0);
+        assert_eq!(c.base % 64, 0);
+        assert!(a.base + a.len_bytes() <= c.base);
+    }
+
+    #[test]
+    fn if_then_else_blocks() {
+        let mut b = ProgramBuilder::new("t");
+        let c = b.const_i(1);
+        b.if_then_else(c, |b| { b.const_i(10); }, |b| { b.const_i(20); });
+        let p = b.finish(None);
+        assert_eq!(p.func.blocks.len(), 4); // entry, then, else, join
+    }
+}

@@ -1,0 +1,126 @@
+//! Basic blocks, functions and programs (the "module" level of the mini-IR).
+
+use super::instr::{BlockId, Instr, Reg, Terminator};
+
+/// A straight-line instruction sequence with a single terminator — the unit
+/// the BBLP/PBBLP analyzers treat as an atomic sequential task (paper §II-B).
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    pub term: Terminator,
+}
+
+/// A kernel: one register file, a block list, entry at block 0.
+#[derive(Debug, Clone)]
+pub struct Function {
+    pub name: String,
+    pub blocks: Vec<Block>,
+    pub n_regs: u16,
+}
+
+impl Function {
+    pub fn block(&self, id: BlockId) -> &Block {
+        &self.blocks[id as usize]
+    }
+
+    /// Static instruction count (terminators excluded).
+    pub fn static_instrs(&self) -> usize {
+        self.blocks.iter().map(|b| b.instrs.len()).sum()
+    }
+
+    /// Back edges (src → dst with dst appearing earlier in reverse post
+    /// order). Block ids from the builder are emission-ordered, and the
+    /// builder only creates loops through its structured loop helper, so a
+    /// branch to a lower-or-equal id is a back edge. The PBBLP analyzer uses
+    /// these to identify loop headers.
+    pub fn back_edges(&self) -> Vec<(BlockId, BlockId)> {
+        let mut edges = Vec::new();
+        for (i, b) in self.blocks.iter().enumerate() {
+            for succ in b.term.successors() {
+                if succ as usize <= i {
+                    edges.push((i as BlockId, succ));
+                }
+            }
+        }
+        edges
+    }
+}
+
+/// A named data buffer in the flat byte-addressed memory image. Buffers are
+/// allocated consecutively with alignment padding by the `Program`.
+#[derive(Debug, Clone)]
+pub struct Buffer {
+    pub name: String,
+    pub base: u64,
+    pub len_bytes: u64,
+    /// Element size in bytes (for pretty-printing / oracles).
+    pub elem: u8,
+}
+
+/// Structured-loop metadata recorded by the builder (the moral equivalent of
+/// LLVM's LoopInfo, which PISA's pass reads statically). The PBBLP analyzer
+/// uses `counter` to exclude induction-variable dependencies when deciding
+/// whether loop iterations are data-parallel.
+#[derive(Debug, Clone, Copy)]
+pub struct LoopInfo {
+    pub header: BlockId,
+    pub body: BlockId,
+    pub exit: BlockId,
+    /// The induction register (incremented once per iteration in the latch).
+    pub counter: Reg,
+}
+
+/// A full analyzable program: one entry function plus its memory image
+/// layout. Initial data is installed by the interpreter from `data`.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub func: Function,
+    pub buffers: Vec<Buffer>,
+    /// Total bytes of the memory image (including alignment padding).
+    pub mem_bytes: u64,
+    /// Initial memory contents: (base address, bytes).
+    pub data: Vec<(u64, Vec<u8>)>,
+    /// Structured loops, outermost-first in emission order.
+    pub loops: Vec<LoopInfo>,
+}
+
+impl Program {
+    pub fn buffer(&self, name: &str) -> Option<&Buffer> {
+        self.buffers.iter().find(|b| b.name == name)
+    }
+}
+
+/// Convenience for analyzers that need a register count without the whole
+/// function.
+pub fn max_reg(f: &Function) -> Reg {
+    f.n_regs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::ProgramBuilder;
+
+    #[test]
+    fn back_edges_found_for_loop() {
+        let mut b = ProgramBuilder::new("loop_test");
+        let n = b.const_i(4);
+        b.counted_loop(n, |_b, _i| {});
+        let p = b.finish(None);
+        assert!(
+            !p.func.back_edges().is_empty(),
+            "counted_loop must create a back edge"
+        );
+    }
+
+    #[test]
+    fn static_instr_count() {
+        let mut b = ProgramBuilder::new("s");
+        let x = b.const_i(1);
+        let y = b.const_i(2);
+        b.add(x, y);
+        let p = b.finish(None);
+        assert_eq!(p.func.static_instrs(), 3);
+    }
+}

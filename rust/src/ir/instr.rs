@@ -1,0 +1,117 @@
+//! Instructions, terminators and the small value model.
+
+use super::op::Op;
+
+/// Virtual register id (per-function register file).
+pub type Reg = u16;
+/// Basic-block id (index into `Function::blocks`).
+pub type BlockId = u32;
+
+/// Runtime value: the machine is loosely typed with explicit conversions,
+/// like LLVM's `i64`/`double` subset PISA traces reduce to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Value {
+    I(i64),
+    F(f64),
+}
+
+impl Value {
+    pub fn as_i(self) -> i64 {
+        match self {
+            Value::I(v) => v,
+            Value::F(v) => v as i64,
+        }
+    }
+    pub fn as_f(self) -> f64 {
+        match self {
+            Value::I(v) => v as f64,
+            Value::F(v) => v,
+        }
+    }
+    pub fn truthy(self) -> bool {
+        match self {
+            Value::I(v) => v != 0,
+            Value::F(v) => v != 0.0,
+        }
+    }
+}
+
+/// Immediate payload for `ConstI`/`ConstF` and load/store offsets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Imm {
+    None,
+    I(i64),
+    F(f64),
+}
+
+/// One non-terminator instruction. `srcs` are read in order; memory ops
+/// carry an access `size` in bytes (1/2/4/8) and a constant byte offset in
+/// `imm` so address arithmetic stays explicit but compact.
+#[derive(Debug, Clone)]
+pub struct Instr {
+    pub op: Op,
+    pub dst: Option<Reg>,
+    pub srcs: [Reg; 3],
+    pub n_srcs: u8,
+    pub imm: Imm,
+    /// Access size in bytes for Load/Store; 0 otherwise.
+    pub size: u8,
+    /// For 8-byte Load/Store: interpret the memory bits as f64 (true) or
+    /// i64 (false). Narrower accesses are always integer.
+    pub fp: bool,
+}
+
+impl Instr {
+    pub fn sources(&self) -> &[Reg] {
+        &self.srcs[..self.n_srcs as usize]
+    }
+}
+
+/// Block terminator. Every block ends in exactly one of these; conditional
+/// branches are what the branch-entropy analyzer observes.
+#[derive(Debug, Clone)]
+pub enum Terminator {
+    /// Unconditional jump.
+    Jmp(BlockId),
+    /// if reg != 0 goto `then_`, else `else_`.
+    Br {
+        cond: Reg,
+        then_: BlockId,
+        else_: BlockId,
+    },
+    /// Return from the kernel; optional value register.
+    Ret(Option<Reg>),
+}
+
+impl Terminator {
+    pub fn successors(&self) -> Vec<BlockId> {
+        match self {
+            Terminator::Jmp(b) => vec![*b],
+            Terminator::Br { then_, else_, .. } => vec![*then_, *else_],
+            Terminator::Ret(_) => vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(Value::I(3).as_f(), 3.0);
+        assert_eq!(Value::F(2.9).as_i(), 2);
+        assert!(Value::I(1).truthy());
+        assert!(!Value::F(0.0).truthy());
+    }
+
+    #[test]
+    fn terminator_successors() {
+        assert_eq!(Terminator::Jmp(4).successors(), vec![4]);
+        assert_eq!(
+            Terminator::Br { cond: 0, then_: 1, else_: 2 }.successors(),
+            vec![1, 2]
+        );
+        assert!(Terminator::Ret(None).successors().is_empty());
+    }
+}

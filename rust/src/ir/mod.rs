@@ -1,0 +1,20 @@
+//! The hardware-agnostic mini-IR PISA-NMC analyzes.
+//!
+//! PISA instruments LLVM IR; this repo substitutes a self-contained
+//! register-machine IR with identical *trace semantics* (see DESIGN.md
+//! §Substitutions): RISC-like typed ops over virtual registers, explicit
+//! byte-addressed loads/stores, and basic-block structured control flow.
+//! Workloads are authored through [`builder::ProgramBuilder`], validated by
+//! [`verify`], executed (and instrumented) by [`crate::interp`].
+
+pub mod builder;
+pub mod func;
+pub mod instr;
+pub mod op;
+pub mod print;
+pub mod verify;
+
+pub use builder::{BufRef, ProgramBuilder};
+pub use func::{Block, Buffer, Function, LoopInfo, Program};
+pub use instr::{BlockId, Imm, Instr, Reg, Terminator, Value};
+pub use op::{Op, OpClass};

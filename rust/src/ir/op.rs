@@ -1,0 +1,255 @@
+//! The virtual RISC-like instruction set.
+//!
+//! PISA works on LLVM IR; this repo substitutes a self-contained register
+//! machine with the same *trace semantics*: typed arithmetic over virtual
+//! registers, explicit loads/stores with byte addresses and sizes, and
+//! basic-block structured control flow (DESIGN.md §Substitutions). Every
+//! metric in `analysis/` is defined over the dynamic stream of these ops.
+
+/// Operation kind, RISC-like. Integer ops operate on `i64`, float ops on
+/// `f64`; conversions are explicit. Comparison results are `i64` 0/1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    // -- integer arithmetic / logic ---------------------------------------
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    // -- floating point ----------------------------------------------------
+    FAdd,
+    FSub,
+    FMul,
+    FDiv,
+    FNeg,
+    FSqrt,
+    FExp,
+    FAbs,
+    FMin,
+    FMax,
+    // -- conversions ---------------------------------------------------------
+    IToF,
+    FToI,
+    // -- comparisons (dst <- 0/1) -------------------------------------------
+    CmpEq,
+    CmpNe,
+    CmpLt,
+    CmpLe,
+    CmpGt,
+    CmpGe,
+    FCmpEq,
+    FCmpLt,
+    FCmpLe,
+    FCmpGt,
+    // -- data movement --------------------------------------------------------
+    /// dst <- immediate integer
+    ConstI,
+    /// dst <- immediate float
+    ConstF,
+    Mov,
+    /// dst <- if src0 != 0 { src1 } else { src2 }
+    Select,
+    // -- memory ----------------------------------------------------------------
+    /// dst <- mem[src0 (+ imm offset)], `size` bytes
+    Load,
+    /// mem[src1 (+ imm offset)] <- src0, `size` bytes
+    Store,
+}
+
+/// Coarse categories used by the instruction-mix analyzer and by the machine
+/// models' per-op cost tables (PISA's "instruction mix" metric).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    IntArith,
+    FloatArith,
+    Compare,
+    Convert,
+    DataMove,
+    Load,
+    Store,
+    Control,
+}
+
+impl Op {
+    pub fn class(self) -> OpClass {
+        use Op::*;
+        match self {
+            Add | Sub | Mul | Div | Rem | And | Or | Xor | Shl | Shr => OpClass::IntArith,
+            FAdd | FSub | FMul | FDiv | FNeg | FSqrt | FExp | FAbs | FMin | FMax => {
+                OpClass::FloatArith
+            }
+            IToF | FToI => OpClass::Convert,
+            CmpEq | CmpNe | CmpLt | CmpLe | CmpGt | CmpGe | FCmpEq | FCmpLt | FCmpLe | FCmpGt => {
+                OpClass::Compare
+            }
+            ConstI | ConstF | Mov | Select => OpClass::DataMove,
+            Load => OpClass::Load,
+            Store => OpClass::Store,
+        }
+    }
+
+    /// Number of register sources the op reads.
+    pub fn arity(self) -> usize {
+        use Op::*;
+        match self {
+            ConstI | ConstF => 0,
+            Mov | FNeg | FSqrt | FExp | FAbs | IToF | FToI | Load => 1,
+            Select => 3,
+            Store => 2,
+            _ => 2,
+        }
+    }
+
+    /// Whether the op writes a destination register.
+    pub fn has_dst(self) -> bool {
+        !matches!(self, Op::Store)
+    }
+
+    /// Is this op a candidate lane in a vector unit (used by the DLP metric:
+    /// only vectorizable ops contribute to data-level parallelism).
+    pub fn vectorizable(self) -> bool {
+        matches!(
+            self.class(),
+            OpClass::IntArith | OpClass::FloatArith | OpClass::Load | OpClass::Store
+        )
+    }
+
+    pub fn mnemonic(self) -> &'static str {
+        use Op::*;
+        match self {
+            Add => "add",
+            Sub => "sub",
+            Mul => "mul",
+            Div => "div",
+            Rem => "rem",
+            And => "and",
+            Or => "or",
+            Xor => "xor",
+            Shl => "shl",
+            Shr => "shr",
+            FAdd => "fadd",
+            FSub => "fsub",
+            FMul => "fmul",
+            FDiv => "fdiv",
+            FNeg => "fneg",
+            FSqrt => "fsqrt",
+            FExp => "fexp",
+            FAbs => "fabs",
+            FMin => "fmin",
+            FMax => "fmax",
+            IToF => "itof",
+            FToI => "ftoi",
+            CmpEq => "cmpeq",
+            CmpNe => "cmpne",
+            CmpLt => "cmplt",
+            CmpLe => "cmple",
+            CmpGt => "cmpgt",
+            CmpGe => "cmpge",
+            FCmpEq => "fcmpeq",
+            FCmpLt => "fcmplt",
+            FCmpLe => "fcmple",
+            FCmpGt => "fcmpgt",
+            ConstI => "consti",
+            ConstF => "constf",
+            Mov => "mov",
+            Select => "select",
+            Load => "load",
+            Store => "store",
+        }
+    }
+
+    /// Stable small integer id (used for per-opcode tables in the DLP
+    /// analyzer and the trace encoding).
+    pub fn index(self) -> usize {
+        use Op::*;
+        match self {
+            Add => 0,
+            Sub => 1,
+            Mul => 2,
+            Div => 3,
+            Rem => 4,
+            And => 5,
+            Or => 6,
+            Xor => 7,
+            Shl => 8,
+            Shr => 9,
+            FAdd => 10,
+            FSub => 11,
+            FMul => 12,
+            FDiv => 13,
+            FNeg => 14,
+            FSqrt => 15,
+            FExp => 16,
+            FAbs => 17,
+            FMin => 18,
+            FMax => 19,
+            IToF => 20,
+            FToI => 21,
+            CmpEq => 22,
+            CmpNe => 23,
+            CmpLt => 24,
+            CmpLe => 25,
+            CmpGt => 26,
+            CmpGe => 27,
+            FCmpEq => 28,
+            FCmpLt => 29,
+            FCmpLe => 30,
+            FCmpGt => 31,
+            ConstI => 32,
+            ConstF => 33,
+            Mov => 34,
+            Select => 35,
+            Load => 36,
+            Store => 37,
+        }
+    }
+
+    pub const COUNT: usize = 38;
+
+    pub fn from_index(i: usize) -> Option<Op> {
+        use Op::*;
+        const TABLE: [Op; Op::COUNT] = [
+            Add, Sub, Mul, Div, Rem, And, Or, Xor, Shl, Shr, FAdd, FSub, FMul, FDiv, FNeg, FSqrt,
+            FExp, FAbs, FMin, FMax, IToF, FToI, CmpEq, CmpNe, CmpLt, CmpLe, CmpGt, CmpGe, FCmpEq,
+            FCmpLt, FCmpLe, FCmpGt, ConstI, ConstF, Mov, Select, Load, Store,
+        ];
+        TABLE.get(i).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        for i in 0..Op::COUNT {
+            let op = Op::from_index(i).expect("index in range");
+            assert_eq!(op.index(), i);
+        }
+        assert!(Op::from_index(Op::COUNT).is_none());
+    }
+
+    #[test]
+    fn arity_and_dst() {
+        assert_eq!(Op::Store.arity(), 2);
+        assert!(!Op::Store.has_dst());
+        assert_eq!(Op::Select.arity(), 3);
+        assert_eq!(Op::ConstI.arity(), 0);
+        assert!(Op::Load.has_dst());
+    }
+
+    #[test]
+    fn classes() {
+        assert_eq!(Op::Add.class(), OpClass::IntArith);
+        assert_eq!(Op::FExp.class(), OpClass::FloatArith);
+        assert_eq!(Op::Load.class(), OpClass::Load);
+        assert!(Op::FMul.vectorizable());
+        assert!(!Op::Mov.vectorizable());
+    }
+}

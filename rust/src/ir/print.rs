@@ -1,0 +1,82 @@
+//! Textual IR dump — for docs, goldens and debugging workload kernels.
+
+use super::func::Program;
+use super::instr::{Imm, Terminator};
+use std::fmt::Write;
+
+/// Render a program in a compact LLVM-flavoured text form.
+pub fn print_program(p: &Program) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "; program {} ({} regs)", p.func.name, p.func.n_regs);
+    for b in &p.buffers {
+        let _ = writeln!(
+            s,
+            "; buffer {:<12} base=0x{:x} bytes={} elem={}",
+            b.name, b.base, b.len_bytes, b.elem
+        );
+    }
+    for (bi, block) in p.func.blocks.iter().enumerate() {
+        let _ = writeln!(s, "{}: ; bb{}", block.name, bi);
+        for ins in &block.instrs {
+            let mut line = String::from("  ");
+            if let Some(d) = ins.dst {
+                let _ = write!(line, "r{d} = ");
+            }
+            let _ = write!(line, "{}", ins.op.mnemonic());
+            match ins.imm {
+                Imm::I(v) => {
+                    let _ = write!(line, " #{v}");
+                }
+                Imm::F(v) => {
+                    let _ = write!(line, " #{v}");
+                }
+                Imm::None => {}
+            }
+            for r in ins.sources() {
+                let _ = write!(line, " r{r}");
+            }
+            if ins.size != 0 {
+                let _ = write!(line, " [{}B]", ins.size);
+            }
+            let _ = writeln!(s, "{line}");
+        }
+        match &block.term {
+            Terminator::Jmp(t) => {
+                let _ = writeln!(s, "  jmp bb{t}");
+            }
+            Terminator::Br { cond, then_, else_ } => {
+                let _ = writeln!(s, "  br r{cond}, bb{then_}, bb{else_}");
+            }
+            Terminator::Ret(Some(r)) => {
+                let _ = writeln!(s, "  ret r{r}");
+            }
+            Terminator::Ret(None) => {
+                let _ = writeln!(s, "  ret");
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::ProgramBuilder;
+
+    #[test]
+    fn print_contains_structure() {
+        let mut b = ProgramBuilder::new("demo");
+        let a = b.alloc_f64_init("a", &[1.0]);
+        let zero = b.const_i(0);
+        let v = b.load_f64(a, zero);
+        let w = b.fadd(v, v);
+        b.store_f64(a, zero, w);
+        let p = b.finish(None);
+        let text = print_program(&p);
+        assert!(text.contains("program demo"));
+        assert!(text.contains("buffer a"));
+        assert!(text.contains("fadd"));
+        assert!(text.contains("[8B]"));
+        assert!(text.contains("ret"));
+    }
+}

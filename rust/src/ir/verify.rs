@@ -1,0 +1,195 @@
+//! Structural verifier — run on every workload program in tests and by the
+//! coordinator before profiling (a malformed program would silently skew
+//! every metric downstream).
+
+use super::func::Program;
+use super::instr::{Imm, Terminator};
+use super::op::Op;
+
+/// A structural defect in a program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VerifyError {
+    RegOutOfRange { block: usize, instr: usize, reg: u16 },
+    BadArity { block: usize, instr: usize, got: u8, want: usize },
+    MissingImm { block: usize, instr: usize },
+    BadAccessSize { block: usize, instr: usize, size: u8 },
+    BranchTargetOutOfRange { block: usize, target: u32 },
+    BranchCondOutOfRange { block: usize, reg: u16 },
+    RetOutOfRange { block: usize, reg: u16 },
+    StoreWithDst { block: usize, instr: usize },
+    BufferOverlap { a: String, b: String },
+    EmptyProgram,
+}
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Check register ranges, arities, immediates, access sizes, branch targets
+/// and buffer disjointness. Returns all defects, not just the first.
+pub fn verify(p: &Program) -> Vec<VerifyError> {
+    let mut errs = Vec::new();
+    if p.func.blocks.is_empty() {
+        errs.push(VerifyError::EmptyProgram);
+        return errs;
+    }
+    let n_regs = p.func.n_regs;
+    let n_blocks = p.func.blocks.len() as u32;
+
+    for (bi, block) in p.func.blocks.iter().enumerate() {
+        for (ii, ins) in block.instrs.iter().enumerate() {
+            if ins.n_srcs as usize != ins.op.arity() {
+                errs.push(VerifyError::BadArity {
+                    block: bi,
+                    instr: ii,
+                    got: ins.n_srcs,
+                    want: ins.op.arity(),
+                });
+            }
+            for &r in ins.sources() {
+                if r >= n_regs {
+                    errs.push(VerifyError::RegOutOfRange { block: bi, instr: ii, reg: r });
+                }
+            }
+            if let Some(d) = ins.dst {
+                if d >= n_regs {
+                    errs.push(VerifyError::RegOutOfRange { block: bi, instr: ii, reg: d });
+                }
+                if ins.op == Op::Store {
+                    errs.push(VerifyError::StoreWithDst { block: bi, instr: ii });
+                }
+            }
+            match ins.op {
+                Op::ConstI => {
+                    if !matches!(ins.imm, Imm::I(_)) {
+                        errs.push(VerifyError::MissingImm { block: bi, instr: ii });
+                    }
+                }
+                Op::ConstF => {
+                    if !matches!(ins.imm, Imm::F(_)) {
+                        errs.push(VerifyError::MissingImm { block: bi, instr: ii });
+                    }
+                }
+                Op::Load | Op::Store => {
+                    if !matches!(ins.size, 1 | 2 | 4 | 8) {
+                        errs.push(VerifyError::BadAccessSize {
+                            block: bi,
+                            instr: ii,
+                            size: ins.size,
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+        match &block.term {
+            Terminator::Jmp(t) => {
+                if *t >= n_blocks {
+                    errs.push(VerifyError::BranchTargetOutOfRange { block: bi, target: *t });
+                }
+            }
+            Terminator::Br { cond, then_, else_ } => {
+                if *cond >= n_regs {
+                    errs.push(VerifyError::BranchCondOutOfRange { block: bi, reg: *cond });
+                }
+                for t in [*then_, *else_] {
+                    if t >= n_blocks {
+                        errs.push(VerifyError::BranchTargetOutOfRange { block: bi, target: t });
+                    }
+                }
+            }
+            Terminator::Ret(Some(r)) => {
+                if *r >= n_regs {
+                    errs.push(VerifyError::RetOutOfRange { block: bi, reg: *r });
+                }
+            }
+            Terminator::Ret(None) => {}
+        }
+    }
+
+    // buffer disjointness
+    let mut sorted: Vec<_> = p.buffers.iter().collect();
+    sorted.sort_by_key(|b| b.base);
+    for w in sorted.windows(2) {
+        if w[0].base + w[0].len_bytes > w[1].base {
+            errs.push(VerifyError::BufferOverlap {
+                a: w[0].name.clone(),
+                b: w[1].name.clone(),
+            });
+        }
+    }
+    errs
+}
+
+/// Panic-on-defect wrapper for tests and workload constructors.
+pub fn verify_ok(p: &Program) {
+    let errs = verify(p);
+    assert!(errs.is_empty(), "IR verification failed: {errs:?}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::ProgramBuilder;
+    use crate::ir::instr::{Imm, Instr};
+
+    #[test]
+    fn clean_program_verifies() {
+        let mut b = ProgramBuilder::new("ok");
+        let buf = b.alloc_f64_init("a", &[1.0, 2.0]);
+        let n = b.const_i(2);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(buf, i);
+            let w = b.fadd(v, v);
+            b.store_f64(buf, i, w);
+        });
+        verify_ok(&b.finish(None));
+    }
+
+    #[test]
+    fn catches_reg_out_of_range() {
+        let mut b = ProgramBuilder::new("bad");
+        let x = b.const_i(0);
+        b.add(x, x);
+        let mut p = b.finish(None);
+        p.func.blocks[0].instrs[1].srcs[0] = 999;
+        assert!(verify(&p)
+            .iter()
+            .any(|e| matches!(e, VerifyError::RegOutOfRange { .. })));
+    }
+
+    #[test]
+    fn catches_bad_branch_target() {
+        let mut b = ProgramBuilder::new("bad");
+        let n = b.const_i(1);
+        b.counted_loop(n, |_b, _i| {});
+        let mut p = b.finish(None);
+        p.func.blocks[1].term = crate::ir::instr::Terminator::Jmp(99);
+        assert!(verify(&p)
+            .iter()
+            .any(|e| matches!(e, VerifyError::BranchTargetOutOfRange { .. })));
+    }
+
+    #[test]
+    fn catches_bad_access_size() {
+        let mut b = ProgramBuilder::new("bad");
+        let x = b.const_i(0x1000);
+        let mut p = b.finish(None);
+        p.func.blocks[0].instrs.push(Instr {
+            op: crate::ir::op::Op::Load,
+            dst: Some(x),
+            srcs: [x, 0, 0],
+            n_srcs: 1,
+            imm: Imm::None,
+            size: 3,
+            fp: false,
+        });
+        assert!(verify(&p)
+            .iter()
+            .any(|e| matches!(e, VerifyError::BadAccessSize { .. })));
+    }
+}

@@ -1,0 +1,34 @@
+//! # PISA-NMC — Platform-Independent Software Analysis for Near-Memory Computing
+//!
+//! Reproduction of Corda et al., *Platform Independent Software Analysis for
+//! Near Memory Computing* (cs.PF 2019), as a three-layer Rust + JAX/Pallas
+//! system (see DESIGN.md):
+//!
+//! * [`ir`] + [`interp`] — the hardware-agnostic mini-IR and instrumented
+//!   execution engine (PISA's LLVM front half, substituted per DESIGN.md).
+//! * [`analysis`] — streaming trace analyzers: instruction mix, branch
+//!   entropy, memory entropy, data-temporal-reuse / spatial locality, ILP,
+//!   DLP, BBLP, PBBLP (the paper's §II metrics).
+//! * [`workloads`] — the 12 evaluated Polybench/Rodinia kernels authored on
+//!   the IR builder, each validated against a native oracle.
+//! * [`sim`] — the host (Power9-class) and NMC (HMC + in-order PEs) machine
+//!   models that produce the paper's EDP comparison (Fig 4).
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   analytics artifacts (entropy, spatial locality, PCA).
+//! * [`coordinator`] — the profiling pipeline: fan-out across workloads,
+//!   streaming analyzers, feature assembly, PCA, figure/table regeneration.
+//!
+//! Quickstart: see `examples/quickstart.rs`; full pipeline:
+//! `examples/offload_advisor.rs` or `pisa-nmc pipeline`.
+
+pub mod analysis;
+pub mod cli;
+pub mod coordinator;
+pub mod interp;
+pub mod ir;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+pub mod workloads;

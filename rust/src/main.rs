@@ -1,0 +1,157 @@
+//! `pisa-nmc` — the leader binary: CLI over the profiling pipeline,
+//! figure/table regeneration, single-kernel analysis and oracle validation.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use pisa_nmc::cli::{self, Args};
+use pisa_nmc::coordinator::{self, figures};
+use pisa_nmc::report::save_json;
+use pisa_nmc::runtime::Runtime;
+use pisa_nmc::workloads;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
+        print!("{}", cli::HELP);
+        return;
+    }
+    match cli::parse(&argv).and_then(run) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn load_runtime(args: &Args) -> Option<Runtime> {
+    if args.has("no-pjrt") {
+        return None;
+    }
+    match Runtime::load_default() {
+        Ok(rt) => {
+            eprintln!("[pjrt] artifacts loaded on {}", rt.platform());
+            Some(rt)
+        }
+        Err(e) => {
+            eprintln!("[pjrt] unavailable ({e:#}); using native analytics");
+            None
+        }
+    }
+}
+
+fn run(args: Args) -> Result<()> {
+    match args.command.as_str() {
+        "pipeline" => {
+            let scale = args.get_f64("scale", 1.0)?;
+            let seed = args.get_u64("seed", 42)?;
+            let threads = args.get_usize("threads", 8)?;
+            let rt = load_runtime(&args);
+            let report = coordinator::run_pipeline(scale, seed, threads, rt.as_ref())?;
+            print!("{}", report.render_all());
+            if report.analytics.engine == coordinator::Engine::Pjrt {
+                eprintln!(
+                    "[pjrt] native cross-check max err: {:.2e}",
+                    report.analytics.max_crosscheck_err
+                );
+            }
+            if let Some(out) = args.get("out") {
+                save_json(Path::new(out), &report.to_json())?;
+                eprintln!("wrote {out}");
+            }
+            Ok(())
+        }
+        "analyze" => {
+            let name = args.require("kernel")?;
+            let k = workloads::by_name(name)?;
+            let n = args.get_usize("n", k.default_n())?;
+            let seed = args.get_u64("seed", 42)?;
+            let r = coordinator::profile_app(k.as_ref(), n, seed)?;
+            if args.has("json") {
+                let mut j = r.metrics.to_json();
+                j.set("edp", r.cmp.to_json());
+                println!("{}", j.to_string_pretty());
+            } else {
+                println!("{} (n={})", r.name, r.n);
+                println!("  dyn instrs        {}", r.metrics.exec.dyn_instrs);
+                println!(
+                    "  mem entropy(1B)   {:.3} bits",
+                    r.metrics.mem_entropy.entropies[0]
+                );
+                println!("  entropy_diff      {:.4}", r.metrics.mem_entropy.entropy_diff);
+                println!("  spat_8B_16B       {:.4}", r.metrics.spatial.spat_8b_16b());
+                println!("  DLP               {:.2}", r.metrics.dlp.dlp);
+                println!("  BBLP_1            {:.2}", r.metrics.bblp.values[0]);
+                println!("  PBBLP             {:.1}", r.metrics.pbblp.pbblp);
+                println!("  ILP inf           {:.2}", r.metrics.ilp.inf);
+                println!("  branch entropy    {:.3}", r.metrics.branch.weighted_entropy());
+                println!("  EDP improvement   {:.3}x", r.cmp.edp_improvement());
+                println!("  speedup           {:.3}x", r.cmp.speedup());
+                println!("  NMC suitable      {}", r.cmp.nmc_suitable());
+            }
+            Ok(())
+        }
+        "figure" => {
+            let which = args.positional1()?.to_string();
+            let scale = args.get_f64("scale", 1.0)?;
+            let seed = args.get_u64("seed", 42)?;
+            let threads = args.get_usize("threads", 8)?;
+            let rt = load_runtime(&args);
+            let report = coordinator::run_pipeline(scale, seed, threads, rt.as_ref())?;
+            let (text, _json) = match which.as_str() {
+                "3a" => figures::fig3a(&report.apps, &report.analytics),
+                "3b" => figures::fig3b(&report.apps, &report.analytics),
+                "3c" => figures::fig3c(&report.apps),
+                "4" => figures::fig4(&report.apps),
+                "5" => figures::fig5(&report.apps, &report.analytics),
+                "6" => figures::fig6(&report.apps, &report.analytics),
+                other => bail!("unknown figure '{other}' (3a|3b|3c|4|5|6)"),
+            };
+            print!("{text}");
+            Ok(())
+        }
+        "table" => {
+            match args.positional1()? {
+                "1" => print!("{}", figures::table1()),
+                "2" => print!("{}", figures::table2(args.get_f64("scale", 1.0)?)),
+                other => bail!("unknown table '{other}' (1|2)"),
+            }
+            Ok(())
+        }
+        "validate" => {
+            let n = args.get_usize("n", 16)?;
+            let mut failed = 0;
+            for k in workloads::registry() {
+                let info = k.info();
+                match k.validate(n, 42) {
+                    Ok(err) if err < 1e-9 => {
+                        println!("  ok    {:<12} max err {err:.2e}", info.name)
+                    }
+                    Ok(err) => {
+                        println!("  FAIL  {:<12} max err {err:.2e}", info.name);
+                        failed += 1;
+                    }
+                    Err(e) => {
+                        println!("  FAIL  {:<12} {e:#}", info.name);
+                        failed += 1;
+                    }
+                }
+            }
+            if failed > 0 {
+                bail!("{failed} kernels failed validation");
+            }
+            Ok(())
+        }
+        "ir" => {
+            let name = args.require("kernel")?;
+            let k = workloads::by_name(name)?;
+            let n = args.get_usize("n", 8)?;
+            let prog = k.build(n, args.get_u64("seed", 42)?);
+            print!("{}", pisa_nmc::ir::print::print_program(&prog));
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'; try `pisa-nmc help`"),
+    }
+}

@@ -1,0 +1,172 @@
+//! Report rendering: aligned ASCII tables, horizontal bar charts (the
+//! terminal stand-ins for the paper's figures) and JSON output files.
+
+use crate::util::Json;
+
+/// A simple aligned text table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("{:<w$}", c, w = widths[i]));
+                if i + 1 < ncol {
+                    out.push_str("  ");
+                }
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+}
+
+/// Horizontal bar chart with one bar per labelled value.
+pub fn bar_chart(title: &str, items: &[(String, f64)], width: usize) -> String {
+    let mut out = format!("{title}\n");
+    let max = items.iter().map(|(_, v)| v.abs()).fold(0.0f64, f64::max).max(1e-12);
+    let lw = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    for (label, v) in items {
+        let n = ((v.abs() / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:<lw$}  {:>10.4}  {}\n",
+            label,
+            v,
+            "#".repeat(n),
+            lw = lw
+        ));
+    }
+    out
+}
+
+/// A tiny ASCII scatter plot (for the Fig-6 PCA plane): points in [-1,1]²
+/// normalized space, one character label per point.
+pub fn scatter(points: &[(String, f64, f64)], cols: usize, rows: usize) -> String {
+    let (mut min_x, mut max_x, mut min_y, mut max_y) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(_, x, y) in points {
+        min_x = min_x.min(x);
+        max_x = max_x.max(x);
+        min_y = min_y.min(y);
+        max_y = max_y.max(y);
+    }
+    let pad_x = (max_x - min_x).max(1e-9) * 0.1;
+    let pad_y = (max_y - min_y).max(1e-9) * 0.1;
+    min_x -= pad_x;
+    max_x += pad_x;
+    min_y -= pad_y;
+    max_y += pad_y;
+
+    let mut grid = vec![vec![' '; cols]; rows];
+    // axes through 0 if visible
+    if min_x < 0.0 && max_x > 0.0 {
+        let cx = ((0.0 - min_x) / (max_x - min_x) * (cols - 1) as f64) as usize;
+        for r in grid.iter_mut() {
+            r[cx] = '|';
+        }
+    }
+    if min_y < 0.0 && max_y > 0.0 {
+        let cy = rows - 1 - ((0.0 - min_y) / (max_y - min_y) * (rows - 1) as f64) as usize;
+        for c in grid[cy].iter_mut() {
+            if *c == ' ' {
+                *c = '-';
+            } else {
+                *c = '+';
+            }
+        }
+    }
+    let mut legend = Vec::new();
+    for (i, (label, x, y)) in points.iter().enumerate() {
+        let cx = ((x - min_x) / (max_x - min_x) * (cols - 1) as f64) as usize;
+        let cy = rows - 1 - ((y - min_y) / (max_y - min_y) * (rows - 1) as f64) as usize;
+        let ch = (b'a' + (i % 26) as u8) as char;
+        grid[cy][cx] = ch;
+        legend.push(format!("{ch}={label}"));
+    }
+    let mut out = String::new();
+    for row in grid {
+        out.push_str(&row.into_iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&legend.join("  "));
+    out.push('\n');
+    out
+}
+
+/// Write pretty JSON to a file, creating parent dirs.
+pub fn save_json(path: &std::path::Path, j: &Json) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, j.to_string_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns() {
+        let mut t = Table::new(&["app", "value"]);
+        t.row(vec!["atax".into(), "1.5".into()]);
+        t.row(vec!["gramschmidt".into(), "10".into()]);
+        let s = t.render();
+        assert!(s.contains("app          value"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn bars_scale() {
+        let s = bar_chart(
+            "t",
+            &[("a".into(), 1.0), ("b".into(), 2.0)],
+            10,
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[2].matches('#').count() == 10);
+        assert!(lines[1].matches('#').count() == 5);
+    }
+
+    #[test]
+    fn scatter_places_points() {
+        let s = scatter(
+            &[("x".into(), -1.0, -1.0), ("y".into(), 1.0, 1.0)],
+            21,
+            11,
+        );
+        assert!(s.contains('a'));
+        assert!(s.contains('b'));
+        assert!(s.contains("a=x"));
+    }
+}

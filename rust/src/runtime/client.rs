@@ -1,0 +1,240 @@
+//! PJRT execution of the AOT JAX/Pallas analytics artifacts.
+//!
+//! HLO *text* → `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` once per artifact at startup; `execute` per call
+//! on the analysis path. Python never runs here (the artifacts were lowered
+//! by `make artifacts`). See /opt/xla-example/load_hlo/ for the pattern and
+//! aot_recipe notes on why text (not serialized protos) is the interchange.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// Compiled-artifact registry + PJRT client. One per process; `execute` is
+/// `&self` (PJRT executions are internally synchronized).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` and compile it on the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", spec.file))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {:?}: {e:?}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Runtime { client, manifest, executables })
+    }
+
+    /// Default artifact directory: `$PISA_NMC_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Runtime> {
+        let dir = std::env::var("PISA_NMC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute artifact `name` with flat fp32 inputs (row-major, shapes per
+    /// the manifest). Returns one flat fp32 vector per output.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.get(name)?;
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not compiled"))?;
+        self.check_inputs(spec, inputs)?;
+
+        let literals: Vec<xla::Literal> = spec
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(shape, data)| {
+                let lit = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    // scalar: reshape to rank-0
+                    lit.reshape(&[]).map_err(|e| anyhow!("scalar reshape: {e:?}"))
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+                }
+            })
+            .collect::<Result<_>>()?;
+
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: manifest declares {} outputs, module returned {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                let v: Vec<f32> = lit
+                    .to_vec()
+                    .map_err(|e| anyhow!("reading output {i} of {name}: {e:?}"))?;
+                if v.len() != spec.output_len(i) {
+                    bail!(
+                        "{name} output {i}: expected {} elements, got {}",
+                        spec.output_len(i),
+                        v.len()
+                    );
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+
+    fn check_inputs(&self, spec: &ArtifactSpec, inputs: &[&[f32]]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, data) in inputs.iter().enumerate() {
+            let want = spec.input_len(i);
+            if data.len() != want {
+                bail!(
+                    "{} input {i}: expected {} elements for shape {:?}, got {}",
+                    spec.name,
+                    want,
+                    spec.inputs[i],
+                    data.len()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn entropy_artifact_roundtrip() {
+        let Some(rt) = runtime() else { return };
+        let g = rt.manifest().shape("G").unwrap();
+        let b = rt.manifest().shape("B").unwrap();
+        // row 0: 256 addresses each counted once → entropy 8 bits
+        let mut counts = vec![0f32; g * b];
+        let mut weights = vec![0f32; g * b];
+        counts[0] = 1.0;
+        weights[0] = 256.0;
+        // row 1: uniform over 2 values → 1 bit
+        counts[b] = 5.0;
+        weights[b] = 2.0;
+        let out = rt.execute("entropy", &[&counts, &weights]).unwrap();
+        assert_eq!(out[0].len(), g);
+        assert!((out[0][0] - 8.0).abs() < 1e-4, "{}", out[0][0]);
+        assert!((out[0][1] - 1.0).abs() < 1e-4, "{}", out[0][1]);
+        assert_eq!(out[1].len(), 1); // scalar diff
+    }
+
+    #[test]
+    fn spatial_artifact_roundtrip() {
+        let Some(rt) = runtime() else { return };
+        let l = rt.manifest().shape("L").unwrap();
+        let d = rt.manifest().shape("D").unwrap();
+        // point-mass histograms with halving means → scores 0.5
+        let mut hist = vec![0f32; l * d];
+        let binv: Vec<f32> = crate::analysis::reuse::bin_values().to_vec();
+        for row in 0..l {
+            // bin k has value ~2^k·0.7; put mass at descending bins
+            hist[row * d + (10 - row)] = 7.0;
+        }
+        let out = rt.execute("spatial", &[&hist, &binv]).unwrap();
+        assert_eq!(out[0].len(), l);
+        assert_eq!(out[1].len(), l - 1);
+        for s in &out[1] {
+            assert!((0.0..=1.0).contains(s), "{s}");
+        }
+        // means strictly decreasing → strictly positive scores
+        assert!(out[1].iter().all(|&s| s > 0.0), "{:?}", out[1]);
+    }
+
+    #[test]
+    fn pca4_artifact_separates_clusters() {
+        let Some(rt) = runtime() else { return };
+        let n = rt.manifest().shape("N").unwrap();
+        let mut x = vec![0f32; n * 4];
+        let mut mask = vec![0f32; n];
+        // two clusters in feature space
+        for i in 0..12 {
+            mask[i] = 1.0;
+            let hi = if i < 6 { 10.0 } else { 1.0 };
+            let lo = if i < 6 { 1.0 } else { 10.0 };
+            x[i * 4] = hi + (i % 3) as f32 * 0.01;
+            x[i * 4 + 1] = hi;
+            x[i * 4 + 2] = lo;
+            x[i * 4 + 3] = lo + (i % 2) as f32 * 0.01;
+        }
+        let out = rt.execute("pca4", &[&x, &mask]).unwrap();
+        let scores = &out[0]; // [N, 2]
+        let pc1: Vec<f32> = (0..12).map(|i| scores[i * 2]).collect();
+        let s0 = pc1[0].signum();
+        assert!(pc1[..6].iter().all(|v| v.signum() == s0), "{pc1:?}");
+        assert!(pc1[6..].iter().all(|v| v.signum() == -s0), "{pc1:?}");
+        // masked rows score 0
+        for i in 12..n {
+            assert!(scores[i * 2].abs() < 1e-5);
+        }
+        // explained variance sums to ~1 for a 2-cluster layout
+        let evr = &out[3];
+        assert!(evr[0] > 0.5);
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let Some(rt) = runtime() else { return };
+        let bad = vec![0f32; 7];
+        assert!(rt.execute("entropy", &[&bad, &bad]).is_err());
+    }
+}

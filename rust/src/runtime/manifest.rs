@@ -1,0 +1,156 @@
+//! The AOT artifact manifest (written by `python/compile/aot.py`): names,
+//! files, and the input/output shape ABI the Rust side must honor.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// One artifact's ABI entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    /// Input shapes, in call order ([] = scalar).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes, in tuple order.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactSpec {
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].iter().product::<usize>().max(1)
+    }
+
+    pub fn output_len(&self, i: usize) -> usize {
+        self.outputs[i].iter().product::<usize>().max(1)
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub abi: u64,
+    /// Named shape constants (G, B, L, D, N, K).
+    pub shapes: BTreeMap<String, usize>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn shape_list(j: &Json) -> Result<Vec<Vec<usize>>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array of shapes"))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| anyhow!("expected shape array"))?
+                .iter()
+                .map(|d| {
+                    d.as_f64()
+                        .map(|v| v as usize)
+                        .ok_or_else(|| anyhow!("bad dim"))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let abi = j
+            .get("abi")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("manifest missing abi"))? as u64;
+        if abi != 1 {
+            bail!("unsupported artifact ABI {abi} (runtime speaks 1)");
+        }
+
+        let mut shapes = BTreeMap::new();
+        if let Some(sh) = j.get("shapes").and_then(|s| s.as_obj()) {
+            for (k, v) in sh {
+                if let Some(n) = v.as_f64() {
+                    shapes.insert(k.clone(), n as usize);
+                }
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for (name, meta) in arts {
+            let file = meta
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(file),
+                inputs: shape_list(meta.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+                outputs: shape_list(meta.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+            };
+            if !spec.file.exists() {
+                bail!("artifact file missing: {:?}", spec.file);
+            }
+            artifacts.insert(name.clone(), spec);
+        }
+
+        Ok(Manifest { abi, shapes, artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact '{name}' in manifest"))
+    }
+
+    pub fn shape(&self, key: &str) -> Result<usize> {
+        self.shapes
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("no shape constant '{key}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.abi, 1);
+        for name in ["entropy", "spatial", "pca4", "pca8", "model"] {
+            let a = m.get(name).unwrap();
+            assert!(!a.inputs.is_empty(), "{name}");
+            assert!(!a.outputs.is_empty(), "{name}");
+        }
+        let e = m.get("entropy").unwrap();
+        assert_eq!(e.inputs[0], vec![m.shape("G").unwrap(), m.shape("B").unwrap()]);
+        assert_eq!(e.input_len(0), 16 * 4096);
+        assert_eq!(e.output_len(1), 1); // scalar diff
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

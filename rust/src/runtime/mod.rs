@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas analytics artifacts
+//! (HLO text, see `python/compile/aot.py`) and executes them from the
+//! analysis path. Python is build-time only; this module is the only
+//! boundary between the Rust system and the XLA world.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use manifest::{ArtifactSpec, Manifest};

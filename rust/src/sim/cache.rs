@@ -1,0 +1,207 @@
+//! Set-associative write-allocate LRU caches and a small hierarchy.
+
+/// Access outcome at one level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    Hit,
+    /// Miss; carries whether a dirty line was evicted (writeback traffic).
+    Miss { writeback: bool },
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Line {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    /// LRU stamp — larger = more recent.
+    lru: u64,
+}
+
+/// One set-associative LRU cache level.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    line_shift: u32,
+    lines: Vec<Line>, // sets × ways
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl Cache {
+    /// `capacity_bytes` must be sets·ways·line; sets are derived.
+    pub fn new(capacity_bytes: usize, ways: usize, line_bytes: usize) -> Cache {
+        assert!(line_bytes.is_power_of_two());
+        let n_lines = (capacity_bytes / line_bytes).max(1);
+        let ways = ways.min(n_lines).max(1);
+        let sets = (n_lines / ways).max(1);
+        Cache {
+            sets,
+            ways,
+            line_shift: line_bytes.trailing_zeros(),
+            lines: vec![Line::default(); sets * ways],
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    /// Tiny fully-specified cache (the NMC PE L1: `lines` total lines).
+    pub fn tiny(lines: usize, ways: usize, line_bytes: usize) -> Cache {
+        Cache::new(lines * line_bytes, ways, line_bytes)
+    }
+
+    pub fn line_bytes(&self) -> usize {
+        1 << self.line_shift
+    }
+
+    /// Access one address; `is_store` marks the line dirty on hit/fill.
+    pub fn access(&mut self, addr: u64, is_store: bool) -> Access {
+        self.clock += 1;
+        let line_addr = addr >> self.line_shift;
+        let set = (line_addr as usize) % self.sets;
+        let tag = line_addr / self.sets as u64;
+        let base = set * self.ways;
+        let set_lines = &mut self.lines[base..base + self.ways];
+
+        for l in set_lines.iter_mut() {
+            if l.valid && l.tag == tag {
+                l.lru = self.clock;
+                l.dirty |= is_store;
+                self.hits += 1;
+                return Access::Hit;
+            }
+        }
+        // miss: fill into LRU victim
+        let victim = set_lines
+            .iter_mut()
+            .min_by_key(|l| if l.valid { l.lru } else { 0 })
+            .expect("ways >= 1");
+        let writeback = victim.valid && victim.dirty;
+        if writeback {
+            self.writebacks += 1;
+        }
+        *victim = Line { tag, valid: true, dirty: is_store, lru: self.clock };
+        self.misses += 1;
+        Access::Miss { writeback }
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.misses as f64 / t as f64
+        }
+    }
+}
+
+/// Result of sending one access through a multi-level hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HierarchyOutcome {
+    /// Deepest level that *hit* (0 = L1); `levels` if it went to memory.
+    pub hit_level: usize,
+    /// A dirty line was written back to memory.
+    pub dram_writeback: bool,
+}
+
+/// Inclusive-ish multi-level hierarchy (misses propagate downward).
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub levels: Vec<Cache>,
+}
+
+impl Hierarchy {
+    pub fn new(levels: Vec<Cache>) -> Hierarchy {
+        Hierarchy { levels }
+    }
+
+    pub fn access(&mut self, addr: u64, is_store: bool) -> HierarchyOutcome {
+        let mut dram_writeback = false;
+        let n = self.levels.len();
+        for (i, c) in self.levels.iter_mut().enumerate() {
+            match c.access(addr, is_store) {
+                Access::Hit => {
+                    return HierarchyOutcome { hit_level: i, dram_writeback };
+                }
+                Access::Miss { writeback } => {
+                    // victim writeback from the last level goes to memory
+                    if writeback && i + 1 == n {
+                        dram_writeback = true;
+                    }
+                }
+            }
+        }
+        HierarchyOutcome { hit_level: n, dram_writeback }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut c = Cache::new(1024, 2, 64);
+        assert!(matches!(c.access(0x100, false), Access::Miss { .. }));
+        assert_eq!(c.access(0x100, false), Access::Hit);
+        assert_eq!(c.access(0x13f, false), Access::Hit); // same 64B line
+        assert!(matches!(c.access(0x140, false), Access::Miss { .. }));
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        // 2 ways, 1 set of 2 lines (tiny 2-line cache like the NMC L1)
+        let mut c = Cache::tiny(2, 2, 64);
+        c.access(0x000, false);
+        c.access(0x040, false);
+        c.access(0x000, false); // refresh line 0
+        c.access(0x080, false); // evicts 0x040
+        assert_eq!(c.access(0x000, false), Access::Hit);
+        assert!(matches!(c.access(0x040, false), Access::Miss { .. }));
+    }
+
+    #[test]
+    fn dirty_eviction_reports_writeback() {
+        let mut c = Cache::tiny(1, 1, 64);
+        c.access(0x000, true); // dirty fill
+        match c.access(0x040, false) {
+            Access::Miss { writeback } => assert!(writeback),
+            _ => panic!("expected miss"),
+        }
+    }
+
+    #[test]
+    fn working_set_behavior() {
+        // working set smaller than capacity → near-zero steady-state misses
+        let mut c = Cache::new(32 * 1024, 8, 64);
+        let addrs: Vec<u64> = (0..256u64).map(|i| i * 64).collect();
+        for &a in &addrs {
+            c.access(a, false);
+        }
+        let misses_cold = c.misses;
+        for _ in 0..10 {
+            for &a in &addrs {
+                c.access(a, false);
+            }
+        }
+        assert_eq!(c.misses, misses_cold, "steady state must not miss");
+    }
+
+    #[test]
+    fn hierarchy_propagates() {
+        let mut h = Hierarchy::new(vec![Cache::tiny(2, 2, 64), Cache::new(4096, 4, 64)]);
+        let o = h.access(0x1000, false);
+        assert_eq!(o.hit_level, 2); // cold: straight to memory
+        let o = h.access(0x1000, false);
+        assert_eq!(o.hit_level, 0);
+        // knock 0x1000 out of the 2-line L1 but not out of L2
+        h.access(0x2000, false);
+        h.access(0x3000, false);
+        let o = h.access(0x1000, false);
+        assert_eq!(o.hit_level, 1);
+    }
+}

@@ -1,0 +1,103 @@
+//! Energy-delay product comparison (paper §IV-B, Fig 4).
+//!
+//! "We use EDP as our major metric of reference because both energy and
+//! performance are critical criteria for evaluating NMC suitability.
+//! Applications with EDP reduction less than 1 are not suitable for NMC."
+
+use super::host_system::HostResult;
+use super::nmc_system::NmcResult;
+use crate::util::Json;
+
+/// Host-vs-NMC outcome for one application.
+#[derive(Debug, Clone)]
+pub struct EdpComparison {
+    pub app: String,
+    pub host: HostResult,
+    pub nmc: NmcResult,
+}
+
+impl EdpComparison {
+    /// Fig 4's y-axis: EDP_host / EDP_nmc (> 1 ⇒ NMC suitable).
+    pub fn edp_improvement(&self) -> f64 {
+        let n = self.nmc.edp();
+        if n <= 0.0 {
+            return 0.0;
+        }
+        self.host.edp() / n
+    }
+
+    pub fn speedup(&self) -> f64 {
+        if self.nmc.time_s <= 0.0 {
+            return 0.0;
+        }
+        self.host.time_s / self.nmc.time_s
+    }
+
+    pub fn energy_reduction(&self) -> f64 {
+        if self.nmc.energy_j <= 0.0 {
+            return 0.0;
+        }
+        self.host.energy_j / self.nmc.energy_j
+    }
+
+    pub fn nmc_suitable(&self) -> bool {
+        self.edp_improvement() > 1.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("app", self.app.as_str());
+        j.set("edp_improvement", self.edp_improvement());
+        j.set("speedup", self.speedup());
+        j.set("energy_reduction", self.energy_reduction());
+        j.set("nmc_suitable", self.nmc_suitable());
+        let mut h = Json::obj();
+        h.set("time_s", self.host.time_s);
+        h.set("energy_j", self.host.energy_j);
+        h.set("edp", self.host.edp());
+        h.set("l3_misses", self.host.l3_misses);
+        h.set("dram_lines", self.host.dram_lines);
+        h.set("ipc", self.host.ipc);
+        j.set("host", h);
+        let mut n = Json::obj();
+        n.set("time_s", self.nmc.time_s);
+        n.set("energy_j", self.nmc.energy_j);
+        n.set("edp", self.nmc.edp());
+        n.set("parallel_fraction", self.nmc.parallel_fraction);
+        n.set("dram_lines", self.nmc.dram_lines);
+        n.set("remote_lines", self.nmc.remote_lines);
+        j.set("nmc", n);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::host_system::simulate_host;
+    use crate::sim::nmc_system::simulate_nmc;
+    use crate::sim::task_trace::collect;
+    use crate::ir::ProgramBuilder;
+
+    #[test]
+    fn edp_math() {
+        let mut b = ProgramBuilder::new("t");
+        let a = b.alloc_f64("a", 512);
+        let n = b.const_i(512);
+        let c = b.const_f(1.0);
+        b.counted_loop(n, |b, i| {
+            b.store_f64(a, i, c);
+        });
+        let regions = collect(&b.finish(None)).unwrap();
+        let cmp = EdpComparison {
+            app: "t".into(),
+            host: simulate_host(&regions, 3.0),
+            nmc: simulate_nmc(&regions),
+        };
+        let want = (cmp.host.energy_j * cmp.host.time_s) / (cmp.nmc.energy_j * cmp.nmc.time_s);
+        assert!((cmp.edp_improvement() - want).abs() < 1e-12);
+        assert_eq!(cmp.nmc_suitable(), want > 1.0);
+        let s = cmp.to_json().to_string_compact();
+        assert!(s.contains("edp_improvement"));
+    }
+}

@@ -1,0 +1,216 @@
+//! The host machine model: one Power9-class out-of-order core with an
+//! L1/L2/L3 hierarchy and a DDR4 channel (paper Table 1 row 1).
+//!
+//! Analytical-plus-cache-sim hybrid: compute cycles come from the
+//! ILP-limited sustainable IPC (min(issue width, measured ILP_256) — the
+//! platform-independent ILP metric doubling as the µarch throughput bound);
+//! memory cycles come from driving every access through the simulated
+//! hierarchy, with miss latencies overlapped by the configured MLP and DRAM
+//! service through the same command-level model the vaults use (row
+//! locality kept intact).
+
+use super::cache::{Cache, Hierarchy};
+use super::config::{DramConfig, EnergyConfig, HostConfig};
+use super::dram::Dram;
+use super::task_trace::{Region, Task};
+
+/// Simulation result for one application on the host.
+#[derive(Debug, Clone)]
+pub struct HostResult {
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub dyn_instrs: u64,
+    pub l1_misses: u64,
+    pub l2_misses: u64,
+    pub l3_misses: u64,
+    pub dram_lines: u64,
+    pub row_hit_rate: f64,
+    pub ipc: f64,
+}
+
+impl HostResult {
+    pub fn edp(&self) -> f64 {
+        self.energy_j * self.time_s
+    }
+}
+
+/// The simulator. `ilp` is the application's measured ILP (window 256) from
+/// the platform-independent analysis; it bounds sustained IPC.
+pub struct HostSystem {
+    cfg: HostConfig,
+    energy: EnergyConfig,
+    ilp: f64,
+}
+
+impl HostSystem {
+    pub fn new(cfg: HostConfig, energy: EnergyConfig, ilp: f64) -> Self {
+        HostSystem { cfg, energy, ilp }
+    }
+
+    pub fn run(&self, regions: &[Region]) -> HostResult {
+        let c = &self.cfg;
+        let mut hier = Hierarchy::new(vec![
+            Cache::new(c.l1_bytes(), c.l1_ways, c.line_bytes),
+            Cache::new(c.l2_bytes(), c.l2_ways, c.line_bytes),
+            Cache::new(c.l3_bytes(), c.l3_ways, c.line_bytes),
+        ]);
+        let mut dram = Dram::new(DramConfig::ddr4());
+
+        let mut instrs = 0u64;
+        let mut heavy = 0u64;
+        let mut accesses = 0u64;
+        let mut l2_hits = 0u64;
+        let mut l3_hits = 0u64;
+        let mut dram_lines = 0u64;
+        let mut mem_stall_cycles = 0f64;
+        let mut dram_now_clocks = 0u64;
+
+        let mut visit = |task: &Task| {
+            instrs += task.instrs();
+            heavy += task.heavy_ops;
+            for &(addr, is_store) in &task.accesses {
+                accesses += 1;
+                let o = hier.access(addr, is_store);
+                match o.hit_level {
+                    0 => {} // folded into base IPC
+                    1 => {
+                        l2_hits += 1;
+                        mem_stall_cycles += c.l2_lat as f64 / c.mlp;
+                    }
+                    2 => {
+                        l3_hits += 1;
+                        mem_stall_cycles += c.l3_lat as f64 / c.mlp;
+                    }
+                    _ => {
+                        // DRAM: command-level service, overlapped by MLP
+                        let served = dram.request(addr, dram_now_clocks);
+                        dram_now_clocks = served.done;
+                        dram_lines += 1;
+                        let ns = served.latency as f64 / dram.cfg().clock_ghz
+                            + c.dram_lat_ns * 0.25; // controller/queueing adder
+                        mem_stall_cycles += ns * c.freq_ghz / c.mlp;
+                        if o.dram_writeback {
+                            dram_lines += 1;
+                        }
+                    }
+                }
+            }
+        };
+
+        for region in regions {
+            match region {
+                Region::Serial(t) => visit(t),
+                Region::Parallel(ts) => {
+                    for t in ts {
+                        visit(t);
+                    }
+                }
+            }
+        }
+
+        let ipc = self.ilp.min(c.issue_width).max(0.25);
+        let compute_cycles = instrs as f64 / ipc + heavy as f64 * 10.0;
+        let cycles = compute_cycles + mem_stall_cycles;
+        let time_s = cycles / (c.freq_ghz * 1e9);
+
+        let lv = &hier.levels;
+        let (l1m, l2m, l3m) = (lv[0].misses, lv[1].misses, lv[2].misses);
+        let e = &self.energy;
+        let energy_j = (instrs as f64 * e.host_instr_pj
+            + l1m as f64 * e.host_l2_pj
+            + l2m as f64 * e.host_l3_pj
+            + dram_lines as f64 * e.host_dram_line_pj)
+            * 1e-12
+            + e.host_static_w * time_s;
+
+        HostResult {
+            time_s,
+            energy_j,
+            dyn_instrs: instrs,
+            l1_misses: l1m,
+            l2_misses: l2m,
+            l3_misses: l3m,
+            dram_lines,
+            row_hit_rate: dram.row_hit_rate(),
+            ipc,
+        }
+    }
+}
+
+/// One-shot convenience with the repro-scaled host (see
+/// `HostConfig::scaled_for_repro`): the hierarchy shrinks by the same
+/// factor the datasets were scaled so working-set/cache ratios match the
+/// paper's Table-2 sizes.
+pub fn simulate_host(regions: &[Region], ilp: f64) -> HostResult {
+    HostSystem::new(HostConfig::scaled_for_repro(), EnergyConfig::default(), ilp).run(regions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::task_trace::collect;
+    use crate::ir::ProgramBuilder;
+
+    fn streaming_program(n: usize) -> crate::ir::Program {
+        let mut b = ProgramBuilder::new("stream");
+        let a = b.alloc_f64("a", n);
+        let nn = b.const_i(n as i64);
+        let c = b.const_f(1.0);
+        b.counted_loop(nn, |b, i| {
+            b.store_f64(a, i, c);
+        });
+        b.finish(None)
+    }
+
+    fn random_walk_program(n: usize) -> crate::ir::Program {
+        // pseudo-random strided loads over a large array (cache hostile)
+        let mut b = ProgramBuilder::new("rand");
+        let a = b.alloc_f64("a", n);
+        let nn = b.const_i((n / 2) as i64);
+        let stride = b.const_i(7919); // prime stride mod n
+        let nmod = b.const_i(n as i64);
+        let acc = b.const_f(0.0);
+        b.counted_loop(nn, |b, i| {
+            let x = b.mul(i, stride);
+            let idx = b.rem(x, nmod);
+            let v = b.load_f64(a, idx);
+            let s = b.fadd(acc, v);
+            b.assign(acc, s);
+        });
+        b.finish(Some(acc))
+    }
+
+    #[test]
+    fn produces_time_and_energy() {
+        let r = simulate_host(&collect(&streaming_program(4096)).unwrap(), 3.0);
+        assert!(r.time_s > 0.0 && r.energy_j > 0.0);
+        assert!(r.dyn_instrs > 4096);
+    }
+
+    #[test]
+    fn cache_friendly_beats_cache_hostile_per_access() {
+        let n = 256 * 1024; // 2 MB array: fits L3, not L2
+        let seq = simulate_host(&collect(&streaming_program(n)).unwrap(), 3.0);
+        let rnd = simulate_host(&collect(&random_walk_program(n)).unwrap(), 3.0);
+        let seq_per = seq.time_s / seq.dyn_instrs as f64;
+        let rnd_per = rnd.time_s / rnd.dyn_instrs as f64;
+        assert!(
+            rnd_per > 1.2 * seq_per,
+            "random {rnd_per} vs sequential {seq_per}"
+        );
+    }
+
+    #[test]
+    fn higher_ilp_means_faster() {
+        let regions = collect(&streaming_program(8192)).unwrap();
+        let slow = simulate_host(&regions, 1.0);
+        let fast = simulate_host(&regions, 4.0);
+        assert!(fast.time_s < slow.time_s);
+    }
+
+    #[test]
+    fn small_working_set_stays_in_cache() {
+        let r = simulate_host(&collect(&streaming_program(64)).unwrap(), 3.0);
+        assert_eq!(r.l3_misses as usize, 64 * 8 / 64); // cold lines only
+    }
+}

@@ -1,0 +1,63 @@
+//! Machine models (paper §III-A, Fig 2): the Power9-class host and the
+//! HMC-based NMC system, both driven by the same region/task trace so the
+//! EDP comparison (Fig 4) holds work constant across machines.
+//!
+//! * [`task_trace`] — segments the instrumentation stream into
+//!   barrier-separated serial/parallel regions (the Pin-trace step).
+//! * [`cache`] — set-associative LRU caches (host hierarchy, PE L1s).
+//! * [`dram`] — Ramulator-lite command-level DRAM timing (DDR4 channel and
+//!   HMC vaults share the model with different parameters).
+//! * [`host_system`] / [`nmc_system`] — the two machines.
+//! * [`edp`] — the energy-delay-product comparison.
+//! * [`config`] — Table 1 parameters + the energy table.
+
+pub mod cache;
+pub mod config;
+pub mod dram;
+pub mod edp;
+pub mod host_system;
+pub mod nmc_system;
+pub mod task_trace;
+
+pub use config::{DramConfig, EnergyConfig, HostConfig, NmcConfig};
+pub use edp::EdpComparison;
+pub use host_system::{simulate_host, HostResult, HostSystem};
+pub use nmc_system::{simulate_nmc, NmcResult, NmcSystem};
+pub use task_trace::{collect, Region, Task, TaskTraceCollector};
+
+use anyhow::Result;
+
+/// Full host-vs-NMC comparison for one program (collect trace once, run
+/// both machines). `ilp` is the measured ILP_256 from the analysis pass.
+pub fn compare(prog: &crate::ir::Program, ilp: f64) -> Result<EdpComparison> {
+    let regions = collect(prog)?;
+    Ok(EdpComparison {
+        app: prog.func.name.clone(),
+        host: simulate_host(&regions, ilp),
+        nmc: simulate_nmc(&regions),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::by_name;
+
+    #[test]
+    fn compare_runs_end_to_end_on_real_kernel() {
+        let k = by_name("atax").unwrap();
+        let prog = k.build(24, 1);
+        let cmp = compare(&prog, 2.0).unwrap();
+        assert!(cmp.host.time_s > 0.0);
+        assert!(cmp.nmc.time_s > 0.0);
+        assert!(cmp.edp_improvement() > 0.0);
+    }
+
+    #[test]
+    fn same_work_on_both_machines() {
+        let k = by_name("gesummv").unwrap();
+        let prog = k.build(16, 2);
+        let cmp = compare(&prog, 2.0).unwrap();
+        assert_eq!(cmp.host.dyn_instrs, cmp.nmc.dyn_instrs);
+    }
+}

@@ -1,0 +1,373 @@
+//! The NMC machine model: 32 in-order single-issue PEs in the logic layer
+//! of an HMC, one PE per vault, each with a small L1 (paper Table 1,
+//! modeled after Ahn+15 / Gao+15 as the paper states).
+//!
+//! Execution semantics (see `task_trace`): parallel regions fan their
+//! iteration tasks across PEs in contiguous blocks (OpenMP-static style)
+//! with a barrier at region end; serial regions run on PE 0.
+//!
+//! Timing model: each PE sees a *private* command-level DRAM view per
+//! vault (row-buffer locality of its own stream), and cross-PE vault
+//! contention is applied at the region barrier: the region takes
+//! max(slowest PE, hottest vault's total occupancy) — the two physical
+//! bottlenecks of a vault-partitioned PIM. This avoids the time-travel
+//! artifacts of replaying per-PE streams through one shared absolute-time
+//! bus model while keeping both locality and bandwidth-saturation effects.
+
+use super::cache::{Access, Cache};
+use super::config::{EnergyConfig, NmcConfig};
+use super::dram::Dram;
+use super::task_trace::{Region, Task};
+
+/// Simulation result for one application on the NMC system.
+#[derive(Debug, Clone)]
+pub struct NmcResult {
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub dyn_instrs: u64,
+    pub l1_misses: u64,
+    pub dram_lines: u64,
+    pub remote_lines: u64,
+    /// Fraction of instructions executed inside parallel regions.
+    pub parallel_fraction: f64,
+    pub row_hit_rate: f64,
+    /// Fraction of total time attributable to hot-vault serialization
+    /// (bandwidth-bound) rather than the slowest PE (latency-bound).
+    pub vault_bound_fraction: f64,
+}
+
+impl NmcResult {
+    pub fn edp(&self) -> f64 {
+        self.energy_j * self.time_s
+    }
+}
+
+/// The simulator.
+pub struct NmcSystem {
+    cfg: NmcConfig,
+    energy: EnergyConfig,
+    /// Persistent per-PE L1s (physical caches survive region barriers).
+    caches: Vec<Cache>,
+    /// Per-PE private DRAM timing views, one per vault.
+    pe_vaults: Vec<Vec<Dram>>,
+    /// Per-vault occupancy within the current region (ns).
+    vault_busy_ns: Vec<f64>,
+    now_ns: f64,
+    // accounting
+    instrs: u64,
+    l1_misses: u64,
+    dram_lines: u64,
+    remote_lines: u64,
+    par_instrs: u64,
+    row_hits: u64,
+    vault_bound_ns: f64,
+    heavy_cost: u64,
+}
+
+impl NmcSystem {
+    pub fn new(cfg: NmcConfig, energy: EnergyConfig) -> Self {
+        let caches = (0..cfg.n_pes)
+            .map(|_| Cache::tiny(cfg.l1_lines, cfg.l1_ways, cfg.line_bytes))
+            .collect();
+        let pe_vaults = (0..cfg.n_pes)
+            .map(|_| {
+                (0..cfg.n_vaults)
+                    .map(|_| Dram::new(cfg.dram.clone()))
+                    .collect()
+            })
+            .collect();
+        let vault_busy_ns = vec![0.0; cfg.n_vaults];
+        NmcSystem {
+            cfg,
+            energy,
+            caches,
+            pe_vaults,
+            vault_busy_ns,
+            now_ns: 0.0,
+            instrs: 0,
+            l1_misses: 0,
+            dram_lines: 0,
+            remote_lines: 0,
+            par_instrs: 0,
+            row_hits: 0,
+            vault_bound_ns: 0.0,
+            heavy_cost: 12,
+        }
+    }
+
+    fn vault_of(&self, addr: u64) -> usize {
+        ((addr / self.cfg.vault_block_bytes) as usize) % self.cfg.n_vaults
+    }
+
+    fn pe_cycles_to_ns(&self, c: u64) -> f64 {
+        c as f64 / self.cfg.freq_ghz
+    }
+
+    /// Execute one task on PE `pe_id`; `cycles` is the PE's local clock
+    /// relative to the region start. Returns the updated clock.
+    fn run_task(&mut self, pe_id: usize, mut cycles: u64, task: &Task) -> u64 {
+        cycles += task.simple_ops + task.heavy_ops * self.heavy_cost;
+        self.instrs += task.instrs();
+        for &(addr, is_store) in &task.accesses {
+            cycles += self.cfg.l1_lat;
+            match self.caches[pe_id].access(addr, is_store) {
+                Access::Hit => {}
+                Access::Miss { writeback } => {
+                    self.l1_misses += 1;
+                    let vault = self.vault_of(addr);
+                    let remote = vault != pe_id % self.cfg.n_vaults;
+                    let mut extra_ns = 0.0;
+                    if remote {
+                        self.remote_lines += 1;
+                        extra_ns += self.cfg.remote_vault_ns;
+                    }
+                    let clk_ghz = self.cfg.dram.clock_ghz;
+                    let (t_bl, t_act) = (
+                        self.cfg.dram.t_bl,
+                        self.cfg.dram.t_rcd + self.cfg.dram.t_rp,
+                    );
+                    let clocks = (self.pe_cycles_to_ns(cycles) * clk_ghz) as u64;
+                    let served = self.pe_vaults[pe_id][vault].request(addr, clocks);
+                    self.dram_lines += 1;
+                    if served.row_hit {
+                        self.row_hits += 1;
+                    }
+                    // vault occupancy: burst + (activate unless row hit)
+                    let occ = t_bl + if served.row_hit { 0 } else { t_act };
+                    self.vault_busy_ns[vault] += occ as f64 / clk_ghz;
+                    if writeback {
+                        let wb = self.pe_vaults[pe_id][vault].request(addr ^ 0x40, served.done);
+                        self.dram_lines += 1;
+                        self.vault_busy_ns[vault] += t_bl as f64 / clk_ghz;
+                        let _ = wb;
+                    }
+                    let lat_ns = served.latency as f64 / clk_ghz + extra_ns;
+                    // in-order PE stalls for the full line fill
+                    cycles += (lat_ns * self.cfg.freq_ghz).ceil() as u64;
+                }
+            }
+        }
+        cycles
+    }
+
+    /// Close a region: advance global time by the bottleneck — the slowest
+    /// PE or the hottest vault — and reset per-region occupancy.
+    fn barrier(&mut self, span_cycles: u64) {
+        let span_ns = self.pe_cycles_to_ns(span_cycles);
+        let hot_ns = self.vault_busy_ns.iter().cloned().fold(0.0f64, f64::max);
+        if hot_ns > span_ns {
+            self.vault_bound_ns += hot_ns - span_ns;
+        }
+        self.now_ns += span_ns.max(hot_ns);
+        self.vault_busy_ns.iter_mut().for_each(|v| *v = 0.0);
+        // region-local clocks restart at the barrier: rebase every DRAM
+        // view's timing reservations (row-buffer contents persist)
+        for pv in &mut self.pe_vaults {
+            for d in pv {
+                d.reset_time();
+            }
+        }
+    }
+
+    /// Simulate one region stream; call once per application.
+    pub fn run(&mut self, regions: &[Region]) -> NmcResult {
+        for region in regions {
+            match region {
+                Region::Serial(task) => {
+                    let c = self.run_task(0, 0, task);
+                    self.barrier(c);
+                }
+                Region::Parallel(tasks) => {
+                    let active = self.cfg.n_pes.min(tasks.len());
+                    let mut clocks = vec![0u64; active];
+                    for (t_idx, task) in tasks.iter().enumerate() {
+                        self.par_instrs += task.instrs();
+                        // blocked static scheduling (OpenMP-static style):
+                        // PE p runs a contiguous chunk of iterations, which
+                        // preserves each PE's line/row locality; the hop a
+                        // PE pays for non-local data is the cheap intra-
+                        // stack network (remote_vault_ns/nmc_remote_line_pj).
+                        let pe_id = (t_idx * active) / tasks.len();
+                        clocks[pe_id] = self.run_task(pe_id, clocks[pe_id], task);
+                    }
+                    let max_c = clocks.iter().copied().max().unwrap_or(0);
+                    self.barrier(max_c);
+                }
+            }
+        }
+
+        let time_s = self.now_ns * 1e-9;
+        let e = &self.energy;
+        let energy_j = (self.instrs as f64 * e.nmc_instr_pj
+            + self.dram_lines as f64 * e.nmc_dram_line_pj
+            + self.remote_lines as f64 * e.nmc_remote_line_pj)
+            * 1e-12
+            + e.nmc_static_w * time_s;
+        NmcResult {
+            time_s,
+            energy_j,
+            dyn_instrs: self.instrs,
+            l1_misses: self.l1_misses,
+            dram_lines: self.dram_lines,
+            remote_lines: self.remote_lines,
+            parallel_fraction: if self.instrs == 0 {
+                0.0
+            } else {
+                self.par_instrs as f64 / self.instrs as f64
+            },
+            row_hit_rate: if self.dram_lines == 0 {
+                0.0
+            } else {
+                self.row_hits as f64 / self.dram_lines as f64
+            },
+            vault_bound_fraction: if self.now_ns == 0.0 {
+                0.0
+            } else {
+                self.vault_bound_ns / self.now_ns
+            },
+        }
+    }
+}
+
+/// One-shot convenience.
+pub fn simulate_nmc(regions: &[Region]) -> NmcResult {
+    NmcSystem::new(NmcConfig::default(), EnergyConfig::default()).run(regions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::sim::task_trace::collect;
+
+    fn map_program(n: usize) -> crate::ir::Program {
+        let mut b = ProgramBuilder::new("map");
+        let a = b.alloc_f64("a", n);
+        let nn = b.const_i(n as i64);
+        let c = b.const_f(2.0);
+        b.counted_loop(nn, |b, i| {
+            b.store_f64(a, i, c);
+        });
+        b.finish(None)
+    }
+
+    fn serial_program(n: usize) -> crate::ir::Program {
+        let mut b = ProgramBuilder::new("ser");
+        let a = b.alloc_f64("a", n);
+        let acc = b.const_f(0.0);
+        let nn = b.const_i(n as i64);
+        b.counted_loop(nn, |b, i| {
+            let v = b.load_f64(a, i);
+            let s = b.fadd(acc, v);
+            b.assign(acc, s);
+        });
+        b.finish(Some(acc))
+    }
+
+    #[test]
+    fn produces_time_and_energy() {
+        let regions = collect(&map_program(512)).unwrap();
+        let r = simulate_nmc(&regions);
+        assert!(r.time_s > 0.0);
+        assert!(r.energy_j > 0.0);
+        assert!(r.dyn_instrs > 512);
+        assert!(r.parallel_fraction > 0.5, "{}", r.parallel_fraction);
+    }
+
+    #[test]
+    fn parallel_compute_scales_with_pe_count() {
+        // balanced pure-compute region: time ≈ total / n_pes
+        let tasks: Vec<Task> = (0..64)
+            .map(|_| Task { simple_ops: 50_000, heavy_ops: 0, accesses: vec![] })
+            .collect();
+        let r = simulate_nmc(&[Region::Parallel(tasks)]);
+        let want = (64.0 * 50_000.0) / 32.0 / 1.25e9;
+        assert!(
+            (r.time_s - want).abs() / want < 0.05,
+            "got {} want {want}",
+            r.time_s
+        );
+    }
+
+    #[test]
+    fn imbalanced_region_bounded_by_slowest_pe() {
+        let mut tasks: Vec<Task> = (0..31)
+            .map(|_| Task { simple_ops: 1000, heavy_ops: 0, accesses: vec![] })
+            .collect();
+        tasks.push(Task { simple_ops: 500_000, heavy_ops: 0, accesses: vec![] });
+        let r = simulate_nmc(&[Region::Parallel(tasks)]);
+        let floor = 500_000.0 / 1.25e9;
+        assert!(r.time_s >= floor, "barrier must wait for the straggler");
+    }
+
+    #[test]
+    fn parallel_map_faster_than_serialized_map() {
+        let regions = collect(&map_program(4096)).unwrap();
+        let par = simulate_nmc(&regions);
+        let serialized: Vec<Region> = regions
+            .iter()
+            .map(|r| match r {
+                Region::Parallel(ts) => {
+                    let mut merged = Task::default();
+                    for t in ts {
+                        merged.simple_ops += t.simple_ops;
+                        merged.heavy_ops += t.heavy_ops;
+                        merged.accesses.extend(t.accesses.iter().copied());
+                    }
+                    Region::Serial(merged)
+                }
+                Region::Serial(t) => Region::Serial(t.clone()),
+            })
+            .collect();
+        let ser = simulate_nmc(&serialized);
+        assert!(
+            par.time_s < ser.time_s / 2.0,
+            "parallel {} vs serial {}",
+            par.time_s,
+            ser.time_s
+        );
+    }
+
+    #[test]
+    fn hot_vault_serializes_bandwidth() {
+        // 32 PEs × 512 cold lines each, ALL inside one vault block → the
+        // vault's occupancy, not PE latency, bounds the region
+        let tasks: Vec<Task> = (0..32u64)
+            .map(|p| Task {
+                simple_ops: 1,
+                heavy_ops: 0,
+                accesses: (0..512u64)
+                    .map(|i| (((p * 512 + i) * 64) % 2048, false))
+                    .collect(),
+            })
+            .collect();
+        let r = simulate_nmc(&[Region::Parallel(tasks)]);
+        assert!(r.time_s > 0.0);
+        assert!(
+            r.vault_bound_fraction > 0.5,
+            "hot vault must dominate: {}",
+            r.vault_bound_fraction
+        );
+    }
+
+    #[test]
+    fn serial_reduction_gets_no_parallel_speedup() {
+        let regions = collect(&serial_program(1024)).unwrap();
+        let r = simulate_nmc(&regions);
+        assert!(r.parallel_fraction < 0.05);
+    }
+
+    #[test]
+    fn energy_scales_with_work() {
+        // sizes above the offload threshold so both fan out; 16x the work
+        // must cost clearly more energy (dynamic + static·time both scale)
+        let small = simulate_nmc(&collect(&map_program(2048)).unwrap());
+        let large = simulate_nmc(&collect(&map_program(32768)).unwrap());
+        assert!(
+            large.energy_j > 4.0 * small.energy_j,
+            "small {} large {}",
+            small.energy_j,
+            large.energy_j
+        );
+    }
+}

@@ -1,0 +1,580 @@
+//! Task-trace collection: turns the single-threaded instrumentation stream
+//! into the *region/task* form both machine models consume (the "Pin trace
+//! fed to Ramulator" of paper §III-A).
+//!
+//! Regions are barrier-separated phases:
+//! * [`Region::Parallel`] — one loop invocation whose iterations have no
+//!   cross-iteration register/memory dependences (induction registers
+//!   excluded — the PBBLP criterion). Its tasks (= iterations, including
+//!   everything nested inside them) may spread across the 32 NMC PEs.
+//! * [`Region::Serial`] — everything else, in trace order.
+//!
+//! Dependences are tracked at **every** nesting level simultaneously, and
+//! parallelism is harvested at the *outermost* level that qualifies: an
+//! outer loop whose iterations are independent becomes one parallel region
+//! of whole-iteration tasks (atax rows, kmeans points, bfs sweep nodes);
+//! when an outer level is serial, the collector recurses and still
+//! recovers inner parallel loops (gramschmidt's column updates inside the
+//! serial k loop). Reads of data written before an invocation opened never
+//! count as cross-iteration dependences, and write-after-write without an
+//! intervening read is allowed (commutative flag/accumulator stores).
+//!
+//! This is how "each processing unit operates on the data assigned to that
+//! vault" becomes concrete for a single-threaded source trace: only
+//! provably data-parallel loops fan out; everything else runs on one PE.
+//! The host model runs the same stream fully serialized, so both machines
+//! execute identical dynamic work.
+
+use std::collections::HashMap;
+use crate::util::FastMap;
+
+use crate::analysis::dataflow::MEM_GRANULE_SHIFT;
+use crate::interp::{Instrument, TraceEvent};
+use crate::ir::{BlockId, LoopInfo, Program, Reg};
+
+/// One schedulable unit of work (a loop iteration or serial glue).
+#[derive(Debug, Clone, Default)]
+pub struct Task {
+    pub simple_ops: u64,
+    pub heavy_ops: u64,
+    /// (address, is_store) in execution order.
+    pub accesses: Vec<(u64, bool)>,
+}
+
+impl Task {
+    pub fn instrs(&self) -> u64 {
+        self.simple_ops + self.heavy_ops + self.accesses.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs() == 0
+    }
+
+    pub fn merge(&mut self, other: Task) {
+        self.simple_ops += other.simple_ops;
+        self.heavy_ops += other.heavy_ops;
+        self.accesses.extend(other.accesses);
+    }
+}
+
+/// A barrier-separated execution phase.
+#[derive(Debug, Clone)]
+pub enum Region {
+    Serial(Task),
+    /// Iterations of one data-parallel loop invocation (tasks include all
+    /// nested work).
+    Parallel(Vec<Task>),
+}
+
+impl Region {
+    pub fn instrs(&self) -> u64 {
+        match self {
+            Region::Serial(t) => t.instrs(),
+            Region::Parallel(ts) => ts.iter().map(|t| t.instrs()).sum(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// region tree (built during the run, flattened at finalize)
+
+#[derive(Debug)]
+enum TNode {
+    Glue(Task),
+    Loop {
+        parallel: bool,
+        /// iterations[i] = the nodes executed during iteration i.
+        iterations: Vec<Vec<TNode>>,
+    },
+}
+
+fn merge_into(task: &mut Task, nodes: Vec<TNode>) {
+    for n in nodes {
+        match n {
+            TNode::Glue(t) => task.merge(t),
+            TNode::Loop { iterations, .. } => {
+                for it in iterations {
+                    merge_into(task, it);
+                }
+            }
+        }
+    }
+}
+
+fn node_instrs(n: &TNode) -> u64 {
+    match n {
+        TNode::Glue(t) => t.instrs(),
+        TNode::Loop { iterations, .. } => iterations
+            .iter()
+            .map(|it| it.iter().map(node_instrs).sum::<u64>())
+            .sum(),
+    }
+}
+
+fn flatten(nodes: Vec<TNode>, serial_acc: &mut Task, out: &mut Vec<Region>) {
+    for n in nodes {
+        match n {
+            TNode::Glue(t) => serial_acc.merge(t),
+            TNode::Loop { parallel, iterations } => {
+                // offload threshold: fanning a loop across PEs costs a
+                // barrier and cold caches; a real runtime keeps tiny loops
+                // on one core. Loops below the threshold stay serial.
+                let work: u64 = iterations
+                    .iter()
+                    .map(|it| it.iter().map(node_instrs).sum::<u64>())
+                    .sum();
+                if parallel && iterations.len() >= 4 && work >= 2048 {
+                    if !serial_acc.is_empty() {
+                        out.push(Region::Serial(std::mem::take(serial_acc)));
+                    }
+                    let tasks: Vec<Task> = iterations
+                        .into_iter()
+                        .map(|it| {
+                            let mut t = Task::default();
+                            merge_into(&mut t, it);
+                            t
+                        })
+                        .filter(|t| !t.is_empty())
+                        .collect();
+                    if !tasks.is_empty() {
+                        out.push(Region::Parallel(tasks));
+                    }
+                } else {
+                    // serial loop: recurse — inner parallel loops re-emerge
+                    for it in iterations {
+                        flatten(it, serial_acc, out);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// collector
+
+struct Frame {
+    loop_idx: usize,
+    /// Work before the first body entry (initial header evaluation) —
+    /// emitted as serial glue ahead of the loop node.
+    preamble: Task,
+    /// Completed iterations (each a node list).
+    iterations: Vec<Vec<TNode>>,
+    /// Node list of the currently open iteration (None between iterations).
+    open: Option<Vec<TNode>>,
+    /// Glue accumulator inside the open iteration.
+    glue: Task,
+    dep_found: bool,
+    reg_writer: FastMap<Reg, u64>,
+    mem_writer: FastMap<u64, u64>,
+}
+
+impl Frame {
+    fn new(loop_idx: usize) -> Frame {
+        Frame {
+            loop_idx,
+            preamble: Task::default(),
+            iterations: Vec::new(),
+            open: None,
+            glue: Task::default(),
+            dep_found: false,
+            reg_writer: FastMap::default(),
+            mem_writer: FastMap::default(),
+        }
+    }
+
+    fn iter_idx(&self) -> u64 {
+        self.iterations.len() as u64
+    }
+
+    fn flush_glue(&mut self) {
+        if !self.glue.is_empty() {
+            let t = std::mem::take(&mut self.glue);
+            if let Some(open) = self.open.as_mut() {
+                open.push(TNode::Glue(t));
+            } else if let Some(last) = self.iterations.last_mut() {
+                // between-iterations header evaluation (~the loop cmp):
+                // charge it to the previous iteration
+                last.push(TNode::Glue(t));
+            } else {
+                // before the first body entry: serial preamble
+                self.preamble.merge(t);
+            }
+        }
+    }
+
+    fn close_iteration(&mut self) {
+        self.flush_glue();
+        if let Some(nodes) = self.open.take() {
+            self.iterations.push(nodes);
+        }
+    }
+}
+
+/// Streaming collector (an [`Instrument`]).
+pub struct TaskTraceCollector {
+    header_of: HashMap<BlockId, usize>,
+    loops: Vec<LoopInfo>,
+    stack: Vec<Frame>,
+    /// Top-level nodes (no loop active).
+    root: Vec<TNode>,
+    root_glue: Task,
+}
+
+impl TaskTraceCollector {
+    pub fn new(prog: &Program) -> Self {
+        TaskTraceCollector {
+            header_of: prog
+                .loops
+                .iter()
+                .enumerate()
+                .map(|(i, l)| (l.header, i))
+                .collect(),
+            loops: prog.loops.clone(),
+            stack: Vec::new(),
+            root: Vec::new(),
+            root_glue: Task::default(),
+        }
+    }
+
+    fn flush_root_glue(&mut self) {
+        if !self.root_glue.is_empty() {
+            let t = std::mem::take(&mut self.root_glue);
+            self.root.push(TNode::Glue(t));
+        }
+    }
+
+    fn pop_frame(&mut self) {
+        let mut f = self.stack.pop().expect("loop stack underflow");
+        f.close_iteration();
+        let mut nodes = Vec::with_capacity(2);
+        if !f.preamble.is_empty() {
+            nodes.push(TNode::Glue(std::mem::take(&mut f.preamble)));
+        }
+        nodes.push(TNode::Loop {
+            parallel: !f.dep_found,
+            iterations: f.iterations,
+        });
+        match self.stack.last_mut() {
+            Some(parent) => {
+                parent.flush_glue();
+                match parent.open.as_mut() {
+                    Some(open) => open.extend(nodes),
+                    None => {
+                        // inner loop ran during parent header evaluation —
+                        // cannot happen with the structured builder, but
+                        // stay safe: attach to the last parent iteration
+                        if let Some(last) = parent.iterations.last_mut() {
+                            last.extend(nodes);
+                        } else {
+                            parent.preamble = {
+                                let mut t = std::mem::take(&mut parent.preamble);
+                                merge_into(&mut t, nodes);
+                                t
+                            };
+                        }
+                    }
+                }
+            }
+            None => {
+                self.flush_root_glue();
+                self.root.extend(nodes);
+            }
+        }
+    }
+
+    /// Finish collection and flatten the tree into regions.
+    pub fn finalize(mut self) -> Vec<Region> {
+        while !self.stack.is_empty() {
+            self.pop_frame();
+        }
+        self.flush_root_glue();
+        let mut out = Vec::new();
+        let mut acc = Task::default();
+        flatten(std::mem::take(&mut self.root), &mut acc, &mut out);
+        if !acc.is_empty() {
+            out.push(Region::Serial(acc));
+        }
+        out
+    }
+
+    #[inline]
+    fn cur_task(&mut self) -> &mut Task {
+        match self.stack.last_mut() {
+            Some(f) if f.open.is_some() => &mut f.glue,
+            Some(f) => &mut f.glue, // header evaluation: flushed on close
+            None => &mut self.root_glue,
+        }
+    }
+}
+
+impl Instrument for TaskTraceCollector {
+    fn on_event(&mut self, ev: &TraceEvent) {
+        match ev {
+            TraceEvent::BlockEnter { block } => {
+                if let Some(top) = self.stack.last_mut() {
+                    let li = self.loops[top.loop_idx];
+                    if *block == li.header {
+                        top.close_iteration();
+                        return;
+                    }
+                    if *block == li.body {
+                        top.flush_glue(); // header glue → previous iteration
+                        top.open = Some(Vec::new());
+                        return;
+                    }
+                    if *block == li.exit {
+                        self.pop_frame();
+                        return;
+                    }
+                }
+                if let Some(&idx) = self.header_of.get(block) {
+                    self.stack.push(Frame::new(idx));
+                }
+            }
+            TraceEvent::Instr(i) => {
+                let heavy = matches!(
+                    i.op,
+                    crate::ir::Op::Div
+                        | crate::ir::Op::Rem
+                        | crate::ir::Op::FDiv
+                        | crate::ir::Op::FSqrt
+                        | crate::ir::Op::FExp
+                );
+                let mem = i.mem;
+
+                // dependence bookkeeping on EVERY active frame: iteration
+                // index differs per level (an outer iteration spans many
+                // inner ones)
+                for (level, f) in self.stack.iter_mut().enumerate() {
+                    let _ = level;
+                    if f.open.is_none() {
+                        // header evaluation of this frame: attribute to the
+                        // frame's previous iteration for dep purposes (the
+                        // cmp reads the counter only, which is excluded)
+                    }
+                    let counter = self.loops[f.loop_idx].counter;
+                    let cur = f.iter_idx();
+                    for &s in i.sources() {
+                        if s != counter {
+                            if let Some(&j) = f.reg_writer.get(&s) {
+                                if j != cur {
+                                    f.dep_found = true;
+                                }
+                            }
+                        }
+                    }
+                    if let Some(m) = mem {
+                        let g = m.addr >> MEM_GRANULE_SHIFT;
+                        if m.is_store {
+                            f.mem_writer.insert(g, cur);
+                        } else if let Some(&j) = f.mem_writer.get(&g) {
+                            if j != cur {
+                                f.dep_found = true;
+                            }
+                        }
+                    }
+                    if let Some(d) = i.dst {
+                        if d != counter {
+                            f.reg_writer.insert(d, cur);
+                        }
+                    }
+                }
+
+                let task = self.cur_task();
+                if let Some(m) = mem {
+                    task.accesses.push((m.addr, m.is_store));
+                } else if heavy {
+                    task.heavy_ops += 1;
+                } else {
+                    task.simple_ops += 1;
+                }
+            }
+            TraceEvent::Branch { .. } => {}
+        }
+    }
+}
+
+/// Convenience: run a program and collect its region trace.
+pub fn collect(prog: &Program) -> anyhow::Result<Vec<Region>> {
+    let mut c = TaskTraceCollector::new(prog);
+    crate::interp::run_program(prog, &mut c)?;
+    Ok(c.finalize())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+
+    fn parallel_sizes(regions: &[Region]) -> Vec<usize> {
+        regions
+            .iter()
+            .filter_map(|r| match r {
+                Region::Parallel(ts) => Some(ts.len()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_map_yields_parallel_region() {
+        let mut b = ProgramBuilder::new("map");
+        let a = b.alloc_f64("a", 512);
+        let n = b.const_i(512);
+        let c = b.const_f(2.0);
+        b.counted_loop(n, |b, i| {
+            b.store_f64(a, i, c);
+        });
+        let regions = collect(&b.finish(None)).unwrap();
+        assert_eq!(parallel_sizes(&regions), vec![512]);
+    }
+
+    #[test]
+    fn tiny_parallel_loops_stay_serial() {
+        // below the offload threshold a data-parallel loop is NOT fanned
+        // out (barrier + cold caches would cost more than it saves)
+        let mut b = ProgramBuilder::new("tiny");
+        let a = b.alloc_f64("a", 8);
+        let n = b.const_i(8);
+        let c = b.const_f(2.0);
+        b.counted_loop(n, |b, i| {
+            b.store_f64(a, i, c);
+        });
+        let regions = collect(&b.finish(None)).unwrap();
+        assert!(parallel_sizes(&regions).is_empty());
+    }
+
+    #[test]
+    fn reduction_stays_serial() {
+        let mut b = ProgramBuilder::new("red");
+        let a = b.alloc_f64("a", 64);
+        let acc = b.const_f(0.0);
+        let n = b.const_i(64);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(a, i);
+            let s = b.fadd(acc, v);
+            b.assign(acc, s);
+        });
+        let regions = collect(&b.finish(Some(acc))).unwrap();
+        assert!(regions.iter().all(|r| matches!(r, Region::Serial(_))));
+    }
+
+    #[test]
+    fn outer_parallel_loop_with_inner_reduction_fans_out_at_outer_level() {
+        // tmp[i] = Σ_j A[i][j]·x[j] : the atax-phase-1 shape. The inner
+        // reduction is serial, but outer iterations are independent — the
+        // region must be ONE Parallel with n whole-row tasks.
+        let n = 16usize;
+        let mut b = ProgramBuilder::new("rows");
+        let a = b.alloc_f64("A", n * n);
+        let x = b.alloc_f64("x", n);
+        let tmp = b.alloc_f64("tmp", n);
+        let nn = b.const_i(n as i64);
+        b.counted_loop(nn, |b, i| {
+            let acc = b.const_f(0.0);
+            b.counted_loop(nn, |b, j| {
+                let aij = b.load_f64_2d(a, i, j, n as i64);
+                let xj = b.load_f64(x, j);
+                let p = b.fmul(aij, xj);
+                let s = b.fadd(acc, p);
+                b.assign(acc, s);
+            });
+            b.store_f64(tmp, i, acc);
+        });
+        let regions = collect(&b.finish(None)).unwrap();
+        assert_eq!(parallel_sizes(&regions), vec![n]);
+        // each task carries the whole inner loop (n loads of A + x + ...)
+        if let Some(Region::Parallel(ts)) = regions
+            .iter()
+            .find(|r| matches!(r, Region::Parallel(_)))
+        {
+            assert!(ts[0].accesses.len() >= 2 * n);
+        }
+    }
+
+    #[test]
+    fn serial_outer_recovers_inner_parallel() {
+        // for k { for i { b[i] = a[i] * k } ; s += b[0] } — the outer loop
+        // chains through s, the inner map is parallel each time.
+        let n = 256usize;
+        let m = 5usize;
+        let mut b = ProgramBuilder::new("nest");
+        let aa = b.alloc_f64("a", n);
+        let bb = b.alloc_f64("b", n);
+        let s = b.const_f(0.0);
+        let mm = b.const_i(m as i64);
+        let nn = b.const_i(n as i64);
+        let zero = b.const_i(0);
+        b.counted_loop(mm, |b, k| {
+            let kf = b.itof(k);
+            b.counted_loop(nn, |b, i| {
+                let v = b.load_f64(aa, i);
+                let w = b.fmul(v, kf);
+                b.store_f64(bb, i, w);
+            });
+            let b0 = b.load_f64(bb, zero);
+            let t = b.fadd(s, b0);
+            b.assign(s, t);
+        });
+        let regions = collect(&b.finish(Some(s))).unwrap();
+        // outer is serial (s chain + b[0] read of inner writes), inner maps
+        // re-emerge: m parallel regions of n tasks
+        assert_eq!(parallel_sizes(&regions), vec![n; m]);
+    }
+
+    #[test]
+    fn write_write_collisions_without_reads_stay_parallel() {
+        // every iteration stores to flag[0] (bfs's `over` flag) but nobody
+        // reads it inside the loop → still parallel
+        let mut b = ProgramBuilder::new("flag");
+        let a = b.alloc_f64("a", 512);
+        let flag = b.alloc_i64("flag", 1);
+        let n = b.const_i(512);
+        let zero = b.const_i(0);
+        let one = b.const_i(1);
+        b.counted_loop(n, |b, i| {
+            let c = b.const_f(1.0);
+            b.store_f64(a, i, c);
+            b.store_i64(flag, zero, one);
+        });
+        let regions = collect(&b.finish(None)).unwrap();
+        assert_eq!(parallel_sizes(&regions), vec![512]);
+    }
+
+    #[test]
+    fn read_of_other_iterations_write_serializes() {
+        // a[i+1] read... written by next iter? make a[i] = a[i-1]+1 chain
+        let mut b = ProgramBuilder::new("chain");
+        let a = b.alloc_f64("a", 33);
+        let n = b.const_i(32);
+        let one = b.const_i(1);
+        let f1 = b.const_f(1.0);
+        b.counted_loop(n, |b, i| {
+            let prev = b.load_f64(a, i);
+            let v = b.fadd(prev, f1);
+            let ip1 = b.add(i, one);
+            b.store_f64(a, ip1, v);
+        });
+        let regions = collect(&b.finish(None)).unwrap();
+        assert!(parallel_sizes(&regions).is_empty());
+    }
+
+    #[test]
+    fn work_is_conserved() {
+        let mut b = ProgramBuilder::new("w");
+        let a = b.alloc_f64("a", 32);
+        let n = b.const_i(32);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(a, i);
+            let w = b.fadd(v, v);
+            b.store_f64(a, i, w);
+        });
+        let p = b.finish(None);
+        let mut c = TaskTraceCollector::new(&p);
+        let (out, _) = crate::interp::run_program(&p, &mut c).unwrap();
+        let regions = c.finalize();
+        let total: u64 = regions.iter().map(|r| r.instrs()).sum();
+        assert_eq!(total, out.stats.dyn_instrs);
+    }
+}

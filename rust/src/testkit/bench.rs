@@ -1,0 +1,128 @@
+//! Criterion-less benchmark harness (no criterion in the offline vendor
+//! set): warmup + timed iterations, median / MAD / min reporting, and
+//! throughput helpers. Used by every target in `benches/`.
+
+use std::time::Instant;
+
+use crate::util::stats::{mad, median};
+
+/// One measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall times in seconds.
+    pub samples: Vec<f64>,
+    /// Optional work units per iteration (for throughput lines).
+    pub units: Option<(u64, &'static str)>,
+}
+
+impl Measurement {
+    pub fn median_s(&self) -> f64 {
+        median(&self.samples)
+    }
+
+    pub fn report(&self) -> String {
+        let med = self.median_s();
+        let spread = mad(&self.samples);
+        let min = self.samples.iter().cloned().fold(f64::MAX, f64::min);
+        let mut line = format!(
+            "{:<44} {:>12}  median {:>10}  mad {:>9}  min {:>10}",
+            self.name,
+            format!("{} iters", self.iters),
+            fmt_time(med),
+            fmt_time(spread),
+            fmt_time(min),
+        );
+        if let Some((units, label)) = self.units {
+            let rate = units as f64 / med;
+            line.push_str(&format!("  {:>12}/s {}", fmt_count(rate), label));
+        }
+        line
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+fn fmt_count(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.0}")
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` samples.
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    units: Option<(u64, &'static str)>,
+    mut f: impl FnMut() -> T,
+) -> Measurement {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        samples,
+        units,
+    };
+    println!("{}", m.report());
+    m
+}
+
+/// Scale factor for bench workloads: `PISA_BENCH_SCALE` env (default 0.25 —
+/// full-figure regeneration at paper-shape-preserving size in tens of
+/// seconds; set 1.0 to reproduce EXPERIMENTS.md numbers exactly).
+pub fn bench_scale() -> f64 {
+    std::env::var("PISA_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_formats() {
+        let m = bench("noop", 1, 5, Some((1000, "ops")), || {
+            std::hint::black_box(42u64.wrapping_mul(7))
+        });
+        assert_eq!(m.iters, 5);
+        assert!(m.median_s() < 0.1);
+        assert!(m.report().contains("ops"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.500s");
+        assert_eq!(fmt_time(2.5e-3), "2.500ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500us");
+        assert_eq!(fmt_time(5e-9), "5.0ns");
+        assert_eq!(fmt_count(3.2e6), "3.20M");
+    }
+}

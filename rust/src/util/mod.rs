@@ -1,0 +1,12 @@
+//! Shared utilities: deterministic RNG, statistics, JSON output.
+
+pub mod fenwick;
+pub mod fxhash;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use fenwick::Fenwick;
+pub use fxhash::{FastMap, FastSet};
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,194 @@
+//! The evaluated benchmark kernels (paper §III-B, Table 2): nine Polybench
+//! kernels (atax, gemver, gesummv, cholesky, gramschmidt, lu, mvt, syrk,
+//! trmm) and three Rodinia kernels (bfs, bp/backprop, kmeans), authored
+//! against the mini-IR [`crate::ir::ProgramBuilder`] (the clang+opt step of
+//! the PISA flow) and each validated against a native-Rust oracle.
+//!
+//! Dataset scaling: the paper profiles smaller datasets than it simulates
+//! ("the analysis trend is similar for different dataset sizes", §IV-B);
+//! `default_n` values here are scaled to keep a full-suite profiling run
+//! interactive while preserving each kernel's access-pattern signature. The
+//! paper's Table 2 parameters are retained in [`KernelInfo::paper_value`]
+//! and reproduced by `pisa-nmc table 2`.
+
+pub mod polybench;
+pub mod rodinia;
+
+use anyhow::{bail, Result};
+
+use crate::interp::{run_program, NullInstrument};
+use crate::ir::Program;
+
+/// Benchmark suite of origin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suite {
+    Polybench,
+    Rodinia,
+}
+
+impl Suite {
+    pub fn name(self) -> &'static str {
+        match self {
+            Suite::Polybench => "polybench",
+            Suite::Rodinia => "rodinia",
+        }
+    }
+}
+
+/// Static description of a kernel (Table 2 row).
+#[derive(Debug, Clone)]
+pub struct KernelInfo {
+    pub name: &'static str,
+    pub suite: Suite,
+    /// Table 2 "Param." column.
+    pub param_name: &'static str,
+    /// Table 2 "Values" column (the paper's simulated size).
+    pub paper_value: &'static str,
+    /// One-line description for docs/reports.
+    pub summary: &'static str,
+}
+
+/// A runnable, verifiable benchmark kernel.
+pub trait Kernel: Send + Sync {
+    fn info(&self) -> KernelInfo;
+
+    /// Construct the IR program for problem size `n` with data generated
+    /// deterministically from `seed`.
+    fn build(&self, n: usize, seed: u64) -> Program;
+
+    /// Default problem size at scale 1.0 (chosen for ~10⁵–10⁷ dynamic
+    /// instructions; see module docs).
+    fn default_n(&self) -> usize;
+
+    /// Run the IR program and compare its output buffers against a
+    /// native-Rust implementation on identical inputs. Returns the max
+    /// absolute error (should be ~0: both paths execute identical f64 op
+    /// sequences).
+    fn validate(&self, n: usize, seed: u64) -> Result<f64>;
+}
+
+/// Problem size after applying the CLI scale factor.
+pub fn scaled_n(k: &dyn Kernel, scale: f64) -> usize {
+    ((k.default_n() as f64 * scale).round() as usize).max(4)
+}
+
+/// All 12 kernels in the paper's presentation order.
+pub fn registry() -> Vec<Box<dyn Kernel>> {
+    vec![
+        Box::new(polybench::atax::Atax),
+        Box::new(polybench::gemver::Gemver),
+        Box::new(polybench::gesummv::Gesummv),
+        Box::new(polybench::cholesky::Cholesky),
+        Box::new(polybench::gramschmidt::Gramschmidt),
+        Box::new(polybench::lu::Lu),
+        Box::new(polybench::mvt::Mvt),
+        Box::new(polybench::syrk::Syrk),
+        Box::new(polybench::trmm::Trmm),
+        Box::new(rodinia::bfs::Bfs),
+        Box::new(rodinia::bp::Backprop),
+        Box::new(rodinia::kmeans::Kmeans),
+    ]
+}
+
+/// Look a kernel up by name.
+pub fn by_name(name: &str) -> Result<Box<dyn Kernel>> {
+    for k in registry() {
+        if k.info().name == name {
+            return Ok(k);
+        }
+    }
+    bail!(
+        "unknown kernel '{name}' (available: {})",
+        registry()
+            .iter()
+            .map(|k| k.info().name)
+            .collect::<Vec<_>>()
+            .join(", ")
+    )
+}
+
+/// Helper shared by the kernels' `validate` implementations: run `prog`
+/// uninstrumented and read back the named f64 buffer.
+pub(crate) fn run_and_read(prog: &Program, buffer: &str) -> Result<Vec<f64>> {
+    let (_, machine) = run_program(prog, &mut NullInstrument)?;
+    let buf = prog
+        .buffer(buffer)
+        .ok_or_else(|| anyhow::anyhow!("no buffer {buffer}"))?;
+    machine
+        .mem
+        .read_f64_slice(buf.base, (buf.len_bytes / 8) as usize)
+}
+
+/// Max |a - b| over two slices (oracle comparisons).
+pub(crate) fn max_abs_err(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "oracle length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_twelve() {
+        let names: Vec<_> = registry().iter().map(|k| k.info().name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "atax",
+                "gemver",
+                "gesummv",
+                "cholesky",
+                "gramschmidt",
+                "lu",
+                "mvt",
+                "syrk",
+                "trmm",
+                "bfs",
+                "bp",
+                "kmeans"
+            ]
+        );
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("atax").is_ok());
+        assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn every_kernel_program_verifies() {
+        for k in registry() {
+            let p = k.build(8, 1);
+            crate::ir::verify::verify_ok(&p);
+        }
+    }
+
+    /// The core oracle gate: every kernel's IR execution must match its
+    /// native implementation exactly-ish at two sizes and seeds.
+    #[test]
+    fn every_kernel_validates_small() {
+        for k in registry() {
+            for (n, seed) in [(6, 1u64), (13, 99u64)] {
+                let err = k
+                    .validate(n, seed)
+                    .unwrap_or_else(|e| panic!("{} failed: {e}", k.info().name));
+                assert!(
+                    err < 1e-9,
+                    "{} n={n} seed={seed}: max err {err}",
+                    k.info().name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_n_floors() {
+        let k = by_name("atax").unwrap();
+        assert!(scaled_n(k.as_ref(), 1e-9) >= 4);
+    }
+}

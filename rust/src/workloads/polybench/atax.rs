@@ -1,0 +1,111 @@
+//! atax: y = Aᵀ·(A·x) — matrix-transpose-vector product chain.
+//!
+//! The second phase walks A by columns through the row-major layout
+//! (stride-n accesses), a classic mixed-locality pattern.
+
+use anyhow::Result;
+
+use super::gen_vec;
+use crate::ir::{Program, ProgramBuilder};
+use crate::util::Rng;
+use crate::workloads::{max_abs_err, run_and_read, Kernel, KernelInfo, Suite};
+
+pub struct Atax;
+
+fn gen(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed ^ 0xA7A8);
+    (gen_vec(&mut rng, n * n), gen_vec(&mut rng, n))
+}
+
+fn native(n: usize, a: &[f64], x: &[f64]) -> Vec<f64> {
+    let mut tmp = vec![0.0; n];
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += a[i * n + j] * x[j];
+        }
+        tmp[i] = acc;
+    }
+    for i in 0..n {
+        for j in 0..n {
+            y[j] += a[i * n + j] * tmp[i];
+        }
+    }
+    y
+}
+
+impl Kernel for Atax {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            name: "atax",
+            suite: Suite::Polybench,
+            param_name: "dimensions",
+            paper_value: "8000",
+            summary: "y = A^T (A x)",
+        }
+    }
+
+    fn default_n(&self) -> usize {
+        640
+    }
+
+    fn build(&self, n: usize, seed: u64) -> Program {
+        let (a, x) = gen(n, seed);
+        let mut b = ProgramBuilder::new("atax");
+        let a_buf = b.alloc_f64_init("A", &a);
+        let x_buf = b.alloc_f64_init("x", &x);
+        let tmp_buf = b.alloc_f64("tmp", n);
+        let y_buf = b.alloc_f64("y", n);
+        let nn = b.const_i(n as i64);
+
+        // tmp[i] = Σ_j A[i][j]·x[j]
+        b.counted_loop(nn, |b, i| {
+            let acc = b.const_f(0.0);
+            b.counted_loop(nn, |b, j| {
+                let aij = b.load_f64_2d(a_buf, i, j, n as i64);
+                let xj = b.load_f64(x_buf, j);
+                let p = b.fmul(aij, xj);
+                let s = b.fadd(acc, p);
+                b.assign(acc, s);
+            });
+            b.store_f64(tmp_buf, i, acc);
+        });
+        // y[j] += A[i][j]·tmp[i]  (column updates: stride-n writes)
+        b.counted_loop(nn, |b, i| {
+            let ti = b.load_f64(tmp_buf, i);
+            b.counted_loop(nn, |b, j| {
+                let aij = b.load_f64_2d(a_buf, i, j, n as i64);
+                let yj = b.load_f64(y_buf, j);
+                let p = b.fmul(aij, ti);
+                let s = b.fadd(yj, p);
+                b.store_f64(y_buf, j, s);
+            });
+        });
+        b.finish(None)
+    }
+
+    fn validate(&self, n: usize, seed: u64) -> Result<f64> {
+        let (a, x) = gen(n, seed);
+        let prog = self.build(n, seed);
+        let got = run_and_read(&prog, "y")?;
+        Ok(max_abs_err(&got, &native(n, &a, &x)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_match() {
+        assert!(Atax.validate(17, 3).unwrap() < 1e-12);
+    }
+
+    #[test]
+    fn known_small_case() {
+        // n=2, A=[[1,2],[3,4]], x=[1,1] → Ax=[3,7], AᵀAx=[1·3+3·7, 2·3+4·7]=[24, 34]
+        let y = native(2, &[1.0, 2.0, 3.0, 4.0], &[1.0, 1.0]);
+        assert_eq!(y, vec![24.0, 34.0]);
+    }
+}

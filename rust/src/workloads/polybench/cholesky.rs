@@ -1,0 +1,134 @@
+//! cholesky: in-place A = L·Lᵀ factorization of an SPD matrix.
+//!
+//! Strongly serial (each column depends on all previous) with triangular
+//! loop bounds — the paper's example of a high-spatial-locality kernel that
+//! *still* benefits from NMC.
+
+use anyhow::Result;
+
+use super::spd_matrix;
+use crate::ir::{Program, ProgramBuilder};
+use crate::util::Rng;
+use crate::workloads::{run_and_read, Kernel, KernelInfo, Suite};
+
+pub struct Cholesky;
+
+fn gen(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0xC401);
+    spd_matrix(&mut rng, n)
+}
+
+fn native(n: usize, a0: &[f64]) -> Vec<f64> {
+    let mut a = a0.to_vec();
+    for i in 0..n {
+        for j in 0..i {
+            for k in 0..j {
+                a[i * n + j] -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] /= a[j * n + j];
+        }
+        for k in 0..i {
+            a[i * n + i] -= a[i * n + k] * a[i * n + k];
+        }
+        a[i * n + i] = a[i * n + i].sqrt();
+    }
+    a
+}
+
+impl Kernel for Cholesky {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            name: "cholesky",
+            suite: Suite::Polybench,
+            param_name: "dimensions",
+            paper_value: "2000",
+            summary: "in-place LL^T factorization",
+        }
+    }
+
+    fn default_n(&self) -> usize {
+        160
+    }
+
+    fn build(&self, n: usize, seed: u64) -> Program {
+        let a0 = gen(n, seed);
+        let ni = n as i64;
+        let mut b = ProgramBuilder::new("cholesky");
+        let a_buf = b.alloc_f64_init("A", &a0);
+        let nn = b.const_i(ni);
+        let zero = b.const_i(0);
+
+        b.counted_loop(nn, |b, i| {
+            // for j in 0..i
+            b.loop_range(zero, i, |b, j| {
+                let acc = b.load_f64_2d(a_buf, i, j, ni);
+                b.loop_range(zero, j, |b, k| {
+                    let aik = b.load_f64_2d(a_buf, i, k, ni);
+                    let ajk = b.load_f64_2d(a_buf, j, k, ni);
+                    let p = b.fmul(aik, ajk);
+                    let s = b.fsub(acc, p);
+                    b.assign(acc, s);
+                });
+                let ajj = b.load_f64_2d(a_buf, j, j, ni);
+                let q = b.fdiv(acc, ajj);
+                b.store_f64_2d(a_buf, i, j, ni, q);
+            });
+            // diagonal
+            let acc = b.load_f64_2d(a_buf, i, i, ni);
+            b.loop_range(zero, i, |b, k| {
+                let aik = b.load_f64_2d(a_buf, i, k, ni);
+                let p = b.fmul(aik, aik);
+                let s = b.fsub(acc, p);
+                b.assign(acc, s);
+            });
+            let r = b.fsqrt(acc);
+            b.store_f64_2d(a_buf, i, i, ni, r);
+        });
+        b.finish(None)
+    }
+
+    fn validate(&self, n: usize, seed: u64) -> Result<f64> {
+        let a0 = gen(n, seed);
+        let got = run_and_read(&self.build(n, seed), "A")?;
+        // compare the lower triangle (upper is untouched input)
+        let want = native(n, &a0);
+        let mut err = 0.0f64;
+        for i in 0..n {
+            for j in 0..=i {
+                err = err.max((got[i * n + j] - want[i * n + j]).abs());
+            }
+        }
+        Ok(err)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_match() {
+        assert!(Cholesky.validate(12, 15).unwrap() < 1e-9);
+    }
+
+    #[test]
+    fn factor_reconstructs_input() {
+        let n = 8;
+        let a0 = gen(n, 2);
+        let l = native(n, &a0);
+        // L·Lᵀ ≈ A₀
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..=i.min(j) {
+                    s += l[i * n + k] * l[j * n + k];
+                }
+                assert!(
+                    (s - a0[i * n + j]).abs() < 1e-8,
+                    "({i},{j}): {s} vs {}",
+                    a0[i * n + j]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! gesummv: y = α·A·x + β·B·x — two dense MV products, summed.
+
+use anyhow::Result;
+
+use super::gen_vec;
+use crate::ir::{Program, ProgramBuilder};
+use crate::util::Rng;
+use crate::workloads::{max_abs_err, run_and_read, Kernel, KernelInfo, Suite};
+
+pub struct Gesummv;
+
+const ALPHA: f64 = 1.5;
+const BETA: f64 = 1.2;
+
+fn gen(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed ^ 0x9E55);
+    (
+        gen_vec(&mut rng, n * n),
+        gen_vec(&mut rng, n * n),
+        gen_vec(&mut rng, n),
+    )
+}
+
+fn native(n: usize, a: &[f64], bm: &[f64], x: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut ta = 0.0;
+        let mut tb = 0.0;
+        for j in 0..n {
+            ta += a[i * n + j] * x[j];
+            tb += bm[i * n + j] * x[j];
+        }
+        y[i] = ALPHA * ta + BETA * tb;
+    }
+    y
+}
+
+impl Kernel for Gesummv {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            name: "gesummv",
+            suite: Suite::Polybench,
+            param_name: "dimensions",
+            paper_value: "8000",
+            summary: "y = alpha A x + beta B x",
+        }
+    }
+
+    fn default_n(&self) -> usize {
+        448
+    }
+
+    fn build(&self, n: usize, seed: u64) -> Program {
+        let (a, bm, x) = gen(n, seed);
+        let ni = n as i64;
+        let mut b = ProgramBuilder::new("gesummv");
+        let a_buf = b.alloc_f64_init("A", &a);
+        let b_buf = b.alloc_f64_init("B", &bm);
+        let x_buf = b.alloc_f64_init("x", &x);
+        let y_buf = b.alloc_f64("y", n);
+        let nn = b.const_i(ni);
+        let alpha = b.const_f(ALPHA);
+        let beta = b.const_f(BETA);
+
+        b.counted_loop(nn, |b, i| {
+            let ta = b.const_f(0.0);
+            let tb = b.const_f(0.0);
+            b.counted_loop(nn, |b, j| {
+                let xj = b.load_f64(x_buf, j);
+                let aij = b.load_f64_2d(a_buf, i, j, ni);
+                let pa = b.fmul(aij, xj);
+                let sa = b.fadd(ta, pa);
+                b.assign(ta, sa);
+                let bij = b.load_f64_2d(b_buf, i, j, ni);
+                let pb = b.fmul(bij, xj);
+                let sb = b.fadd(tb, pb);
+                b.assign(tb, sb);
+            });
+            let at = b.fmul(alpha, ta);
+            let bt = b.fmul(beta, tb);
+            let yi = b.fadd(at, bt);
+            b.store_f64(y_buf, i, yi);
+        });
+        b.finish(None)
+    }
+
+    fn validate(&self, n: usize, seed: u64) -> Result<f64> {
+        let (a, bm, x) = gen(n, seed);
+        let got = run_and_read(&self.build(n, seed), "y")?;
+        Ok(max_abs_err(&got, &native(n, &a, &bm, &x)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_match() {
+        assert!(Gesummv.validate(14, 7).unwrap() < 1e-12);
+    }
+}

@@ -1,0 +1,130 @@
+//! lu: in-place LU factorization (no pivoting; diagonally dominant input).
+//!
+//! The paper singles lu out in the Fig-6 discussion: diagonal-matrix
+//! accesses hurt traditional CPUs, making it a borderline NMC candidate.
+
+use anyhow::Result;
+
+use super::dd_matrix;
+use crate::ir::{Program, ProgramBuilder};
+use crate::util::Rng;
+use crate::workloads::{max_abs_err, run_and_read, Kernel, KernelInfo, Suite};
+
+pub struct Lu;
+
+fn gen(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0x1001);
+    dd_matrix(&mut rng, n)
+}
+
+fn native(n: usize, a0: &[f64]) -> Vec<f64> {
+    let mut a = a0.to_vec();
+    for i in 0..n {
+        for j in 0..i {
+            for k in 0..j {
+                a[i * n + j] -= a[i * n + k] * a[k * n + j];
+            }
+            a[i * n + j] /= a[j * n + j];
+        }
+        for j in i..n {
+            for k in 0..i {
+                a[i * n + j] -= a[i * n + k] * a[k * n + j];
+            }
+        }
+    }
+    a
+}
+
+impl Kernel for Lu {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            name: "lu",
+            suite: Suite::Polybench,
+            param_name: "dimensions",
+            paper_value: "2000",
+            summary: "in-place LU factorization",
+        }
+    }
+
+    fn default_n(&self) -> usize {
+        144
+    }
+
+    fn build(&self, n: usize, seed: u64) -> Program {
+        let a0 = gen(n, seed);
+        let ni = n as i64;
+        let mut b = ProgramBuilder::new("lu");
+        let a_buf = b.alloc_f64_init("A", &a0);
+        let nn = b.const_i(ni);
+        let zero = b.const_i(0);
+
+        b.counted_loop(nn, |b, i| {
+            b.loop_range(zero, i, |b, j| {
+                let acc = b.load_f64_2d(a_buf, i, j, ni);
+                b.loop_range(zero, j, |b, k| {
+                    let aik = b.load_f64_2d(a_buf, i, k, ni);
+                    let akj = b.load_f64_2d(a_buf, k, j, ni);
+                    let p = b.fmul(aik, akj);
+                    let s = b.fsub(acc, p);
+                    b.assign(acc, s);
+                });
+                let ajj = b.load_f64_2d(a_buf, j, j, ni);
+                let q = b.fdiv(acc, ajj);
+                b.store_f64_2d(a_buf, i, j, ni, q);
+            });
+            b.loop_range(i, nn, |b, j| {
+                let acc = b.load_f64_2d(a_buf, i, j, ni);
+                b.loop_range(zero, i, |b, k| {
+                    let aik = b.load_f64_2d(a_buf, i, k, ni);
+                    let akj = b.load_f64_2d(a_buf, k, j, ni);
+                    let p = b.fmul(aik, akj);
+                    let s = b.fsub(acc, p);
+                    b.assign(acc, s);
+                });
+                b.store_f64_2d(a_buf, i, j, ni, acc);
+            });
+        });
+        b.finish(None)
+    }
+
+    fn validate(&self, n: usize, seed: u64) -> Result<f64> {
+        let a0 = gen(n, seed);
+        let got = run_and_read(&self.build(n, seed), "A")?;
+        Ok(max_abs_err(&got, &native(n, &a0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_match() {
+        assert!(Lu.validate(12, 17).unwrap() < 1e-9);
+    }
+
+    #[test]
+    fn lu_reconstructs_input() {
+        let n = 7;
+        let a0 = gen(n, 3);
+        let f = native(n, &a0);
+        // (L with unit diagonal)·U ≈ A₀
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..=i.min(j) {
+                    let l = if k == i { 1.0 } else { f[i * n + k] };
+                    let u = f[k * n + j];
+                    if k <= j && k <= i {
+                        s += l * u;
+                    }
+                }
+                assert!(
+                    (s - a0[i * n + j]).abs() < 1e-8,
+                    "({i},{j}): {s} vs {}",
+                    a0[i * n + j]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Polybench kernels (Pouchet; paper Table 2 rows 1–2).
+//!
+//! Each module holds one kernel: the IR construction (`build`), the
+//! native-Rust oracle, and kernel-specific tests. Data is generated
+//! deterministically from the seed; numerically sensitive kernels
+//! (cholesky, lu, gramschmidt) use well-conditioned inputs (SPD /
+//! diagonally dominant), as Polybench's init functions do.
+
+pub mod atax;
+pub mod cholesky;
+pub mod gemver;
+pub mod gesummv;
+pub mod gramschmidt;
+pub mod lu;
+pub mod mvt;
+pub mod syrk;
+pub mod trmm;
+
+use crate::util::Rng;
+
+/// Uniform values in [-1, 1) — generic matrix/vector payload.
+pub(crate) fn gen_vec(rng: &mut Rng, len: usize) -> Vec<f64> {
+    (0..len).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+}
+
+/// Symmetric positive-definite matrix: B·Bᵀ + n·I (cholesky input).
+pub(crate) fn spd_matrix(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let b = gen_vec(rng, n * n);
+    let mut a = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += b[i * n + k] * b[j * n + k];
+            }
+            a[i * n + j] = s;
+        }
+        a[i * n + i] += n as f64;
+    }
+    a
+}
+
+/// Row-diagonally-dominant matrix (stable LU without pivoting).
+pub(crate) fn dd_matrix(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let mut a = gen_vec(rng, n * n);
+    for i in 0..n {
+        let row_sum: f64 = (0..n).map(|j| a[i * n + j].abs()).sum();
+        a[i * n + i] = row_sum + 1.0;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spd_is_symmetric_with_large_diagonal() {
+        let mut rng = Rng::new(1);
+        let n = 8;
+        let a = spd_matrix(&mut rng, n);
+        for i in 0..n {
+            for j in 0..n {
+                assert!((a[i * n + j] - a[j * n + i]).abs() < 1e-12);
+            }
+            assert!(a[i * n + i] >= n as f64);
+        }
+    }
+
+    #[test]
+    fn dd_matrix_is_dominant() {
+        let mut rng = Rng::new(2);
+        let n = 10;
+        let a = dd_matrix(&mut rng, n);
+        for i in 0..n {
+            let off: f64 = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| a[i * n + j].abs())
+                .sum();
+            assert!(a[i * n + i].abs() > off);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! mvt: x1 += A·y1;  x2 += Aᵀ·y2 — row-major and column-major walks over
+//! the same matrix (the transposed half is the cache-hostile one).
+
+use anyhow::Result;
+
+use super::gen_vec;
+use crate::ir::{Program, ProgramBuilder};
+use crate::util::Rng;
+use crate::workloads::{max_abs_err, run_and_read, Kernel, KernelInfo, Suite};
+
+pub struct Mvt;
+
+struct Data {
+    a: Vec<f64>,
+    x1: Vec<f64>,
+    x2: Vec<f64>,
+    y1: Vec<f64>,
+    y2: Vec<f64>,
+}
+
+fn gen(n: usize, seed: u64) -> Data {
+    let mut rng = Rng::new(seed ^ 0x3717);
+    Data {
+        a: gen_vec(&mut rng, n * n),
+        x1: gen_vec(&mut rng, n),
+        x2: gen_vec(&mut rng, n),
+        y1: gen_vec(&mut rng, n),
+        y2: gen_vec(&mut rng, n),
+    }
+}
+
+fn native(n: usize, d: &Data) -> (Vec<f64>, Vec<f64>) {
+    let mut x1 = d.x1.clone();
+    let mut x2 = d.x2.clone();
+    for i in 0..n {
+        for j in 0..n {
+            x1[i] += d.a[i * n + j] * d.y1[j];
+        }
+    }
+    for i in 0..n {
+        for j in 0..n {
+            x2[i] += d.a[j * n + i] * d.y2[j];
+        }
+    }
+    (x1, x2)
+}
+
+impl Kernel for Mvt {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            name: "mvt",
+            suite: Suite::Polybench,
+            param_name: "dimensions",
+            paper_value: "2000",
+            summary: "x1 += A y1; x2 += A^T y2",
+        }
+    }
+
+    fn default_n(&self) -> usize {
+        160
+    }
+
+    fn build(&self, n: usize, seed: u64) -> Program {
+        let d = gen(n, seed);
+        let ni = n as i64;
+        let mut b = ProgramBuilder::new("mvt");
+        let a_buf = b.alloc_f64_init("A", &d.a);
+        let x1_buf = b.alloc_f64_init("x1", &d.x1);
+        let x2_buf = b.alloc_f64_init("x2", &d.x2);
+        let y1_buf = b.alloc_f64_init("y1", &d.y1);
+        let y2_buf = b.alloc_f64_init("y2", &d.y2);
+        let nn = b.const_i(ni);
+
+        b.counted_loop(nn, |b, i| {
+            let acc = b.load_f64(x1_buf, i);
+            b.counted_loop(nn, |b, j| {
+                let aij = b.load_f64_2d(a_buf, i, j, ni);
+                let yj = b.load_f64(y1_buf, j);
+                let p = b.fmul(aij, yj);
+                let s = b.fadd(acc, p);
+                b.assign(acc, s);
+            });
+            b.store_f64(x1_buf, i, acc);
+        });
+        b.counted_loop(nn, |b, i| {
+            let acc = b.load_f64(x2_buf, i);
+            b.counted_loop(nn, |b, j| {
+                let aji = b.load_f64_2d(a_buf, j, i, ni); // stride-n column walk
+                let yj = b.load_f64(y2_buf, j);
+                let p = b.fmul(aji, yj);
+                let s = b.fadd(acc, p);
+                b.assign(acc, s);
+            });
+            b.store_f64(x2_buf, i, acc);
+        });
+        b.finish(None)
+    }
+
+    fn validate(&self, n: usize, seed: u64) -> Result<f64> {
+        let d = gen(n, seed);
+        let prog = self.build(n, seed);
+        let got1 = run_and_read(&prog, "x1")?;
+        let got2 = run_and_read(&prog, "x2")?;
+        let (w1, w2) = native(n, &d);
+        Ok(max_abs_err(&got1, &w1).max(max_abs_err(&got2, &w2)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_match() {
+        assert!(Mvt.validate(12, 9).unwrap() < 1e-12);
+    }
+}

@@ -1,0 +1,106 @@
+//! trmm: B = α·Aᵀ·B with A unit lower triangular (Polybench 4.2 variant):
+//! B[i][j] += Σ_{k>i} A[k][i]·B[k][j]; B[i][j] *= α.
+
+use anyhow::Result;
+
+use super::gen_vec;
+use crate::ir::{Program, ProgramBuilder};
+use crate::util::Rng;
+use crate::workloads::{max_abs_err, run_and_read, Kernel, KernelInfo, Suite};
+
+pub struct Trmm;
+
+const ALPHA: f64 = 1.5;
+
+fn gen(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed ^ 0x7233);
+    (gen_vec(&mut rng, n * n), gen_vec(&mut rng, n * n))
+}
+
+fn native(n: usize, a: &[f64], b0: &[f64]) -> Vec<f64> {
+    let mut b = b0.to_vec();
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = b[i * n + j];
+            for k in i + 1..n {
+                acc += a[k * n + i] * b[k * n + j];
+            }
+            b[i * n + j] = ALPHA * acc;
+        }
+    }
+    b
+}
+
+impl Kernel for Trmm {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            name: "trmm",
+            suite: Suite::Polybench,
+            param_name: "dimensions",
+            paper_value: "2000",
+            summary: "B = alpha A^T B (A lower-triangular)",
+        }
+    }
+
+    fn default_n(&self) -> usize {
+        112
+    }
+
+    fn build(&self, n: usize, seed: u64) -> Program {
+        let (a, b0) = gen(n, seed);
+        let ni = n as i64;
+        let mut b = ProgramBuilder::new("trmm");
+        let a_buf = b.alloc_f64_init("A", &a);
+        let b_buf = b.alloc_f64_init("B", &b0);
+        let nn = b.const_i(ni);
+        let alpha = b.const_f(ALPHA);
+        let one = b.const_i(1);
+
+        b.counted_loop(nn, |b, i| {
+            b.counted_loop(nn, |b, j| {
+                let acc = b.load_f64_2d(b_buf, i, j, ni);
+                let ip1 = b.add(i, one);
+                b.loop_range(ip1, nn, |b, k| {
+                    let aki = b.load_f64_2d(a_buf, k, i, ni); // column walk
+                    let bkj = b.load_f64_2d(b_buf, k, j, ni);
+                    let p = b.fmul(aki, bkj);
+                    let s = b.fadd(acc, p);
+                    b.assign(acc, s);
+                });
+                let scaled = b.fmul(alpha, acc);
+                b.store_f64_2d(b_buf, i, j, ni, scaled);
+            });
+        });
+        b.finish(None)
+    }
+
+    fn validate(&self, n: usize, seed: u64) -> Result<f64> {
+        let (a, b0) = gen(n, seed);
+        let got = run_and_read(&self.build(n, seed), "B")?;
+        Ok(max_abs_err(&got, &native(n, &a, &b0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_match() {
+        assert!(Trmm.validate(10, 13).unwrap() < 1e-12);
+    }
+
+    #[test]
+    fn triangular_structure_respected() {
+        // with upper part of A never read, zeroing it must not change output
+        let n = 6;
+        let (mut a, b0) = gen(n, 1);
+        let want = native(n, &a, &b0);
+        for i in 0..n {
+            for j in i + 1..n {
+                a[i * n + j] = 999.0; // A[i][j] with j>i is never read
+            }
+        }
+        assert_eq!(native(n, &a, &b0), want);
+    }
+}

@@ -1,0 +1,208 @@
+//! bfs: level-synchronous breadth-first search over a random directed graph
+//! in CSR form (Rodinia's mask/updating-mask formulation).
+//!
+//! Pointer-chasing through `col[]` gives data-dependent, high-entropy
+//! addresses — the paper's irregular-access NMC winner despite its low DLP.
+
+use anyhow::Result;
+
+use crate::interp::{run_program, NullInstrument};
+use crate::ir::{Program, ProgramBuilder};
+use crate::util::Rng;
+use crate::workloads::{Kernel, KernelInfo, Suite};
+
+pub struct Bfs;
+
+/// CSR graph: ~`DEG` out-edges per node plus a ring edge for reachability.
+const DEG: usize = 4;
+
+pub(crate) struct Graph {
+    pub row_ptr: Vec<i64>,
+    pub col: Vec<i64>,
+}
+
+fn gen(n: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed ^ 0xBF5);
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    let mut col = Vec::new();
+    row_ptr.push(0);
+    for u in 0..n {
+        // ring edge keeps every node reachable from 0
+        col.push(((u + 1) % n) as i64);
+        for _ in 0..DEG {
+            col.push(rng.below(n as u64) as i64);
+        }
+        row_ptr.push(col.len() as i64);
+    }
+    Graph { row_ptr, col }
+}
+
+fn native(n: usize, g: &Graph) -> Vec<i64> {
+    let mut cost = vec![-1i64; n];
+    let mut mask = vec![false; n];
+    let mut visited = vec![false; n];
+    let mut updating = vec![false; n];
+    cost[0] = 0;
+    mask[0] = true;
+    visited[0] = true;
+    loop {
+        let mut over = false;
+        for u in 0..n {
+            if mask[u] {
+                mask[u] = false;
+                for e in g.row_ptr[u] as usize..g.row_ptr[u + 1] as usize {
+                    let v = g.col[e] as usize;
+                    if !visited[v] {
+                        cost[v] = cost[u] + 1;
+                        updating[v] = true;
+                    }
+                }
+            }
+        }
+        for v in 0..n {
+            if updating[v] {
+                mask[v] = true;
+                visited[v] = true;
+                updating[v] = false;
+                over = true;
+            }
+        }
+        if !over {
+            break;
+        }
+    }
+    cost
+}
+
+impl Kernel for Bfs {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            name: "bfs",
+            suite: Suite::Rodinia,
+            param_name: "nodes",
+            paper_value: "1.0m",
+            summary: "level-synchronous BFS (CSR, mask formulation)",
+        }
+    }
+
+    fn default_n(&self) -> usize {
+        2048
+    }
+
+    fn build(&self, n: usize, seed: u64) -> Program {
+        let g = gen(n, seed);
+        let mut b = ProgramBuilder::new("bfs");
+        let row_buf = b.alloc_i64_init("row_ptr", &g.row_ptr);
+        let col_buf = b.alloc_i64_init("col", &g.col);
+        let mask_buf = b.alloc_i64("mask", n);
+        let upd_buf = b.alloc_i64("updating", n);
+        let vis_buf = b.alloc_i64("visited", n);
+        let cost_init = {
+            let mut c = vec![-1i64; n];
+            c[0] = 0;
+            c
+        };
+        let cost_buf = b.alloc_i64_init("cost", &cost_init);
+        let over_buf = b.alloc_i64("over", 1);
+
+        let nn = b.const_i(n as i64);
+        let zero = b.const_i(0);
+        let one = b.const_i(1);
+
+        // mask[0] = visited[0] = 1; over = 1 to enter the loop
+        b.store_i64(mask_buf, zero, one);
+        b.store_i64(vis_buf, zero, one);
+        b.store_i64(over_buf, zero, one);
+
+        b.while_loop(
+            |b| {
+                let o = b.load_i64(over_buf, zero);
+                b.cmp_ne(o, zero)
+            },
+            |b| {
+                b.store_i64(over_buf, zero, zero);
+                // phase 1: expand frontier
+                b.counted_loop(nn, |b, u| {
+                    let m = b.load_i64(mask_buf, u);
+                    let active = b.cmp_ne(m, zero);
+                    b.if_then(active, |b| {
+                        b.store_i64(mask_buf, u, zero);
+                        let cu = b.load_i64(cost_buf, u);
+                        let cnew = b.add(cu, one);
+                        let lo = b.load_i64(row_buf, u);
+                        let up1 = b.add(u, one);
+                        let hi = b.load_i64(row_buf, up1);
+                        b.loop_range(lo, hi, |b, e| {
+                            let v = b.load_i64(col_buf, e);
+                            let vis = b.load_i64(vis_buf, v);
+                            let unvis = b.cmp_eq(vis, zero);
+                            b.if_then(unvis, |b| {
+                                b.store_i64(cost_buf, v, cnew);
+                                b.store_i64(upd_buf, v, one);
+                            });
+                        });
+                    });
+                });
+                // phase 2: commit next frontier
+                b.counted_loop(nn, |b, v| {
+                    let upd = b.load_i64(upd_buf, v);
+                    let hot = b.cmp_ne(upd, zero);
+                    b.if_then(hot, |b| {
+                        b.store_i64(mask_buf, v, one);
+                        b.store_i64(vis_buf, v, one);
+                        b.store_i64(upd_buf, v, zero);
+                        b.store_i64(over_buf, zero, one);
+                    });
+                });
+            },
+        );
+        b.finish(None)
+    }
+
+    fn validate(&self, n: usize, seed: u64) -> Result<f64> {
+        let g = gen(n, seed);
+        let prog = self.build(n, seed);
+        let (_, machine) = run_program(&prog, &mut NullInstrument)?;
+        let buf = prog.buffer("cost").unwrap();
+        let got = machine.mem.read_i64_slice(buf.base, n)?;
+        let want = native(n, &g);
+        let errs = got
+            .iter()
+            .zip(&want)
+            .filter(|(a, b)| a != b)
+            .count();
+        Ok(errs as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_match() {
+        assert_eq!(Bfs.validate(64, 21).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn ring_makes_everything_reachable() {
+        let n = 32;
+        let cost = native(n, &gen(n, 5));
+        assert!(cost.iter().all(|&c| c >= 0), "{cost:?}");
+        assert_eq!(cost[0], 0);
+    }
+
+    #[test]
+    fn costs_are_shortest_path_lengths() {
+        // BFS property: every edge (u,v) satisfies cost[v] <= cost[u] + 1
+        let n = 48;
+        let g = gen(n, 7);
+        let cost = native(n, &g);
+        for u in 0..n {
+            for e in g.row_ptr[u] as usize..g.row_ptr[u + 1] as usize {
+                let v = g.col[e] as usize;
+                assert!(cost[v] <= cost[u] + 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! bp (Rodinia backprop): one epoch of a 2-layer MLP — forward pass,
+//! output/hidden deltas, weight updates with momentum.
+//!
+//! `n` is the input-layer width (the paper's "layer size 1.1m"); the hidden
+//! layer is fixed at 16 units as in Rodinia. The forward loop walks the
+//! [input][hidden] weight matrix column-wise (stride 16·8 B = 2 cache
+//! lines), giving bp its signature high memory entropy / low spatial
+//! locality (paper Figs 3a/3b).
+
+use anyhow::Result;
+
+use crate::ir::{Program, ProgramBuilder};
+use crate::util::Rng;
+use crate::workloads::{max_abs_err, run_and_read, Kernel, KernelInfo, Suite};
+
+pub struct Backprop;
+
+const HID: usize = 16;
+const ETA: f64 = 0.3;
+const MOMENTUM: f64 = 0.3;
+const TARGET: f64 = 0.1;
+
+struct Data {
+    input: Vec<f64>,
+    w1: Vec<f64>, // [n][HID] input→hidden (+1 bias row would be n+1 in Rodinia; omitted)
+    w2: Vec<f64>, // [HID] hidden→output
+}
+
+fn gen(n: usize, seed: u64) -> Data {
+    let mut rng = Rng::new(seed ^ 0xB9);
+    Data {
+        input: (0..n).map(|_| rng.range_f64(0.0, 1.0)).collect(),
+        w1: (0..n * HID).map(|_| rng.range_f64(-0.5, 0.5)).collect(),
+        w2: (0..HID).map(|_| rng.range_f64(-0.5, 0.5)).collect(),
+    }
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+struct NativeOut {
+    w1: Vec<f64>,
+    w2: Vec<f64>,
+    hidden: Vec<f64>,
+}
+
+fn native(n: usize, d: &Data) -> NativeOut {
+    // forward
+    let mut hidden = vec![0.0; HID];
+    for j in 0..HID {
+        let mut s = 0.0;
+        for i in 0..n {
+            s += d.input[i] * d.w1[i * HID + j];
+        }
+        hidden[j] = sigmoid(s);
+    }
+    let mut o = 0.0;
+    for j in 0..HID {
+        o += hidden[j] * d.w2[j];
+    }
+    let out = sigmoid(o);
+    // deltas
+    let delta_out = out * (1.0 - out) * (TARGET - out);
+    let mut delta_hid = vec![0.0; HID];
+    for j in 0..HID {
+        delta_hid[j] = hidden[j] * (1.0 - hidden[j]) * d.w2[j] * delta_out;
+    }
+    // updates (momentum against zero prev-weights, as in a first epoch)
+    let mut w2 = d.w2.clone();
+    for j in 0..HID {
+        w2[j] += ETA * delta_out * hidden[j] + MOMENTUM * 0.0;
+    }
+    let mut w1 = d.w1.clone();
+    for i in 0..n {
+        for j in 0..HID {
+            w1[i * HID + j] += ETA * delta_hid[j] * d.input[i];
+        }
+    }
+    NativeOut { w1, w2, hidden }
+}
+
+impl Kernel for Backprop {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            name: "bp",
+            suite: Suite::Rodinia,
+            param_name: "layer size",
+            paper_value: "1.1m",
+            summary: "backprop: 2-layer MLP epoch (16 hidden units)",
+        }
+    }
+
+    fn default_n(&self) -> usize {
+        3584
+    }
+
+    fn build(&self, n: usize, seed: u64) -> Program {
+        let d = gen(n, seed);
+        let hid_i = HID as i64;
+        let mut b = ProgramBuilder::new("bp");
+        let in_buf = b.alloc_f64_init("input", &d.input);
+        let w1_buf = b.alloc_f64_init("w1", &d.w1);
+        let w2_buf = b.alloc_f64_init("w2", &d.w2);
+        let hid_buf = b.alloc_f64("hidden", HID);
+        let dh_buf = b.alloc_f64("delta_hid", HID);
+        let out_buf = b.alloc_f64("out", 1);
+
+        let nn = b.const_i(n as i64);
+        let hh = b.const_i(hid_i);
+        let zero = b.const_i(0);
+        let fone = b.const_f(1.0);
+        let eta = b.const_f(ETA);
+        let target = b.const_f(TARGET);
+
+        // forward hidden: column walk of w1 (stride HID·8 bytes)
+        b.counted_loop(hh, |b, j| {
+            let acc = b.const_f(0.0);
+            b.counted_loop(nn, |b, i| {
+                let x = b.load_f64(in_buf, i);
+                let w = b.load_f64_2d(w1_buf, i, j, hid_i);
+                let p = b.fmul(x, w);
+                let s = b.fadd(acc, p);
+                b.assign(acc, s);
+            });
+            // sigmoid(acc) = 1/(1+exp(-acc))
+            let neg = b.fneg(acc);
+            let e = b.fexp(neg);
+            let den = b.fadd(fone, e);
+            let h = b.fdiv(fone, den);
+            b.store_f64(hid_buf, j, h);
+        });
+        // forward output
+        let oacc = b.const_f(0.0);
+        b.counted_loop(hh, |b, j| {
+            let h = b.load_f64(hid_buf, j);
+            let w = b.load_f64(w2_buf, j);
+            let p = b.fmul(h, w);
+            let s = b.fadd(oacc, p);
+            b.assign(oacc, s);
+        });
+        let noacc = b.fneg(oacc);
+        let eo = b.fexp(noacc);
+        let den = b.fadd(fone, eo);
+        let out = b.fdiv(fone, den);
+        b.store_f64(out_buf, zero, out);
+
+        // delta_out = out(1-out)(target-out)
+        let om = b.fsub(fone, out);
+        let to = b.fsub(target, out);
+        let d1 = b.fmul(out, om);
+        let delta_out = b.fmul(d1, to);
+
+        // hidden deltas + w2 update
+        b.counted_loop(hh, |b, j| {
+            let h = b.load_f64(hid_buf, j);
+            let hm = b.fsub(fone, h);
+            let w = b.load_f64(w2_buf, j);
+            let t1 = b.fmul(h, hm);
+            let t2 = b.fmul(t1, w);
+            let dh = b.fmul(t2, delta_out);
+            b.store_f64(dh_buf, j, dh);
+            let up = b.fmul(eta, delta_out);
+            let up2 = b.fmul(up, h);
+            let w_new = b.fadd(w, up2);
+            b.store_f64(w2_buf, j, w_new);
+        });
+        // w1 update: row-major walk (the "good" phase)
+        b.counted_loop(nn, |b, i| {
+            let x = b.load_f64(in_buf, i);
+            b.counted_loop(hh, |b, j| {
+                let dh = b.load_f64(dh_buf, j);
+                let w = b.load_f64_2d(w1_buf, i, j, hid_i);
+                let p1 = b.fmul(eta, dh);
+                let p2 = b.fmul(p1, x);
+                let w_new = b.fadd(w, p2);
+                b.store_f64_2d(w1_buf, i, j, hid_i, w_new);
+            });
+        });
+        b.finish(None)
+    }
+
+    fn validate(&self, n: usize, seed: u64) -> Result<f64> {
+        let d = gen(n, seed);
+        let prog = self.build(n, seed);
+        let want = native(n, &d);
+        let got_w1 = run_and_read(&prog, "w1")?;
+        let got_w2 = run_and_read(&prog, "w2")?;
+        let got_h = run_and_read(&prog, "hidden")?;
+        Ok(max_abs_err(&got_w1, &want.w1)
+            .max(max_abs_err(&got_w2, &want.w2))
+            .max(max_abs_err(&got_h, &want.hidden)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_match() {
+        assert!(Backprop.validate(64, 23).unwrap() < 1e-12);
+    }
+
+    #[test]
+    fn hidden_activations_in_unit_interval() {
+        let n = 32;
+        let out = native(n, &gen(n, 6));
+        assert!(out.hidden.iter().all(|&h| h > 0.0 && h < 1.0));
+    }
+}

@@ -1,0 +1,237 @@
+//! kmeans (Rodinia): Lloyd iterations over `n` points in `DIM`-d space,
+//! `K` clusters, fixed `ITERS` assignment/update rounds.
+//!
+//! Point scans are sequential; the per-point center scan revisits the small
+//! centroid table constantly — a mixed-locality, compare-heavy pattern.
+
+use anyhow::Result;
+
+use crate::interp::{run_program, NullInstrument};
+use crate::ir::{Program, ProgramBuilder};
+use crate::util::Rng;
+use crate::workloads::{max_abs_err, run_and_read, Kernel, KernelInfo, Suite};
+
+pub struct Kmeans;
+
+const DIM: usize = 4;
+const K: usize = 5;
+const ITERS: usize = 3;
+
+struct Data {
+    points: Vec<f64>,  // [n][DIM]
+    centers: Vec<f64>, // [K][DIM] initial
+}
+
+fn gen(n: usize, seed: u64) -> Data {
+    let mut rng = Rng::new(seed ^ 0x04EA);
+    // K Gaussian blobs so assignments are non-degenerate
+    let blob_centers: Vec<f64> = (0..K * DIM).map(|_| rng.range_f64(-8.0, 8.0)).collect();
+    let mut points = Vec::with_capacity(n * DIM);
+    for p in 0..n {
+        let c = p % K;
+        for d in 0..DIM {
+            points.push(blob_centers[c * DIM + d] + rng.normal());
+        }
+    }
+    // initial centers = first K points (Rodinia style)
+    let centers = points[..K * DIM].to_vec();
+    Data { points, centers }
+}
+
+struct NativeOut {
+    centers: Vec<f64>,
+    membership: Vec<i64>,
+}
+
+fn native(n: usize, d: &Data) -> NativeOut {
+    let mut centers = d.centers.clone();
+    let mut membership = vec![0i64; n];
+    for _ in 0..ITERS {
+        // assign
+        for p in 0..n {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..K {
+                let mut dist = 0.0;
+                for q in 0..DIM {
+                    let diff = d.points[p * DIM + q] - centers[c * DIM + q];
+                    dist += diff * diff;
+                }
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
+                }
+            }
+            membership[p] = best as i64;
+        }
+        // update
+        let mut sums = vec![0.0; K * DIM];
+        let mut counts = vec![0.0f64; K];
+        for p in 0..n {
+            let c = membership[p] as usize;
+            counts[c] += 1.0;
+            for q in 0..DIM {
+                sums[c * DIM + q] += d.points[p * DIM + q];
+            }
+        }
+        for c in 0..K {
+            if counts[c] > 0.0 {
+                for q in 0..DIM {
+                    centers[c * DIM + q] = sums[c * DIM + q] / counts[c];
+                }
+            }
+        }
+    }
+    NativeOut { centers, membership }
+}
+
+impl Kernel for Kmeans {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            name: "kmeans",
+            suite: Suite::Rodinia,
+            param_name: "data size",
+            paper_value: "819k",
+            summary: "Lloyd k-means (K=5, 4-d, 3 iterations)",
+        }
+    }
+
+    fn default_n(&self) -> usize {
+        5120
+    }
+
+    fn build(&self, n: usize, seed: u64) -> Program {
+        let d = gen(n, seed);
+        let dim_i = DIM as i64;
+        let mut b = ProgramBuilder::new("kmeans");
+        let pts = b.alloc_f64_init("points", &d.points);
+        let ctr = b.alloc_f64_init("centers", &d.centers);
+        let mem = b.alloc_i64("membership", n);
+        let sums = b.alloc_f64("sums", K * DIM);
+        let counts = b.alloc_f64("counts", K);
+
+        let nn = b.const_i(n as i64);
+        let kk = b.const_i(K as i64);
+        let dd = b.const_i(dim_i);
+        let zero = b.const_i(0);
+        let fzero = b.const_f(0.0);
+        let fone = b.const_f(1.0);
+        let iters = b.const_i(ITERS as i64);
+
+        b.counted_loop(iters, |b, _t| {
+            // assignment
+            b.counted_loop(nn, |b, p| {
+                let best = b.const_i(0);
+                let best_d = b.const_f(f64::INFINITY);
+                b.counted_loop(kk, |b, c| {
+                    let dist = b.const_f(0.0);
+                    b.counted_loop(dd, |b, q| {
+                        let pv = {
+                            let idx = b.idx2(p, q, dim_i);
+                            b.load_f64(pts, idx)
+                        };
+                        let cv = {
+                            let idx = b.idx2(c, q, dim_i);
+                            b.load_f64(ctr, idx)
+                        };
+                        let diff = b.fsub(pv, cv);
+                        let sq = b.fmul(diff, diff);
+                        let s = b.fadd(dist, sq);
+                        b.assign(dist, s);
+                    });
+                    let closer = b.fcmp_lt(dist, best_d);
+                    b.if_then(closer, |b| {
+                        b.assign(best_d, dist);
+                        b.assign(best, c);
+                    });
+                });
+                b.store_i64(mem, p, best);
+            });
+            // clear accumulators
+            let kd = b.const_i((K * DIM) as i64);
+            b.counted_loop(kd, |b, i| {
+                b.store_f64(sums, i, fzero);
+            });
+            b.counted_loop(kk, |b, c| {
+                b.store_f64(counts, c, fzero);
+            });
+            // accumulate
+            b.counted_loop(nn, |b, p| {
+                let c = b.load_i64(mem, p);
+                let cnt = b.load_f64(counts, c);
+                let cnt1 = b.fadd(cnt, fone);
+                b.store_f64(counts, c, cnt1);
+                b.counted_loop(dd, |b, q| {
+                    let pidx = b.idx2(p, q, dim_i);
+                    let pv = b.load_f64(pts, pidx);
+                    let sidx = b.idx2(c, q, dim_i);
+                    let sv = b.load_f64(sums, sidx);
+                    let s = b.fadd(sv, pv);
+                    b.store_f64(sums, sidx, s);
+                });
+            });
+            // recenter
+            b.counted_loop(kk, |b, c| {
+                let cnt = b.load_f64(counts, c);
+                let nonzero = b.fcmp_gt(cnt, fzero);
+                b.if_then(nonzero, |b| {
+                    b.counted_loop(dd, |b, q| {
+                        let sidx = b.idx2(c, q, dim_i);
+                        let sv = b.load_f64(sums, sidx);
+                        let avg = b.fdiv(sv, cnt);
+                        b.store_f64(ctr, sidx, avg);
+                    });
+                });
+            });
+        });
+        let _ = zero;
+        b.finish(None)
+    }
+
+    fn validate(&self, n: usize, seed: u64) -> Result<f64> {
+        let n = n.max(K); // need at least K points for initial centers
+        let d = gen(n, seed);
+        let prog = self.build(n, seed);
+        let want = native(n, &d);
+        let got_c = run_and_read(&prog, "centers")?;
+        let (_, machine) = run_program(&prog, &mut NullInstrument)?;
+        let mbuf = prog.buffer("membership").unwrap();
+        let got_m = machine.mem.read_i64_slice(mbuf.base, n)?;
+        let mism = got_m
+            .iter()
+            .zip(&want.membership)
+            .filter(|(a, b)| a != b)
+            .count();
+        Ok(max_abs_err(&got_c, &want.centers).max(mism as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_match() {
+        assert!(Kmeans.validate(60, 25).unwrap() < 1e-12);
+    }
+
+    #[test]
+    fn centers_move_toward_blobs() {
+        // after 3 iterations the centers should separate (not all equal)
+        let n = 100;
+        let out = native(n, &gen(n, 8));
+        let c = &out.centers;
+        let mut distinct = 0;
+        for a in 0..K {
+            for b in a + 1..K {
+                let d2: f64 = (0..DIM)
+                    .map(|q| (c[a * DIM + q] - c[b * DIM + q]).powi(2))
+                    .sum();
+                if d2 > 1.0 {
+                    distinct += 1;
+                }
+            }
+        }
+        assert!(distinct >= K, "centers collapsed: {distinct}");
+    }
+}

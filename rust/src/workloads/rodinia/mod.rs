@@ -1,0 +1,7 @@
+//! Rodinia kernels (Che et al.; paper Table 2 rows 3–5): bfs, bp
+//! (backprop) and kmeans — the irregular / data-analytics side of the
+//! evaluation, complementing Polybench's dense kernels.
+
+pub mod bfs;
+pub mod bp;
+pub mod kmeans;

@@ -1,0 +1,124 @@
+//! PJRT runtime integration: the AOT JAX/Pallas artifacts must agree with
+//! the native Rust analyzers on *real application data* — the strongest
+//! cross-layer correctness signal in the repo. Skipped gracefully when
+//! `make artifacts` hasn't run.
+
+use pisa_nmc::analysis::profile;
+use pisa_nmc::coordinator::{analyze_suite, pca, run_suite, Engine};
+use pisa_nmc::runtime::Runtime;
+use pisa_nmc::workloads::by_name;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT tests: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn entropy_artifact_matches_native_on_real_apps() {
+    let Some(rt) = runtime() else { return };
+    let g = rt.manifest().shape("G").unwrap();
+    let b = rt.manifest().shape("B").unwrap();
+    for name in ["atax", "bfs", "kmeans"] {
+        let k = by_name(name).unwrap();
+        let m = profile(&k.build(24, 3)).unwrap();
+        let (counts, weights) = m.mem_entropy.to_artifact_inputs(g, b);
+        let out = rt.execute("entropy", &[&counts, &weights]).unwrap();
+        for (gi, native) in m.mem_entropy.entropies.iter().enumerate() {
+            let pjrt = out[0][gi] as f64;
+            assert!(
+                (pjrt - native).abs() < 1e-3,
+                "{name} g={gi}: pjrt {pjrt} vs native {native}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pca_artifact_matches_native_power_iteration() {
+    let Some(rt) = runtime() else { return };
+    let n_cap = rt.manifest().shape("N").unwrap();
+    // real feature matrix from a mini suite run
+    let apps = run_suite(0.08, 5, 8).unwrap();
+    let feats: Vec<Vec<f64>> = apps.iter().map(|a| a.metrics.pca4_features().to_vec()).collect();
+
+    let mut x = vec![0f32; n_cap * 4];
+    let mut mask = vec![0f32; n_cap];
+    for (i, f) in feats.iter().enumerate() {
+        mask[i] = 1.0;
+        for (j, &v) in f.iter().enumerate() {
+            x[i * 4 + j] = v as f32;
+        }
+    }
+    let out = rt.execute("pca4", &[&x, &mask]).unwrap();
+    let native = pca(&feats, &vec![true; feats.len()], 2);
+
+    for i in 0..feats.len() {
+        for c in 0..2 {
+            let p = out[0][i * 2 + c] as f64;
+            let nv = native.scores[i][c];
+            assert!(
+                (p - nv).abs() < 2e-2 * nv.abs().max(1.0),
+                "score[{i}][{c}]: pjrt {p} vs native {nv}"
+            );
+        }
+    }
+    for (c, ev) in out[3].iter().enumerate() {
+        let nv = native.explained_variance_ratio[c];
+        assert!(
+            (*ev as f64 - nv).abs() < 1e-2,
+            "evr[{c}]: pjrt {ev} vs native {nv}"
+        );
+    }
+}
+
+#[test]
+fn suite_analytics_pjrt_crosscheck_small() {
+    let Some(rt) = runtime() else { return };
+    let apps = run_suite(0.08, 9, 8).unwrap();
+    let an = analyze_suite(&apps, Some(&rt)).unwrap();
+    assert_eq!(an.engine, Engine::Pjrt);
+    assert!(
+        an.max_crosscheck_err < 1e-2,
+        "pjrt/native drift {}",
+        an.max_crosscheck_err
+    );
+    // spatial artifact values close to native exact (binned vs exact means)
+    for (i, a) in apps.iter().enumerate() {
+        for (s_pjrt, s_native) in an.spatial[i].iter().zip(&a.metrics.spatial.scores) {
+            assert!(
+                (s_pjrt - s_native).abs() < 0.12,
+                "{}: spatial pjrt {s_pjrt} vs native {s_native}",
+                a.name
+            );
+        }
+    }
+}
+
+#[test]
+fn model_artifact_runs_fused_suite() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest().get("model").unwrap();
+    let inputs: Vec<Vec<f32>> = spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let len = s.iter().product::<usize>().max(1);
+            match i {
+                1 | 5 => vec![1.0; len], // weights, mask
+                _ => vec![0.5; len],
+            }
+        })
+        .collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let out = rt.execute("model", &refs).unwrap();
+    assert_eq!(out.len(), 8, "analysis_suite ABI is 8 outputs");
+    for (i, o) in out.iter().enumerate() {
+        assert!(o.iter().all(|v| v.is_finite()), "output {i} non-finite");
+    }
+}

@@ -1,0 +1,198 @@
+//! Property tests over the analyzers: every streaming metric checked
+//! against an independent (naive) oracle on randomized traces, plus
+//! determinism and bound invariants.
+
+use std::collections::HashMap;
+
+use pisa_nmc::analysis::{self, MemEntropyAnalyzer, ReuseAnalyzer};
+use pisa_nmc::prop_assert;
+use pisa_nmc::testkit::{address_trace, check, check_seeded, usize_in};
+use pisa_nmc::util::stats::shannon_entropy_counts;
+use pisa_nmc::util::Rng;
+
+/// O(n²) exact stack-distance oracle with the analyzer's cold-miss
+/// convention (distance = prior footprint).
+fn naive_mean_dtr(addrs: &[u64], shift: u8) -> f64 {
+    let mut stack: Vec<u64> = Vec::new();
+    let mut sum = 0.0;
+    for &a in addrs {
+        let line = a >> shift;
+        if let Some(pos) = stack.iter().position(|&l| l == line) {
+            sum += (stack.len() - 1 - pos) as f64;
+            stack.remove(pos);
+        } else {
+            sum += stack.len() as f64;
+        }
+        stack.push(line);
+    }
+    sum / addrs.len() as f64
+}
+
+#[test]
+fn reuse_distance_matches_naive_oracle() {
+    check_seeded("reuse vs naive", 0xBEEF, 24, |rng| {
+        let len = usize_in(rng, 10, 600);
+        let span = 1 + rng.below(512);
+        let addrs = address_trace(rng, len, span);
+        let mut a = ReuseAnalyzer::new();
+        for &ad in &addrs {
+            a.record(ad);
+        }
+        let r = a.finalize();
+        for (li, &shift) in analysis::reuse::LINE_SHIFTS.iter().enumerate() {
+            let want = naive_mean_dtr(&addrs, shift);
+            prop_assert!(
+                (r.avg_dtr[li] - want).abs() < 1e-9,
+                "shift {shift}: got {} want {want}",
+                r.avg_dtr[li]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mem_entropy_fold_matches_naive_at_every_granularity() {
+    check_seeded("entropy fold vs naive", 0xE27, 24, |rng| {
+        let len = usize_in(rng, 5, 2000);
+        let addrs = address_trace(rng, len, 1 << 12);
+        let mut an = MemEntropyAnalyzer::new();
+        for &a in &addrs {
+            an.record(a);
+        }
+        let r = an.finalize(4096);
+        for shift in 0u8..=10 {
+            let mut h: HashMap<u64, u64> = HashMap::new();
+            for &a in &addrs {
+                *h.entry(a >> shift).or_insert(0) += 1;
+            }
+            let want = shannon_entropy_counts(h.values().copied());
+            prop_assert!(
+                (r.entropies[shift as usize] - want).abs() < 1e-9,
+                "shift {shift}: got {} want {want}",
+                r.entropies[shift as usize]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn count_of_counts_reconstructs_exact_entropy() {
+    check("count-of-counts identity", |rng| {
+        let len = usize_in(rng, 10, 3000);
+        let addrs = address_trace(rng, len, 1 << 10);
+        let mut an = MemEntropyAnalyzer::new();
+        for &a in &addrs {
+            an.record(a);
+        }
+        let r = an.finalize(4096);
+        for (g, pairs) in r.count_of_counts.iter().enumerate() {
+            let total: u64 = pairs.iter().map(|&(c, m)| c as u64 * m).sum();
+            if total == 0 {
+                continue;
+            }
+            let h: f64 = -pairs
+                .iter()
+                .map(|&(c, m)| {
+                    let p = c as f64 / total as f64;
+                    m as f64 * p * p.log2()
+                })
+                .sum::<f64>();
+            prop_assert!(
+                (h - r.entropies[g]).abs() < 1e-9,
+                "g={g}: coc {h} vs exact {}",
+                r.entropies[g]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn entropy_never_increases_with_coarser_granularity() {
+    check("entropy monotone in granularity", |rng| {
+        let len = usize_in(rng, 10, 2000);
+        let addrs = address_trace(rng, len, 1 << 14);
+        let mut an = MemEntropyAnalyzer::new();
+        for &a in &addrs {
+            an.record(a);
+        }
+        let r = an.finalize(4096);
+        for w in r.entropies.windows(2) {
+            prop_assert!(w[1] <= w[0] + 1e-9, "coarser granularity raised entropy: {w:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spatial_scores_always_in_unit_interval() {
+    check("spatial in [0,1]", |rng| {
+        let len = usize_in(rng, 10, 1500);
+        let addrs = address_trace(rng, len, 1 << 16);
+        let mut a = ReuseAnalyzer::new();
+        for &ad in &addrs {
+            a.record(ad);
+        }
+        let s = pisa_nmc::analysis::spatial::from_reuse(&a.finalize());
+        for v in &s.scores {
+            prop_assert!((0.0..=1.0).contains(v), "score {v} out of range");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn profile_is_deterministic_for_fixed_seed() {
+    check_seeded("deterministic profiling", 0xD0, 6, |rng| {
+        let names = ["atax", "mvt", "kmeans", "bfs"];
+        let name = names[usize_in(rng, 0, names.len() - 1)];
+        let n = usize_in(rng, 8, 24);
+        let k = pisa_nmc::workloads::by_name(name).map_err(|e| e.to_string())?;
+        let a = analysis::profile(&k.build(n, 7)).map_err(|e| e.to_string())?;
+        let b = analysis::profile(&k.build(n, 7)).map_err(|e| e.to_string())?;
+        prop_assert!(a.exec.dyn_instrs == b.exec.dyn_instrs, "instr counts differ");
+        prop_assert!(
+            a.mem_entropy.entropies == b.mem_entropy.entropies,
+            "entropies differ"
+        );
+        prop_assert!(a.pca4_features() == b.pca4_features(), "features differ");
+        Ok(())
+    });
+}
+
+#[test]
+fn parallelism_metrics_are_finite_and_at_least_one() {
+    check_seeded("parallelism bounds", 0x1B, 8, |rng| {
+        let names = ["gesummv", "trmm", "bp"];
+        let name = names[usize_in(rng, 0, names.len() - 1)];
+        let n = usize_in(rng, 6, 20);
+        let k = pisa_nmc::workloads::by_name(name).map_err(|e| e.to_string())?;
+        let m = analysis::profile(&k.build(n, rng.next_u64())).map_err(|e| e.to_string())?;
+        prop_assert!(m.ilp.inf >= 1.0, "ILP {} < 1", m.ilp.inf);
+        prop_assert!(m.dlp.dlp >= 0.99, "DLP {} < 1", m.dlp.dlp);
+        prop_assert!(m.pbblp.pbblp >= 0.99, "PBBLP {}", m.pbblp.pbblp);
+        for v in &m.bblp.values {
+            prop_assert!(v.is_finite() && *v >= 0.99, "BBLP {v}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn windowed_ilp_never_exceeds_count() {
+    check_seeded("ILP sanity", 0x11F, 8, |rng| {
+        let n = usize_in(rng, 6, 24);
+        let k = pisa_nmc::workloads::by_name("atax").map_err(|e| e.to_string())?;
+        let m = analysis::profile(&k.build(n, rng.next_u64())).map_err(|e| e.to_string())?;
+        for (w, v) in &m.ilp.windowed {
+            prop_assert!(*v <= *w as f64 + 1e-9, "ILP_{w} = {v} exceeds window");
+        }
+        prop_assert!(
+            m.ilp.inf <= m.exec.dyn_instrs as f64,
+            "ILP_inf exceeds trace length"
+        );
+        Ok(())
+    });
+}

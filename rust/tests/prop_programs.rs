@@ -1,0 +1,195 @@
+//! Property tests driven by a *random structured-program generator*: build
+//! arbitrary (but well-formed) mini-IR programs, execute them, and check
+//! the pipeline-wide invariants the coordinator depends on — verification,
+//! bounded execution, work conservation between the analyzers and the
+//! task-trace, and machine-model sanity.
+
+use pisa_nmc::interp::{run_program, Counter, Machine, NullInstrument};
+use pisa_nmc::ir::{verify::verify, Program, ProgramBuilder, Reg};
+use pisa_nmc::prop_assert;
+use pisa_nmc::sim::{simulate_host, simulate_nmc, Region, TaskTraceCollector};
+use pisa_nmc::testkit::{check_seeded, usize_in};
+use pisa_nmc::util::Rng;
+
+/// Generate a random structured program: nested counted loops (bounded trip
+/// counts), arithmetic over a register pool, loads/stores into a shared
+/// buffer with in-bounds random indexing, and the occasional if/else.
+fn random_program(rng: &mut Rng) -> Program {
+    let mut b = ProgramBuilder::new("rand");
+    let len = 64usize;
+    let data: Vec<f64> = (0..len).map(|_| rng.range_f64(0.5, 2.0)).collect();
+    let buf = b.alloc_f64_init("buf", &data);
+    let len_reg = b.const_i(len as i64);
+
+    let mut pool: Vec<Reg> = (0..4).map(|i| b.const_f(1.0 + i as f64)).collect();
+    let depth = usize_in(rng, 1, 3);
+    gen_block(&mut b, rng, &mut pool, buf, len_reg, depth);
+    let ret = pool[0];
+    b.finish(Some(ret))
+}
+
+fn gen_block(
+    b: &mut ProgramBuilder,
+    rng: &mut Rng,
+    pool: &mut Vec<Reg>,
+    buf: pisa_nmc::ir::BufRef,
+    len_reg: Reg,
+    depth: usize,
+) {
+    for _ in 0..usize_in(rng, 1, 5) {
+        match rng.below(if depth > 0 { 5 } else { 3 }) {
+            0 => {
+                // arithmetic: fadd/fmul of two pool regs (stays finite:
+                // magnitudes bounded by construction below)
+                let x = pool[usize_in(rng, 0, pool.len() - 1)];
+                let y = pool[usize_in(rng, 0, pool.len() - 1)];
+                let z = if rng.below(2) == 0 { b.fadd(x, y) } else { b.fmul(x, y) };
+                // clamp via fmin to keep values bounded across loops
+                let cap = b.const_f(4.0);
+                let z = b.fmin(z, cap);
+                let slot = usize_in(rng, 0, pool.len() - 1);
+                pool[slot] = z;
+            }
+            1 => {
+                // load buf[idx % len]
+                let idx_c = b.const_i(rng.below(64) as i64);
+                let v = b.load_f64(buf, idx_c);
+                let slot = usize_in(rng, 0, pool.len() - 1);
+                pool[slot] = v;
+            }
+            2 => {
+                // store pool reg to buf[idx]
+                let idx_c = b.const_i(rng.below(64) as i64);
+                let v = pool[usize_in(rng, 0, pool.len() - 1)];
+                b.store_f64(buf, idx_c, v);
+            }
+            3 => {
+                // bounded counted loop
+                let trip = b.const_i(1 + rng.below(8) as i64);
+                let mut inner_pool = pool.clone();
+                // deterministic sub-rng so closure borrows don't fight
+                let mut sub = Rng::new(rng.next_u64());
+                b.counted_loop(trip, |b, i| {
+                    let idx = b.rem(i, len_reg);
+                    let v = b.load_f64(buf, idx);
+                    inner_pool[0] = v;
+                    gen_block(b, &mut sub, &mut inner_pool, buf, len_reg, depth - 1);
+                });
+            }
+            _ => {
+                // if/else on a data comparison
+                let x = pool[usize_in(rng, 0, pool.len() - 1)];
+                let y = pool[usize_in(rng, 0, pool.len() - 1)];
+                let c = b.fcmp_lt(x, y);
+                let mut sub1 = Rng::new(rng.next_u64());
+                let mut sub2 = Rng::new(rng.next_u64());
+                let mut p1 = pool.clone();
+                let mut p2 = pool.clone();
+                b.if_then_else(
+                    c,
+                    |b| gen_block(b, &mut sub1, &mut p1, buf, len_reg, 0),
+                    |b| gen_block(b, &mut sub2, &mut p2, buf, len_reg, 0),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn random_programs_verify_and_terminate() {
+    check_seeded("random programs run", 0xA11CE, 48, |rng| {
+        let p = random_program(rng);
+        let errs = verify(&p);
+        prop_assert!(errs.is_empty(), "verify errors: {errs:?}");
+        let mut m = Machine::new(&p).map_err(|e| e.to_string())?;
+        m.instr_limit = 5_000_000;
+        let out = m.run(&mut NullInstrument).map_err(|e| e.to_string())?;
+        prop_assert!(out.stats.dyn_instrs > 0, "no instructions executed");
+        Ok(())
+    });
+}
+
+#[test]
+fn task_trace_conserves_work_on_random_programs() {
+    check_seeded("region work conservation", 0x7A5C, 32, |rng| {
+        let p = random_program(rng);
+        let mut c = TaskTraceCollector::new(&p);
+        let (out, _) = run_program(&p, &mut c).map_err(|e| e.to_string())?;
+        let regions = c.finalize();
+        let total: u64 = regions.iter().map(|r| r.instrs()).sum();
+        prop_assert!(
+            total == out.stats.dyn_instrs,
+            "regions carry {total} instrs, trace had {}",
+            out.stats.dyn_instrs
+        );
+        // memory accesses conserved too
+        let acc: usize = regions
+            .iter()
+            .map(|r| match r {
+                Region::Serial(t) => t.accesses.len(),
+                Region::Parallel(ts) => ts.iter().map(|t| t.accesses.len()).sum(),
+            })
+            .sum();
+        prop_assert!(
+            acc as u64 == out.stats.mem_reads + out.stats.mem_writes,
+            "region accesses {acc} vs machine {}",
+            out.stats.mem_reads + out.stats.mem_writes
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn both_machines_see_identical_work_and_positive_time() {
+    check_seeded("machine model sanity", 0x51A1, 24, |rng| {
+        let p = random_program(rng);
+        let mut c = TaskTraceCollector::new(&p);
+        run_program(&p, &mut c).map_err(|e| e.to_string())?;
+        let regions = c.finalize();
+        if regions.is_empty() {
+            return Ok(());
+        }
+        let h = simulate_host(&regions, 2.0);
+        let n = simulate_nmc(&regions);
+        prop_assert!(h.dyn_instrs == n.dyn_instrs, "work mismatch");
+        prop_assert!(h.time_s > 0.0 && h.energy_j > 0.0, "host non-positive");
+        prop_assert!(n.time_s > 0.0 && n.energy_j > 0.0, "nmc non-positive");
+        prop_assert!(h.time_s.is_finite() && n.time_s.is_finite(), "non-finite time");
+        Ok(())
+    });
+}
+
+#[test]
+fn event_counts_match_machine_stats() {
+    check_seeded("event stream vs stats", 0xC0DE, 32, |rng| {
+        let p = random_program(rng);
+        let mut c = Counter::default();
+        let (out, _) = run_program(&p, &mut c).map_err(|e| e.to_string())?;
+        prop_assert!(c.instrs == out.stats.dyn_instrs, "instr events");
+        prop_assert!(c.blocks == out.stats.dyn_blocks, "block events");
+        prop_assert!(c.branches == out.stats.dyn_branches, "branch events");
+        prop_assert!(
+            c.loads + c.stores == out.stats.mem_reads + out.stats.mem_writes,
+            "mem events"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn execution_is_bit_deterministic() {
+    check_seeded("deterministic execution", 0xDE7, 24, |rng| {
+        let seed = rng.next_u64();
+        let p1 = random_program(&mut Rng::new(seed));
+        let p2 = random_program(&mut Rng::new(seed));
+        let (o1, m1) = run_program(&p1, &mut NullInstrument).map_err(|e| e.to_string())?;
+        let (o2, m2) = run_program(&p2, &mut NullInstrument).map_err(|e| e.to_string())?;
+        prop_assert!(o1.stats.dyn_instrs == o2.stats.dyn_instrs, "instrs differ");
+        let b1 = p1.buffer("buf").unwrap();
+        let b2 = p2.buffer("buf").unwrap();
+        let d1 = m1.mem.read_f64_slice(b1.base, 64).map_err(|e| e.to_string())?;
+        let d2 = m2.mem.read_f64_slice(b2.base, 64).map_err(|e| e.to_string())?;
+        prop_assert!(d1 == d2, "memory images differ");
+        Ok(())
+    });
+}
