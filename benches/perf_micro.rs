@@ -3,10 +3,10 @@
 //! call. These are the numbers the optimization pass tracks.
 
 use pisa_nmc::analysis::{
-    BblpAnalyzer, DlpAnalyzer, IlpAnalyzer, MemEntropyAnalyzer, MixAnalyzer, PbblpAnalyzer,
-    ReuseAnalyzer,
+    AnalyzerStack, BblpAnalyzer, DlpAnalyzer, IlpAnalyzer, MemEntropyAnalyzer, MixAnalyzer,
+    PbblpAnalyzer, ReuseAnalyzer,
 };
-use pisa_nmc::interp::{run_program, Instrument, NullInstrument};
+use pisa_nmc::interp::{run_program, Fanout, Instrument, Machine, NullInstrument};
 use pisa_nmc::ir::ProgramBuilder;
 use pisa_nmc::runtime::Runtime;
 use pisa_nmc::sim::{collect, simulate_host, simulate_nmc};
@@ -36,6 +36,35 @@ fn main() -> anyhow::Result<()> {
 
     bench("interp_dispatch (NullInstrument)", 1, 8, Some((n, "instr")), || {
         run_with(&prog, &mut NullInstrument)
+    });
+
+    // The headline comparison for the chunked-pipeline refactor: the same
+    // full analyzer set driven per-event through the legacy Fanout (one
+    // virtual call per analyzer per dynamic event) vs chunked through the
+    // AnalyzerStack (one virtual call per ~4K-event chunk, static dispatch
+    // inside). gesummv is memory-heavy, so every analyzer is on its slow
+    // path.
+    bench("dispatch_per_event (Fanout, 8 analyzers)", 1, 3, Some((n, "instr")), || {
+        let mut mix = MixAnalyzer::new();
+        let mut branch = pisa_nmc::analysis::BranchAnalyzer::new();
+        let mut ment = MemEntropyAnalyzer::new();
+        let mut reuse = ReuseAnalyzer::new();
+        let mut ilp = IlpAnalyzer::new(prog.func.n_regs);
+        let mut dlp = DlpAnalyzer::for_program(&prog);
+        let mut bblp = BblpAnalyzer::new(prog.func.n_regs);
+        let mut pbblp = PbblpAnalyzer::new(&prog);
+        let mut fan = Fanout::new(vec![
+            &mut mix, &mut branch, &mut ment, &mut reuse, &mut ilp, &mut dlp, &mut bblp,
+            &mut pbblp,
+        ]);
+        let mut m = Machine::new(&prog).unwrap();
+        std::hint::black_box(m.run_per_event(&mut fan).unwrap());
+    });
+    bench("dispatch_chunked (AnalyzerStack)", 1, 3, Some((n, "instr")), || {
+        // same analyzer set, same un-finalized endpoint as the arm above
+        let mut stack = AnalyzerStack::full(&prog);
+        let mut m = Machine::new(&prog).unwrap();
+        std::hint::black_box(m.run(&mut stack).unwrap());
     });
     bench("analyzer_mix", 1, 5, Some((n, "instr")), || {
         let mut a = MixAnalyzer::new();

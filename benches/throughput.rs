@@ -1,0 +1,74 @@
+//! Suite-level profiler throughput: the wall-clock number the chunked
+//! event pipeline is accountable to. Runs `run_suite` at the default bench
+//! scale (override with `PISA_BENCH_SCALE`), reports total trace events
+//! per second of end-to-end suite time plus each app's own profiling rate
+//! from `ExecStats`, then re-runs every kernel through the per-event
+//! reference path for the before/after dispatch comparison.
+//!
+//! ```bash
+//! cargo bench --bench throughput            # scale 0.25
+//! PISA_BENCH_SCALE=1.0 cargo bench --bench throughput
+//! ```
+
+use std::time::Instant;
+
+use pisa_nmc::analysis::{profile, profile_per_event};
+use pisa_nmc::coordinator::run_suite;
+use pisa_nmc::testkit::bench::bench_scale;
+use pisa_nmc::workloads::{registry, scaled_n};
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    println!("== profiler throughput (scale {scale}) ==\n");
+
+    // end-to-end suite: chunked pipeline, all analyzers + sims
+    let t0 = Instant::now();
+    let apps = run_suite(scale, 42, 8)?;
+    let suite_s = t0.elapsed().as_secs_f64();
+    let total_events: u64 = apps.iter().map(|a| a.metrics.exec.events()).sum();
+
+    println!("{:<14} {:>14} {:>10} {:>14}", "app", "events", "wall", "events/s");
+    for a in &apps {
+        println!(
+            "{:<14} {:>14} {:>9.3}s {:>13.2}M",
+            a.name,
+            a.metrics.exec.events(),
+            a.metrics.exec.wall_s,
+            a.events_per_sec() / 1e6,
+        );
+    }
+    println!(
+        "\nsuite: {total_events} events in {suite_s:.3}s wall ({:.2}M events/s end-to-end; worker threads overlap)\n",
+        total_events as f64 / suite_s / 1e6,
+    );
+
+    // chunked vs per-event dispatch, single-threaded, analyzers only —
+    // isolates the event-delivery cost the refactor removed
+    println!("{:<14} {:>12} {:>12} {:>8}", "app", "per-event", "chunked", "speedup");
+    let (mut tot_ref, mut tot_chunk) = (0.0f64, 0.0f64);
+    for k in registry() {
+        let n = scaled_n(k.as_ref(), scale);
+        let prog = k.build(n, 42);
+        let t = Instant::now();
+        let r = profile_per_event(&prog)?;
+        let ref_s = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let c = profile(&prog)?;
+        let chunk_s = t.elapsed().as_secs_f64();
+        assert_eq!(r.exec.dyn_instrs, c.exec.dyn_instrs);
+        tot_ref += ref_s;
+        tot_chunk += chunk_s;
+        println!(
+            "{:<14} {:>11.3}s {:>11.3}s {:>7.2}x",
+            k.info().name,
+            ref_s,
+            chunk_s,
+            ref_s / chunk_s
+        );
+    }
+    println!(
+        "\ntotal: per-event {tot_ref:.3}s, chunked {tot_chunk:.3}s → {:.2}x",
+        tot_ref / tot_chunk
+    );
+    Ok(())
+}

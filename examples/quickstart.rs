@@ -25,6 +25,10 @@ fn main() -> anyhow::Result<()> {
     println!("\n== platform-independent metrics (paper §II) ==");
     println!("dynamic instructions : {}", r.metrics.exec.dyn_instrs);
     println!(
+        "profiling rate       : {:.2}M events/s (chunked pipeline)",
+        r.events_per_sec() / 1e6
+    );
+    println!(
         "memory entropy       : {:.2} bits @1B → {:.2} bits @1KB",
         r.metrics.mem_entropy.entropies[0],
         r.metrics.mem_entropy.entropies[10]

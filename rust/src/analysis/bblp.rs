@@ -160,6 +160,8 @@ impl BblpAnalyzer {
     }
 }
 
+// Chunk delivery uses the default `on_chunk` (a statically-dispatched loop
+// over `on_event` — there is no per-chunk state worth hoisting here).
 impl Instrument for BblpAnalyzer {
     #[inline]
     fn on_event(&mut self, ev: &TraceEvent) {

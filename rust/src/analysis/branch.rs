@@ -88,6 +88,15 @@ impl BranchAnalyzer {
     }
 }
 
+impl BranchAnalyzer {
+    #[inline]
+    fn bump_site(&mut self, block: BlockId, taken: u64, not_taken: u64) {
+        let s = self.sites.entry(block).or_default();
+        s.taken += taken;
+        s.not_taken += not_taken;
+    }
+}
+
 impl Instrument for BranchAnalyzer {
     #[inline]
     fn on_event(&mut self, ev: &TraceEvent) {
@@ -100,6 +109,38 @@ impl Instrument for BranchAnalyzer {
             }
             self.total += 1;
         }
+    }
+
+    /// Chunk path: consecutive branch events overwhelmingly come from the
+    /// same static site (a hot loop header), so outcomes are run-length
+    /// accumulated and the site map is probed once per run instead of once
+    /// per dynamic branch.
+    fn on_chunk(&mut self, events: &[TraceEvent]) {
+        let mut cur: Option<BlockId> = None;
+        let (mut taken_acc, mut nt_acc) = (0u64, 0u64);
+        let mut total = 0u64;
+        for ev in events {
+            if let TraceEvent::Branch { block, taken } = ev {
+                total += 1;
+                if cur != Some(*block) {
+                    if let Some(b) = cur {
+                        self.bump_site(b, taken_acc, nt_acc);
+                    }
+                    cur = Some(*block);
+                    taken_acc = 0;
+                    nt_acc = 0;
+                }
+                if *taken {
+                    taken_acc += 1;
+                } else {
+                    nt_acc += 1;
+                }
+            }
+        }
+        if let Some(b) = cur {
+            self.bump_site(b, taken_acc, nt_acc);
+        }
+        self.total += total;
     }
 }
 
@@ -150,6 +191,37 @@ mod tests {
         assert_eq!(br.static_sites(), 2);
         let h = br.weighted_entropy();
         assert!(h > 0.4 && h < 0.6, "weighted entropy {h}");
+    }
+
+    #[test]
+    fn chunk_run_length_matches_per_event() {
+        use crate::interp::InstrEvent;
+        use crate::ir::Op;
+        let mut evs = Vec::new();
+        // alternating sites with mixed outcomes, plus non-branch noise
+        for i in 0..200u32 {
+            evs.push(TraceEvent::Branch { block: i % 3, taken: i % 2 == 0 });
+            if i % 5 == 0 {
+                evs.push(TraceEvent::Instr(InstrEvent {
+                    op: Op::Add,
+                    dst: Some(0),
+                    srcs: [0; 3],
+                    n_srcs: 0,
+                    mem: None,
+                    block: 0,
+                }));
+            }
+        }
+        let mut a = BranchAnalyzer::new();
+        let mut b = BranchAnalyzer::new();
+        for ev in &evs {
+            a.on_event(ev);
+        }
+        b.on_chunk(&evs);
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.static_sites(), b.static_sites());
+        assert_eq!(a.weighted_entropy().to_bits(), b.weighted_entropy().to_bits());
+        assert_eq!(a.taken_rate().to_bits(), b.taken_rate().to_bits());
     }
 
     #[test]

@@ -86,6 +86,8 @@ impl DlpAnalyzer {
     }
 }
 
+// Chunk delivery uses the default `on_chunk` (a statically-dispatched loop
+// over `on_event` — there is no per-chunk state worth hoisting here).
 impl Instrument for DlpAnalyzer {
     #[inline]
     fn on_event(&mut self, ev: &TraceEvent) {

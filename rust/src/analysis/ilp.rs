@@ -94,6 +94,8 @@ impl IlpAnalyzer {
     }
 }
 
+// Chunk delivery uses the default `on_chunk` (a statically-dispatched loop
+// over `on_event` — there is no per-chunk state worth hoisting here).
 impl Instrument for IlpAnalyzer {
     #[inline]
     fn on_event(&mut self, ev: &TraceEvent) {

@@ -152,6 +152,36 @@ impl Instrument for MemEntropyAnalyzer {
             }
         }
     }
+
+    /// Chunk path: consecutive accesses to the same byte address (scalar
+    /// accumulators, repeated flag stores) are run-length folded so the hash
+    /// map sees one probe per run, and the access counter accumulates in a
+    /// register across the chunk.
+    fn on_chunk(&mut self, events: &[TraceEvent]) {
+        let mut last = 0u64;
+        let mut run = 0u32;
+        let mut n = 0u64;
+        for ev in events {
+            if let TraceEvent::Instr(i) = ev {
+                if let Some(m) = i.mem {
+                    n += 1;
+                    if run > 0 && m.addr == last {
+                        run += 1;
+                    } else {
+                        if run > 0 {
+                            *self.counts.entry(last).or_insert(0) += run;
+                        }
+                        last = m.addr;
+                        run = 1;
+                    }
+                }
+            }
+        }
+        if run > 0 {
+            *self.counts.entry(last).or_insert(0) += run;
+        }
+        self.accesses += n;
+    }
 }
 
 impl MemEntropyResult {

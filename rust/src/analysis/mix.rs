@@ -105,6 +105,22 @@ impl Instrument for MixAnalyzer {
             TraceEvent::BlockEnter { .. } => self.blocks += 1,
         }
     }
+
+    /// Chunk path: the branch/block tallies accumulate in registers and hit
+    /// the struct once per chunk; only the per-op histogram is touched per
+    /// event.
+    fn on_chunk(&mut self, events: &[TraceEvent]) {
+        let (mut branches, mut blocks) = (0u64, 0u64);
+        for ev in events {
+            match ev {
+                TraceEvent::Instr(i) => self.per_op[i.op.index()] += 1,
+                TraceEvent::Branch { .. } => branches += 1,
+                TraceEvent::BlockEnter { .. } => blocks += 1,
+            }
+        }
+        self.branches += branches;
+        self.blocks += blocks;
+    }
 }
 
 #[cfg(test)]

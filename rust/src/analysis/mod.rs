@@ -1,9 +1,20 @@
 //! The PISA-NMC metric analyzers (paper §II).
 //!
-//! Every analyzer implements [`crate::interp::Instrument`] and consumes the
-//! dynamic event stream exactly once; [`profile`] fans a single execution
-//! out to all of them (the paper's single-pass instrumented run) and
-//! produces an [`AppMetrics`] with every §II metric:
+//! Every analyzer implements [`crate::interp::Instrument`] and folds the
+//! dynamic event stream exactly once (the paper's single-pass instrumented
+//! run). Since the chunked-pipeline refactor, the canonical way to compose
+//! them is the [`AnalyzerStack`]: one registry owning the full analyzer set
+//! (plus, optionally, the `sim::TaskTraceCollector`), receiving events as
+//! [`EventChunk`](crate::interp::EventChunk) slices via `on_chunk` — one
+//! virtual call per ~4K events, statically-dispatched per-analyzer sweeps
+//! inside — and finalizing into one [`AppMetrics`]. `analysis::profile`,
+//! `coordinator::profile_app` and the examples/benches all drive this one
+//! code path; [`MetricSet`] selects a subset by name (the CLI `--metrics`
+//! flag ends up here).
+//!
+//! [`profile_per_event`] keeps the un-batched delivery as the reference
+//! semantics; `rust/tests/prop_chunked.rs` proves both paths produce
+//! bit-identical metrics on seeded random programs.
 //!
 //! | metric | module | paper figure |
 //! |---|---|---|
@@ -27,7 +38,7 @@ pub mod pbblp;
 pub mod reuse;
 pub mod spatial;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 pub use bblp::{BblpAnalyzer, BblpResult};
 pub use branch::BranchAnalyzer;
@@ -39,8 +50,9 @@ pub use pbblp::{PbblpAnalyzer, PbblpResult};
 pub use reuse::{ReuseAnalyzer, ReuseResult};
 pub use spatial::SpatialResult;
 
-use crate::interp::{run_program, ExecStats, Fanout};
+use crate::interp::{ExecStats, Instrument, Machine, TraceEvent};
 use crate::ir::Program;
+use crate::sim::{Region, TaskTraceCollector};
 use crate::util::Json;
 
 /// All §II metrics for one application run (PISA's JSON result object).
@@ -62,49 +74,309 @@ pub struct AppMetrics {
 /// Count-of-counts slots the entropy artifact accepts (see aot.py `B`).
 pub const ENTROPY_SLOTS: usize = 4096;
 
-/// Run `prog` once, streaming the trace through every analyzer.
-pub fn profile(prog: &Program) -> Result<AppMetrics> {
+/// One selectable analyzer family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Mix = 0,
+    Branch = 1,
+    MemEntropy = 2,
+    Reuse = 3,
+    Ilp = 4,
+    Dlp = 5,
+    Bblp = 6,
+    Pbblp = 7,
+}
+
+impl Metric {
+    pub const ALL: [Metric; 8] = [
+        Metric::Mix,
+        Metric::Branch,
+        Metric::MemEntropy,
+        Metric::Reuse,
+        Metric::Ilp,
+        Metric::Dlp,
+        Metric::Bblp,
+        Metric::Pbblp,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::Mix => "mix",
+            Metric::Branch => "branch",
+            Metric::MemEntropy => "mem_entropy",
+            Metric::Reuse => "reuse",
+            Metric::Ilp => "ilp",
+            Metric::Dlp => "dlp",
+            Metric::Bblp => "bblp",
+            Metric::Pbblp => "pbblp",
+        }
+    }
+}
+
+/// A subset of the metric families, selectable by name — the value of the
+/// CLI `--metrics` flag, threaded through `coordinator::pipeline` into the
+/// [`AnalyzerStack`]. Disabled families still appear in [`AppMetrics`] with
+/// shape-stable empty results so reports and figures never change layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricSet {
+    bits: u8,
+}
+
+impl Default for MetricSet {
+    fn default() -> Self {
+        Self::all()
+    }
+}
+
+impl MetricSet {
+    pub fn all() -> Self {
+        MetricSet { bits: 0xFF }
+    }
+
+    pub fn none() -> Self {
+        MetricSet { bits: 0 }
+    }
+
+    pub fn with(mut self, m: Metric) -> Self {
+        self.bits |= 1 << (m as u8);
+        self
+    }
+
+    #[inline]
+    pub fn contains(&self, m: Metric) -> bool {
+        self.bits & (1 << (m as u8)) != 0
+    }
+
+    pub fn is_all(&self) -> bool {
+        self.bits == 0xFF
+    }
+
+    /// Parse a comma-separated selection, e.g. `"mix,dlp,bblp"`. Accepts
+    /// `"all"` and the alias `"spatial"` (spatial locality is derived from
+    /// `reuse`). Unknown names are an error listing the valid set.
+    pub fn from_names(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "all" {
+            return Ok(Self::all());
+        }
+        let mut set = Self::none();
+        for raw in spec.split(',') {
+            let name = raw.trim();
+            let m = match name {
+                "spatial" => Metric::Reuse, // spatial scores derive from DTR
+                _ => match Metric::ALL.iter().find(|m| m.name() == name) {
+                    Some(&m) => m,
+                    None => bail!(
+                        "unknown metric '{name}'; valid: all, spatial, {}",
+                        Metric::ALL.map(|m| m.name()).join(", ")
+                    ),
+                },
+            };
+            set = set.with(m);
+        }
+        Ok(set)
+    }
+
+    /// The effective set when the machine simulations will run: forces on
+    /// every family the simulators consume (the host model's IPC comes
+    /// from measured ILP_256 — simulating with a zeroed ILP would clamp
+    /// the host to its floor IPC and distort every EDP number). Both
+    /// `coordinator::profile_app_select` and the pipeline report derive
+    /// from this one place so they cannot desync.
+    pub fn with_simulation_requirements(self) -> Self {
+        self.with(Metric::Ilp)
+    }
+
+    /// Names of the enabled families, in canonical order.
+    pub fn names(&self) -> Vec<&'static str> {
+        Metric::ALL
+            .iter()
+            .filter(|&&m| self.contains(m))
+            .map(|&m| m.name())
+            .collect()
+    }
+}
+
+/// The unified analyzer registry: owns every §II analyzer (and, for the
+/// coordinator, the task-trace collector), fans each event chunk out to
+/// the enabled subset with static per-analyzer dispatch, and finalizes
+/// into an [`AppMetrics`]. This replaces the hand-assembled `Fanout`
+/// stacks that used to be duplicated across `analysis::profile` and
+/// `coordinator::profile_app`.
+pub struct AnalyzerStack {
+    name: String,
+    metrics: MetricSet,
+    mix: MixAnalyzer,
+    branch: BranchAnalyzer,
+    ment: MemEntropyAnalyzer,
+    reuse: ReuseAnalyzer,
+    ilp: IlpAnalyzer,
+    dlp: DlpAnalyzer,
+    bblp: BblpAnalyzer,
+    pbblp: PbblpAnalyzer,
+    tasks: Option<TaskTraceCollector>,
+}
+
+impl AnalyzerStack {
+    /// Build the stack for `prog`, feeding only the selected metric
+    /// families. Construction is cheap; disabled analyzers simply never
+    /// receive events and finalize to empty results.
+    pub fn new(prog: &Program, metrics: MetricSet) -> Self {
+        let n_regs = prog.func.n_regs;
+        AnalyzerStack {
+            name: prog.func.name.clone(),
+            metrics,
+            mix: MixAnalyzer::new(),
+            branch: BranchAnalyzer::new(),
+            ment: MemEntropyAnalyzer::new(),
+            reuse: ReuseAnalyzer::new(),
+            ilp: IlpAnalyzer::new(n_regs),
+            dlp: DlpAnalyzer::for_program(prog),
+            bblp: BblpAnalyzer::new(n_regs),
+            pbblp: PbblpAnalyzer::new(prog),
+            tasks: None,
+        }
+    }
+
+    /// Full stack, every metric enabled.
+    pub fn full(prog: &Program) -> Self {
+        Self::new(prog, MetricSet::all())
+    }
+
+    /// Additionally collect the region/task trace both machine models
+    /// consume (used by `coordinator::profile_app`).
+    ///
+    /// Invariant: `prog` must be the same program this stack was built
+    /// from — the collector's loop/region structure comes from
+    /// `prog.loops`, and a mismatched program would silently produce a
+    /// task trace for the wrong control structure.
+    pub fn with_task_trace(mut self, prog: &Program) -> Self {
+        self.tasks = Some(TaskTraceCollector::new(prog));
+        self
+    }
+
+    /// Consume the stack: finalize every analyzer into one [`AppMetrics`]
+    /// and, when task tracing was enabled, the region trace.
+    pub fn finalize(self, exec: ExecStats) -> (AppMetrics, Option<Vec<Region>>) {
+        let mem_entropy = self.ment.finalize(ENTROPY_SLOTS);
+        let reuse = self.reuse.finalize();
+        let spatial = spatial::from_reuse(&reuse);
+        let mut bblp = self.bblp;
+        let mut pbblp = self.pbblp;
+        let metrics = AppMetrics {
+            name: self.name,
+            mix: self.mix,
+            branch: self.branch,
+            mem_entropy,
+            reuse,
+            spatial,
+            ilp: self.ilp.finalize(),
+            dlp: self.dlp.finalize(),
+            bblp: bblp.finalize(),
+            pbblp: pbblp.finalize(),
+            exec,
+        };
+        let regions = self.tasks.map(|t| t.finalize());
+        (metrics, regions)
+    }
+}
+
+impl Instrument for AnalyzerStack {
+    fn on_event(&mut self, ev: &TraceEvent) {
+        let m = self.metrics;
+        if m.contains(Metric::Mix) {
+            self.mix.on_event(ev);
+        }
+        if m.contains(Metric::Branch) {
+            self.branch.on_event(ev);
+        }
+        if m.contains(Metric::MemEntropy) {
+            self.ment.on_event(ev);
+        }
+        if m.contains(Metric::Reuse) {
+            self.reuse.on_event(ev);
+        }
+        if m.contains(Metric::Ilp) {
+            self.ilp.on_event(ev);
+        }
+        if m.contains(Metric::Dlp) {
+            self.dlp.on_event(ev);
+        }
+        if m.contains(Metric::Bblp) {
+            self.bblp.on_event(ev);
+        }
+        if m.contains(Metric::Pbblp) {
+            self.pbblp.on_event(ev);
+        }
+        if let Some(t) = self.tasks.as_mut() {
+            t.on_event(ev);
+        }
+    }
+
+    /// The hot path: each enabled analyzer sweeps the cache-resident chunk
+    /// with its tuned `on_chunk`; all dispatch here is static.
+    fn on_chunk(&mut self, events: &[TraceEvent]) {
+        let m = self.metrics;
+        if m.contains(Metric::Mix) {
+            self.mix.on_chunk(events);
+        }
+        if m.contains(Metric::Branch) {
+            self.branch.on_chunk(events);
+        }
+        if m.contains(Metric::MemEntropy) {
+            self.ment.on_chunk(events);
+        }
+        if m.contains(Metric::Reuse) {
+            self.reuse.on_chunk(events);
+        }
+        if m.contains(Metric::Ilp) {
+            self.ilp.on_chunk(events);
+        }
+        if m.contains(Metric::Dlp) {
+            self.dlp.on_chunk(events);
+        }
+        if m.contains(Metric::Bblp) {
+            self.bblp.on_chunk(events);
+        }
+        if m.contains(Metric::Pbblp) {
+            self.pbblp.on_chunk(events);
+        }
+        if let Some(t) = self.tasks.as_mut() {
+            t.on_chunk(events);
+        }
+    }
+}
+
+fn profile_impl(prog: &Program, metrics: MetricSet, chunked: bool) -> Result<AppMetrics> {
     crate::ir::verify::verify_ok(prog);
-    let n_regs = prog.func.n_regs;
-    let mut mix = MixAnalyzer::new();
-    let mut branch = BranchAnalyzer::new();
-    let mut ment = MemEntropyAnalyzer::new();
-    let mut reuse = ReuseAnalyzer::new();
-    let mut ilp = IlpAnalyzer::new(n_regs);
-    let mut dlp = DlpAnalyzer::for_program(prog);
-    let mut bblp = BblpAnalyzer::new(n_regs);
-    let mut pbblp = PbblpAnalyzer::new(prog);
-
-    let (out, _machine) = {
-        let mut fan = Fanout::new(vec![
-            &mut mix,
-            &mut branch,
-            &mut ment,
-            &mut reuse,
-            &mut ilp,
-            &mut dlp,
-            &mut bblp,
-            &mut pbblp,
-        ]);
-        run_program(prog, &mut fan)?
+    let mut stack = AnalyzerStack::new(prog, metrics);
+    let mut machine = Machine::new(prog)?;
+    let out = if chunked {
+        machine.run(&mut stack)?
+    } else {
+        machine.run_per_event(&mut stack)?
     };
+    Ok(stack.finalize(out.stats).0)
+}
 
-    let mem_entropy = ment.finalize(ENTROPY_SLOTS);
-    let reuse_res = reuse.finalize();
-    let spatial = spatial::from_reuse(&reuse_res);
-    Ok(AppMetrics {
-        name: prog.func.name.clone(),
-        mix,
-        branch,
-        mem_entropy,
-        reuse: reuse_res,
-        spatial,
-        ilp: ilp.finalize(),
-        dlp: dlp.finalize(),
-        bblp: bblp.finalize(),
-        pbblp: pbblp.finalize(),
-        exec: out.stats,
-    })
+/// Run `prog` once, streaming the trace through every analyzer (chunked
+/// delivery — the default fast path).
+pub fn profile(prog: &Program) -> Result<AppMetrics> {
+    profile_impl(prog, MetricSet::all(), true)
+}
+
+/// [`profile`] restricted to a metric subset. Disabled families come back
+/// as shape-stable empty results.
+pub fn profile_select(prog: &Program, metrics: MetricSet) -> Result<AppMetrics> {
+    profile_impl(prog, metrics, true)
+}
+
+/// Reference path: identical to [`profile`] but with one `on_event` call
+/// per trace event instead of chunked delivery. Exists so the
+/// chunked-equivalence property test and the dispatch microbenchmarks have
+/// an unbatched baseline; not used by the pipeline.
+pub fn profile_per_event(prog: &Program) -> Result<AppMetrics> {
+    profile_impl(prog, MetricSet::all(), false)
 }
 
 impl AppMetrics {
@@ -148,6 +420,11 @@ impl AppMetrics {
         j.set("bblp", self.bblp.to_json());
         j.set("pbblp", self.pbblp.to_json());
         j.set("dyn_instrs", self.exec.dyn_instrs);
+        let mut exec = Json::obj();
+        exec.set("events", self.exec.events());
+        exec.set("wall_s", self.exec.wall_s);
+        exec.set("events_per_sec", self.exec.events_per_sec());
+        j.set("exec", exec);
         j
     }
 }
@@ -186,6 +463,48 @@ mod tests {
     }
 
     #[test]
+    fn chunked_profile_matches_per_event_reference() {
+        let p = tiny_program();
+        let a = profile(&p).unwrap();
+        let b = profile_per_event(&p).unwrap();
+        let pa = a.pca8_features();
+        let pb = b.pca8_features();
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{pa:?} vs {pb:?}");
+        }
+        assert_eq!(a.mix.per_op, b.mix.per_op);
+        assert_eq!(a.mem_entropy.count_of_counts, b.mem_entropy.count_of_counts);
+        assert_eq!(a.reuse.hist, b.reuse.hist);
+        assert_eq!(a.exec.dyn_instrs, b.exec.dyn_instrs);
+    }
+
+    #[test]
+    fn metric_selection_feeds_only_chosen_families() {
+        let p = tiny_program();
+        let sel = MetricSet::from_names("mix,dlp").unwrap();
+        assert_eq!(sel.names(), vec!["mix", "dlp"]);
+        let m = profile_select(&p, sel).unwrap();
+        assert!(m.mix.total() > 0);
+        assert!(m.dlp.dlp > 1.0);
+        // disabled families are shape-stable but empty
+        assert_eq!(m.mem_entropy.accesses, 0);
+        assert_eq!(m.mem_entropy.entropies.len(), 11);
+        assert_eq!(m.reuse.accesses, 0);
+        assert_eq!(m.bblp.values.len(), 4);
+        assert_eq!(m.branch.dyn_branches(), 0);
+    }
+
+    #[test]
+    fn metric_set_parsing() {
+        assert!(MetricSet::from_names("all").unwrap().is_all());
+        assert!(MetricSet::from_names("").unwrap().is_all());
+        let s = MetricSet::from_names("spatial").unwrap();
+        assert!(s.contains(Metric::Reuse));
+        assert!(!s.contains(Metric::Mix));
+        assert!(MetricSet::from_names("mix,bogus").is_err());
+    }
+
+    #[test]
     fn feature_vectors_consistent() {
         let m = profile(&tiny_program()).unwrap();
         let p4 = m.pca4_features();
@@ -206,6 +525,7 @@ mod tests {
             "dlp",
             "bblp",
             "pbblp",
+            "events_per_sec",
         ] {
             assert!(s.contains(key), "missing {key}");
         }

@@ -128,6 +128,8 @@ impl PbblpAnalyzer {
     }
 }
 
+// Chunk delivery uses the default `on_chunk` (a statically-dispatched loop
+// over `on_event` — there is no per-chunk state worth hoisting here).
 impl Instrument for PbblpAnalyzer {
     fn on_event(&mut self, ev: &TraceEvent) {
         match ev {

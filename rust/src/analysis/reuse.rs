@@ -135,6 +135,10 @@ pub fn bin_values() -> [f32; N_DIST_BINS] {
 #[derive(Debug, Clone)]
 pub struct ReuseAnalyzer {
     trackers: Vec<Tracker>,
+    /// Chunk-path scratch: the chunk's memory addresses, densely packed so
+    /// each tracker sweeps a contiguous slice (allocation reused across
+    /// chunks).
+    scratch: Vec<u64>,
 }
 
 /// Finalized DTR results.
@@ -161,6 +165,7 @@ impl ReuseAnalyzer {
     pub fn new() -> Self {
         ReuseAnalyzer {
             trackers: LINE_SHIFTS.iter().map(|&s| Tracker::new(s)).collect(),
+            scratch: Vec::new(),
         }
     }
 
@@ -188,6 +193,30 @@ impl Instrument for ReuseAnalyzer {
         if let TraceEvent::Instr(i) = ev {
             if let Some(m) = i.mem {
                 self.record(m.addr);
+            }
+        }
+    }
+
+    /// Chunk path: the per-event loop over the 8 trackers is inverted.
+    /// Addresses are first packed into a dense scratch slice, then each
+    /// tracker sweeps the whole slice — so one tracker's map/Fenwick state
+    /// stays hot for thousands of accesses instead of being evicted 8 ways
+    /// per event. Per-tracker order is unchanged, so distances are exact.
+    fn on_chunk(&mut self, events: &[TraceEvent]) {
+        self.scratch.clear();
+        for ev in events {
+            if let TraceEvent::Instr(i) = ev {
+                if let Some(m) = i.mem {
+                    self.scratch.push(m.addr);
+                }
+            }
+        }
+        if self.scratch.is_empty() {
+            return;
+        }
+        for t in &mut self.trackers {
+            for &addr in &self.scratch {
+                t.access(addr);
             }
         }
     }

@@ -20,7 +20,7 @@ pub struct Args {
 }
 
 /// Flags that take a value; everything else is boolean.
-const VALUE_FLAGS: &[&str] = &["scale", "seed", "threads", "out", "kernel", "n"];
+const VALUE_FLAGS: &[&str] = &["scale", "seed", "threads", "out", "kernel", "n", "metrics"];
 
 pub fn parse(argv: &[String]) -> Result<Args> {
     let mut a = Args::default();
@@ -104,10 +104,11 @@ pisa-nmc — Platform-Independent Software Analysis for Near-Memory Computing
 (reproduction of Corda et al., cs.PF 2019; see DESIGN.md)
 
 USAGE:
-  pisa-nmc pipeline [--scale F] [--seed N] [--threads N] [--no-pjrt] [--out FILE]
+  pisa-nmc pipeline [--scale F] [--seed N] [--threads N] [--metrics LIST]
+                    [--no-pjrt] [--out FILE]
         full suite: profile 12 kernels, run host+NMC sims, PJRT analytics,
         print every table and figure (writes JSON report with --out)
-  pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--json]
+  pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--metrics LIST] [--json]
         profile a single kernel and print its metrics
   pisa-nmc figure {3a|3b|3c|4|5|6} [pipeline flags]
         regenerate one paper figure
@@ -118,6 +119,11 @@ USAGE:
   pisa-nmc ir --kernel NAME [--n N]
         dump a kernel's mini-IR
   pisa-nmc help
+
+--metrics LIST selects analyzer families (comma-separated:
+mix,branch,mem_entropy,reuse,ilp,dlp,bblp,pbblp — or `all`, the default);
+deselected families report empty results (ilp stays on when the machine
+simulations run: the host model needs it).
 
 Artifacts are searched in ./artifacts (or $PISA_NMC_ARTIFACTS); build them
 with `make artifacts`. --no-pjrt forces the native analytics fallback.
@@ -139,6 +145,13 @@ mod tests {
         assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.5);
         assert!(a.has("no-pjrt"));
         assert!(!a.has("json"));
+    }
+
+    #[test]
+    fn metrics_flag_takes_a_value() {
+        let a = args(&["analyze", "--kernel", "atax", "--metrics", "mix,dlp"]);
+        assert_eq!(a.get("metrics"), Some("mix,dlp"));
+        assert!(parse(&["pipeline".into(), "--metrics".into()]).is_err());
     }
 
     #[test]

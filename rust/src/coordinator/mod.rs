@@ -13,10 +13,11 @@ pub mod pipeline;
 
 pub use figures::{analyze_suite, Engine, SuiteAnalytics};
 pub use pca::{pca, Pca};
-pub use pipeline::{profile_app, run_suite, AppResult};
+pub use pipeline::{profile_app, profile_app_select, run_suite, run_suite_select, AppResult};
 
 use anyhow::Result;
 
+use crate::analysis::MetricSet;
 use crate::runtime::Runtime;
 use crate::util::Json;
 
@@ -26,18 +27,36 @@ pub struct PipelineReport {
     pub analytics: SuiteAnalytics,
     pub scale: f64,
     pub seed: u64,
+    /// Analyzer families that were enabled for this run.
+    pub metrics: MetricSet,
 }
 
-/// Run the full pipeline: profile suite → artifacts analytics → report.
+/// Run the full pipeline with every metric enabled.
 pub fn run_pipeline(
     scale: f64,
     seed: u64,
     threads: usize,
     rt: Option<&Runtime>,
 ) -> Result<PipelineReport> {
-    let apps = run_suite(scale, seed, threads)?;
+    run_pipeline_select(scale, seed, threads, rt, MetricSet::all())
+}
+
+/// Run the full pipeline: profile suite (selected analyzer families) →
+/// artifacts analytics → report. `metrics` is the CLI `--metrics` flag,
+/// threaded into every worker's `AnalyzerStack`.
+pub fn run_pipeline_select(
+    scale: f64,
+    seed: u64,
+    threads: usize,
+    rt: Option<&Runtime>,
+    metrics: MetricSet,
+) -> Result<PipelineReport> {
+    // same effective set the workers profile with, so the report's
+    // "metrics" list describes the families that actually ran
+    let metrics = metrics.with_simulation_requirements();
+    let apps = run_suite_select(scale, seed, threads, metrics)?;
     let analytics = analyze_suite(&apps, rt)?;
-    Ok(PipelineReport { apps, analytics, scale, seed })
+    Ok(PipelineReport { apps, analytics, scale, seed, metrics })
 }
 
 impl PipelineReport {
@@ -47,6 +66,24 @@ impl PipelineReport {
         j.set("seed", self.seed);
         j.set("engine", self.analytics.engine.name());
         j.set("crosscheck_err", self.analytics.max_crosscheck_err);
+        j.set(
+            "metrics",
+            self.metrics
+                .names()
+                .iter()
+                .map(|n| Json::Str(n.to_string()))
+                .collect::<Vec<Json>>(),
+        );
+        // suite-level profiler throughput: total events over summed
+        // per-app wall time (workers overlap, so this is a conservative
+        // aggregate — per-app numbers live under each app's "exec")
+        let total_events: u64 = self.apps.iter().map(|a| a.metrics.exec.events()).sum();
+        let total_wall: f64 = self.apps.iter().map(|a| a.metrics.exec.wall_s).sum();
+        j.set("profile_events", total_events);
+        j.set(
+            "profile_events_per_sec",
+            if total_wall > 0.0 { total_events as f64 / total_wall } else { 0.0 },
+        );
         let mut apps = Json::obj();
         for (i, a) in self.apps.iter().enumerate() {
             let mut o = a.metrics.to_json();

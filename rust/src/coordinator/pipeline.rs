@@ -1,7 +1,8 @@
 //! The profiling pipeline: fan the 12 workloads out over worker threads,
-//! run each through one instrumented execution (all analyzers + the task
-//! trace in a single pass) and both machine models, then post-process the
-//! numeric analytics through the PJRT artifacts on the main thread.
+//! run each through one instrumented execution (the full `AnalyzerStack`
+//! plus the task trace in a single chunked pass) and both machine models,
+//! then post-process the numeric analytics through the PJRT artifacts on
+//! the main thread.
 //!
 //! Rust owns the event loop and process topology (L3 of the architecture);
 //! the PJRT artifacts own the batched numeric analytics (L2/L1). Worker
@@ -13,9 +14,9 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
-use crate::analysis::{self, AppMetrics};
-use crate::interp::{run_program, Fanout};
-use crate::sim::{self, EdpComparison, Region, TaskTraceCollector};
+use crate::analysis::{AnalyzerStack, AppMetrics, MetricSet};
+use crate::interp::run_program;
+use crate::sim::{self, EdpComparison, Region};
 use crate::workloads::{registry, scaled_n, Kernel};
 
 /// Per-application pipeline output.
@@ -27,58 +28,45 @@ pub struct AppResult {
     pub cmp: EdpComparison,
 }
 
-/// Profile one kernel: single instrumented execution feeding every analyzer
-/// *and* the task-trace collector, then both machine simulations.
+impl AppResult {
+    /// Profiler throughput for this app (trace events per wall second) —
+    /// surfaced in the pipeline JSON so perf regressions show up in
+    /// reports, not just in benches.
+    pub fn events_per_sec(&self) -> f64 {
+        self.metrics.exec.events_per_sec()
+    }
+}
+
+/// Profile one kernel with every metric enabled.
 pub fn profile_app(k: &dyn Kernel, n: usize, seed: u64) -> Result<AppResult> {
+    profile_app_select(k, n, seed, MetricSet::all())
+}
+
+/// Profile one kernel: single chunked instrumented execution feeding the
+/// selected analyzers *and* the task-trace collector, then both machine
+/// simulations. This is `analysis::profile_select` plus the simulation
+/// layer — both build the same [`AnalyzerStack`].
+///
+/// Sim-required families (ILP — see
+/// [`MetricSet::with_simulation_requirements`]) are force-enabled
+/// regardless of `metrics`.
+pub fn profile_app_select(
+    k: &dyn Kernel,
+    n: usize,
+    seed: u64,
+    metrics: MetricSet,
+) -> Result<AppResult> {
+    let metrics = metrics.with_simulation_requirements();
     let prog = k.build(n, seed);
     crate::ir::verify::verify_ok(&prog);
-    let n_regs = prog.func.n_regs;
 
-    let mut mix = analysis::MixAnalyzer::new();
-    let mut branch = analysis::BranchAnalyzer::new();
-    let mut ment = analysis::MemEntropyAnalyzer::new();
-    let mut reuse = analysis::ReuseAnalyzer::new();
-    let mut ilp = analysis::IlpAnalyzer::new(n_regs);
-    let mut dlp = analysis::DlpAnalyzer::for_program(&prog);
-    let mut bblp = analysis::BblpAnalyzer::new(n_regs);
-    let mut pbblp = analysis::PbblpAnalyzer::new(&prog);
-    let mut tasks = TaskTraceCollector::new(&prog);
-
-    let (out, _machine) = {
-        let mut fan = Fanout::new(vec![
-            &mut mix,
-            &mut branch,
-            &mut ment,
-            &mut reuse,
-            &mut ilp,
-            &mut dlp,
-            &mut bblp,
-            &mut pbblp,
-            &mut tasks,
-        ]);
-        run_program(&prog, &mut fan).with_context(|| format!("running {}", k.info().name))?
-    };
-
-    let mem_entropy = ment.finalize(analysis::ENTROPY_SLOTS);
-    let reuse_res = reuse.finalize();
-    let spatial = analysis::spatial::from_reuse(&reuse_res);
-    let ilp_res = ilp.finalize();
-    let metrics = AppMetrics {
-        name: prog.func.name.clone(),
-        mix,
-        branch,
-        mem_entropy,
-        reuse: reuse_res,
-        spatial,
-        ilp: ilp_res,
-        dlp: dlp.finalize(),
-        bblp: bblp.finalize(),
-        pbblp: pbblp.finalize(),
-        exec: out.stats,
-    };
+    let mut stack = AnalyzerStack::new(&prog, metrics).with_task_trace(&prog);
+    let (out, _machine) =
+        run_program(&prog, &mut stack).with_context(|| format!("running {}", k.info().name))?;
+    let (metrics, regions) = stack.finalize(out.stats);
+    let regions: Vec<Region> = regions.expect("task trace enabled");
 
     // both machine models consume the same region trace
-    let regions: Vec<Region> = tasks.finalize();
     let ilp256 = metrics
         .ilp
         .windowed
@@ -95,9 +83,20 @@ pub fn profile_app(k: &dyn Kernel, n: usize, seed: u64) -> Result<AppResult> {
     Ok(AppResult { name: metrics.name.clone(), n, metrics, cmp })
 }
 
-/// Run the whole suite, `scale` applied to every kernel's default size.
-/// Results come back in registry order regardless of completion order.
+/// Run the whole suite with every metric enabled.
 pub fn run_suite(scale: f64, seed: u64, threads: usize) -> Result<Vec<AppResult>> {
+    run_suite_select(scale, seed, threads, MetricSet::all())
+}
+
+/// Run the whole suite, `scale` applied to every kernel's default size and
+/// `metrics` selecting the analyzer families. Results come back in
+/// registry order regardless of completion order.
+pub fn run_suite_select(
+    scale: f64,
+    seed: u64,
+    threads: usize,
+    metrics: MetricSet,
+) -> Result<Vec<AppResult>> {
     let kernels = registry();
     let n_jobs = kernels.len();
     let threads = threads
@@ -120,7 +119,7 @@ pub fn run_suite(scale: f64, seed: u64, threads: usize) -> Result<Vec<AppResult>
                 // fresh registry per thread: Kernel is stateless
                 let k = &registry()[idx];
                 let n = scaled_n(k.as_ref(), scale);
-                let res = profile_app(k.as_ref(), n, seed);
+                let res = profile_app_select(k.as_ref(), n, seed, metrics);
                 if tx.send((idx, res)).is_err() {
                     break;
                 }
@@ -153,6 +152,30 @@ mod tests {
         assert!(r.metrics.exec.dyn_instrs > 1000);
         assert!(r.cmp.host.time_s > 0.0 && r.cmp.nmc.time_s > 0.0);
         assert_eq!(r.cmp.host.dyn_instrs, r.cmp.nmc.dyn_instrs);
+        assert!(r.events_per_sec() > 0.0, "throughput must be recorded");
+    }
+
+    #[test]
+    fn profile_app_matches_analysis_profile() {
+        // both entry points build the same AnalyzerStack: metrics agree
+        let k = by_name("gesummv").unwrap();
+        let r = profile_app(k.as_ref(), 16, 1).unwrap();
+        let m = crate::analysis::profile(&k.build(16, 1)).unwrap();
+        assert_eq!(r.metrics.pca8_features(), m.pca8_features());
+        assert_eq!(r.metrics.exec.dyn_instrs, m.exec.dyn_instrs);
+    }
+
+    #[test]
+    fn metric_subset_still_simulates() {
+        // ilp deliberately NOT selected: profile_app must force it on so
+        // the host model simulates with measured ILP, not a zeroed one
+        let k = by_name("gesummv").unwrap();
+        let sel = MetricSet::from_names("mix").unwrap();
+        let r = profile_app_select(k.as_ref(), 16, 1, sel).unwrap();
+        assert!(r.metrics.mix.total() > 0);
+        assert!(r.metrics.ilp.inf >= 1.0, "ILP must be force-enabled for sims");
+        assert!(r.cmp.host.time_s > 0.0 && r.cmp.nmc.time_s > 0.0);
+        assert_eq!(r.metrics.mem_entropy.accesses, 0);
     }
 
     #[test]

@@ -1,11 +1,20 @@
 //! The execution engine: runs a program concretely and emits the
 //! instrumentation stream (PISA's instrumented-binary run, §II Fig 1).
+//!
+//! The inner loop is written once, generic over an [`EventSink`] delivery
+//! strategy, and monomorphized twice: [`Machine::run`] batches events into
+//! a reusable [`EventChunk`] flushed at block boundaries (the default, fast
+//! path), [`Machine::run_per_event`] delivers one virtual call per event
+//! (the reference path the chunked-equivalence property test checks
+//! against, and the dispatch baseline in `benches/perf_micro.rs`).
+
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::events::{Instrument, InstrEvent, MemAccess, TraceEvent};
+use super::events::{EventChunk, Instrument, InstrEvent, MemAccess, TraceEvent};
 use super::memory::Memory;
-use crate::ir::{Imm, Op, Program, Terminator, Value};
+use crate::ir::{Imm, Instr, Op, Program, Terminator, Value};
 
 /// Execution statistics returned with every run.
 #[derive(Debug, Clone, Default)]
@@ -15,6 +24,25 @@ pub struct ExecStats {
     pub dyn_branches: u64,
     pub mem_reads: u64,
     pub mem_writes: u64,
+    /// Wall-clock seconds spent inside the run (execution + analyzers).
+    pub wall_s: f64,
+}
+
+impl ExecStats {
+    /// Total trace events emitted (block entries + instructions + branches).
+    pub fn events(&self) -> u64 {
+        self.dyn_blocks + self.dyn_instrs + self.dyn_branches
+    }
+
+    /// Events per second of wall time — the profiler throughput number the
+    /// pipeline reports so perf regressions are visible in every run.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.events() as f64 / self.wall_s
+        }
+    }
 }
 
 /// Result of a completed run.
@@ -22,6 +50,67 @@ pub struct ExecStats {
 pub struct Outcome {
     pub ret: Option<Value>,
     pub stats: ExecStats,
+}
+
+/// How the inner loop hands events to the instrumentation. Monomorphized:
+/// the chunked and per-event strategies each get their own copy of the
+/// interpreter loop with no per-event indirection of their own.
+trait EventSink {
+    fn event(&mut self, ev: TraceEvent);
+    /// About to execute a block with `upcoming` instructions (+ entry and
+    /// possibly a branch event). Chunked delivery flushes here when the
+    /// buffer lacks headroom, so flushes land on block boundaries.
+    fn block_boundary(&mut self, upcoming: usize);
+    /// End of run: deliver anything still buffered.
+    fn finish(&mut self);
+}
+
+/// Per-event delivery: one `on_event` virtual call per trace event.
+struct PerEvent<'s> {
+    sink: &'s mut dyn Instrument,
+}
+
+impl EventSink for PerEvent<'_> {
+    #[inline]
+    fn event(&mut self, ev: TraceEvent) {
+        self.sink.on_event(&ev);
+    }
+
+    #[inline]
+    fn block_boundary(&mut self, _upcoming: usize) {}
+
+    fn finish(&mut self) {}
+}
+
+/// Chunked delivery: events accumulate in a reusable fixed-capacity buffer
+/// and reach the instrumentation as `on_chunk` slices.
+struct Chunked<'s> {
+    sink: &'s mut dyn Instrument,
+    chunk: EventChunk,
+}
+
+impl EventSink for Chunked<'_> {
+    #[inline]
+    fn event(&mut self, ev: TraceEvent) {
+        // the boundary check keeps headroom for a whole block; a single
+        // block larger than the buffer still flushes safely mid-block
+        if self.chunk.is_full() {
+            self.chunk.flush_into(self.sink);
+        }
+        self.chunk.push(ev);
+    }
+
+    #[inline]
+    fn block_boundary(&mut self, upcoming: usize) {
+        // +2: the BlockEnter event and a possible terminating Branch event
+        if self.chunk.remaining() < upcoming + 2 {
+            self.chunk.flush_into(self.sink);
+        }
+    }
+
+    fn finish(&mut self) {
+        self.chunk.flush_into(self.sink);
+    }
 }
 
 /// A loaded program plus its memory image. Keeping the machine around after
@@ -51,17 +140,134 @@ impl<'p> Machine<'p> {
         self.regs[r as usize]
     }
 
-    /// Execute to completion, streaming events into `instr`.
+    /// Execute to completion, streaming events into `sink` in chunks (the
+    /// default profiling path).
     pub fn run(&mut self, sink: &mut dyn Instrument) -> Result<Outcome> {
+        let mut delivery = Chunked { sink, chunk: EventChunk::new() };
+        self.run_with(&mut delivery)
+    }
+
+    /// Execute to completion with one `on_event` call per trace event — the
+    /// un-batched reference path. Metrics computed over either path are
+    /// bit-identical (see `rust/tests/prop_chunked.rs`).
+    pub fn run_per_event(&mut self, sink: &mut dyn Instrument) -> Result<Outcome> {
+        let mut delivery = PerEvent { sink };
+        self.run_with(&mut delivery)
+    }
+
+    /// Execute one instruction: compute, write the destination register,
+    /// and report the memory access (if any) for the event stream.
+    #[inline(always)]
+    fn exec_instr(&mut self, ins: &Instr, stats: &mut ExecStats) -> Result<Option<MemAccess>> {
+        let s = ins.sources();
+        let mut mem_ev: Option<MemAccess> = None;
+        let result: Option<Value> = match ins.op {
+            Op::ConstI => match ins.imm {
+                Imm::I(v) => Some(Value::I(v)),
+                _ => bail!("consti without int imm"),
+            },
+            Op::ConstF => match ins.imm {
+                Imm::F(v) => Some(Value::F(v)),
+                _ => bail!("constf without float imm"),
+            },
+            Op::Mov => Some(self.reg(s[0])),
+            Op::Select => Some(if self.reg(s[0]).truthy() {
+                self.reg(s[1])
+            } else {
+                self.reg(s[2])
+            }),
+            Op::Add => Some(Value::I(self.reg(s[0]).as_i().wrapping_add(self.reg(s[1]).as_i()))),
+            Op::Sub => Some(Value::I(self.reg(s[0]).as_i().wrapping_sub(self.reg(s[1]).as_i()))),
+            Op::Mul => Some(Value::I(self.reg(s[0]).as_i().wrapping_mul(self.reg(s[1]).as_i()))),
+            Op::Div => {
+                let d = self.reg(s[1]).as_i();
+                if d == 0 {
+                    bail!("integer division by zero in {}", self.prog.func.name);
+                }
+                Some(Value::I(self.reg(s[0]).as_i().wrapping_div(d)))
+            }
+            Op::Rem => {
+                let d = self.reg(s[1]).as_i();
+                if d == 0 {
+                    bail!("integer remainder by zero in {}", self.prog.func.name);
+                }
+                Some(Value::I(self.reg(s[0]).as_i().wrapping_rem(d)))
+            }
+            Op::And => Some(Value::I(self.reg(s[0]).as_i() & self.reg(s[1]).as_i())),
+            Op::Or => Some(Value::I(self.reg(s[0]).as_i() | self.reg(s[1]).as_i())),
+            Op::Xor => Some(Value::I(self.reg(s[0]).as_i() ^ self.reg(s[1]).as_i())),
+            Op::Shl => Some(Value::I(
+                self.reg(s[0]).as_i().wrapping_shl(self.reg(s[1]).as_i() as u32),
+            )),
+            Op::Shr => Some(Value::I(
+                (self.reg(s[0]).as_i() as u64).wrapping_shr(self.reg(s[1]).as_i() as u32) as i64,
+            )),
+            Op::FAdd => Some(Value::F(self.reg(s[0]).as_f() + self.reg(s[1]).as_f())),
+            Op::FSub => Some(Value::F(self.reg(s[0]).as_f() - self.reg(s[1]).as_f())),
+            Op::FMul => Some(Value::F(self.reg(s[0]).as_f() * self.reg(s[1]).as_f())),
+            Op::FDiv => Some(Value::F(self.reg(s[0]).as_f() / self.reg(s[1]).as_f())),
+            Op::FNeg => Some(Value::F(-self.reg(s[0]).as_f())),
+            Op::FSqrt => Some(Value::F(self.reg(s[0]).as_f().sqrt())),
+            Op::FExp => Some(Value::F(self.reg(s[0]).as_f().exp())),
+            Op::FAbs => Some(Value::F(self.reg(s[0]).as_f().abs())),
+            Op::FMin => Some(Value::F(self.reg(s[0]).as_f().min(self.reg(s[1]).as_f()))),
+            Op::FMax => Some(Value::F(self.reg(s[0]).as_f().max(self.reg(s[1]).as_f()))),
+            Op::IToF => Some(Value::F(self.reg(s[0]).as_i() as f64)),
+            Op::FToI => Some(Value::I(self.reg(s[0]).as_f() as i64)),
+            Op::CmpEq => Some(Value::I((self.reg(s[0]).as_i() == self.reg(s[1]).as_i()) as i64)),
+            Op::CmpNe => Some(Value::I((self.reg(s[0]).as_i() != self.reg(s[1]).as_i()) as i64)),
+            Op::CmpLt => Some(Value::I((self.reg(s[0]).as_i() < self.reg(s[1]).as_i()) as i64)),
+            Op::CmpLe => Some(Value::I((self.reg(s[0]).as_i() <= self.reg(s[1]).as_i()) as i64)),
+            Op::CmpGt => Some(Value::I((self.reg(s[0]).as_i() > self.reg(s[1]).as_i()) as i64)),
+            Op::CmpGe => Some(Value::I((self.reg(s[0]).as_i() >= self.reg(s[1]).as_i()) as i64)),
+            Op::FCmpEq => Some(Value::I((self.reg(s[0]).as_f() == self.reg(s[1]).as_f()) as i64)),
+            Op::FCmpLt => Some(Value::I((self.reg(s[0]).as_f() < self.reg(s[1]).as_f()) as i64)),
+            Op::FCmpLe => Some(Value::I((self.reg(s[0]).as_f() <= self.reg(s[1]).as_f()) as i64)),
+            Op::FCmpGt => Some(Value::I((self.reg(s[0]).as_f() > self.reg(s[1]).as_f()) as i64)),
+            Op::Load => {
+                let addr = self.reg(s[0]).as_i() as u64;
+                let raw = self.mem.load(addr, ins.size)?;
+                stats.mem_reads += 1;
+                mem_ev = Some(MemAccess { addr, size: ins.size, is_store: false });
+                Some(if ins.size == 8 && ins.fp {
+                    Value::F(f64::from_bits(raw))
+                } else {
+                    Value::I(raw as i64)
+                })
+            }
+            Op::Store => {
+                let addr = self.reg(s[1]).as_i() as u64;
+                let raw = match self.reg(s[0]) {
+                    Value::F(v) if ins.size == 8 && ins.fp => v.to_bits(),
+                    Value::F(v) if !ins.fp => (v as i64) as u64,
+                    v => v.as_i() as u64,
+                };
+                self.mem.store(addr, ins.size, raw)?;
+                stats.mem_writes += 1;
+                mem_ev = Some(MemAccess { addr, size: ins.size, is_store: true });
+                None
+            }
+        };
+        if let (Some(d), Some(v)) = (ins.dst, result) {
+            self.regs[d as usize] = v;
+        }
+        Ok(mem_ev)
+    }
+
+    /// The interpreter loop, generic over the event-delivery strategy.
+    fn run_with<S: EventSink>(&mut self, delivery: &mut S) -> Result<Outcome> {
+        let t0 = Instant::now();
         let mut stats = ExecStats::default();
         let mut bb = 0u32;
-        let blocks = &self.prog.func.blocks;
+        let prog = self.prog;
+        let blocks = &prog.func.blocks;
         loop {
             let block = blocks
                 .get(bb as usize)
                 .with_context(|| format!("bad block id {bb}"))?;
+            delivery.block_boundary(block.instrs.len());
             stats.dyn_blocks += 1;
-            sink.on_event(&TraceEvent::BlockEnter { block: bb });
+            delivery.event(TraceEvent::BlockEnter { block: bb });
 
             for ins in &block.instrs {
                 stats.dyn_instrs += 1;
@@ -72,100 +278,8 @@ impl<'p> Machine<'p> {
                         self.prog.func.name
                     );
                 }
-                let s = ins.sources();
-                let mut mem_ev: Option<MemAccess> = None;
-                let result: Option<Value> = match ins.op {
-                    Op::ConstI => match ins.imm {
-                        Imm::I(v) => Some(Value::I(v)),
-                        _ => bail!("consti without int imm"),
-                    },
-                    Op::ConstF => match ins.imm {
-                        Imm::F(v) => Some(Value::F(v)),
-                        _ => bail!("constf without float imm"),
-                    },
-                    Op::Mov => Some(self.reg(s[0])),
-                    Op::Select => Some(if self.reg(s[0]).truthy() {
-                        self.reg(s[1])
-                    } else {
-                        self.reg(s[2])
-                    }),
-                    Op::Add => Some(Value::I(self.reg(s[0]).as_i().wrapping_add(self.reg(s[1]).as_i()))),
-                    Op::Sub => Some(Value::I(self.reg(s[0]).as_i().wrapping_sub(self.reg(s[1]).as_i()))),
-                    Op::Mul => Some(Value::I(self.reg(s[0]).as_i().wrapping_mul(self.reg(s[1]).as_i()))),
-                    Op::Div => {
-                        let d = self.reg(s[1]).as_i();
-                        if d == 0 {
-                            bail!("integer division by zero in {}", self.prog.func.name);
-                        }
-                        Some(Value::I(self.reg(s[0]).as_i().wrapping_div(d)))
-                    }
-                    Op::Rem => {
-                        let d = self.reg(s[1]).as_i();
-                        if d == 0 {
-                            bail!("integer remainder by zero in {}", self.prog.func.name);
-                        }
-                        Some(Value::I(self.reg(s[0]).as_i().wrapping_rem(d)))
-                    }
-                    Op::And => Some(Value::I(self.reg(s[0]).as_i() & self.reg(s[1]).as_i())),
-                    Op::Or => Some(Value::I(self.reg(s[0]).as_i() | self.reg(s[1]).as_i())),
-                    Op::Xor => Some(Value::I(self.reg(s[0]).as_i() ^ self.reg(s[1]).as_i())),
-                    Op::Shl => Some(Value::I(
-                        self.reg(s[0]).as_i().wrapping_shl(self.reg(s[1]).as_i() as u32),
-                    )),
-                    Op::Shr => Some(Value::I(
-                        (self.reg(s[0]).as_i() as u64).wrapping_shr(self.reg(s[1]).as_i() as u32)
-                            as i64,
-                    )),
-                    Op::FAdd => Some(Value::F(self.reg(s[0]).as_f() + self.reg(s[1]).as_f())),
-                    Op::FSub => Some(Value::F(self.reg(s[0]).as_f() - self.reg(s[1]).as_f())),
-                    Op::FMul => Some(Value::F(self.reg(s[0]).as_f() * self.reg(s[1]).as_f())),
-                    Op::FDiv => Some(Value::F(self.reg(s[0]).as_f() / self.reg(s[1]).as_f())),
-                    Op::FNeg => Some(Value::F(-self.reg(s[0]).as_f())),
-                    Op::FSqrt => Some(Value::F(self.reg(s[0]).as_f().sqrt())),
-                    Op::FExp => Some(Value::F(self.reg(s[0]).as_f().exp())),
-                    Op::FAbs => Some(Value::F(self.reg(s[0]).as_f().abs())),
-                    Op::FMin => Some(Value::F(self.reg(s[0]).as_f().min(self.reg(s[1]).as_f()))),
-                    Op::FMax => Some(Value::F(self.reg(s[0]).as_f().max(self.reg(s[1]).as_f()))),
-                    Op::IToF => Some(Value::F(self.reg(s[0]).as_i() as f64)),
-                    Op::FToI => Some(Value::I(self.reg(s[0]).as_f() as i64)),
-                    Op::CmpEq => Some(Value::I((self.reg(s[0]).as_i() == self.reg(s[1]).as_i()) as i64)),
-                    Op::CmpNe => Some(Value::I((self.reg(s[0]).as_i() != self.reg(s[1]).as_i()) as i64)),
-                    Op::CmpLt => Some(Value::I((self.reg(s[0]).as_i() < self.reg(s[1]).as_i()) as i64)),
-                    Op::CmpLe => Some(Value::I((self.reg(s[0]).as_i() <= self.reg(s[1]).as_i()) as i64)),
-                    Op::CmpGt => Some(Value::I((self.reg(s[0]).as_i() > self.reg(s[1]).as_i()) as i64)),
-                    Op::CmpGe => Some(Value::I((self.reg(s[0]).as_i() >= self.reg(s[1]).as_i()) as i64)),
-                    Op::FCmpEq => Some(Value::I((self.reg(s[0]).as_f() == self.reg(s[1]).as_f()) as i64)),
-                    Op::FCmpLt => Some(Value::I((self.reg(s[0]).as_f() < self.reg(s[1]).as_f()) as i64)),
-                    Op::FCmpLe => Some(Value::I((self.reg(s[0]).as_f() <= self.reg(s[1]).as_f()) as i64)),
-                    Op::FCmpGt => Some(Value::I((self.reg(s[0]).as_f() > self.reg(s[1]).as_f()) as i64)),
-                    Op::Load => {
-                        let addr = self.reg(s[0]).as_i() as u64;
-                        let raw = self.mem.load(addr, ins.size)?;
-                        stats.mem_reads += 1;
-                        mem_ev = Some(MemAccess { addr, size: ins.size, is_store: false });
-                        Some(if ins.size == 8 && ins.fp {
-                            Value::F(f64::from_bits(raw))
-                        } else {
-                            Value::I(raw as i64)
-                        })
-                    }
-                    Op::Store => {
-                        let addr = self.reg(s[1]).as_i() as u64;
-                        let raw = match self.reg(s[0]) {
-                            Value::F(v) if ins.size == 8 && ins.fp => v.to_bits(),
-                            Value::F(v) if !ins.fp => (v as i64) as u64,
-                            v => v.as_i() as u64,
-                        };
-                        self.mem.store(addr, ins.size, raw)?;
-                        stats.mem_writes += 1;
-                        mem_ev = Some(MemAccess { addr, size: ins.size, is_store: true });
-                        None
-                    }
-                };
-                if let (Some(d), Some(v)) = (ins.dst, result) {
-                    self.regs[d as usize] = v;
-                }
-                sink.on_event(&TraceEvent::Instr(InstrEvent {
+                let mem_ev = self.exec_instr(ins, &mut stats)?;
+                delivery.event(TraceEvent::Instr(InstrEvent {
                     op: ins.op,
                     dst: ins.dst,
                     srcs: ins.srcs,
@@ -180,11 +294,13 @@ impl<'p> Machine<'p> {
                 Terminator::Br { cond, then_, else_ } => {
                     let taken = self.reg(*cond).truthy();
                     stats.dyn_branches += 1;
-                    sink.on_event(&TraceEvent::Branch { block: bb, taken });
+                    delivery.event(TraceEvent::Branch { block: bb, taken });
                     bb = if taken { *then_ } else { *else_ };
                 }
                 Terminator::Ret(r) => {
+                    delivery.finish();
                     let ret = r.map(|r| self.reg(r));
+                    stats.wall_s = t0.elapsed().as_secs_f64();
                     return Ok(Outcome { ret, stats });
                 }
             }
@@ -192,8 +308,8 @@ impl<'p> Machine<'p> {
     }
 }
 
-/// One-shot convenience: build a machine, run, return outcome and machine
-/// (for post-run buffer inspection).
+/// One-shot convenience: build a machine, run (chunked delivery), return
+/// outcome and machine (for post-run buffer inspection).
 pub fn run_program<'p>(
     prog: &'p Program,
     sink: &mut dyn Instrument,
@@ -244,6 +360,33 @@ mod tests {
         assert_eq!(out.ret.unwrap().as_f(), 55.0);
         assert_eq!(c.loads, 10);
         assert_eq!(out.stats.dyn_branches, 11); // 10 taken + 1 exit
+        assert_eq!(c.instrs + c.blocks + c.branches, out.stats.events());
+    }
+
+    #[test]
+    fn chunked_and_per_event_counts_agree() {
+        let mut b = ProgramBuilder::new("eq");
+        let a = b.alloc_f64("a", 256);
+        let n = b.const_i(256);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(a, i);
+            let w = b.fadd(v, v);
+            b.store_f64(a, i, w);
+        });
+        let p = b.finish(None);
+        let mut chunked = Counter::default();
+        let mut per_event = Counter::default();
+        let o1 = Machine::new(&p).unwrap().run(&mut chunked).unwrap();
+        let o2 = Machine::new(&p).unwrap().run_per_event(&mut per_event).unwrap();
+        assert_eq!(o1.stats.dyn_instrs, o2.stats.dyn_instrs);
+        assert_eq!(o1.stats.dyn_blocks, o2.stats.dyn_blocks);
+        assert_eq!(o1.stats.dyn_branches, o2.stats.dyn_branches);
+        assert_eq!(
+            (chunked.instrs, chunked.blocks, chunked.branches, chunked.loads, chunked.stores),
+            (per_event.instrs, per_event.blocks, per_event.branches, per_event.loads, per_event.stores)
+        );
+        assert!(o1.stats.wall_s > 0.0);
+        assert!(o1.stats.events_per_sec() > 0.0);
     }
 
     #[test]

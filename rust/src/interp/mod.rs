@@ -4,6 +4,9 @@ pub mod events;
 pub mod machine;
 pub mod memory;
 
-pub use events::{Counter, Fanout, Instrument, InstrEvent, MemAccess, NullInstrument, TraceEvent};
+pub use events::{
+    Counter, EventChunk, Fanout, Instrument, InstrEvent, MemAccess, NullInstrument, TraceEvent,
+    CHUNK_EVENTS,
+};
 pub use machine::{run_program, ExecStats, Machine, Outcome};
 pub use memory::Memory;

@@ -5,6 +5,7 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
+use pisa_nmc::analysis::MetricSet;
 use pisa_nmc::cli::{self, Args};
 use pisa_nmc::coordinator::{self, figures};
 use pisa_nmc::report::save_json;
@@ -42,14 +43,24 @@ fn load_runtime(args: &Args) -> Option<Runtime> {
     }
 }
 
+/// Parse the `--metrics` analyzer-family selection (default: all).
+fn metric_set(args: &Args) -> Result<MetricSet> {
+    match args.get("metrics") {
+        Some(spec) => MetricSet::from_names(spec),
+        None => Ok(MetricSet::all()),
+    }
+}
+
 fn run(args: Args) -> Result<()> {
     match args.command.as_str() {
         "pipeline" => {
             let scale = args.get_f64("scale", 1.0)?;
             let seed = args.get_u64("seed", 42)?;
             let threads = args.get_usize("threads", 8)?;
+            let metrics = metric_set(&args)?;
             let rt = load_runtime(&args);
-            let report = coordinator::run_pipeline(scale, seed, threads, rt.as_ref())?;
+            let report =
+                coordinator::run_pipeline_select(scale, seed, threads, rt.as_ref(), metrics)?;
             print!("{}", report.render_all());
             if report.analytics.engine == coordinator::Engine::Pjrt {
                 eprintln!(
@@ -68,7 +79,8 @@ fn run(args: Args) -> Result<()> {
             let k = workloads::by_name(name)?;
             let n = args.get_usize("n", k.default_n())?;
             let seed = args.get_u64("seed", 42)?;
-            let r = coordinator::profile_app(k.as_ref(), n, seed)?;
+            let metrics = metric_set(&args)?;
+            let r = coordinator::profile_app_select(k.as_ref(), n, seed, metrics)?;
             if args.has("json") {
                 let mut j = r.metrics.to_json();
                 j.set("edp", r.cmp.to_json());
@@ -76,6 +88,10 @@ fn run(args: Args) -> Result<()> {
             } else {
                 println!("{} (n={})", r.name, r.n);
                 println!("  dyn instrs        {}", r.metrics.exec.dyn_instrs);
+                println!(
+                    "  profile rate      {:.2}M events/s",
+                    r.events_per_sec() / 1e6
+                );
                 println!(
                     "  mem entropy(1B)   {:.3} bits",
                     r.metrics.mem_entropy.entropies[0]
@@ -98,8 +114,10 @@ fn run(args: Args) -> Result<()> {
             let scale = args.get_f64("scale", 1.0)?;
             let seed = args.get_u64("seed", 42)?;
             let threads = args.get_usize("threads", 8)?;
+            let metrics = metric_set(&args)?;
             let rt = load_runtime(&args);
-            let report = coordinator::run_pipeline(scale, seed, threads, rt.as_ref())?;
+            let report =
+                coordinator::run_pipeline_select(scale, seed, threads, rt.as_ref(), metrics)?;
             let (text, _json) = match which.as_str() {
                 "3a" => figures::fig3a(&report.apps, &report.analytics),
                 "3b" => figures::fig3b(&report.apps, &report.analytics),

@@ -308,6 +308,8 @@ impl TaskTraceCollector {
     }
 }
 
+// Chunk delivery uses the default `on_chunk` (a statically-dispatched loop
+// over `on_event` — there is no per-chunk state worth hoisting here).
 impl Instrument for TaskTraceCollector {
     fn on_event(&mut self, ev: &TraceEvent) {
         match ev {

@@ -1,0 +1,133 @@
+//! Chunked-pipeline equivalence property: for seeded random programs from
+//! `testkit`, profiling through the chunked `EventChunk`/`on_chunk` hot
+//! path produces **bit-identical** `AppMetrics` to the per-event reference
+//! path — pca8 feature vectors, entropy histograms (count-of-counts),
+//! reuse-distance CDFs, instruction mix, ILP windows, BBLP/PBBLP and the
+//! dynamic-count stats all compared exactly. This is the safety net under
+//! every tuned `on_chunk` implementation: any reordering or lost/duplicated
+//! event shows up here as a bit mismatch.
+
+use pisa_nmc::analysis::{profile, profile_per_event, AppMetrics};
+use pisa_nmc::prop_assert;
+use pisa_nmc::testkit::{check_seeded, random_program};
+
+/// Exact comparison of every metric surface. f64s are compared by bit
+/// pattern: the two paths must execute the *same arithmetic in the same
+/// order*, not merely land close.
+fn assert_bit_identical(a: &AppMetrics, b: &AppMetrics) -> Result<(), String> {
+    let (pa, pb) = (a.pca8_features(), b.pca8_features());
+    for (i, (x, y)) in pa.iter().zip(&pb).enumerate() {
+        prop_assert!(
+            x.to_bits() == y.to_bits(),
+            "pca8[{i}]: chunked {x} vs per-event {y}"
+        );
+    }
+
+    // instruction mix
+    prop_assert!(a.mix.per_op == b.mix.per_op, "per-op mix differs");
+    prop_assert!(
+        (a.mix.branches, a.mix.blocks) == (b.mix.branches, b.mix.blocks),
+        "mix branch/block counts differ"
+    );
+
+    // memory entropy: per-granularity entropies and count-of-counts
+    for (g, (x, y)) in a
+        .mem_entropy
+        .entropies
+        .iter()
+        .zip(&b.mem_entropy.entropies)
+        .enumerate()
+    {
+        prop_assert!(x.to_bits() == y.to_bits(), "entropy[{g}] {x} vs {y}");
+    }
+    prop_assert!(
+        a.mem_entropy.count_of_counts == b.mem_entropy.count_of_counts,
+        "entropy count-of-counts differ"
+    );
+    prop_assert!(
+        a.mem_entropy.unique_addrs == b.mem_entropy.unique_addrs
+            && a.mem_entropy.accesses == b.mem_entropy.accesses,
+        "entropy footprint/access counts differ"
+    );
+
+    // reuse: full distance histograms (the CDF data) + means + cold counts
+    prop_assert!(a.reuse.hist == b.reuse.hist, "reuse histograms differ");
+    prop_assert!(
+        a.reuse.cold == b.reuse.cold && a.reuse.footprint == b.reuse.footprint,
+        "reuse cold/footprint differ"
+    );
+    for (l, (x, y)) in a.reuse.avg_dtr.iter().zip(&b.reuse.avg_dtr).enumerate() {
+        prop_assert!(x.to_bits() == y.to_bits(), "avg_dtr[{l}] {x} vs {y}");
+    }
+    for (l, (x, y)) in a.spatial.scores.iter().zip(&b.spatial.scores).enumerate() {
+        prop_assert!(x.to_bits() == y.to_bits(), "spatial[{l}] {x} vs {y}");
+    }
+
+    // parallelism family
+    for ((wa, va), (wb, vb)) in a.ilp.windowed.iter().zip(&b.ilp.windowed) {
+        prop_assert!(
+            wa == wb && va.to_bits() == vb.to_bits(),
+            "ILP_{wa} {va} vs ILP_{wb} {vb}"
+        );
+    }
+    prop_assert!(
+        a.ilp.inf.to_bits() == b.ilp.inf.to_bits()
+            && a.ilp.critical_path == b.ilp.critical_path,
+        "ILP_inf / critical path differ"
+    );
+    prop_assert!(a.dlp.dlp.to_bits() == b.dlp.dlp.to_bits(), "DLP differs");
+    prop_assert!(a.dlp.per_op.len() == b.dlp.per_op.len(), "DLP per-op len");
+    for (x, y) in a.bblp.values.iter().zip(&b.bblp.values) {
+        prop_assert!(x.to_bits() == y.to_bits(), "BBLP {x} vs {y}");
+    }
+    prop_assert!(a.bblp.instances == b.bblp.instances, "BB instances differ");
+    prop_assert!(
+        a.pbblp.pbblp.to_bits() == b.pbblp.pbblp.to_bits()
+            && a.pbblp.iterations == b.pbblp.iterations,
+        "PBBLP differs"
+    );
+
+    // branch entropy
+    prop_assert!(
+        a.branch.weighted_entropy().to_bits() == b.branch.weighted_entropy().to_bits()
+            && a.branch.dyn_branches() == b.branch.dyn_branches()
+            && a.branch.static_sites() == b.branch.static_sites(),
+        "branch entropy differs"
+    );
+
+    // dynamic counts (wall_s legitimately differs)
+    prop_assert!(
+        a.exec.dyn_instrs == b.exec.dyn_instrs
+            && a.exec.dyn_blocks == b.exec.dyn_blocks
+            && a.exec.dyn_branches == b.exec.dyn_branches
+            && a.exec.mem_reads == b.exec.mem_reads
+            && a.exec.mem_writes == b.exec.mem_writes,
+        "exec stats differ"
+    );
+    Ok(())
+}
+
+#[test]
+fn chunked_profile_is_bit_identical_to_per_event() {
+    check_seeded("chunked == per-event", 0xC41C, 32, |rng| {
+        let p = random_program(rng);
+        let chunked = profile(&p).map_err(|e| e.to_string())?;
+        let reference = profile_per_event(&p).map_err(|e| e.to_string())?;
+        assert_bit_identical(&chunked, &reference)
+    });
+}
+
+#[test]
+fn chunked_profile_is_bit_identical_on_real_kernels() {
+    // the suite kernels exercise nested loops, reductions and irregular
+    // access patterns at sizes spanning several chunk flushes
+    for (name, n) in [("gesummv", 24), ("atax", 24), ("bfs", 24), ("kmeans", 12)] {
+        let k = pisa_nmc::workloads::by_name(name).unwrap();
+        let p = k.build(n, 7);
+        let chunked = profile(&p).unwrap();
+        let reference = profile_per_event(&p).unwrap();
+        if let Err(msg) = assert_bit_identical(&chunked, &reference) {
+            panic!("{name}: {msg}");
+        }
+    }
+}

@@ -1,99 +1,16 @@
-//! Property tests driven by a *random structured-program generator*: build
-//! arbitrary (but well-formed) mini-IR programs, execute them, and check
+//! Property tests driven by the random structured-program generator in
+//! `testkit` (`random_program`): build arbitrary (but well-formed) mini-IR
+//! programs, execute them, and check
 //! the pipeline-wide invariants the coordinator depends on — verification,
 //! bounded execution, work conservation between the analyzers and the
 //! task-trace, and machine-model sanity.
 
 use pisa_nmc::interp::{run_program, Counter, Machine, NullInstrument};
-use pisa_nmc::ir::{verify::verify, Program, ProgramBuilder, Reg};
+use pisa_nmc::ir::verify::verify;
 use pisa_nmc::prop_assert;
 use pisa_nmc::sim::{simulate_host, simulate_nmc, Region, TaskTraceCollector};
-use pisa_nmc::testkit::{check_seeded, usize_in};
+use pisa_nmc::testkit::{check_seeded, random_program};
 use pisa_nmc::util::Rng;
-
-/// Generate a random structured program: nested counted loops (bounded trip
-/// counts), arithmetic over a register pool, loads/stores into a shared
-/// buffer with in-bounds random indexing, and the occasional if/else.
-fn random_program(rng: &mut Rng) -> Program {
-    let mut b = ProgramBuilder::new("rand");
-    let len = 64usize;
-    let data: Vec<f64> = (0..len).map(|_| rng.range_f64(0.5, 2.0)).collect();
-    let buf = b.alloc_f64_init("buf", &data);
-    let len_reg = b.const_i(len as i64);
-
-    let mut pool: Vec<Reg> = (0..4).map(|i| b.const_f(1.0 + i as f64)).collect();
-    let depth = usize_in(rng, 1, 3);
-    gen_block(&mut b, rng, &mut pool, buf, len_reg, depth);
-    let ret = pool[0];
-    b.finish(Some(ret))
-}
-
-fn gen_block(
-    b: &mut ProgramBuilder,
-    rng: &mut Rng,
-    pool: &mut Vec<Reg>,
-    buf: pisa_nmc::ir::BufRef,
-    len_reg: Reg,
-    depth: usize,
-) {
-    for _ in 0..usize_in(rng, 1, 5) {
-        match rng.below(if depth > 0 { 5 } else { 3 }) {
-            0 => {
-                // arithmetic: fadd/fmul of two pool regs (stays finite:
-                // magnitudes bounded by construction below)
-                let x = pool[usize_in(rng, 0, pool.len() - 1)];
-                let y = pool[usize_in(rng, 0, pool.len() - 1)];
-                let z = if rng.below(2) == 0 { b.fadd(x, y) } else { b.fmul(x, y) };
-                // clamp via fmin to keep values bounded across loops
-                let cap = b.const_f(4.0);
-                let z = b.fmin(z, cap);
-                let slot = usize_in(rng, 0, pool.len() - 1);
-                pool[slot] = z;
-            }
-            1 => {
-                // load buf[idx % len]
-                let idx_c = b.const_i(rng.below(64) as i64);
-                let v = b.load_f64(buf, idx_c);
-                let slot = usize_in(rng, 0, pool.len() - 1);
-                pool[slot] = v;
-            }
-            2 => {
-                // store pool reg to buf[idx]
-                let idx_c = b.const_i(rng.below(64) as i64);
-                let v = pool[usize_in(rng, 0, pool.len() - 1)];
-                b.store_f64(buf, idx_c, v);
-            }
-            3 => {
-                // bounded counted loop
-                let trip = b.const_i(1 + rng.below(8) as i64);
-                let mut inner_pool = pool.clone();
-                // deterministic sub-rng so closure borrows don't fight
-                let mut sub = Rng::new(rng.next_u64());
-                b.counted_loop(trip, |b, i| {
-                    let idx = b.rem(i, len_reg);
-                    let v = b.load_f64(buf, idx);
-                    inner_pool[0] = v;
-                    gen_block(b, &mut sub, &mut inner_pool, buf, len_reg, depth - 1);
-                });
-            }
-            _ => {
-                // if/else on a data comparison
-                let x = pool[usize_in(rng, 0, pool.len() - 1)];
-                let y = pool[usize_in(rng, 0, pool.len() - 1)];
-                let c = b.fcmp_lt(x, y);
-                let mut sub1 = Rng::new(rng.next_u64());
-                let mut sub2 = Rng::new(rng.next_u64());
-                let mut p1 = pool.clone();
-                let mut p2 = pool.clone();
-                b.if_then_else(
-                    c,
-                    |b| gen_block(b, &mut sub1, &mut p1, buf, len_reg, 0),
-                    |b| gen_block(b, &mut sub2, &mut p2, buf, len_reg, 0),
-                );
-            }
-        }
-    }
-}
 
 #[test]
 fn random_programs_verify_and_terminate() {
