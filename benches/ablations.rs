@@ -96,7 +96,10 @@ fn main() -> anyhow::Result<()> {
         buckets[(a.wrapping_mul(0x9E3779B97F4A7C15) >> 52) as usize] += 1;
     }
     let approx = shannon_entropy_counts(buckets.iter().copied());
-    println!("exact byte-granularity entropy : {:.4} bits (count-of-counts ABI)", exact.entropies[0]);
+    println!(
+        "exact byte-granularity entropy : {:.4} bits (count-of-counts ABI)",
+        exact.entropies[0]
+    );
     println!("4096-bucket hashed histogram   : {approx:.4} bits");
     println!(
         "approximation error            : {:.2} bits — why the artifact ships (count, multiplicity) pairs\n",
@@ -109,8 +112,7 @@ fn main() -> anyhow::Result<()> {
     let regions = collect(&prog)?;
     println!("{:>10} {:>12} {:>12} {:>12}", "granule", "t (ms)", "remote frac", "EDP (J*s)");
     for granule in [256u64, 1024, 2048, 8192, 65536] {
-        let mut cfg = NmcConfig::default();
-        cfg.vault_block_bytes = granule;
+        let cfg = NmcConfig { vault_block_bytes: granule, ..NmcConfig::default() };
         let r = nmc_with(cfg, &regions);
         println!(
             "{:>10} {:>12.3} {:>12.2} {:>12.3e}",
@@ -124,8 +126,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n== ablation D: NMC PE L1 size (Table 1 says 2 lines) ==\n");
     println!("{:>10} {:>12} {:>14}", "L1 lines", "t (ms)", "DRAM lines");
     for lines in [2usize, 8, 64, 512] {
-        let mut cfg = NmcConfig::default();
-        cfg.l1_lines = lines;
+        let cfg = NmcConfig { l1_lines: lines, ..NmcConfig::default() };
         let r = nmc_with(cfg, &regions);
         println!("{:>10} {:>12.3} {:>14}", lines, r.time_s * 1e3, r.dram_lines);
     }

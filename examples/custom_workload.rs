@@ -116,10 +116,16 @@ fn main() -> anyhow::Result<()> {
     // 3. full analysis + machine comparison
     let r = profile_app(&k, k.default_n(), 42)?;
     println!("== stencil5 (n={}) ==", r.n);
-    println!("spat_8B_16B     : {:.3} (stencils are spatially friendly)", r.metrics.spatial.spat_8b_16b());
+    println!(
+        "spat_8B_16B     : {:.3} (stencils are spatially friendly)",
+        r.metrics.spatial.spat_8b_16b()
+    );
     println!("PBBLP           : {:.0} (rows are data-parallel)", r.metrics.pbblp.pbblp);
     println!("entropy_diff    : {:.3}", r.metrics.mem_entropy.entropy_diff);
-    println!("EDP improvement : {:.2}x → {}", r.cmp.edp_improvement(),
-        if r.cmp.nmc_suitable() { "offload to NMC" } else { "keep on host" });
+    println!(
+        "EDP improvement : {:.2}x → {}",
+        r.cmp.edp_improvement(),
+        if r.cmp.nmc_suitable() { "offload to NMC" } else { "keep on host" }
+    );
     Ok(())
 }

@@ -34,7 +34,10 @@ fn main() -> anyhow::Result<()> {
         r.metrics.mem_entropy.entropies[10]
     );
     println!("entropy_diff_mem     : {:.4}  (Fig 5 metric)", r.metrics.mem_entropy.entropy_diff);
-    println!("spat_8B_16B          : {:.4}  (Fig 3b / Fig 6 feature)", r.metrics.spatial.spat_8b_16b());
+    println!(
+        "spat_8B_16B          : {:.4}  (Fig 3b / Fig 6 feature)",
+        r.metrics.spatial.spat_8b_16b()
+    );
     println!("DLP                  : {:.2}", r.metrics.dlp.dlp);
     println!(
         "BBLP_1..4            : {:?}",

@@ -308,7 +308,7 @@ pub fn fig6(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
             format!("{x:+.3}"),
             format!("{y:+.3}"),
             quad.to_string(),
-            format!("{}", a.cmp.nmc_suitable()),
+            a.cmp.nmc_suitable().to_string(),
         ]);
         let mut o = Json::obj();
         o.set("pc1", x);
@@ -382,7 +382,7 @@ pub fn table2(scale: f64) -> String {
             info.name.into(),
             info.param_name.into(),
             info.paper_value.into(),
-            format!("{}", crate::workloads::scaled_n(k.as_ref(), scale)),
+            crate::workloads::scaled_n(k.as_ref(), scale).to_string(),
         ]);
     }
     format!("Table 2 — benchmark parameters\n{}", t.render())

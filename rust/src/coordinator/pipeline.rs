@@ -99,10 +99,8 @@ pub fn run_suite_select(
 ) -> Result<Vec<AppResult>> {
     let kernels = registry();
     let n_jobs = kernels.len();
-    let threads = threads
-        .max(1)
-        .min(n_jobs)
-        .min(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4));
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let threads = threads.clamp(1, n_jobs.min(hw).max(1));
 
     // job queue: indices into the registry, pulled by workers
     let jobs: Mutex<Vec<usize>> = Mutex::new((0..n_jobs).rev().collect());

@@ -383,7 +383,13 @@ mod tests {
         assert_eq!(o1.stats.dyn_branches, o2.stats.dyn_branches);
         assert_eq!(
             (chunked.instrs, chunked.blocks, chunked.branches, chunked.loads, chunked.stores),
-            (per_event.instrs, per_event.blocks, per_event.branches, per_event.loads, per_event.stores)
+            (
+                per_event.instrs,
+                per_event.blocks,
+                per_event.branches,
+                per_event.loads,
+                per_event.stores
+            )
         );
         assert!(o1.stats.wall_s > 0.0);
         assert!(o1.stats.events_per_sec() > 0.0);
