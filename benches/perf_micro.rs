@@ -66,6 +66,13 @@ fn main() -> anyhow::Result<()> {
         let mut m = Machine::new(&prog).unwrap();
         std::hint::black_box(m.run(&mut stack).unwrap());
     });
+    bench("dispatch_offload (AnalyzerStack, analysis thread)", 1, 3, Some((n, "instr")), || {
+        // same stack, folding on a dedicated thread overlapped with the
+        // interpreter (chunks cross the bounded offload channel)
+        let mut stack = AnalyzerStack::full(&prog);
+        let mut m = Machine::new(&prog).unwrap();
+        std::hint::black_box(pisa_nmc::interp::run_offload(&mut m, &mut stack).unwrap());
+    });
     bench("analyzer_mix", 1, 5, Some((n, "instr")), || {
         let mut a = MixAnalyzer::new();
         run_with(&prog, &mut a);

@@ -1,51 +1,76 @@
-//! Suite-level profiler throughput: the wall-clock number the chunked
-//! event pipeline is accountable to. Runs `run_suite` at the default bench
-//! scale (override with `PISA_BENCH_SCALE`), reports total trace events
-//! per second of end-to-end suite time plus each app's own profiling rate
-//! from `ExecStats`, then re-runs every kernel through the per-event
-//! reference path for the before/after dispatch comparison.
+//! Suite-level profiler throughput: the wall-clock number the chunked +
+//! offloaded event pipeline is accountable to. Runs the suite at the
+//! default bench scale (override with `PISA_BENCH_SCALE`) in both
+//! [`PipelineMode`]s, reports total trace events per second of end-to-end
+//! suite time, then runs every kernel through all three delivery paths
+//! (per-event reference, inline chunked, offloaded) for the per-app
+//! dispatch/overlap comparison.
+//!
+//! With `--bench-json` the suite numbers land in `BENCH_pipeline.json` at
+//! the repo root, so successive PRs have a perf trajectory to diff against.
 //!
 //! ```bash
-//! cargo bench --bench throughput            # scale 0.25
+//! cargo bench --bench throughput                     # scale 0.25
 //! PISA_BENCH_SCALE=1.0 cargo bench --bench throughput
+//! cargo bench --bench throughput -- --bench-json     # + BENCH_pipeline.json
 //! ```
 
 use std::time::Instant;
 
-use pisa_nmc::analysis::{profile, profile_per_event};
-use pisa_nmc::coordinator::run_suite;
+use pisa_nmc::analysis::{profile, profile_offload, profile_per_event, MetricSet};
+use pisa_nmc::coordinator::{run_suite_select, AppResult};
+use pisa_nmc::interp::PipelineMode;
 use pisa_nmc::testkit::bench::bench_scale;
+use pisa_nmc::util::Json;
 use pisa_nmc::workloads::{registry, scaled_n};
+
+/// One end-to-end suite run; returns per-app results and events/s of wall.
+fn suite_arm(scale: f64, mode: PipelineMode) -> anyhow::Result<(Vec<AppResult>, f64)> {
+    let t0 = Instant::now();
+    let apps = run_suite_select(scale, 42, 8, MetricSet::all(), mode)?;
+    let suite_s = t0.elapsed().as_secs_f64();
+    let total_events: u64 = apps.iter().map(|a| a.metrics.exec.events()).sum();
+    Ok((apps, total_events as f64 / suite_s))
+}
 
 fn main() -> anyhow::Result<()> {
     let scale = bench_scale();
+    let emit_json = std::env::args().any(|a| a == "--bench-json");
     println!("== profiler throughput (scale {scale}) ==\n");
 
-    // end-to-end suite: chunked pipeline, all analyzers + sims
-    let t0 = Instant::now();
-    let apps = run_suite(scale, 42, 8)?;
-    let suite_s = t0.elapsed().as_secs_f64();
-    let total_events: u64 = apps.iter().map(|a| a.metrics.exec.events()).sum();
+    // end-to-end suite in both delivery modes: all analyzers + sims
+    let (inline_apps, inline_eps) = suite_arm(scale, PipelineMode::Inline)?;
+    let (offload_apps, offload_eps) = suite_arm(scale, PipelineMode::Offload)?;
 
-    println!("{:<14} {:>14} {:>10} {:>14}", "app", "events", "wall", "events/s");
-    for a in &apps {
+    println!(
+        "{:<14} {:>14} {:>12} {:>12} {:>8}",
+        "app", "events", "inline", "offload", "overlap"
+    );
+    for (a, o) in inline_apps.iter().zip(&offload_apps) {
         println!(
-            "{:<14} {:>14} {:>9.3}s {:>13.2}M",
+            "{:<14} {:>14} {:>10.2}M/s {:>10.2}M/s {:>7.2}x",
             a.name,
             a.metrics.exec.events(),
-            a.metrics.exec.wall_s,
             a.events_per_sec() / 1e6,
+            o.events_per_sec() / 1e6,
+            o.events_per_sec() / a.events_per_sec().max(1e-9),
         );
     }
     println!(
-        "\nsuite: {total_events} events in {suite_s:.3}s wall ({:.2}M events/s end-to-end; worker threads overlap)\n",
-        total_events as f64 / suite_s / 1e6,
+        "\nsuite end-to-end: inline {:.2}M events/s, offload {:.2}M events/s → {:.2}x\n",
+        inline_eps / 1e6,
+        offload_eps / 1e6,
+        offload_eps / inline_eps.max(1e-9),
     );
 
-    // chunked vs per-event dispatch, single-threaded, analyzers only —
-    // isolates the event-delivery cost the refactor removed
-    println!("{:<14} {:>12} {:>12} {:>8}", "app", "per-event", "chunked", "speedup");
-    let (mut tot_ref, mut tot_chunk) = (0.0f64, 0.0f64);
+    // three-way dispatch comparison, single app at a time, analyzers only —
+    // isolates the event-delivery cost (per-event virtual calls vs chunked
+    // lane sweeps vs chunked + interpretation/analysis overlap)
+    println!(
+        "{:<14} {:>12} {:>12} {:>12} {:>8} {:>8}",
+        "app", "per-event", "inline", "offload", "chunk x", "ovlp x"
+    );
+    let (mut tot_ref, mut tot_inline, mut tot_offload) = (0.0f64, 0.0f64, 0.0f64);
     for k in registry() {
         let n = scaled_n(k.as_ref(), scale);
         let prog = k.build(n, 42);
@@ -54,21 +79,54 @@ fn main() -> anyhow::Result<()> {
         let ref_s = t.elapsed().as_secs_f64();
         let t = Instant::now();
         let c = profile(&prog)?;
-        let chunk_s = t.elapsed().as_secs_f64();
+        let inline_s = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let o = profile_offload(&prog)?;
+        let offload_s = t.elapsed().as_secs_f64();
         assert_eq!(r.exec.dyn_instrs, c.exec.dyn_instrs);
+        assert_eq!(c.exec.dyn_instrs, o.exec.dyn_instrs);
         tot_ref += ref_s;
-        tot_chunk += chunk_s;
+        tot_inline += inline_s;
+        tot_offload += offload_s;
         println!(
-            "{:<14} {:>11.3}s {:>11.3}s {:>7.2}x",
+            "{:<14} {:>11.3}s {:>11.3}s {:>11.3}s {:>7.2}x {:>7.2}x",
             k.info().name,
             ref_s,
-            chunk_s,
-            ref_s / chunk_s
+            inline_s,
+            offload_s,
+            ref_s / inline_s,
+            inline_s / offload_s,
         );
     }
     println!(
-        "\ntotal: per-event {tot_ref:.3}s, chunked {tot_chunk:.3}s → {:.2}x",
-        tot_ref / tot_chunk
+        "\ntotal: per-event {tot_ref:.3}s, inline {tot_inline:.3}s, offload {tot_offload:.3}s"
     );
+    println!(
+        "       chunked dispatch {:.2}x, offload overlap {:.2}x (vs inline)",
+        tot_ref / tot_inline,
+        tot_inline / tot_offload
+    );
+
+    if emit_json {
+        let mut j = Json::obj();
+        j.set("scale", scale);
+        let mut suite = Json::obj();
+        suite.set("inline_events_per_sec", inline_eps);
+        suite.set("offload_events_per_sec", offload_eps);
+        suite.set("offload_speedup", offload_eps / inline_eps.max(1e-9));
+        j.set("suite", suite);
+        let mut apps = Json::obj();
+        for (a, o) in inline_apps.iter().zip(&offload_apps) {
+            let mut app = Json::obj();
+            app.set("events", a.metrics.exec.events());
+            app.set("inline_events_per_sec", a.events_per_sec());
+            app.set("offload_events_per_sec", o.events_per_sec());
+            apps.set(&a.name, app);
+        }
+        j.set("apps", apps);
+        let path = std::path::Path::new("BENCH_pipeline.json");
+        pisa_nmc::report::save_json(path, &j)?;
+        println!("\nwrote {}", path.display());
+    }
     Ok(())
 }

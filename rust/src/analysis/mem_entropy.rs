@@ -16,7 +16,7 @@
 
 use crate::util::FastMap;
 
-use crate::interp::{Instrument, TraceEvent};
+use crate::interp::{ChunkLanes, Instrument, TraceEvent};
 use crate::util::stats::shannon_entropy_counts;
 use crate::util::Json;
 
@@ -153,34 +153,28 @@ impl Instrument for MemEntropyAnalyzer {
         }
     }
 
-    /// Chunk path: consecutive accesses to the same byte address (scalar
-    /// accumulators, repeated flag stores) are run-length folded so the hash
-    /// map sees one probe per run, and the access counter accumulates in a
-    /// register across the chunk.
-    fn on_chunk(&mut self, events: &[TraceEvent]) {
-        let mut last = 0u64;
-        let mut run = 0u32;
-        let mut n = 0u64;
-        for ev in events {
-            if let TraceEvent::Instr(i) = ev {
-                if let Some(m) = i.mem {
-                    n += 1;
-                    if run > 0 && m.addr == last {
-                        run += 1;
-                    } else {
-                        if run > 0 {
-                            *self.counts.entry(last).or_insert(0) += run;
-                        }
-                        last = m.addr;
-                        run = 1;
-                    }
-                }
+    /// Lane path (the hot path): sweep the chunk's dense packed-address
+    /// lane — no enum unpacking per event. Consecutive accesses to the same
+    /// byte address (scalar accumulators, repeated flag stores) are
+    /// run-length folded so the hash map sees one probe per run, and the
+    /// access counter accumulates once per chunk.
+    fn on_chunk_lanes(&mut self, _events: &[TraceEvent], lanes: &ChunkLanes) {
+        let addrs = lanes.addrs();
+        self.accesses += addrs.len() as u64;
+        let mut i = 0;
+        while i < addrs.len() {
+            let a = addrs[i];
+            let mut j = i + 1;
+            while j < addrs.len() && addrs[j] == a {
+                j += 1;
             }
+            *self.counts.entry(a).or_insert(0) += (j - i) as u32;
+            i = j;
         }
-        if run > 0 {
-            *self.counts.entry(last).or_insert(0) += run;
-        }
-        self.accesses += n;
+    }
+
+    fn wants_lanes(&self) -> bool {
+        true
     }
 }
 
@@ -279,6 +273,44 @@ mod tests {
                 r.entropies[g]
             );
         }
+    }
+
+    #[test]
+    fn lane_sweep_matches_per_event_records() {
+        // mixture of runs and jumps exercises the run-length fold
+        let mut rng = Rng::new(11);
+        let addrs = crate::testkit::address_trace(&mut rng, 4000, 1 << 12);
+        let mut per_event = MemEntropyAnalyzer::new();
+        for &a in &addrs {
+            per_event.record(a);
+        }
+        // feed the same trace through the lane path in chunks
+        let mut lane = MemEntropyAnalyzer::new();
+        let mut lanes = ChunkLanes::default();
+        for chunk in addrs.chunks(512) {
+            let events: Vec<TraceEvent> = chunk
+                .iter()
+                .map(|&addr| {
+                    TraceEvent::Instr(crate::interp::InstrEvent {
+                        op: crate::ir::Op::Load,
+                        dst: Some(0),
+                        srcs: [0; 3],
+                        n_srcs: 1,
+                        mem: Some(crate::interp::MemAccess { addr, size: 8, is_store: false }),
+                        block: 0,
+                    })
+                })
+                .collect();
+            lanes.rebuild(&events);
+            lane.on_chunk_lanes(&events, &lanes);
+        }
+        let (a, b) = (per_event.finalize(4096), lane.finalize(4096));
+        assert_eq!(a.accesses, b.accesses);
+        assert_eq!(a.unique_addrs, b.unique_addrs);
+        for (x, y) in a.entropies.iter().zip(&b.entropies) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.count_of_counts, b.count_of_counts);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! feed the machine models' cost estimates and the report's
 //! characterization table.
 
-use crate::interp::{Instrument, TraceEvent};
+use crate::interp::{ChunkLanes, Instrument, TraceEvent, TAG_BLOCK, TAG_BR_NOT, TAG_BR_TAKEN};
 use crate::ir::{Op, OpClass};
 use crate::util::Json;
 
@@ -106,20 +106,25 @@ impl Instrument for MixAnalyzer {
         }
     }
 
-    /// Chunk path: the branch/block tallies accumulate in registers and hit
-    /// the struct once per chunk; only the per-op histogram is touched per
-    /// event.
-    fn on_chunk(&mut self, events: &[TraceEvent]) {
+    /// Lane path (the hot path): sweep the dense one-byte op-tag lane — no
+    /// enum unpacking per event. Branch/block tallies accumulate in
+    /// registers and hit the struct once per chunk; only the per-op
+    /// histogram is touched per instruction.
+    fn on_chunk_lanes(&mut self, _events: &[TraceEvent], lanes: &ChunkLanes) {
         let (mut branches, mut blocks) = (0u64, 0u64);
-        for ev in events {
-            match ev {
-                TraceEvent::Instr(i) => self.per_op[i.op.index()] += 1,
-                TraceEvent::Branch { .. } => branches += 1,
-                TraceEvent::BlockEnter { .. } => blocks += 1,
+        for &tag in lanes.tags() {
+            match tag {
+                TAG_BLOCK => blocks += 1,
+                TAG_BR_TAKEN | TAG_BR_NOT => branches += 1,
+                op => self.per_op[op as usize] += 1,
             }
         }
         self.branches += branches;
         self.blocks += blocks;
+    }
+
+    fn wants_lanes(&self) -> bool {
+        true
     }
 }
 
@@ -128,6 +133,28 @@ mod tests {
     use super::*;
     use crate::interp::run_program;
     use crate::ir::ProgramBuilder;
+
+    #[test]
+    fn lane_sweep_matches_per_event() {
+        let mut b = ProgramBuilder::new("t");
+        let a = b.alloc_f64_init("a", &[1.0, 2.0, 3.0, 4.0]);
+        let n = b.const_i(4);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(a, i);
+            let w = b.fmul(v, v);
+            b.store_f64(a, i, w);
+        });
+        let p = b.finish(None);
+        // chunked run goes through the lane sweep (wants_lanes), per-event
+        // through on_event — identical tallies
+        let mut lane = MixAnalyzer::new();
+        let mut per_event = MixAnalyzer::new();
+        crate::interp::Machine::new(&p).unwrap().run(&mut lane).unwrap();
+        crate::interp::Machine::new(&p).unwrap().run_per_event(&mut per_event).unwrap();
+        assert_eq!(lane.per_op, per_event.per_op);
+        assert_eq!(lane.branches, per_event.branches);
+        assert_eq!(lane.blocks, per_event.blocks);
+    }
 
     #[test]
     fn counts_loop_mix() {

@@ -5,16 +5,23 @@
 //! run). Since the chunked-pipeline refactor, the canonical way to compose
 //! them is the [`AnalyzerStack`]: one registry owning the full analyzer set
 //! (plus, optionally, the `sim::TaskTraceCollector`), receiving events as
-//! [`EventChunk`](crate::interp::EventChunk) slices via `on_chunk` — one
-//! virtual call per ~4K events, statically-dispatched per-analyzer sweeps
-//! inside — and finalizing into one [`AppMetrics`]. `analysis::profile`,
+//! [`EventChunk`](crate::interp::EventChunk) flushes — one virtual call per
+//! chunk, statically-dispatched per-analyzer sweeps inside — and finalizing
+//! into one [`AppMetrics`]. The memory-side analyzers (`mix`,
+//! `mem_entropy`, `reuse`, and `spatial` through `reuse`) sweep the chunk's
+//! dense SoA [`ChunkLanes`](crate::interp::ChunkLanes) view, built once per
+//! chunk and shared across them. `analysis::profile`,
 //! `coordinator::profile_app` and the examples/benches all drive this one
 //! code path; [`MetricSet`] selects a subset by name (the CLI `--metrics`
 //! flag ends up here).
 //!
-//! [`profile_per_event`] keeps the un-batched delivery as the reference
-//! semantics; `rust/tests/prop_chunked.rs` proves both paths produce
-//! bit-identical metrics on seeded random programs.
+//! The stack can fold either on the interpreter thread ([`profile`]) or on
+//! a dedicated analysis thread overlapped with interpretation
+//! ([`profile_offload`], [`profile_select_mode`] — see
+//! [`crate::interp::offload`]). [`profile_per_event`] keeps the un-batched
+//! delivery as the reference semantics; `rust/tests/prop_chunked.rs`
+//! proves all paths produce bit-identical metrics on seeded random
+//! programs.
 //!
 //! | metric | module | paper figure |
 //! |---|---|---|
@@ -50,7 +57,7 @@ pub use pbblp::{PbblpAnalyzer, PbblpResult};
 pub use reuse::{ReuseAnalyzer, ReuseResult};
 pub use spatial::SpatialResult;
 
-use crate::interp::{ExecStats, Instrument, Machine, TraceEvent};
+use crate::interp::{offload, ChunkLanes, ExecStats, Instrument, Machine, PipelineMode, TraceEvent};
 use crate::ir::Program;
 use crate::sim::{Region, TaskTraceCollector};
 use crate::util::Json;
@@ -215,6 +222,10 @@ pub struct AnalyzerStack {
     bblp: BblpAnalyzer,
     pbblp: PbblpAnalyzer,
     tasks: Option<TaskTraceCollector>,
+    /// Fallback lane scratch for sinks that call `on_chunk` directly (the
+    /// `EventChunk` flush path hands pre-built lanes to `on_chunk_lanes`
+    /// instead, so this stays empty on the pipeline hot path).
+    lanes: ChunkLanes,
 }
 
 impl AnalyzerStack {
@@ -235,6 +246,7 @@ impl AnalyzerStack {
             bblp: BblpAnalyzer::new(n_regs),
             pbblp: PbblpAnalyzer::new(prog),
             tasks: None,
+            lanes: ChunkLanes::default(),
         }
     }
 
@@ -313,21 +325,24 @@ impl Instrument for AnalyzerStack {
         }
     }
 
-    /// The hot path: each enabled analyzer sweeps the cache-resident chunk
-    /// with its tuned `on_chunk`; all dispatch here is static.
-    fn on_chunk(&mut self, events: &[TraceEvent]) {
+    /// The hot path: the lane-capable analyzers (`mix`, `mem_entropy`,
+    /// `reuse` — and `spatial` through `reuse`) sweep the shared SoA
+    /// [`ChunkLanes`] view, built once per chunk by the `EventChunk` flush;
+    /// the dependency analyzers sweep the event slice with their tuned
+    /// `on_chunk`s. All dispatch here is static.
+    fn on_chunk_lanes(&mut self, events: &[TraceEvent], lanes: &ChunkLanes) {
         let m = self.metrics;
         if m.contains(Metric::Mix) {
-            self.mix.on_chunk(events);
+            self.mix.on_chunk_lanes(events, lanes);
         }
         if m.contains(Metric::Branch) {
             self.branch.on_chunk(events);
         }
         if m.contains(Metric::MemEntropy) {
-            self.ment.on_chunk(events);
+            self.ment.on_chunk_lanes(events, lanes);
         }
         if m.contains(Metric::Reuse) {
-            self.reuse.on_chunk(events);
+            self.reuse.on_chunk_lanes(events, lanes);
         }
         if m.contains(Metric::Ilp) {
             self.ilp.on_chunk(events);
@@ -345,16 +360,44 @@ impl Instrument for AnalyzerStack {
             t.on_chunk(events);
         }
     }
+
+    /// The stack consumes lanes whenever a lane-capable family is enabled;
+    /// `EventChunk::flush_into` skips the lane build otherwise.
+    fn wants_lanes(&self) -> bool {
+        let m = self.metrics;
+        m.contains(Metric::Mix) || m.contains(Metric::MemEntropy) || m.contains(Metric::Reuse)
+    }
+
+    /// Chunk delivery without caller-built lanes (ad-hoc sinks, benches):
+    /// build the lanes into the stack's own scratch and take the same lane
+    /// path, so behavior is identical to the pipeline flush.
+    fn on_chunk(&mut self, events: &[TraceEvent]) {
+        if self.wants_lanes() {
+            let mut lanes = std::mem::take(&mut self.lanes);
+            lanes.rebuild(events);
+            self.on_chunk_lanes(events, &lanes);
+            self.lanes = lanes;
+        } else {
+            self.on_chunk_lanes(events, &ChunkLanes::default());
+        }
+    }
 }
 
-fn profile_impl(prog: &Program, metrics: MetricSet, chunked: bool) -> Result<AppMetrics> {
+/// How `profile_impl` delivers events to the stack.
+enum Delivery {
+    PerEvent,
+    Chunked,
+    Offload,
+}
+
+fn profile_impl(prog: &Program, metrics: MetricSet, delivery: Delivery) -> Result<AppMetrics> {
     crate::ir::verify::verify_ok(prog);
     let mut stack = AnalyzerStack::new(prog, metrics);
     let mut machine = Machine::new(prog)?;
-    let out = if chunked {
-        machine.run(&mut stack)?
-    } else {
-        machine.run_per_event(&mut stack)?
+    let out = match delivery {
+        Delivery::Chunked => machine.run(&mut stack)?,
+        Delivery::PerEvent => machine.run_per_event(&mut stack)?,
+        Delivery::Offload => offload::run_offload(&mut machine, &mut stack)?,
     };
     Ok(stack.finalize(out.stats).0)
 }
@@ -362,13 +405,34 @@ fn profile_impl(prog: &Program, metrics: MetricSet, chunked: bool) -> Result<App
 /// Run `prog` once, streaming the trace through every analyzer (chunked
 /// delivery — the default fast path).
 pub fn profile(prog: &Program) -> Result<AppMetrics> {
-    profile_impl(prog, MetricSet::all(), true)
+    profile_impl(prog, MetricSet::all(), Delivery::Chunked)
 }
 
 /// [`profile`] restricted to a metric subset. Disabled families come back
 /// as shape-stable empty results.
 pub fn profile_select(prog: &Program, metrics: MetricSet) -> Result<AppMetrics> {
-    profile_impl(prog, metrics, true)
+    profile_impl(prog, metrics, Delivery::Chunked)
+}
+
+/// [`profile`] with the analyzers folding on a dedicated analysis thread,
+/// overlapped with interpretation (see [`crate::interp::offload`]).
+/// Metrics are bit-identical to [`profile`] and [`profile_per_event`].
+pub fn profile_offload(prog: &Program) -> Result<AppMetrics> {
+    profile_impl(prog, MetricSet::all(), Delivery::Offload)
+}
+
+/// [`profile_select`] with the delivery mode as a knob — the entry point
+/// the CLI `--pipeline` flag reaches through `coordinator::pipeline`.
+pub fn profile_select_mode(
+    prog: &Program,
+    metrics: MetricSet,
+    mode: PipelineMode,
+) -> Result<AppMetrics> {
+    let delivery = match mode {
+        PipelineMode::Inline => Delivery::Chunked,
+        PipelineMode::Offload => Delivery::Offload,
+    };
+    profile_impl(prog, metrics, delivery)
 }
 
 /// Reference path: identical to [`profile`] but with one `on_event` call
@@ -376,7 +440,7 @@ pub fn profile_select(prog: &Program, metrics: MetricSet) -> Result<AppMetrics> 
 /// chunked-equivalence property test and the dispatch microbenchmarks have
 /// an unbatched baseline; not used by the pipeline.
 pub fn profile_per_event(prog: &Program) -> Result<AppMetrics> {
-    profile_impl(prog, MetricSet::all(), false)
+    profile_impl(prog, MetricSet::all(), Delivery::PerEvent)
 }
 
 impl AppMetrics {
@@ -476,6 +540,53 @@ mod tests {
         assert_eq!(a.mem_entropy.count_of_counts, b.mem_entropy.count_of_counts);
         assert_eq!(a.reuse.hist, b.reuse.hist);
         assert_eq!(a.exec.dyn_instrs, b.exec.dyn_instrs);
+    }
+
+    #[test]
+    fn offload_profile_matches_inline() {
+        let p = tiny_program();
+        let a = profile(&p).unwrap();
+        let b = profile_offload(&p).unwrap();
+        assert_eq!(a.pca8_features().map(f64::to_bits), b.pca8_features().map(f64::to_bits));
+        assert_eq!(a.mix.per_op, b.mix.per_op);
+        assert_eq!(a.reuse.hist, b.reuse.hist);
+        assert_eq!(a.mem_entropy.count_of_counts, b.mem_entropy.count_of_counts);
+        assert_eq!(a.exec.dyn_instrs, b.exec.dyn_instrs);
+    }
+
+    #[test]
+    fn analyzer_stack_is_send() {
+        // the offload path moves the stack (by mutable borrow) to the
+        // analysis thread; keep this a compile-visible guarantee
+        fn assert_send<T: Send>() {}
+        assert_send::<AnalyzerStack>();
+    }
+
+    #[test]
+    fn stack_direct_chunk_call_matches_lane_flush() {
+        // sinks that call on_chunk without pre-built lanes (ad-hoc
+        // composition) must land on the same lane path
+        let p = tiny_program();
+        let reference = profile(&p).unwrap();
+        let mut stack = AnalyzerStack::full(&p);
+        let mut machine = Machine::new(&p).unwrap();
+        // capture the whole trace, then hand it to the stack via on_chunk
+        struct Capture(Vec<TraceEvent>);
+        impl Instrument for Capture {
+            fn on_event(&mut self, ev: &TraceEvent) {
+                self.0.push(*ev);
+            }
+        }
+        let mut cap = Capture(Vec::new());
+        let out = machine.run_per_event(&mut cap).unwrap();
+        for slice in cap.0.chunks(700) {
+            stack.on_chunk(slice);
+        }
+        let (m, _) = stack.finalize(out.stats);
+        assert_eq!(
+            m.pca8_features().map(f64::to_bits),
+            reference.pca8_features().map(f64::to_bits)
+        );
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! applied uniformly and documented in DESIGN.md.
 
 
-use crate::interp::{Instrument, TraceEvent};
+use crate::interp::{ChunkLanes, Instrument, TraceEvent};
 use crate::util::{FastMap, Fenwick, Json};
 
 /// Line-size shifts analyzed: 2^3 .. 2^10 bytes.
@@ -131,14 +131,13 @@ pub fn bin_values() -> [f32; N_DIST_BINS] {
     v
 }
 
-/// Streaming multi-line-size exact reuse-distance analyzer.
+/// Streaming multi-line-size exact reuse-distance analyzer. The chunk hot
+/// path sweeps the dense packed-address lane of [`ChunkLanes`] (built once
+/// per chunk and shared with `mem_entropy`/`mix`), so it keeps no private
+/// address scratch of its own.
 #[derive(Debug, Clone)]
 pub struct ReuseAnalyzer {
     trackers: Vec<Tracker>,
-    /// Chunk-path scratch: the chunk's memory addresses, densely packed so
-    /// each tracker sweeps a contiguous slice (allocation reused across
-    /// chunks).
-    scratch: Vec<u64>,
 }
 
 /// Finalized DTR results.
@@ -163,10 +162,7 @@ impl Default for ReuseAnalyzer {
 
 impl ReuseAnalyzer {
     pub fn new() -> Self {
-        ReuseAnalyzer {
-            trackers: LINE_SHIFTS.iter().map(|&s| Tracker::new(s)).collect(),
-            scratch: Vec::new(),
-        }
+        ReuseAnalyzer { trackers: LINE_SHIFTS.iter().map(|&s| Tracker::new(s)).collect() }
     }
 
     #[inline]
@@ -197,28 +193,26 @@ impl Instrument for ReuseAnalyzer {
         }
     }
 
-    /// Chunk path: the per-event loop over the 8 trackers is inverted.
-    /// Addresses are first packed into a dense scratch slice, then each
-    /// tracker sweeps the whole slice — so one tracker's map/Fenwick state
-    /// stays hot for thousands of accesses instead of being evicted 8 ways
-    /// per event. Per-tracker order is unchanged, so distances are exact.
-    fn on_chunk(&mut self, events: &[TraceEvent]) {
-        self.scratch.clear();
-        for ev in events {
-            if let TraceEvent::Instr(i) = ev {
-                if let Some(m) = i.mem {
-                    self.scratch.push(m.addr);
-                }
-            }
-        }
-        if self.scratch.is_empty() {
+    /// Lane path (the hot path): the per-event loop over the 8 trackers is
+    /// inverted. The chunk's addresses arrive already densely packed in the
+    /// shared [`ChunkLanes`] view, and each tracker sweeps the whole slice —
+    /// so one tracker's map/Fenwick state stays hot for thousands of
+    /// accesses instead of being evicted 8 ways per event. Per-tracker
+    /// order is unchanged, so distances are exact.
+    fn on_chunk_lanes(&mut self, _events: &[TraceEvent], lanes: &ChunkLanes) {
+        let addrs = lanes.addrs();
+        if addrs.is_empty() {
             return;
         }
         for t in &mut self.trackers {
-            for &addr in &self.scratch {
+            for &addr in addrs {
                 t.access(addr);
             }
         }
+    }
+
+    fn wants_lanes(&self) -> bool {
+        true
     }
 }
 

@@ -11,6 +11,12 @@
 //! routes the binned histograms through the AOT `spatial.hlo.txt` Pallas
 //! artifact and cross-checks the two (they differ only by log2-binning of
 //! the distance distribution).
+//!
+//! Spatial locality has no event-consuming analyzer of its own: its entire
+//! input is the DTR distribution `reuse` folds by sweeping the dense
+//! [`crate::interp::ChunkLanes`] address lane — so the whole
+//! reuse→spatial family runs off the SoA chunk view, never matching
+//! `TraceEvent` per event on the hot path.
 
 use super::reuse::{ReuseResult, LINE_SHIFTS, N_LINE_SIZES};
 use crate::util::Json;

@@ -20,7 +20,8 @@ pub struct Args {
 }
 
 /// Flags that take a value; everything else is boolean.
-const VALUE_FLAGS: &[&str] = &["scale", "seed", "threads", "out", "kernel", "n", "metrics"];
+const VALUE_FLAGS: &[&str] =
+    &["scale", "seed", "threads", "out", "kernel", "n", "metrics", "pipeline"];
 
 pub fn parse(argv: &[String]) -> Result<Args> {
     let mut a = Args::default();
@@ -105,10 +106,11 @@ pisa-nmc — Platform-Independent Software Analysis for Near-Memory Computing
 
 USAGE:
   pisa-nmc pipeline [--scale F] [--seed N] [--threads N] [--metrics LIST]
-                    [--no-pjrt] [--out FILE]
+                    [--pipeline MODE] [--no-pjrt] [--out FILE]
         full suite: profile 12 kernels, run host+NMC sims, PJRT analytics,
         print every table and figure (writes JSON report with --out)
-  pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--metrics LIST] [--json]
+  pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--metrics LIST]
+                   [--pipeline MODE] [--json]
         profile a single kernel and print its metrics
   pisa-nmc figure {3a|3b|3c|4|5|6} [pipeline flags]
         regenerate one paper figure
@@ -124,6 +126,11 @@ USAGE:
 mix,branch,mem_entropy,reuse,ilp,dlp,bblp,pbblp — or `all`, the default);
 deselected families report empty results (ilp stays on when the machine
 simulations run: the host model needs it).
+
+--pipeline MODE selects event delivery: `inline` (default — analyzers fold
+on the interpreter thread) or `offload` (analyzers fold on a dedicated
+analysis thread, overlapped with interpretation; metrics are bit-identical,
+each app then uses two cores).
 
 Artifacts are searched in ./artifacts (or $PISA_NMC_ARTIFACTS); build them
 with `make artifacts`. --no-pjrt forces the native analytics fallback.
@@ -152,6 +159,13 @@ mod tests {
         let a = args(&["analyze", "--kernel", "atax", "--metrics", "mix,dlp"]);
         assert_eq!(a.get("metrics"), Some("mix,dlp"));
         assert!(parse(&["pipeline".into(), "--metrics".into()]).is_err());
+    }
+
+    #[test]
+    fn pipeline_flag_takes_a_value() {
+        let a = args(&["pipeline", "--pipeline", "offload"]);
+        assert_eq!(a.get("pipeline"), Some("offload"));
+        assert!(parse(&["pipeline".into(), "--pipeline".into()]).is_err());
     }
 
     #[test]

@@ -13,11 +13,14 @@ pub mod pipeline;
 
 pub use figures::{analyze_suite, Engine, SuiteAnalytics};
 pub use pca::{pca, Pca};
-pub use pipeline::{profile_app, profile_app_select, run_suite, run_suite_select, AppResult};
+pub use pipeline::{
+    profile_app, profile_app_mode, profile_app_select, run_suite, run_suite_select, AppResult,
+};
 
 use anyhow::Result;
 
 use crate::analysis::MetricSet;
+use crate::interp::PipelineMode;
 use crate::runtime::Runtime;
 use crate::util::Json;
 
@@ -29,41 +32,59 @@ pub struct PipelineReport {
     pub seed: u64,
     /// Analyzer families that were enabled for this run.
     pub metrics: MetricSet,
+    /// Event-delivery mode the apps were profiled with.
+    pub mode: PipelineMode,
 }
 
-/// Run the full pipeline with every metric enabled.
+/// Run the full pipeline with every metric enabled, inline delivery.
 pub fn run_pipeline(
     scale: f64,
     seed: u64,
     threads: usize,
     rt: Option<&Runtime>,
 ) -> Result<PipelineReport> {
-    run_pipeline_select(scale, seed, threads, rt, MetricSet::all())
+    run_pipeline_select(scale, seed, threads, rt, MetricSet::all(), PipelineMode::Inline)
 }
 
-/// Run the full pipeline: profile suite (selected analyzer families) →
-/// artifacts analytics → report. `metrics` is the CLI `--metrics` flag,
-/// threaded into every worker's `AnalyzerStack`.
+/// Run the full pipeline: profile suite (selected analyzer families,
+/// selected delivery mode) → artifacts analytics → report. `metrics` is
+/// the CLI `--metrics` flag and `mode` the CLI `--pipeline` flag, both
+/// threaded into every worker's run.
 pub fn run_pipeline_select(
     scale: f64,
     seed: u64,
     threads: usize,
     rt: Option<&Runtime>,
     metrics: MetricSet,
+    mode: PipelineMode,
 ) -> Result<PipelineReport> {
     // same effective set the workers profile with, so the report's
     // "metrics" list describes the families that actually ran
     let metrics = metrics.with_simulation_requirements();
-    let apps = run_suite_select(scale, seed, threads, metrics)?;
+    let apps = run_suite_select(scale, seed, threads, metrics, mode)?;
     let analytics = analyze_suite(&apps, rt)?;
-    Ok(PipelineReport { apps, analytics, scale, seed, metrics })
+    Ok(PipelineReport { apps, analytics, scale, seed, metrics, mode })
 }
 
 impl PipelineReport {
+    /// Suite-level profiler throughput: total trace events over summed
+    /// per-app wall time (workers overlap, so this is a conservative
+    /// aggregate — per-app numbers live under each app's `exec`).
+    pub fn suite_events_per_sec(&self) -> f64 {
+        let total_events: u64 = self.apps.iter().map(|a| a.metrics.exec.events()).sum();
+        let total_wall: f64 = self.apps.iter().map(|a| a.metrics.exec.wall_s).sum();
+        if total_wall > 0.0 {
+            total_events as f64 / total_wall
+        } else {
+            0.0
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("scale", self.scale);
         j.set("seed", self.seed);
+        j.set("pipeline_mode", self.mode.name());
         j.set("engine", self.analytics.engine.name());
         j.set("crosscheck_err", self.analytics.max_crosscheck_err);
         j.set(
@@ -74,16 +95,9 @@ impl PipelineReport {
                 .map(|n| Json::Str(n.to_string()))
                 .collect::<Vec<Json>>(),
         );
-        // suite-level profiler throughput: total events over summed
-        // per-app wall time (workers overlap, so this is a conservative
-        // aggregate — per-app numbers live under each app's "exec")
         let total_events: u64 = self.apps.iter().map(|a| a.metrics.exec.events()).sum();
-        let total_wall: f64 = self.apps.iter().map(|a| a.metrics.exec.wall_s).sum();
         j.set("profile_events", total_events);
-        j.set(
-            "profile_events_per_sec",
-            if total_wall > 0.0 { total_events as f64 / total_wall } else { 0.0 },
-        );
+        j.set("profile_events_per_sec", self.suite_events_per_sec());
         let mut apps = Json::obj();
         for (i, a) in self.apps.iter().enumerate() {
             let mut o = a.metrics.to_json();

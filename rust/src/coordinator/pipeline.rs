@@ -8,6 +8,11 @@
 //! the PJRT artifacts own the batched numeric analytics (L2/L1). Worker
 //! count is bounded by `available_parallelism`; jobs stream through a
 //! bounded channel so a slow workload cannot pile up unbounded memory.
+//!
+//! With [`PipelineMode::Offload`] each worker additionally pairs its
+//! interpreter with a dedicated analysis thread (see
+//! [`crate::interp::offload`]), so one app occupies two cores while it
+//! runs — size `--threads` accordingly on small machines.
 
 use std::sync::mpsc;
 use std::sync::Mutex;
@@ -15,7 +20,7 @@ use std::sync::Mutex;
 use anyhow::{Context, Result};
 
 use crate::analysis::{AnalyzerStack, AppMetrics, MetricSet};
-use crate::interp::run_program;
+use crate::interp::{run_program_mode, PipelineMode};
 use crate::sim::{self, EdpComparison, Region};
 use crate::workloads::{registry, scaled_n, Kernel};
 
@@ -37,32 +42,46 @@ impl AppResult {
     }
 }
 
-/// Profile one kernel with every metric enabled.
+/// Profile one kernel with every metric enabled (inline delivery).
 pub fn profile_app(k: &dyn Kernel, n: usize, seed: u64) -> Result<AppResult> {
     profile_app_select(k, n, seed, MetricSet::all())
 }
 
-/// Profile one kernel: single chunked instrumented execution feeding the
-/// selected analyzers *and* the task-trace collector, then both machine
-/// simulations. This is `analysis::profile_select` plus the simulation
-/// layer — both build the same [`AnalyzerStack`].
-///
-/// Sim-required families (ILP — see
-/// [`MetricSet::with_simulation_requirements`]) are force-enabled
-/// regardless of `metrics`.
+/// [`profile_app_mode`] with inline delivery.
 pub fn profile_app_select(
     k: &dyn Kernel,
     n: usize,
     seed: u64,
     metrics: MetricSet,
 ) -> Result<AppResult> {
+    profile_app_mode(k, n, seed, metrics, PipelineMode::Inline)
+}
+
+/// Profile one kernel: single instrumented execution feeding the selected
+/// analyzers *and* the task-trace collector, then both machine
+/// simulations. This is `analysis::profile_select_mode` plus the
+/// simulation layer — both build the same [`AnalyzerStack`]. `mode`
+/// selects whether the stack folds inline on the interpreter thread or on
+/// a dedicated analysis thread (see [`crate::interp::offload`]); metrics
+/// are bit-identical either way.
+///
+/// Sim-required families (ILP — see
+/// [`MetricSet::with_simulation_requirements`]) are force-enabled
+/// regardless of `metrics`.
+pub fn profile_app_mode(
+    k: &dyn Kernel,
+    n: usize,
+    seed: u64,
+    metrics: MetricSet,
+    mode: PipelineMode,
+) -> Result<AppResult> {
     let metrics = metrics.with_simulation_requirements();
     let prog = k.build(n, seed);
     crate::ir::verify::verify_ok(&prog);
 
     let mut stack = AnalyzerStack::new(&prog, metrics).with_task_trace(&prog);
-    let (out, _machine) =
-        run_program(&prog, &mut stack).with_context(|| format!("running {}", k.info().name))?;
+    let (out, _machine) = run_program_mode(&prog, &mut stack, mode)
+        .with_context(|| format!("running {}", k.info().name))?;
     let (metrics, regions) = stack.finalize(out.stats);
     let regions: Vec<Region> = regions.expect("task trace enabled");
 
@@ -83,19 +102,21 @@ pub fn profile_app_select(
     Ok(AppResult { name: metrics.name.clone(), n, metrics, cmp })
 }
 
-/// Run the whole suite with every metric enabled.
+/// Run the whole suite with every metric enabled, inline delivery.
 pub fn run_suite(scale: f64, seed: u64, threads: usize) -> Result<Vec<AppResult>> {
-    run_suite_select(scale, seed, threads, MetricSet::all())
+    run_suite_select(scale, seed, threads, MetricSet::all(), PipelineMode::Inline)
 }
 
-/// Run the whole suite, `scale` applied to every kernel's default size and
-/// `metrics` selecting the analyzer families. Results come back in
-/// registry order regardless of completion order.
+/// Run the whole suite, `scale` applied to every kernel's default size,
+/// `metrics` selecting the analyzer families and `mode` the event
+/// delivery (inline, or overlapped on per-app analysis threads). Results
+/// come back in registry order regardless of completion order.
 pub fn run_suite_select(
     scale: f64,
     seed: u64,
     threads: usize,
     metrics: MetricSet,
+    mode: PipelineMode,
 ) -> Result<Vec<AppResult>> {
     let kernels = registry();
     let n_jobs = kernels.len();
@@ -117,7 +138,7 @@ pub fn run_suite_select(
                 // fresh registry per thread: Kernel is stateless
                 let k = &registry()[idx];
                 let n = scaled_n(k.as_ref(), scale);
-                let res = profile_app_select(k.as_ref(), n, seed, metrics);
+                let res = profile_app_mode(k.as_ref(), n, seed, metrics, mode);
                 if tx.send((idx, res)).is_err() {
                     break;
                 }
@@ -161,6 +182,33 @@ mod tests {
         let m = crate::analysis::profile(&k.build(16, 1)).unwrap();
         assert_eq!(r.metrics.pca8_features(), m.pca8_features());
         assert_eq!(r.metrics.exec.dyn_instrs, m.exec.dyn_instrs);
+    }
+
+    #[test]
+    fn offload_app_matches_inline_bit_identically() {
+        let k = by_name("gesummv").unwrap();
+        let inline = profile_app(k.as_ref(), 20, 1).unwrap();
+        let offl =
+            profile_app_mode(k.as_ref(), 20, 1, MetricSet::all(), PipelineMode::Offload).unwrap();
+        assert_eq!(
+            inline.metrics.pca8_features().map(f64::to_bits),
+            offl.metrics.pca8_features().map(f64::to_bits)
+        );
+        assert_eq!(inline.metrics.exec.dyn_instrs, offl.metrics.exec.dyn_instrs);
+        // the same region trace feeds the machine models on both paths
+        assert_eq!(inline.cmp.host.dyn_instrs, offl.cmp.host.dyn_instrs);
+        assert_eq!(inline.cmp.edp_improvement(), offl.cmp.edp_improvement());
+        assert!(offl.events_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn tiny_suite_runs_offloaded() {
+        let rs = run_suite_select(0.05, 7, 2, MetricSet::all(), PipelineMode::Offload).unwrap();
+        assert_eq!(rs.len(), 12);
+        for r in &rs {
+            assert!(r.metrics.exec.dyn_instrs > 0, "{}", r.name);
+            assert!(r.events_per_sec() > 0.0, "{}", r.name);
+        }
     }
 
     #[test]

@@ -9,25 +9,45 @@
 //!
 //! Events are not handed to analyzers one virtual call at a time. The
 //! interpreter accumulates them into a reusable fixed-capacity
-//! [`EventChunk`] (~4K events) and flushes the whole slice through
-//! [`Instrument::on_chunk`] at block boundaries (or when the buffer fills
-//! inside a degenerate giant block) and at end-of-run. One virtual call
-//! then amortizes over thousands of events, and each analyzer iterates a
-//! cache-resident slice with statically-dispatched per-event handling —
-//! the batched-trace-processing structure NMPO uses to keep profiling
-//! overhead sane at realistic workload sizes.
+//! [`EventChunk`] and flushes the whole slice through
+//! [`Instrument::on_chunk_lanes`] / [`Instrument::on_chunk`] at block
+//! boundaries (or when the buffer fills inside a degenerate giant block)
+//! and at end-of-run. One virtual call then amortizes over thousands of
+//! events — the batched-trace-processing structure NMPO uses to keep
+//! profiling overhead sane at realistic workload sizes. Chunk capacity is
+//! picked per program by [`adaptive_chunk_capacity`]: branchy codes get
+//! small chunks (bounded per-chunk analyzer latency), streaming kernels the
+//! full [`CHUNK_EVENTS`] buffer.
+//!
+//! ## SoA lanes
+//!
+//! Most memory-side analyzers need only a dense view of the chunk — the
+//! packed addresses, or one opcode tag per event — not the full 3-variant
+//! enum. [`ChunkLanes`] is that structure-of-arrays view: built **once per
+//! chunk** by [`EventChunk::flush_into`] (and only when the sink reports
+//! [`Instrument::wants_lanes`]), then shared by every lane-capable analyzer
+//! through [`Instrument::on_chunk_lanes`]. `reuse`, `mem_entropy` and `mix`
+//! (and `spatial`, which derives from `reuse`) sweep these dense lanes and
+//! never match `TraceEvent` per event on the hot path.
 //!
 //! `on_event` remains as the un-batched reference path: the default
-//! `on_chunk` simply loops over it, so an analyzer only implements the
-//! chunk form when it has per-chunk state worth hoisting. Event order is
-//! identical on both paths, and every analyzer is a pure fold over the
-//! event sequence, so chunked and per-event execution produce bit-identical
-//! metrics (enforced by `rust/tests/prop_chunked.rs`).
+//! `on_chunk` simply loops over it, and the default `on_chunk_lanes`
+//! ignores the lanes and falls back to `on_chunk`. Event order is identical
+//! on every path, and every analyzer is a pure fold over the event
+//! sequence, so per-event, chunked and lane-swept execution produce
+//! bit-identical metrics (enforced by `rust/tests/prop_chunked.rs`).
 //!
-//! Events are plain `Copy` data so chunks can also be batched over a
-//! channel to worker threads (see `coordinator::pipeline`).
+//! ## Threading
+//!
+//! Events are plain `Copy` data and chunks are owned buffers, so whole
+//! `EventChunk`s can cross a channel to a dedicated analysis thread — see
+//! [`crate::interp::offload`], which cycles a small pool of owned chunks
+//! between the interpreter and an analysis worker so interpretation and
+//! analysis overlap. Each chunk carries its own lanes scratch, so the lane
+//! build happens on the analysis thread, off the interpreter's critical
+//! path.
 
-use crate::ir::{BlockId, Op, Reg};
+use crate::ir::{BlockId, Op, Program, Reg};
 
 /// One dynamic memory access.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,18 +88,162 @@ pub enum TraceEvent {
     Branch { block: BlockId, taken: bool },
 }
 
-/// Default capacity of the interpreter's event buffer: large enough to
-/// amortize the per-chunk virtual call to nothing, small enough that a
-/// chunk of 16-byte events stays L2-resident next to the analyzer state.
+/// Default (maximum) capacity of the interpreter's event buffer: large
+/// enough to amortize the per-chunk virtual call to nothing, small enough
+/// that a chunk of 16-byte events stays L2-resident next to the analyzer
+/// state.
 pub const CHUNK_EVENTS: usize = 4096;
 
-/// Reusable fixed-capacity event buffer. The interpreter owns exactly one
-/// and recycles its allocation for the whole run; `flush_into` hands the
-/// buffered slice to a sink and clears it.
+/// Floor for [`adaptive_chunk_capacity`]: below this the per-chunk call
+/// overhead starts to show again.
+pub const MIN_CHUNK_EVENTS: usize = 512;
+
+/// Pick an [`EventChunk`] capacity for `prog` from its static shape: the
+/// mean block length (in events: instructions + block entry + a possible
+/// branch) times a ~64-block-instance budget, rounded to a power of two and
+/// clamped to `[MIN_CHUNK_EVENTS, CHUNK_EVENTS]`.
+///
+/// Branchy programs (short blocks) flush small chunks, which bounds the
+/// latency an offloaded analyzer adds behind the interpreter before
+/// backpressure kicks in; streaming kernels (long straight-line blocks)
+/// keep the full buffer for maximum batching.
+pub fn adaptive_chunk_capacity(prog: &Program) -> usize {
+    let blocks = prog.func.blocks.len().max(1);
+    let block_events = prog.func.static_instrs() / blocks + 2;
+    (block_events * 64)
+        .next_power_of_two()
+        .clamp(MIN_CHUNK_EVENTS, CHUNK_EVENTS)
+}
+
+/// Op-tag lane sentinel: a dynamic basic-block entry.
+pub const TAG_BLOCK: u8 = 0xFD;
+/// Op-tag lane sentinel: a conditional branch that was taken.
+pub const TAG_BR_TAKEN: u8 = 0xFE;
+/// Op-tag lane sentinel: a conditional branch that fell through.
+pub const TAG_BR_NOT: u8 = 0xFF;
+
+// instruction tags are raw `Op::index()` values; the sentinels above must
+// stay out of that range
+const _: () = assert!(Op::COUNT <= TAG_BLOCK as usize);
+
+/// Structure-of-arrays view of one event chunk, built once per chunk and
+/// shared by every lane-capable analyzer (see [`Instrument::on_chunk_lanes`]).
+///
+/// Lanes:
+/// - `tags`: one byte per event — `Op::index()` for instructions, or one of
+///   [`TAG_BLOCK`] / [`TAG_BR_TAKEN`] / [`TAG_BR_NOT`] (the `mix` sweep).
+/// - `addrs`: the chunk's memory-access addresses, densely packed in trace
+///   order (the `reuse` / `mem_entropy` sweeps).
+/// - `sizes`: access sizes in bytes, parallel to `addrs`.
+/// - store bitset: bit *i* set ⇔ `addrs[i]` is a store.
+///
+/// Allocations are retained across rebuilds, so a recycled [`EventChunk`]
+/// (or an [`crate::analysis::AnalyzerStack`] fallback scratch) pays the
+/// build cost only in cache-friendly linear writes.
+#[derive(Debug, Clone, Default)]
+pub struct ChunkLanes {
+    tags: Vec<u8>,
+    addrs: Vec<u64>,
+    sizes: Vec<u8>,
+    store_bits: Vec<u64>,
+}
+
+impl ChunkLanes {
+    /// Rebuild every lane from `events` (previous contents discarded,
+    /// allocations reused).
+    pub fn rebuild(&mut self, events: &[TraceEvent]) {
+        self.tags.clear();
+        self.addrs.clear();
+        self.sizes.clear();
+        self.store_bits.clear();
+        self.tags.reserve(events.len());
+        for ev in events {
+            match ev {
+                TraceEvent::BlockEnter { .. } => self.tags.push(TAG_BLOCK),
+                TraceEvent::Branch { taken, .. } => {
+                    self.tags.push(if *taken { TAG_BR_TAKEN } else { TAG_BR_NOT })
+                }
+                TraceEvent::Instr(i) => {
+                    self.tags.push(i.op.index() as u8);
+                    if let Some(m) = i.mem {
+                        let slot = self.addrs.len();
+                        if slot % 64 == 0 {
+                            self.store_bits.push(0);
+                        }
+                        if m.is_store {
+                            self.store_bits[slot / 64] |= 1 << (slot % 64);
+                        }
+                        self.addrs.push(m.addr);
+                        self.sizes.push(m.size);
+                    }
+                }
+            }
+        }
+    }
+
+    /// One tag byte per event, parallel to the event slice.
+    #[inline]
+    pub fn tags(&self) -> &[u8] {
+        &self.tags
+    }
+
+    /// Packed memory-access addresses, trace order.
+    #[inline]
+    pub fn addrs(&self) -> &[u64] {
+        &self.addrs
+    }
+
+    /// Access sizes in bytes, parallel to [`Self::addrs`].
+    #[inline]
+    pub fn sizes(&self) -> &[u8] {
+        &self.sizes
+    }
+
+    /// Number of events the lanes describe.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.tags.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.tags.is_empty()
+    }
+
+    /// Number of memory accesses in the chunk.
+    #[inline]
+    pub fn n_mem(&self) -> usize {
+        self.addrs.len()
+    }
+
+    /// Is the `i`-th memory access (index into [`Self::addrs`]) a store?
+    #[inline]
+    pub fn is_store(&self, i: usize) -> bool {
+        debug_assert!(i < self.addrs.len());
+        (self.store_bits[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Total stores in the chunk (popcount of the store bitset).
+    pub fn stores(&self) -> u64 {
+        self.store_bits.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Total loads in the chunk.
+    pub fn loads(&self) -> u64 {
+        self.addrs.len() as u64 - self.stores()
+    }
+}
+
+/// Reusable fixed-capacity event buffer. The interpreter owns a small
+/// number of these (one on the inline path, a recycled pool on the offload
+/// path) and reuses their allocations for the whole run; `flush_into` hands
+/// the buffered slice — plus its [`ChunkLanes`] view when the sink wants
+/// one — to a sink and clears it.
 #[derive(Debug, Clone)]
 pub struct EventChunk {
     buf: Vec<TraceEvent>,
     capacity: usize,
+    lanes: ChunkLanes,
 }
 
 impl Default for EventChunk {
@@ -95,7 +259,11 @@ impl EventChunk {
 
     pub fn with_capacity(capacity: usize) -> Self {
         let capacity = capacity.max(1);
-        EventChunk { buf: Vec::with_capacity(capacity), capacity }
+        EventChunk {
+            buf: Vec::with_capacity(capacity),
+            capacity,
+            lanes: ChunkLanes::default(),
+        }
     }
 
     #[inline]
@@ -125,30 +293,54 @@ impl EventChunk {
         self.capacity - self.buf.len()
     }
 
+    /// The one block-boundary flush policy both the inline (`Machine::run`)
+    /// and offload delivery sinks consult, so their chunk boundaries can
+    /// never drift apart: flush when the buffer lacks headroom for a block
+    /// of `upcoming` instructions plus its BlockEnter and a possible
+    /// terminating Branch event.
+    #[inline]
+    pub(crate) fn needs_flush_for_block(&self, upcoming: usize) -> bool {
+        self.remaining() < upcoming + 2
+    }
+
     pub fn events(&self) -> &[TraceEvent] {
         &self.buf
     }
 
-    /// Hand the buffered events to `sink` in one `on_chunk` call and reset
-    /// the buffer (allocation retained).
+    /// Drop buffered events without delivering them (offload teardown when
+    /// the analysis thread is already gone).
+    pub(crate) fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Hand the buffered events to `sink` in one chunk call and reset the
+    /// buffer (allocations retained). When the sink consumes lanes
+    /// ([`Instrument::wants_lanes`]), the [`ChunkLanes`] view is built here,
+    /// once, and shared by every lane-capable analyzer behind the sink.
     #[inline]
     pub fn flush_into(&mut self, sink: &mut dyn Instrument) {
-        if !self.buf.is_empty() {
-            sink.on_chunk(&self.buf);
-            self.buf.clear();
+        if self.buf.is_empty() {
+            return;
         }
+        if sink.wants_lanes() {
+            self.lanes.rebuild(&self.buf);
+            sink.on_chunk_lanes(&self.buf, &self.lanes);
+        } else {
+            sink.on_chunk(&self.buf);
+        }
+        self.buf.clear();
     }
 }
 
 /// Analyzer interface.
 ///
-/// `on_chunk` is the hot path: the interpreter delivers events in chunks
-/// (see [`EventChunk`]), so a `dyn Instrument` costs one virtual call per
-/// chunk instead of one per event, and the default implementation's
-/// `on_event` calls are statically dispatched and inlinable. `on_event` is
-/// the per-event reference semantics; implementations must not allocate per
-/// call on common paths, and overridden `on_chunk`s must fold the slice in
-/// order, exactly as the default does.
+/// The chunked paths are the hot paths: the interpreter delivers events in
+/// chunks (see [`EventChunk`]), so a `dyn Instrument` costs one virtual
+/// call per chunk instead of one per event, and the per-event handling
+/// inside an implementation is statically dispatched and inlinable.
+/// `on_event` is the per-event reference semantics; implementations must
+/// not allocate per call on common paths, and overridden chunk methods must
+/// fold the slice in order, exactly as the defaults do.
 pub trait Instrument {
     fn on_event(&mut self, ev: &TraceEvent);
 
@@ -160,6 +352,24 @@ pub trait Instrument {
         for ev in events {
             self.on_event(ev);
         }
+    }
+
+    /// Lane-aware hot path: the chunk's events plus the SoA [`ChunkLanes`]
+    /// view, built once per chunk by [`EventChunk::flush_into`].
+    /// Lane-capable analyzers override this to sweep the dense lanes
+    /// instead of matching the enum; the default ignores the lanes. Must be
+    /// observationally identical to `on_chunk(events)`.
+    #[inline]
+    fn on_chunk_lanes(&mut self, events: &[TraceEvent], _lanes: &ChunkLanes) {
+        self.on_chunk(events);
+    }
+
+    /// True when this sink consumes [`ChunkLanes`]. [`EventChunk::flush_into`]
+    /// builds the lanes — once per chunk — only if so, keeping the build off
+    /// runs that select no lane-capable analyzer.
+    #[inline]
+    fn wants_lanes(&self) -> bool {
+        false
     }
 }
 
@@ -203,6 +413,17 @@ impl Instrument for Fanout<'_> {
         for s in self.sinks.iter_mut() {
             s.on_chunk(events);
         }
+    }
+
+    #[inline]
+    fn on_chunk_lanes(&mut self, events: &[TraceEvent], lanes: &ChunkLanes) {
+        for s in self.sinks.iter_mut() {
+            s.on_chunk_lanes(events, lanes);
+        }
+    }
+
+    fn wants_lanes(&self) -> bool {
+        self.sinks.iter().any(|s| s.wants_lanes())
     }
 }
 
@@ -251,19 +472,23 @@ mod tests {
         })
     }
 
+    fn mem_ev(op: Op, addr: u64, size: u8, is_store: bool) -> TraceEvent {
+        TraceEvent::Instr(InstrEvent {
+            op,
+            dst: if is_store { None } else { Some(1) },
+            srcs: [0; 3],
+            n_srcs: if is_store { 2 } else { 1 },
+            mem: Some(MemAccess { addr, size, is_store }),
+            block: 0,
+        })
+    }
+
     #[test]
     fn counter_counts() {
         let mut c = Counter::default();
         c.on_event(&TraceEvent::BlockEnter { block: 0 });
         c.on_event(&instr_ev(Op::ConstI));
-        c.on_event(&TraceEvent::Instr(InstrEvent {
-            op: Op::Load,
-            dst: Some(1),
-            srcs: [0; 3],
-            n_srcs: 1,
-            mem: Some(MemAccess { addr: 64, size: 8, is_store: false }),
-            block: 0,
-        }));
+        c.on_event(&mem_ev(Op::Load, 64, 8, false));
         c.on_event(&TraceEvent::Branch { block: 0, taken: true });
         assert_eq!((c.blocks, c.instrs, c.loads, c.branches), (1, 2, 1, 1));
     }
@@ -273,14 +498,7 @@ mod tests {
         let events = vec![
             TraceEvent::BlockEnter { block: 0 },
             instr_ev(Op::ConstI),
-            TraceEvent::Instr(InstrEvent {
-                op: Op::Store,
-                dst: None,
-                srcs: [0; 3],
-                n_srcs: 2,
-                mem: Some(MemAccess { addr: 8, size: 8, is_store: true }),
-                block: 0,
-            }),
+            mem_ev(Op::Store, 8, 8, true),
             TraceEvent::Branch { block: 0, taken: false },
         ];
         let mut a = Counter::default();
@@ -296,15 +514,124 @@ mod tests {
     }
 
     #[test]
-    fn fanout_reaches_all() {
+    fn lanes_pack_tags_and_mem_accesses() {
+        let events = vec![
+            TraceEvent::BlockEnter { block: 3 },
+            mem_ev(Op::Load, 0x100, 8, false),
+            instr_ev(Op::FAdd),
+            mem_ev(Op::Store, 0x108, 4, true),
+            TraceEvent::Branch { block: 3, taken: true },
+            TraceEvent::Branch { block: 3, taken: false },
+        ];
+        let mut lanes = ChunkLanes::default();
+        lanes.rebuild(&events);
+        assert_eq!(lanes.len(), 6);
+        assert_eq!(
+            lanes.tags(),
+            &[
+                TAG_BLOCK,
+                Op::Load.index() as u8,
+                Op::FAdd.index() as u8,
+                Op::Store.index() as u8,
+                TAG_BR_TAKEN,
+                TAG_BR_NOT
+            ]
+        );
+        assert_eq!(lanes.addrs(), &[0x100, 0x108]);
+        assert_eq!(lanes.sizes(), &[8, 4]);
+        assert_eq!(lanes.n_mem(), 2);
+        assert!(!lanes.is_store(0));
+        assert!(lanes.is_store(1));
+        assert_eq!((lanes.loads(), lanes.stores()), (1, 1));
+        // rebuild reuses allocations and discards old contents
+        lanes.rebuild(&events[..1]);
+        assert_eq!(lanes.len(), 1);
+        assert_eq!(lanes.n_mem(), 0);
+        assert_eq!(lanes.stores(), 0);
+    }
+
+    #[test]
+    fn lanes_store_bitset_spans_words() {
+        // > 64 accesses: the bitset needs a second word
+        let events: Vec<TraceEvent> = (0..130u64)
+            .map(|i| mem_ev(Op::Store, i * 8, 8, i % 3 == 0))
+            .collect();
+        let mut lanes = ChunkLanes::default();
+        lanes.rebuild(&events);
+        assert_eq!(lanes.n_mem(), 130);
+        for i in 0..130 {
+            assert_eq!(lanes.is_store(i), i % 3 == 0, "access {i}");
+        }
+        assert_eq!(lanes.stores(), (0..130).filter(|i| i % 3 == 0).count() as u64);
+    }
+
+    /// A sink that consumes lanes: records what it was handed so the flush
+    /// contract (lanes built exactly when wanted) is observable.
+    #[derive(Default)]
+    struct LaneProbe {
+        chunk_calls: u64,
+        lane_calls: u64,
+        mem_seen: u64,
+    }
+
+    impl Instrument for LaneProbe {
+        fn on_event(&mut self, _ev: &TraceEvent) {}
+
+        fn on_chunk(&mut self, _events: &[TraceEvent]) {
+            self.chunk_calls += 1;
+        }
+
+        fn on_chunk_lanes(&mut self, events: &[TraceEvent], lanes: &ChunkLanes) {
+            assert_eq!(events.len(), lanes.len());
+            self.lane_calls += 1;
+            self.mem_seen += lanes.n_mem() as u64;
+        }
+
+        fn wants_lanes(&self) -> bool {
+            true
+        }
+    }
+
+    #[test]
+    fn flush_builds_lanes_only_for_lane_sinks() {
+        let mut ch = EventChunk::with_capacity(8);
+        ch.push(mem_ev(Op::Load, 0x40, 8, false));
+        ch.push(instr_ev(Op::Add));
+        let mut probe = LaneProbe::default();
+        ch.flush_into(&mut probe);
+        assert_eq!((probe.lane_calls, probe.chunk_calls, probe.mem_seen), (1, 0, 1));
+        assert!(ch.is_empty());
+
+        // a non-lane sink goes through plain on_chunk
+        ch.push(instr_ev(Op::Add));
+        let mut c = Counter::default();
+        ch.flush_into(&mut c);
+        assert_eq!(c.instrs, 1);
+    }
+
+    #[test]
+    fn fanout_reaches_all_and_propagates_lane_wish() {
         let mut a = Counter::default();
         let mut b = Counter::default();
         {
             let mut f = Fanout::new(vec![&mut a, &mut b]);
             f.on_event(&instr_ev(Op::Add));
+            assert!(!f.wants_lanes());
         }
         assert_eq!(a.instrs, 1);
         assert_eq!(b.instrs, 1);
+
+        let mut probe = LaneProbe::default();
+        let mut c = Counter::default();
+        let mut f = Fanout::new(vec![&mut c, &mut probe]);
+        assert!(f.wants_lanes());
+        let evs = [mem_ev(Op::Load, 0x10, 8, false)];
+        let mut lanes = ChunkLanes::default();
+        lanes.rebuild(&evs);
+        f.on_chunk_lanes(&evs, &lanes);
+        drop(f);
+        assert_eq!(probe.lane_calls, 1);
+        assert_eq!(c.loads, 1);
     }
 
     #[test]
@@ -323,5 +650,56 @@ mod tests {
         // flushing an empty chunk is a no-op (no zero-length on_chunk call)
         ch.flush_into(&mut c);
         assert_eq!(c.instrs, 4);
+    }
+
+    #[test]
+    fn adaptive_capacity_pins_heuristic() {
+        use crate::ir::ProgramBuilder;
+
+        // streaming: one giant straight-line block ⇒ full buffer
+        let mut b = ProgramBuilder::new("streaming");
+        let mut x = b.const_f(1.0);
+        for _ in 0..200 {
+            x = b.fadd(x, x);
+        }
+        let p = b.finish(Some(x));
+        assert_eq!(adaptive_chunk_capacity(&p), CHUNK_EVENTS);
+
+        // branchy: many tiny blocks ⇒ clamped to the floor
+        let mut b = ProgramBuilder::new("branchy");
+        let one = b.const_i(1);
+        let two = b.const_i(2);
+        let c = b.cmp_lt(one, two);
+        for _ in 0..12 {
+            b.if_then_else(
+                c,
+                |b| {
+                    b.const_i(1);
+                },
+                |b| {
+                    b.const_i(2);
+                },
+            );
+        }
+        let p = b.finish(None);
+        let blocks = p.func.blocks.len();
+        let mean_events = p.func.static_instrs() / blocks + 2;
+        assert!(mean_events < 8, "branchy program should have short blocks");
+        assert_eq!(adaptive_chunk_capacity(&p), MIN_CHUNK_EVENTS);
+
+        // mid-density: ~30 instrs/block lands between floor and ceiling
+        let mut b = ProgramBuilder::new("mid");
+        let n = b.const_i(4);
+        b.counted_loop(n, |b, _i| {
+            let mut x = b.const_f(1.0);
+            for _ in 0..28 {
+                x = b.fadd(x, x);
+            }
+            b.fabs(x);
+        });
+        let p = b.finish(None);
+        let cap = adaptive_chunk_capacity(&p);
+        assert!(cap.is_power_of_two());
+        assert!((MIN_CHUNK_EVENTS..=CHUNK_EVENTS).contains(&cap));
     }
 }

@@ -2,11 +2,14 @@
 //! instrumentation stream (PISA's instrumented-binary run, §II Fig 1).
 //!
 //! The inner loop is written once, generic over an [`EventSink`] delivery
-//! strategy, and monomorphized twice: [`Machine::run`] batches events into
-//! a reusable [`EventChunk`] flushed at block boundaries (the default, fast
-//! path), [`Machine::run_per_event`] delivers one virtual call per event
-//! (the reference path the chunked-equivalence property test checks
-//! against, and the dispatch baseline in `benches/perf_micro.rs`).
+//! strategy, and monomorphized per strategy: [`Machine::run`] batches
+//! events into a reusable [`EventChunk`] flushed at block boundaries (the
+//! default, fast path), [`Machine::run_per_event`] delivers one virtual
+//! call per event (the reference path the chunked-equivalence property
+//! test checks against, and the dispatch baseline in
+//! `benches/perf_micro.rs`), and [`super::offload::run_offload`] ships
+//! whole chunks to a dedicated analysis thread so interpretation and
+//! analysis overlap.
 
 use std::time::Instant;
 
@@ -53,9 +56,10 @@ pub struct Outcome {
 }
 
 /// How the inner loop hands events to the instrumentation. Monomorphized:
-/// the chunked and per-event strategies each get their own copy of the
-/// interpreter loop with no per-event indirection of their own.
-trait EventSink {
+/// the chunked, per-event and offloaded strategies each get their own copy
+/// of the interpreter loop with no per-event indirection of their own (the
+/// offload delivery lives in [`super::offload`]).
+pub(crate) trait EventSink {
     fn event(&mut self, ev: TraceEvent);
     /// About to execute a block with `upcoming` instructions (+ entry and
     /// possibly a branch event). Chunked delivery flushes here when the
@@ -102,8 +106,7 @@ impl EventSink for Chunked<'_> {
 
     #[inline]
     fn block_boundary(&mut self, upcoming: usize) {
-        // +2: the BlockEnter event and a possible terminating Branch event
-        if self.chunk.remaining() < upcoming + 2 {
+        if self.chunk.needs_flush_for_block(upcoming) {
             self.chunk.flush_into(self.sink);
         }
     }
@@ -140,10 +143,18 @@ impl<'p> Machine<'p> {
         self.regs[r as usize]
     }
 
+    /// Chunk capacity the chunked and offloaded paths use for this
+    /// program — see [`super::events::adaptive_chunk_capacity`].
+    pub fn chunk_capacity(&self) -> usize {
+        super::events::adaptive_chunk_capacity(self.prog)
+    }
+
     /// Execute to completion, streaming events into `sink` in chunks (the
-    /// default profiling path).
+    /// default profiling path). Chunk capacity adapts to the program's
+    /// static block shape.
     pub fn run(&mut self, sink: &mut dyn Instrument) -> Result<Outcome> {
-        let mut delivery = Chunked { sink, chunk: EventChunk::new() };
+        let chunk = EventChunk::with_capacity(self.chunk_capacity());
+        let mut delivery = Chunked { sink, chunk };
         self.run_with(&mut delivery)
     }
 
@@ -255,7 +266,7 @@ impl<'p> Machine<'p> {
     }
 
     /// The interpreter loop, generic over the event-delivery strategy.
-    fn run_with<S: EventSink>(&mut self, delivery: &mut S) -> Result<Outcome> {
+    pub(crate) fn run_with<S: EventSink>(&mut self, delivery: &mut S) -> Result<Outcome> {
         let t0 = Instant::now();
         let mut stats = ExecStats::default();
         let mut bb = 0u32;

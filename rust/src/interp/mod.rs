@@ -3,10 +3,13 @@
 pub mod events;
 pub mod machine;
 pub mod memory;
+pub mod offload;
 
 pub use events::{
-    Counter, EventChunk, Fanout, Instrument, InstrEvent, MemAccess, NullInstrument, TraceEvent,
-    CHUNK_EVENTS,
+    adaptive_chunk_capacity, ChunkLanes, Counter, EventChunk, Fanout, Instrument, InstrEvent,
+    MemAccess, NullInstrument, TraceEvent, CHUNK_EVENTS, MIN_CHUNK_EVENTS, TAG_BLOCK, TAG_BR_NOT,
+    TAG_BR_TAKEN,
 };
 pub use machine::{run_program, ExecStats, Machine, Outcome};
 pub use memory::Memory;
+pub use offload::{run_offload, run_program_mode, PipelineMode};

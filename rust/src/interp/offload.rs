@@ -1,0 +1,274 @@
+//! Off-thread analysis: overlap interpretation with analyzer folding.
+//!
+//! The inline chunked path ([`Machine::run`]) stalls the interpreter while
+//! the analyzer stack folds each chunk — on analyzer-heavy profiles the
+//! interpreter spends most of its wall time waiting. This module moves the
+//! fold to a dedicated **analysis thread**: the interpreter fills owned
+//! [`EventChunk`]s and ships them over a bounded `sync_channel`; the
+//! analysis thread (which owns the `Instrument` stack for the duration of
+//! the run) flushes each chunk — building its SoA
+//! [`ChunkLanes`](super::events::ChunkLanes) view there, off the
+//! interpreter's critical path — and recycles the empty buffer back over a
+//! return channel. The interpreter produces chunk *N+1* while the
+//! analyzers fold chunk *N*.
+//!
+//! ## Memory and backpressure
+//!
+//! A fixed pool of [`OFFLOAD_POOL_CHUNKS`] owned chunks cycles between the
+//! two threads (double buffering plus queue slack): one in the
+//! interpreter's hands, up to [`OFFLOAD_QUEUE_CHUNKS`] queued, one being
+//! folded. Shipping waits for a recycled buffer, so when the analysis
+//! thread is the slower side the interpreter blocks instead of piling up
+//! unbounded trace — memory is bounded by the pool no matter how lopsided
+//! the two sides are (stressed in `rust/tests/prop_chunked.rs`).
+//!
+//! ## Equivalence
+//!
+//! Chunks arrive in emission order over a FIFO channel and every analyzer
+//! is a pure fold over the event sequence, so offloaded metrics are
+//! **bit-identical** to the inline chunked and per-event paths — the same
+//! property test gates all three. `ExecStats::wall_s` is rewritten to span
+//! the whole run *including* the analysis thread's drain, so
+//! `events_per_sec` stays comparable across [`PipelineMode`]s.
+
+use std::mem;
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::events::{EventChunk, Instrument, TraceEvent};
+use super::machine::{EventSink, Machine, Outcome};
+use crate::ir::Program;
+
+/// Bound of the full-chunk channel: how many filled chunks may queue
+/// between the interpreter and the analysis thread.
+pub const OFFLOAD_QUEUE_CHUNKS: usize = 2;
+
+/// Owned chunks cycling between the threads: one being filled, up to
+/// [`OFFLOAD_QUEUE_CHUNKS`] in flight, one being folded.
+pub const OFFLOAD_POOL_CHUNKS: usize = OFFLOAD_QUEUE_CHUNKS + 2;
+
+/// How the profiling pipeline delivers chunks to the analyzers. Threaded
+/// CLI (`--pipeline`) → `coordinator::pipeline` → every worker's run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PipelineMode {
+    /// Analyzers fold each chunk on the interpreter thread (the reference
+    /// semantics; lowest latency for tiny runs).
+    #[default]
+    Inline,
+    /// Analyzers fold on a dedicated thread, overlapped with
+    /// interpretation (fastest for realistic workload sizes).
+    Offload,
+}
+
+impl PipelineMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PipelineMode::Inline => "inline",
+            PipelineMode::Offload => "offload",
+        }
+    }
+
+    /// Parse the CLI `--pipeline` value.
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s.trim() {
+            "inline" => Ok(PipelineMode::Inline),
+            "offload" => Ok(PipelineMode::Offload),
+            other => bail!("unknown pipeline mode '{other}' (inline|offload)"),
+        }
+    }
+}
+
+/// Interpreter-side delivery: fills owned chunks and cycles them through
+/// the channel pair. Mirrors the inline `Chunked` sink's flush points
+/// exactly (block boundaries, mid-giant-block fills, end of run) so chunk
+/// boundaries — and therefore lane sweeps — are identical across modes.
+struct OffloadSink {
+    full: SyncSender<EventChunk>,
+    free: Receiver<EventChunk>,
+    chunk: EventChunk,
+    /// Set when the analysis thread is gone (panic teardown): buffered
+    /// events are dropped and `run_offload` surfaces the join error.
+    detached: bool,
+}
+
+impl OffloadSink {
+    fn ship(&mut self) {
+        if self.chunk.is_empty() {
+            return;
+        }
+        if !self.detached {
+            // backpressure: wait for a recycled buffer before shipping —
+            // the pool bounds in-flight memory however slow the analyzers
+            match self.free.recv() {
+                Ok(fresh) => {
+                    let full = mem::replace(&mut self.chunk, fresh);
+                    if self.full.send(full).is_err() {
+                        self.detached = true;
+                    }
+                    return;
+                }
+                Err(_) => self.detached = true,
+            }
+        }
+        self.chunk.clear();
+    }
+}
+
+impl EventSink for OffloadSink {
+    #[inline]
+    fn event(&mut self, ev: TraceEvent) {
+        // a single block larger than the buffer still ships safely mid-block
+        if self.chunk.is_full() {
+            self.ship();
+        }
+        self.chunk.push(ev);
+    }
+
+    #[inline]
+    fn block_boundary(&mut self, upcoming: usize) {
+        if self.chunk.needs_flush_for_block(upcoming) {
+            self.ship();
+        }
+    }
+
+    fn finish(&mut self) {
+        self.ship();
+    }
+}
+
+/// Execute `machine` to completion with the analyzers folding on a
+/// dedicated thread. `sink` is moved to that thread for the duration of
+/// the run (hence `Send`) and handed back — through the borrow — when this
+/// returns; metrics are bit-identical to [`Machine::run`].
+pub fn run_offload(
+    machine: &mut Machine<'_>,
+    sink: &mut (dyn Instrument + Send),
+) -> Result<Outcome> {
+    let capacity = machine.chunk_capacity();
+    let t0 = Instant::now();
+    let mut outcome = std::thread::scope(|s| -> Result<Outcome> {
+        let (full_tx, full_rx) = mpsc::sync_channel::<EventChunk>(OFFLOAD_QUEUE_CHUNKS);
+        let (free_tx, free_rx) = mpsc::channel::<EventChunk>();
+        for _ in 0..OFFLOAD_POOL_CHUNKS - 1 {
+            free_tx.send(EventChunk::with_capacity(capacity)).expect("free channel open");
+        }
+        let worker = s.spawn(move || {
+            // the analysis thread owns the sink until the chunk channel
+            // closes; lanes are built here (per chunk, inside flush_into)
+            while let Ok(mut chunk) = full_rx.recv() {
+                chunk.flush_into(&mut *sink);
+                // interpreter may already be gone on error teardown
+                let _ = free_tx.send(chunk);
+            }
+        });
+        let mut delivery = OffloadSink {
+            full: full_tx,
+            free: free_rx,
+            chunk: EventChunk::with_capacity(capacity),
+            detached: false,
+        };
+        let run = machine.run_with(&mut delivery);
+        // closing the chunk channel lets the worker drain what's in flight
+        // and exit; join before returning so all events are folded
+        drop(delivery);
+        if let Err(payload) = worker.join() {
+            // an analyzer panic must surface with its original message,
+            // exactly as it would on the inline path
+            std::panic::resume_unwind(payload);
+        }
+        run
+    })?;
+    // the interpreter's own timer stopped at Ret, before the analysis
+    // thread finished draining; report the overlap-inclusive wall time so
+    // events_per_sec stays honest across pipeline modes
+    outcome.stats.wall_s = t0.elapsed().as_secs_f64();
+    Ok(outcome)
+}
+
+/// One-shot convenience mirroring [`super::machine::run_program`], with the
+/// delivery mode as a knob: build a machine, run, return outcome and
+/// machine (for post-run buffer inspection).
+pub fn run_program_mode<'p>(
+    prog: &'p Program,
+    sink: &mut (dyn Instrument + Send),
+    mode: PipelineMode,
+) -> Result<(Outcome, Machine<'p>)> {
+    let mut m = Machine::new(prog)?;
+    let out = match mode {
+        PipelineMode::Inline => m.run(sink)?,
+        PipelineMode::Offload => run_offload(&mut m, sink)?,
+    };
+    Ok((out, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::events::Counter;
+    use crate::ir::ProgramBuilder;
+
+    fn loop_program(n: i64) -> Program {
+        let mut b = ProgramBuilder::new("off");
+        let a = b.alloc_f64("a", 64);
+        let len = b.const_i(64);
+        let trip = b.const_i(n);
+        b.counted_loop(trip, |b, i| {
+            let idx = b.rem(i, len);
+            let v = b.load_f64(a, idx);
+            let w = b.fadd(v, v);
+            b.store_f64(a, idx, w);
+        });
+        b.finish(None)
+    }
+
+    #[test]
+    fn mode_parsing_roundtrips() {
+        assert_eq!(PipelineMode::from_name("inline").unwrap(), PipelineMode::Inline);
+        assert_eq!(PipelineMode::from_name(" offload ").unwrap(), PipelineMode::Offload);
+        assert!(PipelineMode::from_name("bogus").is_err());
+        assert_eq!(PipelineMode::default().name(), "inline");
+    }
+
+    #[test]
+    fn offload_counts_match_inline() {
+        let p = loop_program(5000);
+        let mut inline = Counter::default();
+        let mut offl = Counter::default();
+        let o1 = Machine::new(&p).unwrap().run(&mut inline).unwrap();
+        let o2 = run_offload(&mut Machine::new(&p).unwrap(), &mut offl).unwrap();
+        assert_eq!(o1.stats.dyn_instrs, o2.stats.dyn_instrs);
+        assert_eq!(o1.stats.dyn_blocks, o2.stats.dyn_blocks);
+        assert_eq!(o1.stats.dyn_branches, o2.stats.dyn_branches);
+        assert_eq!(
+            (inline.instrs, inline.blocks, inline.branches, inline.loads, inline.stores),
+            (offl.instrs, offl.blocks, offl.branches, offl.loads, offl.stores)
+        );
+        assert!(o2.stats.wall_s > 0.0);
+        assert!(o2.stats.events_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn run_program_mode_selects_delivery() {
+        let p = loop_program(100);
+        let mut a = Counter::default();
+        let mut b = Counter::default();
+        let (o1, _) = run_program_mode(&p, &mut a, PipelineMode::Inline).unwrap();
+        let (o2, _) = run_program_mode(&p, &mut b, PipelineMode::Offload).unwrap();
+        assert_eq!(o1.stats.dyn_instrs, o2.stats.dyn_instrs);
+        assert_eq!(a.instrs, b.instrs);
+    }
+
+    #[test]
+    fn interpreter_error_propagates_through_offload() {
+        let mut b = ProgramBuilder::new("dz");
+        let x = b.const_i(1);
+        let z = b.const_i(0);
+        b.div(x, z);
+        let p = b.finish(None);
+        let mut c = Counter::default();
+        let err = run_offload(&mut Machine::new(&p).unwrap(), &mut c);
+        assert!(err.is_err());
+    }
+}

@@ -8,6 +8,7 @@ use anyhow::{bail, Result};
 use pisa_nmc::analysis::MetricSet;
 use pisa_nmc::cli::{self, Args};
 use pisa_nmc::coordinator::{self, figures};
+use pisa_nmc::interp::PipelineMode;
 use pisa_nmc::report::save_json;
 use pisa_nmc::runtime::Runtime;
 use pisa_nmc::workloads;
@@ -51,6 +52,14 @@ fn metric_set(args: &Args) -> Result<MetricSet> {
     }
 }
 
+/// Parse the `--pipeline` event-delivery mode (default: inline).
+fn pipeline_mode(args: &Args) -> Result<PipelineMode> {
+    match args.get("pipeline") {
+        Some(name) => PipelineMode::from_name(name),
+        None => Ok(PipelineMode::Inline),
+    }
+}
+
 fn run(args: Args) -> Result<()> {
     match args.command.as_str() {
         "pipeline" => {
@@ -58,10 +67,17 @@ fn run(args: Args) -> Result<()> {
             let seed = args.get_u64("seed", 42)?;
             let threads = args.get_usize("threads", 8)?;
             let metrics = metric_set(&args)?;
+            let mode = pipeline_mode(&args)?;
             let rt = load_runtime(&args);
             let report =
-                coordinator::run_pipeline_select(scale, seed, threads, rt.as_ref(), metrics)?;
+                coordinator::run_pipeline_select(scale, seed, threads, rt.as_ref(), metrics, mode)?;
             print!("{}", report.render_all());
+            // perf trend line for CI logs: suite-level profiler throughput
+            eprintln!(
+                "[perf] suite profile rate: {:.2}M events/s ({} pipeline)",
+                report.suite_events_per_sec() / 1e6,
+                report.mode.name()
+            );
             if report.analytics.engine == coordinator::Engine::Pjrt {
                 eprintln!(
                     "[pjrt] native cross-check max err: {:.2e}",
@@ -80,7 +96,8 @@ fn run(args: Args) -> Result<()> {
             let n = args.get_usize("n", k.default_n())?;
             let seed = args.get_u64("seed", 42)?;
             let metrics = metric_set(&args)?;
-            let r = coordinator::profile_app_select(k.as_ref(), n, seed, metrics)?;
+            let mode = pipeline_mode(&args)?;
+            let r = coordinator::profile_app_mode(k.as_ref(), n, seed, metrics, mode)?;
             if args.has("json") {
                 let mut j = r.metrics.to_json();
                 j.set("edp", r.cmp.to_json());
@@ -89,8 +106,9 @@ fn run(args: Args) -> Result<()> {
                 println!("{} (n={})", r.name, r.n);
                 println!("  dyn instrs        {}", r.metrics.exec.dyn_instrs);
                 println!(
-                    "  profile rate      {:.2}M events/s",
-                    r.events_per_sec() / 1e6
+                    "  profile rate      {:.2}M events/s ({} pipeline)",
+                    r.events_per_sec() / 1e6,
+                    mode.name()
                 );
                 println!(
                     "  mem entropy(1B)   {:.3} bits",
@@ -115,9 +133,10 @@ fn run(args: Args) -> Result<()> {
             let seed = args.get_u64("seed", 42)?;
             let threads = args.get_usize("threads", 8)?;
             let metrics = metric_set(&args)?;
+            let mode = pipeline_mode(&args)?;
             let rt = load_runtime(&args);
             let report =
-                coordinator::run_pipeline_select(scale, seed, threads, rt.as_ref(), metrics)?;
+                coordinator::run_pipeline_select(scale, seed, threads, rt.as_ref(), metrics, mode)?;
             let (text, _json) = match which.as_str() {
                 "3a" => figures::fig3a(&report.apps, &report.analytics),
                 "3b" => figures::fig3b(&report.apps, &report.analytics),

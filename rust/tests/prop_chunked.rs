@@ -1,13 +1,22 @@
-//! Chunked-pipeline equivalence property: for seeded random programs from
-//! `testkit`, profiling through the chunked `EventChunk`/`on_chunk` hot
-//! path produces **bit-identical** `AppMetrics` to the per-event reference
-//! path — pca8 feature vectors, entropy histograms (count-of-counts),
-//! reuse-distance CDFs, instruction mix, ILP windows, BBLP/PBBLP and the
-//! dynamic-count stats all compared exactly. This is the safety net under
-//! every tuned `on_chunk` implementation: any reordering or lost/duplicated
-//! event shows up here as a bit mismatch.
+//! Pipeline equivalence properties: for seeded random programs from
+//! `testkit`, profiling through the chunked `EventChunk` lane-swept hot
+//! path **and** through the offloaded analysis thread produces
+//! **bit-identical** `AppMetrics` to the per-event reference path — pca8
+//! feature vectors, entropy histograms (count-of-counts), reuse-distance
+//! CDFs, instruction mix, ILP windows, BBLP/PBBLP and the dynamic-count
+//! stats all compared exactly. This is the safety net under every tuned
+//! `on_chunk`/`on_chunk_lanes` implementation and under the offload
+//! channel protocol: any reordering or lost/duplicated event — on either
+//! thread — shows up here as a bit mismatch.
+//!
+//! The backpressure stress at the bottom deliberately makes the analysis
+//! thread the slow side, so the bounded chunk pool must throttle the
+//! interpreter without deadlocking or dropping events.
 
-use pisa_nmc::analysis::{profile, profile_per_event, AppMetrics};
+use std::time::Duration;
+
+use pisa_nmc::analysis::{profile, profile_offload, profile_per_event, AppMetrics};
+use pisa_nmc::interp::{run_offload, Counter, Instrument, Machine, TraceEvent};
 use pisa_nmc::prop_assert;
 use pisa_nmc::testkit::{check_seeded, random_program};
 
@@ -118,7 +127,22 @@ fn chunked_profile_is_bit_identical_to_per_event() {
 }
 
 #[test]
-fn chunked_profile_is_bit_identical_on_real_kernels() {
+fn offload_profile_is_bit_identical_to_inline() {
+    // the third delivery path: analyzers folding on a dedicated thread,
+    // chunks crossing the bounded channel — same bits, every seed
+    check_seeded("offload == inline", 0x0FF1, 24, |rng| {
+        let p = random_program(rng);
+        let offloaded = profile_offload(&p).map_err(|e| e.to_string())?;
+        let inline = profile(&p).map_err(|e| e.to_string())?;
+        assert_bit_identical(&offloaded, &inline)?;
+        // and transitively against the per-event reference
+        let reference = profile_per_event(&p).map_err(|e| e.to_string())?;
+        assert_bit_identical(&offloaded, &reference)
+    });
+}
+
+#[test]
+fn all_three_paths_bit_identical_on_real_kernels() {
     // the suite kernels exercise nested loops, reductions and irregular
     // access patterns at sizes spanning several chunk flushes
     for (name, n) in [("gesummv", 24), ("atax", 24), ("bfs", 24), ("kmeans", 12)] {
@@ -126,8 +150,80 @@ fn chunked_profile_is_bit_identical_on_real_kernels() {
         let p = k.build(n, 7);
         let chunked = profile(&p).unwrap();
         let reference = profile_per_event(&p).unwrap();
+        let offloaded = profile_offload(&p).unwrap();
         if let Err(msg) = assert_bit_identical(&chunked, &reference) {
-            panic!("{name}: {msg}");
+            panic!("{name} (chunked vs per-event): {msg}");
+        }
+        if let Err(msg) = assert_bit_identical(&offloaded, &chunked) {
+            panic!("{name} (offload vs chunked): {msg}");
         }
     }
+}
+
+/// A deliberately slow analyzer: sleeps on every chunk so the analysis
+/// thread falls behind the interpreter and the bounded chunk pool must
+/// throttle the producer.
+struct SlowCounter {
+    inner: Counter,
+    delay: Duration,
+    chunks: u64,
+}
+
+impl Instrument for SlowCounter {
+    fn on_event(&mut self, ev: &TraceEvent) {
+        self.inner.on_event(ev);
+    }
+
+    fn on_chunk(&mut self, events: &[TraceEvent]) {
+        std::thread::sleep(self.delay);
+        self.chunks += 1;
+        for ev in events {
+            self.inner.on_event(ev);
+        }
+    }
+}
+
+#[test]
+fn offload_backpressure_with_slow_analyzer_loses_nothing() {
+    // ~100+ chunk flushes against an analyzer that sleeps per chunk: the
+    // interpreter must block on the recycled-buffer channel (bounded
+    // memory), never deadlock, and every event must still arrive in order
+    use pisa_nmc::ir::ProgramBuilder;
+    let mut b = ProgramBuilder::new("stress");
+    let a = b.alloc_f64("a", 256);
+    let len = b.const_i(256);
+    let n = b.const_i(40_000);
+    b.counted_loop(n, |b, i| {
+        let idx = b.rem(i, len);
+        let v = b.load_f64(a, idx);
+        let w = b.fadd(v, v);
+        b.store_f64(a, idx, w);
+    });
+    let p = b.finish(None);
+
+    let mut fast = Counter::default();
+    let inline = Machine::new(&p).unwrap().run(&mut fast).unwrap();
+
+    let mut slow = SlowCounter {
+        inner: Counter::default(),
+        delay: Duration::from_millis(1),
+        chunks: 0,
+    };
+    let offl = run_offload(&mut Machine::new(&p).unwrap(), &mut slow).unwrap();
+
+    assert!(slow.chunks > 50, "expected many chunk flushes, got {}", slow.chunks);
+    assert_eq!(inline.stats.dyn_instrs, offl.stats.dyn_instrs);
+    assert_eq!(
+        (fast.instrs, fast.blocks, fast.branches, fast.loads, fast.stores),
+        (
+            slow.inner.instrs,
+            slow.inner.blocks,
+            slow.inner.branches,
+            slow.inner.loads,
+            slow.inner.stores
+        )
+    );
+    // the offload wall clock includes the analysis drain, so the slow
+    // analyzer's sleeps are visible in the reported throughput
+    assert!(offl.stats.wall_s >= slow.chunks as f64 * 0.001);
 }
