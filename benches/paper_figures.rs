@@ -4,6 +4,7 @@
 //! Set `PISA_BENCH_SCALE=1.0` to regenerate the EXPERIMENTS.md numbers
 //! exactly (≈1–2 min); the default 0.25 keeps the shape at reduced size.
 
+use pisa_nmc::analysis::MetricSet;
 use pisa_nmc::coordinator::{analyze_suite, figures, run_suite};
 use pisa_nmc::runtime::Runtime;
 use pisa_nmc::testkit::bench::{bench, bench_scale};
@@ -35,17 +36,19 @@ fn main() -> anyhow::Result<()> {
     });
     let analytics = analytics.unwrap();
 
+    let all = MetricSet::all();
     let figs: Vec<(&str, String)> = vec![
-        ("fig3a", figures::fig3a(&apps, &analytics).0),
-        ("fig3b", figures::fig3b(&apps, &analytics).0),
-        ("fig3c", figures::fig3c(&apps).0),
+        ("fig3a", figures::fig3a(&apps, &analytics, all).0),
+        ("fig3b", figures::fig3b(&apps, &analytics, all).0),
+        ("fig3c", figures::fig3c(&apps, all).0),
         ("fig4", figures::fig4(&apps).0),
-        ("fig5", figures::fig5(&apps, &analytics).0),
-        ("fig6", figures::fig6(&apps, &analytics).0),
+        ("fig5", figures::fig5(&apps, &analytics, all).0),
+        ("fig6", figures::fig6(&apps, &analytics, all).0),
+        ("fig_mrc", figures::fig_mrc(&apps, all).0),
     ];
     for (name, text) in &figs {
         bench(&format!("{name}_render"), 1, 10, None, || match *name {
-            "3a" => figures::fig3a(&apps, &analytics).0.len(),
+            "fig3a" => figures::fig3a(&apps, &analytics, all).0.len(),
             _ => text.len(),
         });
     }

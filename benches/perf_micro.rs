@@ -87,6 +87,13 @@ fn main() -> anyhow::Result<()> {
         run_with(&prog, &mut a);
         std::hint::black_box(a.finalize());
     });
+    bench("traffic_sweep (MRC + 3 shadow caches + bytes)", 1, 3, Some((n, "instr")), || {
+        // the traffic subsystem alone, sweeping the addr/size/store lanes:
+        // one Olken stack at 64B lines + the shadow bank + byte tallies
+        let mut a = pisa_nmc::traffic::TrafficAnalyzer::new();
+        run_with(&prog, &mut a);
+        std::hint::black_box(a.finalize(n));
+    });
     bench("analyzer_ilp (4 windows + inf)", 1, 3, Some((n, "instr")), || {
         let mut a = IlpAnalyzer::new(prog.func.n_regs);
         run_with(&prog, &mut a);

@@ -6,6 +6,10 @@
 //! (per-event reference, inline chunked, offloaded) for the per-app
 //! dispatch/overlap comparison.
 //!
+//! A third inline arm runs with the `traffic` family disabled, so the
+//! memory-traffic subsystem's events/s overhead (budget: ≤ 25% vs the
+//! default all-families stack) is measured on every run.
+//!
 //! With `--bench-json` the suite numbers land in `BENCH_pipeline.json` at
 //! the repo root, so successive PRs have a perf trajectory to diff against.
 //!
@@ -17,7 +21,7 @@
 
 use std::time::Instant;
 
-use pisa_nmc::analysis::{profile, profile_offload, profile_per_event, MetricSet};
+use pisa_nmc::analysis::{profile, profile_offload, profile_per_event, Metric, MetricSet};
 use pisa_nmc::coordinator::{run_suite_select, AppResult};
 use pisa_nmc::interp::PipelineMode;
 use pisa_nmc::testkit::bench::bench_scale;
@@ -25,9 +29,13 @@ use pisa_nmc::util::Json;
 use pisa_nmc::workloads::{registry, scaled_n};
 
 /// One end-to-end suite run; returns per-app results and events/s of wall.
-fn suite_arm(scale: f64, mode: PipelineMode) -> anyhow::Result<(Vec<AppResult>, f64)> {
+fn suite_arm(
+    scale: f64,
+    metrics: MetricSet,
+    mode: PipelineMode,
+) -> anyhow::Result<(Vec<AppResult>, f64)> {
     let t0 = Instant::now();
-    let apps = run_suite_select(scale, 42, 8, MetricSet::all(), mode)?;
+    let apps = run_suite_select(scale, 42, 8, metrics, mode)?;
     let suite_s = t0.elapsed().as_secs_f64();
     let total_events: u64 = apps.iter().map(|a| a.metrics.exec.events()).sum();
     Ok((apps, total_events as f64 / suite_s))
@@ -39,8 +47,12 @@ fn main() -> anyhow::Result<()> {
     println!("== profiler throughput (scale {scale}) ==\n");
 
     // end-to-end suite in both delivery modes: all analyzers + sims
-    let (inline_apps, inline_eps) = suite_arm(scale, PipelineMode::Inline)?;
-    let (offload_apps, offload_eps) = suite_arm(scale, PipelineMode::Offload)?;
+    let (inline_apps, inline_eps) = suite_arm(scale, MetricSet::all(), PipelineMode::Inline)?;
+    let (offload_apps, offload_eps) = suite_arm(scale, MetricSet::all(), PipelineMode::Offload)?;
+    // the traffic-subsystem overhead arm: same inline suite minus the
+    // traffic family (its budget: ≤ 25% events/s overhead vs this arm)
+    let (_, no_traffic_eps) =
+        suite_arm(scale, MetricSet::all().without(Metric::Traffic), PipelineMode::Inline)?;
 
     println!(
         "{:<14} {:>14} {:>12} {:>12} {:>8}",
@@ -57,10 +69,18 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!(
-        "\nsuite end-to-end: inline {:.2}M events/s, offload {:.2}M events/s → {:.2}x\n",
+        "\nsuite end-to-end: inline {:.2}M events/s, offload {:.2}M events/s → {:.2}x",
         inline_eps / 1e6,
         offload_eps / 1e6,
         offload_eps / inline_eps.max(1e-9),
+    );
+    let traffic_overhead_pct = (no_traffic_eps / inline_eps.max(1e-9) - 1.0) * 100.0;
+    println!(
+        "traffic overhead: enabled {:.2}M events/s vs disabled {:.2}M events/s → {:.1}% \
+         (budget ≤ 25%)\n",
+        inline_eps / 1e6,
+        no_traffic_eps / 1e6,
+        traffic_overhead_pct,
     );
 
     // three-way dispatch comparison, single app at a time, analyzers only —
@@ -115,6 +135,14 @@ fn main() -> anyhow::Result<()> {
         suite.set("offload_events_per_sec", offload_eps);
         suite.set("offload_speedup", offload_eps / inline_eps.max(1e-9));
         j.set("suite", suite);
+        // traffic-subsystem overhead trend: events/s with the traffic
+        // family enabled (the default stack) vs disabled, same inline
+        // delivery — budget ≤ 25%
+        let mut traffic = Json::obj();
+        traffic.set("enabled_events_per_sec", inline_eps);
+        traffic.set("disabled_events_per_sec", no_traffic_eps);
+        traffic.set("overhead_pct", traffic_overhead_pct);
+        j.set("traffic", traffic);
         let mut apps = Json::obj();
         for (a, o) in inline_apps.iter().zip(&offload_apps) {
             let mut app = Json::obj();

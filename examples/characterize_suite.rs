@@ -7,6 +7,7 @@
 //! cargo run --release --example characterize_suite -- [scale]
 //! ```
 
+use pisa_nmc::analysis::MetricSet;
 use pisa_nmc::coordinator::{analyze_suite, figures, run_suite};
 use pisa_nmc::runtime::Runtime;
 
@@ -29,11 +30,14 @@ fn main() -> anyhow::Result<()> {
     }
     let analytics = analyze_suite(&apps, rt.as_ref())?;
 
-    print!("{}", figures::fig3a(&apps, &analytics).0);
+    let all = MetricSet::all();
+    print!("{}", figures::fig3a(&apps, &analytics, all).0);
     println!();
-    print!("{}", figures::fig3b(&apps, &analytics).0);
+    print!("{}", figures::fig3b(&apps, &analytics, all).0);
     println!();
-    print!("{}", figures::fig3c(&apps).0);
+    print!("{}", figures::fig3c(&apps, all).0);
+    println!();
+    print!("{}", figures::fig_mrc(&apps, all).0);
 
     // the paper's headline observation on this data
     let gs = apps.iter().position(|a| a.name == "gramschmidt").unwrap();

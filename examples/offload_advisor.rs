@@ -6,10 +6,14 @@
 //!   2. run the numeric analytics (memory entropy, spatial locality, PCA)
 //!      as AOT JAX/Pallas artifacts on PJRT,
 //!   3. recommend offload candidates from the platform-independent metrics
-//!      alone (the paper's thesis: metrics predict NMC suitability),
+//!      alone (the paper's thesis: metrics predict NMC suitability) — now
+//!      including the `traffic` subsystem's data-movement signals: bytes
+//!      per instruction and the miss-ratio-curve knee (NMPO's offload
+//!      model ranks by exactly this memory-traffic behavior),
 //!   4. validate the recommendation by simulating each app on both the
 //!      Power9-class host and the 32-PE HMC NMC system, reporting the
-//!      paper's headline metric: EDP improvement.
+//!      paper's headline metric: EDP improvement, and the Spearman rank
+//!      correlation of each suitability signal against it.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example offload_advisor -- [scale]
@@ -51,6 +55,8 @@ fn main() -> anyhow::Result<()> {
         "app",
         "PBBLP",
         "spat_8B_16B",
+        "B/instr",
+        "MRC knee",
         "PC1",
         "recommend",
         "EDP improvement",
@@ -63,10 +69,16 @@ fn main() -> anyhow::Result<()> {
         if actual == recommend[i] {
             agree += 1;
         }
+        let tr = &a.metrics.traffic;
         t.row(vec![
             a.name.clone(),
             format!("{:.0}", a.metrics.pbblp.pbblp),
             format!("{:.3}", a.metrics.spatial.spat_8b_16b()),
+            format!("{:.2}", tr.bytes_per_instr()),
+            match tr.mrc_knee_bytes {
+                Some(b) => pisa_nmc::traffic::capacity_label(b),
+                None => "–".into(),
+            },
             format!("{:+.2}", analytics.pca.scores[i][0]),
             if recommend[i] { "offload" } else { "host" }.into(),
             format!("{edp:.2}x"),
@@ -77,10 +89,23 @@ fn main() -> anyhow::Result<()> {
 
     let pc1: Vec<f64> = (0..apps.len()).map(|i| analytics.pca.scores[i][0]).collect();
     let edps: Vec<f64> = apps.iter().map(|a| a.cmp.edp_improvement()).collect();
+    // the traffic subsystem's suitability signals, ranked against the
+    // simulated outcome exactly like PC1: data movement per instruction
+    // (more movement → more to gain near memory) and the MRC knee (a
+    // bigger knee capacity → cache-hostile working set; knee-less flat
+    // curves rank below the family when the footprint fits the smallest
+    // capacity and past it otherwise — see knee_or_sentinel)
+    let bpi: Vec<f64> = apps.iter().map(|a| a.metrics.traffic.bytes_per_instr()).collect();
+    let knee: Vec<f64> = apps.iter().map(|a| a.metrics.traffic.knee_or_sentinel()).collect();
     println!(
         "\nmetric→EDP agreement: {agree}/{} apps;  Spearman(PC1, EDP improvement) = {:.2}",
         apps.len(),
         spearman(&pc1, &edps)
+    );
+    println!(
+        "traffic signals:      Spearman(bytes/instr, EDP) = {:.2};  Spearman(MRC knee, EDP) = {:.2}",
+        spearman(&bpi, &edps),
+        spearman(&knee, &edps)
     );
     println!(
         "headline (paper Fig 4): best EDP improvement {:.2}x ({})",

@@ -16,7 +16,7 @@
 
 use crate::util::FastMap;
 
-use crate::interp::{ChunkLanes, Instrument, TraceEvent};
+use crate::interp::{ChunkLanes, Instrument, LaneMask, TraceEvent};
 use crate::util::stats::shannon_entropy_counts;
 use crate::util::Json;
 
@@ -175,6 +175,10 @@ impl Instrument for MemEntropyAnalyzer {
 
     fn wants_lanes(&self) -> bool {
         true
+    }
+
+    fn lane_needs(&self) -> LaneMask {
+        LaneMask::ADDRS
     }
 }
 

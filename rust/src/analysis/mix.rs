@@ -4,7 +4,9 @@
 //! feed the machine models' cost estimates and the report's
 //! characterization table.
 
-use crate::interp::{ChunkLanes, Instrument, TraceEvent, TAG_BLOCK, TAG_BR_NOT, TAG_BR_TAKEN};
+use crate::interp::{
+    ChunkLanes, Instrument, LaneMask, TraceEvent, TAG_BLOCK, TAG_BR_NOT, TAG_BR_TAKEN,
+};
 use crate::ir::{Op, OpClass};
 use crate::util::Json;
 
@@ -125,6 +127,10 @@ impl Instrument for MixAnalyzer {
 
     fn wants_lanes(&self) -> bool {
         true
+    }
+
+    fn lane_needs(&self) -> LaneMask {
+        LaneMask::TAGS
     }
 }
 

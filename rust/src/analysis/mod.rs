@@ -8,9 +8,11 @@
 //! [`EventChunk`](crate::interp::EventChunk) flushes — one virtual call per
 //! chunk, statically-dispatched per-analyzer sweeps inside — and finalizing
 //! into one [`AppMetrics`]. The memory-side analyzers (`mix`,
-//! `mem_entropy`, `reuse`, and `spatial` through `reuse`) sweep the chunk's
-//! dense SoA [`ChunkLanes`](crate::interp::ChunkLanes) view, built once per
-//! chunk and shared across them. `analysis::profile`,
+//! `mem_entropy`, `reuse`, `spatial` through `reuse`, and the
+//! [`crate::traffic`] subsystem) sweep the chunk's dense SoA
+//! [`ChunkLanes`](crate::interp::ChunkLanes) view, built once per chunk —
+//! restricted by the stack's per-lane needs-mask to the lanes the enabled
+//! families actually read — and shared across them. `analysis::profile`,
 //! `coordinator::profile_app` and the examples/benches all drive this one
 //! code path; [`MetricSet`] selects a subset by name (the CLI `--metrics`
 //! flag ends up here).
@@ -33,6 +35,7 @@
 //! | DLP                    | [`dlp`]         | Fig 3c |
 //! | BBLP (windowed)        | [`bblp`]        | Fig 3c |
 //! | PBBLP                  | [`pbblp`]       | Fig 3c |
+//! | memory traffic / MRC   | [`crate::traffic`] | (extension: MRC figure) |
 
 pub mod bblp;
 pub mod branch;
@@ -54,15 +57,19 @@ pub use ilp::{IlpAnalyzer, IlpResult};
 pub use mem_entropy::{MemEntropyAnalyzer, MemEntropyResult};
 pub use mix::MixAnalyzer;
 pub use pbblp::{PbblpAnalyzer, PbblpResult};
-pub use reuse::{ReuseAnalyzer, ReuseResult};
+pub use reuse::{LineDist, ReuseAnalyzer, ReuseResult, StackDistance};
 pub use spatial::SpatialResult;
 
-use crate::interp::{offload, ChunkLanes, ExecStats, Instrument, Machine, PipelineMode, TraceEvent};
+use crate::interp::{
+    offload, ChunkLanes, ExecStats, Instrument, LaneMask, Machine, PipelineMode, TraceEvent,
+};
 use crate::ir::Program;
 use crate::sim::{Region, TaskTraceCollector};
+use crate::traffic::{TrafficAnalyzer, TrafficMetrics};
 use crate::util::Json;
 
-/// All §II metrics for one application run (PISA's JSON result object).
+/// All §II metrics for one application run (PISA's JSON result object),
+/// plus the memory-traffic extension family.
 #[derive(Debug, Clone)]
 pub struct AppMetrics {
     pub name: String,
@@ -75,6 +82,7 @@ pub struct AppMetrics {
     pub dlp: DlpResult,
     pub bblp: BblpResult,
     pub pbblp: PbblpResult,
+    pub traffic: TrafficMetrics,
     pub exec: ExecStats,
 }
 
@@ -92,10 +100,13 @@ pub enum Metric {
     Dlp = 5,
     Bblp = 6,
     Pbblp = 7,
+    /// The memory-traffic subsystem ([`crate::traffic`]): miss-ratio
+    /// curves, shadow caches, byte-traffic accounting.
+    Traffic = 8,
 }
 
 impl Metric {
-    pub const ALL: [Metric; 8] = [
+    pub const ALL: [Metric; 9] = [
         Metric::Mix,
         Metric::Branch,
         Metric::MemEntropy,
@@ -104,6 +115,7 @@ impl Metric {
         Metric::Dlp,
         Metric::Bblp,
         Metric::Pbblp,
+        Metric::Traffic,
     ];
 
     pub fn name(self) -> &'static str {
@@ -116,6 +128,7 @@ impl Metric {
             Metric::Dlp => "dlp",
             Metric::Bblp => "bblp",
             Metric::Pbblp => "pbblp",
+            Metric::Traffic => "traffic",
         }
     }
 }
@@ -126,8 +139,11 @@ impl Metric {
 /// shape-stable empty results so reports and figures never change layout.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MetricSet {
-    bits: u8,
+    bits: u16,
 }
+
+/// Bit mask with every [`Metric::ALL`] family set.
+const ALL_BITS: u16 = (1 << Metric::ALL.len()) - 1;
 
 impl Default for MetricSet {
     fn default() -> Self {
@@ -137,7 +153,7 @@ impl Default for MetricSet {
 
 impl MetricSet {
     pub fn all() -> Self {
-        MetricSet { bits: 0xFF }
+        MetricSet { bits: ALL_BITS }
     }
 
     pub fn none() -> Self {
@@ -145,17 +161,24 @@ impl MetricSet {
     }
 
     pub fn with(mut self, m: Metric) -> Self {
-        self.bits |= 1 << (m as u8);
+        self.bits |= 1 << (m as u16);
+        self
+    }
+
+    /// The set with family `m` removed (e.g. the bench's
+    /// traffic-disabled arm).
+    pub fn without(mut self, m: Metric) -> Self {
+        self.bits &= !(1 << (m as u16));
         self
     }
 
     #[inline]
     pub fn contains(&self, m: Metric) -> bool {
-        self.bits & (1 << (m as u8)) != 0
+        self.bits & (1 << (m as u16)) != 0
     }
 
     pub fn is_all(&self) -> bool {
-        self.bits == 0xFF
+        self.bits == ALL_BITS
     }
 
     /// Parse a comma-separated selection, e.g. `"mix,dlp,bblp"`. Accepts
@@ -221,6 +244,10 @@ pub struct AnalyzerStack {
     dlp: DlpAnalyzer,
     bblp: BblpAnalyzer,
     pbblp: PbblpAnalyzer,
+    /// Allocated only when the family is enabled — the shadow-cache bank
+    /// is the one analyzer with a non-trivial construction cost (~37k
+    /// cache-line slots), so subset runs must not pay for it.
+    traffic: Option<TrafficAnalyzer>,
     tasks: Option<TaskTraceCollector>,
     /// Fallback lane scratch for sinks that call `on_chunk` directly (the
     /// `EventChunk` flush path hands pre-built lanes to `on_chunk_lanes`
@@ -245,6 +272,7 @@ impl AnalyzerStack {
             dlp: DlpAnalyzer::for_program(prog),
             bblp: BblpAnalyzer::new(n_regs),
             pbblp: PbblpAnalyzer::new(prog),
+            traffic: metrics.contains(Metric::Traffic).then(TrafficAnalyzer::new),
             tasks: None,
             lanes: ChunkLanes::default(),
         }
@@ -273,6 +301,10 @@ impl AnalyzerStack {
         let mem_entropy = self.ment.finalize(ENTROPY_SLOTS);
         let reuse = self.reuse.finalize();
         let spatial = spatial::from_reuse(&reuse);
+        let traffic = match self.traffic {
+            Some(t) => t.finalize(exec.dyn_instrs),
+            None => TrafficMetrics::default(),
+        };
         let mut bblp = self.bblp;
         let mut pbblp = self.pbblp;
         let metrics = AppMetrics {
@@ -286,6 +318,7 @@ impl AnalyzerStack {
             dlp: self.dlp.finalize(),
             bblp: bblp.finalize(),
             pbblp: pbblp.finalize(),
+            traffic,
             exec,
         };
         let regions = self.tasks.map(|t| t.finalize());
@@ -320,16 +353,20 @@ impl Instrument for AnalyzerStack {
         if m.contains(Metric::Pbblp) {
             self.pbblp.on_event(ev);
         }
+        if let Some(t) = self.traffic.as_mut() {
+            t.on_event(ev);
+        }
         if let Some(t) = self.tasks.as_mut() {
             t.on_event(ev);
         }
     }
 
     /// The hot path: the lane-capable analyzers (`mix`, `mem_entropy`,
-    /// `reuse` — and `spatial` through `reuse`) sweep the shared SoA
-    /// [`ChunkLanes`] view, built once per chunk by the `EventChunk` flush;
-    /// the dependency analyzers sweep the event slice with their tuned
-    /// `on_chunk`s. All dispatch here is static.
+    /// `reuse` — and `spatial` through `reuse` — plus the `traffic`
+    /// subsystem) sweep the shared SoA [`ChunkLanes`] view, built once per
+    /// chunk by the `EventChunk` flush; the dependency analyzers sweep the
+    /// event slice with their tuned `on_chunk`s. All dispatch here is
+    /// static.
     fn on_chunk_lanes(&mut self, events: &[TraceEvent], lanes: &ChunkLanes) {
         let m = self.metrics;
         if m.contains(Metric::Mix) {
@@ -356,6 +393,9 @@ impl Instrument for AnalyzerStack {
         if m.contains(Metric::Pbblp) {
             self.pbblp.on_chunk(events);
         }
+        if let Some(t) = self.traffic.as_mut() {
+            t.on_chunk_lanes(events, lanes);
+        }
         if let Some(t) = self.tasks.as_mut() {
             t.on_chunk(events);
         }
@@ -364,17 +404,36 @@ impl Instrument for AnalyzerStack {
     /// The stack consumes lanes whenever a lane-capable family is enabled;
     /// `EventChunk::flush_into` skips the lane build otherwise.
     fn wants_lanes(&self) -> bool {
+        !self.lane_needs().is_empty()
+    }
+
+    /// Per-lane needs-mask derived from the enabled families, so
+    /// `ChunkLanes::rebuild_masked` skips unread lanes on subset runs:
+    /// tags only for `mix`, addrs for `mem_entropy`/`reuse`/`traffic`,
+    /// sizes + store bitset only for `traffic` (its consumer).
+    fn lane_needs(&self) -> LaneMask {
         let m = self.metrics;
-        m.contains(Metric::Mix) || m.contains(Metric::MemEntropy) || m.contains(Metric::Reuse)
+        let mut needs = LaneMask::NONE;
+        if m.contains(Metric::Mix) {
+            needs |= LaneMask::TAGS;
+        }
+        if m.contains(Metric::MemEntropy) || m.contains(Metric::Reuse) {
+            needs |= LaneMask::ADDRS;
+        }
+        if m.contains(Metric::Traffic) {
+            needs |= LaneMask::ADDRS | LaneMask::SIZES | LaneMask::STORES;
+        }
+        needs
     }
 
     /// Chunk delivery without caller-built lanes (ad-hoc sinks, benches):
     /// build the lanes into the stack's own scratch and take the same lane
     /// path, so behavior is identical to the pipeline flush.
     fn on_chunk(&mut self, events: &[TraceEvent]) {
-        if self.wants_lanes() {
+        let needs = self.lane_needs();
+        if !needs.is_empty() {
             let mut lanes = std::mem::take(&mut self.lanes);
-            lanes.rebuild(events);
+            lanes.rebuild_masked(events, needs);
             self.on_chunk_lanes(events, &lanes);
             self.lanes = lanes;
         } else {
@@ -483,6 +542,7 @@ impl AppMetrics {
         j.set("dlp", self.dlp.to_json());
         j.set("bblp", self.bblp.to_json());
         j.set("pbblp", self.pbblp.to_json());
+        j.set("traffic", self.traffic.to_json());
         j.set("dyn_instrs", self.exec.dyn_instrs);
         let mut exec = Json::obj();
         exec.set("events", self.exec.events());
@@ -524,6 +584,14 @@ mod tests {
         assert!(m.pbblp.pbblp > 32.0, "map loop should be data-parallel");
         assert!(m.dlp.dlp > 1.0);
         assert!(m.ilp.inf >= 1.0);
+        // the traffic family rides the same single pass
+        assert_eq!(m.traffic.accesses, m.exec.mem_reads + m.exec.mem_writes);
+        assert_eq!(m.traffic.reads, m.exec.mem_reads);
+        assert_eq!(m.traffic.writes, m.exec.mem_writes);
+        assert_eq!(m.traffic.read_bytes, 64 * 8);
+        assert_eq!(m.traffic.write_bytes, 64 * 8);
+        assert!(m.traffic.bytes_per_instr() > 0.0);
+        assert!(m.traffic.mrc_miss_ratio.len() >= 6);
     }
 
     #[test]
@@ -603,6 +671,23 @@ mod tests {
         assert_eq!(m.reuse.accesses, 0);
         assert_eq!(m.bblp.values.len(), 4);
         assert_eq!(m.branch.dyn_branches(), 0);
+        assert_eq!(m.traffic.accesses, 0);
+        assert!(m.traffic.mrc_miss_ratio.iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn traffic_family_selectable_alone() {
+        let p = tiny_program();
+        let sel = MetricSet::from_names("traffic").unwrap();
+        assert_eq!(sel.names(), vec!["traffic"]);
+        let m = profile_select(&p, sel).unwrap();
+        assert_eq!(m.traffic.accesses, 128);
+        assert_eq!(m.traffic.read_bytes, 512);
+        assert_eq!(m.traffic.write_bytes, 512);
+        // other lane families stayed off
+        assert_eq!(m.reuse.accesses, 0);
+        assert_eq!(m.mem_entropy.accesses, 0);
+        assert_eq!(m.mix.total(), 0);
     }
 
     #[test]
@@ -612,6 +697,11 @@ mod tests {
         let s = MetricSet::from_names("spatial").unwrap();
         assert!(s.contains(Metric::Reuse));
         assert!(!s.contains(Metric::Mix));
+        let t = MetricSet::from_names("traffic,mix").unwrap();
+        assert!(t.contains(Metric::Traffic) && t.contains(Metric::Mix));
+        assert!(!t.is_all());
+        assert!(!MetricSet::all().without(Metric::Traffic).is_all());
+        assert!(!MetricSet::all().without(Metric::Traffic).contains(Metric::Traffic));
         assert!(MetricSet::from_names("mix,bogus").is_err());
     }
 
@@ -636,6 +726,8 @@ mod tests {
             "dlp",
             "bblp",
             "pbblp",
+            "traffic",
+            "miss_ratio",
             "events_per_sec",
         ] {
             assert!(s.contains(key), "missing {key}");

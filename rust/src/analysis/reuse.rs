@@ -18,7 +18,7 @@
 //! applied uniformly and documented in DESIGN.md.
 
 
-use crate::interp::{ChunkLanes, Instrument, TraceEvent};
+use crate::interp::{ChunkLanes, Instrument, LaneMask, TraceEvent};
 use crate::util::{FastMap, Fenwick, Json};
 
 /// Line-size shifts analyzed: 2^3 .. 2^10 bytes.
@@ -27,17 +27,92 @@ pub const N_LINE_SIZES: usize = LINE_SHIFTS.len();
 /// Log2 distance bins for the AOT spatial artifact.
 pub const N_DIST_BINS: usize = 64;
 
+/// Outcome of one [`StackDistance`] access, from the tracked stack's point
+/// of view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LineDist {
+    /// Same line as the immediately-previous access: distance 0, stack
+    /// order unchanged (the fast path — nothing was updated).
+    Repeat,
+    /// A reuse: exactly this many *distinct* lines were touched since the
+    /// previous access to this line (Mattson stack distance).
+    Reuse(u64),
+    /// First touch (compulsory/cold); carries the line footprint *before*
+    /// this access — the repo's documented cold-miss convention ("you
+    /// would have missed however large the stack was").
+    Cold(u64),
+}
+
+/// The exact Olken/Bennett–Kruskal stack-distance kernel: a Fenwick tree
+/// over access timestamps holds a mark at each line's most recent access;
+/// the distance of a reuse is the mark count strictly between the previous
+/// access and now — O(log n) per access instead of the O(n) naive stack.
+///
+/// Shared by the multi-line-size DTR trackers below and by the
+/// `traffic` subsystem's one-pass miss-ratio curve (an access to a
+/// fully-associative LRU cache of capacity `C` lines hits iff its stack
+/// distance is `< C`), so both fold the trace exactly once.
 #[derive(Debug, Clone)]
-struct Tracker {
-    shift: u8,
+pub struct StackDistance {
     last: FastMap<u64, u64>,
     fen: Fenwick,
     time: u64,
-    /// The line of this tracker's immediately-previous access (fast path:
-    /// an immediate repeat has distance 0 and moves nothing in the stack,
-    /// so it needs neither the map nor the Fenwick — §Perf optimization;
-    /// coarse-line trackers see long same-line runs on sequential code).
+    /// The immediately-previous line (fast path: an immediate repeat has
+    /// distance 0 and moves nothing in the stack, so it needs neither the
+    /// map nor the Fenwick — §Perf optimization; coarse-line trackers see
+    /// long same-line runs on sequential code).
     last_line: u64,
+}
+
+impl Default for StackDistance {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StackDistance {
+    pub fn new() -> StackDistance {
+        StackDistance {
+            last: FastMap::default(),
+            fen: Fenwick::new(),
+            time: 0,
+            last_line: u64::MAX,
+        }
+    }
+
+    /// Record one access to `line` (an address already shifted to line
+    /// granularity) and return its exact stack distance class.
+    #[inline]
+    pub fn access_line(&mut self, line: u64) -> LineDist {
+        if line == self.last_line {
+            return LineDist::Repeat;
+        }
+        self.last_line = line;
+        let t = self.time;
+        let out = match self.last.insert(line, t) {
+            Some(prev) => {
+                // distinct lines strictly between prev and t
+                let d = self.fen.range_sum(prev as usize + 1, t as usize);
+                self.fen.add(prev as usize, -1);
+                LineDist::Reuse(d)
+            }
+            None => LineDist::Cold(self.last.len() as u64 - 1),
+        };
+        self.fen.add(t as usize, 1);
+        self.time += 1;
+        out
+    }
+
+    /// Distinct lines seen so far.
+    pub fn footprint(&self) -> u64 {
+        self.last.len() as u64
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Tracker {
+    shift: u8,
+    sd: StackDistance,
     hist: [u64; N_DIST_BINS],
     sum_dist: f64,
     count: u64,
@@ -48,10 +123,7 @@ impl Tracker {
     fn new(shift: u8) -> Tracker {
         Tracker {
             shift,
-            last: FastMap::default(),
-            fen: Fenwick::new(),
-            time: 0,
-            last_line: u64::MAX,
+            sd: StackDistance::new(),
             hist: [0; N_DIST_BINS],
             sum_dist: 0.0,
             count: 0,
@@ -62,28 +134,19 @@ impl Tracker {
     #[inline]
     fn access(&mut self, addr: u64) {
         let line = addr >> self.shift;
-        if line == self.last_line {
-            // immediate repeat: distance 0, stack order unchanged — exact
-            self.hist[0] += 1;
-            self.count += 1;
-            return;
-        }
-        self.last_line = line;
-        let t = self.time;
-        let dist = match self.last.insert(line, t) {
-            Some(prev) => {
-                // distinct lines strictly between prev and t
-                let d = self.fen.range_sum(prev as usize + 1, t as usize);
-                self.fen.add(prev as usize, -1);
-                d
+        let dist = match self.sd.access_line(line) {
+            LineDist::Repeat => {
+                // immediate repeat: distance 0, stack order unchanged — exact
+                self.hist[0] += 1;
+                self.count += 1;
+                return;
             }
-            None => {
+            LineDist::Reuse(d) => d,
+            LineDist::Cold(footprint) => {
                 self.cold += 1;
-                self.last.len() as u64 - 1 // footprint before this line
+                footprint // footprint before this line
             }
         };
-        self.fen.add(t as usize, 1);
-        self.time += 1;
         self.sum_dist += dist as f64;
         self.count += 1;
         self.hist[dist_bin(dist)] += 1;
@@ -177,7 +240,7 @@ impl ReuseAnalyzer {
             avg_dtr: self.trackers.iter().map(|t| t.mean()).collect(),
             hist: self.trackers.iter().map(|t| t.hist).collect(),
             cold: self.trackers.iter().map(|t| t.cold).collect(),
-            footprint: self.trackers.iter().map(|t| t.last.len() as u64).collect(),
+            footprint: self.trackers.iter().map(|t| t.sd.footprint()).collect(),
             accesses: self.trackers.first().map(|t| t.count).unwrap_or(0),
         }
     }
@@ -213,6 +276,10 @@ impl Instrument for ReuseAnalyzer {
 
     fn wants_lanes(&self) -> bool {
         true
+    }
+
+    fn lane_needs(&self) -> LaneMask {
+        LaneMask::ADDRS
     }
 }
 
@@ -274,6 +341,22 @@ mod tests {
             r.record(a);
         }
         r.finalize()
+    }
+
+    #[test]
+    fn stack_distance_kernel_classes() {
+        // a b c a : the 2nd 'a' reuses at distance 2 (b, c in between)
+        let mut sd = StackDistance::new();
+        assert_eq!(sd.access_line(10), LineDist::Cold(0));
+        assert_eq!(sd.access_line(10), LineDist::Repeat);
+        assert_eq!(sd.access_line(11), LineDist::Cold(1));
+        assert_eq!(sd.access_line(12), LineDist::Cold(2));
+        assert_eq!(sd.access_line(10), LineDist::Reuse(2));
+        assert_eq!(sd.footprint(), 3);
+        // a repeat after a reuse still short-circuits
+        assert_eq!(sd.access_line(10), LineDist::Repeat);
+        // LRU order after the reuse: [11, 12, 10] — touching 11 skips 12, 10
+        assert_eq!(sd.access_line(11), LineDist::Reuse(2));
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! ```text
 //! pisa-nmc pipeline [--scale F] [--seed N] [--threads N] [--no-pjrt] [--out FILE]
 //! pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--json]
-//! pisa-nmc figure {3a|3b|3c|4|5|6} [pipeline flags]
+//! pisa-nmc figure {3a|3b|3c|4|5|6|mrc} [pipeline flags]
 //! pisa-nmc table {1|2} [--scale F]
 //! pisa-nmc validate [--n N]
 //! pisa-nmc ir --kernel NAME [--n N]
@@ -112,8 +112,8 @@ USAGE:
   pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--metrics LIST]
                    [--pipeline MODE] [--json]
         profile a single kernel and print its metrics
-  pisa-nmc figure {3a|3b|3c|4|5|6} [pipeline flags]
-        regenerate one paper figure
+  pisa-nmc figure {3a|3b|3c|4|5|6|mrc} [pipeline flags]
+        regenerate one paper figure (mrc: the miss-ratio-curve extension)
   pisa-nmc table {1|2} [--scale F]
         print a paper table
   pisa-nmc validate [--n N]
@@ -123,9 +123,11 @@ USAGE:
   pisa-nmc help
 
 --metrics LIST selects analyzer families (comma-separated:
-mix,branch,mem_entropy,reuse,ilp,dlp,bblp,pbblp — or `all`, the default);
-deselected families report empty results (ilp stays on when the machine
-simulations run: the host model needs it).
+mix,branch,mem_entropy,reuse,ilp,dlp,bblp,pbblp,traffic — or `all`, the
+default); deselected families report empty results and grey out their
+figure series (ilp stays on when the machine simulations run: the host
+model needs it). `traffic` is the streaming memory-traffic subsystem:
+one-pass miss-ratio curves (64B lines), shadow caches and bytes/instr.
 
 --pipeline MODE selects event delivery: `inline` (default — analyzers fold
 on the interpreter thread) or `offload` (analyzers fold on a dedicated

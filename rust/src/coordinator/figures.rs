@@ -2,6 +2,11 @@
 //! figure's data series, routing the numeric analytics through the PJRT
 //! artifacts when available (the system path) with the native analyzers as
 //! fallback and cross-check.
+//!
+//! Every figure renderer takes the run's [`MetricSet`]: series whose
+//! analyzer family was deselected via `--metrics` are greyed out (marked
+//! `deselected` in the JSON, "–" or an omission note in the text) instead
+//! of silently rendering all-zero data as if it were measured.
 
 use anyhow::Result;
 
@@ -9,8 +14,10 @@ use super::pca::{pca, Pca};
 use super::pipeline::AppResult;
 use crate::analysis::reuse::{bin_values, N_DIST_BINS, N_LINE_SIZES};
 use crate::analysis::spatial::score_label;
+use crate::analysis::{Metric, MetricSet};
 use crate::report::{bar_chart, scatter, Table};
 use crate::runtime::Runtime;
+use crate::traffic::capacity_label;
 use crate::util::Json;
 use crate::workloads::registry;
 
@@ -158,8 +165,38 @@ fn app_names(apps: &[AppResult]) -> Vec<String> {
     apps.iter().map(|a| a.name.clone()).collect()
 }
 
+/// Grey-out stub for a figure whose analyzer families were all deselected
+/// via `--metrics`: an omission note instead of all-zero series posing as
+/// measurements, and a `deselected` marker in the JSON naming every
+/// missing family.
+fn deselected_figure(figure: &str, metric_desc: &str, families: &[Metric]) -> (String, Json) {
+    let names: Vec<&str> = families.iter().map(|m| m.name()).collect();
+    let mut out = Json::obj();
+    out.set("figure", figure);
+    out.set("metric", metric_desc);
+    out.set("deselected", true);
+    out.set(
+        "families",
+        names.iter().map(|&n| Json::Str(n.to_string())).collect::<Vec<Json>>(),
+    );
+    (
+        format!(
+            "Fig {figure} — {metric_desc}\n  [series omitted: family '{}' deselected via --metrics]\n",
+            names.join("', '")
+        ),
+        out,
+    )
+}
+
 /// Fig 3a: memory entropy per app × granularity.
-pub fn fig3a(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
+pub fn fig3a(apps: &[AppResult], an: &SuiteAnalytics, metrics: MetricSet) -> (String, Json) {
+    if !metrics.contains(Metric::MemEntropy) {
+        return deselected_figure(
+            "3a",
+            "memory entropy (bits) by granularity shift",
+            &[Metric::MemEntropy],
+        );
+    }
     let mut t = Table::new(&["app", "g=1B", "g=4B", "g=16B", "g=64B", "g=256B", "g=1KB"]);
     let picks = [0usize, 2, 4, 6, 8, 10];
     let mut j = Json::obj();
@@ -181,7 +218,14 @@ pub fn fig3a(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
 }
 
 /// Fig 3b: spatial locality per app × line doubling.
-pub fn fig3b(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
+pub fn fig3b(apps: &[AppResult], an: &SuiteAnalytics, metrics: MetricSet) -> (String, Json) {
+    if !metrics.contains(Metric::Reuse) {
+        return deselected_figure(
+            "3b",
+            "spatial locality score per line-size doubling",
+            &[Metric::Reuse],
+        );
+    }
     let labels: Vec<String> = (0..N_LINE_SIZES - 1).map(score_label).collect();
     let mut headers = vec!["app".to_string()];
     headers.extend(labels.clone());
@@ -206,29 +250,72 @@ pub fn fig3b(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
 }
 
 /// Fig 3c: parallelism characterization (DLP, BBLP_1..4, PBBLP).
-pub fn fig3c(apps: &[AppResult]) -> (String, Json) {
+/// Spans three families; deselected ones are greyed out per column.
+pub fn fig3c(apps: &[AppResult], metrics: MetricSet) -> (String, Json) {
+    let (dlp_on, bblp_on, pbblp_on) = (
+        metrics.contains(Metric::Dlp),
+        metrics.contains(Metric::Bblp),
+        metrics.contains(Metric::Pbblp),
+    );
+    if !dlp_on && !bblp_on && !pbblp_on {
+        return deselected_figure(
+            "3c",
+            "parallelism characterization",
+            &[Metric::Dlp, Metric::Bblp, Metric::Pbblp],
+        );
+    }
+    let grey = "–".to_string();
     let mut t = Table::new(&["app", "DLP", "BBLP_1", "BBLP_2", "BBLP_3", "BBLP_4", "PBBLP"]);
     let mut j = Json::obj();
     for a in apps {
         let b = &a.metrics.bblp.values;
+        let bb = |i: usize| {
+            if bblp_on {
+                format!("{:.2}", b[i])
+            } else {
+                grey.clone()
+            }
+        };
         t.row(vec![
             a.name.clone(),
-            format!("{:.2}", a.metrics.dlp.dlp),
-            format!("{:.2}", b[0]),
-            format!("{:.2}", b[1]),
-            format!("{:.2}", b[2]),
-            format!("{:.2}", b[3]),
-            format!("{:.1}", a.metrics.pbblp.pbblp),
+            if dlp_on { format!("{:.2}", a.metrics.dlp.dlp) } else { grey.clone() },
+            bb(0),
+            bb(1),
+            bb(2),
+            bb(3),
+            if pbblp_on {
+                format!("{:.1}", a.metrics.pbblp.pbblp)
+            } else {
+                grey.clone()
+            },
         ]);
         let mut o = Json::obj();
-        o.set("dlp", a.metrics.dlp.dlp);
-        o.set("bblp", b.clone());
-        o.set("pbblp", a.metrics.pbblp.pbblp);
+        if dlp_on {
+            o.set("dlp", a.metrics.dlp.dlp);
+        }
+        if bblp_on {
+            o.set("bblp", b.clone());
+        }
+        if pbblp_on {
+            o.set("pbblp", a.metrics.pbblp.pbblp);
+        }
         j.set(&a.name, o);
     }
     let mut out = Json::obj();
     out.set("figure", "3c");
     out.set("metric", "parallelism characterization");
+    let deselected: Vec<Json> = [
+        (dlp_on, Metric::Dlp),
+        (bblp_on, Metric::Bblp),
+        (pbblp_on, Metric::Pbblp),
+    ]
+    .into_iter()
+    .filter(|&(on, _)| !on)
+    .map(|(_, m)| Json::Str(m.name().to_string()))
+    .collect();
+    if !deselected.is_empty() {
+        out.set("deselected_families", deselected);
+    }
     out.set("series", j);
     (format!("Fig 3c — parallelism\n{}", t.render()), out)
 }
@@ -252,7 +339,14 @@ pub fn fig4(apps: &[AppResult]) -> (String, Json) {
 }
 
 /// Fig 5: the entropy-difference metric.
-pub fn fig5(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
+pub fn fig5(apps: &[AppResult], an: &SuiteAnalytics, metrics: MetricSet) -> (String, Json) {
+    if !metrics.contains(Metric::MemEntropy) {
+        return deselected_figure(
+            "5",
+            "entropy_diff_mem (mean entropy drop per granularity doubling)",
+            &[Metric::MemEntropy],
+        );
+    }
     let items: Vec<(String, f64)> = app_names(apps)
         .into_iter()
         .zip(an.entropy_diff.iter().copied())
@@ -274,8 +368,21 @@ pub fn fig5(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
     (chart, out)
 }
 
-/// Fig 6: the PCA biplot (scores + loadings + quadrants).
-pub fn fig6(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
+/// Fig 6: the PCA biplot (scores + loadings + quadrants). The four input
+/// features span four families; any deselected one is flagged (its feature
+/// column enters the PCA as zeros).
+pub fn fig6(apps: &[AppResult], an: &SuiteAnalytics, metrics: MetricSet) -> (String, Json) {
+    let feature_families = [
+        (Metric::Bblp, "BBLP_1"),
+        (Metric::Pbblp, "PBBLP"),
+        (Metric::MemEntropy, "entropy_diff_mem"),
+        (Metric::Reuse, "spat_8B_16B"),
+    ];
+    let missing: Vec<&str> = feature_families
+        .iter()
+        .filter(|(m, _)| !metrics.contains(*m))
+        .map(|(_, n)| *n)
+        .collect();
     let pts: Vec<(String, f64, f64)> = app_names(apps)
         .into_iter()
         .enumerate()
@@ -328,18 +435,81 @@ pub fn fig6(apps: &[AppResult], an: &SuiteAnalytics) -> (String, Json) {
     }
     out.set("loadings", loads);
     out.set("explained_variance_ratio", an.pca.explained_variance_ratio.clone());
+    if !missing.is_empty() {
+        out.set(
+            "deselected_features",
+            missing.iter().map(|&n| Json::Str(n.to_string())).collect::<Vec<Json>>(),
+        );
+    }
 
+    let grey_note = if missing.is_empty() {
+        String::new()
+    } else {
+        format!(
+            "NOTE: feature(s) {} zeroed — their families are deselected via --metrics\n",
+            missing.join(", ")
+        )
+    };
     let text = format!(
         "Fig 6 — PCA of [BBLP_1, PBBLP, entropy_diff_mem, spat_8B_16B] [{}]\n\
-         explained variance: PC1 {:.1}%  PC2 {:.1}%\n\n{}\n{}\n{}",
+         explained variance: PC1 {:.1}%  PC2 {:.1}%\n{}\n{}\n{}\n{}",
         an.engine.name(),
         an.pca.explained_variance_ratio[0] * 100.0,
         an.pca.explained_variance_ratio[1] * 100.0,
+        grey_note,
         plot,
         lt.render(),
         qt.render()
     );
     (text, out)
+}
+
+/// The MRC figure (extension): miss-ratio curve per app across the
+/// geometric capacity family, plus the knee and byte-traffic rates —
+/// the `traffic` subsystem's report surface.
+pub fn fig_mrc(apps: &[AppResult], metrics: MetricSet) -> (String, Json) {
+    if !metrics.contains(Metric::Traffic) {
+        return deselected_figure(
+            "mrc",
+            "miss-ratio curve + byte traffic (64B lines)",
+            &[Metric::Traffic],
+        );
+    }
+    let caps = apps
+        .first()
+        .map(|a| a.metrics.traffic.mrc_capacities.clone())
+        .unwrap_or_default();
+    let mut headers = vec!["app".to_string()];
+    headers.extend(caps.iter().map(|&c| capacity_label(c)));
+    headers.push("knee".into());
+    headers.push("B/instr".into());
+    headers.push("DRAM B/instr".into());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    let mut j = Json::obj();
+    for a in apps {
+        let tr = &a.metrics.traffic;
+        let mut row = vec![a.name.clone()];
+        row.extend(tr.mrc_miss_ratio.iter().map(|r| format!("{r:.3}")));
+        row.push(match tr.mrc_knee_bytes {
+            Some(b) => capacity_label(b),
+            None => "–".into(),
+        });
+        row.push(format!("{:.2}", tr.bytes_per_instr()));
+        row.push(format!("{:.2}", tr.dram_bytes_per_instr()));
+        t.row(row);
+        j.set(&a.name, tr.to_json());
+    }
+    let caps_f: Vec<f64> = caps.iter().map(|&c| c as f64).collect();
+    let mut out = Json::obj();
+    out.set("figure", "mrc");
+    out.set("metric", "miss-ratio curve + byte traffic (64B lines)");
+    out.set("capacities_bytes", caps_f);
+    out.set("series", j);
+    (
+        format!("Fig MRC — miss-ratio curves and byte traffic (64B lines)\n{}", t.render()),
+        out,
+    )
 }
 
 /// Table 1: host + NMC system characteristics.
@@ -400,25 +570,61 @@ mod tests {
     #[test]
     fn native_analytics_and_all_figures_render() {
         let apps = tiny_apps();
+        let all = MetricSet::all();
         let an = analyze_suite(&apps, None).unwrap();
         assert_eq!(an.engine, Engine::Native);
         assert_eq!(an.entropies.len(), 12);
         assert_eq!(an.spatial[0].len(), 7);
 
-        let (s3a, j3a) = fig3a(&apps, &an);
+        let (s3a, j3a) = fig3a(&apps, &an, all);
         assert!(s3a.contains("gramschmidt"));
         assert!(j3a.get("series").is_some());
-        let (s3b, _) = fig3b(&apps, &an);
+        let (s3b, _) = fig3b(&apps, &an, all);
         assert!(s3b.contains("spat_8B_16B"));
-        let (s3c, _) = fig3c(&apps);
+        let (s3c, _) = fig3c(&apps, all);
         assert!(s3c.contains("PBBLP"));
         let (s4, _) = fig4(&apps);
         assert!(s4.contains("EDP"));
-        let (s5, _) = fig5(&apps, &an);
+        let (s5, _) = fig5(&apps, &an, all);
         assert!(s5.contains("entropy_diff"));
-        let (s6, _) = fig6(&apps, &an);
+        let (s6, j6) = fig6(&apps, &an, all);
         assert!(s6.contains("quadrant"));
+        assert!(!s6.contains("zeroed"));
+        assert!(j6.get("deselected_features").is_none());
+        let (smrc, jmrc) = fig_mrc(&apps, all);
+        assert!(smrc.contains("miss-ratio"));
+        assert!(smrc.contains("4K"));
+        assert!(smrc.contains("B/instr"));
+        assert!(jmrc.get("series").is_some());
         assert!(table1().contains("Power9"));
         assert!(table2(1.0).contains("8000"));
+    }
+
+    #[test]
+    fn deselected_families_grey_out_figures() {
+        let apps = tiny_apps();
+        let an = analyze_suite(&apps, None).unwrap();
+        // mix+dlp only: entropy/reuse/traffic figures must announce the
+        // omission instead of rendering zeros as data
+        let sel = MetricSet::from_names("mix,dlp").unwrap();
+        let (s3a, j3a) = fig3a(&apps, &an, sel);
+        assert!(s3a.contains("deselected"));
+        assert_eq!(j3a.get("deselected"), Some(&crate::util::Json::Bool(true)));
+        assert!(j3a.get("series").is_none());
+        let (s3b, _) = fig3b(&apps, &an, sel);
+        assert!(s3b.contains("deselected"));
+        let (smrc, jmrc) = fig_mrc(&apps, sel);
+        assert!(smrc.contains("deselected"));
+        assert!(jmrc.get("series").is_none());
+        let (s5, _) = fig5(&apps, &an, sel);
+        assert!(s5.contains("deselected"));
+        // 3c greys only the missing columns: DLP is live, BBLP/PBBLP greyed
+        let (s3c, j3c) = fig3c(&apps, sel);
+        assert!(s3c.contains('–'));
+        assert!(j3c.get("deselected_families").is_some());
+        // 6 renders, flagging the zeroed features
+        let (s6, j6) = fig6(&apps, &an, sel);
+        assert!(s6.contains("zeroed"));
+        assert!(j6.get("deselected_features").is_some());
     }
 }

@@ -108,15 +108,16 @@ impl PipelineReport {
         }
         j.set("apps", apps);
         for (name, (_, fig)) in [
-            ("fig3a", figures::fig3a(&self.apps, &self.analytics)),
-            ("fig3b", figures::fig3b(&self.apps, &self.analytics)),
-            ("fig5", figures::fig5(&self.apps, &self.analytics)),
-            ("fig6", figures::fig6(&self.apps, &self.analytics)),
+            ("fig3a", figures::fig3a(&self.apps, &self.analytics, self.metrics)),
+            ("fig3b", figures::fig3b(&self.apps, &self.analytics, self.metrics)),
+            ("fig5", figures::fig5(&self.apps, &self.analytics, self.metrics)),
+            ("fig6", figures::fig6(&self.apps, &self.analytics, self.metrics)),
         ] {
             j.set(name, fig);
         }
-        j.set("fig3c", figures::fig3c(&self.apps).1);
+        j.set("fig3c", figures::fig3c(&self.apps, self.metrics).1);
         j.set("fig4", figures::fig4(&self.apps).1);
+        j.set("fig_mrc", figures::fig_mrc(&self.apps, self.metrics).1);
         j
     }
 
@@ -128,12 +129,13 @@ impl PipelineReport {
         s.push_str(&figures::table2(self.scale));
         s.push('\n');
         for text in [
-            figures::fig3a(&self.apps, &self.analytics).0,
-            figures::fig3b(&self.apps, &self.analytics).0,
-            figures::fig3c(&self.apps).0,
+            figures::fig3a(&self.apps, &self.analytics, self.metrics).0,
+            figures::fig3b(&self.apps, &self.analytics, self.metrics).0,
+            figures::fig3c(&self.apps, self.metrics).0,
             figures::fig4(&self.apps).0,
-            figures::fig5(&self.apps, &self.analytics).0,
-            figures::fig6(&self.apps, &self.analytics).0,
+            figures::fig5(&self.apps, &self.analytics, self.metrics).0,
+            figures::fig6(&self.apps, &self.analytics, self.metrics).0,
+            figures::fig_mrc(&self.apps, self.metrics).0,
         ] {
             s.push_str(&text);
             s.push('\n');

@@ -26,9 +26,13 @@
 //! enum. [`ChunkLanes`] is that structure-of-arrays view: built **once per
 //! chunk** by [`EventChunk::flush_into`] (and only when the sink reports
 //! [`Instrument::wants_lanes`]), then shared by every lane-capable analyzer
-//! through [`Instrument::on_chunk_lanes`]. `reuse`, `mem_entropy` and `mix`
-//! (and `spatial`, which derives from `reuse`) sweep these dense lanes and
-//! never match `TraceEvent` per event on the hot path.
+//! through [`Instrument::on_chunk_lanes`]. `reuse`, `mem_entropy`, `mix`
+//! and `traffic` (and `spatial`, which derives from `reuse`) sweep these
+//! dense lanes and never match `TraceEvent` per event on the hot path. The
+//! flush builds only the lanes the sink's [`Instrument::lane_needs`]
+//! [`LaneMask`] actually reads, so subset runs (`--metrics mix` →
+//! tags-only; `reuse`/`mem_entropy` → addrs-only; sizes + store bitset
+//! only when `traffic` is enabled) skip unread lanes entirely.
 //!
 //! `on_event` remains as the un-batched reference path: the default
 //! `on_chunk` simply loops over it, and the default `on_chunk_lanes`
@@ -115,6 +119,55 @@ pub fn adaptive_chunk_capacity(prog: &Program) -> usize {
         .clamp(MIN_CHUNK_EVENTS, CHUNK_EVENTS)
 }
 
+/// Which [`ChunkLanes`] lanes a sink reads — the per-lane needs-mask.
+///
+/// Derived once per flush from [`Instrument::lane_needs`]:
+/// [`EventChunk::flush_into`] builds only the union of the requested lanes,
+/// so subset runs never pay for lanes nobody sweeps (tags-only for
+/// `--metrics mix`; addrs-only for `reuse`/`mem_entropy`; the sizes lane
+/// and store bitset only when the `traffic` family is enabled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LaneMask(u8);
+
+impl LaneMask {
+    pub const NONE: LaneMask = LaneMask(0);
+    /// The one-byte op-tag lane (`mix`).
+    pub const TAGS: LaneMask = LaneMask(1 << 0);
+    /// Packed memory-access addresses (`reuse`, `mem_entropy`, `traffic`).
+    pub const ADDRS: LaneMask = LaneMask(1 << 1);
+    /// Access sizes in bytes (`traffic` byte accounting).
+    pub const SIZES: LaneMask = LaneMask(1 << 2);
+    /// The store bitset (`traffic` write/writeback accounting).
+    pub const STORES: LaneMask = LaneMask(1 << 3);
+    pub const ALL: LaneMask = LaneMask(0b1111);
+
+    #[inline]
+    pub fn contains(self, other: LaneMask) -> bool {
+        self.0 & other.0 == other.0
+    }
+
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+}
+
+impl std::ops::BitOr for LaneMask {
+    type Output = LaneMask;
+
+    #[inline]
+    fn bitor(self, rhs: LaneMask) -> LaneMask {
+        LaneMask(self.0 | rhs.0)
+    }
+}
+
+impl std::ops::BitOrAssign for LaneMask {
+    #[inline]
+    fn bitor_assign(&mut self, rhs: LaneMask) {
+        self.0 |= rhs.0;
+    }
+}
+
 /// Op-tag lane sentinel: a dynamic basic-block entry.
 pub const TAG_BLOCK: u8 = 0xFD;
 /// Op-tag lane sentinel: a conditional branch that was taken.
@@ -146,35 +199,73 @@ pub struct ChunkLanes {
     addrs: Vec<u64>,
     sizes: Vec<u8>,
     store_bits: Vec<u64>,
+    /// Memory accesses in the chunk — counted even when no memory lane is
+    /// built, so [`Self::n_mem`] stays meaningful under any needs-mask.
+    n_mem: usize,
+    /// Which lanes the last rebuild actually built. Reads of unbuilt lanes
+    /// are caught by debug asserts in debug builds; in release builds the
+    /// accessors return the unbuilt lane's empty contents, so sinks must
+    /// only read lanes covered by their own `lane_needs()` mask.
+    built: LaneMask,
 }
 
 impl ChunkLanes {
     /// Rebuild every lane from `events` (previous contents discarded,
     /// allocations reused).
     pub fn rebuild(&mut self, events: &[TraceEvent]) {
+        self.rebuild_masked(events, LaneMask::ALL);
+    }
+
+    /// Rebuild only the lanes in `needs` (the per-family needs-mask —
+    /// see [`Instrument::lane_needs`]); unrequested lanes are cleared so a
+    /// recycled chunk can never leak a stale lane to the wrong sink.
+    pub fn rebuild_masked(&mut self, events: &[TraceEvent], needs: LaneMask) {
         self.tags.clear();
         self.addrs.clear();
         self.sizes.clear();
         self.store_bits.clear();
-        self.tags.reserve(events.len());
+        self.n_mem = 0;
+        self.built = needs;
+        let want_tags = needs.contains(LaneMask::TAGS);
+        let want_addrs = needs.contains(LaneMask::ADDRS);
+        let want_sizes = needs.contains(LaneMask::SIZES);
+        let want_stores = needs.contains(LaneMask::STORES);
+        if want_tags {
+            self.tags.reserve(events.len());
+        }
         for ev in events {
             match ev {
-                TraceEvent::BlockEnter { .. } => self.tags.push(TAG_BLOCK),
+                TraceEvent::BlockEnter { .. } => {
+                    if want_tags {
+                        self.tags.push(TAG_BLOCK);
+                    }
+                }
                 TraceEvent::Branch { taken, .. } => {
-                    self.tags.push(if *taken { TAG_BR_TAKEN } else { TAG_BR_NOT })
+                    if want_tags {
+                        self.tags.push(if *taken { TAG_BR_TAKEN } else { TAG_BR_NOT });
+                    }
                 }
                 TraceEvent::Instr(i) => {
-                    self.tags.push(i.op.index() as u8);
+                    if want_tags {
+                        self.tags.push(i.op.index() as u8);
+                    }
                     if let Some(m) = i.mem {
-                        let slot = self.addrs.len();
-                        if slot % 64 == 0 {
-                            self.store_bits.push(0);
+                        let slot = self.n_mem;
+                        self.n_mem += 1;
+                        if want_stores {
+                            if slot % 64 == 0 {
+                                self.store_bits.push(0);
+                            }
+                            if m.is_store {
+                                self.store_bits[slot / 64] |= 1 << (slot % 64);
+                            }
                         }
-                        if m.is_store {
-                            self.store_bits[slot / 64] |= 1 << (slot % 64);
+                        if want_addrs {
+                            self.addrs.push(m.addr);
                         }
-                        self.addrs.push(m.addr);
-                        self.sizes.push(m.size);
+                        if want_sizes {
+                            self.sizes.push(m.size);
+                        }
                     }
                 }
             }
@@ -199,7 +290,8 @@ impl ChunkLanes {
         &self.sizes
     }
 
-    /// Number of events the lanes describe.
+    /// Number of events the lanes describe (length of the tags lane — only
+    /// meaningful when [`LaneMask::TAGS`] was requested).
     #[inline]
     pub fn len(&self) -> usize {
         self.tags.len()
@@ -210,27 +302,32 @@ impl ChunkLanes {
         self.tags.is_empty()
     }
 
-    /// Number of memory accesses in the chunk.
+    /// Number of memory accesses in the chunk (tracked under any
+    /// needs-mask, even when no memory lane was built).
     #[inline]
     pub fn n_mem(&self) -> usize {
-        self.addrs.len()
+        self.n_mem
     }
 
-    /// Is the `i`-th memory access (index into [`Self::addrs`]) a store?
+    /// Is the `i`-th memory access (index into the packed access order) a
+    /// store? Requires the [`LaneMask::STORES`] lane.
     #[inline]
     pub fn is_store(&self, i: usize) -> bool {
-        debug_assert!(i < self.addrs.len());
+        debug_assert!(self.built.contains(LaneMask::STORES), "STORES lane not built");
+        debug_assert!(i < self.n_mem);
         (self.store_bits[i / 64] >> (i % 64)) & 1 == 1
     }
 
-    /// Total stores in the chunk (popcount of the store bitset).
+    /// Total stores in the chunk (popcount of the store bitset; requires
+    /// the [`LaneMask::STORES`] lane).
     pub fn stores(&self) -> u64 {
+        debug_assert!(self.built.contains(LaneMask::STORES), "STORES lane not built");
         self.store_bits.iter().map(|w| w.count_ones() as u64).sum()
     }
 
-    /// Total loads in the chunk.
+    /// Total loads in the chunk (requires the [`LaneMask::STORES`] lane).
     pub fn loads(&self) -> u64 {
-        self.addrs.len() as u64 - self.stores()
+        self.n_mem as u64 - self.stores()
     }
 }
 
@@ -316,14 +413,17 @@ impl EventChunk {
     /// Hand the buffered events to `sink` in one chunk call and reset the
     /// buffer (allocations retained). When the sink consumes lanes
     /// ([`Instrument::wants_lanes`]), the [`ChunkLanes`] view is built here,
-    /// once, and shared by every lane-capable analyzer behind the sink.
+    /// once — restricted to the lanes the sink's [`Instrument::lane_needs`]
+    /// mask actually reads — and shared by every lane-capable analyzer
+    /// behind the sink.
     #[inline]
     pub fn flush_into(&mut self, sink: &mut dyn Instrument) {
         if self.buf.is_empty() {
             return;
         }
-        if sink.wants_lanes() {
-            self.lanes.rebuild(&self.buf);
+        let needs = sink.lane_needs();
+        if !needs.is_empty() {
+            self.lanes.rebuild_masked(&self.buf, needs);
             sink.on_chunk_lanes(&self.buf, &self.lanes);
         } else {
             sink.on_chunk(&self.buf);
@@ -370,6 +470,23 @@ pub trait Instrument {
     #[inline]
     fn wants_lanes(&self) -> bool {
         false
+    }
+
+    /// Which lanes this sink actually reads — the per-lane needs-mask.
+    /// [`EventChunk::flush_into`] builds only the requested lanes, so
+    /// subset runs skip unread lanes entirely (tags-only for
+    /// `--metrics mix`, addrs-only for `reuse`/`mem_entropy`, sizes +
+    /// store bitset only with `traffic`). The default derives from
+    /// [`Self::wants_lanes`]: every lane for a lane-capable sink, none
+    /// otherwise; implementations overriding this must keep
+    /// `wants_lanes() == !lane_needs().is_empty()`.
+    #[inline]
+    fn lane_needs(&self) -> LaneMask {
+        if self.wants_lanes() {
+            LaneMask::ALL
+        } else {
+            LaneMask::NONE
+        }
     }
 }
 
@@ -424,6 +541,12 @@ impl Instrument for Fanout<'_> {
 
     fn wants_lanes(&self) -> bool {
         self.sinks.iter().any(|s| s.wants_lanes())
+    }
+
+    fn lane_needs(&self) -> LaneMask {
+        self.sinks
+            .iter()
+            .fold(LaneMask::NONE, |acc, s| acc | s.lane_needs())
     }
 }
 
@@ -548,6 +671,91 @@ mod tests {
         assert_eq!(lanes.len(), 1);
         assert_eq!(lanes.n_mem(), 0);
         assert_eq!(lanes.stores(), 0);
+    }
+
+    #[test]
+    fn masked_rebuild_builds_only_requested_lanes() {
+        let events = vec![
+            TraceEvent::BlockEnter { block: 1 },
+            mem_ev(Op::Load, 0x100, 8, false),
+            mem_ev(Op::Store, 0x108, 4, true),
+            TraceEvent::Branch { block: 1, taken: true },
+        ];
+        let mut lanes = ChunkLanes::default();
+
+        // tags-only (the `--metrics mix` shape): no memory lanes built,
+        // but the access count is still tracked
+        lanes.rebuild_masked(&events, LaneMask::TAGS);
+        assert_eq!(lanes.len(), 4);
+        assert_eq!(lanes.addrs(), &[] as &[u64]);
+        assert_eq!(lanes.sizes(), &[] as &[u8]);
+        assert_eq!(lanes.n_mem(), 2);
+
+        // addrs-only (the `reuse`/`mem_entropy` shape), from a recycled
+        // lanes struct: the stale tags lane must be cleared
+        lanes.rebuild_masked(&events, LaneMask::ADDRS);
+        assert_eq!(lanes.len(), 0);
+        assert_eq!(lanes.addrs(), &[0x100, 0x108]);
+        assert_eq!(lanes.sizes(), &[] as &[u8]);
+        assert_eq!(lanes.n_mem(), 2);
+
+        // traffic shape: addrs + sizes + store bitset, no tags
+        lanes.rebuild_masked(&events, LaneMask::ADDRS | LaneMask::SIZES | LaneMask::STORES);
+        assert_eq!(lanes.addrs(), &[0x100, 0x108]);
+        assert_eq!(lanes.sizes(), &[8, 4]);
+        assert!(!lanes.is_store(0));
+        assert!(lanes.is_store(1));
+        assert_eq!((lanes.loads(), lanes.stores()), (1, 1));
+        assert_eq!(lanes.len(), 0);
+
+        // full rebuild restores everything
+        lanes.rebuild(&events);
+        assert_eq!(lanes.len(), 4);
+        assert_eq!(lanes.n_mem(), 2);
+        assert_eq!(lanes.sizes(), &[8, 4]);
+    }
+
+    #[test]
+    fn lane_mask_algebra() {
+        assert!(LaneMask::NONE.is_empty());
+        assert!(!LaneMask::TAGS.is_empty());
+        assert!(LaneMask::ALL.contains(LaneMask::TAGS | LaneMask::STORES));
+        assert!(!LaneMask::TAGS.contains(LaneMask::ADDRS));
+        let mut m = LaneMask::NONE;
+        m |= LaneMask::SIZES;
+        assert!(m.contains(LaneMask::SIZES));
+        assert!(!m.contains(LaneMask::ALL));
+    }
+
+    #[test]
+    fn flush_respects_sink_lane_needs() {
+        /// A sink that wants only the addrs lane and asserts nothing else
+        /// was built.
+        #[derive(Default)]
+        struct AddrOnly {
+            mem_seen: u64,
+        }
+        impl Instrument for AddrOnly {
+            fn on_event(&mut self, _ev: &TraceEvent) {}
+            fn on_chunk_lanes(&mut self, _events: &[TraceEvent], lanes: &ChunkLanes) {
+                assert_eq!(lanes.len(), 0, "tags lane must not be built");
+                assert!(lanes.sizes().is_empty(), "sizes lane must not be built");
+                self.mem_seen += lanes.addrs().len() as u64;
+            }
+            fn wants_lanes(&self) -> bool {
+                true
+            }
+            fn lane_needs(&self) -> LaneMask {
+                LaneMask::ADDRS
+            }
+        }
+        let mut ch = EventChunk::with_capacity(8);
+        ch.push(mem_ev(Op::Load, 0x40, 8, false));
+        ch.push(mem_ev(Op::Store, 0x48, 8, true));
+        ch.push(instr_ev(Op::Add));
+        let mut sink = AddrOnly::default();
+        ch.flush_into(&mut sink);
+        assert_eq!(sink.mem_seen, 2);
     }
 
     #[test]

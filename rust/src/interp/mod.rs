@@ -7,8 +7,8 @@ pub mod offload;
 
 pub use events::{
     adaptive_chunk_capacity, ChunkLanes, Counter, EventChunk, Fanout, Instrument, InstrEvent,
-    MemAccess, NullInstrument, TraceEvent, CHUNK_EVENTS, MIN_CHUNK_EVENTS, TAG_BLOCK, TAG_BR_NOT,
-    TAG_BR_TAKEN,
+    LaneMask, MemAccess, NullInstrument, TraceEvent, CHUNK_EVENTS, MIN_CHUNK_EVENTS, TAG_BLOCK,
+    TAG_BR_NOT, TAG_BR_TAKEN,
 };
 pub use machine::{run_program, ExecStats, Machine, Outcome};
 pub use memory::Memory;

@@ -9,6 +9,9 @@
 //! * [`analysis`] — streaming trace analyzers: instruction mix, branch
 //!   entropy, memory entropy, data-temporal-reuse / spatial locality, ILP,
 //!   DLP, BBLP, PBBLP (the paper's §II metrics).
+//! * [`traffic`] — streaming memory-traffic subsystem: one-pass miss-ratio
+//!   curves, shadow set-associative caches and byte-traffic accounting
+//!   from the chunk lanes (the NMPO-style data-movement signals).
 //! * [`workloads`] — the 12 evaluated Polybench/Rodinia kernels authored on
 //!   the IR builder, each validated against a native oracle.
 //! * [`sim`] — the host (Power9-class) and NMC (HMC + in-order PEs) machine
@@ -30,5 +33,6 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod testkit;
+pub mod traffic;
 pub mod util;
 pub mod workloads;

@@ -121,6 +121,23 @@ fn run(args: Args) -> Result<()> {
                 println!("  PBBLP             {:.1}", r.metrics.pbblp.pbblp);
                 println!("  ILP inf           {:.2}", r.metrics.ilp.inf);
                 println!("  branch entropy    {:.3}", r.metrics.branch.weighted_entropy());
+                if metrics.contains(pisa_nmc::analysis::Metric::Traffic) {
+                    let tr = &r.metrics.traffic;
+                    println!(
+                        "  bytes/instr       {:.3} (read {:.3} / write {:.3})",
+                        tr.bytes_per_instr(),
+                        tr.read_bytes_per_instr(),
+                        tr.write_bytes_per_instr()
+                    );
+                    println!("  DRAM bytes/instr  {:.3}", tr.dram_bytes_per_instr());
+                    println!(
+                        "  MRC knee          {}",
+                        match tr.mrc_knee_bytes {
+                            Some(b) => pisa_nmc::traffic::capacity_label(b),
+                            None => "– (flat curve)".into(),
+                        }
+                    );
+                }
                 println!("  EDP improvement   {:.3}x", r.cmp.edp_improvement());
                 println!("  speedup           {:.3}x", r.cmp.speedup());
                 println!("  NMC suitable      {}", r.cmp.nmc_suitable());
@@ -138,13 +155,14 @@ fn run(args: Args) -> Result<()> {
             let report =
                 coordinator::run_pipeline_select(scale, seed, threads, rt.as_ref(), metrics, mode)?;
             let (text, _json) = match which.as_str() {
-                "3a" => figures::fig3a(&report.apps, &report.analytics),
-                "3b" => figures::fig3b(&report.apps, &report.analytics),
-                "3c" => figures::fig3c(&report.apps),
+                "3a" => figures::fig3a(&report.apps, &report.analytics, report.metrics),
+                "3b" => figures::fig3b(&report.apps, &report.analytics, report.metrics),
+                "3c" => figures::fig3c(&report.apps, report.metrics),
                 "4" => figures::fig4(&report.apps),
-                "5" => figures::fig5(&report.apps, &report.analytics),
-                "6" => figures::fig6(&report.apps, &report.analytics),
-                other => bail!("unknown figure '{other}' (3a|3b|3c|4|5|6)"),
+                "5" => figures::fig5(&report.apps, &report.analytics, report.metrics),
+                "6" => figures::fig6(&report.apps, &report.analytics, report.metrics),
+                "mrc" => figures::fig_mrc(&report.apps, report.metrics),
+                other => bail!("unknown figure '{other}' (3a|3b|3c|4|5|6|mrc)"),
             };
             print!("{text}");
             Ok(())

@@ -144,6 +144,28 @@ fn gen_block(
     }
 }
 
+/// O(n·C) fully-associative LRU oracle over line ids: exact miss count for
+/// a cache of `cap_lines` lines, as an explicit recency stack. The shared
+/// cross-validation reference for the traffic subsystem's one-pass MRC
+/// (`rust/src/traffic/mrc.rs` unit tests and `rust/tests/prop_traffic.rs`
+/// both replay against this one implementation).
+pub fn naive_lru_misses(lines: impl IntoIterator<Item = u64>, cap_lines: usize) -> u64 {
+    let mut stack: Vec<u64> = Vec::new(); // most recent last
+    let mut misses = 0u64;
+    for line in lines {
+        if let Some(pos) = stack.iter().position(|&l| l == line) {
+            stack.remove(pos);
+        } else {
+            misses += 1;
+            if stack.len() == cap_lines {
+                stack.remove(0); // evict LRU
+            }
+        }
+        stack.push(line);
+    }
+    misses
+}
+
 /// Vector of addresses: mixture of sequential runs and random jumps —
 /// shaped like real traces (stresses reuse/entropy analyzers more than
 /// uniform noise).

@@ -1,0 +1,503 @@
+//! Streaming memory-traffic and cache-locality subsystem (the data-movement
+//! signal NMPO-style offload models rank by: bytes moved per instruction
+//! and how fast the miss ratio falls with capacity).
+//!
+//! [`TrafficAnalyzer`] runs as one more [`Instrument`] inside the
+//! `AnalyzerStack` and folds the trace **exactly once**, sweeping the dense
+//! [`ChunkLanes`] SoA view — addresses, sizes *and* the store bitset, the
+//! first production consumer of all four lanes — with no `TraceEvent`
+//! matching on the hot path. Per run it produces:
+//!
+//! * **Miss-ratio curves** ([`mrc`]): exact miss ratios for the geometric
+//!   capacity family [`MRC_CAPACITIES_BYTES`] (4 KiB → 64 MiB, 64 B lines)
+//!   from a single pass, via the same Olken/Fenwick stack-distance kernel
+//!   `reuse` uses (Mattson: an access hits a fully-associative LRU cache of
+//!   `C` lines iff its stack distance is `< C`). **Cold-miss convention**:
+//!   first touches are compulsory misses at *every* capacity — the curve's
+//!   floor; this is the capacity-domain reading of `reuse`'s documented
+//!   "you would have missed however large the stack was" convention.
+//!   The **MRC knee** is the smallest capacity whose miss ratio drops
+//!   below 50% of the curve's compulsory-inclusive ceiling (its value at
+//!   the smallest capacity); a flat curve has no knee.
+//! * **Shadow set-associative caches** ([`shadow`]): L1/L2/LLC-shaped
+//!   write-allocate LRU caches reusing `sim::cache::Cache`, capturing
+//!   associativity and dirty-writeback traffic (proven identical to a
+//!   direct `sim` replay in `rust/tests/prop_traffic.rs`).
+//! * **Byte-traffic accounting**: read/write bytes per instruction from
+//!   the sizes lane + store bitset, and DRAM-side line traffic (LLC-shadow
+//!   fills + writebacks × 64 B).
+//!
+//! Every counter is a pure fold over the memory-access subsequence, so
+//! [`TrafficMetrics`] is bit-identical across the per-event, inline-chunked
+//! and offload pipeline modes (enforced in `rust/tests/prop_chunked.rs`).
+
+pub mod mrc;
+pub mod shadow;
+
+pub use mrc::{MrcBuilder, MRC_CAPACITIES_BYTES, MRC_LINE_BYTES, N_MRC_POINTS};
+pub use shadow::{ShadowBank, ShadowCacheStats, ShadowConfig, SHADOW_CONFIGS};
+
+use crate::interp::{ChunkLanes, Instrument, LaneMask, TraceEvent};
+use crate::util::Json;
+
+/// The streaming analyzer: one MRC accumulator + the shadow-cache bank +
+/// byte counters, all fed from the same pass.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficAnalyzer {
+    mrc: MrcBuilder,
+    shadows: ShadowBank,
+    reads: u64,
+    writes: u64,
+    read_bytes: u64,
+    write_bytes: u64,
+}
+
+impl TrafficAnalyzer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one memory access (the per-event reference path).
+    #[inline]
+    pub fn record(&mut self, addr: u64, size: u8, is_store: bool) {
+        if is_store {
+            self.writes += 1;
+            self.write_bytes += size as u64;
+        } else {
+            self.reads += 1;
+            self.read_bytes += size as u64;
+        }
+        self.mrc.access(addr);
+        self.shadows.access(addr, is_store);
+    }
+
+    /// Finalize into [`TrafficMetrics`]. `dyn_instrs` is the run's dynamic
+    /// instruction count (for the per-instruction rates).
+    pub fn finalize(&self, dyn_instrs: u64) -> TrafficMetrics {
+        let accesses = self.mrc.accesses();
+        let misses = self.mrc.miss_counts();
+        let mrc_miss_ratio: Vec<f64> = misses
+            .iter()
+            .map(|&m| if accesses == 0 { 0.0 } else { m as f64 / accesses as f64 })
+            .collect();
+        // knee: smallest capacity whose miss ratio drops below 50% of the
+        // ceiling (the curve's value at the smallest capacity)
+        let knee = if accesses == 0 {
+            None
+        } else {
+            let threshold = 0.5 * mrc_miss_ratio[0];
+            mrc_miss_ratio
+                .iter()
+                .position(|&r| r < threshold)
+                .map(|i| MRC_CAPACITIES_BYTES[i])
+        };
+        TrafficMetrics {
+            accesses,
+            reads: self.reads,
+            writes: self.writes,
+            read_bytes: self.read_bytes,
+            write_bytes: self.write_bytes,
+            dyn_instrs,
+            cold_misses: self.mrc.cold(),
+            footprint_lines: self.mrc.footprint_lines(),
+            mrc_capacities: MRC_CAPACITIES_BYTES.to_vec(),
+            mrc_misses: misses.to_vec(),
+            mrc_miss_ratio,
+            mrc_knee_bytes: knee,
+            shadow: self.shadows.finalize(),
+        }
+    }
+}
+
+impl Instrument for TrafficAnalyzer {
+    #[inline]
+    fn on_event(&mut self, ev: &TraceEvent) {
+        if let TraceEvent::Instr(i) = ev {
+            if let Some(m) = i.mem {
+                self.record(m.addr, m.size, m.is_store);
+            }
+        }
+    }
+
+    /// Lane path (the hot path): structure-major sweeps over the dense
+    /// lanes — byte tallies from sizes + store bits, then the MRC stack,
+    /// then the shadow bank, each walking the packed slice while its own
+    /// state stays hot. Per-structure access order matches the per-event
+    /// path exactly, so the fold is bit-identical.
+    fn on_chunk_lanes(&mut self, _events: &[TraceEvent], lanes: &ChunkLanes) {
+        let addrs = lanes.addrs();
+        if addrs.is_empty() {
+            return;
+        }
+        let sizes = lanes.sizes();
+        let (mut reads, mut writes) = (0u64, 0u64);
+        let (mut rb, mut wb) = (0u64, 0u64);
+        for (i, &size) in sizes.iter().enumerate() {
+            if lanes.is_store(i) {
+                writes += 1;
+                wb += size as u64;
+            } else {
+                reads += 1;
+                rb += size as u64;
+            }
+        }
+        self.reads += reads;
+        self.writes += writes;
+        self.read_bytes += rb;
+        self.write_bytes += wb;
+        for &addr in addrs {
+            self.mrc.access(addr);
+        }
+        self.shadows.sweep(addrs, lanes);
+    }
+
+    fn wants_lanes(&self) -> bool {
+        true
+    }
+
+    fn lane_needs(&self) -> LaneMask {
+        LaneMask::ADDRS | LaneMask::SIZES | LaneMask::STORES
+    }
+}
+
+/// Finalized traffic metrics — the `traffic` member of
+/// [`AppMetrics`](crate::analysis::AppMetrics). Shape-stable when the
+/// family is deselected: the full capacity family with zero counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficMetrics {
+    pub accesses: u64,
+    pub reads: u64,
+    pub writes: u64,
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+    /// Dynamic instructions of the profiled run (rate denominator).
+    pub dyn_instrs: u64,
+    /// Compulsory (first-touch) misses at 64 B lines.
+    pub cold_misses: u64,
+    /// Distinct 64 B lines touched.
+    pub footprint_lines: u64,
+    /// Capacity family (bytes), smallest → largest.
+    pub mrc_capacities: Vec<u64>,
+    /// Exact miss counts per capacity (fully-associative LRU, 64 B lines).
+    pub mrc_misses: Vec<u64>,
+    /// `mrc_misses[i] / accesses` (0 when the run had no accesses).
+    pub mrc_miss_ratio: Vec<f64>,
+    /// Smallest capacity whose miss ratio drops below 50% of the curve's
+    /// ceiling; `None` for flat (or empty) curves.
+    pub mrc_knee_bytes: Option<u64>,
+    /// Per-shadow-cache hit/miss/writeback counts.
+    pub shadow: Vec<ShadowCacheStats>,
+}
+
+impl Default for TrafficMetrics {
+    /// The empty (family-deselected) shape: full capacity family and
+    /// shadow bank, all counts zero — reports and figures never change
+    /// layout, and no analyzer state is allocated just to emit zeros.
+    fn default() -> Self {
+        TrafficMetrics {
+            accesses: 0,
+            reads: 0,
+            writes: 0,
+            read_bytes: 0,
+            write_bytes: 0,
+            dyn_instrs: 0,
+            cold_misses: 0,
+            footprint_lines: 0,
+            mrc_capacities: MRC_CAPACITIES_BYTES.to_vec(),
+            mrc_misses: vec![0; N_MRC_POINTS],
+            mrc_miss_ratio: vec![0.0; N_MRC_POINTS],
+            mrc_knee_bytes: None,
+            shadow: SHADOW_CONFIGS
+                .iter()
+                .map(|c| ShadowCacheStats {
+                    name: c.name,
+                    capacity_bytes: c.capacity_bytes,
+                    ways: c.ways,
+                    hits: 0,
+                    misses: 0,
+                    writebacks: 0,
+                })
+                .collect(),
+        }
+    }
+}
+
+impl TrafficMetrics {
+    /// Total (read + write) bytes per dynamic instruction — the paper-line
+    /// "data movement per instruction" signal.
+    pub fn bytes_per_instr(&self) -> f64 {
+        if self.dyn_instrs == 0 {
+            0.0
+        } else {
+            (self.read_bytes + self.write_bytes) as f64 / self.dyn_instrs as f64
+        }
+    }
+
+    pub fn read_bytes_per_instr(&self) -> f64 {
+        if self.dyn_instrs == 0 {
+            0.0
+        } else {
+            self.read_bytes as f64 / self.dyn_instrs as f64
+        }
+    }
+
+    pub fn write_bytes_per_instr(&self) -> f64 {
+        if self.dyn_instrs == 0 {
+            0.0
+        } else {
+            self.write_bytes as f64 / self.dyn_instrs as f64
+        }
+    }
+
+    /// The LLC-shaped shadow cache (the DRAM-side boundary).
+    pub fn llc(&self) -> Option<&ShadowCacheStats> {
+        self.shadow.iter().find(|s| s.name == "llc")
+    }
+
+    /// Line-fill traffic to DRAM: LLC-shadow misses × 64 B.
+    pub fn dram_fill_bytes(&self) -> u64 {
+        self.llc().map(|s| s.misses * MRC_LINE_BYTES).unwrap_or(0)
+    }
+
+    /// Writeback traffic to DRAM: LLC-shadow dirty evictions × 64 B.
+    pub fn dram_writeback_bytes(&self) -> u64 {
+        self.llc().map(|s| s.writebacks * MRC_LINE_BYTES).unwrap_or(0)
+    }
+
+    /// Total DRAM-side line traffic per instruction (fills + writebacks).
+    pub fn dram_bytes_per_instr(&self) -> f64 {
+        if self.dyn_instrs == 0 {
+            0.0
+        } else {
+            (self.dram_fill_bytes() + self.dram_writeback_bytes()) as f64 / self.dyn_instrs as f64
+        }
+    }
+
+    /// The knee as a comparable scalar for rank correlation (the advisor's
+    /// Spearman). A curve with a knee ranks at the knee capacity. A flat
+    /// curve has no knee for one of two *opposite* reasons, disambiguated
+    /// by the footprint: the whole working set fits the smallest capacity
+    /// (cache-friendly — ranks below the family at half the smallest
+    /// capacity) or no capacity in the family tames the misses
+    /// (cache-hostile — ranks past the family at twice the largest).
+    pub fn knee_or_sentinel(&self) -> f64 {
+        if let Some(b) = self.mrc_knee_bytes {
+            return b as f64;
+        }
+        let smallest = self.mrc_capacities.first().copied().unwrap_or(0);
+        let largest = self.mrc_capacities.last().copied().unwrap_or(0);
+        if self.footprint_lines * MRC_LINE_BYTES <= smallest {
+            (smallest / 2) as f64
+        } else {
+            (largest * 2) as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("accesses", self.accesses);
+        j.set("reads", self.reads);
+        j.set("writes", self.writes);
+        j.set("read_bytes", self.read_bytes);
+        j.set("write_bytes", self.write_bytes);
+        j.set("bytes_per_instr", self.bytes_per_instr());
+        j.set("read_bytes_per_instr", self.read_bytes_per_instr());
+        j.set("write_bytes_per_instr", self.write_bytes_per_instr());
+        j.set("cold_misses", self.cold_misses);
+        j.set("footprint_lines", self.footprint_lines);
+        let caps_f: Vec<f64> = self.mrc_capacities.iter().map(|&c| c as f64).collect();
+        let misses_f: Vec<f64> = self.mrc_misses.iter().map(|&m| m as f64).collect();
+        let mut mrc = Json::obj();
+        mrc.set("line_bytes", MRC_LINE_BYTES);
+        mrc.set("capacities_bytes", caps_f);
+        mrc.set("misses", misses_f);
+        mrc.set("miss_ratio", self.mrc_miss_ratio.clone());
+        j.set("mrc", mrc);
+        match self.mrc_knee_bytes {
+            Some(b) => j.set("mrc_knee_bytes", b),
+            None => j.set("mrc_knee_bytes", Json::Null),
+        };
+        let mut dram = Json::obj();
+        dram.set("fill_bytes", self.dram_fill_bytes());
+        dram.set("writeback_bytes", self.dram_writeback_bytes());
+        dram.set("bytes_per_instr", self.dram_bytes_per_instr());
+        j.set("dram", dram);
+        let shadows: Vec<Json> = self
+            .shadow
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("name", s.name);
+                o.set("capacity_bytes", s.capacity_bytes);
+                o.set("ways", s.ways as u64);
+                o.set("hits", s.hits);
+                o.set("misses", s.misses);
+                o.set("writebacks", s.writebacks);
+                o.set("miss_ratio", s.miss_ratio());
+                o
+            })
+            .collect();
+        j.set("shadow_caches", shadows);
+        j
+    }
+}
+
+/// Human-readable capacity label for report columns ("4K", "1M", ...).
+pub fn capacity_label(bytes: u64) -> String {
+    if bytes >= 1 << 20 {
+        format!("{}M", bytes >> 20)
+    } else {
+        format!("{}K", bytes >> 10)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::{InstrEvent, MemAccess};
+    use crate::ir::Op;
+
+    fn mem_ev(addr: u64, size: u8, is_store: bool) -> TraceEvent {
+        TraceEvent::Instr(InstrEvent {
+            op: if is_store { Op::Store } else { Op::Load },
+            dst: if is_store { None } else { Some(1) },
+            srcs: [0; 3],
+            n_srcs: if is_store { 2 } else { 1 },
+            mem: Some(MemAccess { addr, size, is_store }),
+            block: 0,
+        })
+    }
+
+    #[test]
+    fn byte_accounting_splits_reads_and_writes() {
+        let mut t = TrafficAnalyzer::new();
+        t.record(0x100, 8, false);
+        t.record(0x108, 8, false);
+        t.record(0x200, 4, true);
+        let m = t.finalize(10);
+        assert_eq!((m.reads, m.writes), (2, 1));
+        assert_eq!((m.read_bytes, m.write_bytes), (16, 4));
+        assert!((m.bytes_per_instr() - 2.0).abs() < 1e-12);
+        assert!((m.read_bytes_per_instr() - 1.6).abs() < 1e-12);
+        assert_eq!(m.accesses, 3);
+    }
+
+    #[test]
+    fn lane_sweep_matches_per_event_records() {
+        let mut rng = crate::util::Rng::new(23);
+        let events: Vec<TraceEvent> = (0..3000)
+            .map(|_| {
+                mem_ev(
+                    0x10_000 + rng.below(1 << 12) * 8,
+                    if rng.below(2) == 0 { 8 } else { 4 },
+                    rng.below(3) == 0,
+                )
+            })
+            .collect();
+        let mut per_event = TrafficAnalyzer::new();
+        for ev in &events {
+            per_event.on_event(ev);
+        }
+        let mut lane = TrafficAnalyzer::new();
+        let mut lanes = ChunkLanes::default();
+        for chunk in events.chunks(700) {
+            lanes.rebuild_masked(chunk, lane.lane_needs());
+            lane.on_chunk_lanes(chunk, &lanes);
+        }
+        let (a, b) = (per_event.finalize(3000), lane.finalize(3000));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mrc_knee_found_on_looping_working_set() {
+        // a 256-line (16 KiB) working set walked 100 times: every re-walk
+        // access has stack distance 255, so it misses the 4 KiB point and
+        // hits from 16 KiB up — the knee lands exactly at 16 KiB
+        let mut t = TrafficAnalyzer::new();
+        for _ in 0..100u64 {
+            for i in 0..256u64 {
+                t.record(0x1_0000 + i * 64, 8, false);
+            }
+        }
+        let m = t.finalize(100_000);
+        assert_eq!(m.accesses, 25_600);
+        assert_eq!(m.cold_misses, 256);
+        assert!(m.mrc_miss_ratio[0] > 0.9, "{:?}", m.mrc_miss_ratio);
+        assert!(m.mrc_miss_ratio[1] < 0.05, "{:?}", m.mrc_miss_ratio);
+        assert_eq!(m.mrc_knee_bytes, Some(16 << 10));
+        // curve is monotone non-increasing (Mattson inclusion)
+        for w in m.mrc_miss_ratio.windows(2) {
+            assert!(w[1] <= w[0] + 1e-15);
+        }
+        assert_eq!(m.mrc_capacities.len(), N_MRC_POINTS);
+        assert!(N_MRC_POINTS >= 6);
+    }
+
+    #[test]
+    fn flat_curves_rank_by_footprint_not_one_sentinel() {
+        // cache-FRIENDLY flat curve: a single hot line — no knee, and the
+        // footprint disambiguation ranks it below the whole family
+        let mut friendly = TrafficAnalyzer::new();
+        for _ in 0..100 {
+            friendly.record(0x40, 8, false);
+        }
+        let fm = friendly.finalize(100);
+        assert_eq!(fm.mrc_knee_bytes, None);
+        assert!(fm.knee_or_sentinel() < MRC_CAPACITIES_BYTES[0] as f64);
+
+        // cache-HOSTILE flat curve: a pure cold stream (every access a
+        // compulsory miss, flat at 1.0, footprint past the smallest
+        // capacity) — no knee, ranks past the family
+        let mut hostile = TrafficAnalyzer::new();
+        for i in 0..200u64 {
+            hostile.record(i * 64, 8, false);
+        }
+        let hm = hostile.finalize(200);
+        assert_eq!(hm.cold_misses, hm.accesses);
+        assert_eq!(hm.mrc_knee_bytes, None);
+        assert!(hm.knee_or_sentinel() > *MRC_CAPACITIES_BYTES.last().unwrap() as f64);
+    }
+
+    #[test]
+    fn empty_metrics_are_shape_stable() {
+        let m = TrafficMetrics::default();
+        // the hand-rolled empty shape must match a never-fed analyzer
+        assert_eq!(m, TrafficAnalyzer::new().finalize(0));
+        assert_eq!(m.accesses, 0);
+        assert_eq!(m.mrc_capacities.len(), N_MRC_POINTS);
+        assert_eq!(m.mrc_miss_ratio.len(), N_MRC_POINTS);
+        assert!(m.mrc_miss_ratio.iter().all(|&r| r == 0.0));
+        assert_eq!(m.mrc_knee_bytes, None);
+        assert_eq!(m.shadow.len(), SHADOW_CONFIGS.len());
+        assert_eq!(m.bytes_per_instr(), 0.0);
+        assert_eq!(m.dram_bytes_per_instr(), 0.0);
+    }
+
+    #[test]
+    fn json_has_all_sections() {
+        let mut t = TrafficAnalyzer::new();
+        for i in 0..500u64 {
+            t.record(i * 8, 8, i % 4 == 0);
+        }
+        let s = t.finalize(1000).to_json().to_string_pretty();
+        for key in [
+            "bytes_per_instr",
+            "miss_ratio",
+            "capacities_bytes",
+            "mrc_knee_bytes",
+            "shadow_caches",
+            "writebacks",
+            "fill_bytes",
+        ] {
+            assert!(s.contains(key), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn capacity_labels() {
+        assert_eq!(capacity_label(4 << 10), "4K");
+        assert_eq!(capacity_label(256 << 10), "256K");
+        assert_eq!(capacity_label(1 << 20), "1M");
+        assert_eq!(capacity_label(64 << 20), "64M");
+    }
+}

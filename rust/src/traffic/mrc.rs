@@ -1,0 +1,197 @@
+//! One-pass exact miss-ratio curves (MRC) over a geometric capacity family.
+//!
+//! Built on the Mattson inclusion property: for a fully-associative LRU
+//! cache, an access hits at capacity `C` lines **iff** its stack distance
+//! (distinct lines touched since the previous access to the same line) is
+//! `< C`. The exact distances come from the same Olken/Fenwick kernel the
+//! `reuse` analyzer uses ([`StackDistance`]) — so the whole capacity
+//! family is computed from **one** streaming pass over the address lane,
+//! never re-scanning the trace per capacity.
+//!
+//! Cold (first-touch) accesses are compulsory misses at *every* capacity:
+//! where `reuse` folds first touches into its distance histogram at the
+//! current footprint (see its documented convention), the MRC keeps them
+//! as a separate compulsory count — the curve's floor as capacity grows.
+
+use crate::analysis::reuse::{LineDist, StackDistance};
+
+/// Cache-line size the curve (and the shadow caches) are computed at.
+pub const MRC_LINE_BYTES: u64 = 64;
+/// `log2(MRC_LINE_BYTES)`.
+pub const MRC_LINE_SHIFT: u32 = 6;
+
+/// The geometric capacity family (bytes), 4 KiB → 64 MiB in ×4 steps:
+/// spans L1 through beyond-LLC sizes at 64 B lines.
+pub const MRC_CAPACITIES_BYTES: [u64; 8] = [
+    4 << 10,
+    16 << 10,
+    64 << 10,
+    256 << 10,
+    1 << 20,
+    4 << 20,
+    16 << 20,
+    64 << 20,
+];
+
+/// Number of points on the curve.
+pub const N_MRC_POINTS: usize = MRC_CAPACITIES_BYTES.len();
+
+/// Smallest capacity index at which an access with stack distance `d`
+/// (in 64 B lines) hits, or `None` if it misses even the largest capacity.
+#[inline]
+fn first_hit_index(d: u64) -> Option<usize> {
+    MRC_CAPACITIES_BYTES
+        .iter()
+        .position(|&cap| d < cap / MRC_LINE_BYTES)
+}
+
+/// Streaming MRC accumulator: one [`StackDistance`] at 64 B lines plus a
+/// tiny per-capacity first-hit histogram.
+#[derive(Debug, Clone)]
+pub struct MrcBuilder {
+    sd: StackDistance,
+    /// `first_hit[i]` = accesses whose smallest hitting capacity is `i`
+    /// (they hit at every capacity `>= i`, miss below).
+    first_hit: [u64; N_MRC_POINTS],
+    cold: u64,
+    accesses: u64,
+}
+
+impl Default for MrcBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MrcBuilder {
+    pub fn new() -> MrcBuilder {
+        MrcBuilder {
+            sd: StackDistance::new(),
+            first_hit: [0; N_MRC_POINTS],
+            cold: 0,
+            accesses: 0,
+        }
+    }
+
+    /// Record one byte-address access.
+    #[inline]
+    pub fn access(&mut self, addr: u64) {
+        self.accesses += 1;
+        match self.sd.access_line(addr >> MRC_LINE_SHIFT) {
+            // distance 0: hits at every capacity in the family
+            LineDist::Repeat => self.first_hit[0] += 1,
+            LineDist::Reuse(d) => {
+                if let Some(i) = first_hit_index(d) {
+                    self.first_hit[i] += 1;
+                }
+                // else: capacity miss even at the largest point
+            }
+            LineDist::Cold(_) => self.cold += 1,
+        }
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.accesses
+    }
+
+    /// Compulsory (first-touch) misses — missed at every capacity.
+    pub fn cold(&self) -> u64 {
+        self.cold
+    }
+
+    /// Distinct 64 B lines touched (the working-set footprint).
+    pub fn footprint_lines(&self) -> u64 {
+        self.sd.footprint()
+    }
+
+    /// Exact miss counts per capacity, smallest → largest.
+    pub fn miss_counts(&self) -> [u64; N_MRC_POINTS] {
+        let mut misses = [0u64; N_MRC_POINTS];
+        let mut hits_cum = 0u64;
+        for (i, &fh) in self.first_hit.iter().enumerate() {
+            hits_cum += fh;
+            misses[i] = self.accesses - hits_cum;
+        }
+        misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The shared fully-associative LRU oracle over this trace's lines.
+    fn naive_lru_misses(addrs: &[u64], cap_lines: usize) -> u64 {
+        crate::testkit::naive_lru_misses(addrs.iter().map(|&a| a >> MRC_LINE_SHIFT), cap_lines)
+    }
+
+    #[test]
+    fn capacity_family_is_sane() {
+        assert!(N_MRC_POINTS >= 6);
+        for w in MRC_CAPACITIES_BYTES.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        // every capacity is a whole number of lines
+        for &c in &MRC_CAPACITIES_BYTES {
+            assert_eq!(c % MRC_LINE_BYTES, 0);
+        }
+    }
+
+    #[test]
+    fn small_working_set_only_cold_misses() {
+        // 32 lines, re-walked 10 times: fits the smallest capacity (64
+        // lines), so every miss is compulsory
+        let mut b = MrcBuilder::new();
+        for _ in 0..10 {
+            for i in 0..32u64 {
+                b.access(0x10_000 + i * 64);
+            }
+        }
+        assert_eq!(b.cold(), 32);
+        assert_eq!(b.footprint_lines(), 32);
+        let m = b.miss_counts();
+        assert!(m.iter().all(|&x| x == 32), "{m:?}");
+    }
+
+    #[test]
+    fn matches_naive_lru_randomized() {
+        let mut rng = crate::util::Rng::new(41);
+        // footprint ~512 lines with a hot subset: straddles the 64-line
+        // and 256-line capacities
+        let addrs: Vec<u64> = (0..6000)
+            .map(|_| {
+                if rng.below(2) == 0 {
+                    0x10_000 + rng.below(48) * 64
+                } else {
+                    0x10_000 + rng.below(512) * 64
+                }
+            })
+            .collect();
+        let mut b = MrcBuilder::new();
+        for &a in &addrs {
+            b.access(a);
+        }
+        let m = b.miss_counts();
+        for (i, &cap) in MRC_CAPACITIES_BYTES.iter().enumerate().take(3) {
+            let want = naive_lru_misses(&addrs, (cap / MRC_LINE_BYTES) as usize);
+            assert_eq!(m[i], want, "capacity {cap}");
+        }
+        // monotone non-increasing in capacity (Mattson inclusion)
+        for w in m.windows(2) {
+            assert!(w[1] <= w[0]);
+        }
+        // floor is the compulsory count once capacity exceeds the footprint
+        assert_eq!(*m.last().unwrap(), b.cold());
+    }
+
+    #[test]
+    fn sub_line_accesses_share_a_line() {
+        let mut b = MrcBuilder::new();
+        // 8 consecutive f64s in one 64 B line: 1 cold miss, 7 repeats
+        for i in 0..8u64 {
+            b.access(0x40_000 + i * 8);
+        }
+        assert_eq!(b.cold(), 1);
+        assert_eq!(b.miss_counts()[0], 1);
+    }
+}

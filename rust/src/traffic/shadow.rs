@@ -1,0 +1,160 @@
+//! A small bank of shadow set-associative caches.
+//!
+//! The MRC ([`super::mrc`]) is fully associative by construction; real
+//! hierarchies are not, and dirty lines cost a writeback on eviction. This
+//! bank replays the same access stream through three independent
+//! set-associative write-allocate LRU caches — reusing the simulator's
+//! [`sim::cache::Cache`](crate::sim::cache::Cache) model verbatim, so the
+//! streaming counts can be cross-validated against a direct `sim` replay
+//! (see `rust/tests/prop_traffic.rs`) — capturing associativity effects
+//! and the dirty-writeback byte traffic the MRC cannot express.
+//!
+//! The caches are *independent* (each sees every access), not a hierarchy:
+//! each level answers "what would a cache of this shape see", which is the
+//! platform-independent question the paper's metrics ask.
+
+use crate::sim::cache::Cache;
+
+use super::mrc::MRC_LINE_BYTES;
+
+/// Shape of one shadow cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShadowConfig {
+    /// Short label used in reports/JSON ("l1", "l2", "llc").
+    pub name: &'static str,
+    pub capacity_bytes: u64,
+    pub ways: u32,
+}
+
+/// The bank: L1-, L2- and LLC-shaped shadows at 64 B lines (host-class
+/// shapes per Table 1's cache-per-core column).
+pub const SHADOW_CONFIGS: [ShadowConfig; 3] = [
+    ShadowConfig { name: "l1", capacity_bytes: 32 << 10, ways: 8 },
+    ShadowConfig { name: "l2", capacity_bytes: 256 << 10, ways: 8 },
+    ShadowConfig { name: "llc", capacity_bytes: 2 << 20, ways: 16 },
+];
+
+/// Finalized counts for one shadow cache.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShadowCacheStats {
+    pub name: &'static str,
+    pub capacity_bytes: u64,
+    pub ways: u32,
+    pub hits: u64,
+    pub misses: u64,
+    /// Dirty lines evicted (each is one line of writeback traffic).
+    pub writebacks: u64,
+}
+
+impl ShadowCacheStats {
+    pub fn miss_ratio(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.misses as f64 / t as f64
+        }
+    }
+}
+
+/// The streaming bank of shadow caches.
+#[derive(Debug, Clone)]
+pub struct ShadowBank {
+    caches: Vec<Cache>,
+}
+
+impl Default for ShadowBank {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShadowBank {
+    pub fn new() -> ShadowBank {
+        let line = MRC_LINE_BYTES as usize;
+        ShadowBank {
+            caches: SHADOW_CONFIGS
+                .iter()
+                .map(|c| Cache::new(c.capacity_bytes as usize, c.ways as usize, line))
+                .collect(),
+        }
+    }
+
+    /// Send one access through every shadow cache.
+    #[inline]
+    pub fn access(&mut self, addr: u64, is_store: bool) {
+        for c in &mut self.caches {
+            c.access(addr, is_store);
+        }
+    }
+
+    /// Cache-major sweep over a dense access slice (the chunk-lane hot
+    /// path): one cache's sets stay hot for the whole slice instead of
+    /// being evicted three ways per access.
+    #[inline]
+    pub fn sweep(&mut self, addrs: &[u64], lanes: &crate::interp::ChunkLanes) {
+        for c in &mut self.caches {
+            for (i, &addr) in addrs.iter().enumerate() {
+                c.access(addr, lanes.is_store(i));
+            }
+        }
+    }
+
+    pub fn finalize(&self) -> Vec<ShadowCacheStats> {
+        SHADOW_CONFIGS
+            .iter()
+            .zip(&self.caches)
+            .map(|(cfg, c)| ShadowCacheStats {
+                name: cfg.name,
+                capacity_bytes: cfg.capacity_bytes,
+                ways: cfg.ways,
+                hits: c.hits,
+                misses: c.misses,
+                writebacks: c.writebacks,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_matches_direct_cache_replay() {
+        let mut rng = crate::util::Rng::new(9);
+        let accs: Vec<(u64, bool)> = (0..4000)
+            .map(|_| (0x20_000 + rng.below(2048) * 64, rng.below(4) == 0))
+            .collect();
+        let mut bank = ShadowBank::new();
+        for &(a, s) in &accs {
+            bank.access(a, s);
+        }
+        for (cfg, stats) in SHADOW_CONFIGS.iter().zip(bank.finalize()) {
+            let mut direct = Cache::new(
+                cfg.capacity_bytes as usize,
+                cfg.ways as usize,
+                MRC_LINE_BYTES as usize,
+            );
+            for &(a, s) in &accs {
+                direct.access(a, s);
+            }
+            assert_eq!(stats.hits, direct.hits, "{}", cfg.name);
+            assert_eq!(stats.misses, direct.misses, "{}", cfg.name);
+            assert_eq!(stats.writebacks, direct.writebacks, "{}", cfg.name);
+            assert_eq!(stats.hits + stats.misses, accs.len() as u64);
+        }
+    }
+
+    #[test]
+    fn read_only_stream_never_writes_back() {
+        let mut bank = ShadowBank::new();
+        for i in 0..100_000u64 {
+            bank.access(i * 64, false);
+        }
+        for s in bank.finalize() {
+            assert_eq!(s.writebacks, 0, "{}", s.name);
+            assert!(s.miss_ratio() > 0.9, "streaming misses everywhere");
+        }
+    }
+}

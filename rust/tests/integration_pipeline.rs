@@ -29,18 +29,30 @@ fn pipeline_native_end_to_end() {
         }
     }
 
+    // the traffic family rode the same pass: bytes + a populated MRC
+    for a in &report.apps {
+        let tr = &a.metrics.traffic;
+        assert!(tr.accesses > 0, "{}", a.name);
+        assert_eq!(tr.reads + tr.writes, tr.accesses, "{}", a.name);
+        assert!(tr.bytes_per_instr() > 0.0, "{}", a.name);
+        assert_eq!(tr.mrc_misses.len(), tr.mrc_capacities.len(), "{}", a.name);
+        assert!(tr.mrc_miss_ratio[0] > 0.0, "{}: cold misses imply a nonzero curve", a.name);
+    }
+
     // figure renderers produce content for all 12 apps
-    let (t3a, _) = figures::fig3a(&report.apps, &report.analytics);
-    let (t6, _) = figures::fig6(&report.apps, &report.analytics);
+    let (t3a, _) = figures::fig3a(&report.apps, &report.analytics, report.metrics);
+    let (t6, _) = figures::fig6(&report.apps, &report.analytics, report.metrics);
+    let (tmrc, _) = figures::fig_mrc(&report.apps, report.metrics);
     for a in &report.apps {
         assert!(t3a.contains(&a.name), "fig3a missing {}", a.name);
         assert!(t6.contains(&a.name), "fig6 missing {}", a.name);
+        assert!(tmrc.contains(&a.name), "fig_mrc missing {}", a.name);
     }
 
     // JSON report is parseable and carries all figures
     let j = report.to_json();
     let reparsed = Json::parse(&j.to_string_pretty()).expect("valid JSON");
-    for key in ["fig3a", "fig3b", "fig3c", "fig4", "fig5", "fig6", "apps"] {
+    for key in ["fig3a", "fig3b", "fig3c", "fig4", "fig5", "fig6", "fig_mrc", "apps"] {
         assert!(reparsed.get(key).is_some(), "report missing {key}");
     }
 }

@@ -3,8 +3,9 @@
 //! path **and** through the offloaded analysis thread produces
 //! **bit-identical** `AppMetrics` to the per-event reference path — pca8
 //! feature vectors, entropy histograms (count-of-counts), reuse-distance
-//! CDFs, instruction mix, ILP windows, BBLP/PBBLP and the dynamic-count
-//! stats all compared exactly. This is the safety net under every tuned
+//! CDFs, instruction mix, ILP windows, BBLP/PBBLP, the memory-traffic
+//! family (MRC miss counts/ratios, knee, byte accounting, shadow-cache
+//! counters) and the dynamic-count stats all compared exactly. This is the safety net under every tuned
 //! `on_chunk`/`on_chunk_lanes` implementation and under the offload
 //! channel protocol: any reordering or lost/duplicated event — on either
 //! thread — shows up here as a bit mismatch.
@@ -95,6 +96,28 @@ fn assert_bit_identical(a: &AppMetrics, b: &AppMetrics) -> Result<(), String> {
             && a.pbblp.iterations == b.pbblp.iterations,
         "PBBLP differs"
     );
+
+    // memory traffic: MRC miss counts/ratios, byte accounting, knee and
+    // shadow-cache counters — every field, exactly (TrafficMetrics is
+    // integer folds + finalize-time ratios, so PartialEq is bit-exact)
+    prop_assert!(
+        a.traffic.mrc_misses == b.traffic.mrc_misses,
+        "MRC miss counts differ: {:?} vs {:?}",
+        a.traffic.mrc_misses,
+        b.traffic.mrc_misses
+    );
+    let (ra, rb) = (&a.traffic.mrc_miss_ratio, &b.traffic.mrc_miss_ratio);
+    for (i, (x, y)) in ra.iter().zip(rb.iter()).enumerate() {
+        prop_assert!(x.to_bits() == y.to_bits(), "mrc_miss_ratio[{i}] {x} vs {y}");
+    }
+    prop_assert!(
+        a.traffic.mrc_knee_bytes == b.traffic.mrc_knee_bytes,
+        "MRC knee differs: {:?} vs {:?}",
+        a.traffic.mrc_knee_bytes,
+        b.traffic.mrc_knee_bytes
+    );
+    prop_assert!(a.traffic.shadow == b.traffic.shadow, "shadow-cache counts differ");
+    prop_assert!(a.traffic == b.traffic, "traffic metrics differ");
 
     // branch entropy
     prop_assert!(

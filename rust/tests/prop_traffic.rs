@@ -1,0 +1,165 @@
+//! Traffic-subsystem cross-validation properties.
+//!
+//! 1. **Shadow caches ≡ `sim::cache` replay**: the streaming shadow-cache
+//!    hit/miss/writeback counts folded inside the chunked `AnalyzerStack`
+//!    pass must exactly match replaying the same (addr, is_store) stream
+//!    through freshly-built `sim::cache::Cache` instances — on seeded
+//!    random programs *and* real suite kernels. Any drift between the
+//!    streaming sweep and the simulator's cache model shows up here.
+//! 2. **MRC ≡ fully-associative LRU replay**: the one-pass stack-distance
+//!    MRC's exact miss counts must match a naive Mattson LRU stack
+//!    simulated at each capacity directly.
+//! 3. **Byte accounting ≡ event stream**: read/write byte totals must
+//!    equal summing the captured access sizes.
+
+use pisa_nmc::analysis::{profile, AppMetrics};
+use pisa_nmc::interp::{Instrument, Machine, TraceEvent};
+use pisa_nmc::ir::Program;
+use pisa_nmc::prop_assert;
+use pisa_nmc::sim::cache::Cache;
+use pisa_nmc::testkit::{check_seeded, random_program};
+use pisa_nmc::traffic::{MRC_CAPACITIES_BYTES, MRC_LINE_BYTES, SHADOW_CONFIGS};
+
+/// Capture the run's memory-access stream in trace order.
+#[derive(Default)]
+struct AccessCapture(Vec<(u64, u8, bool)>);
+
+impl Instrument for AccessCapture {
+    fn on_event(&mut self, ev: &TraceEvent) {
+        if let TraceEvent::Instr(i) = ev {
+            if let Some(m) = i.mem {
+                self.0.push((m.addr, m.size, m.is_store));
+            }
+        }
+    }
+}
+
+fn capture_accesses(prog: &Program) -> Vec<(u64, u8, bool)> {
+    let mut cap = AccessCapture::default();
+    Machine::new(prog).unwrap().run_per_event(&mut cap).unwrap();
+    cap.0
+}
+
+/// The shared fully-associative LRU oracle (`testkit::naive_lru_misses`)
+/// over this access stream's 64 B lines.
+fn naive_lru_misses(accs: &[(u64, u8, bool)], cap_lines: usize) -> u64 {
+    let lines = accs.iter().map(|&(addr, _, _)| addr / MRC_LINE_BYTES);
+    pisa_nmc::testkit::naive_lru_misses(lines, cap_lines)
+}
+
+/// The property: the streaming `TrafficMetrics` from one chunked profile
+/// pass must agree exactly with direct replays of the captured stream.
+fn assert_traffic_matches_replay(
+    m: &AppMetrics,
+    accs: &[(u64, u8, bool)],
+    check_mrc_points: usize,
+) -> Result<(), String> {
+    let tr = &m.traffic;
+    prop_assert!(
+        tr.accesses == accs.len() as u64,
+        "access count: streaming {} vs captured {}",
+        tr.accesses,
+        accs.len()
+    );
+
+    // byte accounting vs the captured sizes
+    let want_rb: u64 = accs.iter().filter(|a| !a.2).map(|a| a.1 as u64).sum();
+    let want_wb: u64 = accs.iter().filter(|a| a.2).map(|a| a.1 as u64).sum();
+    prop_assert!(
+        (tr.read_bytes, tr.write_bytes) == (want_rb, want_wb),
+        "byte totals: streaming ({}, {}) vs replay ({want_rb}, {want_wb})",
+        tr.read_bytes,
+        tr.write_bytes
+    );
+
+    // shadow caches vs a direct sim::cache replay
+    for (cfg, stats) in SHADOW_CONFIGS.iter().zip(&tr.shadow) {
+        let mut direct = Cache::new(
+            cfg.capacity_bytes as usize,
+            cfg.ways as usize,
+            MRC_LINE_BYTES as usize,
+        );
+        for &(addr, _, is_store) in accs {
+            direct.access(addr, is_store);
+        }
+        prop_assert!(
+            (stats.hits, stats.misses, stats.writebacks)
+                == (direct.hits, direct.misses, direct.writebacks),
+            "shadow '{}': streaming ({}, {}, {}) vs sim replay ({}, {}, {})",
+            cfg.name,
+            stats.hits,
+            stats.misses,
+            stats.writebacks,
+            direct.hits,
+            direct.misses,
+            direct.writebacks
+        );
+    }
+
+    // MRC vs the naive Mattson LRU stack at the smallest capacities (the
+    // oracle is O(n·C), so only the cheap points are replayed)
+    for (i, &cap) in MRC_CAPACITIES_BYTES.iter().enumerate().take(check_mrc_points) {
+        let want = naive_lru_misses(accs, (cap / MRC_LINE_BYTES) as usize);
+        prop_assert!(
+            tr.mrc_misses[i] == want,
+            "MRC misses at {cap} B: streaming {} vs naive LRU {want}",
+            tr.mrc_misses[i]
+        );
+    }
+    // Mattson inclusion: the curve is monotone non-increasing, floored by
+    // the compulsory count
+    for w in tr.mrc_misses.windows(2) {
+        prop_assert!(w[1] <= w[0], "MRC not monotone: {:?}", tr.mrc_misses);
+    }
+    prop_assert!(
+        *tr.mrc_misses.last().unwrap() >= tr.cold_misses,
+        "largest-capacity misses below the compulsory floor"
+    );
+    Ok(())
+}
+
+#[test]
+fn traffic_matches_sim_cache_replay_on_random_programs() {
+    check_seeded("traffic == sim replay", 0x7AFF1C, 24, |rng| {
+        let p = random_program(rng);
+        let m = profile(&p).map_err(|e| e.to_string())?;
+        let accs = capture_accesses(&p);
+        assert_traffic_matches_replay(&m, &accs, 2)
+    });
+}
+
+#[test]
+fn traffic_matches_sim_cache_replay_on_real_kernels() {
+    // ≥ 2 real kernels, sized to span several chunk flushes: one dense
+    // regular Polybench kernel and one irregular Rodinia kernel
+    for (name, n) in [("gesummv", 48), ("bfs", 96)] {
+        let k = pisa_nmc::workloads::by_name(name).unwrap();
+        let p = k.build(n, 7);
+        let m = profile(&p).unwrap();
+        let accs = capture_accesses(&p);
+        assert!(accs.len() > 1000, "{name}: want a multi-chunk trace, got {} accesses", accs.len());
+        if let Err(msg) = assert_traffic_matches_replay(&m, &accs, 2) {
+            panic!("{name}: {msg}");
+        }
+    }
+}
+
+#[test]
+fn mrc_knee_sits_inside_the_family_when_present() {
+    let k = pisa_nmc::workloads::by_name("atax").unwrap();
+    let m = profile(&k.build(48, 7)).unwrap();
+    let tr = &m.traffic;
+    if let Some(knee) = tr.mrc_knee_bytes {
+        assert!(MRC_CAPACITIES_BYTES.contains(&knee), "knee {knee} not in family");
+        // definition check: first capacity under 50% of the ceiling
+        let threshold = 0.5 * tr.mrc_miss_ratio[0];
+        let i = MRC_CAPACITIES_BYTES.iter().position(|&c| c == knee).unwrap();
+        assert!(tr.mrc_miss_ratio[i] < threshold);
+        assert!(tr.mrc_miss_ratio[..i].iter().all(|&r| r >= threshold));
+    }
+    // the rank scalar is always positive and, when a knee exists, equals it
+    assert!(tr.knee_or_sentinel() > 0.0);
+    if let Some(knee) = tr.mrc_knee_bytes {
+        assert_eq!(tr.knee_or_sentinel(), knee as f64);
+    }
+}
