@@ -3,10 +3,12 @@
 //! call. These are the numbers the optimization pass tracks.
 
 use pisa_nmc::analysis::{
-    AnalyzerStack, BblpAnalyzer, DlpAnalyzer, IlpAnalyzer, MemEntropyAnalyzer, MixAnalyzer,
-    PbblpAnalyzer, ReuseAnalyzer,
+    AnalyzerStack, BblpAnalyzer, DlpAnalyzer, IlpAnalyzer, MemEntropyAnalyzer, MetricSet,
+    MixAnalyzer, PbblpAnalyzer, ReuseAnalyzer, ShardPlan,
 };
-use pisa_nmc::interp::{run_program, Fanout, Instrument, Machine, NullInstrument};
+use pisa_nmc::interp::{
+    run_program, run_sharded, Fanout, Instrument, Machine, NullInstrument, Workers,
+};
 use pisa_nmc::ir::ProgramBuilder;
 use pisa_nmc::runtime::Runtime;
 use pisa_nmc::sim::{collect, simulate_host, simulate_nmc};
@@ -72,6 +74,18 @@ fn main() -> anyhow::Result<()> {
         let mut stack = AnalyzerStack::full(&prog);
         let mut m = Machine::new(&prog).unwrap();
         std::hint::black_box(pisa_nmc::interp::run_offload(&mut m, &mut stack).unwrap());
+    });
+    bench("dispatch_sharded (4 family-sharded workers)", 1, 3, Some((n, "instr")), || {
+        // same analyzer set, sharded by family across the auto-sized
+        // worker pool, each chunk broadcast to all of them — same
+        // un-finalized endpoint as the arms above
+        let plan = ShardPlan::new(MetricSet::all(), Workers::Auto);
+        let mut stacks: Vec<AnalyzerStack> =
+            plan.shards().iter().map(|&s| AnalyzerStack::new(&prog, s)).collect();
+        let mut refs: Vec<&mut (dyn Instrument + Send)> =
+            stacks.iter_mut().map(|s| s as &mut (dyn Instrument + Send)).collect();
+        let mut m = Machine::new(&prog).unwrap();
+        std::hint::black_box(run_sharded(&mut m, &mut refs).unwrap());
     });
     bench("analyzer_mix", 1, 5, Some((n, "instr")), || {
         let mut a = MixAnalyzer::new();

@@ -1,17 +1,20 @@
 //! Suite-level profiler throughput: the wall-clock number the chunked +
-//! offloaded event pipeline is accountable to. Runs the suite at the
-//! default bench scale (override with `PISA_BENCH_SCALE`) in both
-//! [`PipelineMode`]s, reports total trace events per second of end-to-end
-//! suite time, then runs every kernel through all three delivery paths
-//! (per-event reference, inline chunked, offloaded) for the per-app
-//! dispatch/overlap comparison.
+//! off-thread event pipeline is accountable to. Runs the suite at the
+//! default bench scale (override with `PISA_BENCH_SCALE`) in all three
+//! [`PipelineMode`]s — inline, offload (one analysis thread), sharded
+//! (family-sharded analyzer worker pool) — reports total trace events per
+//! second of end-to-end suite time, then runs every kernel through all
+//! four delivery paths (per-event reference, inline chunked, offloaded,
+//! sharded) for the per-app dispatch/overlap comparison.
 //!
-//! A third inline arm runs with the `traffic` family disabled, so the
+//! A further inline arm runs with the `traffic` family disabled, so the
 //! memory-traffic subsystem's events/s overhead (budget: ≤ 25% vs the
 //! default all-families stack) is measured on every run.
 //!
 //! With `--bench-json` the suite numbers land in `BENCH_pipeline.json` at
-//! the repo root, so successive PRs have a perf trajectory to diff against.
+//! the repo root, so successive PRs have a perf trajectory to diff
+//! against — the CI `bench` job uploads that file as a workflow artifact
+//! and renders its suite table into the job summary.
 //!
 //! ```bash
 //! cargo bench --bench throughput                     # scale 0.25
@@ -21,9 +24,11 @@
 
 use std::time::Instant;
 
-use pisa_nmc::analysis::{profile, profile_offload, profile_per_event, Metric, MetricSet};
+use pisa_nmc::analysis::{
+    profile, profile_offload, profile_per_event, profile_sharded, Metric, MetricSet,
+};
 use pisa_nmc::coordinator::{run_suite_select, AppResult};
-use pisa_nmc::interp::PipelineMode;
+use pisa_nmc::interp::{PipelineMode, Workers};
 use pisa_nmc::testkit::bench::bench_scale;
 use pisa_nmc::util::Json;
 use pisa_nmc::workloads::{registry, scaled_n};
@@ -46,33 +51,40 @@ fn main() -> anyhow::Result<()> {
     let emit_json = std::env::args().any(|a| a == "--bench-json");
     println!("== profiler throughput (scale {scale}) ==\n");
 
-    // end-to-end suite in both delivery modes: all analyzers + sims
+    // end-to-end suite in every delivery mode: all analyzers + sims
+    let sharded_mode = PipelineMode::Sharded { workers: Workers::Auto };
     let (inline_apps, inline_eps) = suite_arm(scale, MetricSet::all(), PipelineMode::Inline)?;
     let (offload_apps, offload_eps) = suite_arm(scale, MetricSet::all(), PipelineMode::Offload)?;
+    let (sharded_apps, sharded_eps) = suite_arm(scale, MetricSet::all(), sharded_mode)?;
     // the traffic-subsystem overhead arm: same inline suite minus the
     // traffic family (its budget: ≤ 25% events/s overhead vs this arm)
     let (_, no_traffic_eps) =
         suite_arm(scale, MetricSet::all().without(Metric::Traffic), PipelineMode::Inline)?;
 
     println!(
-        "{:<14} {:>14} {:>12} {:>12} {:>8}",
-        "app", "events", "inline", "offload", "overlap"
+        "{:<14} {:>14} {:>12} {:>12} {:>12} {:>8} {:>8}",
+        "app", "events", "inline", "offload", "sharded", "ovlp", "shard"
     );
-    for (a, o) in inline_apps.iter().zip(&offload_apps) {
+    for ((a, o), sh) in inline_apps.iter().zip(&offload_apps).zip(&sharded_apps) {
         println!(
-            "{:<14} {:>14} {:>10.2}M/s {:>10.2}M/s {:>7.2}x",
+            "{:<14} {:>14} {:>10.2}M/s {:>10.2}M/s {:>10.2}M/s {:>7.2}x {:>7.2}x",
             a.name,
             a.metrics.exec.events(),
             a.events_per_sec() / 1e6,
             o.events_per_sec() / 1e6,
+            sh.events_per_sec() / 1e6,
             o.events_per_sec() / a.events_per_sec().max(1e-9),
+            sh.events_per_sec() / a.events_per_sec().max(1e-9),
         );
     }
     println!(
-        "\nsuite end-to-end: inline {:.2}M events/s, offload {:.2}M events/s → {:.2}x",
+        "\nsuite end-to-end: inline {:.2}M events/s, offload {:.2}M events/s ({:.2}x), \
+         sharded {:.2}M events/s ({:.2}x)",
         inline_eps / 1e6,
         offload_eps / 1e6,
         offload_eps / inline_eps.max(1e-9),
+        sharded_eps / 1e6,
+        sharded_eps / inline_eps.max(1e-9),
     );
     let traffic_overhead_pct = (no_traffic_eps / inline_eps.max(1e-9) - 1.0) * 100.0;
     println!(
@@ -83,14 +95,15 @@ fn main() -> anyhow::Result<()> {
         traffic_overhead_pct,
     );
 
-    // three-way dispatch comparison, single app at a time, analyzers only —
+    // four-way dispatch comparison, single app at a time, analyzers only —
     // isolates the event-delivery cost (per-event virtual calls vs chunked
-    // lane sweeps vs chunked + interpretation/analysis overlap)
+    // lane sweeps vs one-thread overlap vs the family-sharded worker pool)
     println!(
-        "{:<14} {:>12} {:>12} {:>12} {:>8} {:>8}",
-        "app", "per-event", "inline", "offload", "chunk x", "ovlp x"
+        "{:<14} {:>12} {:>12} {:>12} {:>12} {:>8} {:>8}",
+        "app", "per-event", "inline", "offload", "sharded", "chunk x", "shard x"
     );
-    let (mut tot_ref, mut tot_inline, mut tot_offload) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut tot_ref, mut tot_inline, mut tot_offload, mut tot_sharded) =
+        (0.0f64, 0.0f64, 0.0f64, 0.0f64);
     for k in registry() {
         let n = scaled_n(k.as_ref(), scale);
         let prog = k.build(n, 42);
@@ -103,28 +116,36 @@ fn main() -> anyhow::Result<()> {
         let t = Instant::now();
         let o = profile_offload(&prog)?;
         let offload_s = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let sh = profile_sharded(&prog)?;
+        let sharded_s = t.elapsed().as_secs_f64();
         assert_eq!(r.exec.dyn_instrs, c.exec.dyn_instrs);
         assert_eq!(c.exec.dyn_instrs, o.exec.dyn_instrs);
+        assert_eq!(c.exec.dyn_instrs, sh.exec.dyn_instrs);
         tot_ref += ref_s;
         tot_inline += inline_s;
         tot_offload += offload_s;
+        tot_sharded += sharded_s;
         println!(
-            "{:<14} {:>11.3}s {:>11.3}s {:>11.3}s {:>7.2}x {:>7.2}x",
+            "{:<14} {:>11.3}s {:>11.3}s {:>11.3}s {:>11.3}s {:>7.2}x {:>7.2}x",
             k.info().name,
             ref_s,
             inline_s,
             offload_s,
+            sharded_s,
             ref_s / inline_s,
-            inline_s / offload_s,
+            inline_s / sharded_s,
         );
     }
     println!(
-        "\ntotal: per-event {tot_ref:.3}s, inline {tot_inline:.3}s, offload {tot_offload:.3}s"
+        "\ntotal: per-event {tot_ref:.3}s, inline {tot_inline:.3}s, offload {tot_offload:.3}s, \
+         sharded {tot_sharded:.3}s"
     );
     println!(
-        "       chunked dispatch {:.2}x, offload overlap {:.2}x (vs inline)",
+        "       chunked dispatch {:.2}x, offload overlap {:.2}x, sharded pool {:.2}x (vs inline)",
         tot_ref / tot_inline,
-        tot_inline / tot_offload
+        tot_inline / tot_offload,
+        tot_inline / tot_sharded
     );
 
     if emit_json {
@@ -134,6 +155,8 @@ fn main() -> anyhow::Result<()> {
         suite.set("inline_events_per_sec", inline_eps);
         suite.set("offload_events_per_sec", offload_eps);
         suite.set("offload_speedup", offload_eps / inline_eps.max(1e-9));
+        suite.set("sharded_events_per_sec", sharded_eps);
+        suite.set("sharded_speedup", sharded_eps / inline_eps.max(1e-9));
         j.set("suite", suite);
         // traffic-subsystem overhead trend: events/s with the traffic
         // family enabled (the default stack) vs disabled, same inline
@@ -144,11 +167,12 @@ fn main() -> anyhow::Result<()> {
         traffic.set("overhead_pct", traffic_overhead_pct);
         j.set("traffic", traffic);
         let mut apps = Json::obj();
-        for (a, o) in inline_apps.iter().zip(&offload_apps) {
+        for ((a, o), sh) in inline_apps.iter().zip(&offload_apps).zip(&sharded_apps) {
             let mut app = Json::obj();
             app.set("events", a.metrics.exec.events());
             app.set("inline_events_per_sec", a.events_per_sec());
             app.set("offload_events_per_sec", o.events_per_sec());
+            app.set("sharded_events_per_sec", sh.events_per_sec());
             apps.set(&a.name, app);
         }
         j.set("apps", apps);

@@ -17,13 +17,16 @@
 //! code path; [`MetricSet`] selects a subset by name (the CLI `--metrics`
 //! flag ends up here).
 //!
-//! The stack can fold either on the interpreter thread ([`profile`]) or on
-//! a dedicated analysis thread overlapped with interpretation
-//! ([`profile_offload`], [`profile_select_mode`] — see
-//! [`crate::interp::offload`]). [`profile_per_event`] keeps the un-batched
-//! delivery as the reference semantics; `rust/tests/prop_chunked.rs`
-//! proves all paths produce bit-identical metrics on seeded random
-//! programs.
+//! The stack can fold on the interpreter thread ([`profile`]), on one
+//! dedicated analysis thread overlapped with interpretation
+//! ([`profile_offload`] — see [`crate::interp::offload`]), or sharded by
+//! metric family across a pool of analyzer workers with every chunk
+//! broadcast to all of them ([`profile_sharded`] — plan and merge in
+//! [`shard`], mechanism in [`crate::interp::offload::sharded`]);
+//! [`profile_select_mode`] takes the delivery as a [`PipelineMode`] knob.
+//! [`profile_per_event`] keeps the un-batched delivery as the reference
+//! semantics; `rust/tests/prop_chunked.rs` proves all paths produce
+//! bit-identical metrics on seeded random programs.
 //!
 //! | metric | module | paper figure |
 //! |---|---|---|
@@ -46,6 +49,7 @@ pub mod mem_entropy;
 pub mod mix;
 pub mod pbblp;
 pub mod reuse;
+pub mod shard;
 pub mod spatial;
 
 use anyhow::{bail, Result};
@@ -58,10 +62,12 @@ pub use mem_entropy::{MemEntropyAnalyzer, MemEntropyResult};
 pub use mix::MixAnalyzer;
 pub use pbblp::{PbblpAnalyzer, PbblpResult};
 pub use reuse::{LineDist, ReuseAnalyzer, ReuseResult, StackDistance};
+pub use shard::ShardPlan;
 pub use spatial::SpatialResult;
 
 use crate::interp::{
     offload, ChunkLanes, ExecStats, Instrument, LaneMask, Machine, PipelineMode, TraceEvent,
+    Workers,
 };
 use crate::ir::Program;
 use crate::sim::{Region, TaskTraceCollector};
@@ -179,6 +185,21 @@ impl MetricSet {
 
     pub fn is_all(&self) -> bool {
         self.bits == ALL_BITS
+    }
+
+    /// No family enabled at all.
+    pub fn is_empty(&self) -> bool {
+        self.bits == 0
+    }
+
+    /// Every family in either set (shard planning composes group subsets).
+    pub fn union(self, other: MetricSet) -> Self {
+        MetricSet { bits: self.bits | other.bits }
+    }
+
+    /// Number of enabled families.
+    pub fn len(&self) -> usize {
+        self.bits.count_ones() as usize
     }
 
     /// Parse a comma-separated selection, e.g. `"mix,dlp,bblp"`. Accepts
@@ -442,23 +463,69 @@ impl Instrument for AnalyzerStack {
     }
 }
 
-/// How `profile_impl` delivers events to the stack.
+/// How `profile_impl` delivers events to the analyzers.
+#[derive(Clone, Copy)]
 enum Delivery {
     PerEvent,
     Chunked,
     Offload,
+    /// Family-sharded across a worker pool (see [`shard`]).
+    Sharded(Workers),
 }
 
 fn profile_impl(prog: &Program, metrics: MetricSet, delivery: Delivery) -> Result<AppMetrics> {
+    Ok(profile_run(prog, metrics, delivery, false)?.0)
+}
+
+/// The one implementation every profiling entry point lands on: run
+/// `prog` once with the selected delivery, optionally collecting the
+/// region/task trace the machine models consume, and finalize into one
+/// [`AppMetrics`]. The sharded delivery builds one stack per planned
+/// shard and merges deterministically ([`shard::ShardPlan`]); every other
+/// delivery drives a single stack.
+fn profile_run(
+    prog: &Program,
+    metrics: MetricSet,
+    delivery: Delivery,
+    with_tasks: bool,
+) -> Result<(AppMetrics, Option<Vec<Region>>)> {
     crate::ir::verify::verify_ok(prog);
+    if let Delivery::Sharded(workers) = delivery {
+        return shard::profile_sharded_run(prog, metrics, workers, with_tasks);
+    }
     let mut stack = AnalyzerStack::new(prog, metrics);
+    if with_tasks {
+        stack = stack.with_task_trace(prog);
+    }
     let mut machine = Machine::new(prog)?;
     let out = match delivery {
         Delivery::Chunked => machine.run(&mut stack)?,
         Delivery::PerEvent => machine.run_per_event(&mut stack)?,
         Delivery::Offload => offload::run_offload(&mut machine, &mut stack)?,
+        Delivery::Sharded(_) => unreachable!("handled above"),
     };
-    Ok(stack.finalize(out.stats).0)
+    Ok(stack.finalize(out.stats))
+}
+
+/// Map the CLI-facing [`PipelineMode`] onto the internal delivery enum.
+fn delivery_for(mode: PipelineMode) -> Delivery {
+    match mode {
+        PipelineMode::Inline => Delivery::Chunked,
+        PipelineMode::Offload => Delivery::Offload,
+        PipelineMode::Sharded { workers } => Delivery::Sharded(workers),
+    }
+}
+
+/// [`profile_select_mode`] plus the region/task trace both machine models
+/// consume — the `coordinator` entry point, identical metrics on every
+/// delivery path.
+pub fn profile_with_tasks(
+    prog: &Program,
+    metrics: MetricSet,
+    mode: PipelineMode,
+) -> Result<(AppMetrics, Vec<Region>)> {
+    let (m, regions) = profile_run(prog, metrics, delivery_for(mode), true)?;
+    Ok((m, regions.expect("task trace enabled")))
 }
 
 /// Run `prog` once, streaming the trace through every analyzer (chunked
@@ -480,6 +547,14 @@ pub fn profile_offload(prog: &Program) -> Result<AppMetrics> {
     profile_impl(prog, MetricSet::all(), Delivery::Offload)
 }
 
+/// [`profile`] with the analyzers sharded by metric family across an
+/// auto-sized worker pool, every chunk broadcast to all of them (see
+/// [`shard`] and [`crate::interp::offload::sharded`]). Metrics are
+/// bit-identical to every other delivery path.
+pub fn profile_sharded(prog: &Program) -> Result<AppMetrics> {
+    profile_impl(prog, MetricSet::all(), Delivery::Sharded(Workers::Auto))
+}
+
 /// [`profile_select`] with the delivery mode as a knob — the entry point
 /// the CLI `--pipeline` flag reaches through `coordinator::pipeline`.
 pub fn profile_select_mode(
@@ -487,11 +562,7 @@ pub fn profile_select_mode(
     metrics: MetricSet,
     mode: PipelineMode,
 ) -> Result<AppMetrics> {
-    let delivery = match mode {
-        PipelineMode::Inline => Delivery::Chunked,
-        PipelineMode::Offload => Delivery::Offload,
-    };
-    profile_impl(prog, metrics, delivery)
+    profile_impl(prog, metrics, delivery_for(mode))
 }
 
 /// Reference path: identical to [`profile`] but with one `on_event` call
@@ -619,6 +690,19 @@ mod tests {
         assert_eq!(a.mix.per_op, b.mix.per_op);
         assert_eq!(a.reuse.hist, b.reuse.hist);
         assert_eq!(a.mem_entropy.count_of_counts, b.mem_entropy.count_of_counts);
+        assert_eq!(a.exec.dyn_instrs, b.exec.dyn_instrs);
+    }
+
+    #[test]
+    fn sharded_profile_matches_inline() {
+        let p = tiny_program();
+        let a = profile(&p).unwrap();
+        let b = profile_sharded(&p).unwrap();
+        assert_eq!(a.pca8_features().map(f64::to_bits), b.pca8_features().map(f64::to_bits));
+        assert_eq!(a.mix.per_op, b.mix.per_op);
+        assert_eq!(a.reuse.hist, b.reuse.hist);
+        assert_eq!(a.mem_entropy.count_of_counts, b.mem_entropy.count_of_counts);
+        assert_eq!(a.traffic, b.traffic);
         assert_eq!(a.exec.dyn_instrs, b.exec.dyn_instrs);
     }
 

@@ -1,0 +1,347 @@
+//! Family-level shard planning and deterministic result merging for the
+//! sharded pipeline ([`crate::interp::offload::sharded`]).
+//!
+//! The mechanism (chunk broadcast, countdown-return recycling) lives in
+//! `interp`; this module owns the **policy**: which metric families fold
+//! together on one worker, how many workers a [`MetricSet`] warrants, and
+//! how the per-shard [`AnalyzerStack`]s merge back into one
+//! [`AppMetrics`].
+//!
+//! Families group along the lane boundaries the SoA
+//! [`ChunkLanes`](crate::interp::ChunkLanes) view already draws, so each
+//! worker streams mostly its own lane:
+//!
+//! | group | families | sweeps |
+//! |---|---|---|
+//! | tags    | `mix`, `branch`                  | op-tag lane / event slice |
+//! | mem     | `mem_entropy`, `reuse`, `traffic`| addrs / sizes / store lanes |
+//! | dep     | `ilp`, `dlp`                     | event slices (dataflow) |
+//! | block   | `bblp`, `pbblp`                  | event slices (block structure) |
+//!
+//! `Workers::Auto` sizes the pool as one worker per non-empty group;
+//! `Workers::Fixed(n)` packs the groups contiguously into at most `n`
+//! shards (clamped so no shard is ever empty — `--metrics mix` collapses
+//! to a single worker no matter what `--workers` asks for). The plan is a
+//! pure function of the metric set, and the merge reads shards in plan
+//! order, so sharded results are deterministic regardless of worker
+//! scheduling.
+
+use anyhow::Result;
+
+use crate::interp::{run_sharded, Instrument, Machine, Workers};
+use crate::ir::Program;
+use crate::sim::Region;
+
+use super::{AnalyzerStack, AppMetrics, ExecStats, Metric, MetricSet};
+
+/// The canonical shard groups, in plan order. Every metric family appears
+/// in exactly one group (pinned by a unit test), so any plan's shards are
+/// pairwise disjoint and cover the enabled set.
+pub const SHARD_GROUPS: [&[Metric]; 4] = [
+    &[Metric::Mix, Metric::Branch],
+    &[Metric::MemEntropy, Metric::Reuse, Metric::Traffic],
+    &[Metric::Ilp, Metric::Dlp],
+    &[Metric::Bblp, Metric::Pbblp],
+];
+
+/// How the enabled metric families split across analyzer workers: one
+/// [`MetricSet`] per worker, pairwise disjoint, union equal to the
+/// enabled set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    shards: Vec<MetricSet>,
+}
+
+impl ShardPlan {
+    /// Plan the worker pool for `metrics`. Never returns an empty plan:
+    /// with no lane-aware family enabled the plan is one (possibly empty)
+    /// shard, which keeps the topology total for metric-less runs.
+    pub fn new(metrics: MetricSet, workers: Workers) -> Self {
+        let groups: Vec<MetricSet> = SHARD_GROUPS
+            .iter()
+            .map(|fams| {
+                fams.iter()
+                    .filter(|m| metrics.contains(**m))
+                    .fold(MetricSet::none(), |set, &m| set.with(m))
+            })
+            .filter(|set| !set.is_empty())
+            .collect();
+        if groups.is_empty() {
+            return ShardPlan { shards: vec![MetricSet::none()] };
+        }
+        let n = match workers {
+            Workers::Auto => groups.len(),
+            Workers::Fixed(n) => n.clamp(1, groups.len()),
+        };
+        // contiguous partition of the canonical group order into n shards;
+        // the index map is monotone and surjective for n <= len, so every
+        // shard receives at least one group
+        let mut shards = vec![MetricSet::none(); n];
+        for (i, g) in groups.iter().enumerate() {
+            let slot = i * n / groups.len();
+            shards[slot] = shards[slot].union(*g);
+        }
+        ShardPlan { shards }
+    }
+
+    /// The resolved worker count.
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-worker family subsets, in plan (= merge) order.
+    pub fn shards(&self) -> &[MetricSet] {
+        &self.shards
+    }
+}
+
+/// Run `prog` through the sharded pipeline: build one [`AnalyzerStack`]
+/// per planned shard, broadcast every chunk to all of them, then merge
+/// the per-shard results — in plan order, so the outcome is independent
+/// of worker timing. With `with_tasks`, the task-trace collector rides
+/// the last shard (the block-structure side of the canonical plan).
+pub(super) fn profile_sharded_run(
+    prog: &Program,
+    metrics: MetricSet,
+    workers: Workers,
+    with_tasks: bool,
+) -> Result<(AppMetrics, Option<Vec<Region>>)> {
+    let plan = ShardPlan::new(metrics, workers);
+    let mut stacks: Vec<AnalyzerStack> = plan
+        .shards()
+        .iter()
+        .map(|&subset| AnalyzerStack::new(prog, subset))
+        .collect();
+    if with_tasks {
+        let last = stacks.pop().expect("plan is never empty");
+        stacks.push(last.with_task_trace(prog));
+    }
+    let mut machine = Machine::new(prog)?;
+    let out = {
+        let mut refs: Vec<&mut (dyn Instrument + Send)> = stacks
+            .iter_mut()
+            .map(|s| s as &mut (dyn Instrument + Send))
+            .collect();
+        run_sharded(&mut machine, &mut refs)?
+    };
+    Ok(merge_shards(&plan, stacks, out.stats))
+}
+
+/// Fold the per-shard stacks into one [`AppMetrics`]: each family's
+/// result is adopted from the one shard that owned it (plan order — the
+/// shards are disjoint, so this is a disjoint union, not a reduction).
+fn merge_shards(
+    plan: &ShardPlan,
+    stacks: Vec<AnalyzerStack>,
+    exec: ExecStats,
+) -> (AppMetrics, Option<Vec<Region>>) {
+    debug_assert!(
+        plan.shards().iter().map(|s| s.len()).sum::<usize>()
+            == plan.shards().iter().fold(MetricSet::none(), |a, s| a.union(*s)).len(),
+        "shard plan families overlap"
+    );
+    let mut parts = plan.shards().iter().zip(stacks);
+    let (_, first_stack) = parts.next().expect("plan is never empty");
+    let (mut merged, mut regions) = first_stack.finalize(exec.clone());
+    // shard 0's disabled families finalized shape-stable empty; overwrite
+    // exactly the families later shards own
+    for (&subset, stack) in parts {
+        let (m, r) = stack.finalize(exec.clone());
+        adopt(&mut merged, m, subset);
+        if r.is_some() {
+            regions = r;
+        }
+    }
+    merged.exec = exec;
+    (merged, regions)
+}
+
+/// Move the families in `owned` from `src` into `dst`. `spatial` derives
+/// from `reuse`, so it travels with the `Reuse` family.
+fn adopt(dst: &mut AppMetrics, src: AppMetrics, owned: MetricSet) {
+    let AppMetrics {
+        mix,
+        branch,
+        mem_entropy,
+        reuse,
+        spatial,
+        ilp,
+        dlp,
+        bblp,
+        pbblp,
+        traffic,
+        ..
+    } = src;
+    if owned.contains(Metric::Mix) {
+        dst.mix = mix;
+    }
+    if owned.contains(Metric::Branch) {
+        dst.branch = branch;
+    }
+    if owned.contains(Metric::MemEntropy) {
+        dst.mem_entropy = mem_entropy;
+    }
+    if owned.contains(Metric::Reuse) {
+        dst.reuse = reuse;
+        dst.spatial = spatial;
+    }
+    if owned.contains(Metric::Ilp) {
+        dst.ilp = ilp;
+    }
+    if owned.contains(Metric::Dlp) {
+        dst.dlp = dlp;
+    }
+    if owned.contains(Metric::Bblp) {
+        dst.bblp = bblp;
+    }
+    if owned.contains(Metric::Pbblp) {
+        dst.pbblp = pbblp;
+    }
+    if owned.contains(Metric::Traffic) {
+        dst.traffic = traffic;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{profile, profile_select};
+    use crate::ir::ProgramBuilder;
+
+    #[test]
+    fn shard_groups_cover_every_family_exactly_once() {
+        let mut seen = MetricSet::none();
+        let mut count = 0;
+        for group in SHARD_GROUPS {
+            for &m in group {
+                assert!(!seen.contains(m), "{} in two groups", m.name());
+                seen = seen.with(m);
+                count += 1;
+            }
+        }
+        assert!(seen.is_all(), "a family is missing from SHARD_GROUPS");
+        assert_eq!(count, Metric::ALL.len());
+    }
+
+    #[test]
+    fn auto_sizing_follows_the_enabled_families() {
+        // all nine families: one worker per canonical group
+        let all = ShardPlan::new(MetricSet::all(), Workers::Auto);
+        assert_eq!(all.workers(), 4);
+        // a single family collapses to one worker
+        let mix = ShardPlan::new(MetricSet::from_names("mix").unwrap(), Workers::Auto);
+        assert_eq!(mix.workers(), 1);
+        assert_eq!(mix.shards()[0].names(), vec!["mix"]);
+        // two families in the same group still collapse to one worker
+        let tags = ShardPlan::new(MetricSet::from_names("mix,branch").unwrap(), Workers::Auto);
+        assert_eq!(tags.workers(), 1);
+        // families straddling two groups: two workers
+        let two = ShardPlan::new(MetricSet::from_names("mix,ilp").unwrap(), Workers::Auto);
+        assert_eq!(two.workers(), 2);
+        assert_eq!(two.shards()[0].names(), vec!["mix"]);
+        assert_eq!(two.shards()[1].names(), vec!["ilp"]);
+    }
+
+    #[test]
+    fn fixed_sizing_clamps_and_never_leaves_a_shard_empty() {
+        for n in 1..=8 {
+            let plan = ShardPlan::new(MetricSet::all(), Workers::Fixed(n));
+            assert_eq!(plan.workers(), n.min(4), "requested {n}");
+            let mut union = MetricSet::none();
+            let mut total = 0;
+            for shard in plan.shards() {
+                assert!(!shard.is_empty(), "empty shard in a {n}-worker plan");
+                total += shard.len();
+                union = union.union(*shard);
+            }
+            // disjoint cover of the enabled set
+            assert!(union.is_all());
+            assert_eq!(total, Metric::ALL.len());
+        }
+        // more workers than enabled groups: clamp to the group count
+        let mix = ShardPlan::new(MetricSet::from_names("mix").unwrap(), Workers::Fixed(8));
+        assert_eq!(mix.workers(), 1);
+        // zero is nonsense but must not underflow the clamp
+        let zero = ShardPlan::new(MetricSet::all(), Workers::Fixed(0));
+        assert_eq!(zero.workers(), 1);
+    }
+
+    #[test]
+    fn empty_metric_set_plans_one_empty_shard() {
+        let plan = ShardPlan::new(MetricSet::none(), Workers::Auto);
+        assert_eq!(plan.workers(), 1);
+        assert!(plan.shards()[0].is_empty());
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let a = ShardPlan::new(MetricSet::all(), Workers::Fixed(3));
+        let b = ShardPlan::new(MetricSet::all(), Workers::Fixed(3));
+        assert_eq!(a, b);
+    }
+
+    fn tiny_program() -> Program {
+        let mut b = ProgramBuilder::new("tiny");
+        let data: Vec<f64> = (0..64).map(|i| (i % 7) as f64).collect();
+        let a = b.alloc_f64_init("a", &data);
+        let o = b.alloc_f64("o", 64);
+        let n = b.const_i(64);
+        b.counted_loop(n, |b, i| {
+            let v = b.load_f64(a, i);
+            let w = b.fmul(v, v);
+            b.store_f64(o, i, w);
+        });
+        b.finish(None)
+    }
+
+    #[test]
+    fn merged_sharded_metrics_match_inline_at_every_worker_count() {
+        let p = tiny_program();
+        let reference = profile(&p).unwrap();
+        for workers in [Workers::Auto, Workers::Fixed(1), Workers::Fixed(2), Workers::Fixed(3)] {
+            let (m, regions) = profile_sharded_run(&p, MetricSet::all(), workers, false).unwrap();
+            assert!(regions.is_none());
+            assert_eq!(
+                m.pca8_features().map(f64::to_bits),
+                reference.pca8_features().map(f64::to_bits),
+                "{workers:?}"
+            );
+            assert_eq!(m.mix.per_op, reference.mix.per_op);
+            assert_eq!(m.reuse.hist, reference.reuse.hist);
+            assert_eq!(m.traffic, reference.traffic);
+            assert_eq!(m.exec.dyn_instrs, reference.exec.dyn_instrs);
+        }
+    }
+
+    #[test]
+    fn merge_is_deterministic_across_runs() {
+        // worker scheduling varies run to run; the merged result must not
+        let p = tiny_program();
+        let (a, _) = profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), false).unwrap();
+        let (b, _) = profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), false).unwrap();
+        assert_eq!(a.pca8_features().map(f64::to_bits), b.pca8_features().map(f64::to_bits));
+        assert_eq!(a.mix.per_op, b.mix.per_op);
+        assert_eq!(a.mem_entropy.count_of_counts, b.mem_entropy.count_of_counts);
+        assert_eq!(a.traffic, b.traffic);
+    }
+
+    #[test]
+    fn subset_run_keeps_disabled_families_empty() {
+        let p = tiny_program();
+        let sel = MetricSet::from_names("mix,traffic").unwrap();
+        let inline = profile_select(&p, sel).unwrap();
+        let (m, _) = profile_sharded_run(&p, sel, Workers::Auto, false).unwrap();
+        assert_eq!(m.mix.per_op, inline.mix.per_op);
+        assert_eq!(m.traffic, inline.traffic);
+        assert_eq!(m.reuse.accesses, 0);
+        assert_eq!(m.ilp.critical_path, inline.ilp.critical_path);
+    }
+
+    #[test]
+    fn task_trace_rides_the_last_shard() {
+        let p = tiny_program();
+        let (_, regions) = profile_sharded_run(&p, MetricSet::all(), Workers::Auto, true).unwrap();
+        let regions = regions.expect("task trace requested");
+        assert!(!regions.is_empty());
+    }
+}

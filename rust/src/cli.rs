@@ -21,7 +21,7 @@ pub struct Args {
 
 /// Flags that take a value; everything else is boolean.
 const VALUE_FLAGS: &[&str] =
-    &["scale", "seed", "threads", "out", "kernel", "n", "metrics", "pipeline"];
+    &["scale", "seed", "threads", "out", "kernel", "n", "metrics", "pipeline", "workers"];
 
 pub fn parse(argv: &[String]) -> Result<Args> {
     let mut a = Args::default();
@@ -106,11 +106,12 @@ pisa-nmc — Platform-Independent Software Analysis for Near-Memory Computing
 
 USAGE:
   pisa-nmc pipeline [--scale F] [--seed N] [--threads N] [--metrics LIST]
-                    [--pipeline MODE] [--no-pjrt] [--out FILE]
+                    [--pipeline MODE] [--workers N|auto] [--no-pjrt]
+                    [--out FILE]
         full suite: profile 12 kernels, run host+NMC sims, PJRT analytics,
         print every table and figure (writes JSON report with --out)
   pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--metrics LIST]
-                   [--pipeline MODE] [--json]
+                   [--pipeline MODE] [--workers N|auto] [--json]
         profile a single kernel and print its metrics
   pisa-nmc figure {3a|3b|3c|4|5|6|mrc} [pipeline flags]
         regenerate one paper figure (mrc: the miss-ratio-curve extension)
@@ -130,9 +131,17 @@ model needs it). `traffic` is the streaming memory-traffic subsystem:
 one-pass miss-ratio curves (64B lines), shadow caches and bytes/instr.
 
 --pipeline MODE selects event delivery: `inline` (default — analyzers fold
-on the interpreter thread) or `offload` (analyzers fold on a dedicated
-analysis thread, overlapped with interpretation; metrics are bit-identical,
-each app then uses two cores).
+on the interpreter thread), `offload` (analyzers fold on a dedicated
+analysis thread, overlapped with interpretation; each app then uses two
+cores) or `sharded` (analyzers shard by metric family across a pool of
+workers, every chunk broadcast to all of them; each app then uses
+2 + workers cores). Metrics are bit-identical across all modes.
+
+--workers N|auto sizes the sharded analyzer pool (`sharded` only).
+`auto` (default) plans one worker per enabled family group — tags
+(mix/branch), memory lanes (mem_entropy/reuse/traffic), dataflow
+(ilp/dlp), block structure (bblp/pbblp) — so e.g. `--metrics mix`
+collapses to one worker; a fixed N is clamped to the non-empty groups.
 
 Artifacts are searched in ./artifacts (or $PISA_NMC_ARTIFACTS); build them
 with `make artifacts`. --no-pjrt forces the native analytics fallback.
@@ -168,6 +177,14 @@ mod tests {
         let a = args(&["pipeline", "--pipeline", "offload"]);
         assert_eq!(a.get("pipeline"), Some("offload"));
         assert!(parse(&["pipeline".into(), "--pipeline".into()]).is_err());
+    }
+
+    #[test]
+    fn workers_flag_takes_a_value() {
+        let a = args(&["pipeline", "--pipeline", "sharded", "--workers", "3"]);
+        assert_eq!(a.get("pipeline"), Some("sharded"));
+        assert_eq!(a.get("workers"), Some("3"));
+        assert!(parse(&["pipeline".into(), "--workers".into()]).is_err());
     }
 
     #[test]

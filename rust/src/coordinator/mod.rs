@@ -85,6 +85,12 @@ impl PipelineReport {
         j.set("scale", self.scale);
         j.set("seed", self.seed);
         j.set("pipeline_mode", self.mode.name());
+        if let PipelineMode::Sharded { workers } = self.mode {
+            // resolved pool size, not the raw flag: `auto` (and oversized
+            // fixed counts) depend on the enabled families
+            let resolved = crate::analysis::ShardPlan::new(self.metrics, workers).workers();
+            j.set("pipeline_workers", resolved);
+        }
         j.set("engine", self.analytics.engine.name());
         j.set("crosscheck_err", self.analytics.max_crosscheck_err);
         j.set(

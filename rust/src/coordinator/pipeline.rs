@@ -12,15 +12,17 @@
 //! With [`PipelineMode::Offload`] each worker additionally pairs its
 //! interpreter with a dedicated analysis thread (see
 //! [`crate::interp::offload`]), so one app occupies two cores while it
-//! runs — size `--threads` accordingly on small machines.
+//! runs; with [`PipelineMode::Sharded`] each app adds a broadcaster plus
+//! one analyzer worker per planned shard (up to 4 with every family
+//! enabled) — size `--threads` accordingly on small machines.
 
 use std::sync::mpsc;
 use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
-use crate::analysis::{AnalyzerStack, AppMetrics, MetricSet};
-use crate::interp::{run_program_mode, PipelineMode};
+use crate::analysis::{profile_with_tasks, AppMetrics, MetricSet};
+use crate::interp::PipelineMode;
 use crate::sim::{self, EdpComparison, Region};
 use crate::workloads::{registry, scaled_n, Kernel};
 
@@ -59,11 +61,11 @@ pub fn profile_app_select(
 
 /// Profile one kernel: single instrumented execution feeding the selected
 /// analyzers *and* the task-trace collector, then both machine
-/// simulations. This is `analysis::profile_select_mode` plus the
-/// simulation layer — both build the same [`AnalyzerStack`]. `mode`
-/// selects whether the stack folds inline on the interpreter thread or on
-/// a dedicated analysis thread (see [`crate::interp::offload`]); metrics
-/// are bit-identical either way.
+/// simulations. This is `analysis::profile_with_tasks` plus the
+/// simulation layer. `mode` selects whether the analyzers fold inline on
+/// the interpreter thread, on one dedicated analysis thread, or sharded
+/// by metric family across a worker pool (see [`crate::interp::offload`]);
+/// metrics are bit-identical on every path.
 ///
 /// Sim-required families (ILP — see
 /// [`MetricSet::with_simulation_requirements`]) are force-enabled
@@ -77,13 +79,8 @@ pub fn profile_app_mode(
 ) -> Result<AppResult> {
     let metrics = metrics.with_simulation_requirements();
     let prog = k.build(n, seed);
-    crate::ir::verify::verify_ok(&prog);
-
-    let mut stack = AnalyzerStack::new(&prog, metrics).with_task_trace(&prog);
-    let (out, _machine) = run_program_mode(&prog, &mut stack, mode)
+    let (metrics, regions): (AppMetrics, Vec<Region>) = profile_with_tasks(&prog, metrics, mode)
         .with_context(|| format!("running {}", k.info().name))?;
-    let (metrics, regions) = stack.finalize(out.stats);
-    let regions: Vec<Region> = regions.expect("task trace enabled");
 
     // both machine models consume the same region trace
     let ilp256 = metrics
@@ -204,6 +201,43 @@ mod tests {
     #[test]
     fn tiny_suite_runs_offloaded() {
         let rs = run_suite_select(0.05, 7, 2, MetricSet::all(), PipelineMode::Offload).unwrap();
+        assert_eq!(rs.len(), 12);
+        for r in &rs {
+            assert!(r.metrics.exec.dyn_instrs > 0, "{}", r.name);
+            assert!(r.events_per_sec() > 0.0, "{}", r.name);
+        }
+    }
+
+    #[test]
+    fn sharded_app_matches_inline_bit_identically() {
+        use crate::interp::Workers;
+        let k = by_name("gesummv").unwrap();
+        let inline = profile_app(k.as_ref(), 20, 1).unwrap();
+        let sharded = profile_app_mode(
+            k.as_ref(),
+            20,
+            1,
+            MetricSet::all(),
+            PipelineMode::Sharded { workers: Workers::Fixed(3) },
+        )
+        .unwrap();
+        assert_eq!(
+            inline.metrics.pca8_features().map(f64::to_bits),
+            sharded.metrics.pca8_features().map(f64::to_bits)
+        );
+        assert_eq!(inline.metrics.traffic, sharded.metrics.traffic);
+        assert_eq!(inline.metrics.exec.dyn_instrs, sharded.metrics.exec.dyn_instrs);
+        // the same region trace feeds the machine models on both paths
+        assert_eq!(inline.cmp.host.dyn_instrs, sharded.cmp.host.dyn_instrs);
+        assert_eq!(inline.cmp.edp_improvement(), sharded.cmp.edp_improvement());
+        assert!(sharded.events_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn tiny_suite_runs_sharded() {
+        use crate::interp::Workers;
+        let mode = PipelineMode::Sharded { workers: Workers::Auto };
+        let rs = run_suite_select(0.05, 7, 2, MetricSet::all(), mode).unwrap();
         assert_eq!(rs.len(), 12);
         for r in &rs {
             assert!(r.metrics.exec.dyn_instrs > 0, "{}", r.name);

@@ -405,9 +405,28 @@ impl EventChunk {
     }
 
     /// Drop buffered events without delivering them (offload teardown when
-    /// the analysis thread is already gone).
+    /// the analysis thread is already gone, sharded-pool recycling).
     pub(crate) fn clear(&mut self) {
         self.buf.clear();
+    }
+
+    /// Build this chunk's [`ChunkLanes`] view in place, restricted to the
+    /// lanes in `needs`, without delivering or clearing the events. The
+    /// sharded pipeline calls this once per chunk — on the broadcaster
+    /// thread, with the **union** of every shard's
+    /// [`Instrument::lane_needs`] mask — before sharing the chunk
+    /// immutably with all analyzer workers; [`Self::lanes`] then serves
+    /// every worker's sweep.
+    pub fn build_lanes(&mut self, needs: LaneMask) {
+        self.lanes.rebuild_masked(&self.buf, needs);
+    }
+
+    /// The lanes view last built by [`Self::build_lanes`] (or by
+    /// [`Self::flush_into`] for its sink). Readers must only touch lanes
+    /// covered by the mask that built them.
+    #[inline]
+    pub fn lanes(&self) -> &ChunkLanes {
+        &self.lanes
     }
 
     /// Hand the buffered events to `sink` in one chunk call and reset the

@@ -12,4 +12,4 @@ pub use events::{
 };
 pub use machine::{run_program, ExecStats, Machine, Outcome};
 pub use memory::Memory;
-pub use offload::{run_offload, run_program_mode, PipelineMode};
+pub use offload::{run_offload, run_program_mode, sharded::run_sharded, PipelineMode, Workers};

@@ -3,33 +3,66 @@
 //! The inline chunked path ([`Machine::run`]) stalls the interpreter while
 //! the analyzer stack folds each chunk — on analyzer-heavy profiles the
 //! interpreter spends most of its wall time waiting. This module moves the
-//! fold to a dedicated **analysis thread**: the interpreter fills owned
-//! [`EventChunk`]s and ships them over a bounded `sync_channel`; the
-//! analysis thread (which owns the `Instrument` stack for the duration of
-//! the run) flushes each chunk — building its SoA
-//! [`ChunkLanes`](super::events::ChunkLanes) view there, off the
-//! interpreter's critical path — and recycles the empty buffer back over a
-//! return channel. The interpreter produces chunk *N+1* while the
-//! analyzers fold chunk *N*.
+//! fold off the interpreter thread, in two topologies.
+//!
+//! ## Offload: 1 producer + 1 consumer ([`run_offload`])
+//!
+//! The interpreter fills owned [`EventChunk`]s and ships them over a
+//! bounded `sync_channel`; a dedicated analysis thread (which owns the
+//! `Instrument` stack for the duration of the run) flushes each chunk —
+//! building its SoA [`ChunkLanes`](super::events::ChunkLanes) view there,
+//! off the interpreter's critical path — and recycles the empty buffer
+//! back over a return channel. The interpreter produces chunk *N+1* while
+//! the analyzers fold chunk *N*.
+//!
+//! ## Sharded: 1 producer + 1 broadcaster + N workers ([`sharded`])
+//!
+//! With every metric family enabled the single analysis thread becomes
+//! the bottleneck. [`sharded::run_sharded`] fans each chunk out to a small
+//! pool of analyzer **workers**, each owning a disjoint shard of the
+//! analyzer set (the `analysis` layer shards by metric family along the
+//! lane boundaries: tags, memory lanes, event slices):
+//!
+//! ```text
+//!  interpreter ──EventChunk──▶ broadcaster ──Arc<EventChunk>──▶ worker 0 (shard 0)
+//!   (owns the     sync_channel  (builds the   one sync_channel ▶ worker 1 (shard 1)
+//!    machine)     depth 2       union lanes)  per worker       ▶ worker N-1
+//!        ▲                                                          │
+//!        └────────────── countdown-return: each worker sends its ───┘
+//!            Arc back; the producer recycles the buffer when the
+//!            last reference arrives (`Arc::try_unwrap`)
+//! ```
+//!
+//! The broadcaster builds the chunk's lanes **once**, restricted to the
+//! union of every shard's [`Instrument::lane_needs`] mask, then shares the
+//! chunk immutably; no analyzer state is shared between workers, so the
+//! shards need no locks. Ownership of each buffer makes a full cycle:
+//! producer → broadcaster → (shared read-only by all workers) → producer.
 //!
 //! ## Memory and backpressure
 //!
-//! A fixed pool of [`OFFLOAD_POOL_CHUNKS`] owned chunks cycles between the
-//! two threads (double buffering plus queue slack): one in the
-//! interpreter's hands, up to [`OFFLOAD_QUEUE_CHUNKS`] queued, one being
-//! folded. Shipping waits for a recycled buffer, so when the analysis
-//! thread is the slower side the interpreter blocks instead of piling up
+//! Both topologies cycle a fixed pool of owned chunks. Offload:
+//! [`OFFLOAD_POOL_CHUNKS`] buffers — one in the interpreter's hands, up to
+//! [`OFFLOAD_QUEUE_CHUNKS`] queued, one being folded. Sharded:
+//! [`sharded::SHARDED_POOL_CHUNKS`] buffers, with each worker's input
+//! queue bounded separately. Shipping waits for a recycled buffer, so when
+//! the analysis side is slower the interpreter blocks instead of piling up
 //! unbounded trace — memory is bounded by the pool no matter how lopsided
-//! the two sides are (stressed in `rust/tests/prop_chunked.rs`).
+//! the sides are, and a single slow worker stalls the broadcast (and so,
+//! eventually, the interpreter) rather than growing a queue (stressed in
+//! `rust/tests/prop_chunked.rs`).
 //!
 //! ## Equivalence
 //!
-//! Chunks arrive in emission order over a FIFO channel and every analyzer
-//! is a pure fold over the event sequence, so offloaded metrics are
-//! **bit-identical** to the inline chunked and per-event paths — the same
-//! property test gates all three. `ExecStats::wall_s` is rewritten to span
-//! the whole run *including* the analysis thread's drain, so
-//! `events_per_sec` stays comparable across [`PipelineMode`]s.
+//! Chunks arrive in emission order over FIFO channels — the broadcast
+//! preserves that order per worker — and every analyzer is a pure fold
+//! over the event sequence, so offloaded and sharded metrics are
+//! **bit-identical** to the inline chunked and per-event paths — one
+//! property test gates all four. `ExecStats::wall_s` is rewritten to span
+//! the whole run *including* the analysis drain, so `events_per_sec`
+//! stays comparable across [`PipelineMode`]s.
+
+pub mod sharded;
 
 use std::mem;
 use std::sync::mpsc::{self, Receiver, SyncSender};
@@ -49,6 +82,44 @@ pub const OFFLOAD_QUEUE_CHUNKS: usize = 2;
 /// [`OFFLOAD_QUEUE_CHUNKS`] in flight, one being folded.
 pub const OFFLOAD_POOL_CHUNKS: usize = OFFLOAD_QUEUE_CHUNKS + 2;
 
+/// Analyzer-worker pool sizing for [`PipelineMode::Sharded`] — the value
+/// of the CLI `--workers` flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Workers {
+    /// Size the pool from the enabled metric families: one worker per
+    /// non-empty shard group (`analysis::ShardPlan` decides — e.g.
+    /// `--metrics mix` collapses to a single worker).
+    #[default]
+    Auto,
+    /// Ask for exactly this many workers; the planner clamps to the number
+    /// of non-empty family groups so no worker ever idles on an empty
+    /// shard.
+    Fixed(usize),
+}
+
+impl Workers {
+    /// Parse the CLI `--workers` value: `auto` or a positive integer.
+    pub fn from_name(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s == "auto" {
+            return Ok(Workers::Auto);
+        }
+        match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(Workers::Fixed(n)),
+            _ => bail!("--workers expects 'auto' or a positive integer, got '{s}'"),
+        }
+    }
+}
+
+impl std::fmt::Display for Workers {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Workers::Auto => write!(f, "auto"),
+            Workers::Fixed(n) => write!(f, "{n}"),
+        }
+    }
+}
+
 /// How the profiling pipeline delivers chunks to the analyzers. Threaded
 /// CLI (`--pipeline`) → `coordinator::pipeline` → every worker's run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -58,8 +129,15 @@ pub enum PipelineMode {
     #[default]
     Inline,
     /// Analyzers fold on a dedicated thread, overlapped with
-    /// interpretation (fastest for realistic workload sizes).
+    /// interpretation (fastest for realistic single-threaded analysis).
     Offload,
+    /// Analyzers shard by metric family across a pool of workers, each
+    /// chunk broadcast to all of them (fastest when many families are
+    /// enabled; see [`sharded`]).
+    Sharded {
+        /// Worker pool sizing (`--workers`).
+        workers: Workers,
+    },
 }
 
 impl PipelineMode {
@@ -67,56 +145,85 @@ impl PipelineMode {
         match self {
             PipelineMode::Inline => "inline",
             PipelineMode::Offload => "offload",
+            PipelineMode::Sharded { .. } => "sharded",
         }
     }
 
-    /// Parse the CLI `--pipeline` value.
+    /// Parse the CLI `--pipeline` value (`sharded` defaults to
+    /// `--workers auto`; the CLI layers an explicit worker count on top).
     pub fn from_name(s: &str) -> Result<Self> {
         match s.trim() {
             "inline" => Ok(PipelineMode::Inline),
             "offload" => Ok(PipelineMode::Offload),
-            other => bail!("unknown pipeline mode '{other}' (inline|offload)"),
+            "sharded" => Ok(PipelineMode::Sharded { workers: Workers::Auto }),
+            other => bail!("unknown pipeline mode '{other}' (inline|offload|sharded)"),
         }
     }
 }
 
-/// Interpreter-side delivery: fills owned chunks and cycles them through
-/// the channel pair. Mirrors the inline `Chunked` sink's flush points
-/// exactly (block boundaries, mid-giant-block fills, end of run) so chunk
-/// boundaries — and therefore lane sweeps — are identical across modes.
-struct OffloadSink {
+/// Where an off-thread delivery sink reacquires empty chunk buffers — the
+/// one piece that differs between the offload and sharded topologies.
+/// Blocking here is the backpressure: the pool bounds in-flight memory
+/// however slow the analysis side is.
+trait BufferSource {
+    /// A reusable empty buffer, or `None` when the analysis side is gone
+    /// (panic teardown).
+    fn next_buffer(&mut self) -> Option<EventChunk>;
+}
+
+/// Offload topology's source: recycled buffers come back whole over the
+/// analysis thread's return channel.
+struct FreeList(Receiver<EventChunk>);
+
+impl BufferSource for FreeList {
+    fn next_buffer(&mut self) -> Option<EventChunk> {
+        self.0.recv().ok()
+    }
+}
+
+/// Interpreter-side delivery shared by both off-thread topologies: fills
+/// owned chunks and ships them over the full-chunk channel, reacquiring
+/// buffers from the topology-specific [`BufferSource`]. Written once so
+/// the flush points — which mirror the inline `Chunked` sink exactly
+/// (block boundaries, mid-giant-block fills, end of run) — can never
+/// drift between modes: chunk boundaries, and therefore lane sweeps, are
+/// identical everywhere (the cross-mode bit-identity property depends on
+/// this).
+struct CourierSink<S: BufferSource> {
     full: SyncSender<EventChunk>,
-    free: Receiver<EventChunk>,
+    source: S,
     chunk: EventChunk,
-    /// Set when the analysis thread is gone (panic teardown): buffered
-    /// events are dropped and `run_offload` surfaces the join error.
+    /// Set when the analysis side is gone (panic teardown): buffered
+    /// events are dropped and the runner surfaces the join error.
     detached: bool,
 }
 
-impl OffloadSink {
+impl<S: BufferSource> CourierSink<S> {
+    fn new(full: SyncSender<EventChunk>, source: S, capacity: usize) -> Self {
+        CourierSink { full, source, chunk: EventChunk::with_capacity(capacity), detached: false }
+    }
+
     fn ship(&mut self) {
         if self.chunk.is_empty() {
             return;
         }
         if !self.detached {
-            // backpressure: wait for a recycled buffer before shipping —
-            // the pool bounds in-flight memory however slow the analyzers
-            match self.free.recv() {
-                Ok(fresh) => {
+            match self.source.next_buffer() {
+                Some(fresh) => {
                     let full = mem::replace(&mut self.chunk, fresh);
                     if self.full.send(full).is_err() {
                         self.detached = true;
                     }
                     return;
                 }
-                Err(_) => self.detached = true,
+                None => self.detached = true,
             }
         }
         self.chunk.clear();
     }
 }
 
-impl EventSink for OffloadSink {
+impl<S: BufferSource> EventSink for CourierSink<S> {
     #[inline]
     fn event(&mut self, ev: TraceEvent) {
         // a single block larger than the buffer still ships safely mid-block
@@ -163,12 +270,7 @@ pub fn run_offload(
                 let _ = free_tx.send(chunk);
             }
         });
-        let mut delivery = OffloadSink {
-            full: full_tx,
-            free: free_rx,
-            chunk: EventChunk::with_capacity(capacity),
-            detached: false,
-        };
+        let mut delivery = CourierSink::new(full_tx, FreeList(free_rx), capacity);
         let run = machine.run_with(&mut delivery);
         // closing the chunk channel lets the worker drain what's in flight
         // and exit; join before returning so all events are folded
@@ -189,7 +291,12 @@ pub fn run_offload(
 
 /// One-shot convenience mirroring [`super::machine::run_program`], with the
 /// delivery mode as a knob: build a machine, run, return outcome and
-/// machine (for post-run buffer inspection).
+/// machine (for post-run buffer inspection). Note that `Sharded` here runs
+/// the whole undivided `sink` on a **single** worker (the broadcast
+/// topology with one consumer — the `workers` sizing is ignored):
+/// family-level sharding needs one stack per shard, which is the
+/// `analysis` layer's job (`analysis::profile_sharded`,
+/// `analysis::ShardPlan`). Metrics are bit-identical in every mode.
 pub fn run_program_mode<'p>(
     prog: &'p Program,
     sink: &mut (dyn Instrument + Send),
@@ -199,6 +306,10 @@ pub fn run_program_mode<'p>(
     let out = match mode {
         PipelineMode::Inline => m.run(sink)?,
         PipelineMode::Offload => run_offload(&mut m, sink)?,
+        // a single undivided sink: the full sharded topology with one
+        // worker (family sharding is the analysis layer's job — see
+        // `analysis::ShardPlan` for the multi-stack entry points)
+        PipelineMode::Sharded { .. } => sharded::run_sharded(&mut m, &mut [sink])?,
     };
     Ok((out, m))
 }
@@ -227,8 +338,24 @@ mod tests {
     fn mode_parsing_roundtrips() {
         assert_eq!(PipelineMode::from_name("inline").unwrap(), PipelineMode::Inline);
         assert_eq!(PipelineMode::from_name(" offload ").unwrap(), PipelineMode::Offload);
+        assert_eq!(
+            PipelineMode::from_name("sharded").unwrap(),
+            PipelineMode::Sharded { workers: Workers::Auto }
+        );
         assert!(PipelineMode::from_name("bogus").is_err());
         assert_eq!(PipelineMode::default().name(), "inline");
+        assert_eq!(PipelineMode::Sharded { workers: Workers::Fixed(3) }.name(), "sharded");
+    }
+
+    #[test]
+    fn workers_parsing() {
+        assert_eq!(Workers::from_name("auto").unwrap(), Workers::Auto);
+        assert_eq!(Workers::from_name(" 4 ").unwrap(), Workers::Fixed(4));
+        assert!(Workers::from_name("0").is_err());
+        assert!(Workers::from_name("-1").is_err());
+        assert!(Workers::from_name("many").is_err());
+        assert_eq!(Workers::Auto.to_string(), "auto");
+        assert_eq!(Workers::Fixed(2).to_string(), "2");
     }
 
     #[test]
@@ -254,10 +381,15 @@ mod tests {
         let p = loop_program(100);
         let mut a = Counter::default();
         let mut b = Counter::default();
+        let mut c = Counter::default();
         let (o1, _) = run_program_mode(&p, &mut a, PipelineMode::Inline).unwrap();
         let (o2, _) = run_program_mode(&p, &mut b, PipelineMode::Offload).unwrap();
+        let (o3, _) =
+            run_program_mode(&p, &mut c, PipelineMode::Sharded { workers: Workers::Auto }).unwrap();
         assert_eq!(o1.stats.dyn_instrs, o2.stats.dyn_instrs);
+        assert_eq!(o1.stats.dyn_instrs, o3.stats.dyn_instrs);
         assert_eq!(a.instrs, b.instrs);
+        assert_eq!(a.instrs, c.instrs);
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Sharded analysis: broadcast each event chunk to N analyzer workers.
+//!
+//! [`run_sharded`] generalizes the offload topology from one consumer to a
+//! pool: the interpreter ships owned [`EventChunk`]s to a **broadcaster**
+//! thread, which builds the chunk's SoA lanes once — restricted to the
+//! union of every shard's [`Instrument::lane_needs`] mask — wraps the
+//! chunk in an `Arc`, and clones it to one bounded channel per worker.
+//! Each worker owns one shard (an `Instrument` that folds a disjoint
+//! subset of the analyzers — see `analysis::ShardPlan` for the
+//! family-level policy) and sweeps the shared events/lanes read-only, so
+//! no analyzer state ever crosses a thread boundary.
+//!
+//! ## Countdown-return recycling
+//!
+//! The broadcaster's **final send moves its own handle**, so once a chunk
+//! is distributed exactly `N` `Arc` references exist — one per worker,
+//! never a stray broadcaster reference that could race the countdown.
+//! Each worker, done folding, sends its reference back to the producer
+//! over a shared return channel. The producer drains that channel when it
+//! needs a fresh buffer: the first `N-1` references of a chunk fail
+//! `Arc::try_unwrap` and are dropped here; the `N`-th — the countdown
+//! hitting zero — unwraps back into an owned buffer, which is cleared and
+//! refilled. No atomic counters beyond the `Arc`'s own, no locks, no
+//! spinning.
+//!
+//! The pool is fixed at [`SHARDED_POOL_CHUNKS`] buffers, so when every
+//! buffer is in flight the producer blocks on the return channel —
+//! exactly the offload path's backpressure, now gated on the *slowest*
+//! worker (its bounded input queue stalls the broadcaster, which stalls
+//! the producer's channel). Event order per worker is the emission order:
+//! one FIFO hop producer→broadcaster and one broadcaster→worker, so every
+//! shard folds the same sequence the inline path would hand it —
+//! bit-identical metrics (gated by `rust/tests/prop_chunked.rs`).
+
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::super::events::{EventChunk, Instrument, LaneMask};
+use super::super::machine::{Machine, Outcome};
+use super::{BufferSource, CourierSink, OFFLOAD_QUEUE_CHUNKS};
+
+/// Bound of each worker's input channel: how many chunks may queue ahead
+/// of one shard before the broadcaster blocks on it.
+pub const SHARDED_QUEUE_CHUNKS: usize = 2;
+
+/// Owned chunks cycling through the sharded pipeline: one being filled,
+/// up to [`OFFLOAD_QUEUE_CHUNKS`] queued to the broadcaster, one being
+/// laned, up to [`SHARDED_QUEUE_CHUNKS`] + 1 fanned out to the workers.
+/// Independent of the worker count — workers share references, not
+/// copies, so N does not multiply resident trace memory.
+pub const SHARDED_POOL_CHUNKS: usize = OFFLOAD_QUEUE_CHUNKS + SHARDED_QUEUE_CHUNKS + 3;
+
+/// Sharded topology's [`BufferSource`]: primed spares first, then the
+/// countdown-return channel — blocking when the whole pool is in flight.
+struct CountdownPool {
+    returned: Receiver<Arc<EventChunk>>,
+    /// Buffers not yet inducted into circulation (pool priming).
+    spares: Vec<EventChunk>,
+}
+
+impl BufferSource for CountdownPool {
+    fn next_buffer(&mut self) -> Option<EventChunk> {
+        if let Some(c) = self.spares.pop() {
+            return Some(c);
+        }
+        loop {
+            match self.returned.recv() {
+                Ok(arc) => {
+                    if let Ok(mut chunk) = Arc::try_unwrap(arc) {
+                        // last reference: every worker has folded it
+                        chunk.clear();
+                        return Some(chunk);
+                    }
+                    // countdown not at zero yet — another worker still
+                    // holds this chunk; our reference is dropped, keep
+                    // draining
+                }
+                Err(_) => return None,
+            }
+        }
+    }
+}
+
+/// Execute `machine` to completion with each chunk broadcast to one
+/// worker thread per shard. Every shard folds the complete event stream
+/// in emission order; shards are moved to their worker threads for the
+/// duration of the run (hence `Send`) and handed back — through the
+/// borrows — when this returns. With a single shard this degenerates to
+/// the offload topology plus one hop; metrics are bit-identical to
+/// [`Machine::run`] in every configuration.
+pub fn run_sharded(
+    machine: &mut Machine<'_>,
+    shards: &mut [&mut (dyn Instrument + Send)],
+) -> Result<Outcome> {
+    if shards.is_empty() {
+        bail!("sharded pipeline needs at least one analyzer shard");
+    }
+    let capacity = machine.chunk_capacity();
+    // the broadcaster builds exactly the lanes some shard will read
+    let union_needs = shards.iter().fold(LaneMask::NONE, |acc, s| acc | s.lane_needs());
+    let n_workers = shards.len();
+
+    let t0 = Instant::now();
+    let mut outcome = std::thread::scope(|s| -> Result<Outcome> {
+        let (full_tx, full_rx) = mpsc::sync_channel::<EventChunk>(OFFLOAD_QUEUE_CHUNKS);
+        let (return_tx, return_rx) = mpsc::channel::<Arc<EventChunk>>();
+
+        let mut worker_txs: Vec<SyncSender<Arc<EventChunk>>> = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for shard in shards.iter_mut() {
+            let (tx, rx) = mpsc::sync_channel::<Arc<EventChunk>>(SHARDED_QUEUE_CHUNKS);
+            worker_txs.push(tx);
+            let return_tx = return_tx.clone();
+            workers.push(s.spawn(move || {
+                // the worker owns its shard until the broadcast channel
+                // closes; lanes were pre-built, so `on_chunk_lanes` is the
+                // one delivery every shard takes (a lane-less shard's
+                // default forwards to `on_chunk`)
+                while let Ok(chunk) = rx.recv() {
+                    shard.on_chunk_lanes(chunk.events(), chunk.lanes());
+                    // countdown-return: hand our reference to the producer;
+                    // it may already be gone on error teardown
+                    let _ = return_tx.send(chunk);
+                }
+            }));
+        }
+        // the producer must see the channel close when the workers exit
+        drop(return_tx);
+
+        let broadcaster = s.spawn(move || {
+            let (last_tx, rest_txs) = worker_txs.split_last().expect("at least one worker");
+            while let Ok(mut chunk) = full_rx.recv() {
+                // no lane-capable shard → skip the per-event lane sweep
+                // entirely, exactly as the inline/offload flush would
+                if !union_needs.is_empty() {
+                    chunk.build_lanes(union_needs);
+                }
+                let shared = Arc::new(chunk);
+                for tx in rest_txs {
+                    if tx.send(Arc::clone(&shared)).is_err() {
+                        // a worker died (panic teardown): stop broadcasting
+                        // so the producer detaches and the join surfaces it
+                        return;
+                    }
+                }
+                // the final send MOVES our handle: after distribution
+                // exactly one reference per worker exists, so the
+                // producer's countdown can never race a stray broadcaster
+                // reference into deallocating (instead of recycling) the
+                // buffer
+                if last_tx.send(shared).is_err() {
+                    return;
+                }
+            }
+        });
+
+        let pool = CountdownPool {
+            returned: return_rx,
+            spares: (0..SHARDED_POOL_CHUNKS - 1)
+                .map(|_| EventChunk::with_capacity(capacity))
+                .collect(),
+        };
+        let mut delivery = CourierSink::new(full_tx, pool, capacity);
+        let run = machine.run_with(&mut delivery);
+        // closing the chunk channel lets the broadcaster and workers drain
+        // what's in flight and exit; join before returning so every event
+        // is folded
+        drop(delivery);
+        if let Err(payload) = broadcaster.join() {
+            std::panic::resume_unwind(payload);
+        }
+        for w in workers {
+            if let Err(payload) = w.join() {
+                // a shard panic must surface with its original message,
+                // exactly as it would on the inline path
+                std::panic::resume_unwind(payload);
+            }
+        }
+        run
+    })?;
+    // report the overlap-inclusive wall time (interpretation + broadcast +
+    // the slowest worker's drain) so events_per_sec stays honest across
+    // pipeline modes
+    outcome.stats.wall_s = t0.elapsed().as_secs_f64();
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::events::{ChunkLanes, Counter, TraceEvent};
+    use crate::ir::{Program, ProgramBuilder};
+
+    fn loop_program(n: i64) -> Program {
+        let mut b = ProgramBuilder::new("sh");
+        let a = b.alloc_f64("a", 64);
+        let len = b.const_i(64);
+        let trip = b.const_i(n);
+        b.counted_loop(trip, |b, i| {
+            let idx = b.rem(i, len);
+            let v = b.load_f64(a, idx);
+            let w = b.fadd(v, v);
+            b.store_f64(a, idx, w);
+        });
+        b.finish(None)
+    }
+
+    fn run_counters(p: &Program, n_shards: usize) -> (Outcome, Vec<Counter>) {
+        let mut counters = vec![Counter::default(); n_shards];
+        let out = {
+            let mut refs: Vec<&mut (dyn Instrument + Send)> = counters
+                .iter_mut()
+                .map(|c| c as &mut (dyn Instrument + Send))
+                .collect();
+            run_sharded(&mut Machine::new(p).unwrap(), &mut refs).unwrap()
+        };
+        (out, counters)
+    }
+
+    #[test]
+    fn every_shard_sees_the_full_stream() {
+        let p = loop_program(5000);
+        let mut inline = Counter::default();
+        let o1 = Machine::new(&p).unwrap().run(&mut inline).unwrap();
+        for n_shards in [1, 2, 3, 5] {
+            let (o2, counters) = run_counters(&p, n_shards);
+            assert_eq!(o1.stats.dyn_instrs, o2.stats.dyn_instrs, "{n_shards} shards");
+            assert_eq!(o1.stats.dyn_blocks, o2.stats.dyn_blocks);
+            for (i, c) in counters.iter().enumerate() {
+                assert_eq!(
+                    (c.instrs, c.blocks, c.branches, c.loads, c.stores),
+                    (inline.instrs, inline.blocks, inline.branches, inline.loads, inline.stores),
+                    "shard {i} of {n_shards}"
+                );
+            }
+            assert!(o2.stats.wall_s > 0.0);
+            assert!(o2.stats.events_per_sec() > 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_shards_is_an_error() {
+        let p = loop_program(4);
+        let mut refs: Vec<&mut (dyn Instrument + Send)> = Vec::new();
+        assert!(run_sharded(&mut Machine::new(&p).unwrap(), &mut refs).is_err());
+    }
+
+    #[test]
+    fn interpreter_error_propagates_through_sharded() {
+        let mut b = ProgramBuilder::new("dz");
+        let x = b.const_i(1);
+        let z = b.const_i(0);
+        b.div(x, z);
+        let p = b.finish(None);
+        let mut c1 = Counter::default();
+        let mut c2 = Counter::default();
+        let mut refs: Vec<&mut (dyn Instrument + Send)> = vec![&mut c1, &mut c2];
+        assert!(run_sharded(&mut Machine::new(&p).unwrap(), &mut refs).is_err());
+    }
+
+    #[test]
+    fn lane_union_covers_every_shard() {
+        // one tags-only shard + one addrs-only shard: the broadcast must
+        // build both lanes, and each shard must see its own lane populated
+        struct TagsOnly {
+            events_seen: u64,
+        }
+        impl Instrument for TagsOnly {
+            fn on_event(&mut self, _ev: &TraceEvent) {}
+            fn on_chunk_lanes(&mut self, events: &[TraceEvent], lanes: &ChunkLanes) {
+                assert_eq!(lanes.len(), events.len(), "tags lane must be built");
+                self.events_seen += lanes.len() as u64;
+            }
+            fn wants_lanes(&self) -> bool {
+                true
+            }
+            fn lane_needs(&self) -> LaneMask {
+                LaneMask::TAGS
+            }
+        }
+        struct AddrsOnly {
+            mem_seen: u64,
+        }
+        impl Instrument for AddrsOnly {
+            fn on_event(&mut self, _ev: &TraceEvent) {}
+            fn on_chunk_lanes(&mut self, _events: &[TraceEvent], lanes: &ChunkLanes) {
+                self.mem_seen += lanes.addrs().len() as u64;
+            }
+            fn wants_lanes(&self) -> bool {
+                true
+            }
+            fn lane_needs(&self) -> LaneMask {
+                LaneMask::ADDRS
+            }
+        }
+        let p = loop_program(2000);
+        let mut inline = Counter::default();
+        Machine::new(&p).unwrap().run(&mut inline).unwrap();
+        let mut tags = TagsOnly { events_seen: 0 };
+        let mut addrs = AddrsOnly { mem_seen: 0 };
+        {
+            let mut refs: Vec<&mut (dyn Instrument + Send)> = vec![&mut tags, &mut addrs];
+            run_sharded(&mut Machine::new(&p).unwrap(), &mut refs).unwrap();
+        }
+        assert_eq!(tags.events_seen, inline.instrs + inline.blocks + inline.branches);
+        assert_eq!(addrs.mem_seen, inline.loads + inline.stores);
+    }
+}

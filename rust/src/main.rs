@@ -8,7 +8,7 @@ use anyhow::{bail, Result};
 use pisa_nmc::analysis::MetricSet;
 use pisa_nmc::cli::{self, Args};
 use pisa_nmc::coordinator::{self, figures};
-use pisa_nmc::interp::PipelineMode;
+use pisa_nmc::interp::{PipelineMode, Workers};
 use pisa_nmc::report::save_json;
 use pisa_nmc::runtime::Runtime;
 use pisa_nmc::workloads;
@@ -52,11 +52,21 @@ fn metric_set(args: &Args) -> Result<MetricSet> {
     }
 }
 
-/// Parse the `--pipeline` event-delivery mode (default: inline).
+/// Parse the `--pipeline` event-delivery mode (default: inline) and, for
+/// the sharded mode, the `--workers` pool size (default: auto).
 fn pipeline_mode(args: &Args) -> Result<PipelineMode> {
-    match args.get("pipeline") {
-        Some(name) => PipelineMode::from_name(name),
-        None => Ok(PipelineMode::Inline),
+    let mode = match args.get("pipeline") {
+        Some(name) => PipelineMode::from_name(name)?,
+        None => PipelineMode::Inline,
+    };
+    match (args.get("workers"), mode) {
+        (None, mode) => Ok(mode),
+        (Some(w), PipelineMode::Sharded { .. }) => {
+            Ok(PipelineMode::Sharded { workers: Workers::from_name(w)? })
+        }
+        (Some(_), mode) => {
+            bail!("--workers applies only to --pipeline sharded (got '{}')", mode.name())
+        }
     }
 }
 

@@ -1,23 +1,28 @@
 //! Pipeline equivalence properties: for seeded random programs from
 //! `testkit`, profiling through the chunked `EventChunk` lane-swept hot
-//! path **and** through the offloaded analysis thread produces
-//! **bit-identical** `AppMetrics` to the per-event reference path — pca8
-//! feature vectors, entropy histograms (count-of-counts), reuse-distance
-//! CDFs, instruction mix, ILP windows, BBLP/PBBLP, the memory-traffic
-//! family (MRC miss counts/ratios, knee, byte accounting, shadow-cache
-//! counters) and the dynamic-count stats all compared exactly. This is the safety net under every tuned
-//! `on_chunk`/`on_chunk_lanes` implementation and under the offload
-//! channel protocol: any reordering or lost/duplicated event — on either
-//! thread — shows up here as a bit mismatch.
+//! path, through the offloaded analysis thread **and** through the
+//! family-sharded analyzer worker pool produces **bit-identical**
+//! `AppMetrics` to the per-event reference path — pca8 feature vectors,
+//! entropy histograms (count-of-counts), reuse-distance CDFs, instruction
+//! mix, ILP windows, BBLP/PBBLP, the memory-traffic family (MRC miss
+//! counts/ratios, knee, byte accounting, shadow-cache counters) and the
+//! dynamic-count stats all compared exactly. This is the safety net under
+//! every tuned `on_chunk`/`on_chunk_lanes` implementation, under the
+//! offload channel protocol and under the sharded broadcast +
+//! countdown-return recycling: any reordering or lost/duplicated event —
+//! on any thread — shows up here as a bit mismatch.
 //!
-//! The backpressure stress at the bottom deliberately makes the analysis
-//! thread the slow side, so the bounded chunk pool must throttle the
-//! interpreter without deadlocking or dropping events.
+//! The backpressure stresses at the bottom deliberately make the analysis
+//! side the slow one (the single offload thread, then one shard of the
+//! sharded pool), so the bounded chunk pool must throttle the interpreter
+//! without deadlocking or dropping events.
 
 use std::time::Duration;
 
-use pisa_nmc::analysis::{profile, profile_offload, profile_per_event, AppMetrics};
-use pisa_nmc::interp::{run_offload, Counter, Instrument, Machine, TraceEvent};
+use pisa_nmc::analysis::{
+    profile, profile_offload, profile_per_event, profile_sharded, AppMetrics,
+};
+use pisa_nmc::interp::{run_offload, run_sharded, Counter, Instrument, Machine, TraceEvent};
 use pisa_nmc::prop_assert;
 use pisa_nmc::testkit::{check_seeded, random_program};
 
@@ -165,7 +170,23 @@ fn offload_profile_is_bit_identical_to_inline() {
 }
 
 #[test]
-fn all_three_paths_bit_identical_on_real_kernels() {
+fn sharded_profile_is_bit_identical_to_inline() {
+    // the fourth delivery path: analyzers sharded by family across a
+    // worker pool, each chunk broadcast to every worker over the
+    // countdown-return pool — same bits, every seed
+    check_seeded("sharded == inline", 0x54A2, 24, |rng| {
+        let p = random_program(rng);
+        let sharded = profile_sharded(&p).map_err(|e| e.to_string())?;
+        let inline = profile(&p).map_err(|e| e.to_string())?;
+        assert_bit_identical(&sharded, &inline)?;
+        // and transitively against the per-event reference
+        let reference = profile_per_event(&p).map_err(|e| e.to_string())?;
+        assert_bit_identical(&sharded, &reference)
+    });
+}
+
+#[test]
+fn all_four_paths_bit_identical_on_real_kernels() {
     // the suite kernels exercise nested loops, reductions and irregular
     // access patterns at sizes spanning several chunk flushes
     for (name, n) in [("gesummv", 24), ("atax", 24), ("bfs", 24), ("kmeans", 12)] {
@@ -174,11 +195,15 @@ fn all_three_paths_bit_identical_on_real_kernels() {
         let chunked = profile(&p).unwrap();
         let reference = profile_per_event(&p).unwrap();
         let offloaded = profile_offload(&p).unwrap();
+        let sharded = profile_sharded(&p).unwrap();
         if let Err(msg) = assert_bit_identical(&chunked, &reference) {
             panic!("{name} (chunked vs per-event): {msg}");
         }
         if let Err(msg) = assert_bit_identical(&offloaded, &chunked) {
             panic!("{name} (offload vs chunked): {msg}");
+        }
+        if let Err(msg) = assert_bit_identical(&sharded, &chunked) {
+            panic!("{name} (sharded vs chunked): {msg}");
         }
     }
 }
@@ -249,4 +274,53 @@ fn offload_backpressure_with_slow_analyzer_loses_nothing() {
     // the offload wall clock includes the analysis drain, so the slow
     // analyzer's sleeps are visible in the reported throughput
     assert!(offl.stats.wall_s >= slow.chunks as f64 * 0.001);
+}
+
+#[test]
+fn sharded_backpressure_with_one_slow_worker_loses_nothing() {
+    // same stress through the sharded topology: one deliberately slow
+    // shard next to two fast ones. The slow worker's bounded input queue
+    // must stall the broadcaster — and through the countdown-return pool,
+    // the interpreter — without deadlocking, and every shard must still
+    // fold every event in order.
+    use pisa_nmc::ir::ProgramBuilder;
+    let mut b = ProgramBuilder::new("stress_sharded");
+    let a = b.alloc_f64("a", 256);
+    let len = b.const_i(256);
+    let n = b.const_i(40_000);
+    b.counted_loop(n, |b, i| {
+        let idx = b.rem(i, len);
+        let v = b.load_f64(a, idx);
+        let w = b.fadd(v, v);
+        b.store_f64(a, idx, w);
+    });
+    let p = b.finish(None);
+
+    let mut fast = Counter::default();
+    let inline = Machine::new(&p).unwrap().run(&mut fast).unwrap();
+
+    let mut slow = SlowCounter {
+        inner: Counter::default(),
+        delay: Duration::from_millis(1),
+        chunks: 0,
+    };
+    let mut c1 = Counter::default();
+    let mut c2 = Counter::default();
+    let out = {
+        let mut shards: Vec<&mut (dyn Instrument + Send)> = vec![&mut slow, &mut c1, &mut c2];
+        run_sharded(&mut Machine::new(&p).unwrap(), &mut shards).unwrap()
+    };
+
+    assert!(slow.chunks > 50, "expected many chunk broadcasts, got {}", slow.chunks);
+    assert_eq!(inline.stats.dyn_instrs, out.stats.dyn_instrs);
+    let want = (fast.instrs, fast.blocks, fast.branches, fast.loads, fast.stores);
+    for (who, c) in [("slow", &slow.inner), ("fast1", &c1), ("fast2", &c2)] {
+        assert_eq!(
+            want,
+            (c.instrs, c.blocks, c.branches, c.loads, c.stores),
+            "{who} shard dropped or duplicated events"
+        );
+    }
+    // the sharded wall clock includes the slowest worker's drain
+    assert!(out.stats.wall_s >= slow.chunks as f64 * 0.001);
 }
