@@ -101,10 +101,19 @@ fn main() -> anyhow::Result<()> {
         run_with(&prog, &mut a);
         std::hint::black_box(a.finalize());
     });
-    bench("traffic_sweep (MRC + 3 shadow caches + bytes)", 1, 3, Some((n, "instr")), || {
+    bench("traffic_sweep (MRC + 3-level hierarchy + bytes)", 1, 3, Some((n, "instr")), || {
         // the traffic subsystem alone, sweeping the addr/size/store lanes:
-        // one Olken stack at 64B lines + the shadow bank + byte tallies
+        // one Olken stack at 64B lines + the L1→L2→LLC replay + byte tallies
         let mut a = pisa_nmc::traffic::TrafficAnalyzer::new();
+        run_with(&prog, &mut a);
+        std::hint::black_box(a.finalize(n));
+    });
+    bench("traffic_sweep (exclusive hierarchy)", 1, 3, Some((n, "instr")), || {
+        // the exclusive policy moves lines between levels on every lower
+        // hit — measure its cost next to the inclusive arm above
+        let mut a = pisa_nmc::traffic::TrafficAnalyzer::with_policy(
+            pisa_nmc::traffic::HierarchyPolicy::Exclusive,
+        );
         run_with(&prog, &mut a);
         std::hint::black_box(a.finalize(n));
     });

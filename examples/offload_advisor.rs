@@ -8,8 +8,10 @@
 //!   3. recommend offload candidates from the platform-independent metrics
 //!      alone (the paper's thesis: metrics predict NMC suitability) — now
 //!      including the `traffic` subsystem's data-movement signals: bytes
-//!      per instruction and the miss-ratio-curve knee (NMPO's offload
-//!      model ranks by exactly this memory-traffic behavior),
+//!      per instruction, *post-hierarchy* DRAM bytes per instruction (what
+//!      actually crosses the L1→L2→LLC replay — NMPO's offload model ranks
+//!      by exactly this residual memory traffic) and the slope-based
+//!      miss-ratio-curve knee,
 //!   4. validate the recommendation by simulating each app on both the
 //!      Power9-class host and the 32-PE HMC NMC system, reporting the
 //!      paper's headline metric: EDP improvement, and the Spearman rank
@@ -56,6 +58,7 @@ fn main() -> anyhow::Result<()> {
         "PBBLP",
         "spat_8B_16B",
         "B/instr",
+        "DRAM B/instr",
         "MRC knee",
         "PC1",
         "recommend",
@@ -75,6 +78,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.0}", a.metrics.pbblp.pbblp),
             format!("{:.3}", a.metrics.spatial.spat_8b_16b()),
             format!("{:.2}", tr.bytes_per_instr()),
+            format!("{:.3}", tr.dram_bytes_per_instr()),
             match tr.mrc_knee_bytes {
                 Some(b) => pisa_nmc::traffic::capacity_label(b),
                 None => "–".into(),
@@ -90,12 +94,16 @@ fn main() -> anyhow::Result<()> {
     let pc1: Vec<f64> = (0..apps.len()).map(|i| analytics.pca.scores[i][0]).collect();
     let edps: Vec<f64> = apps.iter().map(|a| a.cmp.edp_improvement()).collect();
     // the traffic subsystem's suitability signals, ranked against the
-    // simulated outcome exactly like PC1: data movement per instruction
-    // (more movement → more to gain near memory) and the MRC knee (a
-    // bigger knee capacity → cache-hostile working set; knee-less flat
+    // simulated outcome exactly like PC1: raw data movement per
+    // instruction, the *post-hierarchy* DRAM bytes per instruction (the
+    // traffic the L1→L2→LLC replay could not absorb — the residual an NMC
+    // system would actually serve from its stacked DRAM) and the MRC knee
+    // (a bigger knee capacity → cache-hostile working set; knee-less flat
     // curves rank below the family when the footprint fits the smallest
     // capacity and past it otherwise — see knee_or_sentinel)
     let bpi: Vec<f64> = apps.iter().map(|a| a.metrics.traffic.bytes_per_instr()).collect();
+    let dram_bpi: Vec<f64> =
+        apps.iter().map(|a| a.metrics.traffic.dram_bytes_per_instr()).collect();
     let knee: Vec<f64> = apps.iter().map(|a| a.metrics.traffic.knee_or_sentinel()).collect();
     println!(
         "\nmetric→EDP agreement: {agree}/{} apps;  Spearman(PC1, EDP improvement) = {:.2}",
@@ -103,8 +111,10 @@ fn main() -> anyhow::Result<()> {
         spearman(&pc1, &edps)
     );
     println!(
-        "traffic signals:      Spearman(bytes/instr, EDP) = {:.2};  Spearman(MRC knee, EDP) = {:.2}",
+        "traffic signals:      Spearman(bytes/instr, EDP) = {:.2};  \
+         Spearman(DRAM bytes/instr, EDP) = {:.2};  Spearman(MRC knee, EDP) = {:.2}",
         spearman(&bpi, &edps),
+        spearman(&dram_bpi, &edps),
         spearman(&knee, &edps)
     );
     println!(

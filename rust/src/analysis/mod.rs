@@ -71,7 +71,7 @@ use crate::interp::{
 };
 use crate::ir::Program;
 use crate::sim::{Region, TaskTraceCollector};
-use crate::traffic::{TrafficAnalyzer, TrafficMetrics};
+use crate::traffic::{HierarchyPolicy, TrafficAnalyzer, TrafficMetrics};
 use crate::util::Json;
 
 /// All §II metrics for one application run (PISA's JSON result object),
@@ -107,7 +107,7 @@ pub enum Metric {
     Bblp = 6,
     Pbblp = 7,
     /// The memory-traffic subsystem ([`crate::traffic`]): miss-ratio
-    /// curves, shadow caches, byte-traffic accounting.
+    /// curves, the cache-hierarchy replay, byte-traffic accounting.
     Traffic = 8,
 }
 
@@ -265,7 +265,7 @@ pub struct AnalyzerStack {
     dlp: DlpAnalyzer,
     bblp: BblpAnalyzer,
     pbblp: PbblpAnalyzer,
-    /// Allocated only when the family is enabled — the shadow-cache bank
+    /// Allocated only when the family is enabled — the hierarchy replay
     /// is the one analyzer with a non-trivial construction cost (~37k
     /// cache-line slots), so subset runs must not pay for it.
     traffic: Option<TrafficAnalyzer>,
@@ -278,9 +278,17 @@ pub struct AnalyzerStack {
 
 impl AnalyzerStack {
     /// Build the stack for `prog`, feeding only the selected metric
-    /// families. Construction is cheap; disabled analyzers simply never
-    /// receive events and finalize to empty results.
+    /// families (default inclusive hierarchy for the `traffic` family).
+    /// Construction is cheap; disabled analyzers simply never receive
+    /// events and finalize to empty results.
     pub fn new(prog: &Program, metrics: MetricSet) -> Self {
+        Self::new_with(prog, metrics, HierarchyPolicy::default())
+    }
+
+    /// [`AnalyzerStack::new`] with the traffic hierarchy's replay policy —
+    /// the CLI `--hierarchy` flag ends up here on every delivery path
+    /// (including each sharded worker's per-shard stack).
+    pub fn new_with(prog: &Program, metrics: MetricSet, hierarchy: HierarchyPolicy) -> Self {
         let n_regs = prog.func.n_regs;
         AnalyzerStack {
             name: prog.func.name.clone(),
@@ -293,7 +301,9 @@ impl AnalyzerStack {
             dlp: DlpAnalyzer::for_program(prog),
             bblp: BblpAnalyzer::new(n_regs),
             pbblp: PbblpAnalyzer::new(prog),
-            traffic: metrics.contains(Metric::Traffic).then(TrafficAnalyzer::new),
+            traffic: metrics
+                .contains(Metric::Traffic)
+                .then(|| TrafficAnalyzer::with_policy(hierarchy)),
             tasks: None,
             lanes: ChunkLanes::default(),
         }
@@ -473,8 +483,13 @@ enum Delivery {
     Sharded(Workers),
 }
 
-fn profile_impl(prog: &Program, metrics: MetricSet, delivery: Delivery) -> Result<AppMetrics> {
-    Ok(profile_run(prog, metrics, delivery, false)?.0)
+fn profile_impl(
+    prog: &Program,
+    metrics: MetricSet,
+    delivery: Delivery,
+    hierarchy: HierarchyPolicy,
+) -> Result<AppMetrics> {
+    Ok(profile_run(prog, metrics, delivery, hierarchy, false)?.0)
 }
 
 /// The one implementation every profiling entry point lands on: run
@@ -482,18 +497,21 @@ fn profile_impl(prog: &Program, metrics: MetricSet, delivery: Delivery) -> Resul
 /// region/task trace the machine models consume, and finalize into one
 /// [`AppMetrics`]. The sharded delivery builds one stack per planned
 /// shard and merges deterministically ([`shard::ShardPlan`]); every other
-/// delivery drives a single stack.
+/// delivery drives a single stack. `hierarchy` selects the traffic
+/// family's replay policy and must reach every path identically —
+/// bit-identity across deliveries includes the per-level counters.
 fn profile_run(
     prog: &Program,
     metrics: MetricSet,
     delivery: Delivery,
+    hierarchy: HierarchyPolicy,
     with_tasks: bool,
 ) -> Result<(AppMetrics, Option<Vec<Region>>)> {
     crate::ir::verify::verify_ok(prog);
     if let Delivery::Sharded(workers) = delivery {
-        return shard::profile_sharded_run(prog, metrics, workers, with_tasks);
+        return shard::profile_sharded_run(prog, metrics, workers, hierarchy, with_tasks);
     }
-    let mut stack = AnalyzerStack::new(prog, metrics);
+    let mut stack = AnalyzerStack::new_with(prog, metrics, hierarchy);
     if with_tasks {
         stack = stack.with_task_trace(prog);
     }
@@ -516,35 +534,36 @@ fn delivery_for(mode: PipelineMode) -> Delivery {
     }
 }
 
-/// [`profile_select_mode`] plus the region/task trace both machine models
+/// [`profile_opts`] plus the region/task trace both machine models
 /// consume — the `coordinator` entry point, identical metrics on every
 /// delivery path.
 pub fn profile_with_tasks(
     prog: &Program,
     metrics: MetricSet,
     mode: PipelineMode,
+    hierarchy: HierarchyPolicy,
 ) -> Result<(AppMetrics, Vec<Region>)> {
-    let (m, regions) = profile_run(prog, metrics, delivery_for(mode), true)?;
+    let (m, regions) = profile_run(prog, metrics, delivery_for(mode), hierarchy, true)?;
     Ok((m, regions.expect("task trace enabled")))
 }
 
 /// Run `prog` once, streaming the trace through every analyzer (chunked
 /// delivery — the default fast path).
 pub fn profile(prog: &Program) -> Result<AppMetrics> {
-    profile_impl(prog, MetricSet::all(), Delivery::Chunked)
+    profile_impl(prog, MetricSet::all(), Delivery::Chunked, HierarchyPolicy::default())
 }
 
 /// [`profile`] restricted to a metric subset. Disabled families come back
 /// as shape-stable empty results.
 pub fn profile_select(prog: &Program, metrics: MetricSet) -> Result<AppMetrics> {
-    profile_impl(prog, metrics, Delivery::Chunked)
+    profile_impl(prog, metrics, Delivery::Chunked, HierarchyPolicy::default())
 }
 
 /// [`profile`] with the analyzers folding on a dedicated analysis thread,
 /// overlapped with interpretation (see [`crate::interp::offload`]).
 /// Metrics are bit-identical to [`profile`] and [`profile_per_event`].
 pub fn profile_offload(prog: &Program) -> Result<AppMetrics> {
-    profile_impl(prog, MetricSet::all(), Delivery::Offload)
+    profile_impl(prog, MetricSet::all(), Delivery::Offload, HierarchyPolicy::default())
 }
 
 /// [`profile`] with the analyzers sharded by metric family across an
@@ -552,7 +571,8 @@ pub fn profile_offload(prog: &Program) -> Result<AppMetrics> {
 /// [`shard`] and [`crate::interp::offload::sharded`]). Metrics are
 /// bit-identical to every other delivery path.
 pub fn profile_sharded(prog: &Program) -> Result<AppMetrics> {
-    profile_impl(prog, MetricSet::all(), Delivery::Sharded(Workers::Auto))
+    let delivery = Delivery::Sharded(Workers::Auto);
+    profile_impl(prog, MetricSet::all(), delivery, HierarchyPolicy::default())
 }
 
 /// [`profile_select`] with the delivery mode as a knob — the entry point
@@ -562,7 +582,22 @@ pub fn profile_select_mode(
     metrics: MetricSet,
     mode: PipelineMode,
 ) -> Result<AppMetrics> {
-    profile_impl(prog, metrics, delivery_for(mode))
+    profile_impl(prog, metrics, delivery_for(mode), HierarchyPolicy::default())
+}
+
+/// The fully-parameterized pipeline entry point: metric subset, delivery
+/// mode *and* traffic-hierarchy replay policy (the CLI `--metrics`,
+/// `--pipeline` and `--hierarchy` flags respectively). Like every
+/// narrower `profile_*` wrapper, this lands on the one private
+/// `profile_impl`/`profile_run` implementation — the wrappers differ
+/// only in which knobs they default.
+pub fn profile_opts(
+    prog: &Program,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    hierarchy: HierarchyPolicy,
+) -> Result<AppMetrics> {
+    profile_impl(prog, metrics, delivery_for(mode), hierarchy)
 }
 
 /// Reference path: identical to [`profile`] but with one `on_event` call
@@ -570,7 +605,19 @@ pub fn profile_select_mode(
 /// chunked-equivalence property test and the dispatch microbenchmarks have
 /// an unbatched baseline; not used by the pipeline.
 pub fn profile_per_event(prog: &Program) -> Result<AppMetrics> {
-    profile_impl(prog, MetricSet::all(), Delivery::PerEvent)
+    profile_impl(prog, MetricSet::all(), Delivery::PerEvent, HierarchyPolicy::default())
+}
+
+/// [`profile_per_event`] under an explicit hierarchy policy — the
+/// un-batched reference arm for the policy-parameterized equivalence
+/// tests (per-event ≡ chunked ≡ offload ≡ sharded must hold for *both*
+/// replay policies).
+pub fn profile_per_event_opts(
+    prog: &Program,
+    metrics: MetricSet,
+    hierarchy: HierarchyPolicy,
+) -> Result<AppMetrics> {
+    profile_impl(prog, metrics, Delivery::PerEvent, hierarchy)
 }
 
 impl AppMetrics {

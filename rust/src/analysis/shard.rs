@@ -31,6 +31,7 @@ use anyhow::Result;
 use crate::interp::{run_sharded, Instrument, Machine, Workers};
 use crate::ir::Program;
 use crate::sim::Region;
+use crate::traffic::HierarchyPolicy;
 
 use super::{AnalyzerStack, AppMetrics, ExecStats, Metric, MetricSet};
 
@@ -104,13 +105,14 @@ pub(super) fn profile_sharded_run(
     prog: &Program,
     metrics: MetricSet,
     workers: Workers,
+    hierarchy: HierarchyPolicy,
     with_tasks: bool,
 ) -> Result<(AppMetrics, Option<Vec<Region>>)> {
     let plan = ShardPlan::new(metrics, workers);
     let mut stacks: Vec<AnalyzerStack> = plan
         .shards()
         .iter()
-        .map(|&subset| AnalyzerStack::new(prog, subset))
+        .map(|&subset| AnalyzerStack::new_with(prog, subset, hierarchy))
         .collect();
     if with_tasks {
         let last = stacks.pop().expect("plan is never empty");
@@ -299,7 +301,9 @@ mod tests {
         let p = tiny_program();
         let reference = profile(&p).unwrap();
         for workers in [Workers::Auto, Workers::Fixed(1), Workers::Fixed(2), Workers::Fixed(3)] {
-            let (m, regions) = profile_sharded_run(&p, MetricSet::all(), workers, false).unwrap();
+            let incl = HierarchyPolicy::default();
+            let (m, regions) =
+                profile_sharded_run(&p, MetricSet::all(), workers, incl, false).unwrap();
             assert!(regions.is_none());
             assert_eq!(
                 m.pca8_features().map(f64::to_bits),
@@ -317,8 +321,11 @@ mod tests {
     fn merge_is_deterministic_across_runs() {
         // worker scheduling varies run to run; the merged result must not
         let p = tiny_program();
-        let (a, _) = profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), false).unwrap();
-        let (b, _) = profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), false).unwrap();
+        let incl = HierarchyPolicy::default();
+        let (a, _) =
+            profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), incl, false).unwrap();
+        let (b, _) =
+            profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), incl, false).unwrap();
         assert_eq!(a.pca8_features().map(f64::to_bits), b.pca8_features().map(f64::to_bits));
         assert_eq!(a.mix.per_op, b.mix.per_op);
         assert_eq!(a.mem_entropy.count_of_counts, b.mem_entropy.count_of_counts);
@@ -330,7 +337,8 @@ mod tests {
         let p = tiny_program();
         let sel = MetricSet::from_names("mix,traffic").unwrap();
         let inline = profile_select(&p, sel).unwrap();
-        let (m, _) = profile_sharded_run(&p, sel, Workers::Auto, false).unwrap();
+        let (m, _) =
+            profile_sharded_run(&p, sel, Workers::Auto, HierarchyPolicy::default(), false).unwrap();
         assert_eq!(m.mix.per_op, inline.mix.per_op);
         assert_eq!(m.traffic, inline.traffic);
         assert_eq!(m.reuse.accesses, 0);
@@ -338,9 +346,37 @@ mod tests {
     }
 
     #[test]
+    fn hierarchy_policy_reaches_the_traffic_shard() {
+        // the exclusive replay must produce the same per-level counters
+        // sharded as it does inline — the policy travels into every
+        // per-shard stack, not just the single-stack deliveries
+        use crate::interp::PipelineMode;
+        let p = tiny_program();
+        let inline = crate::analysis::profile_opts(
+            &p,
+            MetricSet::all(),
+            PipelineMode::Inline,
+            HierarchyPolicy::Exclusive,
+        )
+        .unwrap();
+        let (m, _) = profile_sharded_run(
+            &p,
+            MetricSet::all(),
+            Workers::Auto,
+            HierarchyPolicy::Exclusive,
+            false,
+        )
+        .unwrap();
+        assert_eq!(m.traffic.hierarchy_policy, HierarchyPolicy::Exclusive);
+        assert_eq!(m.traffic, inline.traffic);
+    }
+
+    #[test]
     fn task_trace_rides_the_last_shard() {
         let p = tiny_program();
-        let (_, regions) = profile_sharded_run(&p, MetricSet::all(), Workers::Auto, true).unwrap();
+        let incl = HierarchyPolicy::default();
+        let (_, regions) =
+            profile_sharded_run(&p, MetricSet::all(), Workers::Auto, incl, true).unwrap();
         let regions = regions.expect("task trace requested");
         assert!(!regions.is_empty());
     }

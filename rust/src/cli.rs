@@ -20,8 +20,18 @@ pub struct Args {
 }
 
 /// Flags that take a value; everything else is boolean.
-const VALUE_FLAGS: &[&str] =
-    &["scale", "seed", "threads", "out", "kernel", "n", "metrics", "pipeline", "workers"];
+const VALUE_FLAGS: &[&str] = &[
+    "scale",
+    "seed",
+    "threads",
+    "out",
+    "kernel",
+    "n",
+    "metrics",
+    "pipeline",
+    "workers",
+    "hierarchy",
+];
 
 pub fn parse(argv: &[String]) -> Result<Args> {
     let mut a = Args::default();
@@ -106,12 +116,14 @@ pisa-nmc — Platform-Independent Software Analysis for Near-Memory Computing
 
 USAGE:
   pisa-nmc pipeline [--scale F] [--seed N] [--threads N] [--metrics LIST]
-                    [--pipeline MODE] [--workers N|auto] [--no-pjrt]
+                    [--pipeline MODE] [--workers N|auto]
+                    [--hierarchy inclusive|exclusive] [--no-pjrt]
                     [--out FILE]
         full suite: profile 12 kernels, run host+NMC sims, PJRT analytics,
         print every table and figure (writes JSON report with --out)
   pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--metrics LIST]
-                   [--pipeline MODE] [--workers N|auto] [--json]
+                   [--pipeline MODE] [--workers N|auto]
+                   [--hierarchy inclusive|exclusive] [--json]
         profile a single kernel and print its metrics
   pisa-nmc figure {3a|3b|3c|4|5|6|mrc} [pipeline flags]
         regenerate one paper figure (mrc: the miss-ratio-curve extension)
@@ -128,7 +140,15 @@ mix,branch,mem_entropy,reuse,ilp,dlp,bblp,pbblp,traffic — or `all`, the
 default); deselected families report empty results and grey out their
 figure series (ilp stays on when the machine simulations run: the host
 model needs it). `traffic` is the streaming memory-traffic subsystem:
-one-pass miss-ratio curves (64B lines), shadow caches and bytes/instr.
+one-pass miss-ratio curves (64B lines), an L1→L2→LLC hierarchy replay
+with per-level counters, bytes/instr and post-hierarchy DRAM traffic.
+
+--hierarchy POLICY selects the traffic family's cache-hierarchy content
+management: `inclusive` (default — upper levels are subsets of lower
+levels, maintained by back-invalidation) or `exclusive` (a line lives in
+exactly one level; lower levels act as victim caches, so the aggregate
+capacity approaches the sum of the levels). Each level only sees the
+level above's misses; DRAM bytes count only what crosses the LLC.
 
 --pipeline MODE selects event delivery: `inline` (default — analyzers fold
 on the interpreter thread), `offload` (analyzers fold on a dedicated
@@ -185,6 +205,13 @@ mod tests {
         assert_eq!(a.get("pipeline"), Some("sharded"));
         assert_eq!(a.get("workers"), Some("3"));
         assert!(parse(&["pipeline".into(), "--workers".into()]).is_err());
+    }
+
+    #[test]
+    fn hierarchy_flag_takes_a_value() {
+        let a = args(&["pipeline", "--metrics", "traffic", "--hierarchy", "exclusive"]);
+        assert_eq!(a.get("hierarchy"), Some("exclusive"));
+        assert!(parse(&["pipeline".into(), "--hierarchy".into()]).is_err());
     }
 
     #[test]

@@ -465,8 +465,10 @@ pub fn fig6(apps: &[AppResult], an: &SuiteAnalytics, metrics: MetricSet) -> (Str
 }
 
 /// The MRC figure (extension): miss-ratio curve per app across the
-/// geometric capacity family, plus the knee and byte-traffic rates —
-/// the `traffic` subsystem's report surface.
+/// geometric capacity family, the slope-based knee, byte-traffic rates
+/// and the per-level hierarchy series (each level's miss ratio over the
+/// accesses that actually reached it) — the `traffic` subsystem's report
+/// surface.
 pub fn fig_mrc(apps: &[AppResult], metrics: MetricSet) -> (String, Json) {
     if !metrics.contains(Metric::Traffic) {
         return deselected_figure(
@@ -479,10 +481,19 @@ pub fn fig_mrc(apps: &[AppResult], metrics: MetricSet) -> (String, Json) {
         .first()
         .map(|a| a.metrics.traffic.mrc_capacities.clone())
         .unwrap_or_default();
+    let level_names: Vec<&'static str> = apps
+        .first()
+        .map(|a| a.metrics.traffic.levels.iter().map(|l| l.name).collect())
+        .unwrap_or_default();
+    let policy = apps
+        .first()
+        .map(|a| a.metrics.traffic.hierarchy_policy)
+        .unwrap_or_default();
     let mut headers = vec!["app".to_string()];
     headers.extend(caps.iter().map(|&c| capacity_label(c)));
     headers.push("knee".into());
     headers.push("B/instr".into());
+    headers.extend(level_names.iter().map(|n| format!("{n} MR")));
     headers.push("DRAM B/instr".into());
     let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new(&hdr_refs);
@@ -496,6 +507,7 @@ pub fn fig_mrc(apps: &[AppResult], metrics: MetricSet) -> (String, Json) {
             None => "–".into(),
         });
         row.push(format!("{:.2}", tr.bytes_per_instr()));
+        row.extend(tr.levels.iter().map(|l| format!("{:.3}", l.miss_ratio())));
         row.push(format!("{:.2}", tr.dram_bytes_per_instr()));
         t.row(row);
         j.set(&a.name, tr.to_json());
@@ -505,9 +517,21 @@ pub fn fig_mrc(apps: &[AppResult], metrics: MetricSet) -> (String, Json) {
     out.set("figure", "mrc");
     out.set("metric", "miss-ratio curve + byte traffic (64B lines)");
     out.set("capacities_bytes", caps_f);
+    out.set("hierarchy_policy", policy.name());
+    out.set(
+        "hierarchy_levels",
+        level_names
+            .iter()
+            .map(|n| Json::Str(n.to_string()))
+            .collect::<Vec<Json>>(),
+    );
     out.set("series", j);
     (
-        format!("Fig MRC — miss-ratio curves and byte traffic (64B lines)\n{}", t.render()),
+        format!(
+            "Fig MRC — miss-ratio curves, {} hierarchy and byte traffic (64B lines)\n{}",
+            policy.name(),
+            t.render()
+        ),
         out,
     )
 }
@@ -595,7 +619,10 @@ mod tests {
         assert!(smrc.contains("miss-ratio"));
         assert!(smrc.contains("4K"));
         assert!(smrc.contains("B/instr"));
+        assert!(smrc.contains("inclusive"));
+        assert!(smrc.contains("llc MR"), "per-level series missing from the traffic figure");
         assert!(jmrc.get("series").is_some());
+        assert!(jmrc.get("hierarchy_policy").is_some());
         assert!(table1().contains("Power9"));
         assert!(table2(1.0).contains("8000"));
     }

@@ -14,7 +14,8 @@ pub mod pipeline;
 pub use figures::{analyze_suite, Engine, SuiteAnalytics};
 pub use pca::{pca, Pca};
 pub use pipeline::{
-    profile_app, profile_app_mode, profile_app_select, run_suite, run_suite_select, AppResult,
+    profile_app, profile_app_mode, profile_app_opts, profile_app_select, run_suite, run_suite_opts,
+    run_suite_select, AppResult,
 };
 
 use anyhow::Result;
@@ -22,6 +23,7 @@ use anyhow::Result;
 use crate::analysis::MetricSet;
 use crate::interp::PipelineMode;
 use crate::runtime::Runtime;
+use crate::traffic::HierarchyPolicy;
 use crate::util::Json;
 
 /// Everything one `pisa-nmc pipeline` run produces.
@@ -34,6 +36,8 @@ pub struct PipelineReport {
     pub metrics: MetricSet,
     /// Event-delivery mode the apps were profiled with.
     pub mode: PipelineMode,
+    /// Cache-hierarchy replay policy the traffic family ran under.
+    pub hierarchy: HierarchyPolicy,
 }
 
 /// Run the full pipeline with every metric enabled, inline delivery.
@@ -46,10 +50,7 @@ pub fn run_pipeline(
     run_pipeline_select(scale, seed, threads, rt, MetricSet::all(), PipelineMode::Inline)
 }
 
-/// Run the full pipeline: profile suite (selected analyzer families,
-/// selected delivery mode) → artifacts analytics → report. `metrics` is
-/// the CLI `--metrics` flag and `mode` the CLI `--pipeline` flag, both
-/// threaded into every worker's run.
+/// [`run_pipeline_opts`] with the default (inclusive) hierarchy replay.
 pub fn run_pipeline_select(
     scale: f64,
     seed: u64,
@@ -58,12 +59,29 @@ pub fn run_pipeline_select(
     metrics: MetricSet,
     mode: PipelineMode,
 ) -> Result<PipelineReport> {
+    run_pipeline_opts(scale, seed, threads, rt, metrics, mode, HierarchyPolicy::default())
+}
+
+/// Run the full pipeline: profile suite (selected analyzer families,
+/// selected delivery mode, selected hierarchy replay policy) → artifacts
+/// analytics → report. `metrics` is the CLI `--metrics` flag, `mode` the
+/// CLI `--pipeline` flag and `hierarchy` the CLI `--hierarchy` flag, all
+/// threaded into every worker's run.
+pub fn run_pipeline_opts(
+    scale: f64,
+    seed: u64,
+    threads: usize,
+    rt: Option<&Runtime>,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    hierarchy: HierarchyPolicy,
+) -> Result<PipelineReport> {
     // same effective set the workers profile with, so the report's
     // "metrics" list describes the families that actually ran
     let metrics = metrics.with_simulation_requirements();
-    let apps = run_suite_select(scale, seed, threads, metrics, mode)?;
+    let apps = run_suite_opts(scale, seed, threads, metrics, mode, hierarchy)?;
     let analytics = analyze_suite(&apps, rt)?;
-    Ok(PipelineReport { apps, analytics, scale, seed, metrics, mode })
+    Ok(PipelineReport { apps, analytics, scale, seed, metrics, mode, hierarchy })
 }
 
 impl PipelineReport {
@@ -85,6 +103,7 @@ impl PipelineReport {
         j.set("scale", self.scale);
         j.set("seed", self.seed);
         j.set("pipeline_mode", self.mode.name());
+        j.set("hierarchy_policy", self.hierarchy.name());
         if let PipelineMode::Sharded { workers } = self.mode {
             // resolved pool size, not the raw flag: `auto` (and oversized
             // fixed counts) depend on the enabled families

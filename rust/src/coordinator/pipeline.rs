@@ -24,6 +24,7 @@ use anyhow::{Context, Result};
 use crate::analysis::{profile_with_tasks, AppMetrics, MetricSet};
 use crate::interp::PipelineMode;
 use crate::sim::{self, EdpComparison, Region};
+use crate::traffic::HierarchyPolicy;
 use crate::workloads::{registry, scaled_n, Kernel};
 
 /// Per-application pipeline output.
@@ -59,17 +60,7 @@ pub fn profile_app_select(
     profile_app_mode(k, n, seed, metrics, PipelineMode::Inline)
 }
 
-/// Profile one kernel: single instrumented execution feeding the selected
-/// analyzers *and* the task-trace collector, then both machine
-/// simulations. This is `analysis::profile_with_tasks` plus the
-/// simulation layer. `mode` selects whether the analyzers fold inline on
-/// the interpreter thread, on one dedicated analysis thread, or sharded
-/// by metric family across a worker pool (see [`crate::interp::offload`]);
-/// metrics are bit-identical on every path.
-///
-/// Sim-required families (ILP — see
-/// [`MetricSet::with_simulation_requirements`]) are force-enabled
-/// regardless of `metrics`.
+/// [`profile_app_opts`] with the default (inclusive) hierarchy replay.
 pub fn profile_app_mode(
     k: &dyn Kernel,
     n: usize,
@@ -77,10 +68,34 @@ pub fn profile_app_mode(
     metrics: MetricSet,
     mode: PipelineMode,
 ) -> Result<AppResult> {
+    profile_app_opts(k, n, seed, metrics, mode, HierarchyPolicy::default())
+}
+
+/// Profile one kernel: single instrumented execution feeding the selected
+/// analyzers *and* the task-trace collector, then both machine
+/// simulations. This is `analysis::profile_with_tasks` plus the
+/// simulation layer. `mode` selects whether the analyzers fold inline on
+/// the interpreter thread, on one dedicated analysis thread, or sharded
+/// by metric family across a worker pool (see [`crate::interp::offload`]);
+/// `hierarchy` selects the traffic subsystem's replay policy (CLI
+/// `--hierarchy`); metrics are bit-identical on every path.
+///
+/// Sim-required families (ILP — see
+/// [`MetricSet::with_simulation_requirements`]) are force-enabled
+/// regardless of `metrics`.
+pub fn profile_app_opts(
+    k: &dyn Kernel,
+    n: usize,
+    seed: u64,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    hierarchy: HierarchyPolicy,
+) -> Result<AppResult> {
     let metrics = metrics.with_simulation_requirements();
     let prog = k.build(n, seed);
-    let (metrics, regions): (AppMetrics, Vec<Region>) = profile_with_tasks(&prog, metrics, mode)
-        .with_context(|| format!("running {}", k.info().name))?;
+    let (metrics, regions): (AppMetrics, Vec<Region>) =
+        profile_with_tasks(&prog, metrics, mode, hierarchy)
+            .with_context(|| format!("running {}", k.info().name))?;
 
     // both machine models consume the same region trace
     let ilp256 = metrics
@@ -104,16 +119,29 @@ pub fn run_suite(scale: f64, seed: u64, threads: usize) -> Result<Vec<AppResult>
     run_suite_select(scale, seed, threads, MetricSet::all(), PipelineMode::Inline)
 }
 
-/// Run the whole suite, `scale` applied to every kernel's default size,
-/// `metrics` selecting the analyzer families and `mode` the event
-/// delivery (inline, or overlapped on per-app analysis threads). Results
-/// come back in registry order regardless of completion order.
+/// [`run_suite_opts`] with the default (inclusive) hierarchy replay.
 pub fn run_suite_select(
     scale: f64,
     seed: u64,
     threads: usize,
     metrics: MetricSet,
     mode: PipelineMode,
+) -> Result<Vec<AppResult>> {
+    run_suite_opts(scale, seed, threads, metrics, mode, HierarchyPolicy::default())
+}
+
+/// Run the whole suite, `scale` applied to every kernel's default size,
+/// `metrics` selecting the analyzer families, `mode` the event delivery
+/// (inline, or overlapped on per-app analysis threads) and `hierarchy`
+/// the traffic subsystem's replay policy. Results come back in registry
+/// order regardless of completion order.
+pub fn run_suite_opts(
+    scale: f64,
+    seed: u64,
+    threads: usize,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    hierarchy: HierarchyPolicy,
 ) -> Result<Vec<AppResult>> {
     let kernels = registry();
     let n_jobs = kernels.len();
@@ -135,7 +163,7 @@ pub fn run_suite_select(
                 // fresh registry per thread: Kernel is stateless
                 let k = &registry()[idx];
                 let n = scaled_n(k.as_ref(), scale);
-                let res = profile_app_mode(k.as_ref(), n, seed, metrics, mode);
+                let res = profile_app_opts(k.as_ref(), n, seed, metrics, mode, hierarchy);
                 if tx.send((idx, res)).is_err() {
                     break;
                 }
@@ -242,6 +270,31 @@ mod tests {
         for r in &rs {
             assert!(r.metrics.exec.dyn_instrs > 0, "{}", r.name);
             assert!(r.events_per_sec() > 0.0, "{}", r.name);
+        }
+    }
+
+    #[test]
+    fn hierarchy_policy_threads_through_the_app_pipeline() {
+        let k = by_name("gesummv").unwrap();
+        let excl = profile_app_opts(
+            k.as_ref(),
+            20,
+            1,
+            MetricSet::all(),
+            PipelineMode::Inline,
+            HierarchyPolicy::Exclusive,
+        )
+        .unwrap();
+        assert_eq!(excl.metrics.traffic.hierarchy_policy, HierarchyPolicy::Exclusive);
+        // the default wrapper stays inclusive
+        let incl = profile_app(k.as_ref(), 20, 1).unwrap();
+        assert_eq!(incl.metrics.traffic.hierarchy_policy, HierarchyPolicy::Inclusive);
+        // both policies filter the DRAM side: traffic crossing the last
+        // level can never exceed the raw per-access line traffic
+        for r in [&excl, &incl] {
+            let tr = &r.metrics.traffic;
+            assert!(tr.dram_fills <= tr.accesses, "fills exceed accesses");
+            assert_eq!(tr.dram_fills, tr.llc().unwrap().misses);
         }
     }
 

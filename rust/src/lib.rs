@@ -10,8 +10,9 @@
 //!   entropy, memory entropy, data-temporal-reuse / spatial locality, ILP,
 //!   DLP, BBLP, PBBLP (the paper's §II metrics).
 //! * [`traffic`] — streaming memory-traffic subsystem: one-pass miss-ratio
-//!   curves, shadow set-associative caches and byte-traffic accounting
-//!   from the chunk lanes (the NMPO-style data-movement signals).
+//!   curves, an inclusive/exclusive L1→L2→LLC hierarchy replay and
+//!   post-hierarchy DRAM byte accounting from the chunk lanes (the
+//!   NMPO-style data-movement signals).
 //! * [`workloads`] — the 12 evaluated Polybench/Rodinia kernels authored on
 //!   the IR builder, each validated against a native oracle.
 //! * [`sim`] — the host (Power9-class) and NMC (HMC + in-order PEs) machine

@@ -11,6 +11,7 @@ use pisa_nmc::coordinator::{self, figures};
 use pisa_nmc::interp::{PipelineMode, Workers};
 use pisa_nmc::report::save_json;
 use pisa_nmc::runtime::Runtime;
+use pisa_nmc::traffic::HierarchyPolicy;
 use pisa_nmc::workloads;
 
 fn main() {
@@ -52,6 +53,14 @@ fn metric_set(args: &Args) -> Result<MetricSet> {
     }
 }
 
+/// Parse the `--hierarchy` traffic-replay policy (default: inclusive).
+fn hierarchy_policy(args: &Args) -> Result<HierarchyPolicy> {
+    match args.get("hierarchy") {
+        Some(name) => HierarchyPolicy::from_name(name),
+        None => Ok(HierarchyPolicy::default()),
+    }
+}
+
 /// Parse the `--pipeline` event-delivery mode (default: inline) and, for
 /// the sharded mode, the `--workers` pool size (default: auto).
 fn pipeline_mode(args: &Args) -> Result<PipelineMode> {
@@ -78,9 +87,17 @@ fn run(args: Args) -> Result<()> {
             let threads = args.get_usize("threads", 8)?;
             let metrics = metric_set(&args)?;
             let mode = pipeline_mode(&args)?;
+            let hierarchy = hierarchy_policy(&args)?;
             let rt = load_runtime(&args);
-            let report =
-                coordinator::run_pipeline_select(scale, seed, threads, rt.as_ref(), metrics, mode)?;
+            let report = coordinator::run_pipeline_opts(
+                scale,
+                seed,
+                threads,
+                rt.as_ref(),
+                metrics,
+                mode,
+                hierarchy,
+            )?;
             print!("{}", report.render_all());
             // perf trend line for CI logs: suite-level profiler throughput
             eprintln!(
@@ -107,7 +124,8 @@ fn run(args: Args) -> Result<()> {
             let seed = args.get_u64("seed", 42)?;
             let metrics = metric_set(&args)?;
             let mode = pipeline_mode(&args)?;
-            let r = coordinator::profile_app_mode(k.as_ref(), n, seed, metrics, mode)?;
+            let hierarchy = hierarchy_policy(&args)?;
+            let r = coordinator::profile_app_opts(k.as_ref(), n, seed, metrics, mode, hierarchy)?;
             if args.has("json") {
                 let mut j = r.metrics.to_json();
                 j.set("edp", r.cmp.to_json());
@@ -140,6 +158,16 @@ fn run(args: Args) -> Result<()> {
                         tr.write_bytes_per_instr()
                     );
                     println!("  DRAM bytes/instr  {:.3}", tr.dram_bytes_per_instr());
+                    let per_level: Vec<String> = tr
+                        .levels
+                        .iter()
+                        .map(|l| format!("{} MR {:.3}", l.name, l.miss_ratio()))
+                        .collect();
+                    println!(
+                        "  hierarchy         {} ({})",
+                        tr.hierarchy_policy.name(),
+                        per_level.join(", ")
+                    );
                     println!(
                         "  MRC knee          {}",
                         match tr.mrc_knee_bytes {
@@ -161,9 +189,17 @@ fn run(args: Args) -> Result<()> {
             let threads = args.get_usize("threads", 8)?;
             let metrics = metric_set(&args)?;
             let mode = pipeline_mode(&args)?;
+            let hierarchy = hierarchy_policy(&args)?;
             let rt = load_runtime(&args);
-            let report =
-                coordinator::run_pipeline_select(scale, seed, threads, rt.as_ref(), metrics, mode)?;
+            let report = coordinator::run_pipeline_opts(
+                scale,
+                seed,
+                threads,
+                rt.as_ref(),
+                metrics,
+                mode,
+                hierarchy,
+            )?;
             let (text, _json) = match which.as_str() {
                 "3a" => figures::fig3a(&report.apps, &report.analytics, report.metrics),
                 "3b" => figures::fig3b(&report.apps, &report.analytics, report.metrics),

@@ -59,32 +59,18 @@ impl Cache {
     }
 
     /// Access one address; `is_store` marks the line dirty on hit/fill.
+    /// One code path with the hierarchy replay: probe/fill are the shared
+    /// line primitives below, `access` just layers the counters on top.
     pub fn access(&mut self, addr: u64, is_store: bool) -> Access {
-        self.clock += 1;
-        let line_addr = addr >> self.line_shift;
-        let set = (line_addr as usize) % self.sets;
-        let tag = line_addr / self.sets as u64;
-        let base = set * self.ways;
-        let set_lines = &mut self.lines[base..base + self.ways];
-
-        for l in set_lines.iter_mut() {
-            if l.valid && l.tag == tag {
-                l.lru = self.clock;
-                l.dirty |= is_store;
-                self.hits += 1;
-                return Access::Hit;
-            }
+        let line = addr >> self.line_shift;
+        if self.touch_line(line, is_store) {
+            self.hits += 1;
+            return Access::Hit;
         }
-        // miss: fill into LRU victim
-        let victim = set_lines
-            .iter_mut()
-            .min_by_key(|l| if l.valid { l.lru } else { 0 })
-            .expect("ways >= 1");
-        let writeback = victim.valid && victim.dirty;
+        let writeback = self.fill_line_after_miss(line, is_store).is_some_and(|e| e.dirty);
         if writeback {
             self.writebacks += 1;
         }
-        *victim = Line { tag, valid: true, dirty: is_store, lru: self.clock };
         self.misses += 1;
         Access::Miss { writeback }
     }
@@ -97,6 +83,130 @@ impl Cache {
             self.misses as f64 / t as f64
         }
     }
+
+    // --- line-addressed primitives -------------------------------------
+    //
+    // The multi-level hierarchy replay (`traffic::hierarchy`) decomposes
+    // an access into probe / fill / invalidate steps so it can route
+    // misses, victim writebacks and back-invalidations between levels.
+    // These primitives reuse the same set/way/LRU machinery as `access`
+    // but are counter-neutral: the hierarchy owns its per-level counts.
+    // They work in line units (`line = addr >> line_shift`) because the
+    // victim of one level is filled into the next by line, not by byte.
+
+    #[inline]
+    fn set_and_tag(&self, line: u64) -> (usize, u64) {
+        ((line as usize) % self.sets, line / self.sets as u64)
+    }
+
+    /// Probe for `line`; on hit refresh its LRU stamp and merge `dirty`.
+    pub fn touch_line(&mut self, line: u64, dirty: bool) -> bool {
+        let (set, tag) = self.set_and_tag(line);
+        let base = set * self.ways;
+        for l in &mut self.lines[base..base + self.ways] {
+            if l.valid && l.tag == tag {
+                self.clock += 1;
+                l.lru = self.clock;
+                l.dirty |= dirty;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Mark `line` dirty *without* refreshing its LRU stamp (a writeback
+    /// landing from the level above must not promote a cooling line).
+    pub fn mark_dirty_line(&mut self, line: u64) -> bool {
+        let (set, tag) = self.set_and_tag(line);
+        let base = set * self.ways;
+        for l in &mut self.lines[base..base + self.ways] {
+            if l.valid && l.tag == tag {
+                l.dirty = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Insert `line` with a fresh LRU stamp, evicting the set's LRU victim
+    /// when full; the victim comes back (line id + dirty) so the caller
+    /// can write it back or demote it. If the line is already resident the
+    /// fill degenerates to a touch (refresh + dirty merge), no eviction.
+    pub fn fill_line(&mut self, line: u64, dirty: bool) -> Option<Evicted> {
+        if self.touch_line(line, dirty) {
+            return None;
+        }
+        self.fill_line_after_miss(line, dirty)
+    }
+
+    /// [`Cache::fill_line`] for callers that already know the line is
+    /// absent — a probe just missed, or (in the exclusive hierarchy)
+    /// disjointness guarantees it — skipping the redundant set scan on
+    /// the replay's hottest path.
+    pub fn fill_line_after_miss(&mut self, line: u64, dirty: bool) -> Option<Evicted> {
+        debug_assert!(!self.contains_line(line), "fill_line_after_miss on a resident line");
+        let (set, tag) = self.set_and_tag(line);
+        let sets = self.sets as u64;
+        let base = set * self.ways;
+        self.clock += 1;
+        let clock = self.clock;
+        let victim = self.lines[base..base + self.ways]
+            .iter_mut()
+            .min_by_key(|l| if l.valid { l.lru } else { 0 })
+            .expect("ways >= 1");
+        let evicted = if victim.valid {
+            Some(Evicted { line: victim.tag * sets + set as u64, dirty: victim.dirty })
+        } else {
+            None
+        };
+        *victim = Line { tag, valid: true, dirty, lru: clock };
+        evicted
+    }
+
+    /// Remove `line` if resident, returning its dirty bit (exclusive-mode
+    /// promotion and inclusive back-invalidation both take lines out).
+    pub fn take_line(&mut self, line: u64) -> Option<bool> {
+        let (set, tag) = self.set_and_tag(line);
+        let base = set * self.ways;
+        for l in &mut self.lines[base..base + self.ways] {
+            if l.valid && l.tag == tag {
+                let dirty = l.dirty;
+                *l = Line::default();
+                return Some(dirty);
+            }
+        }
+        None
+    }
+
+    /// Is `line` resident? (read-only probe; no LRU effect)
+    pub fn contains_line(&self, line: u64) -> bool {
+        let (set, tag) = self.set_and_tag(line);
+        let base = set * self.ways;
+        self.lines[base..base + self.ways]
+            .iter()
+            .any(|l| l.valid && l.tag == tag)
+    }
+
+    /// All resident line ids, sorted (inclusion-invariant checks in tests).
+    pub fn resident_lines(&self) -> Vec<u64> {
+        let sets = self.sets as u64;
+        let mut out: Vec<u64> = self
+            .lines
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.valid)
+            .map(|(i, l)| l.tag * sets + (i / self.ways) as u64)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+/// A line evicted by [`Cache::fill_line`]: its line id and dirty bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Evicted {
+    pub line: u64,
+    pub dirty: bool,
 }
 
 /// Result of sending one access through a multi-level hierarchy.
@@ -189,6 +299,57 @@ mod tests {
             }
         }
         assert_eq!(c.misses, misses_cold, "steady state must not miss");
+    }
+
+    #[test]
+    fn line_primitives_match_access_semantics() {
+        // the decomposed probe/fill path must agree with `access` on the
+        // same stream (hit/miss outcomes and victim choice)
+        let mut via_access = Cache::tiny(2, 2, 64);
+        let mut via_prims = Cache::tiny(2, 2, 64);
+        let stream = [0u64, 1, 0, 2, 0, 1, 3, 2];
+        for &line in &stream {
+            let hit = matches!(via_access.access(line * 64, false), Access::Hit);
+            let phit = via_prims.touch_line(line, false);
+            if !phit {
+                via_prims.fill_line(line, false);
+            }
+            assert_eq!(hit, phit, "line {line}");
+        }
+        assert_eq!(via_access.resident_lines(), via_prims.resident_lines());
+    }
+
+    #[test]
+    fn fill_line_reports_victims_and_take_removes() {
+        let mut c = Cache::tiny(1, 1, 64); // one slot
+        assert_eq!(c.fill_line(5, true), None);
+        assert!(c.contains_line(5));
+        // filling a second line evicts the dirty first one
+        assert_eq!(c.fill_line(9, false), Some(Evicted { line: 5, dirty: true }));
+        assert!(!c.contains_line(5) && c.contains_line(9));
+        assert_eq!(c.take_line(9), Some(false));
+        assert_eq!(c.take_line(9), None);
+        assert_eq!(c.resident_lines(), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn mark_dirty_does_not_refresh_lru() {
+        let mut c = Cache::tiny(2, 2, 64); // one set, two ways
+        c.fill_line(1, false);
+        c.fill_line(2, false);
+        assert!(c.mark_dirty_line(1)); // dirty, but still the LRU victim
+        let v = c.fill_line(3, false).expect("set is full");
+        assert_eq!(v, Evicted { line: 1, dirty: true });
+        assert!(!c.mark_dirty_line(7), "absent line cannot be dirtied");
+    }
+
+    #[test]
+    fn refill_of_resident_line_merges_instead_of_evicting() {
+        let mut c = Cache::tiny(2, 2, 64);
+        c.fill_line(1, false);
+        c.fill_line(2, false);
+        assert_eq!(c.fill_line(1, true), None, "re-fill must not evict");
+        assert_eq!(c.take_line(1), Some(true), "dirty bit merged");
     }
 
     #[test]

@@ -166,6 +166,69 @@ pub fn naive_lru_misses(lines: impl IntoIterator<Item = u64>, cap_lines: usize) 
     misses
 }
 
+/// The traffic subsystem's **pre-hierarchy shadow bank**, kept as a
+/// test-only oracle: three *independent* set-associative caches — each
+/// seeing every access — at the same L1/L2/LLC shapes the hierarchy
+/// replay uses ([`crate::traffic::HIERARCHY_LEVELS`]). Its DRAM figure
+/// cannot subtract upper-level hits (an access absorbed by the L1-shaped
+/// cache still refreshes and fills the LLC-shaped one), which is exactly
+/// the accounting regression `rust/tests/prop_hierarchy.rs` proves the
+/// hierarchy fixes: hierarchy DRAM bytes ≤ this bank's figure on every
+/// suite kernel, strictly less where upper-level hits carry the traffic.
+pub struct IndependentBank {
+    caches: Vec<crate::sim::cache::Cache>,
+}
+
+impl Default for IndependentBank {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IndependentBank {
+    pub fn new() -> IndependentBank {
+        let line = crate::traffic::MRC_LINE_BYTES as usize;
+        IndependentBank {
+            caches: crate::traffic::HIERARCHY_LEVELS
+                .iter()
+                .map(|c| {
+                    crate::sim::cache::Cache::new(c.capacity_bytes as usize, c.ways as usize, line)
+                })
+                .collect(),
+        }
+    }
+
+    /// Every cache sees every access (the old bank's defining property).
+    pub fn access(&mut self, addr: u64, is_store: bool) {
+        for c in &mut self.caches {
+            c.access(addr, is_store);
+        }
+    }
+
+    /// Per-cache (hits, misses, writebacks), L1 → LLC shapes.
+    pub fn stats(&self) -> Vec<(u64, u64, u64)> {
+        self.caches.iter().map(|c| (c.hits, c.misses, c.writebacks)).collect()
+    }
+
+    /// The DRAM bytes the old accounting reported: LLC-shaped fills +
+    /// dirty evictions × 64 B, with the LLC-shaped cache fed (and its LRU
+    /// refreshed) by every access including those the upper shapes absorb.
+    pub fn dram_bytes(&self) -> u64 {
+        let llc = self.caches.last().expect("bank has three caches");
+        (llc.misses + llc.writebacks) * crate::traffic::MRC_LINE_BYTES
+    }
+}
+
+/// Replay a captured `(addr, size, is_store)` stream through the old
+/// independent bank and return its DRAM-byte figure.
+pub fn independent_bank_dram_bytes(accs: &[(u64, u8, bool)]) -> u64 {
+    let mut bank = IndependentBank::new();
+    for &(addr, _, is_store) in accs {
+        bank.access(addr, is_store);
+    }
+    bank.dram_bytes()
+}
+
 /// Vector of addresses: mixture of sequential runs and random jumps —
 /// shaped like real traces (stresses reuse/entropy analyzers more than
 /// uniform noise).

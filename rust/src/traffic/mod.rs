@@ -1,6 +1,6 @@
 //! Streaming memory-traffic and cache-locality subsystem (the data-movement
 //! signal NMPO-style offload models rank by: bytes moved per instruction
-//! and how fast the miss ratio falls with capacity).
+//! and, above all, the DRAM traffic left over *after* the cache hierarchy).
 //!
 //! [`TrafficAnalyzer`] runs as one more [`Instrument`] inside the
 //! `AnalyzerStack` and folds the trace **exactly once**, sweeping the dense
@@ -14,38 +14,47 @@
 //!   `reuse` uses (Mattson: an access hits a fully-associative LRU cache of
 //!   `C` lines iff its stack distance is `< C`). **Cold-miss convention**:
 //!   first touches are compulsory misses at *every* capacity — the curve's
-//!   floor; this is the capacity-domain reading of `reuse`'s documented
-//!   "you would have missed however large the stack was" convention.
-//!   The **MRC knee** is the smallest capacity whose miss ratio drops
-//!   below 50% of the curve's compulsory-inclusive ceiling (its value at
-//!   the smallest capacity); a flat curve has no knee.
-//! * **Shadow set-associative caches** ([`shadow`]): L1/L2/LLC-shaped
-//!   write-allocate LRU caches reusing `sim::cache::Cache`, capturing
-//!   associativity and dirty-writeback traffic (proven identical to a
-//!   direct `sim` replay in `rust/tests/prop_traffic.rs`).
+//!   floor. The **MRC knee** is slope-based ([`mrc::slope_knee`]): the
+//!   capacity realizing the curve's steepest drop in log-capacity space;
+//!   flat curves have no knee.
+//! * **Hierarchy replay** ([`hierarchy`]): a real L1→L2→LLC chain —
+//!   inclusive or exclusive ([`HierarchyPolicy`], CLI `--hierarchy`) —
+//!   where each level only sees its upper level's misses, dirty lines
+//!   write back downward, and DRAM fill/writeback traffic is exactly what
+//!   crosses the last level. This replaces the three *independent* shadow
+//!   caches earlier revisions carried (each seeing every access), whose
+//!   DRAM figure could not subtract upper-level hits; the old bank
+//!   survives as a test-only oracle in `testkit`, and
+//!   `rust/tests/prop_hierarchy.rs` proves the streaming chain equivalent
+//!   to a naive event-at-a-time multi-level replay under both policies.
 //! * **Byte-traffic accounting**: read/write bytes per instruction from
-//!   the sizes lane + store bitset, and DRAM-side line traffic (LLC-shadow
-//!   fills + writebacks × 64 B).
+//!   the sizes lane + store bitset, and post-hierarchy DRAM line traffic
+//!   (last-level fills + writebacks × 64 B).
 //!
 //! Every counter is a pure fold over the memory-access subsequence, so
-//! [`TrafficMetrics`] is bit-identical across the per-event, inline-chunked
-//! and offload pipeline modes (enforced in `rust/tests/prop_chunked.rs`).
+//! [`TrafficMetrics`] — per-level counters included — is bit-identical
+//! across the per-event, inline-chunked, offload and sharded pipeline
+//! modes (enforced in `rust/tests/prop_chunked.rs`).
 
+pub mod hierarchy;
 pub mod mrc;
-pub mod shadow;
 
-pub use mrc::{MrcBuilder, MRC_CAPACITIES_BYTES, MRC_LINE_BYTES, N_MRC_POINTS};
-pub use shadow::{ShadowBank, ShadowCacheStats, ShadowConfig, SHADOW_CONFIGS};
+pub use hierarchy::{
+    HierarchyConfig, HierarchyPolicy, HierarchyReplay, LevelConfig, LevelStats, HIERARCHY_LEVELS,
+};
+pub use mrc::{
+    slope_knee, MrcBuilder, MIN_KNEE_DROP, MRC_CAPACITIES_BYTES, MRC_LINE_BYTES, N_MRC_POINTS,
+};
 
 use crate::interp::{ChunkLanes, Instrument, LaneMask, TraceEvent};
 use crate::util::Json;
 
-/// The streaming analyzer: one MRC accumulator + the shadow-cache bank +
+/// The streaming analyzer: one MRC accumulator + the hierarchy replay +
 /// byte counters, all fed from the same pass.
 #[derive(Debug, Clone, Default)]
 pub struct TrafficAnalyzer {
     mrc: MrcBuilder,
-    shadows: ShadowBank,
+    hierarchy: HierarchyReplay,
     reads: u64,
     writes: u64,
     read_bytes: u64,
@@ -55,6 +64,26 @@ pub struct TrafficAnalyzer {
 impl TrafficAnalyzer {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Host-shaped chain under `policy` (the CLI `--hierarchy` flag lands
+    /// here through the `AnalyzerStack`).
+    pub fn with_policy(policy: HierarchyPolicy) -> Self {
+        Self::with_config(HierarchyConfig::host(policy))
+    }
+
+    pub fn with_config(cfg: HierarchyConfig) -> Self {
+        // built field-by-field: `..Self::default()` would allocate (and
+        // immediately drop) a second full default hierarchy — the one
+        // analyzer construction that is not cheap
+        TrafficAnalyzer {
+            mrc: MrcBuilder::new(),
+            hierarchy: HierarchyReplay::new(cfg),
+            reads: 0,
+            writes: 0,
+            read_bytes: 0,
+            write_bytes: 0,
+        }
     }
 
     /// Record one memory access (the per-event reference path).
@@ -68,7 +97,7 @@ impl TrafficAnalyzer {
             self.read_bytes += size as u64;
         }
         self.mrc.access(addr);
-        self.shadows.access(addr, is_store);
+        self.hierarchy.access(addr, is_store);
     }
 
     /// Finalize into [`TrafficMetrics`]. `dyn_instrs` is the run's dynamic
@@ -80,16 +109,10 @@ impl TrafficAnalyzer {
             .iter()
             .map(|&m| if accesses == 0 { 0.0 } else { m as f64 / accesses as f64 })
             .collect();
-        // knee: smallest capacity whose miss ratio drops below 50% of the
-        // ceiling (the curve's value at the smallest capacity)
         let knee = if accesses == 0 {
             None
         } else {
-            let threshold = 0.5 * mrc_miss_ratio[0];
-            mrc_miss_ratio
-                .iter()
-                .position(|&r| r < threshold)
-                .map(|i| MRC_CAPACITIES_BYTES[i])
+            slope_knee(&mrc_miss_ratio).map(|i| MRC_CAPACITIES_BYTES[i])
         };
         TrafficMetrics {
             accesses,
@@ -104,7 +127,10 @@ impl TrafficAnalyzer {
             mrc_misses: misses.to_vec(),
             mrc_miss_ratio,
             mrc_knee_bytes: knee,
-            shadow: self.shadows.finalize(),
+            hierarchy_policy: self.hierarchy.policy(),
+            levels: self.hierarchy.finalize(),
+            dram_fills: self.hierarchy.dram_fills(),
+            dram_writebacks: self.hierarchy.dram_writebacks(),
         }
     }
 }
@@ -121,9 +147,9 @@ impl Instrument for TrafficAnalyzer {
 
     /// Lane path (the hot path): structure-major sweeps over the dense
     /// lanes — byte tallies from sizes + store bits, then the MRC stack,
-    /// then the shadow bank, each walking the packed slice while its own
-    /// state stays hot. Per-structure access order matches the per-event
-    /// path exactly, so the fold is bit-identical.
+    /// then the hierarchy replay, each walking the packed slice while its
+    /// own state stays hot. Per-structure access order matches the
+    /// per-event path exactly, so the fold is bit-identical.
     fn on_chunk_lanes(&mut self, _events: &[TraceEvent], lanes: &ChunkLanes) {
         let addrs = lanes.addrs();
         if addrs.is_empty() {
@@ -148,7 +174,7 @@ impl Instrument for TrafficAnalyzer {
         for &addr in addrs {
             self.mrc.access(addr);
         }
-        self.shadows.sweep(addrs, lanes);
+        self.hierarchy.sweep(addrs, lanes);
     }
 
     fn wants_lanes(&self) -> bool {
@@ -182,16 +208,23 @@ pub struct TrafficMetrics {
     pub mrc_misses: Vec<u64>,
     /// `mrc_misses[i] / accesses` (0 when the run had no accesses).
     pub mrc_miss_ratio: Vec<f64>,
-    /// Smallest capacity whose miss ratio drops below 50% of the curve's
-    /// ceiling; `None` for flat (or empty) curves.
+    /// Capacity realizing the curve's steepest drop ([`slope_knee`]);
+    /// `None` for flat (or empty) curves.
     pub mrc_knee_bytes: Option<u64>,
-    /// Per-shadow-cache hit/miss/writeback counts.
-    pub shadow: Vec<ShadowCacheStats>,
+    /// Content-management policy the hierarchy was replayed under.
+    pub hierarchy_policy: HierarchyPolicy,
+    /// Per-level hit/miss/writeback counts, L1 → LLC. Each level only saw
+    /// its upper level's misses (see [`hierarchy`]).
+    pub levels: Vec<LevelStats>,
+    /// Line fills from DRAM (== last level's misses).
+    pub dram_fills: u64,
+    /// Dirty lines written back to DRAM (== last level's writebacks).
+    pub dram_writebacks: u64,
 }
 
 impl Default for TrafficMetrics {
     /// The empty (family-deselected) shape: full capacity family and
-    /// shadow bank, all counts zero — reports and figures never change
+    /// hierarchy chain, all counts zero — reports and figures never change
     /// layout, and no analyzer state is allocated just to emit zeros.
     fn default() -> Self {
         TrafficMetrics {
@@ -207,9 +240,10 @@ impl Default for TrafficMetrics {
             mrc_misses: vec![0; N_MRC_POINTS],
             mrc_miss_ratio: vec![0.0; N_MRC_POINTS],
             mrc_knee_bytes: None,
-            shadow: SHADOW_CONFIGS
+            hierarchy_policy: HierarchyPolicy::default(),
+            levels: HIERARCHY_LEVELS
                 .iter()
-                .map(|c| ShadowCacheStats {
+                .map(|c| LevelStats {
                     name: c.name,
                     capacity_bytes: c.capacity_bytes,
                     ways: c.ways,
@@ -218,6 +252,8 @@ impl Default for TrafficMetrics {
                     writebacks: 0,
                 })
                 .collect(),
+            dram_fills: 0,
+            dram_writebacks: 0,
         }
     }
 }
@@ -249,22 +285,25 @@ impl TrafficMetrics {
         }
     }
 
-    /// The LLC-shaped shadow cache (the DRAM-side boundary).
-    pub fn llc(&self) -> Option<&ShadowCacheStats> {
-        self.shadow.iter().find(|s| s.name == "llc")
+    /// The last (DRAM-side) level of the chain.
+    pub fn llc(&self) -> Option<&LevelStats> {
+        self.levels.last()
     }
 
-    /// Line-fill traffic to DRAM: LLC-shadow misses × 64 B.
+    /// Line-fill traffic from DRAM: post-hierarchy misses × 64 B. Upper
+    /// -level hits never reach DRAM, so they are subtracted by
+    /// construction (the old independent bank could not do this).
     pub fn dram_fill_bytes(&self) -> u64 {
-        self.llc().map(|s| s.misses * MRC_LINE_BYTES).unwrap_or(0)
+        self.dram_fills * MRC_LINE_BYTES
     }
 
-    /// Writeback traffic to DRAM: LLC-shadow dirty evictions × 64 B.
+    /// Writeback traffic to DRAM: dirty last-level evictions × 64 B.
     pub fn dram_writeback_bytes(&self) -> u64 {
-        self.llc().map(|s| s.writebacks * MRC_LINE_BYTES).unwrap_or(0)
+        self.dram_writebacks * MRC_LINE_BYTES
     }
 
-    /// Total DRAM-side line traffic per instruction (fills + writebacks).
+    /// Total DRAM-side line traffic per instruction (fills + writebacks) —
+    /// the post-hierarchy signal the offload advisor ranks by.
     pub fn dram_bytes_per_instr(&self) -> f64 {
         if self.dyn_instrs == 0 {
             0.0
@@ -317,13 +356,10 @@ impl TrafficMetrics {
             Some(b) => j.set("mrc_knee_bytes", b),
             None => j.set("mrc_knee_bytes", Json::Null),
         };
-        let mut dram = Json::obj();
-        dram.set("fill_bytes", self.dram_fill_bytes());
-        dram.set("writeback_bytes", self.dram_writeback_bytes());
-        dram.set("bytes_per_instr", self.dram_bytes_per_instr());
-        j.set("dram", dram);
-        let shadows: Vec<Json> = self
-            .shadow
+        let mut hier = Json::obj();
+        hier.set("policy", self.hierarchy_policy.name());
+        let levels: Vec<Json> = self
+            .levels
             .iter()
             .map(|s| {
                 let mut o = Json::obj();
@@ -337,7 +373,15 @@ impl TrafficMetrics {
                 o
             })
             .collect();
-        j.set("shadow_caches", shadows);
+        hier.set("levels", levels);
+        j.set("hierarchy", hier);
+        let mut dram = Json::obj();
+        dram.set("fills", self.dram_fills);
+        dram.set("writebacks", self.dram_writebacks);
+        dram.set("fill_bytes", self.dram_fill_bytes());
+        dram.set("writeback_bytes", self.dram_writeback_bytes());
+        dram.set("bytes_per_instr", self.dram_bytes_per_instr());
+        j.set("dram", dram);
         j
     }
 }
@@ -384,35 +428,38 @@ mod tests {
 
     #[test]
     fn lane_sweep_matches_per_event_records() {
-        let mut rng = crate::util::Rng::new(23);
-        let events: Vec<TraceEvent> = (0..3000)
-            .map(|_| {
-                mem_ev(
-                    0x10_000 + rng.below(1 << 12) * 8,
-                    if rng.below(2) == 0 { 8 } else { 4 },
-                    rng.below(3) == 0,
-                )
-            })
-            .collect();
-        let mut per_event = TrafficAnalyzer::new();
-        for ev in &events {
-            per_event.on_event(ev);
+        for policy in [HierarchyPolicy::Inclusive, HierarchyPolicy::Exclusive] {
+            let mut rng = crate::util::Rng::new(23);
+            let events: Vec<TraceEvent> = (0..3000)
+                .map(|_| {
+                    mem_ev(
+                        0x10_000 + rng.below(1 << 12) * 8,
+                        if rng.below(2) == 0 { 8 } else { 4 },
+                        rng.below(3) == 0,
+                    )
+                })
+                .collect();
+            let mut per_event = TrafficAnalyzer::with_policy(policy);
+            for ev in &events {
+                per_event.on_event(ev);
+            }
+            let mut lane = TrafficAnalyzer::with_policy(policy);
+            let mut lanes = ChunkLanes::default();
+            for chunk in events.chunks(700) {
+                lanes.rebuild_masked(chunk, lane.lane_needs());
+                lane.on_chunk_lanes(chunk, &lanes);
+            }
+            let (a, b) = (per_event.finalize(3000), lane.finalize(3000));
+            assert_eq!(a, b, "{}", policy.name());
         }
-        let mut lane = TrafficAnalyzer::new();
-        let mut lanes = ChunkLanes::default();
-        for chunk in events.chunks(700) {
-            lanes.rebuild_masked(chunk, lane.lane_needs());
-            lane.on_chunk_lanes(chunk, &lanes);
-        }
-        let (a, b) = (per_event.finalize(3000), lane.finalize(3000));
-        assert_eq!(a, b);
     }
 
     #[test]
     fn mrc_knee_found_on_looping_working_set() {
         // a 256-line (16 KiB) working set walked 100 times: every re-walk
         // access has stack distance 255, so it misses the 4 KiB point and
-        // hits from 16 KiB up — the knee lands exactly at 16 KiB
+        // hits from 16 KiB up — the steepest drop (and so the knee) lands
+        // exactly at 16 KiB
         let mut t = TrafficAnalyzer::new();
         for _ in 0..100u64 {
             for i in 0..256u64 {
@@ -459,6 +506,26 @@ mod tests {
     }
 
     #[test]
+    fn hierarchy_filters_dram_traffic() {
+        // a 128-line hot set walked repeatedly: after the cold pass every
+        // access hits L1, so DRAM fills stay at the cold count instead of
+        // tracking the access count
+        let mut t = TrafficAnalyzer::new();
+        for _ in 0..50u64 {
+            for i in 0..128u64 {
+                t.record(0x2_0000 + i * 64, 8, i % 8 == 0);
+            }
+        }
+        let m = t.finalize(10_000);
+        assert_eq!(m.hierarchy_policy, HierarchyPolicy::Inclusive);
+        assert_eq!(m.dram_fills, 128, "only compulsory misses cross the LLC");
+        assert_eq!(m.dram_writebacks, 0, "resident dirt never reaches DRAM");
+        assert_eq!(m.levels[0].hits, 50 * 128 - 128);
+        assert_eq!(m.llc().unwrap().misses, m.dram_fills);
+        assert!(m.dram_fill_bytes() < m.read_bytes + m.write_bytes);
+    }
+
+    #[test]
     fn empty_metrics_are_shape_stable() {
         let m = TrafficMetrics::default();
         // the hand-rolled empty shape must match a never-fed analyzer
@@ -468,14 +535,16 @@ mod tests {
         assert_eq!(m.mrc_miss_ratio.len(), N_MRC_POINTS);
         assert!(m.mrc_miss_ratio.iter().all(|&r| r == 0.0));
         assert_eq!(m.mrc_knee_bytes, None);
-        assert_eq!(m.shadow.len(), SHADOW_CONFIGS.len());
+        assert_eq!(m.levels.len(), HIERARCHY_LEVELS.len());
+        assert_eq!(m.hierarchy_policy, HierarchyPolicy::Inclusive);
+        assert_eq!((m.dram_fills, m.dram_writebacks), (0, 0));
         assert_eq!(m.bytes_per_instr(), 0.0);
         assert_eq!(m.dram_bytes_per_instr(), 0.0);
     }
 
     #[test]
     fn json_has_all_sections() {
-        let mut t = TrafficAnalyzer::new();
+        let mut t = TrafficAnalyzer::with_policy(HierarchyPolicy::Exclusive);
         for i in 0..500u64 {
             t.record(i * 8, 8, i % 4 == 0);
         }
@@ -485,7 +554,9 @@ mod tests {
             "miss_ratio",
             "capacities_bytes",
             "mrc_knee_bytes",
-            "shadow_caches",
+            "hierarchy",
+            "\"policy\": \"exclusive\"",
+            "levels",
             "writebacks",
             "fill_bytes",
         ] {

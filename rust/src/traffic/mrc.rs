@@ -15,7 +15,7 @@
 
 use crate::analysis::reuse::{LineDist, StackDistance};
 
-/// Cache-line size the curve (and the shadow caches) are computed at.
+/// Cache-line size the curve (and the hierarchy replay) are computed at.
 pub const MRC_LINE_BYTES: u64 = 64;
 /// `log2(MRC_LINE_BYTES)`.
 pub const MRC_LINE_SHIFT: u32 = 6;
@@ -35,6 +35,32 @@ pub const MRC_CAPACITIES_BYTES: [u64; 8] = [
 
 /// Number of points on the curve.
 pub const N_MRC_POINTS: usize = MRC_CAPACITIES_BYTES.len();
+
+/// Minimum miss-ratio drop between adjacent capacities for a curve to
+/// have a knee at all: below this every step is noise-flat and the knee
+/// is `None` (the footprint sentinel logic takes over for ranking).
+pub const MIN_KNEE_DROP: f64 = 0.05;
+
+/// Slope-based knee: the index of the capacity realizing the *steepest
+/// drop* of the miss-ratio curve. The capacity family is geometric, so
+/// adjacent differences are exactly the curve's slope in log-capacity
+/// space; the knee is where the working set falls into the cache. Flat
+/// curves (steepest drop `< MIN_KNEE_DROP`) have no knee; ties go to the
+/// smallest capacity. This replaces the earlier curve-relative rule
+/// (first point under 50% of the ceiling), which ranked flat-ish curves
+/// on their noise rather than their shape.
+pub fn slope_knee(miss_ratio: &[f64]) -> Option<usize> {
+    let mut best_i = 0usize;
+    let mut best_drop = 0.0f64;
+    for i in 1..miss_ratio.len() {
+        let drop = miss_ratio[i - 1] - miss_ratio[i];
+        if drop > best_drop {
+            best_i = i;
+            best_drop = drop;
+        }
+    }
+    (best_drop >= MIN_KNEE_DROP).then_some(best_i)
+}
 
 /// Smallest capacity index at which an access with stack distance `d`
 /// (in 64 B lines) hits, or `None` if it misses even the largest capacity.
@@ -182,6 +208,27 @@ mod tests {
         }
         // floor is the compulsory count once capacity exceeds the footprint
         assert_eq!(*m.last().unwrap(), b.cold());
+    }
+
+    #[test]
+    fn slope_knee_lands_on_the_steepest_drop() {
+        // classic working-set curve: flat-high, cliff, flat-low
+        assert_eq!(slope_knee(&[0.9, 0.88, 0.2, 0.18, 0.17]), Some(2));
+        // two drops: the steeper one wins regardless of order
+        assert_eq!(slope_knee(&[0.9, 0.6, 0.55, 0.1, 0.1]), Some(3));
+        assert_eq!(slope_knee(&[0.9, 0.3, 0.25, 0.1, 0.1]), Some(1));
+        // tie: smallest capacity wins (deterministic)
+        assert_eq!(slope_knee(&[0.8, 0.5, 0.2]), Some(1));
+    }
+
+    #[test]
+    fn flat_curves_have_no_slope_knee() {
+        assert_eq!(slope_knee(&[0.0; 8]), None);
+        assert_eq!(slope_knee(&[1.0; 8]), None);
+        // gentle drift below MIN_KNEE_DROP per step is still flat
+        assert_eq!(slope_knee(&[0.50, 0.48, 0.46, 0.44]), None);
+        assert_eq!(slope_knee(&[]), None);
+        assert_eq!(slope_knee(&[0.7]), None);
     }
 
     #[test]

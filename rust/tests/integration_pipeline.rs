@@ -29,7 +29,8 @@ fn pipeline_native_end_to_end() {
         }
     }
 
-    // the traffic family rode the same pass: bytes + a populated MRC
+    // the traffic family rode the same pass: bytes + a populated MRC +
+    // the hierarchy replay's per-level counters
     for a in &report.apps {
         let tr = &a.metrics.traffic;
         assert!(tr.accesses > 0, "{}", a.name);
@@ -37,6 +38,20 @@ fn pipeline_native_end_to_end() {
         assert!(tr.bytes_per_instr() > 0.0, "{}", a.name);
         assert_eq!(tr.mrc_misses.len(), tr.mrc_capacities.len(), "{}", a.name);
         assert!(tr.mrc_miss_ratio[0] > 0.0, "{}: cold misses imply a nonzero curve", a.name);
+        // hierarchy filtering: L1 saw everything, each level below saw
+        // exactly the level above's misses, DRAM only what crossed the LLC
+        assert_eq!(tr.levels[0].hits + tr.levels[0].misses, tr.accesses, "{}", a.name);
+        for w in tr.levels.windows(2) {
+            assert_eq!(w[0].misses, w[1].hits + w[1].misses, "{}", a.name);
+        }
+        assert_eq!(tr.dram_fills, tr.llc().unwrap().misses, "{}", a.name);
+        assert!(
+            tr.dram_fill_bytes() + tr.dram_writeback_bytes()
+                <= (tr.accesses + tr.levels.last().unwrap().writebacks)
+                    * pisa_nmc::traffic::MRC_LINE_BYTES,
+            "{}",
+            a.name
+        );
     }
 
     // figure renderers produce content for all 12 apps
@@ -49,11 +64,20 @@ fn pipeline_native_end_to_end() {
         assert!(tmrc.contains(&a.name), "fig_mrc missing {}", a.name);
     }
 
-    // JSON report is parseable and carries all figures
+    // JSON report is parseable and carries all figures + the hierarchy
     let j = report.to_json();
-    let reparsed = Json::parse(&j.to_string_pretty()).expect("valid JSON");
+    let pretty = j.to_string_pretty();
+    let reparsed = Json::parse(&pretty).expect("valid JSON");
     for key in ["fig3a", "fig3b", "fig3c", "fig4", "fig5", "fig6", "fig_mrc", "apps"] {
         assert!(reparsed.get(key).is_some(), "report missing {key}");
+    }
+    assert_eq!(
+        reparsed.get("hierarchy_policy").and_then(|v| v.as_str()),
+        Some("inclusive"),
+        "report must carry the hierarchy policy"
+    );
+    for key in ["\"hierarchy\"", "\"levels\"", "\"writebacks\"", "\"fills\""] {
+        assert!(pretty.contains(key), "per-level traffic JSON missing {key}");
     }
 }
 

@@ -5,8 +5,9 @@
 //! `AppMetrics` to the per-event reference path — pca8 feature vectors,
 //! entropy histograms (count-of-counts), reuse-distance CDFs, instruction
 //! mix, ILP windows, BBLP/PBBLP, the memory-traffic family (MRC miss
-//! counts/ratios, knee, byte accounting, shadow-cache counters) and the
-//! dynamic-count stats all compared exactly. This is the safety net under
+//! counts/ratios, slope knee, byte accounting, per-level hierarchy
+//! counters and DRAM fills/writebacks — under both replay policies) and
+//! the dynamic-count stats all compared exactly. This is the safety net under
 //! every tuned `on_chunk`/`on_chunk_lanes` implementation, under the
 //! offload channel protocol and under the sharded broadcast +
 //! countdown-return recycling: any reordering or lost/duplicated event —
@@ -20,11 +21,15 @@
 use std::time::Duration;
 
 use pisa_nmc::analysis::{
-    profile, profile_offload, profile_per_event, profile_sharded, AppMetrics,
+    profile, profile_offload, profile_opts, profile_per_event, profile_per_event_opts,
+    profile_sharded, AppMetrics, MetricSet,
 };
-use pisa_nmc::interp::{run_offload, run_sharded, Counter, Instrument, Machine, TraceEvent};
+use pisa_nmc::interp::{
+    run_offload, run_sharded, Counter, Instrument, Machine, PipelineMode, TraceEvent, Workers,
+};
 use pisa_nmc::prop_assert;
 use pisa_nmc::testkit::{check_seeded, random_program};
+use pisa_nmc::traffic::HierarchyPolicy;
 
 /// Exact comparison of every metric surface. f64s are compared by bit
 /// pattern: the two paths must execute the *same arithmetic in the same
@@ -102,9 +107,10 @@ fn assert_bit_identical(a: &AppMetrics, b: &AppMetrics) -> Result<(), String> {
         "PBBLP differs"
     );
 
-    // memory traffic: MRC miss counts/ratios, byte accounting, knee and
-    // shadow-cache counters — every field, exactly (TrafficMetrics is
-    // integer folds + finalize-time ratios, so PartialEq is bit-exact)
+    // memory traffic: MRC miss counts/ratios, byte accounting, the slope
+    // knee and the per-level hierarchy counters — every field, exactly
+    // (TrafficMetrics is integer folds + finalize-time ratios, so
+    // PartialEq is bit-exact)
     prop_assert!(
         a.traffic.mrc_misses == b.traffic.mrc_misses,
         "MRC miss counts differ: {:?} vs {:?}",
@@ -121,7 +127,28 @@ fn assert_bit_identical(a: &AppMetrics, b: &AppMetrics) -> Result<(), String> {
         a.traffic.mrc_knee_bytes,
         b.traffic.mrc_knee_bytes
     );
-    prop_assert!(a.traffic.shadow == b.traffic.shadow, "shadow-cache counts differ");
+    prop_assert!(
+        a.traffic.hierarchy_policy == b.traffic.hierarchy_policy,
+        "hierarchy policy differs"
+    );
+    for (la, lb) in a.traffic.levels.iter().zip(&b.traffic.levels) {
+        prop_assert!(
+            (la.hits, la.misses, la.writebacks) == (lb.hits, lb.misses, lb.writebacks),
+            "hierarchy level '{}' counters differ: ({}, {}, {}) vs ({}, {}, {})",
+            la.name,
+            la.hits,
+            la.misses,
+            la.writebacks,
+            lb.hits,
+            lb.misses,
+            lb.writebacks
+        );
+    }
+    prop_assert!(
+        (a.traffic.dram_fills, a.traffic.dram_writebacks)
+            == (b.traffic.dram_fills, b.traffic.dram_writebacks),
+        "DRAM fill/writeback counters differ"
+    );
     prop_assert!(a.traffic == b.traffic, "traffic metrics differ");
 
     // branch entropy
@@ -206,6 +233,33 @@ fn all_four_paths_bit_identical_on_real_kernels() {
             panic!("{name} (sharded vs chunked): {msg}");
         }
     }
+}
+
+#[test]
+fn all_four_paths_bit_identical_under_exclusive_hierarchy() {
+    // the new per-level counters must stay bit-identical across every
+    // delivery for the *exclusive* replay too — its move-up/demote chains
+    // are the most stateful fold in the stack, so any chunk-boundary or
+    // cross-thread reordering would surface here first
+    check_seeded("exclusive hierarchy 4-way", 0xE8C2, 12, |rng| {
+        let p = random_program(rng);
+        let all = MetricSet::all();
+        let excl = HierarchyPolicy::Exclusive;
+        let reference = profile_per_event_opts(&p, all, excl).map_err(|e| e.to_string())?;
+        let chunked =
+            profile_opts(&p, all, PipelineMode::Inline, excl).map_err(|e| e.to_string())?;
+        let offloaded =
+            profile_opts(&p, all, PipelineMode::Offload, excl).map_err(|e| e.to_string())?;
+        let sharded = profile_opts(&p, all, PipelineMode::Sharded { workers: Workers::Auto }, excl)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            chunked.traffic.hierarchy_policy == HierarchyPolicy::Exclusive,
+            "policy did not reach the analyzer"
+        );
+        assert_bit_identical(&chunked, &reference)?;
+        assert_bit_identical(&offloaded, &chunked)?;
+        assert_bit_identical(&sharded, &chunked)
+    });
 }
 
 /// A deliberately slow analyzer: sleeps on every chunk so the analysis

@@ -1,0 +1,524 @@
+//! Differential-oracle and invariant properties for the streaming
+//! cache-hierarchy replay (`traffic::hierarchy`).
+//!
+//! 1. **Streaming ≡ naive replay**: the per-level hit/miss/writeback
+//!    counters and DRAM fill/writeback counts folded inside the chunked
+//!    `AnalyzerStack` pass must exactly match a *naive* event-at-a-time
+//!    multi-level replay — an independent implementation below that keeps
+//!    per-set recency as plain `Vec`s (move-to-back on touch, pop-front on
+//!    evict) instead of the production LRU-stamp machinery — on seeded
+//!    random programs *and* real suite kernels, under **both** the
+//!    inclusive and the exclusive policy.
+//! 2. **Inclusion invariant**: in inclusive mode an upper level never
+//!    holds (and in particular never *hits*) a line absent from the levels
+//!    below it.
+//! 3. **Exclusive aggregate capacity**: with fully-associative levels a
+//!    cyclic working set larger than the last level but no larger than the
+//!    *sum* of the levels stops missing after the cold pass in exclusive
+//!    mode, while inclusive mode (effective capacity = last level) keeps
+//!    thrashing — pinned with exact counts.
+//! 4. **MRC monotonicity**: miss ratios are non-increasing in capacity on
+//!    random programs (Mattson inclusion, end to end through the profile
+//!    pipeline).
+//! 5. **DRAM accounting regression**: hierarchy DRAM bytes never exceed
+//!    the old independent shadow bank's figure (`testkit::IndependentBank`)
+//!    on any suite kernel, and are strictly lower on a crafted trace whose
+//!    traffic is absorbed by upper levels — the double-counting the
+//!    hierarchy replay was built to remove.
+
+use pisa_nmc::analysis::{profile_opts, MetricSet};
+use pisa_nmc::interp::{Instrument, Machine, PipelineMode, TraceEvent};
+use pisa_nmc::ir::Program;
+use pisa_nmc::prop_assert;
+use pisa_nmc::testkit::{check_seeded, random_program};
+use pisa_nmc::traffic::{
+    HierarchyConfig, HierarchyPolicy, HierarchyReplay, LevelConfig, TrafficMetrics,
+    HIERARCHY_LEVELS, MRC_LINE_BYTES,
+};
+
+// ---------------------------------------------------------------------------
+// The naive oracle: same semantics, independent mechanics.
+
+/// One naive level: per-set recency lists of `(line, dirty)`, oldest
+/// first. Set/way derivation mirrors `sim::cache::Cache::new` so both
+/// implementations shape identically.
+#[derive(Clone)]
+struct NaiveLevel {
+    sets: Vec<Vec<(u64, bool)>>,
+    ways: usize,
+}
+
+impl NaiveLevel {
+    fn new(cfg: &LevelConfig, line_bytes: u64) -> NaiveLevel {
+        let n_lines = ((cfg.capacity_bytes / line_bytes) as usize).max(1);
+        let ways = (cfg.ways as usize).min(n_lines).max(1);
+        let sets = (n_lines / ways).max(1);
+        NaiveLevel { sets: vec![Vec::new(); sets], ways }
+    }
+
+    fn set_of(&self, line: u64) -> usize {
+        (line as usize) % self.sets.len()
+    }
+
+    /// Hit: move to back (most recent), merge dirty.
+    fn touch(&mut self, line: u64, dirty: bool) -> bool {
+        let s = self.set_of(line);
+        let set = &mut self.sets[s];
+        if let Some(pos) = set.iter().position(|&(l, _)| l == line) {
+            let (l, d) = set.remove(pos);
+            set.push((l, d || dirty));
+            true
+        } else {
+            false
+        }
+    }
+
+    fn mark_dirty(&mut self, line: u64) -> bool {
+        let s = self.set_of(line);
+        if let Some(e) = self.sets[s].iter_mut().find(|e| e.0 == line) {
+            e.1 = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fill with fresh recency; evict the set's oldest entry when full.
+    fn fill(&mut self, line: u64, dirty: bool) -> Option<(u64, bool)> {
+        if self.touch(line, dirty) {
+            return None;
+        }
+        let s = self.set_of(line);
+        let ways = self.ways;
+        let set = &mut self.sets[s];
+        let evicted = (set.len() == ways).then(|| set.remove(0));
+        set.push((line, dirty));
+        evicted
+    }
+
+    fn take(&mut self, line: u64) -> Option<bool> {
+        let s = self.set_of(line);
+        let set = &mut self.sets[s];
+        let pos = set.iter().position(|&(l, _)| l == line)?;
+        Some(set.remove(pos).1)
+    }
+}
+
+#[derive(Default, Clone, Copy, PartialEq, Eq, Debug)]
+struct Counts {
+    hits: u64,
+    misses: u64,
+    writebacks: u64,
+}
+
+/// The naive event-at-a-time multi-level replay, written directly from
+/// the documented semantics in `traffic::hierarchy` (probe top-down; fill
+/// missed levels deepest-first with back-invalidation under the inclusive
+/// policy; move-up with victim demotion under the exclusive policy).
+struct NaiveHierarchy {
+    levels: Vec<NaiveLevel>,
+    counts: Vec<Counts>,
+    policy: HierarchyPolicy,
+    dram_fills: u64,
+    dram_writebacks: u64,
+}
+
+impl NaiveHierarchy {
+    fn new(cfg: &HierarchyConfig) -> NaiveHierarchy {
+        NaiveHierarchy {
+            levels: cfg.levels.iter().map(|l| NaiveLevel::new(l, cfg.line_bytes)).collect(),
+            counts: vec![Counts::default(); cfg.levels.len()],
+            policy: cfg.policy,
+            dram_fills: 0,
+            dram_writebacks: 0,
+        }
+    }
+
+    fn host(policy: HierarchyPolicy) -> NaiveHierarchy {
+        Self::new(&HierarchyConfig::host(policy))
+    }
+
+    fn access(&mut self, addr: u64, is_store: bool) {
+        let line = addr / MRC_LINE_BYTES;
+        match self.policy {
+            HierarchyPolicy::Inclusive => self.access_inclusive(line, is_store),
+            HierarchyPolicy::Exclusive => self.access_exclusive(line, is_store),
+        }
+    }
+
+    fn access_inclusive(&mut self, line: u64, is_store: bool) {
+        let n = self.levels.len();
+        let mut hit = n;
+        for i in 0..n {
+            if self.levels[i].touch(line, is_store && i == 0) {
+                self.counts[i].hits += 1;
+                hit = i;
+                break;
+            }
+            self.counts[i].misses += 1;
+        }
+        if hit == n {
+            self.dram_fills += 1;
+        }
+        for lvl in (0..hit).rev() {
+            if let Some((vline, vdirty)) = self.levels[lvl].fill(line, is_store && lvl == 0) {
+                // back-invalidate upper copies, merging their dirt
+                let mut dirty = vdirty;
+                for upper in (0..lvl).rev() {
+                    if let Some(d) = self.levels[upper].take(vline) {
+                        dirty |= d;
+                    }
+                }
+                if dirty {
+                    self.counts[lvl].writebacks += 1;
+                    if lvl + 1 < n {
+                        assert!(
+                            self.levels[lvl + 1].mark_dirty(vline),
+                            "oracle inclusion violated at level {lvl}"
+                        );
+                    } else {
+                        self.dram_writebacks += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    fn access_exclusive(&mut self, line: u64, is_store: bool) {
+        let n = self.levels.len();
+        if self.levels[0].touch(line, is_store) {
+            self.counts[0].hits += 1;
+            return;
+        }
+        self.counts[0].misses += 1;
+        for i in 1..n {
+            if let Some(dirty) = self.levels[i].take(line) {
+                self.counts[i].hits += 1;
+                self.promote(line, dirty || is_store);
+                return;
+            }
+            self.counts[i].misses += 1;
+        }
+        self.dram_fills += 1;
+        self.promote(line, is_store);
+    }
+
+    fn promote(&mut self, line: u64, dirty: bool) {
+        let mut incoming = Some((line, dirty));
+        for lvl in 0..self.levels.len() {
+            let Some((l, d)) = incoming else { return };
+            incoming = self.levels[lvl].fill(l, d);
+            if incoming.is_some_and(|(_, d)| d) {
+                self.counts[lvl].writebacks += 1;
+            }
+        }
+        if incoming.is_some_and(|(_, d)| d) {
+            self.dram_writebacks += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared capture + comparison plumbing.
+
+/// Capture the run's memory-access stream in trace order.
+#[derive(Default)]
+struct AccessCapture(Vec<(u64, u8, bool)>);
+
+impl Instrument for AccessCapture {
+    fn on_event(&mut self, ev: &TraceEvent) {
+        if let TraceEvent::Instr(i) = ev {
+            if let Some(m) = i.mem {
+                self.0.push((m.addr, m.size, m.is_store));
+            }
+        }
+    }
+}
+
+fn capture_accesses(prog: &Program) -> Vec<(u64, u8, bool)> {
+    let mut cap = AccessCapture::default();
+    Machine::new(prog).unwrap().run_per_event(&mut cap).unwrap();
+    cap.0
+}
+
+/// The differential property: the streaming `TrafficMetrics` (folded
+/// through chunk lanes inside the profile pipeline) must agree exactly
+/// with the naive oracle replay of the captured stream.
+fn assert_matches_naive(
+    tr: &TrafficMetrics,
+    accs: &[(u64, u8, bool)],
+    policy: HierarchyPolicy,
+) -> Result<(), String> {
+    let mut oracle = NaiveHierarchy::host(policy);
+    for &(addr, _, is_store) in accs {
+        oracle.access(addr, is_store);
+    }
+    prop_assert!(tr.hierarchy_policy == policy, "policy label drifted");
+    prop_assert!(
+        tr.levels.len() == oracle.counts.len(),
+        "level count: streaming {} vs oracle {}",
+        tr.levels.len(),
+        oracle.counts.len()
+    );
+    for (s, (i, o)) in tr.levels.iter().zip(oracle.counts.iter().enumerate()) {
+        prop_assert!(
+            (s.hits, s.misses, s.writebacks) == (o.hits, o.misses, o.writebacks),
+            "{} level {i}: streaming ({}, {}, {}) vs naive ({}, {}, {})",
+            policy.name(),
+            s.hits,
+            s.misses,
+            s.writebacks,
+            o.hits,
+            o.misses,
+            o.writebacks
+        );
+        prop_assert!(
+            s.hits + s.misses <= accs.len() as u64,
+            "level {i} saw more accesses than the trace has"
+        );
+    }
+    prop_assert!(
+        (tr.dram_fills, tr.dram_writebacks) == (oracle.dram_fills, oracle.dram_writebacks),
+        "{} DRAM: streaming ({}, {}) vs naive ({}, {})",
+        policy.name(),
+        tr.dram_fills,
+        tr.dram_writebacks,
+        oracle.dram_fills,
+        oracle.dram_writebacks
+    );
+    // the structural identities the counters must satisfy in both policies
+    prop_assert!(
+        tr.levels[0].hits + tr.levels[0].misses == accs.len() as u64,
+        "L1 must see every access"
+    );
+    for w in tr.levels.windows(2) {
+        prop_assert!(
+            w[0].misses == w[1].hits + w[1].misses,
+            "each level must see exactly the level above's misses"
+        );
+    }
+    prop_assert!(
+        tr.dram_fills == tr.levels.last().unwrap().misses,
+        "DRAM fills must equal last-level misses"
+    );
+    Ok(())
+}
+
+fn profile_traffic(prog: &Program, policy: HierarchyPolicy) -> TrafficMetrics {
+    profile_opts(prog, MetricSet::all(), PipelineMode::Inline, policy).unwrap().traffic
+}
+
+// ---------------------------------------------------------------------------
+// 1. Streaming ≡ naive replay.
+
+#[test]
+fn streaming_matches_naive_replay_on_random_programs_inclusive() {
+    check_seeded("hierarchy == naive (inclusive)", 0x41C1, 16, |rng| {
+        let p = random_program(rng);
+        let tr = profile_traffic(&p, HierarchyPolicy::Inclusive);
+        assert_matches_naive(&tr, &capture_accesses(&p), HierarchyPolicy::Inclusive)
+    });
+}
+
+#[test]
+fn streaming_matches_naive_replay_on_random_programs_exclusive() {
+    check_seeded("hierarchy == naive (exclusive)", 0xE8C1, 16, |rng| {
+        let p = random_program(rng);
+        let tr = profile_traffic(&p, HierarchyPolicy::Exclusive);
+        assert_matches_naive(&tr, &capture_accesses(&p), HierarchyPolicy::Exclusive)
+    });
+}
+
+#[test]
+fn streaming_matches_naive_replay_on_real_kernels() {
+    // ≥ 2 real kernels spanning several chunk flushes: one dense regular
+    // Polybench kernel, one irregular Rodinia kernel — both policies
+    for (name, n) in [("gesummv", 48), ("bfs", 96)] {
+        let k = pisa_nmc::workloads::by_name(name).unwrap();
+        let p = k.build(n, 7);
+        let accs = capture_accesses(&p);
+        assert!(accs.len() > 1000, "{name}: want a multi-chunk trace, got {}", accs.len());
+        for policy in [HierarchyPolicy::Inclusive, HierarchyPolicy::Exclusive] {
+            let tr = profile_traffic(&p, policy);
+            if let Err(msg) = assert_matches_naive(&tr, &accs, policy) {
+                panic!("{name} ({}): {msg}", policy.name());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Inclusion invariant.
+
+#[test]
+fn inclusive_mode_never_hits_above_a_line_absent_below() {
+    let mut rng = pisa_nmc::util::Rng::new(0x1C5);
+    // footprint big enough to force evictions at every level of a scaled-
+    // down chain, so back-invalidation actually fires
+    let mut h = HierarchyReplay::new(HierarchyConfig {
+        levels: vec![
+            LevelConfig { name: "l1", capacity_bytes: 8 * 64, ways: 2 },
+            LevelConfig { name: "l2", capacity_bytes: 32 * 64, ways: 4 },
+            LevelConfig { name: "llc", capacity_bytes: 128 * 64, ways: 8 },
+        ],
+        line_bytes: 64,
+        policy: HierarchyPolicy::Inclusive,
+    });
+    // span ~512 lines of footprint: bigger than every level, so evictions
+    // and back-invalidations fire at L1, L2 *and* the LLC
+    let trace = pisa_nmc::testkit::address_trace(&mut rng, 20_000, 4096);
+    for (i, &addr) in trace.iter().enumerate() {
+        let hit = h.access(addr, i % 5 == 0);
+        // an upper-level hit implies the line is present all the way down
+        if hit < 2 {
+            for lower in hit + 1..3 {
+                assert!(
+                    h.level_contains(lower, addr),
+                    "hit at level {hit} but line absent from level {lower} (access {i})"
+                );
+            }
+        }
+        // periodically check full set inclusion (sorted subset walk)
+        if i % 512 == 0 {
+            for lvl in 0..2 {
+                let upper = h.level_lines(lvl);
+                let lower = h.level_lines(lvl + 1);
+                for line in &upper {
+                    assert!(
+                        lower.binary_search(line).is_ok(),
+                        "level {lvl} line {line} missing below (access {i})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Exclusive aggregate capacity.
+
+#[test]
+fn exclusive_mode_reaches_aggregate_capacity_inclusive_does_not() {
+    // fully-associative levels of 4 + 8 + 16 lines; a cyclic working set
+    // of 24 lines: bigger than the 16-line last level, within the 28-line
+    // aggregate. Exclusive never drops a line once resident (evictions
+    // cascade down and only fall off when every level is full), so after
+    // the cold pass every access hits somewhere. Inclusive's effective
+    // capacity is the last level (upper levels are subsets), and a 24-line
+    // cyclic walk over a 16-line LRU misses every time (stack distance 23).
+    let shape = |policy| HierarchyConfig {
+        levels: vec![
+            LevelConfig { name: "l1", capacity_bytes: 4 * 64, ways: 4 },
+            LevelConfig { name: "l2", capacity_bytes: 8 * 64, ways: 8 },
+            LevelConfig { name: "llc", capacity_bytes: 16 * 64, ways: 16 },
+        ],
+        line_bytes: 64,
+        policy,
+    };
+    const LINES: u64 = 24;
+    const PASSES: u64 = 8;
+
+    let mut excl = HierarchyReplay::new(shape(HierarchyPolicy::Exclusive));
+    let mut incl = HierarchyReplay::new(shape(HierarchyPolicy::Inclusive));
+    for _ in 0..PASSES {
+        for l in 0..LINES {
+            excl.access(l * 64, false);
+            incl.access(l * 64, false);
+        }
+    }
+    assert_eq!(excl.dram_fills(), LINES, "exclusive: cold misses only");
+    let e = excl.finalize();
+    let total_hits: u64 = e.iter().map(|s| s.hits).sum();
+    assert_eq!(total_hits, LINES * (PASSES - 1), "every warm access hits somewhere");
+    assert_eq!(
+        incl.dram_fills(),
+        LINES * PASSES,
+        "inclusive: every pass misses the 16-line last level"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 4. MRC monotonicity on random programs.
+
+#[test]
+fn mrc_miss_ratio_is_monotone_in_capacity_on_random_programs() {
+    check_seeded("MRC monotone", 0x30_0307, 24, |rng| {
+        let p = random_program(rng);
+        let tr = profile_traffic(&p, HierarchyPolicy::Inclusive);
+        for (i, w) in tr.mrc_miss_ratio.windows(2).enumerate() {
+            prop_assert!(
+                w[1] <= w[0] + 1e-15,
+                "miss ratio increased with capacity at point {i}: {:?}",
+                tr.mrc_miss_ratio
+            );
+        }
+        prop_assert!(
+            *tr.mrc_misses.last().unwrap() >= tr.cold_misses,
+            "largest capacity dipped below the compulsory floor"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 5. DRAM accounting vs the old independent bank.
+
+#[test]
+fn hierarchy_dram_bytes_never_exceed_independent_bank_on_suite_kernels() {
+    // the acceptance criterion: with the hierarchy enabled, reported DRAM
+    // bytes are ≤ the old independent-bank figure on every suite kernel
+    // (upper-level hits subtracted, never added)
+    for k in pisa_nmc::workloads::registry() {
+        let n = pisa_nmc::workloads::scaled_n(k.as_ref(), 0.1);
+        let p = k.build(n, 42);
+        let tr = profile_traffic(&p, HierarchyPolicy::Inclusive);
+        let hier = tr.dram_fill_bytes() + tr.dram_writeback_bytes();
+        let old = pisa_nmc::testkit::independent_bank_dram_bytes(&capture_accesses(&p));
+        assert!(
+            hier <= old,
+            "{}: hierarchy DRAM {} B exceeds the old independent-bank figure {} B",
+            k.info().name,
+            hier,
+            old
+        );
+    }
+}
+
+#[test]
+fn hierarchy_is_strictly_below_the_bank_when_upper_levels_carry_the_traffic() {
+    // crafted trace: one hot line h plus 16 filler lines all mapping to
+    // h's LLC set (stride = 2048 lines; 64 L1 sets and 512 L2 sets divide
+    // 2048, so they collide at every level). Pattern per cycle:
+    // h f1 h f2 ... h f16. Replayed under the *exclusive* policy, h lives
+    // only in L1 (in-set reuse distance 1 keeps it off the LRU), so the
+    // LLC-side set circulates just the 16 fillers through the aggregate
+    // 8+8+16 same-set ways and every warm access hits somewhere — DRAM
+    // sees the 17 cold fills and nothing else. (Inclusive would pin h's
+    // never-refreshed copy into the LLC by inclusion and thrash exactly
+    // like the bank — which is why the policy knob matters.) The
+    // independent bank's LLC-shaped cache sees h too: its refreshed copy
+    // pins a way, 17 distinct lines cycle through 16 ways, and every
+    // filler access misses, forever. The old accounting therefore keeps
+    // charging DRAM for traffic a hierarchy absorbs.
+    const STRIDE: u64 = 2048; // lines between same-LLC-set addresses
+    let base = 0x40_0000u64 / MRC_LINE_BYTES;
+    let mut accs: Vec<(u64, u8, bool)> = Vec::new();
+    for _ in 0..50 {
+        for f in 1..=16u64 {
+            accs.push((base * MRC_LINE_BYTES, 8, false)); // h
+            accs.push(((base + f * STRIDE) * MRC_LINE_BYTES, 8, false)); // f_i
+        }
+    }
+    let mut h = HierarchyReplay::new(HierarchyConfig::host(HierarchyPolicy::Exclusive));
+    for &(addr, _, is_store) in &accs {
+        h.access(addr, is_store);
+    }
+    let hier = (h.dram_fills() + h.dram_writebacks()) * MRC_LINE_BYTES;
+    let old = pisa_nmc::testkit::independent_bank_dram_bytes(&accs);
+    assert!(
+        hier < old / 10,
+        "expected an order-of-magnitude gap: hierarchy {hier} B vs bank {old} B"
+    );
+    // sanity: the default shapes make the collision argument above real
+    assert_eq!(HIERARCHY_LEVELS[2].capacity_bytes / MRC_LINE_BYTES / 16, STRIDE);
+}

@@ -1,24 +1,28 @@
 //! Traffic-subsystem cross-validation properties.
 //!
-//! 1. **Shadow caches ≡ `sim::cache` replay**: the streaming shadow-cache
-//!    hit/miss/writeback counts folded inside the chunked `AnalyzerStack`
-//!    pass must exactly match replaying the same (addr, is_store) stream
-//!    through freshly-built `sim::cache::Cache` instances — on seeded
-//!    random programs *and* real suite kernels. Any drift between the
-//!    streaming sweep and the simulator's cache model shows up here.
+//! 1. **Hierarchy counters ≡ direct replay**: the per-level counters
+//!    folded inside the chunked `AnalyzerStack` lane sweep must exactly
+//!    match a fresh `HierarchyReplay` driven access-at-a-time over the
+//!    captured stream — any drift introduced by chunk laning shows up
+//!    here. (The deeper proof against an *independent* naive
+//!    implementation lives in `prop_hierarchy.rs`.)
 //! 2. **MRC ≡ fully-associative LRU replay**: the one-pass stack-distance
 //!    MRC's exact miss counts must match a naive Mattson LRU stack
 //!    simulated at each capacity directly.
 //! 3. **Byte accounting ≡ event stream**: read/write byte totals must
 //!    equal summing the captured access sizes.
+//! 4. **Slope knee**: when present, the knee sits on the curve's steepest
+//!    drop and clears `MIN_KNEE_DROP`.
 
 use pisa_nmc::analysis::{profile, AppMetrics};
 use pisa_nmc::interp::{Instrument, Machine, TraceEvent};
 use pisa_nmc::ir::Program;
 use pisa_nmc::prop_assert;
-use pisa_nmc::sim::cache::Cache;
 use pisa_nmc::testkit::{check_seeded, random_program};
-use pisa_nmc::traffic::{MRC_CAPACITIES_BYTES, MRC_LINE_BYTES, SHADOW_CONFIGS};
+use pisa_nmc::traffic::{
+    HierarchyConfig, HierarchyPolicy, HierarchyReplay, MIN_KNEE_DROP, MRC_CAPACITIES_BYTES,
+    MRC_LINE_BYTES,
+};
 
 /// Capture the run's memory-access stream in trace order.
 #[derive(Default)]
@@ -72,29 +76,33 @@ fn assert_traffic_matches_replay(
         tr.write_bytes
     );
 
-    // shadow caches vs a direct sim::cache replay
-    for (cfg, stats) in SHADOW_CONFIGS.iter().zip(&tr.shadow) {
-        let mut direct = Cache::new(
-            cfg.capacity_bytes as usize,
-            cfg.ways as usize,
-            MRC_LINE_BYTES as usize,
-        );
-        for &(addr, _, is_store) in accs {
-            direct.access(addr, is_store);
-        }
+    // per-level hierarchy counters vs a direct access-at-a-time replay of
+    // the same engine (chunk laning must not change the fold)
+    let mut direct = HierarchyReplay::new(HierarchyConfig::host(tr.hierarchy_policy));
+    for &(addr, _, is_store) in accs {
+        direct.access(addr, is_store);
+    }
+    for (s, d) in tr.levels.iter().zip(direct.finalize()) {
         prop_assert!(
-            (stats.hits, stats.misses, stats.writebacks)
-                == (direct.hits, direct.misses, direct.writebacks),
-            "shadow '{}': streaming ({}, {}, {}) vs sim replay ({}, {}, {})",
-            cfg.name,
-            stats.hits,
-            stats.misses,
-            stats.writebacks,
-            direct.hits,
-            direct.misses,
-            direct.writebacks
+            (s.hits, s.misses, s.writebacks) == (d.hits, d.misses, d.writebacks),
+            "level '{}': streaming ({}, {}, {}) vs direct replay ({}, {}, {})",
+            s.name,
+            s.hits,
+            s.misses,
+            s.writebacks,
+            d.hits,
+            d.misses,
+            d.writebacks
         );
     }
+    prop_assert!(
+        (tr.dram_fills, tr.dram_writebacks) == (direct.dram_fills(), direct.dram_writebacks()),
+        "DRAM counters: streaming ({}, {}) vs direct replay ({}, {})",
+        tr.dram_fills,
+        tr.dram_writebacks,
+        direct.dram_fills(),
+        direct.dram_writebacks()
+    );
 
     // MRC vs the naive Mattson LRU stack at the smallest capacities (the
     // oracle is O(n·C), so only the cheap points are replayed)
@@ -119,8 +127,8 @@ fn assert_traffic_matches_replay(
 }
 
 #[test]
-fn traffic_matches_sim_cache_replay_on_random_programs() {
-    check_seeded("traffic == sim replay", 0x7AFF1C, 24, |rng| {
+fn traffic_matches_direct_replay_on_random_programs() {
+    check_seeded("traffic == direct replay", 0x7AFF1C, 24, |rng| {
         let p = random_program(rng);
         let m = profile(&p).map_err(|e| e.to_string())?;
         let accs = capture_accesses(&p);
@@ -129,7 +137,7 @@ fn traffic_matches_sim_cache_replay_on_random_programs() {
 }
 
 #[test]
-fn traffic_matches_sim_cache_replay_on_real_kernels() {
+fn traffic_matches_direct_replay_on_real_kernels() {
     // ≥ 2 real kernels, sized to span several chunk flushes: one dense
     // regular Polybench kernel and one irregular Rodinia kernel
     for (name, n) in [("gesummv", 48), ("bfs", 96)] {
@@ -145,17 +153,36 @@ fn traffic_matches_sim_cache_replay_on_real_kernels() {
 }
 
 #[test]
-fn mrc_knee_sits_inside_the_family_when_present() {
+fn default_profile_replays_the_inclusive_hierarchy() {
+    let k = pisa_nmc::workloads::by_name("gesummv").unwrap();
+    let m = profile(&k.build(24, 7)).unwrap();
+    assert_eq!(m.traffic.hierarchy_policy, HierarchyPolicy::Inclusive);
+    assert_eq!(m.traffic.levels.len(), 3);
+    assert_eq!(m.traffic.dram_fills, m.traffic.llc().unwrap().misses);
+}
+
+#[test]
+fn mrc_knee_sits_on_the_steepest_drop_when_present() {
     let k = pisa_nmc::workloads::by_name("atax").unwrap();
     let m = profile(&k.build(48, 7)).unwrap();
     let tr = &m.traffic;
     if let Some(knee) = tr.mrc_knee_bytes {
         assert!(MRC_CAPACITIES_BYTES.contains(&knee), "knee {knee} not in family");
-        // definition check: first capacity under 50% of the ceiling
-        let threshold = 0.5 * tr.mrc_miss_ratio[0];
+        // slope definition: the knee's drop is the curve's maximum and
+        // clears the flatness floor; earlier drops are strictly smaller
+        // (ties resolve to the smallest capacity)
         let i = MRC_CAPACITIES_BYTES.iter().position(|&c| c == knee).unwrap();
-        assert!(tr.mrc_miss_ratio[i] < threshold);
-        assert!(tr.mrc_miss_ratio[..i].iter().all(|&r| r >= threshold));
+        assert!(i >= 1, "knee cannot sit on the first point");
+        let drop_at = |j: usize| tr.mrc_miss_ratio[j - 1] - tr.mrc_miss_ratio[j];
+        let knee_drop = drop_at(i);
+        assert!(knee_drop >= MIN_KNEE_DROP, "knee drop {knee_drop} under the floor");
+        for j in 1..tr.mrc_miss_ratio.len() {
+            if j < i {
+                assert!(drop_at(j) < knee_drop, "earlier drop at {j} ties or beats the knee");
+            } else {
+                assert!(drop_at(j) <= knee_drop, "later drop at {j} beats the knee");
+            }
+        }
     }
     // the rank scalar is always positive and, when a knee exists, equals it
     assert!(tr.knee_or_sentinel() > 0.0);
