@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
         let mut m = Machine::new(&prog).unwrap();
         std::hint::black_box(pisa_nmc::interp::run_offload(&mut m, &mut stack).unwrap());
     });
-    bench("dispatch_sharded (4 family-sharded workers)", 1, 3, Some((n, "instr")), || {
+    bench("dispatch_sharded (family-sharded worker pool, auto)", 1, 3, Some((n, "instr")), || {
         // same analyzer set, sharded by family across the auto-sized
         // worker pool, each chunk broadcast to all of them — same
         // un-finalized endpoint as the arms above
@@ -117,6 +117,51 @@ fn main() -> anyhow::Result<()> {
         run_with(&prog, &mut a);
         std::hint::black_box(a.finalize(n));
     });
+    // The SHARDS comparison (ISSUE 6): the exact Olken/Fenwick MRC kernel
+    // vs fixed-rate sampling vs the fixed-size adaptive variant, on the
+    // captured address stream of the largest-footprint workload we bench
+    // (gesummv n=256: ~1M doubles → ~16k distinct 64B lines). Stream
+    // capture is outside the timed region so the arms measure only the
+    // stack-distance kernels.
+    struct AddrCapture(Vec<u64>);
+    impl Instrument for AddrCapture {
+        fn on_event(&mut self, ev: &pisa_nmc::interp::TraceEvent) {
+            if let pisa_nmc::interp::TraceEvent::Instr(e) = ev {
+                if let Some(m) = e.mem {
+                    self.0.push(m.addr);
+                }
+            }
+        }
+    }
+    let big = by_name("gesummv").unwrap().build(256, 42);
+    let mut cap = AddrCapture(Vec::new());
+    run_program(&big, &mut cap).unwrap();
+    let mrc_addrs = cap.0;
+    let na = mrc_addrs.len() as u64;
+    println!("\nmrc kernel arms: gesummv n=256, {na} memory accesses");
+    bench("mrc_exact (Olken/Fenwick)", 1, 5, Some((na, "access")), || {
+        let mut b = pisa_nmc::traffic::MrcBuilder::new();
+        for &a in &mrc_addrs {
+            b.access(a);
+        }
+        std::hint::black_box(b.miss_counts());
+    });
+    bench("mrc_sampled (SHARDS, rate 0.01)", 1, 5, Some((na, "access")), || {
+        let mut s = pisa_nmc::traffic::SampledMrc::new(0.01);
+        for &a in &mrc_addrs {
+            s.access(a);
+        }
+        std::hint::black_box(s.miss_ratios());
+    });
+    bench("mrc_sampled_fixed (S_max 8192, rate-adaptive)", 1, 5, Some((na, "access")), || {
+        let mut s =
+            pisa_nmc::traffic::SampledMrc::fixed_size(pisa_nmc::traffic::DEFAULT_SAMPLE_S_MAX);
+        for &a in &mrc_addrs {
+            s.access(a);
+        }
+        std::hint::black_box(s.miss_ratios());
+    });
+
     bench("analyzer_ilp (4 windows + inf)", 1, 3, Some((n, "instr")), || {
         let mut a = IlpAnalyzer::new(prog.func.n_regs);
         run_with(&prog, &mut a);

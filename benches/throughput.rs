@@ -25,11 +25,12 @@
 use std::time::Instant;
 
 use pisa_nmc::analysis::{
-    profile, profile_offload, profile_per_event, profile_sharded, Metric, MetricSet,
+    profile, profile_offload, profile_opts, profile_per_event, profile_sharded, Metric, MetricSet,
 };
-use pisa_nmc::coordinator::{run_suite_select, AppResult};
+use pisa_nmc::coordinator::{run_suite_opts, run_suite_select, AppResult};
 use pisa_nmc::interp::{PipelineMode, Workers};
 use pisa_nmc::testkit::bench::bench_scale;
+use pisa_nmc::traffic::{MrcMode, TrafficOpts};
 use pisa_nmc::util::Json;
 use pisa_nmc::workloads::{registry, scaled_n};
 
@@ -148,6 +149,55 @@ fn main() -> anyhow::Result<()> {
         tot_inline / tot_sharded
     );
 
+    // SHARDS sampling arms (ISSUE 6): traffic family alone, exact vs
+    // sampled:0.01 — first across the whole suite, then on the single
+    // largest-footprint kernel (where the exact Olken/Fenwick kernel's
+    // O(log footprint) per access bites hardest; acceptance: ≥ 2×)
+    let traffic_only = MetricSet::from_names("traffic")?;
+    let sampled_opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 0.01 });
+    let t = Instant::now();
+    let exact_apps =
+        run_suite_opts(scale, 42, 8, traffic_only, PipelineMode::Inline, TrafficOpts::default())?;
+    let mrc_exact_s = t.elapsed().as_secs_f64();
+    let suite_events: u64 = exact_apps.iter().map(|a| a.metrics.exec.events()).sum();
+    let t = Instant::now();
+    run_suite_opts(scale, 42, 8, traffic_only, PipelineMode::Inline, sampled_opts)?;
+    let mrc_sampled_s = t.elapsed().as_secs_f64();
+    let mrc_exact_eps = suite_events as f64 / mrc_exact_s.max(1e-9);
+    let mrc_sampled_eps = suite_events as f64 / mrc_sampled_s.max(1e-9);
+    println!(
+        "\ntraffic-only suite: exact {:.2}M events/s vs sampled:0.01 {:.2}M events/s ({:.2}x)",
+        mrc_exact_eps / 1e6,
+        mrc_sampled_eps / 1e6,
+        mrc_sampled_eps / mrc_exact_eps.max(1e-9),
+    );
+    let biggest = exact_apps
+        .iter()
+        .max_by_key(|a| a.metrics.traffic.footprint_lines)
+        .expect("suite is non-empty");
+    let kernel_name = biggest.name.clone();
+    let kernel_lines = biggest.metrics.traffic.footprint_lines;
+    let kprog = {
+        let k = registry().into_iter().find(|k| k.info().name == kernel_name).unwrap();
+        k.build(biggest.n, 42)
+    };
+    let t = Instant::now();
+    let ke = profile_opts(&kprog, traffic_only, PipelineMode::Inline, TrafficOpts::default())?;
+    let kernel_exact_s = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    profile_opts(&kprog, traffic_only, PipelineMode::Inline, sampled_opts)?;
+    let kernel_sampled_s = t.elapsed().as_secs_f64();
+    let kernel_events = ke.exec.events() as f64;
+    let kernel_exact_eps = kernel_events / kernel_exact_s.max(1e-9);
+    let kernel_sampled_eps = kernel_events / kernel_sampled_s.max(1e-9);
+    println!(
+        "largest footprint ({kernel_name}, {kernel_lines} lines): exact {:.2}M events/s vs \
+         sampled:0.01 {:.2}M events/s ({:.2}x)",
+        kernel_exact_eps / 1e6,
+        kernel_sampled_eps / 1e6,
+        kernel_sampled_eps / kernel_exact_eps.max(1e-9),
+    );
+
     if emit_json {
         let mut j = Json::obj();
         j.set("scale", scale);
@@ -166,6 +216,20 @@ fn main() -> anyhow::Result<()> {
         traffic.set("disabled_events_per_sec", no_traffic_eps);
         traffic.set("overhead_pct", traffic_overhead_pct);
         j.set("traffic", traffic);
+        // exact vs SHARDS-sampled MRC (traffic family alone, inline):
+        // the perf claim `--mrc sampled:0.01` is accountable to (≥ 2× on
+        // the largest-footprint kernel)
+        let mut mrc = Json::obj();
+        mrc.set("rate", 0.01);
+        mrc.set("suite_exact_events_per_sec", mrc_exact_eps);
+        mrc.set("suite_sampled_events_per_sec", mrc_sampled_eps);
+        mrc.set("suite_speedup", mrc_sampled_eps / mrc_exact_eps.max(1e-9));
+        mrc.set("kernel", kernel_name.as_str());
+        mrc.set("kernel_footprint_lines", kernel_lines);
+        mrc.set("kernel_exact_events_per_sec", kernel_exact_eps);
+        mrc.set("kernel_sampled_events_per_sec", kernel_sampled_eps);
+        mrc.set("kernel_speedup", kernel_sampled_eps / kernel_exact_eps.max(1e-9));
+        j.set("mrc_sampled", mrc);
         let mut apps = Json::obj();
         for ((a, o), sh) in inline_apps.iter().zip(&offload_apps).zip(&sharded_apps) {
             let mut app = Json::obj();

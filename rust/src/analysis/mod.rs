@@ -71,7 +71,7 @@ use crate::interp::{
 };
 use crate::ir::Program;
 use crate::sim::{Region, TaskTraceCollector};
-use crate::traffic::{HierarchyPolicy, TrafficAnalyzer, TrafficMetrics};
+use crate::traffic::{HierarchyPolicy, TrafficAnalyzer, TrafficMetrics, TrafficOpts, TrafficParts};
 use crate::util::Json;
 
 /// All §II metrics for one application run (PISA's JSON result object),
@@ -282,13 +282,32 @@ impl AnalyzerStack {
     /// Construction is cheap; disabled analyzers simply never receive
     /// events and finalize to empty results.
     pub fn new(prog: &Program, metrics: MetricSet) -> Self {
-        Self::new_with(prog, metrics, HierarchyPolicy::default())
+        Self::new_opts(prog, metrics, TrafficOpts::default())
     }
 
-    /// [`AnalyzerStack::new`] with the traffic hierarchy's replay policy —
-    /// the CLI `--hierarchy` flag ends up here on every delivery path
-    /// (including each sharded worker's per-shard stack).
+    /// [`AnalyzerStack::new`] with the traffic hierarchy's replay policy
+    /// (default MRC mode) — kept for callers that predate `--mrc`.
     pub fn new_with(prog: &Program, metrics: MetricSet, hierarchy: HierarchyPolicy) -> Self {
+        Self::new_opts(prog, metrics, TrafficOpts::with_hierarchy(hierarchy))
+    }
+
+    /// [`AnalyzerStack::new`] with the full traffic knob set — the CLI
+    /// `--hierarchy` and `--mrc` flags end up here on every delivery path
+    /// (including each sharded worker's per-shard stack).
+    pub fn new_opts(prog: &Program, metrics: MetricSet, opts: TrafficOpts) -> Self {
+        Self::new_parts(prog, metrics, opts, TrafficParts::ALL)
+    }
+
+    /// [`AnalyzerStack::new_opts`] restricted to the given traffic halves
+    /// — how a shard plan hands one worker only the MRC fold and another
+    /// only the hierarchy replay (see [`shard`]). No-op unless the
+    /// `traffic` family is enabled.
+    pub(crate) fn new_parts(
+        prog: &Program,
+        metrics: MetricSet,
+        opts: TrafficOpts,
+        parts: TrafficParts,
+    ) -> Self {
         let n_regs = prog.func.n_regs;
         AnalyzerStack {
             name: prog.func.name.clone(),
@@ -301,9 +320,8 @@ impl AnalyzerStack {
             dlp: DlpAnalyzer::for_program(prog),
             bblp: BblpAnalyzer::new(n_regs),
             pbblp: PbblpAnalyzer::new(prog),
-            traffic: metrics
-                .contains(Metric::Traffic)
-                .then(|| TrafficAnalyzer::with_policy(hierarchy)),
+            traffic: (metrics.contains(Metric::Traffic) && !parts.is_empty())
+                .then(|| TrafficAnalyzer::with_opts_parts(opts, parts)),
             tasks: None,
             lanes: ChunkLanes::default(),
         }
@@ -440,8 +458,10 @@ impl Instrument for AnalyzerStack {
 
     /// Per-lane needs-mask derived from the enabled families, so
     /// `ChunkLanes::rebuild_masked` skips unread lanes on subset runs:
-    /// tags only for `mix`, addrs for `mem_entropy`/`reuse`/`traffic`,
-    /// sizes + store bitset only for `traffic` (its consumer).
+    /// tags only for `mix`, addrs for `mem_entropy`/`reuse`/`traffic`.
+    /// The traffic mask comes from the analyzer itself — a shard carrying
+    /// only the hierarchy replay skips the sizes lane its MRC half would
+    /// have needed.
     fn lane_needs(&self) -> LaneMask {
         let m = self.metrics;
         let mut needs = LaneMask::NONE;
@@ -451,8 +471,8 @@ impl Instrument for AnalyzerStack {
         if m.contains(Metric::MemEntropy) || m.contains(Metric::Reuse) {
             needs |= LaneMask::ADDRS;
         }
-        if m.contains(Metric::Traffic) {
-            needs |= LaneMask::ADDRS | LaneMask::SIZES | LaneMask::STORES;
+        if let Some(t) = self.traffic.as_ref() {
+            needs |= t.lane_needs();
         }
         needs
     }
@@ -487,9 +507,9 @@ fn profile_impl(
     prog: &Program,
     metrics: MetricSet,
     delivery: Delivery,
-    hierarchy: HierarchyPolicy,
+    opts: TrafficOpts,
 ) -> Result<AppMetrics> {
-    Ok(profile_run(prog, metrics, delivery, hierarchy, false)?.0)
+    Ok(profile_run(prog, metrics, delivery, opts, false)?.0)
 }
 
 /// The one implementation every profiling entry point lands on: run
@@ -497,21 +517,23 @@ fn profile_impl(
 /// region/task trace the machine models consume, and finalize into one
 /// [`AppMetrics`]. The sharded delivery builds one stack per planned
 /// shard and merges deterministically ([`shard::ShardPlan`]); every other
-/// delivery drives a single stack. `hierarchy` selects the traffic
-/// family's replay policy and must reach every path identically —
-/// bit-identity across deliveries includes the per-level counters.
+/// delivery drives a single stack. `opts` selects the traffic family's
+/// replay policy and MRC kernel and must reach every path identically —
+/// bit-identity across deliveries includes the per-level counters and,
+/// in sampled mode, the SHARDS estimates (the sampling hash is
+/// deterministic).
 fn profile_run(
     prog: &Program,
     metrics: MetricSet,
     delivery: Delivery,
-    hierarchy: HierarchyPolicy,
+    opts: TrafficOpts,
     with_tasks: bool,
 ) -> Result<(AppMetrics, Option<Vec<Region>>)> {
     crate::ir::verify::verify_ok(prog);
     if let Delivery::Sharded(workers) = delivery {
-        return shard::profile_sharded_run(prog, metrics, workers, hierarchy, with_tasks);
+        return shard::profile_sharded_run(prog, metrics, workers, opts, with_tasks);
     }
-    let mut stack = AnalyzerStack::new_with(prog, metrics, hierarchy);
+    let mut stack = AnalyzerStack::new_opts(prog, metrics, opts);
     if with_tasks {
         stack = stack.with_task_trace(prog);
     }
@@ -541,29 +563,29 @@ pub fn profile_with_tasks(
     prog: &Program,
     metrics: MetricSet,
     mode: PipelineMode,
-    hierarchy: HierarchyPolicy,
+    opts: TrafficOpts,
 ) -> Result<(AppMetrics, Vec<Region>)> {
-    let (m, regions) = profile_run(prog, metrics, delivery_for(mode), hierarchy, true)?;
+    let (m, regions) = profile_run(prog, metrics, delivery_for(mode), opts, true)?;
     Ok((m, regions.expect("task trace enabled")))
 }
 
 /// Run `prog` once, streaming the trace through every analyzer (chunked
 /// delivery — the default fast path).
 pub fn profile(prog: &Program) -> Result<AppMetrics> {
-    profile_impl(prog, MetricSet::all(), Delivery::Chunked, HierarchyPolicy::default())
+    profile_impl(prog, MetricSet::all(), Delivery::Chunked, TrafficOpts::default())
 }
 
 /// [`profile`] restricted to a metric subset. Disabled families come back
 /// as shape-stable empty results.
 pub fn profile_select(prog: &Program, metrics: MetricSet) -> Result<AppMetrics> {
-    profile_impl(prog, metrics, Delivery::Chunked, HierarchyPolicy::default())
+    profile_impl(prog, metrics, Delivery::Chunked, TrafficOpts::default())
 }
 
 /// [`profile`] with the analyzers folding on a dedicated analysis thread,
 /// overlapped with interpretation (see [`crate::interp::offload`]).
 /// Metrics are bit-identical to [`profile`] and [`profile_per_event`].
 pub fn profile_offload(prog: &Program) -> Result<AppMetrics> {
-    profile_impl(prog, MetricSet::all(), Delivery::Offload, HierarchyPolicy::default())
+    profile_impl(prog, MetricSet::all(), Delivery::Offload, TrafficOpts::default())
 }
 
 /// [`profile`] with the analyzers sharded by metric family across an
@@ -572,7 +594,7 @@ pub fn profile_offload(prog: &Program) -> Result<AppMetrics> {
 /// bit-identical to every other delivery path.
 pub fn profile_sharded(prog: &Program) -> Result<AppMetrics> {
     let delivery = Delivery::Sharded(Workers::Auto);
-    profile_impl(prog, MetricSet::all(), delivery, HierarchyPolicy::default())
+    profile_impl(prog, MetricSet::all(), delivery, TrafficOpts::default())
 }
 
 /// [`profile_select`] with the delivery mode as a knob — the entry point
@@ -582,22 +604,22 @@ pub fn profile_select_mode(
     metrics: MetricSet,
     mode: PipelineMode,
 ) -> Result<AppMetrics> {
-    profile_impl(prog, metrics, delivery_for(mode), HierarchyPolicy::default())
+    profile_impl(prog, metrics, delivery_for(mode), TrafficOpts::default())
 }
 
 /// The fully-parameterized pipeline entry point: metric subset, delivery
-/// mode *and* traffic-hierarchy replay policy (the CLI `--metrics`,
-/// `--pipeline` and `--hierarchy` flags respectively). Like every
-/// narrower `profile_*` wrapper, this lands on the one private
-/// `profile_impl`/`profile_run` implementation — the wrappers differ
-/// only in which knobs they default.
+/// mode *and* the traffic knobs — hierarchy replay policy and MRC kernel
+/// (the CLI `--metrics`, `--pipeline`, `--hierarchy` and `--mrc` flags
+/// respectively). Like every narrower `profile_*` wrapper, this lands on
+/// the one private `profile_impl`/`profile_run` implementation — the
+/// wrappers differ only in which knobs they default.
 pub fn profile_opts(
     prog: &Program,
     metrics: MetricSet,
     mode: PipelineMode,
-    hierarchy: HierarchyPolicy,
+    opts: TrafficOpts,
 ) -> Result<AppMetrics> {
-    profile_impl(prog, metrics, delivery_for(mode), hierarchy)
+    profile_impl(prog, metrics, delivery_for(mode), opts)
 }
 
 /// Reference path: identical to [`profile`] but with one `on_event` call
@@ -605,19 +627,19 @@ pub fn profile_opts(
 /// chunked-equivalence property test and the dispatch microbenchmarks have
 /// an unbatched baseline; not used by the pipeline.
 pub fn profile_per_event(prog: &Program) -> Result<AppMetrics> {
-    profile_impl(prog, MetricSet::all(), Delivery::PerEvent, HierarchyPolicy::default())
+    profile_impl(prog, MetricSet::all(), Delivery::PerEvent, TrafficOpts::default())
 }
 
-/// [`profile_per_event`] under an explicit hierarchy policy — the
-/// un-batched reference arm for the policy-parameterized equivalence
-/// tests (per-event ≡ chunked ≡ offload ≡ sharded must hold for *both*
-/// replay policies).
+/// [`profile_per_event`] under explicit traffic knobs — the un-batched
+/// reference arm for the parameterized equivalence tests (per-event ≡
+/// chunked ≡ offload ≡ sharded must hold for both replay policies and
+/// both MRC kernels).
 pub fn profile_per_event_opts(
     prog: &Program,
     metrics: MetricSet,
-    hierarchy: HierarchyPolicy,
+    opts: TrafficOpts,
 ) -> Result<AppMetrics> {
-    profile_impl(prog, metrics, Delivery::PerEvent, hierarchy)
+    profile_impl(prog, metrics, Delivery::PerEvent, opts)
 }
 
 impl AppMetrics {

@@ -9,14 +9,19 @@
 //!
 //! Families group along the lane boundaries the SoA
 //! [`ChunkLanes`](crate::interp::ChunkLanes) view already draws, so each
-//! worker streams mostly its own lane:
+//! worker streams mostly its own lane. The `traffic` family is itself
+//! **splittable** ([`TrafficParts`]): its MRC + byte-accounting half and
+//! its hierarchy-replay half are independent folds over the address lane,
+//! so they get separate groups — the two heaviest memory-side folds no
+//! longer serialize on one worker:
 //!
-//! | group | families | sweeps |
-//! |---|---|---|
-//! | tags    | `mix`, `branch`                  | op-tag lane / event slice |
-//! | mem     | `mem_entropy`, `reuse`, `traffic`| addrs / sizes / store lanes |
-//! | dep     | `ilp`, `dlp`                     | event slices (dataflow) |
-//! | block   | `bblp`, `pbblp`                  | event slices (block structure) |
+//! | group | families | traffic half | sweeps |
+//! |---|---|---|---|
+//! | tags  | `mix`, `branch`        | —         | op-tag lane / event slice |
+//! | mem   | `mem_entropy`, `reuse` | MRC       | addrs / sizes / store lanes |
+//! | hier  | —                      | hierarchy | addrs / store lanes |
+//! | dep   | `ilp`, `dlp`           | —         | event slices (dataflow) |
+//! | block | `bblp`, `pbblp`        | —         | event slices (block structure) |
 //!
 //! `Workers::Auto` sizes the pool as one worker per non-empty group;
 //! `Workers::Fixed(n)` packs the groups contiguously into at most `n`
@@ -31,26 +36,80 @@ use anyhow::Result;
 use crate::interp::{run_sharded, Instrument, Machine, Workers};
 use crate::ir::Program;
 use crate::sim::Region;
-use crate::traffic::HierarchyPolicy;
+use crate::traffic::{TrafficOpts, TrafficParts};
 
 use super::{AnalyzerStack, AppMetrics, ExecStats, Metric, MetricSet};
 
-/// The canonical shard groups, in plan order. Every metric family appears
-/// in exactly one group (pinned by a unit test), so any plan's shards are
-/// pairwise disjoint and cover the enabled set.
-pub const SHARD_GROUPS: [&[Metric]; 4] = [
-    &[Metric::Mix, Metric::Branch],
-    &[Metric::MemEntropy, Metric::Reuse, Metric::Traffic],
-    &[Metric::Ilp, Metric::Dlp],
-    &[Metric::Bblp, Metric::Pbblp],
+/// One canonical shard group: the families that fold together, plus the
+/// half of the `traffic` family (if any) that rides with them.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardGroup {
+    pub name: &'static str,
+    pub families: &'static [Metric],
+    pub traffic: TrafficParts,
+}
+
+/// The canonical shard groups, in plan order. Every non-traffic family
+/// appears in exactly one group and each [`TrafficParts`] half in exactly
+/// one (pinned by a unit test), so any plan's shards are pairwise
+/// disjoint and cover the enabled set.
+pub const SHARD_GROUPS: [ShardGroup; 5] = [
+    ShardGroup {
+        name: "tags",
+        families: &[Metric::Mix, Metric::Branch],
+        traffic: TrafficParts::NONE,
+    },
+    ShardGroup {
+        name: "mem",
+        families: &[Metric::MemEntropy, Metric::Reuse],
+        traffic: TrafficParts::MRC,
+    },
+    ShardGroup { name: "hier", families: &[], traffic: TrafficParts::HIERARCHY },
+    ShardGroup {
+        name: "dep",
+        families: &[Metric::Ilp, Metric::Dlp],
+        traffic: TrafficParts::NONE,
+    },
+    ShardGroup {
+        name: "block",
+        families: &[Metric::Bblp, Metric::Pbblp],
+        traffic: TrafficParts::NONE,
+    },
 ];
 
+/// What one worker folds: a family subset plus the traffic halves it
+/// owns. `metrics` includes [`Metric::Traffic`] exactly when `traffic` is
+/// non-empty, so the per-shard stack allocates its traffic analyzer with
+/// just those halves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub metrics: MetricSet,
+    pub traffic: TrafficParts,
+}
+
+impl ShardSpec {
+    fn none() -> ShardSpec {
+        ShardSpec { metrics: MetricSet::none(), traffic: TrafficParts::NONE }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty() && self.traffic.is_empty()
+    }
+
+    fn union(self, other: ShardSpec) -> ShardSpec {
+        ShardSpec {
+            metrics: self.metrics.union(other.metrics),
+            traffic: self.traffic.union(other.traffic),
+        }
+    }
+}
+
 /// How the enabled metric families split across analyzer workers: one
-/// [`MetricSet`] per worker, pairwise disjoint, union equal to the
-/// enabled set.
+/// [`ShardSpec`] per worker, pairwise disjoint (families *and* traffic
+/// halves), union equal to the enabled set.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardPlan {
-    shards: Vec<MetricSet>,
+    shards: Vec<ShardSpec>,
 }
 
 impl ShardPlan {
@@ -58,17 +117,26 @@ impl ShardPlan {
     /// with no lane-aware family enabled the plan is one (possibly empty)
     /// shard, which keeps the topology total for metric-less runs.
     pub fn new(metrics: MetricSet, workers: Workers) -> Self {
-        let groups: Vec<MetricSet> = SHARD_GROUPS
+        let groups: Vec<ShardSpec> = SHARD_GROUPS
             .iter()
-            .map(|fams| {
-                fams.iter()
+            .map(|group| {
+                let fams = group
+                    .families
+                    .iter()
                     .filter(|m| metrics.contains(**m))
-                    .fold(MetricSet::none(), |set, &m| set.with(m))
+                    .fold(MetricSet::none(), |set, &m| set.with(m));
+                let traffic = if metrics.contains(Metric::Traffic) {
+                    group.traffic
+                } else {
+                    TrafficParts::NONE
+                };
+                let fams = if traffic.is_empty() { fams } else { fams.with(Metric::Traffic) };
+                ShardSpec { metrics: fams, traffic }
             })
-            .filter(|set| !set.is_empty())
+            .filter(|spec| !spec.is_empty())
             .collect();
         if groups.is_empty() {
-            return ShardPlan { shards: vec![MetricSet::none()] };
+            return ShardPlan { shards: vec![ShardSpec::none()] };
         }
         let n = match workers {
             Workers::Auto => groups.len(),
@@ -77,7 +145,7 @@ impl ShardPlan {
         // contiguous partition of the canonical group order into n shards;
         // the index map is monotone and surjective for n <= len, so every
         // shard receives at least one group
-        let mut shards = vec![MetricSet::none(); n];
+        let mut shards = vec![ShardSpec::none(); n];
         for (i, g) in groups.iter().enumerate() {
             let slot = i * n / groups.len();
             shards[slot] = shards[slot].union(*g);
@@ -90,8 +158,8 @@ impl ShardPlan {
         self.shards.len()
     }
 
-    /// Per-worker family subsets, in plan (= merge) order.
-    pub fn shards(&self) -> &[MetricSet] {
+    /// Per-worker shard specs, in plan (= merge) order.
+    pub fn shards(&self) -> &[ShardSpec] {
         &self.shards
     }
 }
@@ -105,14 +173,14 @@ pub(super) fn profile_sharded_run(
     prog: &Program,
     metrics: MetricSet,
     workers: Workers,
-    hierarchy: HierarchyPolicy,
+    opts: TrafficOpts,
     with_tasks: bool,
 ) -> Result<(AppMetrics, Option<Vec<Region>>)> {
     let plan = ShardPlan::new(metrics, workers);
     let mut stacks: Vec<AnalyzerStack> = plan
         .shards()
         .iter()
-        .map(|&subset| AnalyzerStack::new_with(prog, subset, hierarchy))
+        .map(|spec| AnalyzerStack::new_parts(prog, spec.metrics, opts, spec.traffic))
         .collect();
     if with_tasks {
         let last = stacks.pop().expect("plan is never empty");
@@ -132,24 +200,40 @@ pub(super) fn profile_sharded_run(
 /// Fold the per-shard stacks into one [`AppMetrics`]: each family's
 /// result is adopted from the one shard that owned it (plan order — the
 /// shards are disjoint, so this is a disjoint union, not a reduction).
+/// The `traffic` family may be split across two shards; its halves stitch
+/// back through [`crate::traffic::TrafficMetrics::adopt_parts`].
 fn merge_shards(
     plan: &ShardPlan,
     stacks: Vec<AnalyzerStack>,
     exec: ExecStats,
 ) -> (AppMetrics, Option<Vec<Region>>) {
     debug_assert!(
-        plan.shards().iter().map(|s| s.len()).sum::<usize>()
-            == plan.shards().iter().fold(MetricSet::none(), |a, s| a.union(*s)).len(),
+        {
+            let mut seen = MetricSet::none();
+            let mut parts = TrafficParts::NONE;
+            let mut disjoint = true;
+            for spec in plan.shards() {
+                for m in Metric::ALL {
+                    if m != Metric::Traffic && spec.metrics.contains(m) {
+                        disjoint &= !seen.contains(m);
+                        seen = seen.with(m);
+                    }
+                }
+                disjoint &= spec.traffic.intersect(parts).is_empty();
+                parts = parts.union(spec.traffic);
+            }
+            disjoint
+        },
         "shard plan families overlap"
     );
     let mut parts = plan.shards().iter().zip(stacks);
     let (_, first_stack) = parts.next().expect("plan is never empty");
     let (mut merged, mut regions) = first_stack.finalize(exec.clone());
     // shard 0's disabled families finalized shape-stable empty; overwrite
-    // exactly the families later shards own
-    for (&subset, stack) in parts {
+    // exactly the families (and traffic halves) later shards own
+    for (spec, stack) in parts {
         let (m, r) = stack.finalize(exec.clone());
-        adopt(&mut merged, m, subset);
+        adopt(&mut merged, m, spec);
         if r.is_some() {
             regions = r;
         }
@@ -158,9 +242,11 @@ fn merge_shards(
     (merged, regions)
 }
 
-/// Move the families in `owned` from `src` into `dst`. `spatial` derives
-/// from `reuse`, so it travels with the `Reuse` family.
-fn adopt(dst: &mut AppMetrics, src: AppMetrics, owned: MetricSet) {
+/// Move the families `spec` owns from `src` into `dst`. `spatial` derives
+/// from `reuse`, so it travels with the `Reuse` family; the traffic
+/// halves move as blocks via `adopt_parts`.
+fn adopt(dst: &mut AppMetrics, src: AppMetrics, spec: &ShardSpec) {
+    let owned = spec.metrics;
     let AppMetrics {
         mix,
         branch,
@@ -199,8 +285,8 @@ fn adopt(dst: &mut AppMetrics, src: AppMetrics, owned: MetricSet) {
     if owned.contains(Metric::Pbblp) {
         dst.pbblp = pbblp;
     }
-    if owned.contains(Metric::Traffic) {
-        dst.traffic = traffic;
+    if !spec.traffic.is_empty() {
+        dst.traffic.adopt_parts(traffic, spec.traffic);
     }
 }
 
@@ -209,56 +295,83 @@ mod tests {
     use super::*;
     use crate::analysis::{profile, profile_select};
     use crate::ir::ProgramBuilder;
+    use crate::traffic::{HierarchyPolicy, MrcMode};
 
     #[test]
-    fn shard_groups_cover_every_family_exactly_once() {
+    fn shard_groups_cover_every_family_and_traffic_half_exactly_once() {
         let mut seen = MetricSet::none();
+        let mut parts = TrafficParts::NONE;
         let mut count = 0;
         for group in SHARD_GROUPS {
-            for &m in group {
+            for &m in group.families {
+                assert_ne!(m, Metric::Traffic, "traffic splits by parts, not by family");
                 assert!(!seen.contains(m), "{} in two groups", m.name());
                 seen = seen.with(m);
                 count += 1;
             }
+            assert!(
+                group.traffic.intersect(parts).is_empty(),
+                "{} re-owns a traffic half",
+                group.name
+            );
+            parts = parts.union(group.traffic);
         }
-        assert!(seen.is_all(), "a family is missing from SHARD_GROUPS");
-        assert_eq!(count, Metric::ALL.len());
+        assert!(seen.with(Metric::Traffic).is_all(), "a family is missing from SHARD_GROUPS");
+        assert_eq!(count, Metric::ALL.len() - 1);
+        assert!(parts.is_all(), "a traffic half is missing from SHARD_GROUPS");
     }
 
     #[test]
     fn auto_sizing_follows_the_enabled_families() {
         // all nine families: one worker per canonical group
         let all = ShardPlan::new(MetricSet::all(), Workers::Auto);
-        assert_eq!(all.workers(), 4);
+        assert_eq!(all.workers(), 5);
         // a single family collapses to one worker
         let mix = ShardPlan::new(MetricSet::from_names("mix").unwrap(), Workers::Auto);
         assert_eq!(mix.workers(), 1);
-        assert_eq!(mix.shards()[0].names(), vec!["mix"]);
+        assert_eq!(mix.shards()[0].metrics.names(), vec!["mix"]);
         // two families in the same group still collapse to one worker
         let tags = ShardPlan::new(MetricSet::from_names("mix,branch").unwrap(), Workers::Auto);
         assert_eq!(tags.workers(), 1);
         // families straddling two groups: two workers
         let two = ShardPlan::new(MetricSet::from_names("mix,ilp").unwrap(), Workers::Auto);
         assert_eq!(two.workers(), 2);
-        assert_eq!(two.shards()[0].names(), vec!["mix"]);
-        assert_eq!(two.shards()[1].names(), vec!["ilp"]);
+        assert_eq!(two.shards()[0].metrics.names(), vec!["mix"]);
+        assert_eq!(two.shards()[1].metrics.names(), vec!["ilp"]);
+        // the traffic family alone spans two groups: its MRC half and its
+        // hierarchy half land on different workers
+        let traffic = ShardPlan::new(MetricSet::from_names("traffic").unwrap(), Workers::Auto);
+        assert_eq!(traffic.workers(), 2);
+        assert_eq!(traffic.shards()[0].traffic, TrafficParts::MRC);
+        assert_eq!(traffic.shards()[1].traffic, TrafficParts::HIERARCHY);
+        for shard in traffic.shards() {
+            assert!(shard.metrics.contains(Metric::Traffic));
+        }
     }
 
     #[test]
     fn fixed_sizing_clamps_and_never_leaves_a_shard_empty() {
         for n in 1..=8 {
             let plan = ShardPlan::new(MetricSet::all(), Workers::Fixed(n));
-            assert_eq!(plan.workers(), n.min(4), "requested {n}");
+            assert_eq!(plan.workers(), n.min(5), "requested {n}");
             let mut union = MetricSet::none();
-            let mut total = 0;
+            let mut parts = TrafficParts::NONE;
+            let mut non_traffic = 0;
             for shard in plan.shards() {
                 assert!(!shard.is_empty(), "empty shard in a {n}-worker plan");
-                total += shard.len();
-                union = union.union(*shard);
+                for m in Metric::ALL {
+                    if m != Metric::Traffic && shard.metrics.contains(m) {
+                        non_traffic += 1;
+                    }
+                }
+                union = union.union(shard.metrics);
+                assert!(shard.traffic.intersect(parts).is_empty(), "traffic half owned twice");
+                parts = parts.union(shard.traffic);
             }
-            // disjoint cover of the enabled set
+            // disjoint cover of the enabled set, both halves owned once
             assert!(union.is_all());
-            assert_eq!(total, Metric::ALL.len());
+            assert!(parts.is_all());
+            assert_eq!(non_traffic, Metric::ALL.len() - 1);
         }
         // more workers than enabled groups: clamp to the group count
         let mix = ShardPlan::new(MetricSet::from_names("mix").unwrap(), Workers::Fixed(8));
@@ -300,10 +413,12 @@ mod tests {
     fn merged_sharded_metrics_match_inline_at_every_worker_count() {
         let p = tiny_program();
         let reference = profile(&p).unwrap();
-        for workers in [Workers::Auto, Workers::Fixed(1), Workers::Fixed(2), Workers::Fixed(3)] {
-            let incl = HierarchyPolicy::default();
+        for workers in
+            [Workers::Auto, Workers::Fixed(1), Workers::Fixed(2), Workers::Fixed(3), Workers::Fixed(4)]
+        {
+            let opts = TrafficOpts::default();
             let (m, regions) =
-                profile_sharded_run(&p, MetricSet::all(), workers, incl, false).unwrap();
+                profile_sharded_run(&p, MetricSet::all(), workers, opts, false).unwrap();
             assert!(regions.is_none());
             assert_eq!(
                 m.pca8_features().map(f64::to_bits),
@@ -321,11 +436,11 @@ mod tests {
     fn merge_is_deterministic_across_runs() {
         // worker scheduling varies run to run; the merged result must not
         let p = tiny_program();
-        let incl = HierarchyPolicy::default();
+        let opts = TrafficOpts::default();
         let (a, _) =
-            profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), incl, false).unwrap();
+            profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), opts, false).unwrap();
         let (b, _) =
-            profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), incl, false).unwrap();
+            profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), opts, false).unwrap();
         assert_eq!(a.pca8_features().map(f64::to_bits), b.pca8_features().map(f64::to_bits));
         assert_eq!(a.mix.per_op, b.mix.per_op);
         assert_eq!(a.mem_entropy.count_of_counts, b.mem_entropy.count_of_counts);
@@ -338,11 +453,25 @@ mod tests {
         let sel = MetricSet::from_names("mix,traffic").unwrap();
         let inline = profile_select(&p, sel).unwrap();
         let (m, _) =
-            profile_sharded_run(&p, sel, Workers::Auto, HierarchyPolicy::default(), false).unwrap();
+            profile_sharded_run(&p, sel, Workers::Auto, TrafficOpts::default(), false).unwrap();
         assert_eq!(m.mix.per_op, inline.mix.per_op);
         assert_eq!(m.traffic, inline.traffic);
         assert_eq!(m.reuse.accesses, 0);
         assert_eq!(m.ilp.critical_path, inline.ilp.critical_path);
+    }
+
+    #[test]
+    fn split_traffic_family_reassembles_bit_identically() {
+        // traffic alone: the MRC half and the hierarchy half run on two
+        // different workers and the merge must still equal inline exactly
+        let p = tiny_program();
+        let sel = MetricSet::from_names("traffic").unwrap();
+        let inline = profile_select(&p, sel).unwrap();
+        let plan = ShardPlan::new(sel, Workers::Auto);
+        assert_eq!(plan.workers(), 2, "traffic must split across two workers");
+        let (m, _) =
+            profile_sharded_run(&p, sel, Workers::Auto, TrafficOpts::default(), false).unwrap();
+        assert_eq!(m.traffic, inline.traffic);
     }
 
     #[test]
@@ -352,31 +481,38 @@ mod tests {
         // per-shard stack, not just the single-stack deliveries
         use crate::interp::PipelineMode;
         let p = tiny_program();
-        let inline = crate::analysis::profile_opts(
-            &p,
-            MetricSet::all(),
-            PipelineMode::Inline,
-            HierarchyPolicy::Exclusive,
-        )
-        .unwrap();
-        let (m, _) = profile_sharded_run(
-            &p,
-            MetricSet::all(),
-            Workers::Auto,
-            HierarchyPolicy::Exclusive,
-            false,
-        )
-        .unwrap();
+        let opts = TrafficOpts::with_hierarchy(HierarchyPolicy::Exclusive);
+        let inline =
+            crate::analysis::profile_opts(&p, MetricSet::all(), PipelineMode::Inline, opts)
+                .unwrap();
+        let (m, _) =
+            profile_sharded_run(&p, MetricSet::all(), Workers::Auto, opts, false).unwrap();
         assert_eq!(m.traffic.hierarchy_policy, HierarchyPolicy::Exclusive);
+        assert_eq!(m.traffic, inline.traffic);
+    }
+
+    #[test]
+    fn sampled_mrc_mode_reaches_the_mem_shard() {
+        // --mrc sampled must reach the (split) MRC half and merge back
+        // bit-identically to the inline sampled run
+        use crate::interp::PipelineMode;
+        let p = tiny_program();
+        let opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 0.5 });
+        let inline =
+            crate::analysis::profile_opts(&p, MetricSet::all(), PipelineMode::Inline, opts)
+                .unwrap();
+        let (m, _) =
+            profile_sharded_run(&p, MetricSet::all(), Workers::Auto, opts, false).unwrap();
+        assert_eq!(m.traffic.mrc_mode, MrcMode::Sampled { rate: 0.5 });
         assert_eq!(m.traffic, inline.traffic);
     }
 
     #[test]
     fn task_trace_rides_the_last_shard() {
         let p = tiny_program();
-        let incl = HierarchyPolicy::default();
+        let opts = TrafficOpts::default();
         let (_, regions) =
-            profile_sharded_run(&p, MetricSet::all(), Workers::Auto, incl, true).unwrap();
+            profile_sharded_run(&p, MetricSet::all(), Workers::Auto, opts, true).unwrap();
         let regions = regions.expect("task trace requested");
         assert!(!regions.is_empty());
     }

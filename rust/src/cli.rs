@@ -31,6 +31,7 @@ const VALUE_FLAGS: &[&str] = &[
     "pipeline",
     "workers",
     "hierarchy",
+    "mrc",
 ];
 
 pub fn parse(argv: &[String]) -> Result<Args> {
@@ -117,13 +118,15 @@ pisa-nmc — Platform-Independent Software Analysis for Near-Memory Computing
 USAGE:
   pisa-nmc pipeline [--scale F] [--seed N] [--threads N] [--metrics LIST]
                     [--pipeline MODE] [--workers N|auto]
-                    [--hierarchy inclusive|exclusive] [--no-pjrt]
+                    [--hierarchy inclusive|exclusive]
+                    [--mrc exact|sampled:<rate>] [--no-pjrt]
                     [--out FILE]
         full suite: profile 12 kernels, run host+NMC sims, PJRT analytics,
         print every table and figure (writes JSON report with --out)
   pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--metrics LIST]
                    [--pipeline MODE] [--workers N|auto]
-                   [--hierarchy inclusive|exclusive] [--json]
+                   [--hierarchy inclusive|exclusive]
+                   [--mrc exact|sampled:<rate>] [--json]
         profile a single kernel and print its metrics
   pisa-nmc figure {3a|3b|3c|4|5|6|mrc} [pipeline flags]
         regenerate one paper figure (mrc: the miss-ratio-curve extension)
@@ -150,6 +153,17 @@ exactly one level; lower levels act as victim caches, so the aggregate
 capacity approaches the sum of the levels). Each level only sees the
 level above's misses; DRAM bytes count only what crosses the LLC.
 
+--mrc MODE selects the stack-distance kernel behind the miss-ratio
+curves: `exact` (default — Olken/Fenwick over every access, bit-identical
+to previous releases) or `sampled:<rate>` (SHARDS spatial hash sampling:
+a line participates iff hash(line) < rate*2^64, distances and cold misses
+are rescaled by 1/rate, state shrinks from the full footprint to
+~rate*footprint entries). `sampled` alone uses the default rate 0.01.
+Sampled curves are estimates: the knee is trustworthy when
+rate*footprint_lines is large (≥ ~1000 sampled lines keeps per-point
+error around a percent); at tiny footprints or rates the curve gets
+noisy and `exact` costs little anyway.
+
 --pipeline MODE selects event delivery: `inline` (default — analyzers fold
 on the interpreter thread), `offload` (analyzers fold on a dedicated
 analysis thread, overlapped with interpretation; each app then uses two
@@ -159,9 +173,11 @@ workers, every chunk broadcast to all of them; each app then uses
 
 --workers N|auto sizes the sharded analyzer pool (`sharded` only).
 `auto` (default) plans one worker per enabled family group — tags
-(mix/branch), memory lanes (mem_entropy/reuse/traffic), dataflow
-(ilp/dlp), block structure (bblp/pbblp) — so e.g. `--metrics mix`
-collapses to one worker; a fixed N is clamped to the non-empty groups.
+(mix/branch), memory lanes (mem_entropy/reuse + the traffic MRC half),
+the traffic hierarchy-replay half, dataflow (ilp/dlp), block structure
+(bblp/pbblp) — so e.g. `--metrics mix` collapses to one worker while
+`--metrics traffic` plans two; a fixed N is clamped to the non-empty
+groups.
 
 Artifacts are searched in ./artifacts (or $PISA_NMC_ARTIFACTS); build them
 with `make artifacts`. --no-pjrt forces the native analytics fallback.
@@ -212,6 +228,13 @@ mod tests {
         let a = args(&["pipeline", "--metrics", "traffic", "--hierarchy", "exclusive"]);
         assert_eq!(a.get("hierarchy"), Some("exclusive"));
         assert!(parse(&["pipeline".into(), "--hierarchy".into()]).is_err());
+    }
+
+    #[test]
+    fn mrc_flag_takes_a_value() {
+        let a = args(&["pipeline", "--metrics", "traffic", "--mrc", "sampled:0.05"]);
+        assert_eq!(a.get("mrc"), Some("sampled:0.05"));
+        assert!(parse(&["pipeline".into(), "--mrc".into()]).is_err());
     }
 
     #[test]

@@ -489,6 +489,10 @@ pub fn fig_mrc(apps: &[AppResult], metrics: MetricSet) -> (String, Json) {
         .first()
         .map(|a| a.metrics.traffic.hierarchy_policy)
         .unwrap_or_default();
+    let mrc_mode = apps
+        .first()
+        .map(|a| a.metrics.traffic.mrc_mode)
+        .unwrap_or_default();
     let mut headers = vec!["app".to_string()];
     headers.extend(caps.iter().map(|&c| capacity_label(c)));
     headers.push("knee".into());
@@ -518,6 +522,8 @@ pub fn fig_mrc(apps: &[AppResult], metrics: MetricSet) -> (String, Json) {
     out.set("metric", "miss-ratio curve + byte traffic (64B lines)");
     out.set("capacities_bytes", caps_f);
     out.set("hierarchy_policy", policy.name());
+    out.set("mrc_mode", mrc_mode.name());
+    out.set("mrc_sample_rate", mrc_mode.rate());
     out.set(
         "hierarchy_levels",
         level_names
@@ -528,7 +534,8 @@ pub fn fig_mrc(apps: &[AppResult], metrics: MetricSet) -> (String, Json) {
     out.set("series", j);
     (
         format!(
-            "Fig MRC — miss-ratio curves, {} hierarchy and byte traffic (64B lines)\n{}",
+            "Fig MRC — miss-ratio curves ({} MRC), {} hierarchy and byte traffic (64B lines)\n{}",
+            mrc_mode.describe(),
             policy.name(),
             t.render()
         ),
@@ -621,8 +628,11 @@ mod tests {
         assert!(smrc.contains("B/instr"));
         assert!(smrc.contains("inclusive"));
         assert!(smrc.contains("llc MR"), "per-level series missing from the traffic figure");
+        assert!(smrc.contains("exact MRC"), "the figure title names the MRC mode");
         assert!(jmrc.get("series").is_some());
         assert!(jmrc.get("hierarchy_policy").is_some());
+        assert!(jmrc.get("mrc_mode").is_some());
+        assert!(jmrc.get("mrc_sample_rate").is_some());
         assert!(table1().contains("Power9"));
         assert!(table2(1.0).contains("8000"));
     }

@@ -23,7 +23,7 @@ use anyhow::Result;
 use crate::analysis::MetricSet;
 use crate::interp::PipelineMode;
 use crate::runtime::Runtime;
-use crate::traffic::HierarchyPolicy;
+use crate::traffic::TrafficOpts;
 use crate::util::Json;
 
 /// Everything one `pisa-nmc pipeline` run produces.
@@ -36,8 +36,9 @@ pub struct PipelineReport {
     pub metrics: MetricSet,
     /// Event-delivery mode the apps were profiled with.
     pub mode: PipelineMode,
-    /// Cache-hierarchy replay policy the traffic family ran under.
-    pub hierarchy: HierarchyPolicy,
+    /// Traffic-family options (hierarchy replay policy + MRC mode) the
+    /// run profiled under.
+    pub traffic: TrafficOpts,
 }
 
 /// Run the full pipeline with every metric enabled, inline delivery.
@@ -50,7 +51,8 @@ pub fn run_pipeline(
     run_pipeline_select(scale, seed, threads, rt, MetricSet::all(), PipelineMode::Inline)
 }
 
-/// [`run_pipeline_opts`] with the default (inclusive) hierarchy replay.
+/// [`run_pipeline_opts`] with the default traffic options (inclusive
+/// hierarchy replay, exact MRC).
 pub fn run_pipeline_select(
     scale: f64,
     seed: u64,
@@ -59,14 +61,14 @@ pub fn run_pipeline_select(
     metrics: MetricSet,
     mode: PipelineMode,
 ) -> Result<PipelineReport> {
-    run_pipeline_opts(scale, seed, threads, rt, metrics, mode, HierarchyPolicy::default())
+    run_pipeline_opts(scale, seed, threads, rt, metrics, mode, TrafficOpts::default())
 }
 
 /// Run the full pipeline: profile suite (selected analyzer families,
-/// selected delivery mode, selected hierarchy replay policy) → artifacts
+/// selected delivery mode, selected traffic options) → artifacts
 /// analytics → report. `metrics` is the CLI `--metrics` flag, `mode` the
-/// CLI `--pipeline` flag and `hierarchy` the CLI `--hierarchy` flag, all
-/// threaded into every worker's run.
+/// CLI `--pipeline` flag and `traffic` bundles the CLI `--hierarchy` and
+/// `--mrc` flags, all threaded into every worker's run.
 pub fn run_pipeline_opts(
     scale: f64,
     seed: u64,
@@ -74,14 +76,14 @@ pub fn run_pipeline_opts(
     rt: Option<&Runtime>,
     metrics: MetricSet,
     mode: PipelineMode,
-    hierarchy: HierarchyPolicy,
+    traffic: TrafficOpts,
 ) -> Result<PipelineReport> {
     // same effective set the workers profile with, so the report's
     // "metrics" list describes the families that actually ran
     let metrics = metrics.with_simulation_requirements();
-    let apps = run_suite_opts(scale, seed, threads, metrics, mode, hierarchy)?;
+    let apps = run_suite_opts(scale, seed, threads, metrics, mode, traffic)?;
     let analytics = analyze_suite(&apps, rt)?;
-    Ok(PipelineReport { apps, analytics, scale, seed, metrics, mode, hierarchy })
+    Ok(PipelineReport { apps, analytics, scale, seed, metrics, mode, traffic })
 }
 
 impl PipelineReport {
@@ -103,7 +105,9 @@ impl PipelineReport {
         j.set("scale", self.scale);
         j.set("seed", self.seed);
         j.set("pipeline_mode", self.mode.name());
-        j.set("hierarchy_policy", self.hierarchy.name());
+        j.set("hierarchy_policy", self.traffic.hierarchy.name());
+        j.set("mrc_mode", self.traffic.mrc.name());
+        j.set("mrc_rate", self.traffic.mrc.rate());
         if let PipelineMode::Sharded { workers } = self.mode {
             // resolved pool size, not the raw flag: `auto` (and oversized
             // fixed counts) depend on the enabled families

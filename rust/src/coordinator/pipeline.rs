@@ -13,8 +13,9 @@
 //! interpreter with a dedicated analysis thread (see
 //! [`crate::interp::offload`]), so one app occupies two cores while it
 //! runs; with [`PipelineMode::Sharded`] each app adds a broadcaster plus
-//! one analyzer worker per planned shard (up to 4 with every family
-//! enabled) — size `--threads` accordingly on small machines.
+//! one analyzer worker per planned shard (up to 5 with every family
+//! enabled, now that the traffic family's MRC and hierarchy halves land
+//! on separate workers) — size `--threads` accordingly on small machines.
 
 use std::sync::mpsc;
 use std::sync::Mutex;
@@ -24,7 +25,7 @@ use anyhow::{Context, Result};
 use crate::analysis::{profile_with_tasks, AppMetrics, MetricSet};
 use crate::interp::PipelineMode;
 use crate::sim::{self, EdpComparison, Region};
-use crate::traffic::HierarchyPolicy;
+use crate::traffic::TrafficOpts;
 use crate::workloads::{registry, scaled_n, Kernel};
 
 /// Per-application pipeline output.
@@ -60,7 +61,8 @@ pub fn profile_app_select(
     profile_app_mode(k, n, seed, metrics, PipelineMode::Inline)
 }
 
-/// [`profile_app_opts`] with the default (inclusive) hierarchy replay.
+/// [`profile_app_opts`] with the default traffic options (inclusive
+/// hierarchy replay, exact MRC).
 pub fn profile_app_mode(
     k: &dyn Kernel,
     n: usize,
@@ -68,7 +70,7 @@ pub fn profile_app_mode(
     metrics: MetricSet,
     mode: PipelineMode,
 ) -> Result<AppResult> {
-    profile_app_opts(k, n, seed, metrics, mode, HierarchyPolicy::default())
+    profile_app_opts(k, n, seed, metrics, mode, TrafficOpts::default())
 }
 
 /// Profile one kernel: single instrumented execution feeding the selected
@@ -77,8 +79,9 @@ pub fn profile_app_mode(
 /// simulation layer. `mode` selects whether the analyzers fold inline on
 /// the interpreter thread, on one dedicated analysis thread, or sharded
 /// by metric family across a worker pool (see [`crate::interp::offload`]);
-/// `hierarchy` selects the traffic subsystem's replay policy (CLI
-/// `--hierarchy`); metrics are bit-identical on every path.
+/// `opts` selects the traffic subsystem's replay policy and MRC mode (CLI
+/// `--hierarchy` / `--mrc`); exact-mode metrics are bit-identical on every
+/// path.
 ///
 /// Sim-required families (ILP — see
 /// [`MetricSet::with_simulation_requirements`]) are force-enabled
@@ -89,12 +92,12 @@ pub fn profile_app_opts(
     seed: u64,
     metrics: MetricSet,
     mode: PipelineMode,
-    hierarchy: HierarchyPolicy,
+    opts: TrafficOpts,
 ) -> Result<AppResult> {
     let metrics = metrics.with_simulation_requirements();
     let prog = k.build(n, seed);
     let (metrics, regions): (AppMetrics, Vec<Region>) =
-        profile_with_tasks(&prog, metrics, mode, hierarchy)
+        profile_with_tasks(&prog, metrics, mode, opts)
             .with_context(|| format!("running {}", k.info().name))?;
 
     // both machine models consume the same region trace
@@ -119,7 +122,8 @@ pub fn run_suite(scale: f64, seed: u64, threads: usize) -> Result<Vec<AppResult>
     run_suite_select(scale, seed, threads, MetricSet::all(), PipelineMode::Inline)
 }
 
-/// [`run_suite_opts`] with the default (inclusive) hierarchy replay.
+/// [`run_suite_opts`] with the default traffic options (inclusive
+/// hierarchy replay, exact MRC).
 pub fn run_suite_select(
     scale: f64,
     seed: u64,
@@ -127,21 +131,21 @@ pub fn run_suite_select(
     metrics: MetricSet,
     mode: PipelineMode,
 ) -> Result<Vec<AppResult>> {
-    run_suite_opts(scale, seed, threads, metrics, mode, HierarchyPolicy::default())
+    run_suite_opts(scale, seed, threads, metrics, mode, TrafficOpts::default())
 }
 
 /// Run the whole suite, `scale` applied to every kernel's default size,
 /// `metrics` selecting the analyzer families, `mode` the event delivery
-/// (inline, or overlapped on per-app analysis threads) and `hierarchy`
-/// the traffic subsystem's replay policy. Results come back in registry
-/// order regardless of completion order.
+/// (inline, or overlapped on per-app analysis threads) and `opts` the
+/// traffic subsystem's replay policy and MRC mode. Results come back in
+/// registry order regardless of completion order.
 pub fn run_suite_opts(
     scale: f64,
     seed: u64,
     threads: usize,
     metrics: MetricSet,
     mode: PipelineMode,
-    hierarchy: HierarchyPolicy,
+    opts: TrafficOpts,
 ) -> Result<Vec<AppResult>> {
     let kernels = registry();
     let n_jobs = kernels.len();
@@ -163,7 +167,7 @@ pub fn run_suite_opts(
                 // fresh registry per thread: Kernel is stateless
                 let k = &registry()[idx];
                 let n = scaled_n(k.as_ref(), scale);
-                let res = profile_app_opts(k.as_ref(), n, seed, metrics, mode, hierarchy);
+                let res = profile_app_opts(k.as_ref(), n, seed, metrics, mode, opts);
                 if tx.send((idx, res)).is_err() {
                     break;
                 }
@@ -275,6 +279,7 @@ mod tests {
 
     #[test]
     fn hierarchy_policy_threads_through_the_app_pipeline() {
+        use crate::traffic::HierarchyPolicy;
         let k = by_name("gesummv").unwrap();
         let excl = profile_app_opts(
             k.as_ref(),
@@ -282,7 +287,7 @@ mod tests {
             1,
             MetricSet::all(),
             PipelineMode::Inline,
-            HierarchyPolicy::Exclusive,
+            TrafficOpts::with_hierarchy(HierarchyPolicy::Exclusive),
         )
         .unwrap();
         assert_eq!(excl.metrics.traffic.hierarchy_policy, HierarchyPolicy::Exclusive);
@@ -296,6 +301,26 @@ mod tests {
             assert!(tr.dram_fills <= tr.accesses, "fills exceed accesses");
             assert_eq!(tr.dram_fills, tr.llc().unwrap().misses);
         }
+    }
+
+    #[test]
+    fn mrc_mode_threads_through_the_app_pipeline() {
+        use crate::traffic::MrcMode;
+        let k = by_name("gesummv").unwrap();
+        let opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 0.5 });
+        let sampled =
+            profile_app_opts(k.as_ref(), 20, 1, MetricSet::all(), PipelineMode::Inline, opts)
+                .unwrap();
+        assert_eq!(sampled.metrics.traffic.mrc_mode, MrcMode::Sampled { rate: 0.5 });
+        assert!(
+            sampled.metrics.traffic.mrc_sampled_accesses < sampled.metrics.traffic.accesses,
+            "a 0.5-rate sampler must skip some accesses"
+        );
+        // the default wrapper stays exact — and exact means every access
+        // participates in the stack-distance curve
+        let exact = profile_app(k.as_ref(), 20, 1).unwrap();
+        assert_eq!(exact.metrics.traffic.mrc_mode, MrcMode::Exact);
+        assert_eq!(exact.metrics.traffic.mrc_sampled_accesses, exact.metrics.traffic.accesses);
     }
 
     #[test]

@@ -11,7 +11,7 @@ use pisa_nmc::coordinator::{self, figures};
 use pisa_nmc::interp::{PipelineMode, Workers};
 use pisa_nmc::report::save_json;
 use pisa_nmc::runtime::Runtime;
-use pisa_nmc::traffic::HierarchyPolicy;
+use pisa_nmc::traffic::{HierarchyPolicy, MrcMode, TrafficOpts};
 use pisa_nmc::workloads;
 
 fn main() {
@@ -61,6 +61,19 @@ fn hierarchy_policy(args: &Args) -> Result<HierarchyPolicy> {
     }
 }
 
+/// Parse the `--mrc` stack-distance mode (default: exact).
+fn mrc_mode(args: &Args) -> Result<MrcMode> {
+    match args.get("mrc") {
+        Some(spec) => MrcMode::from_name(spec),
+        None => Ok(MrcMode::default()),
+    }
+}
+
+/// Bundle the traffic-family flags (`--hierarchy`, `--mrc`).
+fn traffic_opts(args: &Args) -> Result<TrafficOpts> {
+    Ok(TrafficOpts::with_hierarchy(hierarchy_policy(args)?).with_mrc(mrc_mode(args)?))
+}
+
 /// Parse the `--pipeline` event-delivery mode (default: inline) and, for
 /// the sharded mode, the `--workers` pool size (default: auto).
 fn pipeline_mode(args: &Args) -> Result<PipelineMode> {
@@ -87,7 +100,7 @@ fn run(args: Args) -> Result<()> {
             let threads = args.get_usize("threads", 8)?;
             let metrics = metric_set(&args)?;
             let mode = pipeline_mode(&args)?;
-            let hierarchy = hierarchy_policy(&args)?;
+            let traffic = traffic_opts(&args)?;
             let rt = load_runtime(&args);
             let report = coordinator::run_pipeline_opts(
                 scale,
@@ -96,7 +109,7 @@ fn run(args: Args) -> Result<()> {
                 rt.as_ref(),
                 metrics,
                 mode,
-                hierarchy,
+                traffic,
             )?;
             print!("{}", report.render_all());
             // perf trend line for CI logs: suite-level profiler throughput
@@ -124,8 +137,8 @@ fn run(args: Args) -> Result<()> {
             let seed = args.get_u64("seed", 42)?;
             let metrics = metric_set(&args)?;
             let mode = pipeline_mode(&args)?;
-            let hierarchy = hierarchy_policy(&args)?;
-            let r = coordinator::profile_app_opts(k.as_ref(), n, seed, metrics, mode, hierarchy)?;
+            let traffic = traffic_opts(&args)?;
+            let r = coordinator::profile_app_opts(k.as_ref(), n, seed, metrics, mode, traffic)?;
             if args.has("json") {
                 let mut j = r.metrics.to_json();
                 j.set("edp", r.cmp.to_json());
@@ -169,6 +182,12 @@ fn run(args: Args) -> Result<()> {
                         per_level.join(", ")
                     );
                     println!(
+                        "  MRC mode          {} ({} of {} accesses sampled)",
+                        tr.mrc_mode.describe(),
+                        tr.mrc_sampled_accesses,
+                        tr.accesses
+                    );
+                    println!(
                         "  MRC knee          {}",
                         match tr.mrc_knee_bytes {
                             Some(b) => pisa_nmc::traffic::capacity_label(b),
@@ -189,7 +208,7 @@ fn run(args: Args) -> Result<()> {
             let threads = args.get_usize("threads", 8)?;
             let metrics = metric_set(&args)?;
             let mode = pipeline_mode(&args)?;
-            let hierarchy = hierarchy_policy(&args)?;
+            let traffic = traffic_opts(&args)?;
             let rt = load_runtime(&args);
             let report = coordinator::run_pipeline_opts(
                 scale,
@@ -198,7 +217,7 @@ fn run(args: Args) -> Result<()> {
                 rt.as_ref(),
                 metrics,
                 mode,
-                hierarchy,
+                traffic,
             )?;
             let (text, _json) = match which.as_str() {
                 "3a" => figures::fig3a(&report.apps, &report.analytics, report.metrics),

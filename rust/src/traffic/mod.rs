@@ -31,13 +31,35 @@
 //!   the sizes lane + store bitset, and post-hierarchy DRAM line traffic
 //!   (last-level fills + writebacks × 64 B).
 //!
-//! Every counter is a pure fold over the memory-access subsequence, so
-//! [`TrafficMetrics`] — per-level counters included — is bit-identical
-//! across the per-event, inline-chunked, offload and sharded pipeline
-//! modes (enforced in `rust/tests/prop_chunked.rs`).
+//! **Exact vs sampled MRC** ([`MrcMode`], CLI `--mrc`): the default
+//! `exact` mode runs the full Olken/Fenwick kernel — O(footprint) state,
+//! O(log n) per access, bit-identical output. `sampled:<rate>` swaps in
+//! fixed-rate SHARDS spatial sampling ([`sample`]): only lines whose hash
+//! falls under the rate threshold are tracked, sampled distances and cold
+//! misses are rescaled by `1/rate`, and state shrinks to O(rate ·
+//! footprint). Miss ratios then carry noise ≈ `1/sqrt(rate ×
+//! footprint_lines)` per point — at 1% on a million-line footprint that
+//! is well under the `MIN_KNEE_DROP` knee threshold, while tiny-footprint
+//! runs should stay exact (or check `mrc.sampled_accesses` in the JSON
+//! before trusting the knee).
+//!
+//! **Separable halves** ([`TrafficParts`]): the MRC + byte accounting and
+//! the hierarchy replay are independent folds over the same address lane,
+//! so the sharded pipeline can place them on *different* workers
+//! (`analysis/shard.rs` gives each its own lane group); the merge stitches
+//! the halves back into one [`TrafficMetrics`] via
+//! [`TrafficMetrics::adopt_parts`].
+//!
+//! Every counter is a pure fold over the memory-access subsequence — and
+//! the sampling hash is deterministic — so [`TrafficMetrics`] (per-level
+//! counters included) is bit-identical across the per-event,
+//! inline-chunked, offload and sharded pipeline modes in *both* MRC modes
+//! (enforced in `rust/tests/prop_chunked.rs` and
+//! `rust/tests/prop_mrc_sampled.rs`).
 
 pub mod hierarchy;
 pub mod mrc;
+pub mod sample;
 
 pub use hierarchy::{
     HierarchyConfig, HierarchyPolicy, HierarchyReplay, LevelConfig, LevelStats, HIERARCHY_LEVELS,
@@ -45,20 +67,122 @@ pub use hierarchy::{
 pub use mrc::{
     slope_knee, MrcBuilder, MIN_KNEE_DROP, MRC_CAPACITIES_BYTES, MRC_LINE_BYTES, N_MRC_POINTS,
 };
+pub use sample::{
+    MrcMode, SampledAccess, SampledMrc, SampledStackDistance, DEFAULT_SAMPLE_RATE,
+    DEFAULT_SAMPLE_S_MAX,
+};
 
 use crate::interp::{ChunkLanes, Instrument, LaneMask, TraceEvent};
 use crate::util::Json;
 
-/// The streaming analyzer: one MRC accumulator + the hierarchy replay +
-/// byte counters, all fed from the same pass.
-#[derive(Debug, Clone, Default)]
+/// Configuration knobs of the traffic family, threaded together from the
+/// CLI (`--hierarchy`, `--mrc`) down to the per-shard analyzer stacks.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TrafficOpts {
+    /// Content-management policy of the hierarchy replay.
+    pub hierarchy: HierarchyPolicy,
+    /// Stack-distance kernel the MRC runs on.
+    pub mrc: MrcMode,
+}
+
+impl TrafficOpts {
+    /// Default MRC mode under the given hierarchy policy (the shape every
+    /// pre-`--mrc` call site wants).
+    pub fn with_hierarchy(hierarchy: HierarchyPolicy) -> Self {
+        TrafficOpts { hierarchy, ..Default::default() }
+    }
+
+    pub fn with_mrc(mut self, mrc: MrcMode) -> Self {
+        self.mrc = mrc;
+        self
+    }
+}
+
+/// The separable halves of the traffic family. `MRC` owns the miss-ratio
+/// curve *and* the byte accounting (both fold the sizes/stores lanes);
+/// `HIERARCHY` owns the L1→L2→LLC replay and the DRAM counters. A shard
+/// plan hands each worker the parts it should fold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrafficParts(u8);
+
+impl TrafficParts {
+    pub const NONE: TrafficParts = TrafficParts(0);
+    pub const MRC: TrafficParts = TrafficParts(1);
+    pub const HIERARCHY: TrafficParts = TrafficParts(2);
+    pub const ALL: TrafficParts = TrafficParts(3);
+
+    #[inline]
+    pub fn has_mrc(self) -> bool {
+        self.0 & Self::MRC.0 != 0
+    }
+
+    #[inline]
+    pub fn has_hierarchy(self) -> bool {
+        self.0 & Self::HIERARCHY.0 != 0
+    }
+
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    #[inline]
+    pub fn is_all(self) -> bool {
+        self == Self::ALL
+    }
+
+    #[inline]
+    pub fn union(self, other: TrafficParts) -> TrafficParts {
+        TrafficParts(self.0 | other.0)
+    }
+
+    #[inline]
+    pub fn intersect(self, other: TrafficParts) -> TrafficParts {
+        TrafficParts(self.0 & other.0)
+    }
+}
+
+impl Default for TrafficParts {
+    fn default() -> Self {
+        TrafficParts::ALL
+    }
+}
+
+/// The MRC engine behind the traffic family: the exact Olken/Fenwick
+/// kernel or the SHARDS sampler, selected by [`MrcMode`].
+#[derive(Debug, Clone)]
+enum MrcEngine {
+    Exact(MrcBuilder),
+    Sampled(SampledMrc),
+}
+
+impl MrcEngine {
+    fn for_mode(mode: MrcMode) -> MrcEngine {
+        match mode {
+            MrcMode::Exact => MrcEngine::Exact(MrcBuilder::new()),
+            MrcMode::Sampled { rate } => MrcEngine::Sampled(SampledMrc::new(rate)),
+        }
+    }
+}
+
+/// The streaming analyzer: MRC accumulator + byte counters and/or the
+/// hierarchy replay, each present only when its [`TrafficParts`] half is
+/// enabled (an unsplit analyzer carries both), all fed from the same pass.
+#[derive(Debug, Clone)]
 pub struct TrafficAnalyzer {
-    mrc: MrcBuilder,
-    hierarchy: HierarchyReplay,
+    mrc: Option<MrcEngine>,
+    mrc_mode: MrcMode,
+    hierarchy: Option<HierarchyReplay>,
     reads: u64,
     writes: u64,
     read_bytes: u64,
     write_bytes: u64,
+}
+
+impl Default for TrafficAnalyzer {
+    fn default() -> Self {
+        Self::with_opts(TrafficOpts::default())
+    }
 }
 
 impl TrafficAnalyzer {
@@ -66,19 +190,40 @@ impl TrafficAnalyzer {
         Self::default()
     }
 
-    /// Host-shaped chain under `policy` (the CLI `--hierarchy` flag lands
-    /// here through the `AnalyzerStack`).
+    /// Host-shaped chain under `policy` (exact MRC, both halves).
     pub fn with_policy(policy: HierarchyPolicy) -> Self {
         Self::with_config(HierarchyConfig::host(policy))
     }
 
+    /// Both halves, exact MRC, custom hierarchy shape.
     pub fn with_config(cfg: HierarchyConfig) -> Self {
-        // built field-by-field: `..Self::default()` would allocate (and
-        // immediately drop) a second full default hierarchy — the one
-        // analyzer construction that is not cheap
         TrafficAnalyzer {
-            mrc: MrcBuilder::new(),
-            hierarchy: HierarchyReplay::new(cfg),
+            mrc: Some(MrcEngine::Exact(MrcBuilder::new())),
+            mrc_mode: MrcMode::Exact,
+            hierarchy: Some(HierarchyReplay::new(cfg)),
+            reads: 0,
+            writes: 0,
+            read_bytes: 0,
+            write_bytes: 0,
+        }
+    }
+
+    /// Both halves under `opts` (the CLI `--hierarchy`/`--mrc` flags land
+    /// here through the `AnalyzerStack`).
+    pub fn with_opts(opts: TrafficOpts) -> Self {
+        Self::with_opts_parts(opts, TrafficParts::ALL)
+    }
+
+    /// Only the selected halves — the sharded pipeline's entry point:
+    /// a worker folding just the hierarchy replay allocates no MRC state
+    /// and requests no sizes lane, and vice versa.
+    pub fn with_opts_parts(opts: TrafficOpts, parts: TrafficParts) -> Self {
+        TrafficAnalyzer {
+            mrc: parts.has_mrc().then(|| MrcEngine::for_mode(opts.mrc)),
+            mrc_mode: opts.mrc,
+            hierarchy: parts
+                .has_hierarchy()
+                .then(|| HierarchyReplay::new(HierarchyConfig::host(opts.hierarchy))),
             reads: 0,
             writes: 0,
             read_bytes: 0,
@@ -89,49 +234,85 @@ impl TrafficAnalyzer {
     /// Record one memory access (the per-event reference path).
     #[inline]
     pub fn record(&mut self, addr: u64, size: u8, is_store: bool) {
-        if is_store {
-            self.writes += 1;
-            self.write_bytes += size as u64;
-        } else {
-            self.reads += 1;
-            self.read_bytes += size as u64;
+        if self.mrc.is_some() {
+            if is_store {
+                self.writes += 1;
+                self.write_bytes += size as u64;
+            } else {
+                self.reads += 1;
+                self.read_bytes += size as u64;
+            }
         }
-        self.mrc.access(addr);
-        self.hierarchy.access(addr, is_store);
+        match &mut self.mrc {
+            Some(MrcEngine::Exact(b)) => b.access(addr),
+            Some(MrcEngine::Sampled(s)) => s.access(addr),
+            None => {}
+        }
+        if let Some(h) = &mut self.hierarchy {
+            h.access(addr, is_store);
+        }
     }
 
     /// Finalize into [`TrafficMetrics`]. `dyn_instrs` is the run's dynamic
-    /// instruction count (for the per-instruction rates).
+    /// instruction count (for the per-instruction rates). Halves this
+    /// analyzer does not carry keep their empty default shape — the
+    /// sharded merge fills them from the worker that owns them.
     pub fn finalize(&self, dyn_instrs: u64) -> TrafficMetrics {
-        let accesses = self.mrc.accesses();
-        let misses = self.mrc.miss_counts();
-        let mrc_miss_ratio: Vec<f64> = misses
-            .iter()
-            .map(|&m| if accesses == 0 { 0.0 } else { m as f64 / accesses as f64 })
-            .collect();
-        let knee = if accesses == 0 {
-            None
-        } else {
-            slope_knee(&mrc_miss_ratio).map(|i| MRC_CAPACITIES_BYTES[i])
-        };
-        TrafficMetrics {
-            accesses,
-            reads: self.reads,
-            writes: self.writes,
-            read_bytes: self.read_bytes,
-            write_bytes: self.write_bytes,
+        let mut m = TrafficMetrics {
             dyn_instrs,
-            cold_misses: self.mrc.cold(),
-            footprint_lines: self.mrc.footprint_lines(),
-            mrc_capacities: MRC_CAPACITIES_BYTES.to_vec(),
-            mrc_misses: misses.to_vec(),
-            mrc_miss_ratio,
-            mrc_knee_bytes: knee,
-            hierarchy_policy: self.hierarchy.policy(),
-            levels: self.hierarchy.finalize(),
-            dram_fills: self.hierarchy.dram_fills(),
-            dram_writebacks: self.hierarchy.dram_writebacks(),
+            mrc_mode: self.mrc_mode,
+            ..TrafficMetrics::default()
+        };
+        match &self.mrc {
+            Some(MrcEngine::Exact(b)) => {
+                let accesses = b.accesses();
+                let misses = b.miss_counts();
+                let ratio: Vec<f64> = misses
+                    .iter()
+                    .map(|&mm| if accesses == 0 { 0.0 } else { mm as f64 / accesses as f64 })
+                    .collect();
+                m.mrc_knee_bytes = if accesses == 0 {
+                    None
+                } else {
+                    slope_knee(&ratio).map(|i| MRC_CAPACITIES_BYTES[i])
+                };
+                m.accesses = accesses;
+                m.cold_misses = b.cold();
+                m.footprint_lines = b.footprint_lines();
+                m.mrc_misses = misses.to_vec();
+                m.mrc_miss_ratio = ratio;
+                // exact mode: every access is "sampled"
+                m.mrc_sampled_accesses = accesses;
+            }
+            Some(MrcEngine::Sampled(s)) => {
+                let ratio = s.miss_ratios().to_vec();
+                m.mrc_knee_bytes = if s.sampled_accesses() == 0 {
+                    None
+                } else {
+                    slope_knee(&ratio).map(|i| MRC_CAPACITIES_BYTES[i])
+                };
+                m.accesses = s.accesses();
+                m.cold_misses = s.cold_estimate();
+                m.footprint_lines = s.footprint_estimate();
+                m.mrc_misses = s.estimated_miss_counts().to_vec();
+                m.mrc_miss_ratio = ratio;
+                m.mrc_sampled_accesses = s.sampled_accesses();
+            }
+            None => {}
         }
+        if self.mrc.is_some() {
+            m.reads = self.reads;
+            m.writes = self.writes;
+            m.read_bytes = self.read_bytes;
+            m.write_bytes = self.write_bytes;
+        }
+        if let Some(h) = &self.hierarchy {
+            m.hierarchy_policy = h.policy();
+            m.levels = h.finalize();
+            m.dram_fills = h.dram_fills();
+            m.dram_writebacks = h.dram_writebacks();
+        }
+        m
     }
 }
 
@@ -155,34 +336,58 @@ impl Instrument for TrafficAnalyzer {
         if addrs.is_empty() {
             return;
         }
-        let sizes = lanes.sizes();
-        let (mut reads, mut writes) = (0u64, 0u64);
-        let (mut rb, mut wb) = (0u64, 0u64);
-        for (i, &size) in sizes.iter().enumerate() {
-            if lanes.is_store(i) {
-                writes += 1;
-                wb += size as u64;
-            } else {
-                reads += 1;
-                rb += size as u64;
+        if self.mrc.is_some() {
+            let sizes = lanes.sizes();
+            let (mut reads, mut writes) = (0u64, 0u64);
+            let (mut rb, mut wb) = (0u64, 0u64);
+            for (i, &size) in sizes.iter().enumerate() {
+                if lanes.is_store(i) {
+                    writes += 1;
+                    wb += size as u64;
+                } else {
+                    reads += 1;
+                    rb += size as u64;
+                }
             }
+            self.reads += reads;
+            self.writes += writes;
+            self.read_bytes += rb;
+            self.write_bytes += wb;
         }
-        self.reads += reads;
-        self.writes += writes;
-        self.read_bytes += rb;
-        self.write_bytes += wb;
-        for &addr in addrs {
-            self.mrc.access(addr);
+        match &mut self.mrc {
+            Some(MrcEngine::Exact(b)) => {
+                for &addr in addrs {
+                    b.access(addr);
+                }
+            }
+            Some(MrcEngine::Sampled(s)) => {
+                for &addr in addrs {
+                    s.access(addr);
+                }
+            }
+            None => {}
         }
-        self.hierarchy.sweep(addrs, lanes);
+        if let Some(h) = &mut self.hierarchy {
+            h.sweep(addrs, lanes);
+        }
     }
 
     fn wants_lanes(&self) -> bool {
         true
     }
 
+    /// Exactly the lanes the carried halves fold: the hierarchy replay
+    /// never reads sizes, so a hierarchy-only shard skips packing the
+    /// sizes lane entirely.
     fn lane_needs(&self) -> LaneMask {
-        LaneMask::ADDRS | LaneMask::SIZES | LaneMask::STORES
+        let mut needs = LaneMask::NONE;
+        if self.mrc.is_some() {
+            needs |= LaneMask::ADDRS | LaneMask::SIZES | LaneMask::STORES;
+        }
+        if self.hierarchy.is_some() {
+            needs |= LaneMask::ADDRS | LaneMask::STORES;
+        }
+        needs
     }
 }
 
@@ -211,6 +416,14 @@ pub struct TrafficMetrics {
     /// Capacity realizing the curve's steepest drop ([`slope_knee`]);
     /// `None` for flat (or empty) curves.
     pub mrc_knee_bytes: Option<u64>,
+    /// Stack-distance kernel the curve came from. Under `Sampled`,
+    /// `cold_misses`, `footprint_lines`, `mrc_misses` and
+    /// `mrc_miss_ratio` are SHARDS estimates, not exact counts.
+    pub mrc_mode: MrcMode,
+    /// Accesses the MRC kernel actually folded: equals `accesses` in
+    /// exact mode, the sampled subset under SHARDS — the error yardstick
+    /// (per-point noise ≈ `1/sqrt(rate × footprint_lines)`).
+    pub mrc_sampled_accesses: u64,
     /// Content-management policy the hierarchy was replayed under.
     pub hierarchy_policy: HierarchyPolicy,
     /// Per-level hit/miss/writeback counts, L1 → LLC. Each level only saw
@@ -240,6 +453,8 @@ impl Default for TrafficMetrics {
             mrc_misses: vec![0; N_MRC_POINTS],
             mrc_miss_ratio: vec![0.0; N_MRC_POINTS],
             mrc_knee_bytes: None,
+            mrc_mode: MrcMode::Exact,
+            mrc_sampled_accesses: 0,
             hierarchy_policy: HierarchyPolicy::default(),
             levels: HIERARCHY_LEVELS
                 .iter()
@@ -259,6 +474,41 @@ impl Default for TrafficMetrics {
 }
 
 impl TrafficMetrics {
+    /// Merge the halves `src` owns into `self` — the sharded pipeline's
+    /// stitch when the MRC and hierarchy replay ran on different workers.
+    /// Each half moves as a block: MRC brings the byte accounting,
+    /// access/cold/footprint counts, curve, knee, mode and the rate
+    /// denominator; hierarchy brings the per-level counters and DRAM
+    /// traffic.
+    pub fn adopt_parts(&mut self, src: TrafficMetrics, parts: TrafficParts) {
+        if parts.is_all() {
+            *self = src;
+            return;
+        }
+        if parts.has_mrc() {
+            self.accesses = src.accesses;
+            self.reads = src.reads;
+            self.writes = src.writes;
+            self.read_bytes = src.read_bytes;
+            self.write_bytes = src.write_bytes;
+            self.dyn_instrs = src.dyn_instrs;
+            self.cold_misses = src.cold_misses;
+            self.footprint_lines = src.footprint_lines;
+            self.mrc_capacities = src.mrc_capacities;
+            self.mrc_misses = src.mrc_misses;
+            self.mrc_miss_ratio = src.mrc_miss_ratio;
+            self.mrc_knee_bytes = src.mrc_knee_bytes;
+            self.mrc_mode = src.mrc_mode;
+            self.mrc_sampled_accesses = src.mrc_sampled_accesses;
+        }
+        if parts.has_hierarchy() {
+            self.hierarchy_policy = src.hierarchy_policy;
+            self.levels = src.levels;
+            self.dram_fills = src.dram_fills;
+            self.dram_writebacks = src.dram_writebacks;
+        }
+    }
+
     /// Total (read + write) bytes per dynamic instruction — the paper-line
     /// "data movement per instruction" signal.
     pub fn bytes_per_instr(&self) -> f64 {
@@ -348,6 +598,9 @@ impl TrafficMetrics {
         let misses_f: Vec<f64> = self.mrc_misses.iter().map(|&m| m as f64).collect();
         let mut mrc = Json::obj();
         mrc.set("line_bytes", MRC_LINE_BYTES);
+        mrc.set("mode", self.mrc_mode.name());
+        mrc.set("sample_rate", self.mrc_mode.rate());
+        mrc.set("sampled_accesses", self.mrc_sampled_accesses);
         mrc.set("capacities_bytes", caps_f);
         mrc.set("misses", misses_f);
         mrc.set("miss_ratio", self.mrc_miss_ratio.clone());
@@ -455,6 +708,77 @@ mod tests {
     }
 
     #[test]
+    fn sampled_mode_lane_sweep_matches_per_event() {
+        // the sampling hash is deterministic, so the SHARDS estimator is
+        // just as delivery-independent as the exact kernel
+        let opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 0.25 });
+        let mut rng = crate::util::Rng::new(31);
+        let events: Vec<TraceEvent> = (0..3000)
+            .map(|_| {
+                mem_ev(
+                    0x10_000 + rng.below(1 << 12) * 8,
+                    if rng.below(2) == 0 { 8 } else { 4 },
+                    rng.below(3) == 0,
+                )
+            })
+            .collect();
+        let mut per_event = TrafficAnalyzer::with_opts(opts);
+        for ev in &events {
+            per_event.on_event(ev);
+        }
+        let mut lane = TrafficAnalyzer::with_opts(opts);
+        let mut lanes = ChunkLanes::default();
+        for chunk in events.chunks(700) {
+            lanes.rebuild_masked(chunk, lane.lane_needs());
+            lane.on_chunk_lanes(chunk, &lanes);
+        }
+        let (a, b) = (per_event.finalize(3000), lane.finalize(3000));
+        assert_eq!(a.mrc_mode, MrcMode::Sampled { rate: 0.25 });
+        assert!(a.mrc_sampled_accesses < a.accesses);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn split_halves_reassemble_into_the_full_metrics() {
+        // MRC half on one analyzer, hierarchy half on another: the merge
+        // must reproduce the unsplit analyzer bit for bit
+        let opts = TrafficOpts::with_hierarchy(HierarchyPolicy::Exclusive);
+        let mut rng = crate::util::Rng::new(47);
+        let events: Vec<TraceEvent> = (0..4000)
+            .map(|_| {
+                mem_ev(
+                    0x20_000 + rng.below(1 << 13) * 8,
+                    if rng.below(2) == 0 { 8 } else { 4 },
+                    rng.below(4) == 0,
+                )
+            })
+            .collect();
+        let mut full = TrafficAnalyzer::with_opts(opts);
+        let mut mrc_half = TrafficAnalyzer::with_opts_parts(opts, TrafficParts::MRC);
+        let mut hier_half = TrafficAnalyzer::with_opts_parts(opts, TrafficParts::HIERARCHY);
+        for ev in &events {
+            full.on_event(ev);
+            mrc_half.on_event(ev);
+            hier_half.on_event(ev);
+        }
+        let mut merged = mrc_half.finalize(4000);
+        merged.adopt_parts(hier_half.finalize(4000), TrafficParts::HIERARCHY);
+        assert_eq!(merged, full.finalize(4000));
+    }
+
+    #[test]
+    fn split_halves_request_only_their_lanes() {
+        let opts = TrafficOpts::default();
+        let full = TrafficAnalyzer::with_opts(opts);
+        assert!(full.lane_needs().contains(LaneMask::ADDRS | LaneMask::SIZES | LaneMask::STORES));
+        let mrc_half = TrafficAnalyzer::with_opts_parts(opts, TrafficParts::MRC);
+        assert!(mrc_half.lane_needs().contains(LaneMask::SIZES));
+        let hier_half = TrafficAnalyzer::with_opts_parts(opts, TrafficParts::HIERARCHY);
+        assert!(hier_half.lane_needs().contains(LaneMask::ADDRS | LaneMask::STORES));
+        assert!(!hier_half.lane_needs().contains(LaneMask::SIZES));
+    }
+
+    #[test]
     fn mrc_knee_found_on_looping_working_set() {
         // a 256-line (16 KiB) working set walked 100 times: every re-walk
         // access has stack distance 255, so it misses the 4 KiB point and
@@ -559,9 +883,19 @@ mod tests {
             "levels",
             "writebacks",
             "fill_bytes",
+            "\"mode\": \"exact\"",
+            "sampled_accesses",
         ] {
             assert!(s.contains(key), "missing {key}");
         }
+
+        let mut t = TrafficAnalyzer::with_opts(
+            TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 0.05 }),
+        );
+        t.record(0x100, 8, false);
+        let s = t.finalize(10).to_json().to_string_pretty();
+        assert!(s.contains("\"mode\": \"sampled\""), "{s}");
+        assert!(s.contains("\"sample_rate\": 0.05"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,587 @@
+//! SHARDS-style sampled stack distances: O(sampled) miss-ratio curves.
+//!
+//! The exact Olken/Fenwick kernel ([`MrcBuilder`]) is the asymptotic
+//! bottleneck of the whole pipeline: it carries one map entry and one
+//! Fenwick slot per *distinct line ever touched*, and pays O(log n) per
+//! access. SHARDS (Waldspurger et al., FAST'15) replaces it with spatial
+//! hash sampling: a line is tracked **iff** `hash(line) < T`, which
+//! selects a uniform, *consistent* subset of lines — every access to a
+//! sampled line is seen, every access to an unsampled line is invisible.
+//! With sampling rate `R = T / 2^64`:
+//!
+//! - a stack distance `d_s` measured in the sampled substream estimates a
+//!   true distance of `d_s / R` (the rescaling rule: unsampled lines are
+//!   missing from the distance count in proportion `R`), and
+//! - each sampled access stands for `1 / R` accesses of the full stream,
+//!   so cold-miss and hit counts are rescaled by the same factor.
+//!
+//! The miss-ratio estimate is *self-normalizing*: ratios are computed
+//! against the rescaled sampled-access mass, not the raw access count, so
+//! hash-density luck (sampling slightly more or fewer lines than `R`
+//! predicts) cancels in the quotient. At `rate = 1.0` every line is
+//! sampled, all weights are exactly `1.0`, and the estimator reproduces
+//! the exact kernel bit for bit (integer-valued f64 arithmetic) — the
+//! plumbing oracle `prop_mrc_sampled.rs` pins.
+//!
+//! Two variants:
+//! - **fixed-rate** ([`SampledMrc::new`]): `T` is set once from the rate;
+//!   memory is O(R · footprint).
+//! - **fixed-size** ([`SampledMrc::fixed_size`]): at most `S_max` lines
+//!   are resident; on overflow the line with the *largest* hash is
+//!   evicted and `T` drops to that hash, so the rate adapts downward as
+//!   the footprint grows and memory stays constant regardless of trace
+//!   length. Later accesses are weighted by the rate in force when they
+//!   happen (no retroactive histogram rescale — the basic SHARDS
+//!   estimator, whose bias the self-normalizing ratio largely absorbs).
+//!
+//! When is the knee trustworthy? The knee is a *shape* feature: it needs
+//! the curve's big drop to exceed sampling noise (~`1/sqrt(sampled
+//! lines)` per point). With ≥ a few hundred sampled lines the knee is
+//! solid; at `rate * footprint ≲ 50` lines treat the knee — and the
+//! curve's absolute level — as indicative only. `sampled_accesses` is
+//! recorded in the traffic JSON precisely so consumers can judge this.
+
+use std::collections::BinaryHeap;
+use std::hash::Hasher;
+
+use anyhow::{bail, Result};
+
+use crate::analysis::reuse::LineDist;
+use crate::util::fxhash::FxHasher;
+use crate::util::{FastMap, Fenwick};
+
+use super::mrc::{MRC_CAPACITIES_BYTES, MRC_LINE_BYTES, MRC_LINE_SHIFT, N_MRC_POINTS};
+
+/// Default sampling rate for `--mrc sampled` with no explicit rate.
+pub const DEFAULT_SAMPLE_RATE: f64 = 0.01;
+
+/// Default resident-line bound for the fixed-size variant.
+pub const DEFAULT_SAMPLE_S_MAX: usize = 8192;
+
+/// 2^64 as f64 — the denominator of the hash-threshold → rate mapping.
+const TWO_POW_64: f64 = 18_446_744_073_709_551_616.0;
+
+/// Which stack-distance kernel the traffic family runs.
+///
+/// `Exact` is the Olken/Fenwick kernel — bit-identical to the historical
+/// output and the right choice for correctness baselines. `Sampled` is
+/// fixed-rate SHARDS: ~`1/rate` less stack-distance work and memory, with
+/// miss ratios that carry sampling noise of roughly
+/// `1/sqrt(rate * footprint_lines)` per capacity point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MrcMode {
+    /// Exact Olken/Fenwick stack distances (the default).
+    Exact,
+    /// Fixed-rate SHARDS sampling at the given rate in `(0, 1]`.
+    Sampled { rate: f64 },
+}
+
+impl Default for MrcMode {
+    fn default() -> Self {
+        MrcMode::Exact
+    }
+}
+
+impl MrcMode {
+    /// Short mode label for JSON: `"exact"` or `"sampled"`.
+    pub fn name(self) -> &'static str {
+        match self {
+            MrcMode::Exact => "exact",
+            MrcMode::Sampled { .. } => "sampled",
+        }
+    }
+
+    /// Human form including the rate, e.g. `"sampled:0.01"`.
+    pub fn describe(self) -> String {
+        match self {
+            MrcMode::Exact => "exact".to_string(),
+            MrcMode::Sampled { rate } => format!("sampled:{rate}"),
+        }
+    }
+
+    /// The sampling rate: `1.0` for exact mode.
+    pub fn rate(self) -> f64 {
+        match self {
+            MrcMode::Exact => 1.0,
+            MrcMode::Sampled { rate } => rate,
+        }
+    }
+
+    pub fn is_sampled(self) -> bool {
+        matches!(self, MrcMode::Sampled { .. })
+    }
+
+    /// Parse `exact`, `sampled` (default rate), or `sampled:<rate>`.
+    pub fn from_name(name: &str) -> Result<MrcMode> {
+        let name = name.trim();
+        if name.eq_ignore_ascii_case("exact") {
+            return Ok(MrcMode::Exact);
+        }
+        if name.eq_ignore_ascii_case("sampled") {
+            return Ok(MrcMode::Sampled { rate: DEFAULT_SAMPLE_RATE });
+        }
+        if let Some(rest) = name.strip_prefix("sampled:") {
+            let rate: f64 = match rest.trim().parse() {
+                Ok(r) => r,
+                Err(_) => bail!("bad sample rate {rest:?} (want a number in (0, 1])"),
+            };
+            if !(rate > 0.0 && rate <= 1.0) {
+                bail!("sample rate {rate} out of range (0, 1]");
+            }
+            return Ok(MrcMode::Sampled { rate });
+        }
+        bail!("unknown MRC mode {name:?} (try: exact, sampled, sampled:<rate>)")
+    }
+}
+
+/// The spatial-sampling hash: must be deterministic across instances and
+/// runs so every delivery path (per-event / chunked / offload / sharded)
+/// samples the *same* lines and stays bit-identical.
+#[inline]
+fn line_hash(line: u64) -> u64 {
+    let mut h = FxHasher::default();
+    h.write_u64(line);
+    h.finish()
+}
+
+/// Outcome of one access against the sampled kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SampledAccess {
+    /// The line's hash is above the threshold: invisible to the sample.
+    NotSampled,
+    /// A sampled access standing for `weight = 1/rate` full-stream
+    /// accesses, with its distance class in the *sampled substream*.
+    Sampled { weight: f64, dist: LineDist },
+}
+
+/// SHARDS stack distances over the sampled substream.
+///
+/// Same Olken structure as [`StackDistance`](crate::analysis::reuse::StackDistance)
+/// — last-access map + Fenwick over timestamps — but both only ever hold
+/// the sampled lines, so the map has O(rate · footprint) entries and the
+/// Fenwick indexes sampled time, not full time.
+#[derive(Debug, Clone, Default)]
+pub struct SampledStackDistance {
+    /// Sample iff `(hash as u128) < threshold`; `rate = threshold / 2^64`.
+    /// u128 so that rate 1.0 is exactly `2^64` and admits every hash.
+    threshold: u128,
+    /// Resident-line bound; `None` = pure fixed-rate.
+    s_max: Option<usize>,
+    /// line → sampled-stream timestamp of its last access.
+    last: FastMap<u64, u64>,
+    /// Max-heap of `(hash, line)`, maintained only in fixed-size mode.
+    /// A line enters the heap exactly once: once evicted, the threshold
+    /// drops to its hash and it can never be re-admitted.
+    heap: BinaryHeap<(u64, u64)>,
+    fen: Fenwick,
+    time: u64,
+    /// Immediate-repeat fast path over the sampled substream.
+    last_line: Option<u64>,
+}
+
+impl SampledStackDistance {
+    fn threshold_for(rate: f64) -> u128 {
+        debug_assert!(rate > 0.0 && rate <= 1.0, "rate {rate} out of (0, 1]");
+        (rate * TWO_POW_64) as u128
+    }
+
+    /// Fixed-rate sampler.
+    pub fn new(rate: f64) -> SampledStackDistance {
+        SampledStackDistance {
+            threshold: Self::threshold_for(rate),
+            ..Default::default()
+        }
+    }
+
+    /// Fixed-size sampler: starts at `rate`, lowers the threshold
+    /// whenever more than `s_max` lines are resident.
+    pub fn with_max_entries(rate: f64, s_max: usize) -> SampledStackDistance {
+        SampledStackDistance {
+            threshold: Self::threshold_for(rate),
+            s_max: Some(s_max.max(1)),
+            ..Default::default()
+        }
+    }
+
+    /// The rate currently in force (monotone non-increasing over a run).
+    pub fn current_rate(&self) -> f64 {
+        self.threshold as f64 / TWO_POW_64
+    }
+
+    /// Number of resident sampled lines.
+    pub fn resident(&self) -> usize {
+        self.last.len()
+    }
+
+    /// Process one line access. Distances in the returned `LineDist` are
+    /// counted over the sampled substream — scale by `1/current_rate()`
+    /// (already folded into `weight`) to estimate full-stream distances.
+    pub fn access_line(&mut self, line: u64) -> SampledAccess {
+        let h = line_hash(line);
+        if (h as u128) >= self.threshold {
+            return SampledAccess::NotSampled;
+        }
+        let weight = 1.0 / self.current_rate();
+        // Repeat fast path: previous *sampled* access was this same line.
+        // Unsampled accesses in between don't exist in the substream, so
+        // they must not break the run — at rate 1.0 this degenerates to
+        // the exact kernel's fast path.
+        if self.last_line == Some(line) {
+            return SampledAccess::Sampled { weight, dist: LineDist::Repeat };
+        }
+        self.last_line = Some(line);
+        let t = self.time;
+        let dist = match self.last.insert(line, t) {
+            Some(prev) => {
+                let d = self.fen.range_sum(prev as usize + 1, t as usize);
+                self.fen.add(prev as usize, -1);
+                LineDist::Reuse(d)
+            }
+            None => {
+                if self.s_max.is_some() {
+                    self.heap.push((h, line));
+                }
+                LineDist::Cold(self.last.len() as u64 - 1)
+            }
+        };
+        self.fen.add(t as usize, 1);
+        self.time += 1;
+        if let Some(s_max) = self.s_max {
+            while self.last.len() > s_max {
+                self.evict_max();
+            }
+        }
+        SampledAccess::Sampled { weight, dist }
+    }
+
+    /// Fixed-size overflow: drop the resident line with the largest hash
+    /// and lower the threshold to that hash so it (and anything denser)
+    /// is never sampled again. Ties are evicted together — `hash <
+    /// threshold` must remain an exact membership predicate, and leaving
+    /// a second line at the same hash resident would strand its Fenwick
+    /// mass.
+    fn evict_max(&mut self) {
+        let Some(&(h_max, _)) = self.heap.peek() else {
+            return;
+        };
+        while let Some(&(h, line)) = self.heap.peek() {
+            if h != h_max {
+                break;
+            }
+            self.heap.pop();
+            if let Some(t) = self.last.remove(&line) {
+                self.fen.add(t as usize, -1);
+            }
+            if self.last_line == Some(line) {
+                self.last_line = None;
+            }
+        }
+        self.threshold = h_max as u128;
+    }
+}
+
+/// Sampled miss-ratio curve over the same geometric capacity family as
+/// [`MrcBuilder`](super::MrcBuilder), built on [`SampledStackDistance`].
+///
+/// First-hit mass is accumulated in *weights* (`1/rate` per sampled
+/// access); miss ratios are quotients against the total sampled weight,
+/// and absolute miss counts are those ratios re-applied to the raw access
+/// count — the self-normalizing SHARDS estimator.
+#[derive(Debug, Clone, Default)]
+pub struct SampledMrc {
+    sd: SampledStackDistance,
+    /// Rescaled first-hit histogram: `first_hit_w[i]` is the estimated
+    /// number of full-stream accesses whose first hit is capacity `i`.
+    first_hit_w: [f64; N_MRC_POINTS],
+    /// Rescaled cold (compulsory) mass — also the footprint estimate:
+    /// in the exact kernel every distinct line cold-misses exactly once,
+    /// so the same `Σ 1/R` estimates both.
+    cold_w: f64,
+    /// Total rescaled sampled mass (the estimator's denominator).
+    sampled_w: f64,
+    accesses: u64,
+    sampled_accesses: u64,
+}
+
+impl SampledMrc {
+    /// Fixed-rate SHARDS at `rate` in `(0, 1]`.
+    pub fn new(rate: f64) -> SampledMrc {
+        SampledMrc { sd: SampledStackDistance::new(rate), ..Default::default() }
+    }
+
+    /// Fixed-size SHARDS: starts at rate 1.0 and adapts the rate down to
+    /// keep at most `s_max` lines resident — constant memory at any
+    /// footprint.
+    pub fn fixed_size(s_max: usize) -> SampledMrc {
+        SampledMrc {
+            sd: SampledStackDistance::with_max_entries(1.0, s_max),
+            ..Default::default()
+        }
+    }
+
+    /// Record one access of `size`-agnostic address `addr` (line mapping
+    /// identical to the exact builder).
+    #[inline]
+    pub fn access(&mut self, addr: u64) {
+        self.accesses += 1;
+        match self.sd.access_line(addr >> MRC_LINE_SHIFT) {
+            SampledAccess::NotSampled => {}
+            SampledAccess::Sampled { weight, dist } => {
+                self.sampled_w += weight;
+                self.sampled_accesses += 1;
+                match dist {
+                    LineDist::Repeat => self.first_hit_w[0] += weight,
+                    LineDist::Reuse(d_s) => {
+                        // rescaling rule: sampled distance ÷ rate ≈ true
+                        // distance (weight IS 1/rate at access time)
+                        let d = d_s as f64 * weight;
+                        if let Some(i) = Self::first_hit_index_scaled(d) {
+                            self.first_hit_w[i] += weight;
+                        }
+                    }
+                    LineDist::Cold(_) => self.cold_w += weight,
+                }
+            }
+        }
+    }
+
+    /// f64 analogue of the exact builder's first-hit index: at rate 1.0
+    /// the scaled distance is an exact integer-valued f64, so the
+    /// comparison agrees bit-for-bit with the integer version.
+    fn first_hit_index_scaled(d_lines: f64) -> Option<usize> {
+        MRC_CAPACITIES_BYTES
+            .iter()
+            .position(|&cap| d_lines < (cap / MRC_LINE_BYTES) as f64)
+    }
+
+    /// Raw (full-stream) access count.
+    pub fn accesses(&self) -> u64 {
+        self.accesses
+    }
+
+    /// How many of those accesses were sampled — the error yardstick:
+    /// per-point noise is roughly `1/sqrt(rate * footprint_lines)`.
+    pub fn sampled_accesses(&self) -> u64 {
+        self.sampled_accesses
+    }
+
+    /// The sampling rate currently in force (fixed-size mode lowers it).
+    pub fn current_rate(&self) -> f64 {
+        self.sd.current_rate()
+    }
+
+    /// Resident sampled lines (bounded by `S_max` in fixed-size mode).
+    pub fn resident(&self) -> usize {
+        self.sd.resident()
+    }
+
+    /// Estimated compulsory misses (`Σ 1/R` over sampled cold accesses).
+    pub fn cold_estimate(&self) -> u64 {
+        self.cold_w.round() as u64
+    }
+
+    /// Estimated distinct-line footprint — same estimator as the cold
+    /// count (each distinct line is cold exactly once).
+    pub fn footprint_estimate(&self) -> u64 {
+        self.cold_w.round() as u64
+    }
+
+    /// Estimated miss ratio per capacity point. All-zero when nothing
+    /// was sampled (the curve is unknown; `sampled_accesses` tells the
+    /// consumer so).
+    pub fn miss_ratios(&self) -> [f64; N_MRC_POINTS] {
+        let mut ratios = [0.0; N_MRC_POINTS];
+        if self.sampled_w <= 0.0 {
+            return ratios;
+        }
+        let mut hit_w = 0.0;
+        for (i, r) in ratios.iter_mut().enumerate() {
+            hit_w += self.first_hit_w[i];
+            *r = (self.sampled_w - hit_w).max(0.0) / self.sampled_w;
+        }
+        ratios
+    }
+
+    /// Estimated absolute miss counts: the miss *ratios* re-applied to
+    /// the raw access count. At rate 1.0 this round-trips the exact
+    /// integer counts.
+    pub fn estimated_miss_counts(&self) -> [u64; N_MRC_POINTS] {
+        let ratios = self.miss_ratios();
+        let mut misses = [0u64; N_MRC_POINTS];
+        for i in 0..N_MRC_POINTS {
+            misses[i] = (ratios[i] * self.accesses as f64).round() as u64;
+        }
+        misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::MrcBuilder;
+    use super::*;
+    use crate::testkit::{address_trace, naive_lru_misses};
+    use crate::util::Rng;
+
+    #[test]
+    fn mode_parsing_and_labels() {
+        assert_eq!(MrcMode::from_name("exact").unwrap(), MrcMode::Exact);
+        assert_eq!(
+            MrcMode::from_name("sampled").unwrap(),
+            MrcMode::Sampled { rate: DEFAULT_SAMPLE_RATE }
+        );
+        assert_eq!(
+            MrcMode::from_name("sampled:0.1").unwrap(),
+            MrcMode::Sampled { rate: 0.1 }
+        );
+        assert!(MrcMode::from_name("sampled:0").is_err());
+        assert!(MrcMode::from_name("sampled:1.5").is_err());
+        assert!(MrcMode::from_name("sampled:x").is_err());
+        assert!(MrcMode::from_name("approx").is_err());
+        assert_eq!(MrcMode::Exact.describe(), "exact");
+        assert_eq!(MrcMode::Sampled { rate: 0.05 }.describe(), "sampled:0.05");
+        assert_eq!(MrcMode::Sampled { rate: 0.05 }.name(), "sampled");
+        assert_eq!(MrcMode::Exact.rate(), 1.0);
+        assert_eq!(MrcMode::default(), MrcMode::Exact);
+    }
+
+    #[test]
+    fn rate_one_admits_every_line_and_matches_exact_bitwise() {
+        // at rate 1.0 the sampled substream IS the full stream and every
+        // weight is exactly 1.0 — the estimator must reproduce the exact
+        // kernel bit for bit
+        let mut rng = Rng::new(0xCAFE);
+        let addrs = address_trace(&mut rng, 40_000, 4096);
+        let mut exact = MrcBuilder::new();
+        let mut sampled = SampledMrc::new(1.0);
+        for &a in &addrs {
+            exact.access(a);
+            sampled.access(a);
+        }
+        assert_eq!(sampled.sampled_accesses(), sampled.accesses());
+        assert_eq!(sampled.current_rate(), 1.0);
+        assert_eq!(sampled.cold_estimate(), exact.cold());
+        assert_eq!(sampled.footprint_estimate(), exact.footprint_lines());
+        assert_eq!(sampled.estimated_miss_counts(), exact.miss_counts());
+        let exact_ratios: Vec<f64> = exact
+            .miss_counts()
+            .iter()
+            .map(|&m| m as f64 / exact.accesses() as f64)
+            .collect();
+        for (s, e) in sampled.miss_ratios().iter().zip(&exact_ratios) {
+            assert_eq!(s.to_bits(), e.to_bits(), "ratio bits diverge");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut rng = Rng::new(7);
+        let addrs = address_trace(&mut rng, 20_000, 8192);
+        let run = || {
+            let mut s = SampledMrc::new(0.1);
+            for &a in &addrs {
+                s.access(a);
+            }
+            (s.miss_ratios(), s.sampled_accesses(), s.cold_estimate())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn sampled_curve_finds_the_knee_of_a_looping_working_set() {
+        // 192 lines (12 KiB) looped 100×: true stack distance 191 —
+        // comfortably inside 16 KiB (256 lines) and past 4 KiB (64
+        // lines), with ≥4σ margin against hash-density luck at rate 0.5
+        let mut s = SampledMrc::new(0.5);
+        for _ in 0..100 {
+            for line in 0..192u64 {
+                s.access(line * MRC_LINE_BYTES);
+            }
+        }
+        let r = s.miss_ratios();
+        assert!(r[0] > 0.9, "4 KiB should miss, got {}", r[0]);
+        assert!(r[1] < 0.1, "16 KiB should hit, got {}", r[1]);
+        for w in r.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "curve must be monotone: {r:?}");
+        }
+        assert_eq!(super::super::slope_knee(&r), Some(1));
+    }
+
+    #[test]
+    fn sampled_tracks_naive_lru_within_noise() {
+        // randomized cross-check against a naive LRU at one mid-curve
+        // capacity: ~4k-line footprint at rate 0.25 → ~1000 sampled
+        // lines, noise ≈ 3% — assert a loose 10% band
+        let mut rng = Rng::new(0xBEEF);
+        let addrs = address_trace(&mut rng, 30_000, 32_768);
+        let lines: Vec<u64> = addrs.iter().map(|a| a >> MRC_LINE_SHIFT).collect();
+        let mut s = SampledMrc::new(0.25);
+        for &a in &addrs {
+            s.access(a);
+        }
+        let cap_lines = (MRC_CAPACITIES_BYTES[3] / MRC_LINE_BYTES) as usize;
+        let naive = naive_lru_misses(lines.iter().copied(), cap_lines) as f64 / lines.len() as f64;
+        let got = s.miss_ratios()[3];
+        assert!(
+            (got - naive).abs() < 0.10,
+            "sampled {got:.4} vs naive {naive:.4}"
+        );
+    }
+
+    #[test]
+    fn fixed_size_bounds_residency_and_lowers_the_rate() {
+        let mut rng = Rng::new(99);
+        let addrs = address_trace(&mut rng, 50_000, 65_536);
+        let mut s = SampledMrc::fixed_size(256);
+        for (i, &a) in addrs.iter().enumerate() {
+            s.access(a);
+            if i % 64 == 0 {
+                assert!(s.resident() <= 256, "resident {} > S_max", s.resident());
+            }
+        }
+        assert!(s.resident() <= 256);
+        // ~8k-line footprint vs 256 slots: the threshold must have moved
+        assert!(s.current_rate() < 1.0);
+        let r = s.miss_ratios();
+        for w in r.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "curve must stay monotone: {r:?}");
+        }
+        assert!(r.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn evicted_lines_are_never_readmitted() {
+        // drive far more distinct lines than S_max, then revisit them
+        // all: a line evicted by the threshold drop must stay invisible
+        // (hash >= threshold), never re-entering as a bogus cold miss
+        let mut sd = SampledStackDistance::with_max_entries(1.0, 8);
+        for line in 0..64u64 {
+            sd.access_line(line);
+        }
+        assert!(sd.resident() <= 8);
+        let rate = sd.current_rate();
+        for line in 0..64u64 {
+            match sd.access_line(line) {
+                SampledAccess::NotSampled => {}
+                SampledAccess::Sampled { dist, .. } => {
+                    assert!(
+                        !matches!(dist, LineDist::Cold(_)),
+                        "resident line {line} reported cold on revisit"
+                    );
+                }
+            }
+        }
+        // revisits admit nothing new and never raise the rate
+        assert!(sd.current_rate() <= rate);
+        assert!(sd.resident() <= 8);
+    }
+
+    #[test]
+    fn empty_sampler_reports_a_flat_zero_curve() {
+        let s = SampledMrc::new(0.01);
+        assert_eq!(s.accesses(), 0);
+        assert_eq!(s.sampled_accesses(), 0);
+        assert_eq!(s.miss_ratios(), [0.0; N_MRC_POINTS]);
+        assert_eq!(s.estimated_miss_counts(), [0u64; N_MRC_POINTS]);
+        assert_eq!(s.cold_estimate(), 0);
+    }
+}

@@ -76,6 +76,12 @@ fn pipeline_native_end_to_end() {
         Some("inclusive"),
         "report must carry the hierarchy policy"
     );
+    assert_eq!(
+        reparsed.get("mrc_mode").and_then(|v| v.as_str()),
+        Some("exact"),
+        "report must carry the MRC mode"
+    );
+    assert!(reparsed.get("mrc_rate").is_some(), "report must carry the MRC sample rate");
     for key in ["\"hierarchy\"", "\"levels\"", "\"writebacks\"", "\"fills\""] {
         assert!(pretty.contains(key), "per-level traffic JSON missing {key}");
     }

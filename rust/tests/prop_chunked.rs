@@ -29,7 +29,7 @@ use pisa_nmc::interp::{
 };
 use pisa_nmc::prop_assert;
 use pisa_nmc::testkit::{check_seeded, random_program};
-use pisa_nmc::traffic::HierarchyPolicy;
+use pisa_nmc::traffic::{HierarchyPolicy, TrafficOpts};
 
 /// Exact comparison of every metric surface. f64s are compared by bit
 /// pattern: the two paths must execute the *same arithmetic in the same
@@ -244,7 +244,7 @@ fn all_four_paths_bit_identical_under_exclusive_hierarchy() {
     check_seeded("exclusive hierarchy 4-way", 0xE8C2, 12, |rng| {
         let p = random_program(rng);
         let all = MetricSet::all();
-        let excl = HierarchyPolicy::Exclusive;
+        let excl = TrafficOpts::with_hierarchy(HierarchyPolicy::Exclusive);
         let reference = profile_per_event_opts(&p, all, excl).map_err(|e| e.to_string())?;
         let chunked =
             profile_opts(&p, all, PipelineMode::Inline, excl).map_err(|e| e.to_string())?;

@@ -32,7 +32,7 @@ use pisa_nmc::ir::Program;
 use pisa_nmc::prop_assert;
 use pisa_nmc::testkit::{check_seeded, random_program};
 use pisa_nmc::traffic::{
-    HierarchyConfig, HierarchyPolicy, HierarchyReplay, LevelConfig, TrafficMetrics,
+    HierarchyConfig, HierarchyPolicy, HierarchyReplay, LevelConfig, TrafficMetrics, TrafficOpts,
     HIERARCHY_LEVELS, MRC_LINE_BYTES,
 };
 
@@ -305,7 +305,9 @@ fn assert_matches_naive(
 }
 
 fn profile_traffic(prog: &Program, policy: HierarchyPolicy) -> TrafficMetrics {
-    profile_opts(prog, MetricSet::all(), PipelineMode::Inline, policy).unwrap().traffic
+    profile_opts(prog, MetricSet::all(), PipelineMode::Inline, TrafficOpts::with_hierarchy(policy))
+        .unwrap()
+        .traffic
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,282 @@
+//! Property tests for the SHARDS-style sampled MRC (`--mrc sampled:<rate>`).
+//!
+//! 1. **Exact mode is unchanged**: `--mrc exact` (the default
+//!    `TrafficOpts`) is bit-identical to the plain pre-sampling entry
+//!    points on every delivery path — including sharded delivery, where
+//!    the traffic family is now split into MRC and hierarchy halves.
+//! 2. **Rate 1.0 is an exactness oracle**: `sampled:1.0` samples every
+//!    line with weight exactly 1.0, so the estimator must reproduce the
+//!    exact curve bit for bit end-to-end through the profile pipeline.
+//!    This pins the plumbing on seeded random programs whose footprints
+//!    are far too small for statistical bounds.
+//! 3. **Error bound**: at rate 0.1 on traces with thousands of distinct
+//!    lines (synthetic address traces, `gesummv`, `bfs`), the mean
+//!    absolute miss-ratio error across all 8 capacity points stays ≤ 0.02.
+//! 4. **Fixed-size variant**: never exceeds `S_max` resident lines and
+//!    only ever lowers its rate.
+//! 5. **Sampled mode is deterministic across deliveries**: the spatial
+//!    hash makes the sample a pure function of the line address, so
+//!    per-event / chunked / offload / sharded all agree bitwise.
+
+use pisa_nmc::analysis::{
+    profile, profile_offload, profile_opts, profile_per_event, profile_per_event_opts,
+    profile_sharded, MetricSet,
+};
+use pisa_nmc::interp::{PipelineMode, Workers};
+use pisa_nmc::prop_assert;
+use pisa_nmc::testkit::{address_trace, check_seeded, random_program};
+use pisa_nmc::traffic::{
+    mrc::MRC_LINE_SHIFT, MrcBuilder, MrcMode, SampledMrc, TrafficMetrics, TrafficOpts,
+    N_MRC_POINTS,
+};
+use pisa_nmc::util::Rng;
+
+fn assert_traffic_bits_equal(a: &TrafficMetrics, b: &TrafficMetrics, what: &str) {
+    assert_eq!(a.accesses, b.accesses, "{what}: accesses");
+    assert_eq!(a.cold_misses, b.cold_misses, "{what}: cold misses");
+    assert_eq!(a.footprint_lines, b.footprint_lines, "{what}: footprint");
+    assert_eq!(a.mrc_misses, b.mrc_misses, "{what}: miss counts");
+    for (i, (x, y)) in a.mrc_miss_ratio.iter().zip(&b.mrc_miss_ratio).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: ratio[{i}] {x} vs {y}");
+    }
+    assert_eq!(a.mrc_knee_bytes, b.mrc_knee_bytes, "{what}: knee");
+    assert_eq!(a.dram_fills, b.dram_fills, "{what}: dram fills");
+    assert_eq!(a.dram_writebacks, b.dram_writebacks, "{what}: writebacks");
+    assert_eq!(a.read_bytes, b.read_bytes, "{what}: read bytes");
+    assert_eq!(a.write_bytes, b.write_bytes, "{what}: write bytes");
+}
+
+// ---------------------------------------------------------------------------
+// 1. `--mrc exact` ≡ the pre-sampling kernel, on all four deliveries.
+
+#[test]
+fn exact_mode_is_bit_identical_to_the_pre_sampling_kernel() {
+    check_seeded("exact == pre-sampling 4-way", 0x5A3D, 10, |rng| {
+        let p = random_program(rng);
+        let all = MetricSet::all();
+        let exact = TrafficOpts::default();
+        // the historical entry points (no TrafficOpts anywhere)
+        let legacy = profile(&p).map_err(|e| e.to_string())?;
+        let legacy_pe = profile_per_event(&p).map_err(|e| e.to_string())?;
+        let legacy_off = profile_offload(&p).map_err(|e| e.to_string())?;
+        let legacy_sh = profile_sharded(&p).map_err(|e| e.to_string())?;
+        // the new opts-threaded ones, in explicit exact mode
+        let inline =
+            profile_opts(&p, all, PipelineMode::Inline, exact).map_err(|e| e.to_string())?;
+        let per_event = profile_per_event_opts(&p, all, exact).map_err(|e| e.to_string())?;
+        let offload =
+            profile_opts(&p, all, PipelineMode::Offload, exact).map_err(|e| e.to_string())?;
+        let sharded =
+            profile_opts(&p, all, PipelineMode::Sharded { workers: Workers::Auto }, exact)
+                .map_err(|e| e.to_string())?;
+        prop_assert!(inline.traffic.mrc_mode == MrcMode::Exact, "default mode must be exact");
+        for (got, want, what) in [
+            (&inline, &legacy, "inline"),
+            (&per_event, &legacy_pe, "per-event"),
+            (&offload, &legacy_off, "offload"),
+            (&sharded, &legacy_sh, "sharded"),
+            // and the split-traffic sharded path against the unsplit inline
+            (&sharded, &legacy, "sharded vs inline"),
+        ] {
+            assert_traffic_bits_equal(&got.traffic, &want.traffic, what);
+            let (pa, pb) = (got.pca8_features(), want.pca8_features());
+            for (i, (x, y)) in pa.iter().zip(&pb).enumerate() {
+                prop_assert!(x.to_bits() == y.to_bits(), "{what}: pca8[{i}] {x} vs {y}");
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 2. Rate 1.0 reproduces the exact curve bit for bit.
+
+#[test]
+fn sampled_rate_one_reproduces_exact_through_the_full_pipeline() {
+    check_seeded("sampled:1.0 == exact", 0x10_F1, 10, |rng| {
+        let p = random_program(rng);
+        let all = MetricSet::all();
+        let exact =
+            profile_opts(&p, all, PipelineMode::Inline, TrafficOpts::default())
+                .map_err(|e| e.to_string())?;
+        let opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 1.0 });
+        let sampled =
+            profile_opts(&p, all, PipelineMode::Inline, opts).map_err(|e| e.to_string())?;
+        let (a, b) = (&exact.traffic, &sampled.traffic);
+        prop_assert!(b.mrc_mode == MrcMode::Sampled { rate: 1.0 }, "mode must be recorded");
+        prop_assert!(
+            b.mrc_sampled_accesses == b.accesses,
+            "rate 1.0 must sample every access"
+        );
+        prop_assert!(a.cold_misses == b.cold_misses, "cold misses diverge");
+        prop_assert!(a.footprint_lines == b.footprint_lines, "footprints diverge");
+        prop_assert!(a.mrc_misses == b.mrc_misses, "miss counts diverge");
+        prop_assert!(a.mrc_knee_bytes == b.mrc_knee_bytes, "knees diverge");
+        for (i, (x, y)) in a.mrc_miss_ratio.iter().zip(&b.mrc_miss_ratio).enumerate() {
+            prop_assert!(x.to_bits() == y.to_bits(), "ratio[{i}] {x} vs {y}");
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 3. Error bound at rate 0.1 on statistically meaningful footprints.
+
+fn mae(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>() / a.len() as f64
+}
+
+#[test]
+fn sampled_rate_point_one_mae_on_synthetic_traces() {
+    // ~8k-line footprints sampled at 0.1 → ~800 sampled lines per case:
+    // every individual curve stays within a loose per-case band and the
+    // mean across seeds meets the headline 0.02 bound
+    let mut total = 0.0;
+    const CASES: u64 = 12;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0x3A_E0 + seed);
+        let addrs = address_trace(&mut rng, 100_000, 65_536);
+        let mut exact = MrcBuilder::new();
+        let mut sampled = SampledMrc::new(0.1);
+        for &a in &addrs {
+            exact.access(a);
+            sampled.access(a);
+        }
+        let exact_ratios: Vec<f64> = exact
+            .miss_counts()
+            .iter()
+            .map(|&m| m as f64 / exact.accesses() as f64)
+            .collect();
+        let e = mae(&sampled.miss_ratios(), &exact_ratios);
+        assert!(e <= 0.04, "seed {seed}: per-case MAE {e:.4} out of band");
+        total += e;
+    }
+    let mean = total / CASES as f64;
+    assert!(mean <= 0.02, "mean MAE {mean:.4} > 0.02 across {CASES} traces");
+}
+
+#[test]
+fn sampled_rate_point_one_mae_on_suite_kernels() {
+    // gesummv (dense streaming, ~9k-line footprint at n=192) and bfs
+    // (irregular pointer chasing, ~5k lines at n=4096): MAE ≤ 0.02 per
+    // kernel, end-to-end through the profile pipeline
+    let traffic_only = MetricSet::from_names("traffic").unwrap();
+    let sampled_opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 0.1 });
+    for (name, n) in [("gesummv", 192usize), ("bfs", 4096usize)] {
+        let k = pisa_nmc::workloads::by_name(name).unwrap();
+        let p = k.build(n, 42);
+        let exact = profile_opts(&p, traffic_only, PipelineMode::Inline, TrafficOpts::default())
+            .unwrap()
+            .traffic;
+        let sampled =
+            profile_opts(&p, traffic_only, PipelineMode::Inline, sampled_opts).unwrap().traffic;
+        assert!(
+            sampled.mrc_sampled_accesses < exact.accesses / 2,
+            "{name}: sampling barely reduced the substream \
+             ({} of {})",
+            sampled.mrc_sampled_accesses,
+            exact.accesses
+        );
+        let e = mae(&sampled.mrc_miss_ratio, &exact.mrc_miss_ratio);
+        assert!(e <= 0.02, "{name}: MAE {e:.4} > 0.02");
+        // the footprint/cold estimator lands near the truth too
+        let (est, truth) = (sampled.footprint_lines as f64, exact.footprint_lines as f64);
+        assert!(
+            (est - truth).abs() / truth < 0.2,
+            "{name}: footprint estimate {est} vs {truth}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Fixed-size variant: bounded residency, monotone threshold.
+
+#[test]
+fn fixed_size_variant_never_exceeds_its_bound() {
+    for (seed, s_max) in [(1u64, 128usize), (2, 512), (3, 2048)] {
+        let mut rng = Rng::new(0xF1_5E ^ seed);
+        let addrs = address_trace(&mut rng, 60_000, 65_536);
+        let mut s = SampledMrc::fixed_size(s_max);
+        let mut last_rate = s.current_rate();
+        for (i, &a) in addrs.iter().enumerate() {
+            s.access(a);
+            if i % 32 == 0 {
+                assert!(
+                    s.resident() <= s_max,
+                    "resident {} > S_max {s_max} at access {i}",
+                    s.resident()
+                );
+                let r = s.current_rate();
+                assert!(r <= last_rate, "rate rose {last_rate} -> {r}");
+                last_rate = r;
+            }
+        }
+        assert!(s.resident() <= s_max);
+        // an ~8k-line footprint must have forced adaptation at small S_max
+        if s_max < 1024 {
+            assert!(s.current_rate() < 1.0, "S_max {s_max} never adapted");
+        }
+        let r = s.miss_ratios();
+        assert!(r.iter().all(|v| (0.0..=1.0).contains(v)), "{r:?}");
+        for w in r.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "curve must be monotone: {r:?}");
+        }
+        assert_eq!(r.len(), N_MRC_POINTS);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5. Sampled mode is bit-identical across all four delivery paths.
+
+#[test]
+fn sampled_mode_is_bit_identical_across_all_four_deliveries() {
+    check_seeded("sampled 4-way identity", 0x54_4D, 10, |rng| {
+        let p = random_program(rng);
+        let all = MetricSet::all();
+        let opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 0.5 });
+        let reference = profile_per_event_opts(&p, all, opts).map_err(|e| e.to_string())?;
+        let inline =
+            profile_opts(&p, all, PipelineMode::Inline, opts).map_err(|e| e.to_string())?;
+        let offload =
+            profile_opts(&p, all, PipelineMode::Offload, opts).map_err(|e| e.to_string())?;
+        let sharded =
+            profile_opts(&p, all, PipelineMode::Sharded { workers: Workers::Auto }, opts)
+                .map_err(|e| e.to_string())?;
+        prop_assert!(
+            inline.traffic.mrc_mode == MrcMode::Sampled { rate: 0.5 },
+            "mode did not reach the analyzer"
+        );
+        for (got, what) in [(&inline, "inline"), (&offload, "offload"), (&sharded, "sharded")] {
+            assert_traffic_bits_equal(&got.traffic, &reference.traffic, what);
+            prop_assert!(
+                got.traffic.mrc_sampled_accesses == reference.traffic.mrc_sampled_accesses,
+                "{what}: sampled-substream size diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Sanity: the line-granularity plumbing agrees between exact and sampled.
+
+#[test]
+fn exact_and_sampled_see_the_same_line_stream() {
+    // same addresses, same line shift: the sampled kernel's raw access
+    // count must equal the exact kernel's regardless of rate, and the
+    // sample must be a strict subset
+    let mut rng = Rng::new(0x11D);
+    let addrs = address_trace(&mut rng, 5_000, 4096);
+    let distinct_lines: std::collections::HashSet<u64> =
+        addrs.iter().map(|a| a >> MRC_LINE_SHIFT).collect();
+    let mut exact = MrcBuilder::new();
+    let mut sampled = SampledMrc::new(0.25);
+    for &a in &addrs {
+        exact.access(a);
+        sampled.access(a);
+    }
+    assert_eq!(exact.footprint_lines(), distinct_lines.len() as u64);
+    assert_eq!(sampled.accesses(), exact.accesses());
+    assert!(sampled.sampled_accesses() <= sampled.accesses());
+    assert!(sampled.resident() <= distinct_lines.len());
+}
