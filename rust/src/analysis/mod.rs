@@ -65,6 +65,7 @@ pub use reuse::{LineDist, ReuseAnalyzer, ReuseResult, StackDistance};
 pub use shard::ShardPlan;
 pub use spatial::SpatialResult;
 
+use crate::fault::SuperviseOpts;
 use crate::interp::{
     offload, ChunkLanes, ExecStats, Instrument, LaneMask, Machine, PipelineMode, TraceEvent,
     Workers,
@@ -90,6 +91,12 @@ pub struct AppMetrics {
     pub pbblp: PbblpResult,
     pub traffic: TrafficMetrics,
     pub exec: ExecStats,
+    /// Metric families whose analyzer shard died mid-run (supervised
+    /// pipelines only — see [`crate::fault`]). Empty on a clean run. A
+    /// listed family's result fields hold whatever had been folded before
+    /// the failure and must not be trusted; `to_json` marks the matching
+    /// sections `"status": "failed"`.
+    pub failed: Vec<String>,
 }
 
 /// Count-of-counts slots the entropy artifact accepts (see aot.py `B`).
@@ -369,6 +376,7 @@ impl AnalyzerStack {
             pbblp: pbblp.finalize(),
             traffic,
             exec,
+            failed: Vec::new(),
         };
         let regions = self.tasks.map(|t| t.finalize());
         (metrics, regions)
@@ -509,7 +517,7 @@ fn profile_impl(
     delivery: Delivery,
     opts: TrafficOpts,
 ) -> Result<AppMetrics> {
-    Ok(profile_run(prog, metrics, delivery, opts, false)?.0)
+    Ok(profile_run(prog, metrics, delivery, opts, SuperviseOpts::default(), false)?.0)
 }
 
 /// The one implementation every profiling entry point lands on: run
@@ -527,24 +535,40 @@ fn profile_run(
     metrics: MetricSet,
     delivery: Delivery,
     opts: TrafficOpts,
+    sup: SuperviseOpts,
     with_tasks: bool,
 ) -> Result<(AppMetrics, Option<Vec<Region>>)> {
     crate::ir::verify::verify_ok(prog);
     if let Delivery::Sharded(workers) = delivery {
-        return shard::profile_sharded_run(prog, metrics, workers, opts, with_tasks);
+        return shard::profile_sharded_run(prog, metrics, workers, opts, sup, with_tasks);
     }
     let mut stack = AnalyzerStack::new_opts(prog, metrics, opts);
     if with_tasks {
         stack = stack.with_task_trace(prog);
     }
     let mut machine = Machine::new(prog)?;
+    let mut failed: Vec<String> = Vec::new();
     let out = match delivery {
-        Delivery::Chunked => machine.run(&mut stack)?,
+        Delivery::Chunked => machine.run_supervised(&mut stack, sup)?,
         Delivery::PerEvent => machine.run_per_event(&mut stack)?,
-        Delivery::Offload => offload::run_offload(&mut machine, &mut stack)?,
+        Delivery::Offload => {
+            let run = offload::run_offload_supervised(&mut machine, &mut stack, sup)?;
+            if !run.failures.is_empty() {
+                // the single offloaded stack owned every enabled family,
+                // so its death takes them all down together
+                failed = metrics.names().iter().map(|s| s.to_string()).collect();
+            }
+            run.outcome
+        }
         Delivery::Sharded(_) => unreachable!("handled above"),
     };
-    Ok(stack.finalize(out.stats))
+    let (mut m, regions) = stack.finalize(out.stats);
+    let degraded = !failed.is_empty();
+    m.failed = failed;
+    // A degraded run's task trace lived on the dead analysis thread; a
+    // truncated region list would silently mis-shape the simulations, so
+    // degradation forfeits the trace entirely.
+    Ok((m, if degraded { None } else { regions }))
 }
 
 /// Map the CLI-facing [`PipelineMode`] onto the internal delivery enum.
@@ -565,8 +589,29 @@ pub fn profile_with_tasks(
     mode: PipelineMode,
     opts: TrafficOpts,
 ) -> Result<(AppMetrics, Vec<Region>)> {
-    let (m, regions) = profile_run(prog, metrics, delivery_for(mode), opts, true)?;
+    let (m, regions) =
+        profile_with_tasks_supervised(prog, metrics, mode, opts, SuperviseOpts::default())?;
+    if !m.failed.is_empty() {
+        bail!("analysis degraded; failed families: {}", m.failed.join(", "));
+    }
     Ok((m, regions.expect("task trace enabled")))
+}
+
+/// [`profile_with_tasks`] under a supervision plan (`--inject-fault`,
+/// `--app-timeout`): analyzer-thread deaths degrade the run instead of
+/// failing it. The returned metrics list the dead families in
+/// [`AppMetrics::failed`]; the region trace comes back `None` whenever
+/// the run degraded (the collector lived on a dead thread). Interpreter
+/// faults and watchdog expiry still return `Err` — there is no partial
+/// event stream to salvage.
+pub fn profile_with_tasks_supervised(
+    prog: &Program,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    opts: TrafficOpts,
+    sup: SuperviseOpts,
+) -> Result<(AppMetrics, Option<Vec<Region>>)> {
+    profile_run(prog, metrics, delivery_for(mode), opts, sup, true)
 }
 
 /// Run `prog` once, streaming the trace through every analyzer (chunked
@@ -670,25 +715,46 @@ impl AppMetrics {
         ]
     }
 
+    /// True when `family` (a [`Metric::name`]) died mid-run on a
+    /// supervised pipeline.
+    pub fn family_failed(&self, family: &str) -> bool {
+        self.failed.iter().any(|f| f == family)
+    }
+
     pub fn to_json(&self) -> Json {
+        // Degraded families keep their (shape-stable, untrustworthy)
+        // numbers but get stamped so no downstream reader mistakes them
+        // for measurements. Spatial locality derives from reuse, so it
+        // inherits that family's failure.
+        let section = |mut sec: Json, family: &str| -> Json {
+            if self.family_failed(family) {
+                sec.set("status", "failed");
+            }
+            sec
+        };
         let mut j = Json::obj();
         j.set("name", self.name.as_str());
-        j.set("instruction_mix", self.mix.to_json());
-        j.set("branch", self.branch.to_json());
-        j.set("memory_entropy", self.mem_entropy.to_json());
-        j.set("reuse", self.reuse.to_json());
-        j.set("spatial_locality", self.spatial.to_json());
-        j.set("ilp", self.ilp.to_json());
-        j.set("dlp", self.dlp.to_json());
-        j.set("bblp", self.bblp.to_json());
-        j.set("pbblp", self.pbblp.to_json());
-        j.set("traffic", self.traffic.to_json());
+        j.set("instruction_mix", section(self.mix.to_json(), "mix"));
+        j.set("branch", section(self.branch.to_json(), "branch"));
+        j.set("memory_entropy", section(self.mem_entropy.to_json(), "mem_entropy"));
+        j.set("reuse", section(self.reuse.to_json(), "reuse"));
+        j.set("spatial_locality", section(self.spatial.to_json(), "reuse"));
+        j.set("ilp", section(self.ilp.to_json(), "ilp"));
+        j.set("dlp", section(self.dlp.to_json(), "dlp"));
+        j.set("bblp", section(self.bblp.to_json(), "bblp"));
+        j.set("pbblp", section(self.pbblp.to_json(), "pbblp"));
+        j.set("traffic", section(self.traffic.to_json(), "traffic"));
         j.set("dyn_instrs", self.exec.dyn_instrs);
         let mut exec = Json::obj();
         exec.set("events", self.exec.events());
         exec.set("wall_s", self.exec.wall_s);
         exec.set("events_per_sec", self.exec.events_per_sec());
         j.set("exec", exec);
+        if !self.failed.is_empty() {
+            j.set("status", "degraded");
+            let fams: Vec<Json> = self.failed.iter().map(|f| Json::from(f.as_str())).collect();
+            j.set("failed_families", fams);
+        }
         j
     }
 }
@@ -856,6 +922,25 @@ mod tests {
         assert!(!MetricSet::all().without(Metric::Traffic).is_all());
         assert!(!MetricSet::all().without(Metric::Traffic).contains(Metric::Traffic));
         assert!(MetricSet::from_names("mix,bogus").is_err());
+    }
+
+    #[test]
+    fn degraded_metrics_mark_failed_families_in_json() {
+        let mut m = profile(&tiny_program()).unwrap();
+        let clean = m.to_json().to_string_pretty();
+        assert!(!clean.contains("failed_families"));
+        assert!(!clean.contains("\"status\""));
+        m.failed = vec!["reuse".into(), "traffic".into()];
+        assert!(m.family_failed("reuse") && !m.family_failed("mix"));
+        let j = m.to_json();
+        let s = j.to_string_pretty();
+        assert!(s.contains("failed_families"));
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("degraded"));
+        for sec in ["reuse", "spatial_locality", "traffic"] {
+            let status = j.get(sec).and_then(|v| v.get("status")).and_then(Json::as_str);
+            assert_eq!(status, Some("failed"), "section {sec}");
+        }
+        assert!(j.get("instruction_mix").unwrap().get("status").is_none());
     }
 
     #[test]

@@ -33,7 +33,8 @@
 
 use anyhow::Result;
 
-use crate::interp::{run_sharded, Instrument, Machine, Workers};
+use crate::fault::SuperviseOpts;
+use crate::interp::{run_sharded_supervised, Instrument, Machine, Workers};
 use crate::ir::Program;
 use crate::sim::Region;
 use crate::traffic::{TrafficOpts, TrafficParts};
@@ -169,11 +170,20 @@ impl ShardPlan {
 /// the per-shard results — in plan order, so the outcome is independent
 /// of worker timing. With `with_tasks`, the task-trace collector rides
 /// the last shard (the block-structure side of the canonical plan).
+///
+/// Under supervision (`sup`), a dead worker degrades the run instead of
+/// failing it: the broadcaster keeps feeding the survivors the complete
+/// stream, so their families merge bit-identically to a clean run, while
+/// the dead shard's families are listed in [`AppMetrics::failed`] and
+/// kept out of the merge (a mid-fold panic leaves analyzer state
+/// half-applied). The region trace is forfeited if its carrier shard —
+/// the last one — died.
 pub(super) fn profile_sharded_run(
     prog: &Program,
     metrics: MetricSet,
     workers: Workers,
     opts: TrafficOpts,
+    sup: SuperviseOpts,
     with_tasks: bool,
 ) -> Result<(AppMetrics, Option<Vec<Region>>)> {
     let plan = ShardPlan::new(metrics, workers);
@@ -187,14 +197,29 @@ pub(super) fn profile_sharded_run(
         stacks.push(last.with_task_trace(prog));
     }
     let mut machine = Machine::new(prog)?;
-    let out = {
+    let run = {
         let mut refs: Vec<&mut (dyn Instrument + Send)> = stacks
             .iter_mut()
             .map(|s| s as &mut (dyn Instrument + Send))
             .collect();
-        run_sharded(&mut machine, &mut refs)?
+        run_sharded_supervised(&mut machine, &mut refs, sup)?
     };
-    Ok(merge_shards(&plan, stacks, out.stats))
+    let mut dead = vec![false; plan.workers()];
+    let mut dead_families = MetricSet::none();
+    for f in &run.failures {
+        if let Some(slot) = dead.get_mut(f.shard) {
+            *slot = true;
+            dead_families = dead_families.union(plan.shards()[f.shard].metrics);
+        }
+    }
+    let (mut m, mut regions) = merge_shards(&plan, stacks, &dead, run.outcome.stats);
+    m.failed = dead_families.names().iter().map(|s| s.to_string()).collect();
+    if dead.last().copied().unwrap_or(false) {
+        // the task collector rode the dead last shard; a truncated trace
+        // would silently mis-shape the simulations
+        regions = None;
+    }
+    Ok((m, regions))
 }
 
 /// Fold the per-shard stacks into one [`AppMetrics`]: each family's
@@ -202,9 +227,13 @@ pub(super) fn profile_sharded_run(
 /// shards are disjoint, so this is a disjoint union, not a reduction).
 /// The `traffic` family may be split across two shards; its halves stitch
 /// back through [`crate::traffic::TrafficMetrics::adopt_parts`].
+/// `dead[i]` marks shard `i` as having died mid-run: its stack is
+/// dropped un-finalized (a panic mid-chunk can leave analyzer state
+/// half-applied) and its families keep shard 0's shape-stable empties.
 fn merge_shards(
     plan: &ShardPlan,
     stacks: Vec<AnalyzerStack>,
+    dead: &[bool],
     exec: ExecStats,
 ) -> (AppMetrics, Option<Vec<Region>>) {
     debug_assert!(
@@ -226,12 +255,16 @@ fn merge_shards(
         },
         "shard plan families overlap"
     );
-    let mut parts = plan.shards().iter().zip(stacks);
-    let (_, first_stack) = parts.next().expect("plan is never empty");
+    let mut parts = plan.shards().iter().zip(stacks).enumerate();
+    let (_, (_, first_stack)) = parts.next().expect("plan is never empty");
     let (mut merged, mut regions) = first_stack.finalize(exec.clone());
     // shard 0's disabled families finalized shape-stable empty; overwrite
-    // exactly the families (and traffic halves) later shards own
-    for (spec, stack) in parts {
+    // exactly the families (and traffic halves) later *surviving* shards
+    // own
+    for (i, (spec, stack)) in parts {
+        if dead.get(i).copied().unwrap_or(false) {
+            continue;
+        }
         let (m, r) = stack.finalize(exec.clone());
         adopt(&mut merged, m, spec);
         if r.is_some() {
@@ -294,8 +327,14 @@ fn adopt(dst: &mut AppMetrics, src: AppMetrics, spec: &ShardSpec) {
 mod tests {
     use super::*;
     use crate::analysis::{profile, profile_select};
+    use crate::fault::FaultPlan;
     use crate::ir::ProgramBuilder;
     use crate::traffic::{HierarchyPolicy, MrcMode};
+
+    /// Unsupervised defaults — the clean-run arm of every merge test.
+    fn clean() -> SuperviseOpts {
+        SuperviseOpts::default()
+    }
 
     #[test]
     fn shard_groups_cover_every_family_and_traffic_half_exactly_once() {
@@ -418,8 +457,9 @@ mod tests {
         {
             let opts = TrafficOpts::default();
             let (m, regions) =
-                profile_sharded_run(&p, MetricSet::all(), workers, opts, false).unwrap();
+                profile_sharded_run(&p, MetricSet::all(), workers, opts, clean(), false).unwrap();
             assert!(regions.is_none());
+            assert!(m.failed.is_empty());
             assert_eq!(
                 m.pca8_features().map(f64::to_bits),
                 reference.pca8_features().map(f64::to_bits),
@@ -437,10 +477,10 @@ mod tests {
         // worker scheduling varies run to run; the merged result must not
         let p = tiny_program();
         let opts = TrafficOpts::default();
-        let (a, _) =
-            profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), opts, false).unwrap();
-        let (b, _) =
-            profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), opts, false).unwrap();
+        let (a, _) = profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), opts, clean(), false)
+            .unwrap();
+        let (b, _) = profile_sharded_run(&p, MetricSet::all(), Workers::Fixed(4), opts, clean(), false)
+            .unwrap();
         assert_eq!(a.pca8_features().map(f64::to_bits), b.pca8_features().map(f64::to_bits));
         assert_eq!(a.mix.per_op, b.mix.per_op);
         assert_eq!(a.mem_entropy.count_of_counts, b.mem_entropy.count_of_counts);
@@ -453,7 +493,8 @@ mod tests {
         let sel = MetricSet::from_names("mix,traffic").unwrap();
         let inline = profile_select(&p, sel).unwrap();
         let (m, _) =
-            profile_sharded_run(&p, sel, Workers::Auto, TrafficOpts::default(), false).unwrap();
+            profile_sharded_run(&p, sel, Workers::Auto, TrafficOpts::default(), clean(), false)
+                .unwrap();
         assert_eq!(m.mix.per_op, inline.mix.per_op);
         assert_eq!(m.traffic, inline.traffic);
         assert_eq!(m.reuse.accesses, 0);
@@ -470,7 +511,8 @@ mod tests {
         let plan = ShardPlan::new(sel, Workers::Auto);
         assert_eq!(plan.workers(), 2, "traffic must split across two workers");
         let (m, _) =
-            profile_sharded_run(&p, sel, Workers::Auto, TrafficOpts::default(), false).unwrap();
+            profile_sharded_run(&p, sel, Workers::Auto, TrafficOpts::default(), clean(), false)
+                .unwrap();
         assert_eq!(m.traffic, inline.traffic);
     }
 
@@ -486,7 +528,7 @@ mod tests {
             crate::analysis::profile_opts(&p, MetricSet::all(), PipelineMode::Inline, opts)
                 .unwrap();
         let (m, _) =
-            profile_sharded_run(&p, MetricSet::all(), Workers::Auto, opts, false).unwrap();
+            profile_sharded_run(&p, MetricSet::all(), Workers::Auto, opts, clean(), false).unwrap();
         assert_eq!(m.traffic.hierarchy_policy, HierarchyPolicy::Exclusive);
         assert_eq!(m.traffic, inline.traffic);
     }
@@ -502,7 +544,7 @@ mod tests {
             crate::analysis::profile_opts(&p, MetricSet::all(), PipelineMode::Inline, opts)
                 .unwrap();
         let (m, _) =
-            profile_sharded_run(&p, MetricSet::all(), Workers::Auto, opts, false).unwrap();
+            profile_sharded_run(&p, MetricSet::all(), Workers::Auto, opts, clean(), false).unwrap();
         assert_eq!(m.traffic.mrc_mode, MrcMode::Sampled { rate: 0.5 });
         assert_eq!(m.traffic, inline.traffic);
     }
@@ -512,8 +554,59 @@ mod tests {
         let p = tiny_program();
         let opts = TrafficOpts::default();
         let (_, regions) =
-            profile_sharded_run(&p, MetricSet::all(), Workers::Auto, opts, true).unwrap();
+            profile_sharded_run(&p, MetricSet::all(), Workers::Auto, opts, clean(), true).unwrap();
         let regions = regions.expect("task trace requested");
         assert!(!regions.is_empty());
+    }
+
+    #[test]
+    fn dead_worker_degrades_its_families_and_survivors_stay_bit_identical() {
+        // kill the mem shard (worker 1 of the 5-group auto plan) on its
+        // first chunk: its families come back failed, every surviving
+        // family merges bit-identically to a clean inline run
+        let p = tiny_program();
+        let reference = profile(&p).unwrap();
+        let sup = SuperviseOpts::default()
+            .with_fault(FaultPlan::from_spec("panic@worker:1").unwrap());
+        let (m, _) = profile_sharded_run(
+            &p,
+            MetricSet::all(),
+            Workers::Auto,
+            TrafficOpts::default(),
+            sup,
+            false,
+        )
+        .unwrap();
+        assert_eq!(m.failed, vec!["mem_entropy", "reuse", "traffic"]);
+        // survivors: bit-identical to the clean run
+        assert_eq!(m.mix.per_op, reference.mix.per_op);
+        assert_eq!(m.ilp.inf.to_bits(), reference.ilp.inf.to_bits());
+        assert_eq!(m.dlp.dlp.to_bits(), reference.dlp.dlp.to_bits());
+        assert_eq!(m.bblp.values, reference.bblp.values);
+        assert_eq!(m.exec.dyn_instrs, reference.exec.dyn_instrs);
+        // the dead shard's families kept shard 0's shape-stable empties
+        assert_eq!(m.mem_entropy.accesses, 0);
+        assert_eq!(m.reuse.accesses, 0);
+    }
+
+    #[test]
+    fn dead_task_carrier_shard_forfeits_the_region_trace() {
+        // the task trace rides the last shard (worker 4 of the auto
+        // plan); killing it must degrade to regions=None, not a
+        // truncated trace
+        let p = tiny_program();
+        let sup = SuperviseOpts::default()
+            .with_fault(FaultPlan::from_spec("panic@worker:4").unwrap());
+        let (m, regions) = profile_sharded_run(
+            &p,
+            MetricSet::all(),
+            Workers::Auto,
+            TrafficOpts::default(),
+            sup,
+            true,
+        )
+        .unwrap();
+        assert_eq!(m.failed, vec!["bblp", "pbblp"]);
+        assert!(regions.is_none(), "dead collector must not yield a partial trace");
     }
 }

@@ -32,6 +32,10 @@ const VALUE_FLAGS: &[&str] = &[
     "workers",
     "hierarchy",
     "mrc",
+    "mrc-smax",
+    "inject-fault",
+    "app-timeout",
+    "on-error",
 ];
 
 pub fn parse(argv: &[String]) -> Result<Args> {
@@ -119,14 +123,17 @@ USAGE:
   pisa-nmc pipeline [--scale F] [--seed N] [--threads N] [--metrics LIST]
                     [--pipeline MODE] [--workers N|auto]
                     [--hierarchy inclusive|exclusive]
-                    [--mrc exact|sampled:<rate>] [--no-pjrt]
+                    [--mrc exact|sampled:<rate>] [--mrc-smax N]
+                    [--inject-fault SPEC] [--app-timeout SECS]
+                    [--on-error fail-fast|continue] [--no-pjrt]
                     [--out FILE]
         full suite: profile 12 kernels, run host+NMC sims, PJRT analytics,
         print every table and figure (writes JSON report with --out)
   pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--metrics LIST]
                    [--pipeline MODE] [--workers N|auto]
                    [--hierarchy inclusive|exclusive]
-                   [--mrc exact|sampled:<rate>] [--json]
+                   [--mrc exact|sampled:<rate>] [--mrc-smax N]
+                   [--inject-fault SPEC] [--app-timeout SECS] [--json]
         profile a single kernel and print its metrics
   pisa-nmc figure {3a|3b|3c|4|5|6|mrc} [pipeline flags]
         regenerate one paper figure (mrc: the miss-ratio-curve extension)
@@ -164,6 +171,13 @@ rate*footprint_lines is large (≥ ~1000 sampled lines keeps per-point
 error around a percent); at tiny footprints or rates the curve gets
 noisy and `exact` costs little anyway.
 
+--mrc-smax N switches the SHARDS sampler to fixed-size mode: at most N
+sampled lines stay resident (the internal adaptive-rate default is 8192),
+starting from the mode's rate and adapting it down whenever the cap
+fills — constant memory at any footprint, at the cost of a run-dependent
+effective rate. Only valid with `--mrc sampled`; the exact kernel keeps
+every line by construction.
+
 --pipeline MODE selects event delivery: `inline` (default — analyzers fold
 on the interpreter thread), `offload` (analyzers fold on a dedicated
 analysis thread, overlapped with interpretation; each app then uses two
@@ -178,6 +192,19 @@ the traffic hierarchy-replay half, dataflow (ilp/dlp), block structure
 (bblp/pbblp) — so e.g. `--metrics mix` collapses to one worker while
 `--metrics traffic` plans two; a fixed N is clamped to the non-empty
 groups.
+
+Failure handling: every app runs supervised. --app-timeout SECS arms a
+per-app watchdog checked at chunk boundaries; a sharded worker that
+panics is isolated (its shard's metric families report \"status\":
+\"failed\" while the survivors stay bit-identical) and the run degrades
+instead of crashing. --on-error picks the suite policy: `fail-fast`
+(default) aborts on the first failed app; `continue` finishes the suite,
+records failed apps under a `\"failures\"` JSON section, and exits
+nonzero only for hard losses (interpreter error, panic, timeout) —
+degraded apps with salvaged survivors exit zero. --inject-fault
+KIND@SITE[:CHUNK] arms one deterministic fault for testing: KIND is
+`panic`, `stall:<ms>` or `interp-error`; SITE is `interp`, `broadcaster`
+or `worker:<shard>`; CHUNK is the chunk ordinal it fires on (default 0).
 
 Artifacts are searched in ./artifacts (or $PISA_NMC_ARTIFACTS); build them
 with `make artifacts`. --no-pjrt forces the native analytics fallback.
@@ -235,6 +262,34 @@ mod tests {
         let a = args(&["pipeline", "--metrics", "traffic", "--mrc", "sampled:0.05"]);
         assert_eq!(a.get("mrc"), Some("sampled:0.05"));
         assert!(parse(&["pipeline".into(), "--mrc".into()]).is_err());
+    }
+
+    #[test]
+    fn mrc_smax_flag_takes_a_value() {
+        let a = args(&["pipeline", "--mrc", "sampled", "--mrc-smax", "4096"]);
+        assert_eq!(a.get("mrc-smax"), Some("4096"));
+        assert!(parse(&["pipeline".into(), "--mrc-smax".into()]).is_err());
+    }
+
+    #[test]
+    fn inject_fault_flag_takes_a_value() {
+        let a = args(&["pipeline", "--inject-fault", "panic@worker:1"]);
+        assert_eq!(a.get("inject-fault"), Some("panic@worker:1"));
+        assert!(parse(&["pipeline".into(), "--inject-fault".into()]).is_err());
+    }
+
+    #[test]
+    fn app_timeout_flag_takes_a_value() {
+        let a = args(&["pipeline", "--app-timeout", "30"]);
+        assert_eq!(a.get_u64("app-timeout", 0).unwrap(), 30);
+        assert!(parse(&["pipeline".into(), "--app-timeout".into()]).is_err());
+    }
+
+    #[test]
+    fn on_error_flag_takes_a_value() {
+        let a = args(&["pipeline", "--on-error", "continue"]);
+        assert_eq!(a.get("on-error"), Some("continue"));
+        assert!(parse(&["pipeline".into(), "--on-error".into()]).is_err());
     }
 
     #[test]

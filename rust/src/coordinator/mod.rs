@@ -14,8 +14,9 @@ pub mod pipeline;
 pub use figures::{analyze_suite, Engine, SuiteAnalytics};
 pub use pca::{pca, Pca};
 pub use pipeline::{
-    profile_app, profile_app_mode, profile_app_opts, profile_app_select, run_suite, run_suite_opts,
-    run_suite_select, AppResult,
+    profile_app, profile_app_mode, profile_app_opts, profile_app_select, profile_app_supervised,
+    run_suite, run_suite_opts, run_suite_select, run_suite_supervised, AppFailure, AppOutcome,
+    AppResult, OnError, ProfileError, SuitePolicy,
 };
 
 use anyhow::Result;
@@ -28,7 +29,12 @@ use crate::util::Json;
 
 /// Everything one `pisa-nmc pipeline` run produces.
 pub struct PipelineReport {
+    /// Successfully profiled apps, registry order (failed apps are
+    /// absent here and present in [`PipelineReport::failures`]).
     pub apps: Vec<AppResult>,
+    /// Apps that failed or degraded under `--on-error continue` (always
+    /// empty under the default fail-fast policy, which aborts instead).
+    pub failures: Vec<AppFailure>,
     pub analytics: SuiteAnalytics,
     pub scale: f64,
     pub seed: u64,
@@ -39,6 +45,22 @@ pub struct PipelineReport {
     /// Traffic-family options (hierarchy replay policy + MRC mode) the
     /// run profiled under.
     pub traffic: TrafficOpts,
+}
+
+/// Every knob one pipeline run takes — bundled so the supervised entry
+/// point stays one call with one config, the same shape the CLI parses
+/// into.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineCfg {
+    pub scale: f64,
+    pub seed: u64,
+    pub threads: usize,
+    pub metrics: MetricSet,
+    pub mode: PipelineMode,
+    pub traffic: TrafficOpts,
+    /// Supervision plan + failure policy (`--inject-fault`,
+    /// `--app-timeout`, `--on-error`).
+    pub policy: SuitePolicy,
 }
 
 /// Run the full pipeline with every metric enabled, inline delivery.
@@ -78,12 +100,75 @@ pub fn run_pipeline_opts(
     mode: PipelineMode,
     traffic: TrafficOpts,
 ) -> Result<PipelineReport> {
+    let cfg = PipelineCfg {
+        scale,
+        seed,
+        threads,
+        metrics,
+        mode,
+        traffic,
+        policy: SuitePolicy::default(),
+    };
+    run_pipeline_cfg(&cfg, rt)
+}
+
+/// The fully-parameterized pipeline: profile the suite under `cfg`'s
+/// supervision plan and failure policy, then run the analytics over the
+/// apps that survived. Under fail-fast (the default policy) this is
+/// exactly [`run_pipeline_opts`]; under `--on-error continue`, failed
+/// apps land in [`PipelineReport::failures`] and the analytics cover the
+/// successes only.
+pub fn run_pipeline_cfg(cfg: &PipelineCfg, rt: Option<&Runtime>) -> Result<PipelineReport> {
     // same effective set the workers profile with, so the report's
     // "metrics" list describes the families that actually ran
-    let metrics = metrics.with_simulation_requirements();
-    let apps = run_suite_opts(scale, seed, threads, metrics, mode, traffic)?;
-    let analytics = analyze_suite(&apps, rt)?;
-    Ok(PipelineReport { apps, analytics, scale, seed, metrics, mode, traffic })
+    let metrics = cfg.metrics.with_simulation_requirements();
+    let outcomes = run_suite_supervised(
+        cfg.scale,
+        cfg.seed,
+        cfg.threads,
+        metrics,
+        cfg.mode,
+        cfg.traffic,
+        cfg.policy,
+    )?;
+    let mut apps = Vec::new();
+    let mut failures = Vec::new();
+    for out in outcomes {
+        match out {
+            AppOutcome::Ok(r) => apps.push(*r),
+            AppOutcome::Failed(f) => failures.push(*f),
+        }
+    }
+    let analytics = if apps.is_empty() {
+        // every app failed: synthesize an empty analytics block so the
+        // report still renders (fig6 indexes loadings/eigenvalues by
+        // feature and component, so those keep their static shapes)
+        SuiteAnalytics {
+            engine: Engine::Native,
+            entropies: Vec::new(),
+            entropy_diff: Vec::new(),
+            spatial: Vec::new(),
+            pca: Pca {
+                scores: Vec::new(),
+                loadings: vec![vec![0.0; 2]; 4],
+                eigenvalues: vec![0.0; 2],
+                explained_variance_ratio: vec![0.0; 2],
+            },
+            max_crosscheck_err: 0.0,
+        }
+    } else {
+        analyze_suite(&apps, rt)?
+    };
+    Ok(PipelineReport {
+        apps,
+        failures,
+        analytics,
+        scale: cfg.scale,
+        seed: cfg.seed,
+        metrics,
+        mode: cfg.mode,
+        traffic: cfg.traffic,
+    })
 }
 
 impl PipelineReport {
@@ -98,6 +183,14 @@ impl PipelineReport {
         } else {
             0.0
         }
+    }
+
+    /// True when any app was lost outright (interpreter error, panic,
+    /// watchdog). Degraded apps — salvaged survivors with their failed
+    /// families marked — do not count: `--on-error continue` exits zero
+    /// for those, nonzero for hard losses.
+    pub fn has_hard_failures(&self) -> bool {
+        self.failures.iter().any(|f| f.error.is_hard())
     }
 
     pub fn to_json(&self) -> Json {
@@ -136,6 +229,24 @@ impl PipelineReport {
             apps.set(&a.name, o);
         }
         j.set("apps", apps);
+        if !self.failures.is_empty() {
+            // clean runs keep their JSON shape unchanged; any failure
+            // adds this section (the continue-mode smoke greps for it)
+            let mut fj = Json::obj();
+            for f in &self.failures {
+                let mut o = Json::obj();
+                o.set("error", f.error.kind());
+                o.set("message", f.error.to_string());
+                o.set("wall_s", f.wall_s);
+                if let Some(m) = &f.partial {
+                    // salvaged metrics, failed families stamped
+                    // "status": "failed" by AppMetrics::to_json
+                    o.set("metrics", m.to_json());
+                }
+                fj.set(&f.name, o);
+            }
+            j.set("failures", fj);
+        }
         for (name, (_, fig)) in [
             ("fig3a", figures::fig3a(&self.apps, &self.analytics, self.metrics)),
             ("fig3b", figures::fig3b(&self.apps, &self.analytics, self.metrics)),

@@ -17,12 +17,15 @@
 //! enabled, now that the traffic family's MRC and hierarchy halves land
 //! on separate workers) — size `--threads` accordingly on small machines.
 
+use std::fmt;
 use std::sync::mpsc;
 use std::sync::Mutex;
+use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::analysis::{profile_with_tasks, AppMetrics, MetricSet};
+use crate::analysis::{profile_with_tasks, profile_with_tasks_supervised, AppMetrics, MetricSet};
+use crate::fault::{PanicError, SuperviseOpts, TimeoutError};
 use crate::interp::PipelineMode;
 use crate::sim::{self, EdpComparison, Region};
 use crate::traffic::TrafficOpts;
@@ -44,6 +47,138 @@ impl AppResult {
     pub fn events_per_sec(&self) -> f64 {
         self.metrics.exec.events_per_sec()
     }
+}
+
+/// Why one app failed under the supervised pipeline — the structured
+/// taxonomy the report's `"failures"` section and the CLI exit code key
+/// off, replacing stringly-typed anyhow at the coordinator boundary.
+#[derive(Debug, Clone)]
+pub enum ProfileError {
+    /// The interpreter itself errored (including injected `interp-error`
+    /// faults): there is no event stream, nothing is salvageable.
+    InterpError { message: String },
+    /// A pipeline thread panicked out from under the run before any
+    /// degradation could salvage it.
+    WorkerPanic { site: &'static str, message: String },
+    /// The `--app-timeout` watchdog expired at a chunk boundary.
+    Timeout { secs: u64 },
+    /// Analyzer shards died but the broadcaster kept the survivors fed:
+    /// the listed families are lost, the rest stay bit-identical to a
+    /// clean run. The salvaged metrics ride in [`AppFailure::partial`].
+    Degraded { failed_families: Vec<String> },
+}
+
+impl ProfileError {
+    /// Stable kind tag for JSON/report consumers.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ProfileError::InterpError { .. } => "interp-error",
+            ProfileError::WorkerPanic { .. } => "worker-panic",
+            ProfileError::Timeout { .. } => "timeout",
+            ProfileError::Degraded { .. } => "degraded",
+        }
+    }
+
+    /// Degraded apps salvaged their surviving families; every other kind
+    /// lost the app entirely. `--on-error continue` exits nonzero only
+    /// for the latter.
+    pub fn is_hard(&self) -> bool {
+        !matches!(self, ProfileError::Degraded { .. })
+    }
+
+    /// Classify a profiling error by the typed faults the supervised
+    /// pipeline embeds (see [`crate::fault`]).
+    fn classify(e: &anyhow::Error) -> ProfileError {
+        if let Some(t) = e.downcast_ref::<TimeoutError>() {
+            ProfileError::Timeout { secs: t.secs }
+        } else if let Some(p) = e.downcast_ref::<PanicError>() {
+            ProfileError::WorkerPanic { site: p.site, message: p.message.clone() }
+        } else {
+            ProfileError::InterpError { message: format!("{e:#}") }
+        }
+    }
+}
+
+impl fmt::Display for ProfileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProfileError::InterpError { message } => write!(f, "interpreter error: {message}"),
+            ProfileError::WorkerPanic { site, message } => {
+                write!(f, "{site} thread panicked: {message}")
+            }
+            ProfileError::Timeout { secs } => write!(f, "exceeded --app-timeout {secs}s"),
+            ProfileError::Degraded { failed_families } => {
+                write!(f, "degraded; failed families: {}", failed_families.join(", "))
+            }
+        }
+    }
+}
+
+/// One failed app under the supervised suite.
+#[derive(Debug, Clone)]
+pub struct AppFailure {
+    pub name: String,
+    pub error: ProfileError,
+    /// Wall time burned before the failure surfaced.
+    pub wall_s: f64,
+    /// Salvaged metrics when the run degraded instead of dying outright:
+    /// surviving families intact, dead ones listed in
+    /// [`AppMetrics::failed`] and stamped `"status": "failed"` in JSON.
+    pub partial: Option<AppMetrics>,
+}
+
+/// Per-app result of a supervised suite run.
+#[derive(Debug, Clone)]
+pub enum AppOutcome {
+    Ok(Box<AppResult>),
+    Failed(Box<AppFailure>),
+}
+
+impl AppOutcome {
+    pub fn name(&self) -> &str {
+        match self {
+            AppOutcome::Ok(r) => &r.name,
+            AppOutcome::Failed(f) => &f.name,
+        }
+    }
+}
+
+/// Suite failure policy — the CLI `--on-error` flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OnError {
+    /// Abort the whole suite on the first failed app (the legacy
+    /// behavior and the default).
+    #[default]
+    FailFast,
+    /// Profile every app regardless; failures land in the report's
+    /// `"failures"` section.
+    Continue,
+}
+
+impl OnError {
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "fail-fast" => Ok(OnError::FailFast),
+            "continue" => Ok(OnError::Continue),
+            _ => bail!("unknown --on-error policy '{s}' (expected fail-fast or continue)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OnError::FailFast => "fail-fast",
+            OnError::Continue => "continue",
+        }
+    }
+}
+
+/// Suite-level supervision bundle: the per-app fault/watchdog plan plus
+/// the failure policy. Defaults reproduce the unsupervised pipeline
+/// exactly (no fault armed, no watchdog, fail-fast).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SuitePolicy {
+    pub sup: SuperviseOpts,
+    pub on_error: OnError,
 }
 
 /// Profile one kernel with every metric enabled (inline delivery).
@@ -99,7 +234,12 @@ pub fn profile_app_opts(
     let (metrics, regions): (AppMetrics, Vec<Region>) =
         profile_with_tasks(&prog, metrics, mode, opts)
             .with_context(|| format!("running {}", k.info().name))?;
+    Ok(simulate(metrics, n, &regions))
+}
 
+/// Run both machine models over the region trace and assemble the final
+/// per-app result (shared by the strict and supervised entry points).
+fn simulate(metrics: AppMetrics, n: usize, regions: &[Region]) -> AppResult {
     // both machine models consume the same region trace
     let ilp256 = metrics
         .ilp
@@ -110,11 +250,63 @@ pub fn profile_app_opts(
         .unwrap_or(metrics.ilp.inf);
     let cmp = EdpComparison {
         app: metrics.name.clone(),
-        host: sim::simulate_host(&regions, ilp256),
-        nmc: sim::simulate_nmc(&regions),
+        host: sim::simulate_host(regions, ilp256),
+        nmc: sim::simulate_nmc(regions),
     };
+    AppResult { name: metrics.name.clone(), n, metrics, cmp }
+}
 
-    Ok(AppResult { name: metrics.name.clone(), n, metrics, cmp })
+/// [`profile_app_opts`] under a supervision plan (`--inject-fault`,
+/// `--app-timeout`): never returns `Err` — every failure mode is folded
+/// into a structured [`AppOutcome::Failed`]. Analyzer-shard deaths come
+/// back as [`ProfileError::Degraded`] with the salvaged metrics attached;
+/// interpreter faults, watchdog expiry and producer panics lose the app.
+pub fn profile_app_supervised(
+    k: &dyn Kernel,
+    n: usize,
+    seed: u64,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    opts: TrafficOpts,
+    sup: SuperviseOpts,
+) -> AppOutcome {
+    let start = Instant::now();
+    match try_profile_app_supervised(k, n, seed, metrics, mode, opts, sup) {
+        Ok(outcome) => outcome,
+        Err(e) => AppOutcome::Failed(Box::new(AppFailure {
+            name: k.info().name.to_string(),
+            error: ProfileError::classify(&e),
+            wall_s: start.elapsed().as_secs_f64(),
+            partial: None,
+        })),
+    }
+}
+
+fn try_profile_app_supervised(
+    k: &dyn Kernel,
+    n: usize,
+    seed: u64,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    opts: TrafficOpts,
+    sup: SuperviseOpts,
+) -> Result<AppOutcome> {
+    let metrics = metrics.with_simulation_requirements();
+    let prog = k.build(n, seed);
+    let (m, regions) = profile_with_tasks_supervised(&prog, metrics, mode, opts, sup)
+        .with_context(|| format!("running {}", k.info().name))?;
+    let Some(regions) = regions.filter(|_| m.failed.is_empty()) else {
+        // degraded: the surviving families are intact, but the machine
+        // models need the task trace and the full sim-required set
+        let wall_s = m.exec.wall_s;
+        return Ok(AppOutcome::Failed(Box::new(AppFailure {
+            name: m.name.clone(),
+            error: ProfileError::Degraded { failed_families: m.failed.clone() },
+            wall_s,
+            partial: Some(m),
+        })));
+    };
+    Ok(AppOutcome::Ok(Box::new(simulate(m, n, &regions))))
 }
 
 /// Run the whole suite with every metric enabled, inline delivery.
@@ -147,6 +339,33 @@ pub fn run_suite_opts(
     mode: PipelineMode,
     opts: TrafficOpts,
 ) -> Result<Vec<AppResult>> {
+    let outcomes =
+        run_suite_supervised(scale, seed, threads, metrics, mode, opts, SuitePolicy::default())?;
+    outcomes
+        .into_iter()
+        .map(|o| match o {
+            AppOutcome::Ok(r) => Ok(*r),
+            // unreachable under the default fail-fast policy, which
+            // surfaces the first failure as the suite error above
+            AppOutcome::Failed(f) => bail!("{} failed: {}", f.name, f.error),
+        })
+        .collect()
+}
+
+/// [`run_suite_opts`] under a supervision plan and failure policy: each
+/// app comes back as an [`AppOutcome`] instead of aborting the suite.
+/// Under [`OnError::FailFast`] the first failed app still aborts (the
+/// legacy behavior); under [`OnError::Continue`] the remaining apps keep
+/// profiling and failures ride along structurally.
+pub fn run_suite_supervised(
+    scale: f64,
+    seed: u64,
+    threads: usize,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    opts: TrafficOpts,
+    policy: SuitePolicy,
+) -> Result<Vec<AppOutcome>> {
     let kernels = registry();
     let n_jobs = kernels.len();
     let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
@@ -154,7 +373,7 @@ pub fn run_suite_opts(
 
     // job queue: indices into the registry, pulled by workers
     let jobs: Mutex<Vec<usize>> = Mutex::new((0..n_jobs).rev().collect());
-    let (tx, rx) = mpsc::channel::<(usize, Result<AppResult>)>();
+    let (tx, rx) = mpsc::channel::<(usize, AppOutcome)>();
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
@@ -167,17 +386,22 @@ pub fn run_suite_opts(
                 // fresh registry per thread: Kernel is stateless
                 let k = &registry()[idx];
                 let n = scaled_n(k.as_ref(), scale);
-                let res = profile_app_opts(k.as_ref(), n, seed, metrics, mode, opts);
-                if tx.send((idx, res)).is_err() {
+                let out = profile_app_supervised(k.as_ref(), n, seed, metrics, mode, opts, policy.sup);
+                if tx.send((idx, out)).is_err() {
                     break;
                 }
             });
         }
         drop(tx);
 
-        let mut slots: Vec<Option<AppResult>> = (0..n_jobs).map(|_| None).collect();
-        for (idx, res) in rx {
-            slots[idx] = Some(res?);
+        let mut slots: Vec<Option<AppOutcome>> = (0..n_jobs).map(|_| None).collect();
+        for (idx, out) in rx {
+            if policy.on_error == OnError::FailFast {
+                if let AppOutcome::Failed(f) = &out {
+                    bail!("{} failed: {}", f.name, f.error);
+                }
+            }
+            slots[idx] = Some(out);
         }
         slots
             .into_iter()
@@ -334,6 +558,86 @@ mod tests {
         assert!(r.metrics.ilp.inf >= 1.0, "ILP must be force-enabled for sims");
         assert!(r.cmp.host.time_s > 0.0 && r.cmp.nmc.time_s > 0.0);
         assert_eq!(r.metrics.mem_entropy.accesses, 0);
+    }
+
+    #[test]
+    fn on_error_policy_parses() {
+        assert_eq!(OnError::from_name("fail-fast").unwrap(), OnError::FailFast);
+        assert_eq!(OnError::from_name("continue").unwrap(), OnError::Continue);
+        assert!(OnError::from_name("ignore").is_err());
+        assert_eq!(OnError::default().name(), "fail-fast");
+    }
+
+    #[test]
+    fn supervised_suite_continues_past_injected_failures() {
+        use crate::fault::FaultPlan;
+        let policy = SuitePolicy {
+            sup: SuperviseOpts::default()
+                .with_fault(FaultPlan::from_spec("interp-error@interp").unwrap()),
+            on_error: OnError::Continue,
+        };
+        let outs = run_suite_supervised(
+            0.05,
+            7,
+            2,
+            MetricSet::all(),
+            PipelineMode::Inline,
+            TrafficOpts::default(),
+            policy,
+        )
+        .unwrap();
+        assert_eq!(outs.len(), 12, "continue must still yield every slot");
+        for o in &outs {
+            match o {
+                AppOutcome::Failed(f) => {
+                    assert_eq!(f.error.kind(), "interp-error");
+                    assert!(f.error.is_hard());
+                    assert!(f.partial.is_none());
+                }
+                AppOutcome::Ok(r) => panic!("{} should have failed", r.name),
+            }
+        }
+        // the same plan under fail-fast aborts the whole suite
+        let ff = SuitePolicy { on_error: OnError::FailFast, ..policy };
+        let res = run_suite_supervised(
+            0.05,
+            7,
+            2,
+            MetricSet::all(),
+            PipelineMode::Inline,
+            TrafficOpts::default(),
+            ff,
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn degraded_sharded_app_salvages_surviving_families() {
+        use crate::fault::FaultPlan;
+        use crate::interp::Workers;
+        let k = by_name("gesummv").unwrap();
+        let clean = profile_app(k.as_ref(), 20, 1).unwrap();
+        let sup =
+            SuperviseOpts::default().with_fault(FaultPlan::from_spec("panic@worker:1").unwrap());
+        let out = profile_app_supervised(
+            k.as_ref(),
+            20,
+            1,
+            MetricSet::all(),
+            PipelineMode::Sharded { workers: Workers::Auto },
+            TrafficOpts::default(),
+            sup,
+        );
+        assert_eq!(out.name(), "gesummv");
+        let AppOutcome::Failed(f) = out else { panic!("expected a degraded failure") };
+        assert_eq!(f.error.kind(), "degraded");
+        assert!(!f.error.is_hard(), "degraded apps must not hard-fail the process");
+        let m = f.partial.as_ref().expect("degraded failure keeps salvaged metrics");
+        assert_eq!(m.failed, vec!["mem_entropy", "reuse", "traffic"]);
+        // the surviving families are bit-identical to the clean run
+        assert_eq!(m.mix.per_op, clean.metrics.mix.per_op);
+        assert_eq!(m.bblp.values, clean.metrics.bblp.values);
+        assert!(m.to_json().to_string_compact().contains("failed_families"));
     }
 
     #[test]

@@ -1,0 +1,513 @@
+//! Supervision primitives: deterministic fault injection, watchdog
+//! deadlines, and the structured failure types the supervised pipeline
+//! runners report instead of unwinding the process.
+//!
+//! ## Fault plan
+//!
+//! A [`FaultPlan`] is parsed from the CLI `--inject-fault
+//! <kind>@<site>[:<chunk>]` flag and threaded end-to-end exactly like
+//! `--hierarchy`/`--mrc` (CLI → coordinator → analysis → interp runners).
+//! Kinds: `panic`, `stall:<ms>`, `interp-error`; sites: `interp`,
+//! `broadcaster`, `worker:<shard>`. The plan is `Copy` and
+//! [`FaultPlan::none`] by default, so the un-injected hot path pays one
+//! `Option` check per chunk boundary and nothing else.
+//!
+//! Every (kind × site) combination fires in **every** delivery mode: a
+//! delivery that lacks the named thread collapses the site onto the
+//! thread that does that site's work. Inline delivery runs everything on
+//! the interpreter thread, so all sites fire there; offload runs the
+//! broadcaster+worker roles on its single analysis thread; sharded maps
+//! `worker:<shard>` onto worker `shard % n_workers`. The mapping is
+//! expressed by arming the plan with the [`Role`]s a thread performs
+//! ([`FaultPlan::arm`]).
+//!
+//! ## Watchdog
+//!
+//! A [`Deadline`] is armed per app from `--app-timeout <secs>` and
+//! checked at chunk boundaries; pool waits switch to `recv_timeout` so a
+//! wedged analysis side cannot block the producer past the deadline.
+//! Expiry surfaces as a typed [`TimeoutError`] through the normal error
+//! path — teardown is the same channel-drop sequence as a clean run, so
+//! it is deadlock-free and pool-accounting-clean by construction.
+
+use std::any::Any;
+use std::fmt;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+/// What an injected fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` on the faulted thread (exercises panic isolation).
+    Panic,
+    /// Sleep this many milliseconds (exercises the watchdog).
+    Stall(u64),
+    /// Surface a typed [`InjectedFault`] error from the interpreter loop
+    /// (exercises the error path; only valid at site `interp`).
+    InterpError,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Stall(_) => "stall",
+            FaultKind::InterpError => "interp-error",
+        }
+    }
+}
+
+/// Which pipeline thread the fault targets. Deliveries without that
+/// thread collapse the site onto the thread doing its work (see the
+/// module doc).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// The producer (interpreter) thread.
+    Interp,
+    /// The lane-building broadcast thread (sharded), or the single
+    /// analysis thread (offload), or the interpreter thread (inline).
+    Broadcaster,
+    /// Analyzer worker `shard` (sharded: `shard % n_workers`; offload:
+    /// the analysis thread; inline: the interpreter thread).
+    Worker(usize),
+}
+
+impl fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultSite::Interp => write!(f, "interp"),
+            FaultSite::Broadcaster => write!(f, "broadcaster"),
+            FaultSite::Worker(k) => write!(f, "worker:{k}"),
+        }
+    }
+}
+
+/// A fully-specified injected fault: fire `kind` at `site` when that
+/// site processes its `chunk`-th chunk (0-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    pub site: FaultSite,
+    pub chunk: u64,
+}
+
+/// The role(s) a pipeline thread performs — what a site is matched
+/// against when the plan is armed on that thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Producing chunks (the interpreter loop).
+    Interp,
+    /// Building lanes / distributing chunks.
+    Broadcaster,
+    /// Folding analyzer state for every shard (offload/inline collapse).
+    AnyWorker,
+    /// Folding analyzer state for one shard of `count`.
+    Worker { index: usize, count: usize },
+}
+
+impl FaultSpec {
+    fn matches(&self, role: Role) -> bool {
+        match (self.site, role) {
+            (FaultSite::Interp, Role::Interp) => true,
+            (FaultSite::Broadcaster, Role::Broadcaster) => true,
+            (FaultSite::Worker(_), Role::AnyWorker) => true,
+            (FaultSite::Worker(k), Role::Worker { index, count }) => k % count.max(1) == index,
+            _ => false,
+        }
+    }
+}
+
+/// A deterministic fault-injection plan: at most one [`FaultSpec`],
+/// `Copy`, zero-cost when absent. Parsed by [`FaultPlan::from_spec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultPlan(Option<FaultSpec>);
+
+impl FaultPlan {
+    /// The empty plan: nothing ever fires.
+    pub const fn none() -> Self {
+        FaultPlan(None)
+    }
+
+    pub fn is_none(self) -> bool {
+        self.0.is_none()
+    }
+
+    pub fn spec(self) -> Option<FaultSpec> {
+        self.0
+    }
+
+    /// Parse the CLI `--inject-fault` value: `<kind>@<site>[:<chunk>]`
+    /// with kinds `panic` | `stall:<ms>` | `interp-error` and sites
+    /// `interp` | `broadcaster` | `worker:<shard>`. The optional trailing
+    /// `:<chunk>` selects which chunk ordinal fires (default 0).
+    pub fn from_spec(s: &str) -> Result<Self> {
+        let s = s.trim();
+        let (kind_s, site_s) = match s.split_once('@') {
+            Some(pair) => pair,
+            None => bail!(
+                "--inject-fault expects <kind>@<site>[:<chunk>] \
+                 (e.g. panic@worker:1), got '{s}'"
+            ),
+        };
+        let kind = match kind_s.split_once(':') {
+            None if kind_s == "panic" => FaultKind::Panic,
+            None if kind_s == "interp-error" => FaultKind::InterpError,
+            Some(("stall", ms)) => match ms.parse::<u64>() {
+                Ok(ms) => FaultKind::Stall(ms),
+                Err(_) => bail!("--inject-fault stall wants milliseconds, got 'stall:{ms}'"),
+            },
+            _ => bail!(
+                "unknown fault kind '{kind_s}' (panic | stall:<ms> | interp-error)"
+            ),
+        };
+        let mut parts = site_s.split(':');
+        let site = match parts.next() {
+            Some("interp") => FaultSite::Interp,
+            Some("broadcaster") => FaultSite::Broadcaster,
+            Some("worker") => match parts.next().map(str::parse::<usize>) {
+                Some(Ok(k)) => FaultSite::Worker(k),
+                _ => bail!("--inject-fault worker site wants worker:<shard>, got '{site_s}'"),
+            },
+            _ => bail!(
+                "unknown fault site in '{site_s}' (interp | broadcaster | worker:<shard>)"
+            ),
+        };
+        let chunk = match parts.next() {
+            None => 0,
+            Some(c) => match c.parse::<u64>() {
+                Ok(c) => c,
+                Err(_) => bail!("--inject-fault chunk index must be an integer, got '{c}'"),
+            },
+        };
+        if parts.next().is_some() {
+            bail!("--inject-fault has trailing fields: '{s}'");
+        }
+        if kind == FaultKind::InterpError && site != FaultSite::Interp {
+            bail!("interp-error faults only make sense at site 'interp', got '{site_s}'");
+        }
+        Ok(FaultPlan(Some(FaultSpec { kind, site, chunk })))
+    }
+
+    /// Arm the plan on a thread performing `roles`: the returned ticker
+    /// fires iff the spec's site matches any of them. Threads tick it
+    /// once per chunk they process.
+    pub fn arm(self, roles: &[Role]) -> ArmedFault {
+        let fault = self
+            .0
+            .filter(|spec| roles.iter().any(|&r| spec.matches(r)))
+            .map(|spec| (spec.kind, spec.chunk));
+        ArmedFault { fault, seen: 0 }
+    }
+}
+
+/// A per-thread fault ticker produced by [`FaultPlan::arm`]. Call
+/// [`ArmedFault::tick`] once per chunk; the fault fires on its chunk
+/// ordinal, once, then disarms.
+#[derive(Debug)]
+pub struct ArmedFault {
+    fault: Option<(FaultKind, u64)>,
+    seen: u64,
+}
+
+impl ArmedFault {
+    /// Advance the chunk counter, firing the fault if this is its chunk.
+    /// `Panic` panics here, `Stall` sleeps here; `InterpError` is
+    /// returned for the interpreter loop to surface as a run error.
+    #[inline]
+    pub fn tick(&mut self) -> Result<(), InjectedFault> {
+        if self.fault.is_none() {
+            return Ok(()); // un-injected hot path: one branch per chunk
+        }
+        self.tick_slow()
+    }
+
+    #[cold]
+    fn tick_slow(&mut self) -> Result<(), InjectedFault> {
+        let (kind, at) = self.fault.expect("checked by tick");
+        let now = self.seen;
+        self.seen += 1;
+        if now != at {
+            return Ok(());
+        }
+        self.fault = None; // fire once
+        match kind {
+            FaultKind::Panic => panic!("injected fault: panic at chunk {now}"),
+            FaultKind::Stall(ms) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                Ok(())
+            }
+            FaultKind::InterpError => Err(InjectedFault { chunk: now }),
+        }
+    }
+}
+
+/// A per-app watchdog deadline (from `--app-timeout <secs>`), checked at
+/// chunk boundaries. [`Deadline::none`] never expires.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    at: Option<Instant>,
+    secs: u64,
+}
+
+impl Deadline {
+    /// The unarmed deadline: never expires, checks are one branch.
+    pub fn none() -> Self {
+        Deadline { at: None, secs: 0 }
+    }
+
+    /// Arm a deadline `secs` from now; `None` leaves it unarmed.
+    pub fn after_secs(secs: Option<u64>) -> Self {
+        match secs {
+            Some(s) => Deadline { at: Some(Instant::now() + Duration::from_secs(s)), secs: s },
+            None => Deadline::none(),
+        }
+    }
+
+    pub fn is_armed(&self) -> bool {
+        self.at.is_some()
+    }
+
+    /// `Err(TimeoutError)` once the deadline has passed.
+    #[inline]
+    pub fn check(&self) -> Result<(), TimeoutError> {
+        match self.at {
+            None => Ok(()),
+            Some(at) if Instant::now() < at => Ok(()),
+            Some(_) => Err(TimeoutError { secs: self.secs }),
+        }
+    }
+
+    /// Time left before expiry — the bound for pool `recv_timeout` waits
+    /// so a wedged analysis side cannot block the producer forever.
+    /// `None` when unarmed; zero once expired.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.at.map(|at| at.saturating_duration_since(Instant::now()))
+    }
+}
+
+/// Per-app supervision options threaded from the CLI alongside
+/// `TrafficOpts`: the fault plan and the watchdog timeout. `Copy` and
+/// default-empty, so every existing entry point stays zero-cost.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SuperviseOpts {
+    /// Deterministic fault injection (`--inject-fault`).
+    pub fault: FaultPlan,
+    /// Per-app watchdog in seconds (`--app-timeout`).
+    pub timeout_s: Option<u64>,
+}
+
+impl SuperviseOpts {
+    pub fn with_fault(mut self, fault: FaultPlan) -> Self {
+        self.fault = fault;
+        self
+    }
+
+    pub fn with_timeout_s(mut self, secs: Option<u64>) -> Self {
+        self.timeout_s = secs;
+        self
+    }
+
+    /// Arm the watchdog for one app run, starting now.
+    pub fn deadline(&self) -> Deadline {
+        Deadline::after_secs(self.timeout_s)
+    }
+}
+
+/// Typed error for a watchdog expiry, recovered by the coordinator via
+/// `anyhow::Error::downcast_ref` to classify the failure as `Timeout`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimeoutError {
+    pub secs: u64,
+}
+
+impl fmt::Display for TimeoutError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "app exceeded --app-timeout {}s watchdog", self.secs)
+    }
+}
+
+impl std::error::Error for TimeoutError {}
+
+/// Typed error for an injected `interp-error` fault, recovered by the
+/// coordinator via `downcast_ref` to classify the failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFault {
+    pub chunk: u64,
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected fault: interpreter error at chunk {}", self.chunk)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// Typed error for a panic caught at a supervised boundary (the
+/// interpreter thread under inline delivery, or a producer-side injected
+/// panic), recovered by the coordinator via `downcast_ref` to classify
+/// the failure as `WorkerPanic`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PanicError {
+    /// Which supervised thread panicked (`interp`, `analysis`, ...).
+    pub site: &'static str,
+    pub message: String,
+}
+
+impl PanicError {
+    pub fn new(site: &'static str, message: String) -> Self {
+        PanicError { site, message }
+    }
+}
+
+impl fmt::Display for PanicError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} thread panicked: {}", self.site, self.message)
+    }
+}
+
+impl std::error::Error for PanicError {}
+
+/// One analyzer shard (or the broadcaster feeding it) died mid-run. The
+/// interp layer fills `shard` and `message`; the analysis layer maps the
+/// shard index back to its metric-family names.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardFailure {
+    /// Worker index in the run's shard plan (broadcaster failures are
+    /// reported once per shard they starve).
+    pub shard: usize,
+    /// Metric-family names the shard owned (filled by the analysis
+    /// layer; empty at the interp layer, which doesn't know the plan).
+    pub families: Vec<String>,
+    /// The panic payload or error text.
+    pub message: String,
+}
+
+impl fmt::Display for ShardFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "shard {} failed: {}", self.shard, self.message)?;
+        if !self.families.is_empty() {
+            write!(f, " (families: {})", self.families.join(", "))?;
+        }
+        Ok(())
+    }
+}
+
+/// Render a `catch_unwind` payload as the panic message (panics carry
+/// `&str` or `String`; anything else gets a placeholder).
+pub fn panic_message(payload: Box<dyn Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind_and_site() {
+        let p = FaultPlan::from_spec("panic@interp").unwrap().spec().unwrap();
+        assert_eq!(p, FaultSpec { kind: FaultKind::Panic, site: FaultSite::Interp, chunk: 0 });
+        let p = FaultPlan::from_spec("stall:250@broadcaster:3").unwrap().spec().unwrap();
+        assert_eq!(
+            p,
+            FaultSpec { kind: FaultKind::Stall(250), site: FaultSite::Broadcaster, chunk: 3 }
+        );
+        let p = FaultPlan::from_spec("panic@worker:1:2").unwrap().spec().unwrap();
+        assert_eq!(p, FaultSpec { kind: FaultKind::Panic, site: FaultSite::Worker(1), chunk: 2 });
+        let p = FaultPlan::from_spec("interp-error@interp:5").unwrap().spec().unwrap();
+        assert_eq!(
+            p,
+            FaultSpec { kind: FaultKind::InterpError, site: FaultSite::Interp, chunk: 5 }
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::from_spec("panic").is_err()); // no site
+        assert!(FaultPlan::from_spec("explode@interp").is_err()); // bad kind
+        assert!(FaultPlan::from_spec("stall@interp").is_err()); // stall wants ms
+        assert!(FaultPlan::from_spec("stall:soon@interp").is_err());
+        assert!(FaultPlan::from_spec("panic@disk").is_err()); // bad site
+        assert!(FaultPlan::from_spec("panic@worker").is_err()); // worker wants index
+        assert!(FaultPlan::from_spec("panic@worker:x").is_err());
+        assert!(FaultPlan::from_spec("panic@interp:1:2").is_err()); // trailing
+        // interp-error is an interpreter-loop error; other sites can't
+        // surface it through the run result
+        assert!(FaultPlan::from_spec("interp-error@worker:0").is_err());
+        assert!(FaultPlan::from_spec("interp-error@broadcaster").is_err());
+    }
+
+    #[test]
+    fn arming_matches_roles_with_worker_collapse() {
+        let plan = FaultPlan::from_spec("panic@worker:4:1").unwrap();
+        // sharded with 3 workers: worker 4 collapses onto index 1
+        assert!(plan.arm(&[Role::Worker { index: 1, count: 3 }]).fault.is_some());
+        assert!(plan.arm(&[Role::Worker { index: 0, count: 3 }]).fault.is_none());
+        // offload/inline collapse: any worker site fires on the thread
+        // doing all the worker roles
+        assert!(plan.arm(&[Role::AnyWorker]).fault.is_some());
+        assert!(plan.arm(&[Role::Interp]).fault.is_none());
+        let plan = FaultPlan::from_spec("panic@broadcaster").unwrap();
+        assert!(plan.arm(&[Role::Broadcaster, Role::AnyWorker]).fault.is_some());
+        assert!(plan.arm(&[Role::Interp]).fault.is_none());
+        assert!(FaultPlan::none().arm(&[Role::Interp, Role::Broadcaster]).fault.is_none());
+    }
+
+    #[test]
+    fn armed_fault_fires_on_its_chunk_once() {
+        let plan = FaultPlan::from_spec("interp-error@interp:2").unwrap();
+        let mut armed = plan.arm(&[Role::Interp]);
+        assert!(armed.tick().is_ok()); // chunk 0
+        assert!(armed.tick().is_ok()); // chunk 1
+        let err = armed.tick().unwrap_err(); // chunk 2: fires
+        assert_eq!(err.chunk, 2);
+        assert!(armed.tick().is_ok()); // disarmed after firing
+        let mut none = FaultPlan::none().arm(&[Role::Interp]);
+        for _ in 0..16 {
+            assert!(none.tick().is_ok());
+        }
+    }
+
+    #[test]
+    fn deadline_checks_and_remaining() {
+        let none = Deadline::none();
+        assert!(!none.is_armed());
+        assert!(none.check().is_ok());
+        assert!(none.remaining().is_none());
+        let armed = Deadline::after_secs(Some(3600));
+        assert!(armed.is_armed());
+        assert!(armed.check().is_ok());
+        assert!(armed.remaining().unwrap() > Duration::from_secs(3000));
+        let expired = Deadline { at: Some(Instant::now() - Duration::from_millis(1)), secs: 1 };
+        assert_eq!(expired.check().unwrap_err(), TimeoutError { secs: 1 });
+        assert_eq!(expired.remaining().unwrap(), Duration::ZERO);
+    }
+
+    #[test]
+    fn panic_message_extracts_common_payloads() {
+        let m = std::panic::catch_unwind(|| panic!("plain str")).unwrap_err();
+        assert_eq!(panic_message(m), "plain str");
+        let m = std::panic::catch_unwind(|| panic!("formatted {}", 7)).unwrap_err();
+        assert_eq!(panic_message(m), "formatted 7");
+    }
+
+    #[test]
+    fn supervise_opts_builders() {
+        let o = SuperviseOpts::default();
+        assert!(o.fault.is_none());
+        assert!(o.timeout_s.is_none());
+        assert!(!o.deadline().is_armed());
+        let plan = FaultPlan::from_spec("panic@interp").unwrap();
+        let o = SuperviseOpts::default().with_fault(plan).with_timeout_s(Some(9));
+        assert_eq!(o.fault, plan);
+        assert_eq!(o.timeout_s, Some(9));
+        assert!(o.deadline().is_armed());
+    }
+}

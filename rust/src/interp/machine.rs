@@ -17,6 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use super::events::{EventChunk, Instrument, InstrEvent, MemAccess, TraceEvent};
 use super::memory::Memory;
+use crate::fault::{panic_message, ArmedFault, Deadline, FaultPlan, PanicError, Role, SuperviseOpts};
 use crate::ir::{Imm, Instr, Op, Program, Terminator, Value};
 
 /// Execution statistics returned with every run.
@@ -67,6 +68,12 @@ pub(crate) trait EventSink {
     fn block_boundary(&mut self, upcoming: usize);
     /// End of run: deliver anything still buffered.
     fn finish(&mut self);
+    /// A supervision error raised at the last flush (injected fault or
+    /// watchdog expiry); the interpreter loop bails with it at the next
+    /// block boundary. Unsupervised sinks never raise one.
+    fn take_error(&mut self) -> Option<anyhow::Error> {
+        None
+    }
 }
 
 /// Per-event delivery: one `on_event` virtual call per trace event.
@@ -87,10 +94,39 @@ impl EventSink for PerEvent<'_> {
 }
 
 /// Chunked delivery: events accumulate in a reusable fixed-capacity buffer
-/// and reach the instrumentation as `on_chunk` slices.
+/// and reach the instrumentation as `on_chunk` slices. Carries the inline
+/// supervision state — with inline delivery every pipeline thread
+/// collapses onto the interpreter, so all fault sites and the watchdog
+/// fire here, at the same chunk boundaries the off-thread paths use.
 struct Chunked<'s> {
     sink: &'s mut dyn Instrument,
     chunk: EventChunk,
+    armed: ArmedFault,
+    deadline: Deadline,
+    error: Option<anyhow::Error>,
+}
+
+impl<'s> Chunked<'s> {
+    fn new(sink: &'s mut dyn Instrument, chunk: EventChunk) -> Self {
+        Chunked {
+            sink,
+            chunk,
+            armed: FaultPlan::none().arm(&[]),
+            deadline: Deadline::none(),
+            error: None,
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.error.is_none() {
+            if let Err(e) = self.armed.tick() {
+                self.error = Some(e.into());
+            } else if let Err(e) = self.deadline.check() {
+                self.error = Some(e.into());
+            }
+        }
+        self.chunk.flush_into(self.sink);
+    }
 }
 
 impl EventSink for Chunked<'_> {
@@ -99,7 +135,7 @@ impl EventSink for Chunked<'_> {
         // the boundary check keeps headroom for a whole block; a single
         // block larger than the buffer still flushes safely mid-block
         if self.chunk.is_full() {
-            self.chunk.flush_into(self.sink);
+            self.flush();
         }
         self.chunk.push(ev);
     }
@@ -107,12 +143,16 @@ impl EventSink for Chunked<'_> {
     #[inline]
     fn block_boundary(&mut self, upcoming: usize) {
         if self.chunk.needs_flush_for_block(upcoming) {
-            self.chunk.flush_into(self.sink);
+            self.flush();
         }
     }
 
     fn finish(&mut self) {
-        self.chunk.flush_into(self.sink);
+        self.flush();
+    }
+
+    fn take_error(&mut self) -> Option<anyhow::Error> {
+        self.error.take()
     }
 }
 
@@ -154,8 +194,32 @@ impl<'p> Machine<'p> {
     /// static block shape.
     pub fn run(&mut self, sink: &mut dyn Instrument) -> Result<Outcome> {
         let chunk = EventChunk::with_capacity(self.chunk_capacity());
-        let mut delivery = Chunked { sink, chunk };
+        let mut delivery = Chunked::new(sink, chunk);
         self.run_with(&mut delivery)
+    }
+
+    /// [`Machine::run`] under supervision: the fault plan is armed for
+    /// every role (inline delivery does all the pipeline's work on this
+    /// thread) and the watchdog deadline is checked at chunk boundaries.
+    /// An injected panic is caught here and surfaced as a typed
+    /// [`PanicError`] instead of unwinding the caller. With empty
+    /// `SuperviseOpts` this is bit-identical to [`Machine::run`].
+    pub fn run_supervised(
+        &mut self,
+        sink: &mut dyn Instrument,
+        sup: SuperviseOpts,
+    ) -> Result<Outcome> {
+        let chunk = EventChunk::with_capacity(self.chunk_capacity());
+        let mut delivery = Chunked::new(sink, chunk);
+        delivery.armed = sup.fault.arm(&[Role::Interp, Role::Broadcaster, Role::AnyWorker]);
+        delivery.deadline = sup.deadline();
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.run_with(&mut delivery)
+        }));
+        match run {
+            Ok(res) => res,
+            Err(payload) => Err(PanicError::new("interp", panic_message(payload)).into()),
+        }
     }
 
     /// Execute to completion with one `on_event` call per trace event — the
@@ -277,6 +341,11 @@ impl<'p> Machine<'p> {
                 .get(bb as usize)
                 .with_context(|| format!("bad block id {bb}"))?;
             delivery.block_boundary(block.instrs.len());
+            if let Some(e) = delivery.take_error() {
+                // a supervision fault (injected error, watchdog expiry)
+                // raised at the flush — bail on the block boundary
+                return Err(e);
+            }
             stats.dyn_blocks += 1;
             delivery.event(TraceEvent::BlockEnter { block: bb });
 
@@ -310,6 +379,9 @@ impl<'p> Machine<'p> {
                 }
                 Terminator::Ret(r) => {
                     delivery.finish();
+                    if let Some(e) = delivery.take_error() {
+                        return Err(e);
+                    }
                     let ret = r.map(|r| self.reg(r));
                     stats.wall_s = t0.elapsed().as_secs_f64();
                     return Ok(Outcome { ret, stats });

@@ -12,4 +12,7 @@ pub use events::{
 };
 pub use machine::{run_program, ExecStats, Machine, Outcome};
 pub use memory::Memory;
-pub use offload::{run_offload, run_program_mode, sharded::run_sharded, PipelineMode, Workers};
+pub use offload::{
+    run_offload, run_offload_supervised, run_program_mode, sharded::run_sharded,
+    sharded::run_sharded_supervised, PipelineMode, PipelineRun, Workers,
+};

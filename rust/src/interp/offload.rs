@@ -61,10 +61,51 @@
 //! property test gates all four. `ExecStats::wall_s` is rewritten to span
 //! the whole run *including* the analysis drain, so `events_per_sec`
 //! stays comparable across [`PipelineMode`]s.
+//!
+//! ## Supervision and failure domains
+//!
+//! Each pipeline thread is its own failure domain. The supervised entry
+//! points ([`run_offload_supervised`], [`sharded::run_sharded_supervised`])
+//! run every analysis-side thread under `catch_unwind` and convert a dead
+//! thread into a structured [`ShardFailure`](crate::fault::ShardFailure)
+//! in the returned [`PipelineRun`] instead of unwinding the process:
+//!
+//! * **Worker dies** (sharded): its channel ends drop during the unwind;
+//!   the broadcaster sees the send fail, prunes that worker from its live
+//!   list, and keeps feeding the survivors, whose metrics stay
+//!   bit-identical to a clean run restricted to their shards.
+//! * **Broadcaster / offload analysis thread dies**: its receiver drops,
+//!   so the producer's next ship detaches (events are discarded, the
+//!   interpreter still completes) and every starved shard is reported
+//!   failed.
+//! * **Producer (interpreter) faults** — injected error, watchdog expiry,
+//!   or injected panic — surface as a typed `Err` from the run; dropping
+//!   the courier closes the chunk channel, so the analysis side drains
+//!   what's in flight and exits on its own.
+//!
+//! **Countdown-return with dead workers:** a worker that unwinds releases
+//! its `Arc` references (held chunk and queued channel buffers) during
+//! teardown, so a surviving worker's last returned reference still
+//! unwraps and recycles the buffer. A chunk whose *every* recipient died
+//! is deallocated rather than returned — the pool shrinks by at most that
+//! worker's queue depth + 1, never wedges — and [`SHARDED_POOL_CHUNKS`]
+//! (sized queue-depths + 3) keeps buffers circulating past any single
+//! failure. Every `EventChunk` is therefore returned or dropped, never
+//! leaked into a wedged `sync_channel`.
+//!
+//! The watchdog ([`SuperviseOpts::timeout_s`](crate::fault::SuperviseOpts))
+//! is checked at chunk boundaries on the producer, and pool refills use
+//! `recv_timeout` while it is armed, so a stalled analysis side cannot
+//! block the producer past the deadline; the deterministic fault plan
+//! (`--inject-fault`, [`crate::fault::FaultPlan`]) ticks once per chunk at
+//! each site to prove all of the above under test (`rust/tests/prop_faults.rs`).
+//! With default [`SuperviseOpts`](crate::fault::SuperviseOpts) the
+//! supervised paths are bit-identical to the unsupervised wrappers.
 
 pub mod sharded;
 
 use std::mem;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::time::Instant;
 
@@ -72,6 +113,9 @@ use anyhow::{bail, Result};
 
 use super::events::{EventChunk, Instrument, TraceEvent};
 use super::machine::{EventSink, Machine, Outcome};
+use crate::fault::{
+    panic_message, ArmedFault, Deadline, FaultPlan, PanicError, Role, ShardFailure, SuperviseOpts,
+};
 use crate::ir::Program;
 
 /// Bound of the full-chunk channel: how many filled chunks may queue
@@ -173,11 +217,22 @@ trait BufferSource {
 
 /// Offload topology's source: recycled buffers come back whole over the
 /// analysis thread's return channel.
-struct FreeList(Receiver<EventChunk>);
+struct FreeList {
+    rx: Receiver<EventChunk>,
+    /// Armed watchdog deadline: bounds the wait so a stalled analysis
+    /// thread cannot block the producer past `--app-timeout`.
+    deadline: Deadline,
+}
 
 impl BufferSource for FreeList {
     fn next_buffer(&mut self) -> Option<EventChunk> {
-        self.0.recv().ok()
+        match self.deadline.remaining() {
+            None => self.rx.recv().ok(),
+            // timeout and disconnect both detach the courier; the courier
+            // then reports the expiry (deadline check) or the join reports
+            // the dead analysis thread
+            Some(left) => self.rx.recv_timeout(left).ok(),
+        }
     }
 }
 
@@ -193,18 +248,52 @@ struct CourierSink<S: BufferSource> {
     full: SyncSender<EventChunk>,
     source: S,
     chunk: EventChunk,
-    /// Set when the analysis side is gone (panic teardown): buffered
-    /// events are dropped and the runner surfaces the join error.
+    /// Set when the analysis side is gone (panic teardown) or the
+    /// watchdog expired: buffered events are dropped and the runner
+    /// surfaces the join failures or the supervision error.
     detached: bool,
+    /// Producer-site fault ticker (`--inject-fault …@interp`).
+    armed: ArmedFault,
+    /// Per-app watchdog, checked once per shipped chunk.
+    deadline: Deadline,
+    /// Supervision error pending pickup by the interpreter loop
+    /// (`EventSink::take_error`).
+    error: Option<anyhow::Error>,
 }
 
 impl<S: BufferSource> CourierSink<S> {
     fn new(full: SyncSender<EventChunk>, source: S, capacity: usize) -> Self {
-        CourierSink { full, source, chunk: EventChunk::with_capacity(capacity), detached: false }
+        CourierSink {
+            full,
+            source,
+            chunk: EventChunk::with_capacity(capacity),
+            detached: false,
+            armed: FaultPlan::none().arm(&[]),
+            deadline: Deadline::none(),
+            error: None,
+        }
+    }
+
+    fn supervise(&mut self, armed: ArmedFault, deadline: Deadline) {
+        self.armed = armed;
+        self.deadline = deadline;
     }
 
     fn ship(&mut self) {
         if self.chunk.is_empty() {
+            return;
+        }
+        if self.error.is_none() {
+            if let Err(e) = self.armed.tick() {
+                self.error = Some(e.into());
+            } else if let Err(e) = self.deadline.check() {
+                self.error = Some(e.into());
+            }
+        }
+        if self.error.is_some() {
+            // the run is about to bail at the next block boundary — stop
+            // feeding the analysis side so teardown starts immediately
+            self.chunk.clear();
             return;
         }
         if !self.detached {
@@ -243,50 +332,106 @@ impl<S: BufferSource> EventSink for CourierSink<S> {
     fn finish(&mut self) {
         self.ship();
     }
+
+    fn take_error(&mut self) -> Option<anyhow::Error> {
+        self.error.take()
+    }
+}
+
+/// Result of a supervised pipeline run: the interpreter's outcome plus
+/// the analysis-side failures that were isolated instead of unwinding
+/// the process. An empty `failures` is a fully clean run.
+#[derive(Debug)]
+pub struct PipelineRun {
+    pub outcome: Outcome,
+    pub failures: Vec<ShardFailure>,
 }
 
 /// Execute `machine` to completion with the analyzers folding on a
 /// dedicated thread. `sink` is moved to that thread for the duration of
 /// the run (hence `Send`) and handed back — through the borrow — when this
-/// returns; metrics are bit-identical to [`Machine::run`].
+/// returns; metrics are bit-identical to [`Machine::run`]. Unsupervised
+/// wrapper: no faults, no watchdog, and an analysis-side failure becomes
+/// an `Err` ([`run_offload_supervised`] reports it structurally instead).
 pub fn run_offload(
     machine: &mut Machine<'_>,
     sink: &mut (dyn Instrument + Send),
 ) -> Result<Outcome> {
+    let run = run_offload_supervised(machine, sink, SuperviseOpts::default())?;
+    if let Some(f) = run.failures.into_iter().next() {
+        bail!("offload analysis thread failed: {}", f.message);
+    }
+    Ok(run.outcome)
+}
+
+/// [`run_offload`] under supervision: the analysis thread runs under
+/// `catch_unwind` (its death degrades the run to a [`ShardFailure`]
+/// instead of unwinding the process), the producer arms the `interp`
+/// fault site and the watchdog, and offload's single analysis thread
+/// collapses the `broadcaster` and `worker:*` fault sites onto itself.
+pub fn run_offload_supervised(
+    machine: &mut Machine<'_>,
+    sink: &mut (dyn Instrument + Send),
+    sup: SuperviseOpts,
+) -> Result<PipelineRun> {
     let capacity = machine.chunk_capacity();
+    let deadline = sup.deadline();
+    let fault = sup.fault;
     let t0 = Instant::now();
-    let mut outcome = std::thread::scope(|s| -> Result<Outcome> {
-        let (full_tx, full_rx) = mpsc::sync_channel::<EventChunk>(OFFLOAD_QUEUE_CHUNKS);
-        let (free_tx, free_rx) = mpsc::channel::<EventChunk>();
-        for _ in 0..OFFLOAD_POOL_CHUNKS - 1 {
-            free_tx.send(EventChunk::with_capacity(capacity)).expect("free channel open");
-        }
-        let worker = s.spawn(move || {
-            // the analysis thread owns the sink until the chunk channel
-            // closes; lanes are built here (per chunk, inside flush_into)
-            while let Ok(mut chunk) = full_rx.recv() {
-                chunk.flush_into(&mut *sink);
-                // interpreter may already be gone on error teardown
-                let _ = free_tx.send(chunk);
+    let (mut outcome, failures) =
+        std::thread::scope(|s| -> Result<(Outcome, Vec<ShardFailure>)> {
+            let (full_tx, full_rx) = mpsc::sync_channel::<EventChunk>(OFFLOAD_QUEUE_CHUNKS);
+            let (free_tx, free_rx) = mpsc::channel::<EventChunk>();
+            for _ in 0..OFFLOAD_POOL_CHUNKS - 1 {
+                free_tx.send(EventChunk::with_capacity(capacity)).expect("free channel open");
             }
-        });
-        let mut delivery = CourierSink::new(full_tx, FreeList(free_rx), capacity);
-        let run = machine.run_with(&mut delivery);
-        // closing the chunk channel lets the worker drain what's in flight
-        // and exit; join before returning so all events are folded
-        drop(delivery);
-        if let Err(payload) = worker.join() {
-            // an analyzer panic must surface with its original message,
-            // exactly as it would on the inline path
-            std::panic::resume_unwind(payload);
-        }
-        run
-    })?;
+            let worker = s.spawn(move || {
+                // the analysis thread owns the sink until the chunk channel
+                // closes; lanes are built here (per chunk, inside
+                // flush_into). A panic is caught and the unwind drops the
+                // channel ends, so the producer detaches cleanly.
+                catch_unwind(AssertUnwindSafe(move || {
+                    let mut armed = fault.arm(&[Role::Broadcaster, Role::AnyWorker]);
+                    while let Ok(mut chunk) = full_rx.recv() {
+                        // only panic/stall can target this site, so the
+                        // tick never yields an interpreter error here
+                        let _ = armed.tick();
+                        chunk.flush_into(&mut *sink);
+                        // interpreter may already be gone on error teardown
+                        let _ = free_tx.send(chunk);
+                    }
+                }))
+                .map_err(panic_message)
+            });
+            let mut delivery =
+                CourierSink::new(full_tx, FreeList { rx: free_rx, deadline }, capacity);
+            delivery.supervise(fault.arm(&[Role::Interp]), deadline);
+            let run = catch_unwind(AssertUnwindSafe(|| machine.run_with(&mut delivery)));
+            // closing the chunk channel lets the worker drain what's in
+            // flight and exit; join before returning so all events are
+            // folded (or the failure is recorded)
+            drop(delivery);
+            let mut failures = Vec::new();
+            match worker.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(message)) => {
+                    failures.push(ShardFailure { shard: 0, families: Vec::new(), message })
+                }
+                // not reachable: the thread body is fully caught
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+            match run {
+                Ok(res) => Ok((res?, failures)),
+                // an injected producer panic: report it typed, after the
+                // analysis side has been joined (teardown stays clean)
+                Err(payload) => Err(PanicError::new("interp", panic_message(payload)).into()),
+            }
+        })?;
     // the interpreter's own timer stopped at Ret, before the analysis
     // thread finished draining; report the overlap-inclusive wall time so
     // events_per_sec stays honest across pipeline modes
     outcome.stats.wall_s = t0.elapsed().as_secs_f64();
-    Ok(outcome)
+    Ok(PipelineRun { outcome, failures })
 }
 
 /// One-shot convenience mirroring [`super::machine::run_program`], with the
@@ -390,6 +535,46 @@ mod tests {
         assert_eq!(o1.stats.dyn_instrs, o3.stats.dyn_instrs);
         assert_eq!(a.instrs, b.instrs);
         assert_eq!(a.instrs, c.instrs);
+    }
+
+    #[test]
+    fn analyzer_panic_degrades_instead_of_unwinding() {
+        struct Bomb(u64);
+        impl Instrument for Bomb {
+            fn on_event(&mut self, _ev: &TraceEvent) {
+                self.0 += 1;
+                if self.0 == 100 {
+                    panic!("analyzer bomb");
+                }
+            }
+        }
+        let p = loop_program(5000);
+        let mut bomb = Bomb(0);
+        let run = run_offload_supervised(
+            &mut Machine::new(&p).unwrap(),
+            &mut bomb,
+            SuperviseOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(run.failures.len(), 1);
+        assert_eq!(run.failures[0].shard, 0);
+        assert!(run.failures[0].message.contains("analyzer bomb"));
+        // the producer still ran the program to completion (degraded run)
+        assert!(run.outcome.stats.dyn_instrs > 0);
+        // the unsupervised wrapper surfaces the same death as an error,
+        // not a process unwind
+        let mut bomb = Bomb(0);
+        assert!(run_offload(&mut Machine::new(&p).unwrap(), &mut bomb).is_err());
+    }
+
+    #[test]
+    fn injected_interp_error_surfaces_typed() {
+        let p = loop_program(5000);
+        let mut c = Counter::default();
+        let sup = SuperviseOpts::default()
+            .with_fault(FaultPlan::from_spec("interp-error@interp").unwrap());
+        let err = run_offload_supervised(&mut Machine::new(&p).unwrap(), &mut c, sup).unwrap_err();
+        assert!(err.downcast_ref::<crate::fault::InjectedFault>().is_some());
     }
 
     #[test]

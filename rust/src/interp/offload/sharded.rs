@@ -32,7 +32,8 @@
 //! shard folds the same sequence the inline path would hand it —
 //! bit-identical metrics (gated by `rust/tests/prop_chunked.rs`).
 
-use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -40,7 +41,8 @@ use anyhow::{bail, Result};
 
 use super::super::events::{EventChunk, Instrument, LaneMask};
 use super::super::machine::{Machine, Outcome};
-use super::{BufferSource, CourierSink, OFFLOAD_QUEUE_CHUNKS};
+use super::{BufferSource, CourierSink, PipelineRun, OFFLOAD_QUEUE_CHUNKS};
+use crate::fault::{panic_message, Deadline, PanicError, Role, ShardFailure, SuperviseOpts};
 
 /// Bound of each worker's input channel: how many chunks may queue ahead
 /// of one shard before the broadcaster blocks on it.
@@ -59,6 +61,9 @@ struct CountdownPool {
     returned: Receiver<Arc<EventChunk>>,
     /// Buffers not yet inducted into circulation (pool priming).
     spares: Vec<EventChunk>,
+    /// Armed watchdog deadline: bounds the wait so stalled workers
+    /// cannot block the producer past `--app-timeout`.
+    deadline: Deadline,
 }
 
 impl BufferSource for CountdownPool {
@@ -67,19 +72,32 @@ impl BufferSource for CountdownPool {
             return Some(c);
         }
         loop {
-            match self.returned.recv() {
-                Ok(arc) => {
-                    if let Ok(mut chunk) = Arc::try_unwrap(arc) {
-                        // last reference: every worker has folded it
-                        chunk.clear();
-                        return Some(chunk);
-                    }
-                    // countdown not at zero yet — another worker still
-                    // holds this chunk; our reference is dropped, keep
-                    // draining
-                }
-                Err(_) => return None,
+            let arc = match self.deadline.remaining() {
+                None => match self.returned.recv() {
+                    Ok(arc) => arc,
+                    // a disconnect while the producer still wants buffers
+                    // is never a clean shutdown (teardown starts when the
+                    // producer drops the courier, after its last call
+                    // here) — every worker died mid-run. Detach; the
+                    // runner's joins surface each death as a
+                    // `ShardFailure` rather than swallowing it.
+                    Err(_) => return None,
+                },
+                Some(left) => match self.returned.recv_timeout(left) {
+                    Ok(arc) => arc,
+                    // watchdog expiry: detach now; the courier reports
+                    // the `TimeoutError` at its next deadline check
+                    Err(RecvTimeoutError::Timeout) => return None,
+                    Err(RecvTimeoutError::Disconnected) => return None,
+                },
+            };
+            if let Ok(mut chunk) = Arc::try_unwrap(arc) {
+                // last reference: every (surviving) worker has folded it
+                chunk.clear();
+                return Some(chunk);
             }
+            // countdown not at zero yet — another worker still holds
+            // this chunk; our reference is dropped, keep draining
         }
     }
 }
@@ -90,11 +108,32 @@ impl BufferSource for CountdownPool {
 /// duration of the run (hence `Send`) and handed back — through the
 /// borrows — when this returns. With a single shard this degenerates to
 /// the offload topology plus one hop; metrics are bit-identical to
-/// [`Machine::run`] in every configuration.
+/// [`Machine::run`] in every configuration. Unsupervised wrapper: no
+/// faults, no watchdog, and any shard failure becomes an `Err`
+/// ([`run_sharded_supervised`] reports them structurally instead).
 pub fn run_sharded(
     machine: &mut Machine<'_>,
     shards: &mut [&mut (dyn Instrument + Send)],
 ) -> Result<Outcome> {
+    let run = run_sharded_supervised(machine, shards, SuperviseOpts::default())?;
+    if let Some(f) = run.failures.into_iter().next() {
+        bail!("analysis shard failed: {f}");
+    }
+    Ok(run.outcome)
+}
+
+/// [`run_sharded`] under supervision: every worker and the broadcaster
+/// run under `catch_unwind`, a dead shard degrades to a [`ShardFailure`]
+/// while the broadcaster prunes its channel and keeps feeding survivors
+/// (whose metrics stay bit-identical to a clean run of just their
+/// shards), and the producer arms the `interp` fault site plus the
+/// watchdog. `worker:<k>` fault sites collapse onto worker
+/// `k % n_workers`.
+pub fn run_sharded_supervised(
+    machine: &mut Machine<'_>,
+    shards: &mut [&mut (dyn Instrument + Send)],
+    sup: SuperviseOpts,
+) -> Result<PipelineRun> {
     if shards.is_empty() {
         bail!("sharded pipeline needs at least one analyzer shard");
     }
@@ -102,90 +141,149 @@ pub fn run_sharded(
     // the broadcaster builds exactly the lanes some shard will read
     let union_needs = shards.iter().fold(LaneMask::NONE, |acc, s| acc | s.lane_needs());
     let n_workers = shards.len();
+    let deadline = sup.deadline();
+    let fault = sup.fault;
 
     let t0 = Instant::now();
-    let mut outcome = std::thread::scope(|s| -> Result<Outcome> {
-        let (full_tx, full_rx) = mpsc::sync_channel::<EventChunk>(OFFLOAD_QUEUE_CHUNKS);
-        let (return_tx, return_rx) = mpsc::channel::<Arc<EventChunk>>();
+    let (mut outcome, failures) =
+        std::thread::scope(|s| -> Result<(Outcome, Vec<ShardFailure>)> {
+            let (full_tx, full_rx) = mpsc::sync_channel::<EventChunk>(OFFLOAD_QUEUE_CHUNKS);
+            let (return_tx, return_rx) = mpsc::channel::<Arc<EventChunk>>();
 
-        let mut worker_txs: Vec<SyncSender<Arc<EventChunk>>> = Vec::with_capacity(n_workers);
-        let mut workers = Vec::with_capacity(n_workers);
-        for shard in shards.iter_mut() {
-            let (tx, rx) = mpsc::sync_channel::<Arc<EventChunk>>(SHARDED_QUEUE_CHUNKS);
-            worker_txs.push(tx);
-            let return_tx = return_tx.clone();
-            workers.push(s.spawn(move || {
-                // the worker owns its shard until the broadcast channel
-                // closes; lanes were pre-built, so `on_chunk_lanes` is the
-                // one delivery every shard takes (a lane-less shard's
-                // default forwards to `on_chunk`)
-                while let Ok(chunk) = rx.recv() {
-                    shard.on_chunk_lanes(chunk.events(), chunk.lanes());
-                    // countdown-return: hand our reference to the producer;
-                    // it may already be gone on error teardown
-                    let _ = return_tx.send(chunk);
-                }
-            }));
-        }
-        // the producer must see the channel close when the workers exit
-        drop(return_tx);
+            let mut worker_txs: Vec<SyncSender<Arc<EventChunk>>> = Vec::with_capacity(n_workers);
+            let mut workers = Vec::with_capacity(n_workers);
+            for (index, shard) in shards.iter_mut().enumerate() {
+                let (tx, rx) = mpsc::sync_channel::<Arc<EventChunk>>(SHARDED_QUEUE_CHUNKS);
+                worker_txs.push(tx);
+                let return_tx = return_tx.clone();
+                workers.push(s.spawn(move || {
+                    // the worker owns its shard until the broadcast channel
+                    // closes; lanes were pre-built, so `on_chunk_lanes` is
+                    // the one delivery every shard takes (a lane-less
+                    // shard's default forwards to `on_chunk`). A panic is
+                    // caught; the unwind drops `rx` and the held chunk
+                    // reference, so the broadcaster prunes this worker and
+                    // the countdown still reaches zero for survivors.
+                    catch_unwind(AssertUnwindSafe(move || {
+                        let mut armed = fault.arm(&[Role::Worker { index, count: n_workers }]);
+                        while let Ok(chunk) = rx.recv() {
+                            // only panic/stall can target a worker site
+                            let _ = armed.tick();
+                            shard.on_chunk_lanes(chunk.events(), chunk.lanes());
+                            // countdown-return: hand our reference to the
+                            // producer; it may already be gone on error
+                            // teardown
+                            let _ = return_tx.send(chunk);
+                        }
+                    }))
+                    .map_err(panic_message)
+                }));
+            }
+            // the producer must see the channel close when the workers exit
+            drop(return_tx);
 
-        let broadcaster = s.spawn(move || {
-            let (last_tx, rest_txs) = worker_txs.split_last().expect("at least one worker");
-            while let Ok(mut chunk) = full_rx.recv() {
-                // no lane-capable shard → skip the per-event lane sweep
-                // entirely, exactly as the inline/offload flush would
-                if !union_needs.is_empty() {
-                    chunk.build_lanes(union_needs);
+            let broadcaster = s.spawn(move || {
+                catch_unwind(AssertUnwindSafe(move || {
+                    let mut armed = fault.arm(&[Role::Broadcaster]);
+                    let mut live: Vec<SyncSender<Arc<EventChunk>>> = worker_txs;
+                    while let Ok(mut chunk) = full_rx.recv() {
+                        let _ = armed.tick();
+                        // no lane-capable shard → skip the per-event lane
+                        // sweep entirely, exactly as the inline/offload
+                        // flush would
+                        if !union_needs.is_empty() {
+                            chunk.build_lanes(union_needs);
+                        }
+                        // distribute to the live workers, pruning any that
+                        // died. The final live send MOVES our handle: after
+                        // distribution exactly one reference per recipient
+                        // exists, so the producer's countdown can never
+                        // race a stray broadcaster reference into
+                        // deallocating (instead of recycling) the buffer.
+                        let mut shared = Some(Arc::new(chunk));
+                        let mut i = 0;
+                        while i < live.len() {
+                            let is_last = i + 1 == live.len();
+                            let sent = if is_last {
+                                live[i].send(shared.take().expect("handle unsent")).is_ok()
+                            } else {
+                                let arc = shared.as_ref().expect("handle unsent");
+                                live[i].send(Arc::clone(arc)).is_ok()
+                            };
+                            if sent {
+                                i += 1;
+                            } else {
+                                // dead worker (panic teardown): drop its
+                                // channel and keep feeding the survivors
+                                live.remove(i);
+                            }
+                        }
+                        if live.is_empty() {
+                            // every worker is gone — stop broadcasting; the
+                            // producer detaches via the pool disconnect and
+                            // the joins report each death
+                            return;
+                        }
+                    }
+                }))
+                .map_err(panic_message)
+            });
+
+            let pool = CountdownPool {
+                returned: return_rx,
+                spares: (0..SHARDED_POOL_CHUNKS - 1)
+                    .map(|_| EventChunk::with_capacity(capacity))
+                    .collect(),
+                deadline,
+            };
+            let mut delivery = CourierSink::new(full_tx, pool, capacity);
+            delivery.supervise(fault.arm(&[Role::Interp]), deadline);
+            let run = catch_unwind(AssertUnwindSafe(|| machine.run_with(&mut delivery)));
+            // closing the chunk channel lets the broadcaster and workers
+            // drain what's in flight and exit; join before returning so
+            // every event is folded (or every failure recorded)
+            drop(delivery);
+            let mut failures: Vec<ShardFailure> = Vec::new();
+            for (shard, w) in workers.into_iter().enumerate() {
+                match w.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(message)) => {
+                        failures.push(ShardFailure { shard, families: Vec::new(), message })
+                    }
+                    // not reachable: the thread body is fully caught
+                    Err(payload) => std::panic::resume_unwind(payload),
                 }
-                let shared = Arc::new(chunk);
-                for tx in rest_txs {
-                    if tx.send(Arc::clone(&shared)).is_err() {
-                        // a worker died (panic teardown): stop broadcasting
-                        // so the producer detaches and the join surfaces it
-                        return;
+            }
+            match broadcaster.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(message)) => {
+                    // a dead broadcaster starves every shard that didn't
+                    // already fail on its own
+                    for shard in 0..n_workers {
+                        if failures.iter().all(|f| f.shard != shard) {
+                            failures.push(ShardFailure {
+                                shard,
+                                families: Vec::new(),
+                                message: format!("broadcaster died: {message}"),
+                            });
+                        }
                     }
                 }
-                // the final send MOVES our handle: after distribution
-                // exactly one reference per worker exists, so the
-                // producer's countdown can never race a stray broadcaster
-                // reference into deallocating (instead of recycling) the
-                // buffer
-                if last_tx.send(shared).is_err() {
-                    return;
-                }
+                Err(payload) => std::panic::resume_unwind(payload),
             }
-        });
-
-        let pool = CountdownPool {
-            returned: return_rx,
-            spares: (0..SHARDED_POOL_CHUNKS - 1)
-                .map(|_| EventChunk::with_capacity(capacity))
-                .collect(),
-        };
-        let mut delivery = CourierSink::new(full_tx, pool, capacity);
-        let run = machine.run_with(&mut delivery);
-        // closing the chunk channel lets the broadcaster and workers drain
-        // what's in flight and exit; join before returning so every event
-        // is folded
-        drop(delivery);
-        if let Err(payload) = broadcaster.join() {
-            std::panic::resume_unwind(payload);
-        }
-        for w in workers {
-            if let Err(payload) = w.join() {
-                // a shard panic must surface with its original message,
-                // exactly as it would on the inline path
-                std::panic::resume_unwind(payload);
+            failures.sort_by_key(|f| f.shard);
+            match run {
+                Ok(res) => Ok((res?, failures)),
+                // an injected producer panic: report it typed, after every
+                // analysis thread has been joined (teardown stays clean)
+                Err(payload) => Err(PanicError::new("interp", panic_message(payload)).into()),
             }
-        }
-        run
-    })?;
+        })?;
     // report the overlap-inclusive wall time (interpretation + broadcast +
     // the slowest worker's drain) so events_per_sec stays honest across
     // pipeline modes
     outcome.stats.wall_s = t0.elapsed().as_secs_f64();
-    Ok(outcome)
+    Ok(PipelineRun { outcome, failures })
 }
 
 #[cfg(test)]
@@ -259,6 +357,65 @@ mod tests {
         let mut c2 = Counter::default();
         let mut refs: Vec<&mut (dyn Instrument + Send)> = vec![&mut c1, &mut c2];
         assert!(run_sharded(&mut Machine::new(&p).unwrap(), &mut refs).is_err());
+    }
+
+    #[test]
+    fn dead_shard_degrades_and_survivors_stay_complete() {
+        struct Bomb(u64);
+        impl Instrument for Bomb {
+            fn on_event(&mut self, _ev: &TraceEvent) {
+                self.0 += 1;
+                if self.0 == 50 {
+                    panic!("shard bomb");
+                }
+            }
+        }
+        let p = loop_program(5000);
+        let mut inline = Counter::default();
+        Machine::new(&p).unwrap().run(&mut inline).unwrap();
+        let mut bomb = Bomb(0);
+        let mut survivor = Counter::default();
+        let run = {
+            let mut refs: Vec<&mut (dyn Instrument + Send)> = vec![&mut bomb, &mut survivor];
+            run_sharded_supervised(
+                &mut Machine::new(&p).unwrap(),
+                &mut refs,
+                SuperviseOpts::default(),
+            )
+            .unwrap()
+        };
+        assert_eq!(run.failures.len(), 1);
+        assert_eq!(run.failures[0].shard, 0);
+        assert!(run.failures[0].message.contains("shard bomb"));
+        // the surviving shard saw the complete stream, bit-identical to
+        // a clean run
+        assert_eq!(
+            (survivor.instrs, survivor.blocks, survivor.branches),
+            (inline.instrs, inline.blocks, inline.branches)
+        );
+        // the unsupervised wrapper surfaces the death as an error
+        let mut bomb = Bomb(0);
+        let mut c = Counter::default();
+        let mut refs: Vec<&mut (dyn Instrument + Send)> = vec![&mut bomb, &mut c];
+        assert!(run_sharded(&mut Machine::new(&p).unwrap(), &mut refs).is_err());
+    }
+
+    #[test]
+    fn injected_worker_fault_collapses_onto_modulo_shard() {
+        use crate::fault::FaultPlan;
+        let p = loop_program(5000);
+        let mut c0 = Counter::default();
+        let mut c1 = Counter::default();
+        // worker:3 with 2 workers → shard 1 takes the panic
+        let sup = SuperviseOpts::default()
+            .with_fault(FaultPlan::from_spec("panic@worker:3").unwrap());
+        let run = {
+            let mut refs: Vec<&mut (dyn Instrument + Send)> = vec![&mut c0, &mut c1];
+            run_sharded_supervised(&mut Machine::new(&p).unwrap(), &mut refs, sup).unwrap()
+        };
+        assert_eq!(run.failures.len(), 1);
+        assert_eq!(run.failures[0].shard, 1);
+        assert!(run.failures[0].message.contains("injected fault"));
     }
 
     #[test]

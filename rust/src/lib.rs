@@ -28,6 +28,7 @@
 pub mod analysis;
 pub mod cli;
 pub mod coordinator;
+pub mod fault;
 pub mod interp;
 pub mod ir;
 pub mod report;

@@ -7,7 +7,8 @@ use anyhow::{bail, Result};
 
 use pisa_nmc::analysis::MetricSet;
 use pisa_nmc::cli::{self, Args};
-use pisa_nmc::coordinator::{self, figures};
+use pisa_nmc::coordinator::{self, figures, AppOutcome, OnError, PipelineCfg, SuitePolicy};
+use pisa_nmc::fault::{FaultPlan, SuperviseOpts};
 use pisa_nmc::interp::{PipelineMode, Workers};
 use pisa_nmc::report::save_json;
 use pisa_nmc::runtime::Runtime;
@@ -69,9 +70,49 @@ fn mrc_mode(args: &Args) -> Result<MrcMode> {
     }
 }
 
-/// Bundle the traffic-family flags (`--hierarchy`, `--mrc`).
+/// Bundle the traffic-family flags (`--hierarchy`, `--mrc`,
+/// `--mrc-smax`).
 fn traffic_opts(args: &Args) -> Result<TrafficOpts> {
-    Ok(TrafficOpts::with_hierarchy(hierarchy_policy(args)?).with_mrc(mrc_mode(args)?))
+    let mrc = mrc_mode(args)?;
+    let smax = match args.get("mrc-smax") {
+        None => None,
+        Some(_) => {
+            let s = args.get_usize("mrc-smax", 0)?;
+            if s == 0 {
+                bail!("--mrc-smax must be at least 1");
+            }
+            if !matches!(mrc, MrcMode::Sampled { .. }) {
+                bail!("--mrc-smax applies only to --mrc sampled (got '{}')", mrc.name());
+            }
+            Some(s)
+        }
+    };
+    Ok(TrafficOpts::with_hierarchy(hierarchy_policy(args)?)
+        .with_mrc(mrc)
+        .with_mrc_smax(smax))
+}
+
+/// Parse the supervision flags (`--inject-fault`, `--app-timeout`).
+fn supervise_opts(args: &Args) -> Result<SuperviseOpts> {
+    let fault = match args.get("inject-fault") {
+        Some(spec) => FaultPlan::from_spec(spec)?,
+        None => FaultPlan::none(),
+    };
+    let timeout = match args.get("app-timeout") {
+        Some(_) => Some(args.get_u64("app-timeout", 0)?),
+        None => None,
+    };
+    Ok(SuperviseOpts::default().with_fault(fault).with_timeout_s(timeout))
+}
+
+/// Parse the `--on-error` suite policy (default: fail-fast) together
+/// with the supervision flags.
+fn suite_policy(args: &Args) -> Result<SuitePolicy> {
+    let on_error = match args.get("on-error") {
+        Some(name) => OnError::from_name(name)?,
+        None => OnError::default(),
+    };
+    Ok(SuitePolicy { sup: supervise_opts(args)?, on_error })
 }
 
 /// Parse the `--pipeline` event-delivery mode (default: inline) and, for
@@ -98,19 +139,17 @@ fn run(args: Args) -> Result<()> {
             let scale = args.get_f64("scale", 1.0)?;
             let seed = args.get_u64("seed", 42)?;
             let threads = args.get_usize("threads", 8)?;
-            let metrics = metric_set(&args)?;
-            let mode = pipeline_mode(&args)?;
-            let traffic = traffic_opts(&args)?;
-            let rt = load_runtime(&args);
-            let report = coordinator::run_pipeline_opts(
+            let cfg = PipelineCfg {
                 scale,
                 seed,
                 threads,
-                rt.as_ref(),
-                metrics,
-                mode,
-                traffic,
-            )?;
+                metrics: metric_set(&args)?,
+                mode: pipeline_mode(&args)?,
+                traffic: traffic_opts(&args)?,
+                policy: suite_policy(&args)?,
+            };
+            let rt = load_runtime(&args);
+            let report = coordinator::run_pipeline_cfg(&cfg, rt.as_ref())?;
             print!("{}", report.render_all());
             // perf trend line for CI logs: suite-level profiler throughput
             eprintln!(
@@ -124,9 +163,28 @@ fn run(args: Args) -> Result<()> {
                     report.analytics.max_crosscheck_err
                 );
             }
+            // report (and --out JSON) first, exit status last: under
+            // `continue` the salvaged results must land even when the
+            // process then signals hard losses with a nonzero exit
             if let Some(out) = args.get("out") {
                 save_json(Path::new(out), &report.to_json())?;
                 eprintln!("wrote {out}");
+            }
+            if !report.failures.is_empty() {
+                for f in &report.failures {
+                    eprintln!("[failure] {}: {} ({:.2}s)", f.name, f.error, f.wall_s);
+                }
+                if report.has_hard_failures() {
+                    bail!(
+                        "{} of {} apps failed under --on-error continue",
+                        report.failures.iter().filter(|f| f.error.is_hard()).count(),
+                        report.apps.len() + report.failures.len()
+                    );
+                }
+                eprintln!(
+                    "[degraded] {} app(s) salvaged with failed families marked",
+                    report.failures.len()
+                );
             }
             Ok(())
         }
@@ -138,7 +196,19 @@ fn run(args: Args) -> Result<()> {
             let metrics = metric_set(&args)?;
             let mode = pipeline_mode(&args)?;
             let traffic = traffic_opts(&args)?;
-            let r = coordinator::profile_app_opts(k.as_ref(), n, seed, metrics, mode, traffic)?;
+            let sup = supervise_opts(&args)?;
+            let r = match coordinator::profile_app_supervised(
+                k.as_ref(),
+                n,
+                seed,
+                metrics,
+                mode,
+                traffic,
+                sup,
+            ) {
+                AppOutcome::Ok(r) => *r,
+                AppOutcome::Failed(f) => bail!("{}: {}", f.name, f.error),
+            };
             if args.has("json") {
                 let mut j = r.metrics.to_json();
                 j.set("edp", r.cmp.to_json());

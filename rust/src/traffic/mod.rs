@@ -83,6 +83,10 @@ pub struct TrafficOpts {
     pub hierarchy: HierarchyPolicy,
     /// Stack-distance kernel the MRC runs on.
     pub mrc: MrcMode,
+    /// CLI `--mrc-smax`: cap the SHARDS sampler at this many resident
+    /// lines (fixed-size mode). `None` keeps the mode's own kernel
+    /// choice; only meaningful with a sampled [`MrcMode`].
+    pub mrc_smax: Option<usize>,
 }
 
 impl TrafficOpts {
@@ -94,6 +98,11 @@ impl TrafficOpts {
 
     pub fn with_mrc(mut self, mrc: MrcMode) -> Self {
         self.mrc = mrc;
+        self
+    }
+
+    pub fn with_mrc_smax(mut self, smax: Option<usize>) -> Self {
+        self.mrc_smax = smax;
         self
     }
 }
@@ -157,10 +166,15 @@ enum MrcEngine {
 }
 
 impl MrcEngine {
-    fn for_mode(mode: MrcMode) -> MrcEngine {
-        match mode {
-            MrcMode::Exact => MrcEngine::Exact(MrcBuilder::new()),
-            MrcMode::Sampled { rate } => MrcEngine::Sampled(SampledMrc::new(rate)),
+    /// Engine for `opts`: exact kernel, fixed-rate SHARDS, or (with
+    /// `mrc_smax` set) fixed-size SHARDS seeded at the mode's rate.
+    fn for_opts(opts: TrafficOpts) -> MrcEngine {
+        match (opts.mrc, opts.mrc_smax) {
+            (MrcMode::Exact, _) => MrcEngine::Exact(MrcBuilder::new()),
+            (MrcMode::Sampled { rate }, None) => MrcEngine::Sampled(SampledMrc::new(rate)),
+            (MrcMode::Sampled { rate }, Some(s)) => {
+                MrcEngine::Sampled(SampledMrc::with_smax(rate, s))
+            }
         }
     }
 }
@@ -219,7 +233,7 @@ impl TrafficAnalyzer {
     /// and requests no sizes lane, and vice versa.
     pub fn with_opts_parts(opts: TrafficOpts, parts: TrafficParts) -> Self {
         TrafficAnalyzer {
-            mrc: parts.has_mrc().then(|| MrcEngine::for_mode(opts.mrc)),
+            mrc: parts.has_mrc().then(|| MrcEngine::for_opts(opts)),
             mrc_mode: opts.mrc,
             hierarchy: parts
                 .has_hierarchy()
@@ -736,6 +750,35 @@ mod tests {
         assert_eq!(a.mrc_mode, MrcMode::Sampled { rate: 0.25 });
         assert!(a.mrc_sampled_accesses < a.accesses);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mrc_smax_caps_the_sampler() {
+        // 4096 distinct lines at rate 1.0: uncapped, every access is
+        // sampled; with --mrc-smax 16 the fixed-size sampler must shed
+        // lines and lower its rate, so it samples strictly fewer
+        let feed = |mut t: TrafficAnalyzer| {
+            for i in 0..4096u64 {
+                t.record(0x40_0000 + i * 64, 8, false);
+            }
+            t.finalize(4096)
+        };
+        let opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 1.0 });
+        let full = feed(TrafficAnalyzer::with_opts(opts));
+        assert_eq!(full.mrc_sampled_accesses, full.accesses);
+        let capped = feed(TrafficAnalyzer::with_opts(opts.with_mrc_smax(Some(16))));
+        assert_eq!(capped.accesses, 4096);
+        assert!(capped.mrc_sampled_accesses > 0);
+        assert!(
+            capped.mrc_sampled_accesses < full.mrc_sampled_accesses,
+            "cap must shed resident lines"
+        );
+        // smax is inert under the exact kernel
+        let exact = feed(TrafficAnalyzer::with_opts(
+            TrafficOpts::default().with_mrc_smax(Some(16)),
+        ));
+        assert_eq!(exact.mrc_mode, MrcMode::Exact);
+        assert_eq!(exact.accesses, 4096);
     }
 
     #[test]

@@ -313,8 +313,15 @@ impl SampledMrc {
     /// keep at most `s_max` lines resident — constant memory at any
     /// footprint.
     pub fn fixed_size(s_max: usize) -> SampledMrc {
+        Self::with_smax(1.0, s_max)
+    }
+
+    /// Fixed-size SHARDS seeded at `rate`: at most `s_max` lines
+    /// resident, starting from the given rate instead of 1.0 (the CLI
+    /// `--mrc sampled[:rate] --mrc-smax N` combination).
+    pub fn with_smax(rate: f64, s_max: usize) -> SampledMrc {
         SampledMrc {
-            sd: SampledStackDistance::with_max_entries(1.0, s_max),
+            sd: SampledStackDistance::with_max_entries(rate, s_max),
             ..Default::default()
         }
     }

@@ -1,0 +1,273 @@
+//! Fault-matrix properties for the supervised pipeline: every injected
+//! fault kind (`panic`, `stall:<ms>`, `interp-error`) at every site
+//! (`interp`, `broadcaster`, `worker:<shard>`) under every delivery mode
+//! (inline, offload, sharded with one worker, sharded auto) must
+//! complete within a bounded wall clock — no hangs, no wedged channel
+//! pools — and resolve to exactly one of the supervised contract's three
+//! outcomes:
+//!
+//! * a **typed error** (`PanicError` / `InjectedFault` / `TimeoutError`)
+//!   when the fault hits the interpreter thread — there is no partial
+//!   event stream to salvage;
+//! * a **degraded run**: analysis-side panics are isolated, the dead
+//!   shard's families land in `AppMetrics::failed`, and every surviving
+//!   family stays **bit-identical** to a clean run;
+//! * a **clean run** for stalls without a watchdog: slower, same bits.
+//!
+//! The teardown edges ride along: a stalled sharded worker must trip the
+//! `--app-timeout` watchdog (not block the producer forever), and an
+//! offload analyzer panic must degrade while the interpreter still runs
+//! the program to completion. With `FaultPlan::none()` the supervised
+//! entry points must reproduce the unsupervised baseline bit for bit —
+//! the same 4-way identity `prop_chunked.rs` gates.
+
+use std::time::{Duration, Instant};
+
+use pisa_nmc::analysis::{profile, profile_with_tasks_supervised, AppMetrics, MetricSet};
+use pisa_nmc::fault::{FaultPlan, InjectedFault, PanicError, SuperviseOpts, TimeoutError};
+use pisa_nmc::interp::{PipelineMode, Workers};
+use pisa_nmc::ir::{Program, ProgramBuilder};
+use pisa_nmc::traffic::TrafficOpts;
+
+/// Every analyzer family `MetricSet::all()` enables, in canonical order.
+const FAMILIES: &[&str] =
+    &["mix", "branch", "mem_entropy", "reuse", "ilp", "dlp", "bblp", "pbblp", "traffic"];
+
+fn modes() -> [(&'static str, PipelineMode); 4] {
+    [
+        ("inline", PipelineMode::Inline),
+        ("offload", PipelineMode::Offload),
+        ("sharded:1", PipelineMode::Sharded { workers: Workers::Fixed(1) }),
+        ("sharded:auto", PipelineMode::Sharded { workers: Workers::Auto }),
+    ]
+}
+
+/// A real suite kernel, sized to span several chunk flushes so chunk-0
+/// faults fire mid-stream rather than at the final drain.
+fn matrix_program() -> Program {
+    pisa_nmc::workloads::by_name("gesummv").unwrap().build(24, 7)
+}
+
+/// The backpressure stress from `prop_chunked.rs`: ~100+ chunk flushes,
+/// so a stalled worker exhausts the bounded buffer pool and the producer
+/// actually blocks (the watchdog's recv_timeout path).
+fn stress_program() -> Program {
+    let mut b = ProgramBuilder::new("fault_stress");
+    let a = b.alloc_f64("a", 256);
+    let len = b.const_i(256);
+    let n = b.const_i(40_000);
+    b.counted_loop(n, |b, i| {
+        let idx = b.rem(i, len);
+        let v = b.load_f64(a, idx);
+        let w = b.fadd(v, v);
+        b.store_f64(a, idx, w);
+    });
+    b.finish(None)
+}
+
+fn run(
+    p: &Program,
+    mode: PipelineMode,
+    sup: SuperviseOpts,
+) -> anyhow::Result<(AppMetrics, bool)> {
+    let (m, regions) =
+        profile_with_tasks_supervised(p, MetricSet::all(), mode, TrafficOpts::default(), sup)?;
+    Ok((m, regions.is_some()))
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Bit-exact comparison of one analyzer family's metric surface
+/// (the same surfaces `prop_chunked.rs` compares across deliveries).
+fn assert_family_matches(combo: &str, fam: &str, a: &AppMetrics, b: &AppMetrics) {
+    let ok = match fam {
+        "mix" => {
+            a.mix.per_op == b.mix.per_op
+                && a.mix.branches == b.mix.branches
+                && a.mix.blocks == b.mix.blocks
+        }
+        "branch" => {
+            a.branch.weighted_entropy().to_bits() == b.branch.weighted_entropy().to_bits()
+                && a.branch.dyn_branches() == b.branch.dyn_branches()
+                && a.branch.static_sites() == b.branch.static_sites()
+        }
+        "mem_entropy" => {
+            bits_eq(&a.mem_entropy.entropies, &b.mem_entropy.entropies)
+                && a.mem_entropy.count_of_counts == b.mem_entropy.count_of_counts
+                && a.mem_entropy.unique_addrs == b.mem_entropy.unique_addrs
+                && a.mem_entropy.accesses == b.mem_entropy.accesses
+        }
+        "reuse" => {
+            a.reuse.hist == b.reuse.hist
+                && a.reuse.cold == b.reuse.cold
+                && a.reuse.footprint == b.reuse.footprint
+                && bits_eq(&a.reuse.avg_dtr, &b.reuse.avg_dtr)
+                && bits_eq(&a.spatial.scores, &b.spatial.scores)
+        }
+        "ilp" => {
+            a.ilp.inf.to_bits() == b.ilp.inf.to_bits()
+                && a.ilp.critical_path == b.ilp.critical_path
+        }
+        "dlp" => a.dlp.dlp.to_bits() == b.dlp.dlp.to_bits(),
+        "bblp" => bits_eq(&a.bblp.values, &b.bblp.values) && a.bblp.instances == b.bblp.instances,
+        "pbblp" => {
+            a.pbblp.pbblp.to_bits() == b.pbblp.pbblp.to_bits()
+                && a.pbblp.iterations == b.pbblp.iterations
+        }
+        "traffic" => a.traffic == b.traffic,
+        other => panic!("unknown family '{other}'"),
+    };
+    assert!(ok, "{combo}: surviving family '{fam}' is not bit-identical to the clean run");
+}
+
+#[test]
+fn fault_matrix_is_bounded_and_classified() {
+    let p = matrix_program();
+    let clean = profile_with_tasks_supervised(
+        &p,
+        MetricSet::all(),
+        PipelineMode::Inline,
+        TrafficOpts::default(),
+        SuperviseOpts::default(),
+    )
+    .unwrap()
+    .0;
+    let specs = [
+        "panic@interp",
+        "panic@broadcaster",
+        "panic@worker:0",
+        "panic@worker:1",
+        "stall:25@interp",
+        "stall:25@broadcaster",
+        "stall:25@worker:0",
+        "stall:25@worker:1",
+        "interp-error@interp",
+    ];
+    for (mode_name, mode) in modes() {
+        for spec in specs {
+            let combo = format!("{mode_name} × {spec}");
+            let sup = SuperviseOpts::default().with_fault(FaultPlan::from_spec(spec).unwrap());
+            let t0 = Instant::now();
+            let res = run(&p, mode, sup);
+            let elapsed = t0.elapsed();
+            assert!(elapsed < Duration::from_secs(60), "{combo}: took {elapsed:?} (hang?)");
+            match res {
+                Err(e) => {
+                    assert!(
+                        e.downcast_ref::<PanicError>().is_some()
+                            || e.downcast_ref::<InjectedFault>().is_some(),
+                        "{combo}: error is not typed: {e:#}"
+                    );
+                    assert!(
+                        !spec.starts_with("stall"),
+                        "{combo}: a stall without a watchdog must complete, not fail"
+                    );
+                    // only interpreter-thread faults fail the run:
+                    // inline collapses every site onto it, other modes
+                    // degrade their analysis-side faults instead
+                    assert!(
+                        matches!(mode, PipelineMode::Inline) || spec.ends_with("@interp"),
+                        "{combo}: analysis-side fault must degrade, not fail"
+                    );
+                }
+                Ok((m, has_regions)) => {
+                    assert_eq!(
+                        m.exec.dyn_instrs, clean.exec.dyn_instrs,
+                        "{combo}: interpreter did not run to completion"
+                    );
+                    if m.failed.is_empty() {
+                        assert!(
+                            !spec.starts_with("panic"),
+                            "{combo}: an injected panic cannot leave a fully clean run"
+                        );
+                        assert!(has_regions, "{combo}: clean run lost its task trace");
+                        for fam in FAMILIES {
+                            assert_family_matches(&combo, fam, &m, &clean);
+                        }
+                    } else {
+                        assert!(
+                            spec.starts_with("panic"),
+                            "{combo}: only analysis-side panics degrade a run"
+                        );
+                        assert!(
+                            !matches!(mode, PipelineMode::Inline),
+                            "{combo}: inline delivery has no analysis side to lose"
+                        );
+                        for fam in &m.failed {
+                            assert!(
+                                FAMILIES.contains(&fam.as_str()),
+                                "{combo}: unknown failed family '{fam}'"
+                            );
+                        }
+                        for fam in FAMILIES {
+                            if !m.failed.iter().any(|f| f == fam) {
+                                assert_family_matches(&combo, fam, &m, &clean);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn clean_supervised_runs_match_the_unsupervised_baseline() {
+    // FaultPlan::none() plus a far-away watchdog must change nothing:
+    // same bits as the plain `profile` path, in all four deliveries
+    let p = matrix_program();
+    let baseline = profile(&p).unwrap();
+    let sup = SuperviseOpts::default().with_fault(FaultPlan::none()).with_timeout_s(Some(3600));
+    for (mode_name, mode) in modes() {
+        let combo = format!("{mode_name} × none");
+        let (m, has_regions) = run(&p, mode, sup).unwrap();
+        assert!(m.failed.is_empty(), "{combo}: clean run reported failed families");
+        assert!(has_regions, "{combo}: clean run lost its task trace");
+        assert_eq!(m.exec.dyn_instrs, baseline.exec.dyn_instrs, "{combo}: dyn instrs differ");
+        for fam in FAMILIES {
+            assert_family_matches(&combo, fam, &m, &baseline);
+        }
+    }
+}
+
+#[test]
+fn stalled_sharded_worker_trips_the_watchdog_within_bounds() {
+    // teardown edge: worker 0 sleeps 3s on its first chunk; the bounded
+    // buffer pool backs the stall up to the producer, whose 1s watchdog
+    // must fire through the recv_timeout waits — and teardown must still
+    // drain every thread instead of wedging the pool
+    let p = stress_program();
+    let sup = SuperviseOpts::default()
+        .with_fault(FaultPlan::from_spec("stall:3000@worker:0").unwrap())
+        .with_timeout_s(Some(1));
+    let t0 = Instant::now();
+    let err = run(&p, PipelineMode::Sharded { workers: Workers::Auto }, sup).unwrap_err();
+    let elapsed = t0.elapsed();
+    assert!(
+        err.downcast_ref::<TimeoutError>().is_some(),
+        "want the typed watchdog expiry, got: {err:#}"
+    );
+    assert!(elapsed >= Duration::from_millis(900), "watchdog fired early: {elapsed:?}");
+    assert!(elapsed < Duration::from_secs(20), "teardown took {elapsed:?} (wedged pool?)");
+}
+
+#[test]
+fn offload_analyzer_panic_degrades_while_the_interpreter_completes() {
+    // teardown edge: the single offloaded analysis thread dies mid-run
+    // with the watchdog armed; the producer detaches, finishes the
+    // program, and the run degrades — all families failed, trace forfeit
+    let p = stress_program();
+    let sup = SuperviseOpts::default()
+        .with_fault(FaultPlan::from_spec("panic@worker:0").unwrap())
+        .with_timeout_s(Some(600));
+    let t0 = Instant::now();
+    let (m, has_regions) = run(&p, PipelineMode::Offload, sup).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(elapsed < Duration::from_secs(30), "degraded teardown took {elapsed:?}");
+    let all: Vec<String> = FAMILIES.iter().map(|s| s.to_string()).collect();
+    assert_eq!(m.failed, all, "offload death must take every family down together");
+    assert!(!has_regions, "a degraded run must forfeit the task trace");
+    assert!(m.exec.dyn_instrs > 0, "interpreter must still run to completion");
+}
