@@ -25,11 +25,13 @@
 use std::time::Instant;
 
 use pisa_nmc::analysis::{
-    profile, profile_offload, profile_opts, profile_per_event, profile_sharded, Metric, MetricSet,
+    profile, profile_offload, profile_opts, profile_per_event, profile_sharded,
+    profile_source_opts, Metric, MetricSet,
 };
 use pisa_nmc::coordinator::{run_suite_opts, run_suite_select, AppResult};
-use pisa_nmc::interp::{PipelineMode, Workers};
+use pisa_nmc::interp::{Machine, PipelineMode, Workers};
 use pisa_nmc::testkit::bench::bench_scale;
+use pisa_nmc::trace::{TraceLanes, TraceMeta, TraceReader, TraceWriter};
 use pisa_nmc::traffic::{MrcMode, TrafficOpts};
 use pisa_nmc::util::Json;
 use pisa_nmc::workloads::{registry, scaled_n};
@@ -198,6 +200,43 @@ fn main() -> anyhow::Result<()> {
         kernel_sampled_eps / kernel_exact_eps.max(1e-9),
     );
 
+    // trace record/replay arm (ISSUE 8): interpret-and-analyze vs
+    // decode-and-analyze the same events from a .pallas-trace recording —
+    // the replay path skips execution (register file, memory image,
+    // control flow) and pays decode instead, so its events/s is the
+    // subsystem's headline number. Same kernel as the MRC arm above.
+    let all_metrics = MetricSet::all();
+    let dflt = TrafficOpts::default();
+    let t = Instant::now();
+    let live = profile_opts(&kprog, all_metrics, PipelineMode::Inline, dflt)?;
+    let interp_s = t.elapsed().as_secs_f64();
+    let trace_path = std::env::temp_dir().join("pisa-bench-trace.pallas-trace");
+    {
+        let mut machine = Machine::new(&kprog)?;
+        let meta = TraceMeta { app: kernel_name.clone(), n: biggest.n as u64, seed: 42 };
+        let mut w =
+            TraceWriter::create(&trace_path, meta, machine.chunk_capacity(), TraceLanes::ALL)?;
+        machine.run(&mut w)?;
+        w.finish()?;
+    }
+    let t = Instant::now();
+    let mut reader = TraceReader::open(&trace_path)?;
+    let replayed =
+        profile_source_opts(&kprog, &mut reader, all_metrics, PipelineMode::Inline, dflt)?;
+    let replay_s = t.elapsed().as_secs_f64();
+    std::fs::remove_file(&trace_path).ok();
+    assert_eq!(live.exec.dyn_instrs, replayed.exec.dyn_instrs);
+    let trace_events = live.exec.events() as f64;
+    let interp_eps = trace_events / interp_s.max(1e-9);
+    let replay_eps = trace_events / replay_s.max(1e-9);
+    println!(
+        "\ntrace replay ({kernel_name}): interpret+analyze {:.2}M events/s vs decode+analyze \
+         {:.2}M events/s ({:.2}x)",
+        interp_eps / 1e6,
+        replay_eps / 1e6,
+        replay_eps / interp_eps.max(1e-9),
+    );
+
     if emit_json {
         let mut j = Json::obj();
         j.set("scale", scale);
@@ -230,6 +269,14 @@ fn main() -> anyhow::Result<()> {
         mrc.set("kernel_sampled_events_per_sec", kernel_sampled_eps);
         mrc.set("kernel_speedup", kernel_sampled_eps / kernel_exact_eps.max(1e-9));
         j.set("mrc_sampled", mrc);
+        // trace-replay throughput: decoding a .pallas-trace recording
+        // into the full analyzer stack vs interpreting the kernel live
+        let mut trace = Json::obj();
+        trace.set("kernel", kernel_name.as_str());
+        trace.set("interp_events_per_sec", interp_eps);
+        trace.set("replay_events_per_sec", replay_eps);
+        trace.set("replay_speedup", replay_eps / interp_eps.max(1e-9));
+        j.set("trace", trace);
         let mut apps = Json::obj();
         for ((a, o), sh) in inline_apps.iter().zip(&offload_apps).zip(&sharded_apps) {
             let mut app = Json::obj();

@@ -72,6 +72,7 @@ use crate::interp::{
 };
 use crate::ir::Program;
 use crate::sim::{Region, TaskTraceCollector};
+use crate::trace::{check_lanes, replay_chunked, replay_offload, replay_per_event, TraceSource};
 use crate::traffic::{HierarchyPolicy, TrafficAnalyzer, TrafficMetrics, TrafficOpts, TrafficParts};
 use crate::util::Json;
 
@@ -687,6 +688,85 @@ pub fn profile_per_event_opts(
     profile_impl(prog, metrics, Delivery::PerEvent, opts)
 }
 
+/// Profile a pre-produced event stream instead of interpreting directly —
+/// the ingestion inversion. `source` is any [`TraceSource`]: the
+/// interpreter behind [`crate::trace::InterpSource`], or a recorded
+/// `.pallas-trace` file behind [`crate::trace::TraceReader`]. The full
+/// analyzer stack runs unchanged on either origin, under any delivery
+/// mode. Fails at plan time with
+/// [`TraceError::MissingLanes`](crate::trace::TraceError) when the source
+/// does not carry the lanes the selected families read (a
+/// narrowly-recorded trace replayed against a wider metric set).
+pub fn profile_source_opts(
+    prog: &Program,
+    source: &mut dyn TraceSource,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    opts: TrafficOpts,
+) -> Result<AppMetrics> {
+    Ok(profile_source_run(prog, source, metrics, delivery_for(mode), opts, false)?.0)
+}
+
+/// [`profile_source_opts`] with per-event delivery — the un-batched
+/// reference arm for the replay bit-identity tests.
+pub fn profile_source_per_event(
+    prog: &Program,
+    source: &mut dyn TraceSource,
+    metrics: MetricSet,
+    opts: TrafficOpts,
+) -> Result<AppMetrics> {
+    Ok(profile_source_run(prog, source, metrics, Delivery::PerEvent, opts, false)?.0)
+}
+
+/// [`profile_source_opts`] plus the region/task trace both machine models
+/// consume — the coordinator's replay entry point.
+pub fn profile_source_with_tasks(
+    prog: &Program,
+    source: &mut dyn TraceSource,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    opts: TrafficOpts,
+) -> Result<(AppMetrics, Vec<Region>)> {
+    let (m, regions) = profile_source_run(prog, source, metrics, delivery_for(mode), opts, true)?;
+    Ok((m, regions.expect("task trace enabled")))
+}
+
+/// The source-driven sibling of [`profile_run`]: same stack construction
+/// and delivery shapes, but events come from `source` and the execution
+/// statistics are the source's (wall time stamped here — the driver owns
+/// the clock). Replay is strict: a source error or a dead analyzer thread
+/// fails the run; there is no fault-supervision arm on this path.
+fn profile_source_run(
+    prog: &Program,
+    source: &mut dyn TraceSource,
+    metrics: MetricSet,
+    delivery: Delivery,
+    opts: TrafficOpts,
+    with_tasks: bool,
+) -> Result<(AppMetrics, Option<Vec<Region>>)> {
+    crate::ir::verify::verify_ok(prog);
+    // plan-time lane gate: a starved replay must fail before any decoding,
+    // naming the families it cannot feed
+    check_lanes(source.lanes(), metrics)?;
+    let t0 = std::time::Instant::now();
+    if let Delivery::Sharded(workers) = delivery {
+        return shard::profile_sharded_source(prog, source, metrics, workers, opts, with_tasks, t0);
+    }
+    let mut stack = AnalyzerStack::new_opts(prog, metrics, opts);
+    if with_tasks {
+        stack = stack.with_task_trace(prog);
+    }
+    match delivery {
+        Delivery::Chunked => replay_chunked(source, &mut stack)?,
+        Delivery::PerEvent => replay_per_event(source, &mut stack)?,
+        Delivery::Offload => replay_offload(source, &mut stack)?,
+        Delivery::Sharded(_) => unreachable!("handled above"),
+    }
+    let mut exec = source.stats();
+    exec.wall_s = t0.elapsed().as_secs_f64();
+    Ok(stack.finalize(exec))
+}
+
 impl AppMetrics {
     /// The paper's four Fig-6 PCA features, in artifact column order:
     /// [BBLP_1, PBBLP, entropy_diff_mem, spat_8B_16B].
@@ -839,6 +919,104 @@ mod tests {
         assert_eq!(a.mem_entropy.count_of_counts, b.mem_entropy.count_of_counts);
         assert_eq!(a.traffic, b.traffic);
         assert_eq!(a.exec.dyn_instrs, b.exec.dyn_instrs);
+    }
+
+    #[test]
+    fn source_profile_matches_direct_on_every_delivery() {
+        use crate::trace::InterpSource;
+        let p = tiny_program();
+        let reference = profile(&p).unwrap();
+        for mode in [
+            PipelineMode::Inline,
+            PipelineMode::Offload,
+            PipelineMode::Sharded { workers: Workers::Auto },
+        ] {
+            let mut src = InterpSource::new(&p).unwrap();
+            let m =
+                profile_source_opts(&p, &mut src, MetricSet::all(), mode, TrafficOpts::default())
+                    .unwrap();
+            assert_eq!(
+                m.pca8_features().map(f64::to_bits),
+                reference.pca8_features().map(f64::to_bits),
+                "{mode:?}"
+            );
+            assert_eq!(m.mix.per_op, reference.mix.per_op);
+            assert_eq!(m.reuse.hist, reference.reuse.hist);
+            assert_eq!(m.traffic, reference.traffic);
+            assert_eq!(m.exec.dyn_instrs, reference.exec.dyn_instrs);
+        }
+        let mut src = InterpSource::new(&p).unwrap();
+        let m =
+            profile_source_per_event(&p, &mut src, MetricSet::all(), TrafficOpts::default())
+                .unwrap();
+        assert_eq!(
+            m.pca8_features().map(f64::to_bits),
+            reference.pca8_features().map(f64::to_bits)
+        );
+    }
+
+    #[test]
+    fn source_profile_with_tasks_yields_regions() {
+        use crate::trace::InterpSource;
+        let p = tiny_program();
+        let mut src = InterpSource::new(&p).unwrap();
+        let (m, regions) = profile_source_with_tasks(
+            &p,
+            &mut src,
+            MetricSet::all(),
+            PipelineMode::Inline,
+            TrafficOpts::default(),
+        )
+        .unwrap();
+        assert!(m.exec.dyn_instrs > 0);
+        assert!(!regions.is_empty());
+    }
+
+    #[test]
+    fn lane_starved_source_fails_at_plan_time() {
+        use crate::interp::EventChunk;
+        use crate::trace::{ChunkStatus, TraceError, TraceLanes};
+        struct Stub;
+        impl TraceSource for Stub {
+            fn next_chunk(&mut self, _chunk: &mut EventChunk) -> Result<ChunkStatus> {
+                bail!("decode reached")
+            }
+            fn chunk_capacity(&self) -> usize {
+                8
+            }
+            fn lanes(&self) -> TraceLanes {
+                TraceLanes::TAGS
+            }
+            fn stats(&self) -> ExecStats {
+                ExecStats::default()
+            }
+        }
+        let p = tiny_program();
+        let err = profile_source_opts(
+            &p,
+            &mut Stub,
+            MetricSet::all(),
+            PipelineMode::Inline,
+            TrafficOpts::default(),
+        )
+        .unwrap_err();
+        match err.downcast_ref::<TraceError>() {
+            Some(TraceError::MissingLanes { families, missing }) => {
+                assert!(families.iter().any(|f| f == "traffic"), "{families:?}");
+                assert!(families.iter().any(|f| f == "ilp"), "{families:?}");
+                assert!(!families.iter().any(|f| f == "mix"), "{families:?}");
+                assert!(missing.contains(TraceLanes::ADDRS));
+                assert!(!missing.contains(TraceLanes::TAGS));
+            }
+            other => panic!("expected MissingLanes, got {other:?}"),
+        }
+        // a tags-only selection is satisfied by a tags-only source: the
+        // gate passes and the stub's own decode error surfaces instead
+        let sel = MetricSet::from_names("mix").unwrap();
+        let err =
+            profile_source_opts(&p, &mut Stub, sel, PipelineMode::Inline, TrafficOpts::default())
+                .unwrap_err();
+        assert_eq!(err.to_string(), "decode reached");
     }
 
     #[test]

@@ -31,12 +31,15 @@
 //! order, so sharded results are deterministic regardless of worker
 //! scheduling.
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::fault::SuperviseOpts;
 use crate::interp::{run_sharded_supervised, Instrument, Machine, Workers};
 use crate::ir::Program;
 use crate::sim::Region;
+use crate::trace::{replay_sharded, TraceSource};
 use crate::traffic::{TrafficOpts, TrafficParts};
 
 use super::{AnalyzerStack, AppMetrics, ExecStats, Metric, MetricSet};
@@ -220,6 +223,47 @@ pub(super) fn profile_sharded_run(
         regions = None;
     }
     Ok((m, regions))
+}
+
+/// The sharded delivery driven by a [`TraceSource`] instead of a live
+/// [`Machine`]: same plan, same per-shard stacks, same deterministic
+/// merge, but chunks come from the source (a recorded trace, or the
+/// interpreter behind its adapter) via
+/// [`replay_sharded`](crate::trace::replay_sharded). Replay is strict —
+/// a dead shard fails the run rather than degrading it, so `dead` is
+/// all-false and the merge is always total. `t0` is the driver's clock
+/// start; the merged exec stats are the source's with wall time stamped
+/// here.
+pub(super) fn profile_sharded_source(
+    prog: &Program,
+    source: &mut dyn TraceSource,
+    metrics: MetricSet,
+    workers: Workers,
+    opts: TrafficOpts,
+    with_tasks: bool,
+    t0: Instant,
+) -> Result<(AppMetrics, Option<Vec<Region>>)> {
+    let plan = ShardPlan::new(metrics, workers);
+    let mut stacks: Vec<AnalyzerStack> = plan
+        .shards()
+        .iter()
+        .map(|spec| AnalyzerStack::new_parts(prog, spec.metrics, opts, spec.traffic))
+        .collect();
+    if with_tasks {
+        let last = stacks.pop().expect("plan is never empty");
+        stacks.push(last.with_task_trace(prog));
+    }
+    {
+        let mut refs: Vec<&mut (dyn Instrument + Send)> = stacks
+            .iter_mut()
+            .map(|s| s as &mut (dyn Instrument + Send))
+            .collect();
+        replay_sharded(source, &mut refs)?;
+    }
+    let mut exec = source.stats();
+    exec.wall_s = t0.elapsed().as_secs_f64();
+    let dead = vec![false; plan.workers()];
+    Ok(merge_shards(&plan, stacks, &dead, exec))
 }
 
 /// Fold the per-shard stacks into one [`AppMetrics`]: each family's

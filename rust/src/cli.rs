@@ -36,6 +36,8 @@ const VALUE_FLAGS: &[&str] = &[
     "inject-fault",
     "app-timeout",
     "on-error",
+    "record-out",
+    "trace",
 ];
 
 pub fn parse(argv: &[String]) -> Result<Args> {
@@ -115,6 +117,34 @@ impl Args {
     }
 }
 
+/// Record/replay flag validation, applied up front before any verb runs:
+/// the legal combinations form a small closed set (`record` writes, never
+/// replays; `--trace` replays on `pipeline`/`analyze` only and must name
+/// an existing file), so misuse fails immediately in the same error style
+/// as every other CLI mistake.
+pub fn validate_trace_flags(a: &Args) -> Result<()> {
+    if a.command == "record" {
+        if a.get("record-out").is_none() {
+            bail!("record requires --record-out <path>");
+        }
+        if a.has("trace") {
+            bail!("record interprets a kernel and writes a trace; --trace replays one — pick one");
+        }
+    } else if a.has("record-out") {
+        bail!("--record-out only applies to the record command");
+    }
+    if a.has("trace") {
+        if !matches!(a.command.as_str(), "pipeline" | "analyze") {
+            bail!("--trace only applies to the pipeline and analyze commands");
+        }
+        let path = a.require("trace")?;
+        if !std::path::Path::new(path).exists() {
+            bail!("--trace {path}: no such file");
+        }
+    }
+    Ok(())
+}
+
 pub const HELP: &str = "\
 pisa-nmc — Platform-Independent Software Analysis for Near-Memory Computing
 (reproduction of Corda et al., cs.PF 2019; see DESIGN.md)
@@ -126,15 +156,23 @@ USAGE:
                     [--mrc exact|sampled:<rate>] [--mrc-smax N]
                     [--inject-fault SPEC] [--app-timeout SECS]
                     [--on-error fail-fast|continue] [--no-pjrt]
-                    [--out FILE]
+                    [--trace FILE] [--out FILE]
         full suite: profile 12 kernels, run host+NMC sims, PJRT analytics,
         print every table and figure (writes JSON report with --out)
   pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--metrics LIST]
                    [--pipeline MODE] [--workers N|auto]
                    [--hierarchy inclusive|exclusive]
                    [--mrc exact|sampled:<rate>] [--mrc-smax N]
-                   [--inject-fault SPEC] [--app-timeout SECS] [--json]
-        profile a single kernel and print its metrics
+                   [--inject-fault SPEC] [--app-timeout SECS]
+                   [--trace FILE] [--json]
+        profile a single kernel and print its metrics (with --trace:
+        replay a recording instead of interpreting; --kernel is ignored)
+  pisa-nmc record --kernel NAME --record-out FILE [--n N] [--seed N]
+                  [--metrics LIST] [--pipeline MODE] [--workers N|auto]
+                  [--hierarchy inclusive|exclusive]
+                  [--mrc exact|sampled:<rate>] [--mrc-smax N] [--json]
+        profile one kernel while streaming its event trace to a versioned
+        .pallas-trace file (replay it later with --trace)
   pisa-nmc figure {3a|3b|3c|4|5|6|mrc} [pipeline flags]
         regenerate one paper figure (mrc: the miss-ratio-curve extension)
   pisa-nmc table {1|2} [--scale F]
@@ -205,6 +243,26 @@ degraded apps with salvaged survivors exit zero. --inject-fault
 KIND@SITE[:CHUNK] arms one deterministic fault for testing: KIND is
 `panic`, `stall:<ms>` or `interp-error`; SITE is `interp`, `broadcaster`
 or `worker:<shard>`; CHUNK is the chunk ordinal it fires on (default 0).
+
+Record/replay: `record` composes the analyzer stack with a trace-writer
+sink, so one instrumented run yields both the metrics and a compact
+self-describing binary trace (`.pallas-trace`: versioned header, SoA
+chunk frames with delta+varint-coded addresses, checksummed footer — the
+full wire layout is documented in the `trace` module). --record-out FILE
+names the output; the lanes written are exactly what the selected
+--metrics families need, so narrow recordings stay small but can only
+feed the families they carry — replaying a starved trace fails up front
+naming the missing families. --trace FILE (pipeline and analyze only)
+replays a recording through the full analyzer stack — every --pipeline
+delivery mode, both --hierarchy policies, exact and sampled --mrc — with
+metrics event-for-event identical to the recording run; the workload
+identity (kernel, n, seed) comes from the trace header and the JSON
+report gains a \"trace\" provenance section.
+
+  # record gesummv once, then analyze the same stream two ways
+  pisa-nmc record --kernel gesummv --n 64 --record-out g.pallas-trace
+  pisa-nmc pipeline --trace g.pallas-trace --metrics all --out report.json
+  pisa-nmc analyze --trace g.pallas-trace --pipeline sharded --json
 
 Artifacts are searched in ./artifacts (or $PISA_NMC_ARTIFACTS); build them
 with `make artifacts`. --no-pjrt forces the native analytics fallback.
@@ -295,6 +353,60 @@ mod tests {
     #[test]
     fn value_flag_requires_value() {
         assert!(parse(&["analyze".into(), "--kernel".into()]).is_err());
+    }
+
+    #[test]
+    fn record_and_trace_flags_take_values() {
+        let a = args(&["record", "--kernel", "atax", "--record-out", "t.pallas-trace"]);
+        assert_eq!(a.get("record-out"), Some("t.pallas-trace"));
+        assert!(parse(&["record".into(), "--record-out".into()]).is_err());
+        let a = args(&["pipeline", "--trace", "t.pallas-trace"]);
+        assert_eq!(a.get("trace"), Some("t.pallas-trace"));
+        assert!(parse(&["pipeline".into(), "--trace".into()]).is_err());
+    }
+
+    #[test]
+    fn record_requires_record_out() {
+        let a = args(&["record", "--kernel", "atax"]);
+        let err = validate_trace_flags(&a).unwrap_err();
+        assert!(err.to_string().contains("--record-out"), "{err}");
+    }
+
+    #[test]
+    fn record_rejects_replay_flag() {
+        let a = args(&["record", "--kernel", "atax", "--record-out", "o", "--trace", "i"]);
+        assert!(validate_trace_flags(&a).is_err());
+    }
+
+    #[test]
+    fn record_out_is_record_only() {
+        for cmd in ["pipeline", "analyze", "validate"] {
+            let a = args(&[cmd, "--record-out", "o"]);
+            let err = validate_trace_flags(&a).unwrap_err();
+            assert!(err.to_string().contains("record command"), "{cmd}: {err}");
+        }
+    }
+
+    #[test]
+    fn trace_flag_is_replay_only_and_must_name_an_existing_file() {
+        // wrong verb
+        let a = args(&["validate", "--trace", "whatever"]);
+        assert!(validate_trace_flags(&a).is_err());
+        // right verb, missing file
+        let a = args(&["pipeline", "--trace", "/nonexistent/missing.pallas-trace"]);
+        let err = validate_trace_flags(&a).unwrap_err();
+        assert!(err.to_string().contains("no such file"), "{err}");
+        // right verb, existing file
+        let p = std::env::temp_dir()
+            .join(format!("pisa-cli-trace-{}.pallas-trace", std::process::id()));
+        std::fs::write(&p, b"x").unwrap();
+        let argv = vec!["analyze".to_string(), "--trace".to_string(), p.display().to_string()];
+        let a = parse(&argv).unwrap();
+        assert!(validate_trace_flags(&a).is_ok());
+        let _ = std::fs::remove_file(&p);
+        // flag-free commands validate clean
+        assert!(validate_trace_flags(&args(&["analyze", "--kernel", "atax"])).is_ok());
+        assert!(validate_trace_flags(&args(&["pipeline"])).is_ok());
     }
 
     #[test]

@@ -15,15 +15,18 @@ pub use figures::{analyze_suite, Engine, SuiteAnalytics};
 pub use pca::{pca, Pca};
 pub use pipeline::{
     profile_app, profile_app_mode, profile_app_opts, profile_app_select, profile_app_supervised,
-    run_suite, run_suite_opts, run_suite_select, run_suite_supervised, AppFailure, AppOutcome,
-    AppResult, OnError, ProfileError, SuitePolicy,
+    replay_app, run_suite, run_suite_opts, run_suite_select, run_suite_supervised, AppFailure,
+    AppOutcome, AppResult, OnError, ProfileError, SuitePolicy,
 };
+
+use std::path::Path;
 
 use anyhow::Result;
 
 use crate::analysis::MetricSet;
 use crate::interp::PipelineMode;
 use crate::runtime::Runtime;
+use crate::trace::TraceProvenance;
 use crate::traffic::TrafficOpts;
 use crate::util::Json;
 
@@ -45,6 +48,11 @@ pub struct PipelineReport {
     /// Traffic-family options (hierarchy replay policy + MRC mode) the
     /// run profiled under.
     pub traffic: TrafficOpts,
+    /// Provenance of the replayed `.pallas-trace` when the events came
+    /// from a recorded file (`--trace`) rather than live interpretation;
+    /// `None` for every interpreting run. Rendered as the report's
+    /// `"trace"` section.
+    pub trace: Option<TraceProvenance>,
 }
 
 /// Every knob one pipeline run takes — bundled so the supervised entry
@@ -168,6 +176,48 @@ pub fn run_pipeline_cfg(cfg: &PipelineCfg, rt: Option<&Runtime>) -> Result<Pipel
         metrics,
         mode: cfg.mode,
         traffic: cfg.traffic,
+        trace: None,
+    })
+}
+
+/// Replay one recorded `.pallas-trace` through the pipeline report shape:
+/// the full analyzer stack and both machine models run on the decoded
+/// stream (any delivery mode, any traffic knobs), producing a single-app
+/// [`PipelineReport`] whose `"trace"` section records the file's
+/// provenance. The per-app analytics rows (entropy/spatial series) are
+/// real — figures index them per app — but the cross-app PCA plane is
+/// zeroed, since PCA over a single app is meaningless. Every per-app
+/// metric is event-for-event identical to profiling the recording's
+/// workload directly. `cfg.seed`/`cfg.scale` describe the *report*; the
+/// workload identity (app, n, seed) comes from the trace header.
+pub fn run_replay_cfg(cfg: &PipelineCfg, trace_path: &Path) -> Result<PipelineReport> {
+    let metrics = cfg.metrics.with_simulation_requirements();
+    let (app, provenance) = replay_app(trace_path, cfg.metrics, cfg.mode, cfg.traffic)?;
+    let apps = vec![app];
+    let analytics = SuiteAnalytics {
+        engine: Engine::Native,
+        entropies: apps.iter().map(|a| a.metrics.mem_entropy.entropies.clone()).collect(),
+        entropy_diff: apps.iter().map(|a| a.metrics.mem_entropy.entropy_diff).collect(),
+        spatial: apps.iter().map(|a| a.metrics.spatial.scores.clone()).collect(),
+        pca: Pca {
+            // one zeroed score row per app: to_json indexes scores[i]
+            scores: vec![vec![0.0; 2]; apps.len()],
+            loadings: vec![vec![0.0; 2]; 4],
+            eigenvalues: vec![0.0; 2],
+            explained_variance_ratio: vec![0.0; 2],
+        },
+        max_crosscheck_err: 0.0,
+    };
+    Ok(PipelineReport {
+        apps,
+        failures: Vec::new(),
+        analytics,
+        scale: cfg.scale,
+        seed: provenance.seed,
+        metrics,
+        mode: cfg.mode,
+        traffic: cfg.traffic,
+        trace: Some(provenance),
     })
 }
 
@@ -220,6 +270,9 @@ impl PipelineReport {
         let total_events: u64 = self.apps.iter().map(|a| a.metrics.exec.events()).sum();
         j.set("profile_events", total_events);
         j.set("profile_events_per_sec", self.suite_events_per_sec());
+        if let Some(t) = &self.trace {
+            j.set("trace", t.to_json());
+        }
         let mut apps = Json::obj();
         for (i, a) in self.apps.iter().enumerate() {
             let mut o = a.metrics.to_json();

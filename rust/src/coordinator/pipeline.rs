@@ -18,18 +18,23 @@
 //! on separate workers) — size `--threads` accordingly on small machines.
 
 use std::fmt;
+use std::path::Path;
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::analysis::{profile_with_tasks, profile_with_tasks_supervised, AppMetrics, MetricSet};
+use crate::analysis::{
+    profile_source_with_tasks, profile_with_tasks, profile_with_tasks_supervised, AppMetrics,
+    MetricSet,
+};
 use crate::fault::{PanicError, SuperviseOpts, TimeoutError};
 use crate::interp::PipelineMode;
 use crate::sim::{self, EdpComparison, Region};
+use crate::trace::{TraceProvenance, TraceReader};
 use crate::traffic::TrafficOpts;
-use crate::workloads::{registry, scaled_n, Kernel};
+use crate::workloads::{by_name, registry, scaled_n, Kernel};
 
 /// Per-application pipeline output.
 #[derive(Debug, Clone)]
@@ -254,6 +259,37 @@ fn simulate(metrics: AppMetrics, n: usize, regions: &[Region]) -> AppResult {
         nmc: sim::simulate_nmc(regions),
     };
     AppResult { name: metrics.name.clone(), n, metrics, cmp }
+}
+
+/// Replay a recorded `.pallas-trace` through the full per-app pipeline:
+/// decode the stream, run the selected analyzers plus the task trace, and
+/// both machine models — exactly what a live interpretation of the same
+/// workload would produce, event for event. The program is rebuilt from
+/// the header's workload identity (app name, `n`, seed) so the task-trace
+/// collector and simulators see the recording's loop structure; the event
+/// stream itself comes from the file, never the interpreter. Sim-required
+/// families are force-enabled like every other pipeline entry point, so a
+/// trace recorded with too few lanes fails up front with
+/// [`TraceError::MissingLanes`](crate::trace::TraceError) naming the
+/// starved families.
+pub fn replay_app(
+    path: &Path,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    opts: TrafficOpts,
+) -> Result<(AppResult, TraceProvenance)> {
+    let mut reader = TraceReader::open(path)?;
+    let meta = reader.header().meta.clone();
+    let n = usize::try_from(meta.n)
+        .map_err(|_| anyhow!("trace workload size {} exceeds this platform", meta.n))?;
+    let k = by_name(&meta.app).map_err(|_| {
+        anyhow!("trace records app '{}' which is not in the workload registry", meta.app)
+    })?;
+    let metrics = metrics.with_simulation_requirements();
+    let prog = k.build(n, meta.seed);
+    let (m, regions) = profile_source_with_tasks(&prog, &mut reader, metrics, mode, opts)
+        .with_context(|| format!("replaying {}", path.display()))?;
+    Ok((simulate(m, n, &regions), reader.provenance()))
 }
 
 /// [`profile_app_opts`] under a supervision plan (`--inject-fault`,
@@ -558,6 +594,56 @@ mod tests {
         assert!(r.metrics.ilp.inf >= 1.0, "ILP must be force-enabled for sims");
         assert!(r.cmp.host.time_s > 0.0 && r.cmp.nmc.time_s > 0.0);
         assert_eq!(r.metrics.mem_entropy.accesses, 0);
+    }
+
+    #[test]
+    fn replayed_trace_matches_direct_pipeline() {
+        use crate::interp::Machine;
+        use crate::trace::{TraceLanes, TraceMeta, TraceWriter};
+        let k = by_name("gesummv").unwrap();
+        let direct = profile_app(k.as_ref(), 16, 3).unwrap();
+        let prog = k.build(16, 3);
+        let path = std::env::temp_dir()
+            .join(format!("pisa-replay-app-{}.pallas-trace", std::process::id()));
+        let mut machine = Machine::new(&prog).unwrap();
+        let meta = TraceMeta { app: "gesummv".into(), n: 16, seed: 3 };
+        let cap = machine.chunk_capacity();
+        let mut w = TraceWriter::create(&path, meta, cap, TraceLanes::ALL).unwrap();
+        machine.run(&mut w).unwrap();
+        w.finish().unwrap();
+        let replayed =
+            replay_app(&path, MetricSet::all(), PipelineMode::Inline, TrafficOpts::default());
+        let _ = std::fs::remove_file(&path);
+        let (r, prov) = replayed.unwrap();
+        assert_eq!(prov.app, "gesummv");
+        assert_eq!((prov.n, prov.seed), (16, 3));
+        assert!(prov.chunks > 0 && prov.events > 0);
+        // event-for-event equality: the whole metric JSON matches once the
+        // wall clock (the one legitimately run-dependent field) is zeroed
+        let mut a = r.metrics.clone();
+        let mut b = direct.metrics.clone();
+        a.exec.wall_s = 0.0;
+        b.exec.wall_s = 0.0;
+        assert_eq!(a.to_json().to_string_compact(), b.to_json().to_string_compact());
+        // the machine models consumed an identical region trace
+        assert_eq!(r.cmp.edp_improvement(), direct.cmp.edp_improvement());
+    }
+
+    #[test]
+    fn replay_of_unknown_app_names_the_registry() {
+        use crate::trace::{TraceLanes, TraceMeta, TraceWriter};
+        let path = std::env::temp_dir()
+            .join(format!("pisa-replay-unknown-{}.pallas-trace", std::process::id()));
+        let meta = TraceMeta { app: "not-a-kernel".into(), n: 8, seed: 1 };
+        let mut w = TraceWriter::create(&path, meta, 64, TraceLanes::ALL).unwrap();
+        w.finish().unwrap();
+        let err = replay_app(&path, MetricSet::all(), PipelineMode::Inline, TrafficOpts::default())
+            .unwrap_err();
+        let _ = std::fs::remove_file(&path);
+        assert!(
+            err.to_string().contains("not in the workload registry"),
+            "unexpected error: {err:#}"
+        );
     }
 
     #[test]

@@ -384,6 +384,13 @@ impl EventChunk {
         self.buf.len() >= self.capacity
     }
 
+    /// Fixed capacity this chunk was created with (the flush threshold —
+    /// the backing allocation never grows past it on the hot path).
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// Free slots before the buffer must be flushed.
     #[inline]
     pub fn remaining(&self) -> usize {

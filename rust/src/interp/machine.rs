@@ -329,66 +329,126 @@ impl<'p> Machine<'p> {
         Ok(mem_ev)
     }
 
-    /// The interpreter loop, generic over the event-delivery strategy.
+    /// Begin a resumable run: block cursor at the entry block, fresh stats,
+    /// wall clock started. Drive it with [`Machine::step_block`] (see
+    /// [`crate::trace::InterpSource`]) or let [`Machine::run_with`] loop it
+    /// to completion.
+    pub(crate) fn start(&self) -> StepState {
+        StepState {
+            bb: 0,
+            stats: ExecStats::default(),
+            t0: Instant::now(),
+            done: false,
+            ret: None,
+        }
+    }
+
+    /// Instruction count of the block the cursor points at — the value the
+    /// chunked sinks' `block_boundary` flush policy consults *before* the
+    /// block executes. Errors on a dangling block id, exactly where the
+    /// monolithic loop used to.
+    pub(crate) fn upcoming(&self, st: &StepState) -> Result<usize> {
+        let bb = st.bb;
+        let block = self
+            .prog
+            .func
+            .blocks
+            .get(bb as usize)
+            .with_context(|| format!("bad block id {bb}"))?;
+        Ok(block.instrs.len())
+    }
+
+    /// Execute exactly one basic block (entry event, instructions,
+    /// terminator) and advance the cursor. On `Ret` the state is marked
+    /// done and carries the return value; the caller owns end-of-run
+    /// delivery (`finish`) and the wall-clock stamp, so pull-based drivers
+    /// can interleave their own chunk handling between blocks.
+    pub(crate) fn step_block<S: EventSink>(
+        &mut self,
+        st: &mut StepState,
+        delivery: &mut S,
+    ) -> Result<()> {
+        let prog: &'p Program = self.prog;
+        let bb = st.bb;
+        let block = prog
+            .func
+            .blocks
+            .get(bb as usize)
+            .with_context(|| format!("bad block id {bb}"))?;
+        st.stats.dyn_blocks += 1;
+        delivery.event(TraceEvent::BlockEnter { block: bb });
+
+        for ins in &block.instrs {
+            st.stats.dyn_instrs += 1;
+            if st.stats.dyn_instrs > self.instr_limit {
+                bail!(
+                    "instruction limit exceeded ({}) in {}",
+                    self.instr_limit,
+                    self.prog.func.name
+                );
+            }
+            let mem_ev = self.exec_instr(ins, &mut st.stats)?;
+            delivery.event(TraceEvent::Instr(InstrEvent {
+                op: ins.op,
+                dst: ins.dst,
+                srcs: ins.srcs,
+                n_srcs: ins.n_srcs,
+                mem: mem_ev,
+                block: bb,
+            }));
+        }
+
+        match &block.term {
+            Terminator::Jmp(t) => st.bb = *t,
+            Terminator::Br { cond, then_, else_ } => {
+                let taken = self.reg(*cond).truthy();
+                st.stats.dyn_branches += 1;
+                delivery.event(TraceEvent::Branch { block: bb, taken });
+                st.bb = if taken { *then_ } else { *else_ };
+            }
+            Terminator::Ret(r) => {
+                st.ret = r.map(|r| self.reg(r));
+                st.done = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// The interpreter loop, generic over the event-delivery strategy: the
+    /// resumable stepper driven to completion. Event order, error order and
+    /// the wall-clock stamp are identical to the historical monolithic
+    /// loop (the bit-identity tests in `prop_chunked.rs` pin this).
     pub(crate) fn run_with<S: EventSink>(&mut self, delivery: &mut S) -> Result<Outcome> {
-        let t0 = Instant::now();
-        let mut stats = ExecStats::default();
-        let mut bb = 0u32;
-        let prog = self.prog;
-        let blocks = &prog.func.blocks;
-        loop {
-            let block = blocks
-                .get(bb as usize)
-                .with_context(|| format!("bad block id {bb}"))?;
-            delivery.block_boundary(block.instrs.len());
+        let mut st = self.start();
+        while !st.done {
+            delivery.block_boundary(self.upcoming(&st)?);
             if let Some(e) = delivery.take_error() {
                 // a supervision fault (injected error, watchdog expiry)
                 // raised at the flush — bail on the block boundary
                 return Err(e);
             }
-            stats.dyn_blocks += 1;
-            delivery.event(TraceEvent::BlockEnter { block: bb });
-
-            for ins in &block.instrs {
-                stats.dyn_instrs += 1;
-                if stats.dyn_instrs > self.instr_limit {
-                    bail!(
-                        "instruction limit exceeded ({}) in {}",
-                        self.instr_limit,
-                        self.prog.func.name
-                    );
-                }
-                let mem_ev = self.exec_instr(ins, &mut stats)?;
-                delivery.event(TraceEvent::Instr(InstrEvent {
-                    op: ins.op,
-                    dst: ins.dst,
-                    srcs: ins.srcs,
-                    n_srcs: ins.n_srcs,
-                    mem: mem_ev,
-                    block: bb,
-                }));
-            }
-
-            match &block.term {
-                Terminator::Jmp(t) => bb = *t,
-                Terminator::Br { cond, then_, else_ } => {
-                    let taken = self.reg(*cond).truthy();
-                    stats.dyn_branches += 1;
-                    delivery.event(TraceEvent::Branch { block: bb, taken });
-                    bb = if taken { *then_ } else { *else_ };
-                }
-                Terminator::Ret(r) => {
-                    delivery.finish();
-                    if let Some(e) = delivery.take_error() {
-                        return Err(e);
-                    }
-                    let ret = r.map(|r| self.reg(r));
-                    stats.wall_s = t0.elapsed().as_secs_f64();
-                    return Ok(Outcome { ret, stats });
-                }
-            }
+            self.step_block(&mut st, delivery)?;
         }
+        delivery.finish();
+        if let Some(e) = delivery.take_error() {
+            return Err(e);
+        }
+        st.stats.wall_s = st.t0.elapsed().as_secs_f64();
+        Ok(Outcome { ret: st.ret, stats: st.stats })
     }
+}
+
+/// Resumable interpreter cursor: the block program counter plus the run
+/// statistics accumulated so far. Produced by [`Machine::start`], advanced
+/// one block at a time by [`Machine::step_block`]. The pull-based
+/// [`crate::trace::InterpSource`] adapter holds one of these to fill
+/// [`EventChunk`]s on demand.
+pub(crate) struct StepState {
+    bb: u32,
+    pub(crate) stats: ExecStats,
+    t0: Instant,
+    pub(crate) done: bool,
+    ret: Option<Value>,
 }
 
 /// One-shot convenience: build a machine, run (chunked delivery), return

@@ -9,6 +9,9 @@
 //! * [`analysis`] — streaming trace analyzers: instruction mix, branch
 //!   entropy, memory entropy, data-temporal-reuse / spatial locality, ILP,
 //!   DLP, BBLP, PBBLP (the paper's §II metrics).
+//! * [`trace`] — trace ingestion: the `TraceSource` abstraction, the
+//!   versioned `.pallas-trace` binary chunk format, and the record/replay
+//!   writer/reader pair.
 //! * [`traffic`] — streaming memory-traffic subsystem: one-pass miss-ratio
 //!   curves, an inclusive/exclusive L1→L2→LLC hierarchy replay and
 //!   post-hierarchy DRAM byte accounting from the chunk lanes (the
@@ -35,6 +38,7 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod testkit;
+pub mod trace;
 pub mod traffic;
 pub mod util;
 pub mod workloads;

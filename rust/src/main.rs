@@ -5,13 +5,17 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use pisa_nmc::analysis::MetricSet;
+use pisa_nmc::analysis::{AnalyzerStack, MetricSet};
 use pisa_nmc::cli::{self, Args};
 use pisa_nmc::coordinator::{self, figures, AppOutcome, OnError, PipelineCfg, SuitePolicy};
 use pisa_nmc::fault::{FaultPlan, SuperviseOpts};
-use pisa_nmc::interp::{PipelineMode, Workers};
+use pisa_nmc::interp::{
+    run_offload, run_sharded, ChunkLanes, Instrument, LaneMask, Machine, PipelineMode, TraceEvent,
+    Workers,
+};
 use pisa_nmc::report::save_json;
 use pisa_nmc::runtime::Runtime;
+use pisa_nmc::trace::{required_lanes, TraceMeta, TraceWriter};
 use pisa_nmc::traffic::{HierarchyPolicy, MrcMode, TrafficOpts};
 use pisa_nmc::workloads;
 
@@ -133,7 +137,43 @@ fn pipeline_mode(args: &Args) -> Result<PipelineMode> {
     }
 }
 
+/// Record-mode sink: fans one event stream into the analyzer stack and the
+/// trace writer. Unlike [`Fanout`](pisa_nmc::interp::Fanout), which erases its
+/// sinks to `&mut dyn Instrument` and so cannot cross threads, this pair of
+/// concrete `Send` sinks is itself `Send` — which the offload pipeline's
+/// analysis thread requires.
+struct RecordSink<'a> {
+    stack: &'a mut AnalyzerStack,
+    writer: &'a mut TraceWriter,
+}
+
+impl Instrument for RecordSink<'_> {
+    fn on_event(&mut self, ev: &TraceEvent) {
+        self.stack.on_event(ev);
+        self.writer.on_event(ev);
+    }
+
+    fn on_chunk(&mut self, events: &[TraceEvent]) {
+        self.stack.on_chunk(events);
+        self.writer.on_chunk(events);
+    }
+
+    fn on_chunk_lanes(&mut self, events: &[TraceEvent], lanes: &ChunkLanes) {
+        self.stack.on_chunk_lanes(events, lanes);
+        self.writer.on_chunk(events);
+    }
+
+    fn wants_lanes(&self) -> bool {
+        self.stack.wants_lanes()
+    }
+
+    fn lane_needs(&self) -> LaneMask {
+        self.stack.lane_needs()
+    }
+}
+
 fn run(args: Args) -> Result<()> {
+    cli::validate_trace_flags(&args)?;
     match args.command.as_str() {
         "pipeline" => {
             let scale = args.get_f64("scale", 1.0)?;
@@ -148,8 +188,13 @@ fn run(args: Args) -> Result<()> {
                 traffic: traffic_opts(&args)?,
                 policy: suite_policy(&args)?,
             };
-            let rt = load_runtime(&args);
-            let report = coordinator::run_pipeline_cfg(&cfg, rt.as_ref())?;
+            let report = match args.get("trace") {
+                Some(tp) => coordinator::run_replay_cfg(&cfg, Path::new(tp))?,
+                None => {
+                    let rt = load_runtime(&args);
+                    coordinator::run_pipeline_cfg(&cfg, rt.as_ref())?
+                }
+            };
             print!("{}", report.render_all());
             // perf trend line for CI logs: suite-level profiler throughput
             eprintln!(
@@ -189,32 +234,50 @@ fn run(args: Args) -> Result<()> {
             Ok(())
         }
         "analyze" => {
-            let name = args.require("kernel")?;
-            let k = workloads::by_name(name)?;
-            let n = args.get_usize("n", k.default_n())?;
-            let seed = args.get_u64("seed", 42)?;
             let metrics = metric_set(&args)?;
             let mode = pipeline_mode(&args)?;
             let traffic = traffic_opts(&args)?;
-            let sup = supervise_opts(&args)?;
-            let r = match coordinator::profile_app_supervised(
-                k.as_ref(),
-                n,
-                seed,
-                metrics,
-                mode,
-                traffic,
-                sup,
-            ) {
-                AppOutcome::Ok(r) => *r,
-                AppOutcome::Failed(f) => bail!("{}: {}", f.name, f.error),
+            let (r, prov) = match args.get("trace") {
+                Some(tp) => {
+                    let (r, prov) = coordinator::replay_app(Path::new(tp), metrics, mode, traffic)?;
+                    (r, Some(prov))
+                }
+                None => {
+                    let name = args.require("kernel")?;
+                    let k = workloads::by_name(name)?;
+                    let n = args.get_usize("n", k.default_n())?;
+                    let seed = args.get_u64("seed", 42)?;
+                    let sup = supervise_opts(&args)?;
+                    let r = match coordinator::profile_app_supervised(
+                        k.as_ref(),
+                        n,
+                        seed,
+                        metrics,
+                        mode,
+                        traffic,
+                        sup,
+                    ) {
+                        AppOutcome::Ok(r) => *r,
+                        AppOutcome::Failed(f) => bail!("{}: {}", f.name, f.error),
+                    };
+                    (r, None)
+                }
             };
             if args.has("json") {
                 let mut j = r.metrics.to_json();
                 j.set("edp", r.cmp.to_json());
+                if let Some(p) = &prov {
+                    j.set("trace", p.to_json());
+                }
                 println!("{}", j.to_string_pretty());
             } else {
                 println!("{} (n={})", r.name, r.n);
+                if let Some(p) = &prov {
+                    println!(
+                        "  replayed trace    {} ({} chunks, {} events)",
+                        p.path, p.chunks, p.events
+                    );
+                }
                 println!("  dyn instrs        {}", r.metrics.exec.dyn_instrs);
                 println!(
                     "  profile rate      {:.2}M events/s ({} pipeline)",
@@ -269,6 +332,60 @@ fn run(args: Args) -> Result<()> {
                 println!("  speedup           {:.3}x", r.cmp.speedup());
                 println!("  NMC suitable      {}", r.cmp.nmc_suitable());
             }
+            Ok(())
+        }
+        "record" => {
+            let out_path = args.require("record-out")?;
+            let name = args.require("kernel")?;
+            let k = workloads::by_name(name)?;
+            let n = args.get_usize("n", k.default_n())?;
+            let seed = args.get_u64("seed", 42)?;
+            let metrics = metric_set(&args)?;
+            let mode = pipeline_mode(&args)?;
+            let traffic = traffic_opts(&args)?;
+            let prog = k.build(n, seed);
+            let mut machine = Machine::new(&prog)?;
+            // Lanes follow the *selected* metric families: a mix-only
+            // recording is smaller but only replays mix-only analyses —
+            // the replay planner rejects anything wider with MissingLanes.
+            let lanes = required_lanes(metrics);
+            let meta = TraceMeta { app: name.to_string(), n: n as u64, seed };
+            let mut writer =
+                TraceWriter::create(Path::new(out_path), meta, machine.chunk_capacity(), lanes)?;
+            let mut stack = AnalyzerStack::new_opts(&prog, metrics, traffic);
+            let t0 = std::time::Instant::now();
+            let outcome = match mode {
+                PipelineMode::Sharded { .. } => {
+                    // analyzer and writer each ride the broadcast as a shard
+                    let mut shards: [&mut (dyn Instrument + Send); 2] = [&mut stack, &mut writer];
+                    run_sharded(&mut machine, &mut shards)?
+                }
+                PipelineMode::Offload => {
+                    let mut sink = RecordSink { stack: &mut stack, writer: &mut writer };
+                    run_offload(&mut machine, &mut sink)?
+                }
+                PipelineMode::Inline => {
+                    let mut sink = RecordSink { stack: &mut stack, writer: &mut writer };
+                    machine.run(&mut sink)?
+                }
+            };
+            writer.finish()?;
+            let prov = writer.provenance(Path::new(out_path));
+            let mut stats = outcome.stats;
+            stats.wall_s = t0.elapsed().as_secs_f64();
+            let (m, _) = stack.finalize(stats);
+            if args.has("json") {
+                let mut j = m.to_json();
+                j.set("trace", prov.to_json());
+                println!("{}", j.to_string_pretty());
+            } else {
+                println!("recorded {name} (n={n}, seed={seed}) -> {out_path}");
+                println!("  events     {}", prov.events);
+                println!("  chunks     {} (capacity {})", prov.chunks, prov.chunk_capacity);
+                println!("  lanes      {}", prov.lanes);
+                println!("  dyn instrs {}", m.exec.dyn_instrs);
+            }
+            eprintln!("wrote {out_path}");
             Ok(())
         }
         "figure" => {

@@ -1,0 +1,401 @@
+//! Wire-format primitives for `.pallas-trace` files: lane bits, varint /
+//! zigzag coding, FNV-1a checksums, header metadata and the typed
+//! [`TraceError`] taxonomy. The byte-for-byte layout is specified in the
+//! [`crate::trace`] module doc; [`crate::trace::TraceWriter`] and
+//! [`crate::trace::TraceReader`] are the only encoder/decoder pair.
+
+use std::fmt;
+
+use crate::analysis::{Metric, MetricSet};
+use crate::util::Json;
+
+/// File magic, offset 0: identifies a `.pallas-trace` stream.
+pub const MAGIC: [u8; 8] = *b"PLSTRACE";
+/// Trailing magic closing the footer — its absence means the recording
+/// process died before [`crate::trace::TraceWriter::finish`].
+pub const END_MAGIC: [u8; 8] = *b"PLSTEOF\0";
+/// The one format version this build reads and writes. Readers reject any
+/// other version with [`TraceError::VersionMismatch`]; additive evolution
+/// (new lanes) reuses the version by allocating spare [`TraceLanes`] bits.
+pub const FORMAT_VERSION: u16 = 1;
+/// Footer sentinel in the frame-length slot: no more frames follow.
+pub const FOOTER_SENTINEL: u32 = u32::MAX;
+/// Hard cap on the header's app-name length — a corrupt length field must
+/// not trigger a giant allocation.
+pub const MAX_NAME_LEN: u32 = 4096;
+
+/// Which event lanes a trace carries, one bit per frame section. The low
+/// four bits mirror [`crate::interp::LaneMask`] (tags / addrs / sizes /
+/// store bitset — the SoA `ChunkLanes` layout); `DEPS` and `BLOCKS` extend
+/// it with the operand and block-id structure the dependency and
+/// block-parallelism analyzers fold from the full event slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceLanes(u16);
+
+impl TraceLanes {
+    pub const NONE: TraceLanes = TraceLanes(0);
+    /// Op-tag lane — mandatory: it carries the event structure every other
+    /// lane is parsed against, so writers always include it.
+    pub const TAGS: TraceLanes = TraceLanes(1 << 0);
+    /// Memory-access addresses (delta + zigzag varint coded).
+    pub const ADDRS: TraceLanes = TraceLanes(1 << 1);
+    /// Memory-access sizes in bytes.
+    pub const SIZES: TraceLanes = TraceLanes(1 << 2);
+    /// Store bitset over the packed accesses.
+    pub const STORES: TraceLanes = TraceLanes(1 << 3);
+    /// Operand structure per instruction (dst, n_srcs, srcs).
+    pub const DEPS: TraceLanes = TraceLanes(1 << 4);
+    /// Basic-block ids (frame open block + one id per block entry).
+    pub const BLOCKS: TraceLanes = TraceLanes(1 << 5);
+    pub const ALL: TraceLanes = TraceLanes(0b11_1111);
+
+    /// Number of lane slots the footer reserves a checksum for.
+    pub const COUNT: usize = 6;
+    /// Lane names in bit order (checksum slot order).
+    pub const NAMES: [&'static str; TraceLanes::COUNT] =
+        ["tags", "addrs", "sizes", "stores", "deps", "blocks"];
+
+    #[inline]
+    pub fn contains(self, other: TraceLanes) -> bool {
+        self.0 & other.0 == other.0
+    }
+
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Lanes in `self` but not in `have` (what a replay is missing).
+    #[inline]
+    pub fn minus(self, have: TraceLanes) -> TraceLanes {
+        TraceLanes(self.0 & !have.0)
+    }
+
+    /// Raw bits as stored in the file header.
+    #[inline]
+    pub fn bits(self) -> u16 {
+        self.0
+    }
+
+    /// Decode header bits, dropping any bit this build does not know (a
+    /// newer writer within the same format version may add lanes; unknown
+    /// lanes cannot be parsed, so the version must change for that).
+    #[inline]
+    pub fn from_bits(bits: u16) -> TraceLanes {
+        TraceLanes(bits & TraceLanes::ALL.0)
+    }
+
+    /// Names of the lanes present, in bit order.
+    pub fn names(self) -> Vec<&'static str> {
+        (0..TraceLanes::COUNT)
+            .filter(|i| self.0 >> i & 1 == 1)
+            .map(|i| TraceLanes::NAMES[i])
+            .collect()
+    }
+}
+
+impl std::ops::BitOr for TraceLanes {
+    type Output = TraceLanes;
+
+    #[inline]
+    fn bitor(self, rhs: TraceLanes) -> TraceLanes {
+        TraceLanes(self.0 | rhs.0)
+    }
+}
+
+impl std::ops::BitOrAssign for TraceLanes {
+    #[inline]
+    fn bitor_assign(&mut self, rhs: TraceLanes) {
+        self.0 |= rhs.0;
+    }
+}
+
+impl fmt::Display for TraceLanes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.names().join("+"))
+    }
+}
+
+/// Trace lanes one metric family needs to reconstruct the events it folds.
+/// `TAGS` is implied everywhere (it carries the event structure itself).
+pub fn lanes_for(metric: Metric) -> TraceLanes {
+    match metric {
+        Metric::Mix => TraceLanes::TAGS,
+        Metric::Branch => TraceLanes::TAGS | TraceLanes::BLOCKS,
+        Metric::MemEntropy | Metric::Reuse => TraceLanes::TAGS | TraceLanes::ADDRS,
+        Metric::Ilp => TraceLanes::TAGS | TraceLanes::DEPS,
+        Metric::Dlp => TraceLanes::TAGS | TraceLanes::DEPS | TraceLanes::BLOCKS,
+        Metric::Bblp | Metric::Pbblp => TraceLanes::TAGS | TraceLanes::BLOCKS,
+        Metric::Traffic => {
+            TraceLanes::TAGS | TraceLanes::ADDRS | TraceLanes::SIZES | TraceLanes::STORES
+        }
+    }
+}
+
+/// Union of [`lanes_for`] over every family in `metrics` — what `record`
+/// writes for a `--metrics` selection, and what replay must find present.
+pub fn required_lanes(metrics: MetricSet) -> TraceLanes {
+    Metric::ALL
+        .iter()
+        .filter(|m| metrics.contains(**m))
+        .fold(TraceLanes::TAGS, |acc, m| acc | lanes_for(*m))
+}
+
+/// Plan-time lane check for replay: every selected family's lanes must be
+/// present in the trace, else the analyzers would silently fold zeroed
+/// lanes. Fails with [`TraceError::MissingLanes`] naming the families.
+pub fn check_lanes(have: TraceLanes, metrics: MetricSet) -> Result<(), TraceError> {
+    let families: Vec<String> = Metric::ALL
+        .iter()
+        .filter(|m| metrics.contains(**m) && !have.contains(lanes_for(**m)))
+        .map(|m| m.name().to_string())
+        .collect();
+    if families.is_empty() {
+        Ok(())
+    } else {
+        Err(TraceError::MissingLanes { families, missing: required_lanes(metrics).minus(have) })
+    }
+}
+
+/// App/workload identity recorded in the file header, enough for replay to
+/// rebuild the analyzer stack's program context (`registry` kernel name +
+/// build parameters).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceMeta {
+    pub app: String,
+    pub n: u64,
+    pub seed: u64,
+}
+
+/// Decoded file header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceHeader {
+    pub version: u16,
+    pub lanes: TraceLanes,
+    pub chunk_capacity: u32,
+    pub meta: TraceMeta,
+}
+
+/// Everything the report's `"trace"` provenance section records about a
+/// replayed (or freshly recorded) trace file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceProvenance {
+    pub path: String,
+    pub version: u16,
+    pub lanes: TraceLanes,
+    pub chunk_capacity: u32,
+    pub app: String,
+    pub n: u64,
+    pub seed: u64,
+    /// Chunk frames decoded (or written).
+    pub chunks: u64,
+    /// Events decoded (or written).
+    pub events: u64,
+}
+
+impl TraceProvenance {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("path", self.path.as_str());
+        j.set("format_version", self.version as u64);
+        let lanes: Vec<Json> = self.lanes.names().into_iter().map(Json::from).collect();
+        j.set("lanes", lanes);
+        j.set("chunk_capacity", self.chunk_capacity as u64);
+        j.set("app", self.app.as_str());
+        j.set("n", self.n);
+        j.set("seed", self.seed);
+        j.set("chunks", self.chunks);
+        j.set("events", self.events);
+        j
+    }
+}
+
+/// Typed decode/validation failures, in the PR-7 taxonomy style: carried
+/// inside `anyhow::Error` and recovered with `downcast_ref` where callers
+/// need to branch on the kind. Every corruption mode maps to exactly one
+/// variant — a corrupt trace must never panic the replayer or silently
+/// zero an analyzer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceError {
+    /// The first 8 bytes are not [`MAGIC`]: not a `.pallas-trace` file.
+    BadMagic,
+    /// Header carries a format version this build does not read.
+    VersionMismatch { found: u16, supported: u16 },
+    /// The stream ended early: mid-header, mid-frame, or before the footer
+    /// (the signature a recording run left when it died before `finish` —
+    /// every complete frame before the cut remains decodable).
+    Truncated { what: &'static str },
+    /// A lane's footer checksum does not match the bytes decoded.
+    ChecksumMismatch { lane: &'static str, stored: u64, computed: u64 },
+    /// Structurally invalid contents (impossible lengths, counts that
+    /// disagree, trailing bytes) under a well-formed framing.
+    Malformed { what: &'static str },
+    /// Plan-time replay check: the selected metric families need lanes the
+    /// trace does not carry.
+    MissingLanes { families: Vec<String>, missing: TraceLanes },
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceError::BadMagic => write!(f, "not a .pallas-trace file (bad magic)"),
+            TraceError::VersionMismatch { found, supported } => write!(
+                f,
+                "unsupported trace format version {found} (this build reads version {supported})"
+            ),
+            TraceError::Truncated { what } => write!(f, "truncated trace: {what}"),
+            TraceError::ChecksumMismatch { lane, stored, computed } => write!(
+                f,
+                "trace {lane} lane checksum mismatch (stored {stored:#018x}, computed {computed:#018x})"
+            ),
+            TraceError::Malformed { what } => write!(f, "malformed trace: {what}"),
+            TraceError::MissingLanes { families, missing } => write!(
+                f,
+                "trace lacks the {missing} lane(s) required by metric families: {} \
+                 (re-record with a wider --metrics selection)",
+                families.join(", ")
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// FNV-1a 64-bit offset basis — the initial accumulator for every lane
+/// checksum (absent lanes keep it, so all six footer slots verify).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into an FNV-1a 64 accumulator.
+#[inline]
+pub fn fnv1a(mut acc: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        acc ^= b as u64;
+        acc = acc.wrapping_mul(FNV_PRIME);
+    }
+    acc
+}
+
+/// Append an LEB128 varint.
+#[inline]
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Read an LEB128 varint from `buf[*pos..]`, advancing `pos`. `None` on
+/// overrun or a >10-byte encoding.
+#[inline]
+pub fn get_varint(buf: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos)?;
+        *pos += 1;
+        if shift >= 64 {
+            return None;
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Some(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Zigzag-encode a signed delta for varint coding.
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrips_edge_values() {
+        let mut buf = Vec::new();
+        let cases = [0u64, 1, 0x7f, 0x80, 0x3fff, 0x4000, u32::MAX as u64, u64::MAX];
+        for &v in &cases {
+            buf.clear();
+            put_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_varint(&buf, &mut pos), Some(v), "value {v:#x}");
+            assert_eq!(pos, buf.len());
+        }
+        // overrun: an empty buffer yields None, not a panic
+        let mut pos = 0;
+        assert_eq!(get_varint(&[], &mut pos), None);
+        // unterminated continuation bytes yield None
+        let mut pos = 0;
+        assert_eq!(get_varint(&[0x80; 11], &mut pos), None);
+    }
+
+    #[test]
+    fn zigzag_roundtrips_and_orders_small_magnitudes_first() {
+        for v in [0i64, 1, -1, 2, -2, i64::MAX, i64::MIN, 12345, -98765] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        assert!(zigzag(-1) < zigzag(64));
+        assert_eq!(zigzag(0), 0);
+    }
+
+    #[test]
+    fn lane_algebra_and_names() {
+        let t = TraceLanes::TAGS | TraceLanes::ADDRS;
+        assert!(t.contains(TraceLanes::TAGS));
+        assert!(!t.contains(TraceLanes::DEPS));
+        assert_eq!(t.names(), vec!["tags", "addrs"]);
+        assert_eq!(TraceLanes::ALL.names().len(), TraceLanes::COUNT);
+        assert_eq!(TraceLanes::from_bits(t.bits()), t);
+        // unknown high bits are dropped on decode
+        assert_eq!(TraceLanes::from_bits(0xffff), TraceLanes::ALL);
+        assert_eq!(TraceLanes::ALL.minus(t), {
+            TraceLanes::SIZES | TraceLanes::STORES | TraceLanes::DEPS | TraceLanes::BLOCKS
+        });
+        assert!(TraceLanes::NONE.is_empty());
+    }
+
+    #[test]
+    fn required_lanes_cover_selected_families() {
+        assert_eq!(required_lanes(MetricSet::from_names("mix").unwrap()), TraceLanes::TAGS);
+        let traffic = required_lanes(MetricSet::from_names("traffic").unwrap());
+        assert!(traffic.contains(TraceLanes::ADDRS | TraceLanes::SIZES | TraceLanes::STORES));
+        assert_eq!(required_lanes(MetricSet::all()), TraceLanes::ALL);
+    }
+
+    #[test]
+    fn check_lanes_names_the_starved_families() {
+        // a tags-only trace satisfies mix but not the rest
+        assert!(check_lanes(TraceLanes::TAGS, MetricSet::from_names("mix").unwrap()).is_ok());
+        let err = check_lanes(TraceLanes::TAGS, MetricSet::all()).unwrap_err();
+        let TraceError::MissingLanes { families, missing } = &err else {
+            panic!("expected MissingLanes, got {err}");
+        };
+        assert!(families.contains(&"traffic".to_string()));
+        assert!(families.contains(&"ilp".to_string()));
+        assert!(!families.contains(&"mix".to_string()));
+        assert!(missing.contains(TraceLanes::ADDRS));
+        assert!(!missing.contains(TraceLanes::TAGS));
+        // the error formats the family list for the CLI surface
+        assert!(err.to_string().contains("traffic"));
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a(FNV_OFFSET, b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(FNV_OFFSET, b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(FNV_OFFSET, b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -1,0 +1,384 @@
+//! Trace ingestion subsystem: pull-based event sources and the versioned
+//! `.pallas-trace` binary chunk format with a record/replay pair.
+//!
+//! The analyzer stack used to be fed push-style by `Machine::run` alone.
+//! This module inverts that: a [`TraceSource`] produces [`EventChunk`]s on
+//! demand, the interpreter is just one source behind the [`InterpSource`]
+//! adapter, and a recorded file is another ([`TraceReader`]). Everything
+//! downstream — all four delivery modes, both hierarchy policies, exact and
+//! sampled MRC — runs unchanged on either, and the round-trip
+//! interpret → serialize → decode → analyze is bit-identical to direct
+//! analysis (pinned by `rust/tests/prop_trace.rs`).
+//!
+//! # `.pallas-trace` wire format, version 1
+//!
+//! All integers are little-endian. Varints are LEB128 over `u64` (7 data
+//! bits per byte, high bit = continuation, at most 10 bytes); signed deltas
+//! are zigzag-folded first (`(d << 1) ^ (d >> 63)`), so small magnitudes of
+//! either sign encode in one byte. The file is header, then length-prefixed
+//! chunk frames, then a footer:
+//!
+//! ## File header
+//!
+//! | offset | size | field |
+//! |-------:|-----:|-------|
+//! | 0      | 8    | magic `"PLSTRACE"` |
+//! | 8      | 2    | format version (`u16`, this build: 1) |
+//! | 10     | 2    | lane mask (`u16`, [`TraceLanes`] bits) |
+//! | 12     | 4    | chunk capacity (`u32`, max events per frame) |
+//! | 16     | 8    | workload scale `n` (`u64`) |
+//! | 24     | 8    | workload seed (`u64`) |
+//! | 32     | 4    | app-name length (`u32`) |
+//! | 36     | var  | app name (UTF-8) |
+//!
+//! ## Chunk frames
+//!
+//! Each frame is a `u32` body length followed by the body — the SoA
+//! [`ChunkLanes`](crate::interp::ChunkLanes) layout serialized directly,
+//! one section per recorded lane, in this fixed order (absent lanes are
+//! simply omitted):
+//!
+//! | section | contents |
+//! |---------|----------|
+//! | count   | `u32` event count `n` (≤ header chunk capacity) |
+//! | tags    | `n` bytes: `Op::index()`, or `0xFD` block entry / `0xFE` branch taken / `0xFF` branch not taken |
+//! | blocks  | varint *open block* (block current at frame start), then one varint block id per `0xFD` tag |
+//! | deps    | per instruction tag: varint `dst+1` (0 = none), `u8` source count (≤ 3), then that many varint register ids |
+//! | addrs   | per memory access (load/store tags): zigzag varint delta from the previous access address (previous resets to 0 at each frame start) |
+//! | sizes   | per memory access: `u8` size in bytes |
+//! | stores  | bitset, `ceil(n_mem/8)` bytes, LSB-first: bit *i* set ⇔ access *i* is a store |
+//!
+//! Load and store tags are exactly the mem-bearing events: their count
+//! determines the addrs/sizes/stores section lengths. Branch and
+//! instruction events belong to the block opened by the most recent `0xFD`
+//! tag (or the frame's open block before the first one).
+//!
+//! ## Footer
+//!
+//! | size | field |
+//! |-----:|-------|
+//! | 4    | sentinel `0xFFFF_FFFF` in the frame-length slot |
+//! | 8    | total chunk frames (`u64`) |
+//! | 8    | total events (`u64`) |
+//! | 48   | six `u64` FNV-1a 64 checksums, one per lane in bit order (tags, addrs, sizes, stores, deps, blocks), each accumulated over that lane's section bytes across all frames; absent lanes keep the FNV offset basis |
+//! | 8    | end magic `"PLSTEOF\0"` |
+//!
+//! A missing footer is the signature of a recording that died mid-run:
+//! [`TraceWriter`]'s drop path flushes complete frames but never the
+//! footer, and [`TraceReader`] streams those frames before reporting
+//! [`TraceError::Truncated`].
+//!
+//! ## Versioning policy
+//!
+//! The version field covers the whole layout: readers reject any version
+//! they were not built for ([`TraceError::VersionMismatch`]) rather than
+//! guess. Adding a *lane* is additive within a version — writers mark the
+//! bit, old payloads stay parseable — but any change to an existing
+//! section's encoding, the header, or the footer bumps the version.
+//! Spare lane-mask bits are reserved and must be zero; readers drop bits
+//! they do not know.
+
+mod format;
+mod reader;
+mod writer;
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, bail, Result};
+
+pub use format::{
+    check_lanes, fnv1a, lanes_for, required_lanes, TraceError, TraceHeader, TraceLanes, TraceMeta,
+    TraceProvenance, END_MAGIC, FNV_OFFSET, FOOTER_SENTINEL, FORMAT_VERSION, MAGIC,
+};
+pub use reader::TraceReader;
+pub use writer::TraceWriter;
+
+use crate::interp::{EventChunk, ExecStats, Instrument, LaneMask, Machine, TraceEvent};
+use crate::interp::machine::StepState;
+use crate::ir::Program;
+
+/// What a [`TraceSource::next_chunk`] call produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkStatus {
+    /// The chunk holds the next batch of events (possibly a short tail).
+    Delivered,
+    /// The stream is exhausted; the chunk was left untouched.
+    Done,
+}
+
+/// A pull-based producer of event chunks — the ingestion side of the
+/// pipeline. The IR interpreter implements it behind [`InterpSource`]; a
+/// recorded `.pallas-trace` file implements it as [`TraceReader`]. The
+/// analysis layer consumes a source through the `profile_source_*` entry
+/// points, so every analyzer runs unchanged on either origin.
+pub trait TraceSource {
+    /// Fill `chunk` (cleared by the callee) with the next events, in trace
+    /// order. Returns [`ChunkStatus::Done`] when the stream is exhausted;
+    /// errors are terminal (interpreter fault, decode failure).
+    fn next_chunk(&mut self, chunk: &mut EventChunk) -> Result<ChunkStatus>;
+
+    /// Natural chunk capacity of this source; drivers size their pooled
+    /// chunks with it.
+    fn chunk_capacity(&self) -> usize;
+
+    /// Which event lanes this source actually populates. Live
+    /// interpretation carries everything; a recorded trace only what was
+    /// written — replay planning checks this against the selected metric
+    /// families ([`check_lanes`]).
+    fn lanes(&self) -> TraceLanes;
+
+    /// Execution statistics accumulated so far (wall time not included —
+    /// the driver owns the clock).
+    fn stats(&self) -> ExecStats;
+}
+
+/// The IR interpreter as a [`TraceSource`]: a [`Machine`] driven one basic
+/// block at a time, filling the caller's chunk at the same block-boundary
+/// flush policy as push-mode delivery. A block bigger than the remaining
+/// headroom spills into a side queue drained by the next call, so no
+/// program shape can overflow a chunk.
+pub struct InterpSource<'p> {
+    machine: Machine<'p>,
+    st: StepState,
+    spill: VecDeque<TraceEvent>,
+}
+
+impl<'p> InterpSource<'p> {
+    pub fn new(prog: &'p Program) -> Result<Self> {
+        let machine = Machine::new(prog)?;
+        let st = machine.start();
+        Ok(InterpSource { machine, st, spill: VecDeque::new() })
+    }
+
+    /// The machine, for post-run memory inspection.
+    pub fn machine(&self) -> &Machine<'p> {
+        &self.machine
+    }
+}
+
+/// Event sink for one `step_block` call: fill the chunk, overflow to the
+/// spill queue.
+struct SpillSink<'a> {
+    chunk: &'a mut EventChunk,
+    spill: &'a mut VecDeque<TraceEvent>,
+}
+
+impl crate::interp::machine::EventSink for SpillSink<'_> {
+    #[inline]
+    fn event(&mut self, ev: TraceEvent) {
+        if self.chunk.is_full() {
+            self.spill.push_back(ev);
+        } else {
+            self.chunk.push(ev);
+        }
+    }
+
+    #[inline]
+    fn block_boundary(&mut self, _upcoming: usize) {}
+
+    fn finish(&mut self) {}
+}
+
+impl TraceSource for InterpSource<'_> {
+    fn next_chunk(&mut self, chunk: &mut EventChunk) -> Result<ChunkStatus> {
+        chunk.clear();
+        while let Some(ev) = self.spill.pop_front() {
+            chunk.push(ev);
+            if chunk.is_full() {
+                return Ok(ChunkStatus::Delivered);
+            }
+        }
+        loop {
+            if self.st.done {
+                return Ok(if chunk.is_empty() {
+                    ChunkStatus::Done
+                } else {
+                    ChunkStatus::Delivered
+                });
+            }
+            let upcoming = self.machine.upcoming(&self.st)?;
+            if !chunk.is_empty() && chunk.needs_flush_for_block(upcoming) {
+                return Ok(ChunkStatus::Delivered);
+            }
+            let mut sink = SpillSink { chunk: &mut *chunk, spill: &mut self.spill };
+            self.machine.step_block(&mut self.st, &mut sink)?;
+            if chunk.is_full() {
+                return Ok(ChunkStatus::Delivered);
+            }
+        }
+    }
+
+    fn chunk_capacity(&self) -> usize {
+        self.machine.chunk_capacity()
+    }
+
+    fn lanes(&self) -> TraceLanes {
+        TraceLanes::ALL
+    }
+
+    fn stats(&self) -> ExecStats {
+        self.st.stats.clone()
+    }
+}
+
+/// Drive a source to completion on the caller thread, flushing each chunk
+/// into `sink` (the inline delivery shape).
+pub fn replay_chunked(source: &mut dyn TraceSource, sink: &mut dyn Instrument) -> Result<()> {
+    let mut chunk = EventChunk::with_capacity(source.chunk_capacity());
+    loop {
+        match source.next_chunk(&mut chunk)? {
+            ChunkStatus::Done => return Ok(()),
+            ChunkStatus::Delivered => chunk.flush_into(sink),
+        }
+    }
+}
+
+/// Drive a source with one `on_event` virtual call per event — the
+/// un-batched reference path for the bit-identity tests.
+pub fn replay_per_event(source: &mut dyn TraceSource, sink: &mut dyn Instrument) -> Result<()> {
+    let mut chunk = EventChunk::with_capacity(source.chunk_capacity());
+    loop {
+        match source.next_chunk(&mut chunk)? {
+            ChunkStatus::Done => return Ok(()),
+            ChunkStatus::Delivered => {
+                for ev in chunk.events() {
+                    sink.on_event(ev);
+                }
+                chunk.clear();
+            }
+        }
+    }
+}
+
+/// Drive a source with the whole sink stack on a dedicated analysis thread
+/// behind a bounded recycled-chunk channel (the offload delivery shape).
+/// The producer stays on the caller thread, so the source needs no `Send`
+/// bound. Strict semantics: a dead or panicked analysis thread is an
+/// error, not a degraded run.
+pub fn replay_offload(
+    source: &mut dyn TraceSource,
+    sink: &mut (dyn Instrument + Send),
+) -> Result<()> {
+    let cap = source.chunk_capacity();
+    std::thread::scope(|scope| {
+        let (full_tx, full_rx) = mpsc::sync_channel::<EventChunk>(2);
+        let (free_tx, free_rx) = mpsc::channel::<EventChunk>();
+        for _ in 0..4 {
+            let _ = free_tx.send(EventChunk::with_capacity(cap));
+        }
+        let worker = scope.spawn(move || {
+            while let Ok(mut chunk) = full_rx.recv() {
+                chunk.flush_into(&mut *sink);
+                if free_tx.send(chunk).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut result: Result<()> = Ok(());
+        loop {
+            let mut chunk = match free_rx.recv() {
+                Ok(c) => c,
+                Err(_) => break, // worker gone; join below reports why
+            };
+            match source.next_chunk(&mut chunk) {
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
+                Ok(ChunkStatus::Done) => break,
+                Ok(ChunkStatus::Delivered) => {
+                    if full_tx.send(chunk).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+        drop(full_tx);
+        if worker.join().is_err() {
+            bail!("replay analysis thread panicked");
+        }
+        result
+    })
+}
+
+/// Drive a source broadcasting every chunk to per-family analyzer shards on
+/// their own threads (the sharded delivery shape): chunks are shared as
+/// `Arc<EventChunk>` with lanes pre-built from the union of shard needs,
+/// and recycled through a countdown-return channel once every shard has
+/// dropped its handle. Strict semantics: a dead shard fails the replay.
+pub fn replay_sharded(
+    source: &mut dyn TraceSource,
+    shards: &mut [&mut (dyn Instrument + Send)],
+) -> Result<()> {
+    if shards.is_empty() {
+        bail!("sharded replay needs at least one analyzer shard");
+    }
+    let union_needs = shards.iter().fold(LaneMask::NONE, |acc, s| acc | s.lane_needs());
+    let cap = source.chunk_capacity();
+    let n_shards = shards.len();
+    std::thread::scope(|scope| {
+        let (ret_tx, ret_rx) = mpsc::channel::<Arc<EventChunk>>();
+        let mut senders = Vec::with_capacity(n_shards);
+        let mut handles = Vec::with_capacity(n_shards);
+        for shard in shards.iter_mut() {
+            let (tx, rx) = mpsc::sync_channel::<Arc<EventChunk>>(2);
+            senders.push(tx);
+            let ret_tx = ret_tx.clone();
+            handles.push(scope.spawn(move || {
+                while let Ok(chunk) = rx.recv() {
+                    shard.on_chunk_lanes(chunk.events(), chunk.lanes());
+                    let _ = ret_tx.send(chunk);
+                }
+            }));
+        }
+        drop(ret_tx);
+        let mut spares: Vec<EventChunk> =
+            (0..2 * n_shards + 2).map(|_| EventChunk::with_capacity(cap)).collect();
+        let mut result: Result<()> = Ok(());
+        'produce: loop {
+            // reclaim a buffer: a spare, or a returned chunk once the last
+            // shard's handle comes back (Arc strong count down to ours)
+            let mut chunk = loop {
+                if let Some(c) = spares.pop() {
+                    break c;
+                }
+                match ret_rx.recv() {
+                    Ok(arc) => {
+                        if let Ok(mut c) = Arc::try_unwrap(arc) {
+                            c.clear();
+                            break c;
+                        }
+                    }
+                    Err(_) => break 'produce, // every shard gone; join reports
+                }
+            };
+            match source.next_chunk(&mut chunk) {
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
+                Ok(ChunkStatus::Done) => break,
+                Ok(ChunkStatus::Delivered) => {
+                    if !union_needs.is_empty() {
+                        chunk.build_lanes(union_needs);
+                    }
+                    let arc = Arc::new(chunk);
+                    for tx in &senders {
+                        if tx.send(arc.clone()).is_err() {
+                            result = Err(anyhow!("replay analyzer shard died"));
+                            break 'produce;
+                        }
+                    }
+                }
+            }
+        }
+        drop(senders);
+        for h in handles {
+            if h.join().is_err() {
+                result = Err(anyhow!("replay analyzer shard panicked"));
+            }
+        }
+        result
+    })
+}

@@ -1,0 +1,444 @@
+//! `TraceReader`: decodes `.pallas-trace` files back into pooled
+//! [`EventChunk`]s as a [`TraceSource`], with full validation — bad magic,
+//! version mismatch, truncated stream, structural damage and per-lane
+//! checksum failures each surface as a typed
+//! [`TraceError`](super::TraceError), never a panic. Decoding is streaming:
+//! one frame per [`TraceSource::next_chunk`] call, footer verified when the
+//! sentinel is reached, so every complete frame of a truncated file is
+//! delivered before the error.
+
+use std::fs::File;
+use std::io::{self, BufReader, Read};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::format::{
+    fnv1a, get_varint, unzigzag, TraceError, TraceHeader, TraceLanes, TraceMeta, TraceProvenance,
+    END_MAGIC, FNV_OFFSET, FOOTER_SENTINEL, FORMAT_VERSION, MAGIC, MAX_NAME_LEN,
+};
+use super::{ChunkStatus, TraceSource};
+use crate::interp::{
+    EventChunk, ExecStats, InstrEvent, MemAccess, TraceEvent, TAG_BLOCK, TAG_BR_NOT, TAG_BR_TAKEN,
+};
+use crate::ir::{Op, Reg};
+
+/// Upper bound on encoded bytes per event (tag + block varint + operand
+/// structure + address varint + size + store bit, with slack) — used to
+/// reject implausible frame lengths before allocating.
+const MAX_EVENT_BYTES: usize = 40;
+
+/// Read exactly `buf.len()` bytes, mapping a clean-at-`what` EOF to the
+/// typed [`TraceError::Truncated`].
+fn read_exact_or(r: &mut impl Read, buf: &mut [u8], what: &'static str) -> Result<()> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            anyhow::Error::new(TraceError::Truncated { what })
+        } else {
+            anyhow::Error::new(e).context("reading trace file")
+        }
+    })
+}
+
+fn read_u16(r: &mut impl Read, what: &'static str) -> Result<u16> {
+    let mut b = [0u8; 2];
+    read_exact_or(r, &mut b, what)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read, what: &'static str) -> Result<u32> {
+    let mut b = [0u8; 4];
+    read_exact_or(r, &mut b, what)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read, what: &'static str) -> Result<u64> {
+    let mut b = [0u8; 8];
+    read_exact_or(r, &mut b, what)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn malformed(what: &'static str) -> anyhow::Error {
+    anyhow::Error::new(TraceError::Malformed { what })
+}
+
+/// Decoded operand structure for one instruction event.
+#[derive(Clone, Copy)]
+struct DepRec {
+    dst: Option<Reg>,
+    srcs: [Reg; 3],
+    n_srcs: u8,
+}
+
+/// Streaming `.pallas-trace` decoder; see the [`crate::trace`] module doc
+/// for the wire layout it validates against.
+pub struct TraceReader {
+    input: BufReader<File>,
+    path: PathBuf,
+    header: TraceHeader,
+    /// Block open at the next frame's start (carried across frames the
+    /// writer cut mid-block).
+    cur_block: u32,
+    chunks: u64,
+    events: u64,
+    stats: ExecStats,
+    sums: [u64; TraceLanes::COUNT],
+    done: bool,
+    // frame scratch, reused so steady-state decoding allocates nothing
+    body: Vec<u8>,
+    blocks_v: Vec<u32>,
+    deps_v: Vec<DepRec>,
+    addrs_v: Vec<u64>,
+}
+
+impl TraceReader {
+    /// Open `path` and validate the file header (magic, version, lane mask,
+    /// metadata). Frame data is only touched by subsequent
+    /// [`TraceSource::next_chunk`] calls.
+    pub fn open(path: &Path) -> Result<TraceReader> {
+        let file = File::open(path)
+            .with_context(|| format!("opening trace file {}", path.display()))?;
+        let mut input = BufReader::new(file);
+        let mut magic = [0u8; 8];
+        read_exact_or(&mut input, &mut magic, "file header")?;
+        if magic != MAGIC {
+            return Err(anyhow::Error::new(TraceError::BadMagic));
+        }
+        let version = read_u16(&mut input, "file header")?;
+        if version != FORMAT_VERSION {
+            return Err(anyhow::Error::new(TraceError::VersionMismatch {
+                found: version,
+                supported: FORMAT_VERSION,
+            }));
+        }
+        let lanes = TraceLanes::from_bits(read_u16(&mut input, "file header")?);
+        if !lanes.contains(TraceLanes::TAGS) {
+            return Err(malformed("header lane mask lacks the mandatory tags lane"));
+        }
+        let chunk_capacity = read_u32(&mut input, "file header")?;
+        if chunk_capacity == 0 || chunk_capacity > 1 << 24 {
+            return Err(malformed("header chunk capacity out of range"));
+        }
+        let n = read_u64(&mut input, "file header")?;
+        let seed = read_u64(&mut input, "file header")?;
+        let name_len = read_u32(&mut input, "file header")?;
+        if name_len > MAX_NAME_LEN {
+            return Err(malformed("header app name length out of range"));
+        }
+        let mut name = vec![0u8; name_len as usize];
+        read_exact_or(&mut input, &mut name, "file header")?;
+        let app = String::from_utf8(name).map_err(|_| malformed("app name is not UTF-8"))?;
+        Ok(TraceReader {
+            input,
+            path: path.to_path_buf(),
+            header: TraceHeader {
+                version,
+                lanes,
+                chunk_capacity,
+                meta: TraceMeta { app, n, seed },
+            },
+            cur_block: 0,
+            chunks: 0,
+            events: 0,
+            stats: ExecStats::default(),
+            sums: [FNV_OFFSET; TraceLanes::COUNT],
+            done: false,
+            body: Vec::new(),
+            blocks_v: Vec::new(),
+            deps_v: Vec::new(),
+            addrs_v: Vec::new(),
+        })
+    }
+
+    pub fn header(&self) -> &TraceHeader {
+        &self.header
+    }
+
+    /// Provenance for the report's `"trace"` section — chunk/event counts
+    /// reflect what has been decoded so far, so take it after the replay.
+    pub fn provenance(&self) -> TraceProvenance {
+        TraceProvenance {
+            path: self.path.display().to_string(),
+            version: self.header.version,
+            lanes: self.header.lanes,
+            chunk_capacity: self.header.chunk_capacity,
+            app: self.header.meta.app.clone(),
+            n: self.header.meta.n,
+            seed: self.header.meta.seed,
+            chunks: self.chunks,
+            events: self.events,
+        }
+    }
+
+    /// Verify the footer (counts, per-lane checksums, end magic) once the
+    /// sentinel frame length has been consumed.
+    fn read_footer(&mut self) -> Result<()> {
+        let chunks = read_u64(&mut self.input, "footer")?;
+        let events = read_u64(&mut self.input, "footer")?;
+        let mut sums = [0u64; TraceLanes::COUNT];
+        for sum in &mut sums {
+            *sum = read_u64(&mut self.input, "footer")?;
+        }
+        let mut end = [0u8; 8];
+        read_exact_or(&mut self.input, &mut end, "footer")?;
+        if end != END_MAGIC {
+            return Err(malformed("footer end marker"));
+        }
+        if chunks != self.chunks {
+            return Err(malformed("footer chunk count disagrees with frames"));
+        }
+        if events != self.events {
+            return Err(malformed("footer event count disagrees with frames"));
+        }
+        for (i, (&stored, &computed)) in sums.iter().zip(self.sums.iter()).enumerate() {
+            if stored != computed {
+                return Err(anyhow::Error::new(TraceError::ChecksumMismatch {
+                    lane: TraceLanes::NAMES[i],
+                    stored,
+                    computed,
+                }));
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode one frame body into `chunk` (cleared first). Reconstructs the
+    /// full [`TraceEvent`] stream; sections for absent lanes yield the
+    /// neutral defaults (block 0, no operands, address 0), which is safe
+    /// because replay planning rejects metric families whose lanes the
+    /// trace does not carry.
+    fn decode_frame(&mut self, body: &[u8], chunk: &mut EventChunk) -> Result<()> {
+        let lanes = self.header.lanes;
+        let want_blocks = lanes.contains(TraceLanes::BLOCKS);
+        let want_deps = lanes.contains(TraceLanes::DEPS);
+        let want_addrs = lanes.contains(TraceLanes::ADDRS);
+        let want_sizes = lanes.contains(TraceLanes::SIZES);
+        let want_stores = lanes.contains(TraceLanes::STORES);
+
+        if body.len() < 4 {
+            return Err(malformed("frame body shorter than its event count"));
+        }
+        let n = u32::from_le_bytes([body[0], body[1], body[2], body[3]]) as usize;
+        if n > chunk.capacity() || n > self.header.chunk_capacity as usize {
+            return Err(malformed("frame event count exceeds declared chunk capacity"));
+        }
+        let mut p = 4usize;
+
+        // tags section: one byte per event; derive the other sections' counts
+        let tags = body
+            .get(p..p + n)
+            .ok_or_else(|| malformed("tags lane overruns frame"))?;
+        p += n;
+        self.sums[0] = fnv1a(self.sums[0], tags);
+        let mut n_blocks = 0usize;
+        let mut n_instrs = 0usize;
+        let mut n_mem = 0usize;
+        for &t in tags {
+            match t {
+                TAG_BLOCK => n_blocks += 1,
+                TAG_BR_TAKEN | TAG_BR_NOT => {}
+                _ => {
+                    if Op::from_index(t as usize).is_none() {
+                        return Err(malformed("unknown op tag"));
+                    }
+                    n_instrs += 1;
+                    if t as usize == Op::Load.index() || t as usize == Op::Store.index() {
+                        n_mem += 1;
+                    }
+                }
+            }
+        }
+
+        // blocks section: the frame's open block, then one id per block entry
+        self.blocks_v.clear();
+        let mut frame_open = self.cur_block;
+        if want_blocks {
+            let start = p;
+            let open = get_varint(body, &mut p)
+                .ok_or_else(|| malformed("blocks lane overruns frame"))?;
+            frame_open =
+                u32::try_from(open).map_err(|_| malformed("block id out of range"))?;
+            for _ in 0..n_blocks {
+                let id = get_varint(body, &mut p)
+                    .ok_or_else(|| malformed("blocks lane overruns frame"))?;
+                self.blocks_v
+                    .push(u32::try_from(id).map_err(|_| malformed("block id out of range"))?);
+            }
+            self.sums[5] = fnv1a(self.sums[5], &body[start..p]);
+        }
+
+        // deps section: (dst+1 | 0), n_srcs, then the source registers
+        self.deps_v.clear();
+        if want_deps {
+            let start = p;
+            for _ in 0..n_instrs {
+                let dst = get_varint(body, &mut p)
+                    .ok_or_else(|| malformed("deps lane overruns frame"))?;
+                let dst = match dst {
+                    0 => None,
+                    d => Some(
+                        Reg::try_from(d - 1).map_err(|_| malformed("register out of range"))?,
+                    ),
+                };
+                let n_srcs = *body
+                    .get(p)
+                    .ok_or_else(|| malformed("deps lane overruns frame"))?;
+                p += 1;
+                if n_srcs > 3 {
+                    return Err(malformed("operand count out of range"));
+                }
+                let mut srcs: [Reg; 3] = [0; 3];
+                for s in srcs.iter_mut().take(n_srcs as usize) {
+                    let r = get_varint(body, &mut p)
+                        .ok_or_else(|| malformed("deps lane overruns frame"))?;
+                    *s = Reg::try_from(r).map_err(|_| malformed("register out of range"))?;
+                }
+                self.deps_v.push(DepRec { dst, srcs, n_srcs });
+            }
+            self.sums[4] = fnv1a(self.sums[4], &body[start..p]);
+        }
+
+        // addrs section: zigzag deltas chained from 0 at frame start
+        self.addrs_v.clear();
+        if want_addrs {
+            let start = p;
+            let mut prev: u64 = 0;
+            for _ in 0..n_mem {
+                let z = get_varint(body, &mut p)
+                    .ok_or_else(|| malformed("addrs lane overruns frame"))?;
+                prev = prev.wrapping_add(unzigzag(z) as u64);
+                self.addrs_v.push(prev);
+            }
+            self.sums[1] = fnv1a(self.sums[1], &body[start..p]);
+        }
+
+        // sizes section: one byte per memory access
+        let sizes = if want_sizes {
+            let s = body
+                .get(p..p + n_mem)
+                .ok_or_else(|| malformed("sizes lane overruns frame"))?;
+            p += n_mem;
+            self.sums[2] = fnv1a(self.sums[2], s);
+            s
+        } else {
+            &[]
+        };
+
+        // store bitset: bit i (LSB-first per byte) set ⇔ access i is a store
+        let stores = if want_stores {
+            let len = (n_mem + 7) / 8;
+            let s = body
+                .get(p..p + len)
+                .ok_or_else(|| malformed("store bitset overruns frame"))?;
+            p += len;
+            self.sums[3] = fnv1a(self.sums[3], s);
+            s
+        } else {
+            &[]
+        };
+
+        if p != body.len() {
+            return Err(malformed("frame has trailing bytes"));
+        }
+
+        // reconstruct the event stream
+        chunk.clear();
+        let mut cur = frame_open;
+        let mut bi = 0usize;
+        let mut ii = 0usize;
+        let mut mi = 0usize;
+        for &t in tags {
+            match t {
+                TAG_BLOCK => {
+                    if want_blocks {
+                        cur = self.blocks_v[bi];
+                    }
+                    bi += 1;
+                    self.stats.dyn_blocks += 1;
+                    chunk.push(TraceEvent::BlockEnter { block: cur });
+                }
+                TAG_BR_TAKEN | TAG_BR_NOT => {
+                    self.stats.dyn_branches += 1;
+                    chunk.push(TraceEvent::Branch { block: cur, taken: t == TAG_BR_TAKEN });
+                }
+                _ => {
+                    let op = Op::from_index(t as usize).expect("tag validated above");
+                    let dep = if want_deps {
+                        self.deps_v[ii]
+                    } else {
+                        DepRec { dst: None, srcs: [0; 3], n_srcs: 0 }
+                    };
+                    ii += 1;
+                    let mem = if matches!(op, Op::Load | Op::Store) {
+                        let addr = if want_addrs { self.addrs_v[mi] } else { 0 };
+                        let size = if want_sizes { sizes[mi] } else { 0 };
+                        let is_store = if want_stores {
+                            (stores[mi / 8] >> (mi % 8)) & 1 == 1
+                        } else {
+                            op == Op::Store
+                        };
+                        mi += 1;
+                        if is_store {
+                            self.stats.mem_writes += 1;
+                        } else {
+                            self.stats.mem_reads += 1;
+                        }
+                        Some(MemAccess { addr, size, is_store })
+                    } else {
+                        None
+                    };
+                    self.stats.dyn_instrs += 1;
+                    chunk.push(TraceEvent::Instr(InstrEvent {
+                        op,
+                        dst: dep.dst,
+                        srcs: dep.srcs,
+                        n_srcs: dep.n_srcs,
+                        mem,
+                        block: cur,
+                    }));
+                }
+            }
+        }
+        self.cur_block = cur;
+        self.chunks += 1;
+        self.events += tags.len() as u64;
+        Ok(())
+    }
+}
+
+impl TraceSource for TraceReader {
+    fn next_chunk(&mut self, chunk: &mut EventChunk) -> Result<ChunkStatus> {
+        if self.done {
+            return Ok(ChunkStatus::Done);
+        }
+        let frame_len = read_u32(&mut self.input, "missing footer")?;
+        if frame_len == FOOTER_SENTINEL {
+            self.read_footer()?;
+            self.done = true;
+            return Ok(ChunkStatus::Done);
+        }
+        let cap = self.header.chunk_capacity as usize;
+        if frame_len as usize > 16 + cap * MAX_EVENT_BYTES {
+            return Err(malformed("frame length implausible for declared chunk capacity"));
+        }
+        self.body.resize(frame_len as usize, 0);
+        let mut body = std::mem::take(&mut self.body);
+        let res = read_exact_or(&mut self.input, &mut body, "frame body")
+            .and_then(|_| self.decode_frame(&body, chunk));
+        self.body = body;
+        res?;
+        Ok(ChunkStatus::Delivered)
+    }
+
+    fn chunk_capacity(&self) -> usize {
+        self.header.chunk_capacity as usize
+    }
+
+    fn lanes(&self) -> TraceLanes {
+        self.header.lanes
+    }
+
+    fn stats(&self) -> ExecStats {
+        self.stats.clone()
+    }
+}

@@ -1,0 +1,308 @@
+//! `TraceWriter`: an [`Instrument`] sink that streams the event stream to a
+//! `.pallas-trace` file during any pipeline run (see the [`crate::trace`]
+//! module doc for the wire layout). Chunk frames map 1:1 onto the delivery
+//! chunks on the chunked paths; per-event delivery is buffered back into
+//! capacity-sized frames so the file is identical either way.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::format::{
+    fnv1a, put_varint, zigzag, TraceLanes, TraceMeta, TraceProvenance, END_MAGIC, FNV_OFFSET,
+    FOOTER_SENTINEL, FORMAT_VERSION, MAGIC,
+};
+use crate::interp::{Instrument, TraceEvent, TAG_BLOCK, TAG_BR_NOT, TAG_BR_TAKEN};
+use crate::ir::Op;
+
+/// Per-frame section scratch, reused across frames so steady-state encoding
+/// allocates nothing.
+#[derive(Default)]
+struct FrameBufs {
+    tags: Vec<u8>,
+    blocks: Vec<u8>,
+    deps: Vec<u8>,
+    addrs: Vec<u8>,
+    sizes: Vec<u8>,
+    stores: Vec<u8>,
+    body: Vec<u8>,
+}
+
+/// Streaming `.pallas-trace` encoder.
+///
+/// Plug it into any run as an [`Instrument`] (alone, or fanned out next to
+/// an analyzer stack); call [`TraceWriter::finish`] after the run to write
+/// the footer. A writer dropped without `finish` — the crashed-recording
+/// case, exercised by the fault-injection tests — flushes every complete
+/// frame but no footer, so a reader later salvages the prefix and reports
+/// `Truncated` instead of trusting a half-written file.
+///
+/// I/O errors are sticky: the first one is remembered, further writes are
+/// skipped, and `finish` surfaces it. `on_event`/`on_chunk` stay infallible
+/// as the `Instrument` contract requires.
+pub struct TraceWriter {
+    out: BufWriter<File>,
+    meta: TraceMeta,
+    lanes: TraceLanes,
+    chunk_capacity: usize,
+    /// Per-event delivery buffer, cut into capacity-sized frames.
+    pending: Vec<TraceEvent>,
+    /// Block open at the next frame's start (for frames cut mid-block).
+    cur_block: u32,
+    chunks: u64,
+    events: u64,
+    sums: [u64; TraceLanes::COUNT],
+    bufs: FrameBufs,
+    io_error: Option<io::Error>,
+    finished: bool,
+}
+
+impl TraceWriter {
+    /// Create `path` and write the file header. `chunk_capacity` bounds the
+    /// events per frame (use the run's delivery chunk capacity —
+    /// [`crate::interp::Machine::chunk_capacity`] — so frames mirror the
+    /// delivery chunks); `lanes` selects the sections recorded per frame
+    /// (the tags lane is always included — it carries the event structure
+    /// every other lane is parsed against).
+    pub fn create(
+        path: &Path,
+        meta: TraceMeta,
+        chunk_capacity: usize,
+        lanes: TraceLanes,
+    ) -> Result<TraceWriter> {
+        let lanes = lanes | TraceLanes::TAGS;
+        let chunk_capacity = chunk_capacity.max(1);
+        let cap32 = u32::try_from(chunk_capacity).context("chunk capacity exceeds u32")?;
+        let name_len = u32::try_from(meta.app.len()).context("app name exceeds u32")?;
+        let file = File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        let mut out = BufWriter::new(file);
+        let mut header = Vec::with_capacity(36 + meta.app.len());
+        header.extend_from_slice(&MAGIC);
+        header.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        header.extend_from_slice(&lanes.bits().to_le_bytes());
+        header.extend_from_slice(&cap32.to_le_bytes());
+        header.extend_from_slice(&meta.n.to_le_bytes());
+        header.extend_from_slice(&meta.seed.to_le_bytes());
+        header.extend_from_slice(&name_len.to_le_bytes());
+        header.extend_from_slice(meta.app.as_bytes());
+        out.write_all(&header)
+            .with_context(|| format!("writing trace header to {}", path.display()))?;
+        Ok(TraceWriter {
+            out,
+            meta,
+            lanes,
+            chunk_capacity,
+            pending: Vec::new(),
+            cur_block: 0,
+            chunks: 0,
+            events: 0,
+            sums: [FNV_OFFSET; TraceLanes::COUNT],
+            bufs: FrameBufs::default(),
+            io_error: None,
+            finished: false,
+        })
+    }
+
+    /// Lanes actually recorded (requested lanes plus the mandatory tags).
+    pub fn lanes(&self) -> TraceLanes {
+        self.lanes
+    }
+
+    /// Chunk frames written so far.
+    pub fn chunks(&self) -> u64 {
+        self.chunks
+    }
+
+    /// Events written so far (buffered per-event deliveries excluded until
+    /// their frame is cut).
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Provenance of the file being written, for the record-side report.
+    pub fn provenance(&self, path: &Path) -> TraceProvenance {
+        TraceProvenance {
+            path: path.display().to_string(),
+            version: FORMAT_VERSION,
+            lanes: self.lanes,
+            chunk_capacity: self.chunk_capacity as u32,
+            app: self.meta.app.clone(),
+            n: self.meta.n,
+            seed: self.meta.seed,
+            chunks: self.chunks,
+            events: self.events,
+        }
+    }
+
+    /// Flush buffered per-event deliveries, write the footer (chunk/event
+    /// counts, per-lane FNV-1a checksums, end magic) and sync the stream.
+    /// Surfaces any I/O error swallowed during the run.
+    pub fn finish(&mut self) -> Result<()> {
+        self.flush_pending();
+        if self.io_error.is_none() {
+            let mut footer = Vec::with_capacity(4 + 8 * (2 + TraceLanes::COUNT) + 8);
+            footer.extend_from_slice(&FOOTER_SENTINEL.to_le_bytes());
+            footer.extend_from_slice(&self.chunks.to_le_bytes());
+            footer.extend_from_slice(&self.events.to_le_bytes());
+            for sum in &self.sums {
+                footer.extend_from_slice(&sum.to_le_bytes());
+            }
+            footer.extend_from_slice(&END_MAGIC);
+            if let Err(e) = self.out.write_all(&footer).and_then(|_| self.out.flush()) {
+                self.io_error = Some(e);
+            }
+        }
+        self.finished = true;
+        match self.io_error.take() {
+            None => Ok(()),
+            Some(e) => Err(anyhow::Error::new(e).context("writing trace file")),
+        }
+    }
+
+    fn flush_pending(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let pending = std::mem::take(&mut self.pending);
+        self.write_frames(&pending);
+        self.pending = pending;
+        self.pending.clear();
+    }
+
+    /// Encode `events` as one frame per `chunk_capacity` slice (delivery
+    /// chunks are already within capacity, so they map to exactly one).
+    fn write_frames(&mut self, events: &[TraceEvent]) {
+        for part in events.chunks(self.chunk_capacity) {
+            self.write_frame(part);
+        }
+    }
+
+    fn write_frame(&mut self, events: &[TraceEvent]) {
+        if events.is_empty() || self.io_error.is_some() {
+            return;
+        }
+        let want_blocks = self.lanes.contains(TraceLanes::BLOCKS);
+        let want_deps = self.lanes.contains(TraceLanes::DEPS);
+        let want_addrs = self.lanes.contains(TraceLanes::ADDRS);
+        let want_sizes = self.lanes.contains(TraceLanes::SIZES);
+        let want_stores = self.lanes.contains(TraceLanes::STORES);
+        let b = &mut self.bufs;
+        b.tags.clear();
+        b.blocks.clear();
+        b.deps.clear();
+        b.addrs.clear();
+        b.sizes.clear();
+        b.stores.clear();
+        if want_blocks {
+            // the block open at frame start, for frames cut mid-block
+            put_varint(&mut b.blocks, self.cur_block as u64);
+        }
+        let mut prev_addr: u64 = 0;
+        let mut n_mem: usize = 0;
+        for ev in events {
+            match *ev {
+                TraceEvent::BlockEnter { block } => {
+                    b.tags.push(TAG_BLOCK);
+                    if want_blocks {
+                        put_varint(&mut b.blocks, block as u64);
+                    }
+                    self.cur_block = block;
+                }
+                TraceEvent::Branch { taken, .. } => {
+                    b.tags.push(if taken { TAG_BR_TAKEN } else { TAG_BR_NOT });
+                }
+                TraceEvent::Instr(i) => {
+                    b.tags.push(i.op.index() as u8);
+                    if want_deps {
+                        put_varint(&mut b.deps, i.dst.map_or(0, |r| r as u64 + 1));
+                        b.deps.push(i.n_srcs);
+                        for &s in i.sources() {
+                            put_varint(&mut b.deps, s as u64);
+                        }
+                    }
+                    // mem-bearing events are exactly load/store tags — the
+                    // decoder relies on this to parse the access sections
+                    debug_assert_eq!(i.mem.is_some(), matches!(i.op, Op::Load | Op::Store));
+                    if let Some(m) = i.mem {
+                        if want_addrs {
+                            let delta = (m.addr as i64).wrapping_sub(prev_addr as i64);
+                            put_varint(&mut b.addrs, zigzag(delta));
+                            prev_addr = m.addr;
+                        }
+                        if want_sizes {
+                            b.sizes.push(m.size);
+                        }
+                        if want_stores {
+                            if n_mem % 8 == 0 {
+                                b.stores.push(0);
+                            }
+                            if m.is_store {
+                                let last = b.stores.len() - 1;
+                                b.stores[last] |= 1u8 << (n_mem % 8);
+                            }
+                        }
+                        n_mem += 1;
+                    }
+                }
+            }
+        }
+        b.body.clear();
+        b.body.extend_from_slice(&(events.len() as u32).to_le_bytes());
+        // fixed section order; the checksum slot index is the lane's bit
+        let sections: [(&[u8], bool, usize); 6] = [
+            (b.tags.as_slice(), true, 0),
+            (b.blocks.as_slice(), want_blocks, 5),
+            (b.deps.as_slice(), want_deps, 4),
+            (b.addrs.as_slice(), want_addrs, 1),
+            (b.sizes.as_slice(), want_sizes, 2),
+            (b.stores.as_slice(), want_stores, 3),
+        ];
+        for (sec, present, slot) in sections {
+            if present {
+                self.sums[slot] = fnv1a(self.sums[slot], sec);
+                b.body.extend_from_slice(sec);
+            }
+        }
+        self.chunks += 1;
+        self.events += events.len() as u64;
+        let frame_len = (b.body.len() as u32).to_le_bytes();
+        let mut res = self.out.write_all(&frame_len);
+        if res.is_ok() {
+            res = self.out.write_all(&b.body);
+        }
+        if let Err(e) = res {
+            self.io_error = Some(e);
+        }
+    }
+}
+
+impl Instrument for TraceWriter {
+    fn on_event(&mut self, ev: &TraceEvent) {
+        self.pending.push(*ev);
+        if self.pending.len() >= self.chunk_capacity {
+            self.flush_pending();
+        }
+    }
+
+    fn on_chunk(&mut self, events: &[TraceEvent]) {
+        // mixed delivery keeps event order: anything buffered goes first
+        self.flush_pending();
+        self.write_frames(events);
+    }
+    // no on_chunk_lanes / wants_lanes override: the writer reads the raw
+    // event slice, so it never forces a lane build on the delivery path
+}
+
+impl Drop for TraceWriter {
+    /// Best-effort flush of complete frames when the run died before
+    /// [`TraceWriter::finish`] — deliberately no footer, so readers see the
+    /// truncation instead of a file that lies about being complete.
+    fn drop(&mut self) {
+        if !self.finished {
+            let _ = self.out.flush();
+        }
+    }
+}

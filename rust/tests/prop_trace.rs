@@ -1,0 +1,311 @@
+//! Trace record/replay properties: interpret → serialize (`TraceWriter`) →
+//! decode (`TraceReader`) → analyze must be **bit-identical** to analyzing
+//! the live interpreter stream, for seeded random programs and real suite
+//! kernels, under every delivery mode (per-event, chunked, offload,
+//! sharded). Metrics are compared through the serialized `AppMetrics` JSON
+//! with the wall clock zeroed, so every analyzer surface — pca8 features,
+//! histograms, MRC/hierarchy counters, parallelism families — participates
+//! in the equality.
+//!
+//! The corruption matrix then damages a recorded file byte-by-byte
+//! (magic flip, version bump, mid-frame truncation, checksum flip) and
+//! asserts each case surfaces the matching typed [`TraceError`] — never a
+//! panic — while a recording killed by an injected interpreter fault must
+//! leave a well-formed prefix: every complete frame replays, then the
+//! missing footer reports as `Truncated`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use pisa_nmc::analysis::{
+    profile_opts, profile_per_event_opts, profile_source_opts, profile_source_per_event,
+    AppMetrics, MetricSet,
+};
+use pisa_nmc::fault::{FaultPlan, SuperviseOpts};
+use pisa_nmc::interp::{EventChunk, Machine, PipelineMode, Workers};
+use pisa_nmc::ir::Program;
+use pisa_nmc::prop_assert;
+use pisa_nmc::testkit::{check_seeded, random_program};
+use pisa_nmc::trace::{
+    required_lanes, ChunkStatus, TraceError, TraceLanes, TraceMeta, TraceReader, TraceSource,
+    TraceWriter,
+};
+use pisa_nmc::traffic::TrafficOpts;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pisa-prop-trace-{}-{tag}.pallas-trace", std::process::id()))
+}
+
+/// Interpret `prog` once with the trace writer as the only sink, producing
+/// a finished (footer-bearing) recording at a fresh temp path.
+fn record(prog: &Program, app: &str, tag: &str, lanes: TraceLanes) -> PathBuf {
+    let path = tmp_path(tag);
+    let mut machine = Machine::new(prog).unwrap();
+    let meta = TraceMeta { app: app.to_string(), n: 0, seed: 0 };
+    let mut w = TraceWriter::create(&path, meta, machine.chunk_capacity(), lanes).unwrap();
+    machine.run(&mut w).unwrap();
+    w.finish().unwrap();
+    path
+}
+
+/// Canonical form for exact comparison: the full `AppMetrics` JSON with the
+/// only legitimately run-dependent field (wall clock) zeroed. String
+/// equality here is bit equality of every metric surface.
+fn canon(mut m: AppMetrics) -> String {
+    m.exec.wall_s = 0.0;
+    m.to_json().to_string_compact()
+}
+
+const REPLAY_MODES: [PipelineMode; 3] = [
+    PipelineMode::Inline,
+    PipelineMode::Offload,
+    PipelineMode::Sharded { workers: Workers::Auto },
+];
+
+/// Decode every frame of `path`, returning the terminal result plus how
+/// many chunks/events were successfully delivered before it.
+fn drain(path: &Path) -> (anyhow::Result<()>, u64, u64) {
+    let mut r = match TraceReader::open(path) {
+        Ok(r) => r,
+        Err(e) => return (Err(e), 0, 0),
+    };
+    let mut chunk = EventChunk::with_capacity(r.chunk_capacity());
+    loop {
+        match r.next_chunk(&mut chunk) {
+            Ok(ChunkStatus::Delivered) => {}
+            Ok(ChunkStatus::Done) => {
+                let pv = r.provenance();
+                return (Ok(()), pv.chunks, pv.events);
+            }
+            Err(e) => {
+                let pv = r.provenance();
+                return (Err(e), pv.chunks, pv.events);
+            }
+        }
+    }
+}
+
+#[test]
+fn round_trip_is_bit_identical_on_real_kernels() {
+    for (name, n) in [("gesummv", 24), ("bfs", 24)] {
+        let k = pisa_nmc::workloads::by_name(name).unwrap();
+        let p = k.build(n, 7);
+        let all = MetricSet::all();
+        let opts = TrafficOpts::default();
+        let direct = canon(profile_per_event_opts(&p, all, opts).unwrap());
+        let path = record(&p, name, &format!("kern-{name}"), TraceLanes::ALL);
+        for mode in REPLAY_MODES {
+            let mut r = TraceReader::open(&path).unwrap();
+            let replayed = profile_source_opts(&p, &mut r, all, mode, opts).unwrap();
+            assert_eq!(
+                canon(replayed),
+                direct,
+                "{name}: {} replay diverged from direct per-event analysis",
+                mode.name()
+            );
+        }
+        let mut r = TraceReader::open(&path).unwrap();
+        let replayed = profile_source_per_event(&p, &mut r, all, opts).unwrap();
+        assert_eq!(canon(replayed), direct, "{name}: per-event replay diverged");
+        fs::remove_file(&path).unwrap();
+    }
+}
+
+#[test]
+fn round_trip_is_bit_identical_on_random_programs() {
+    check_seeded("trace round-trip", 0x7AC3, 12, |rng| {
+        let p = random_program(rng);
+        let all = MetricSet::all();
+        let opts = TrafficOpts::default();
+        let direct =
+            canon(profile_opts(&p, all, PipelineMode::Inline, opts).map_err(|e| e.to_string())?);
+        let path = record(&p, "random", "rand", TraceLanes::ALL);
+        for mode in REPLAY_MODES {
+            let mut r = TraceReader::open(&path).map_err(|e| e.to_string())?;
+            let replayed =
+                profile_source_opts(&p, &mut r, all, mode, opts).map_err(|e| e.to_string())?;
+            prop_assert!(
+                canon(replayed) == direct,
+                "{} replay diverged from direct analysis",
+                mode.name()
+            );
+        }
+        fs::remove_file(&path).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn corruption_yields_typed_errors_never_panics() {
+    let k = pisa_nmc::workloads::by_name("gesummv").unwrap();
+    let p = k.build(16, 3);
+    let path = record(&p, "gesummv", "corrupt", TraceLanes::ALL);
+    let good = fs::read(&path).unwrap();
+    fs::remove_file(&path).unwrap();
+    // magic(8) version(2) lanes(2) cap(4) n(8) seed(8) name_len(4) name
+    let header_len = 8 + 2 + 2 + 4 + 8 + 8 + 4 + "gesummv".len();
+    assert!(good.len() > header_len + 16, "recording implausibly small");
+
+    let check = |tag: &str, bytes: Vec<u8>, want: fn(&TraceError) -> bool, what: &str| {
+        let cpath = tmp_path(tag);
+        fs::write(&cpath, bytes).unwrap();
+        let (res, _, _) = drain(&cpath);
+        fs::remove_file(&cpath).unwrap();
+        let err = res.expect_err("corrupted trace must not decode cleanly");
+        match err.downcast_ref::<TraceError>() {
+            Some(te) if want(te) => {}
+            other => panic!("{tag}: expected {what}, got {other:?} ({err:#})"),
+        }
+    };
+
+    let mut b = good.clone();
+    b[0] ^= 0xFF;
+    check("bad-magic", b, |e| matches!(e, TraceError::BadMagic), "BadMagic");
+
+    let mut b = good.clone();
+    b[8] = b[8].wrapping_add(1); // version u16 LE at offset 8
+    check(
+        "bad-version",
+        b,
+        |e| matches!(e, TraceError::VersionMismatch { found: 2, supported: 1 }),
+        "VersionMismatch{found: 2}",
+    );
+
+    // cut mid-frame: complete frames before the cut still deliver
+    let cut = good[..header_len + 6].to_vec();
+    check("truncated", cut, |e| matches!(e, TraceError::Truncated { .. }), "Truncated");
+
+    // flip the last byte of the footer's checksum block (slot 5 = blocks
+    // lane); frames all decode, the footer check reports the lane
+    let mut b = good.clone();
+    let i = b.len() - 9; // …checksums(48) | end magic(8)
+    b[i] ^= 0xFF;
+    check(
+        "bad-checksum",
+        b,
+        |e| matches!(e, TraceError::ChecksumMismatch { lane: "blocks", .. }),
+        "ChecksumMismatch{lane: blocks}",
+    );
+}
+
+#[test]
+fn truncated_file_still_delivers_complete_frames() {
+    // big enough for several chunk flushes, cut just before the footer
+    let k = pisa_nmc::workloads::by_name("gesummv").unwrap();
+    let p = k.build(24, 7);
+    let path = record(&p, "gesummv", "trunc-tail", TraceLanes::ALL);
+    let bytes = fs::read(&path).unwrap();
+    fs::remove_file(&path).unwrap();
+    let (ok, chunks, events) = {
+        let cpath = tmp_path("trunc-tail-full");
+        fs::write(&cpath, &bytes).unwrap();
+        let out = drain(&cpath);
+        fs::remove_file(&cpath).unwrap();
+        out
+    };
+    ok.unwrap();
+    assert!(chunks >= 1 && events > 0);
+
+    // footer is 4 + 16 + 48 + 8 = 76 bytes; removing the last 80 leaves
+    // every frame intact but the footer unreadable
+    let cpath = tmp_path("trunc-tail-cut");
+    fs::write(&cpath, &bytes[..bytes.len() - 80]).unwrap();
+    let (res, got_chunks, got_events) = drain(&cpath);
+    fs::remove_file(&cpath).unwrap();
+    let err = res.expect_err("footer-less trace must not decode cleanly");
+    assert!(
+        matches!(err.downcast_ref::<TraceError>(), Some(TraceError::Truncated { .. })),
+        "expected Truncated, got {err:#}"
+    );
+    assert_eq!(
+        (got_chunks, got_events),
+        (chunks, events),
+        "every complete frame must be delivered before the truncation error"
+    );
+}
+
+#[test]
+fn crashed_recording_leaves_wellformed_prefix() {
+    // a loop long enough for several chunk flushes before the injected
+    // interpreter fault at chunk boundary 2 kills the run
+    use pisa_nmc::ir::ProgramBuilder;
+    let mut b = ProgramBuilder::new("stress");
+    let a = b.alloc_f64("a", 256);
+    let len = b.const_i(256);
+    let n = b.const_i(40_000);
+    b.counted_loop(n, |b, i| {
+        let idx = b.rem(i, len);
+        let v = b.load_f64(a, idx);
+        let w = b.fadd(v, v);
+        b.store_f64(a, idx, w);
+    });
+    let p = b.finish(None);
+
+    let path = tmp_path("fault");
+    let mut machine = Machine::new(&p).unwrap();
+    let meta = TraceMeta { app: "stress".to_string(), n: 0, seed: 0 };
+    let mut w =
+        TraceWriter::create(&path, meta, machine.chunk_capacity(), TraceLanes::ALL).unwrap();
+    let fault = FaultPlan::from_spec("interp-error@interp:2").unwrap();
+    let res = machine.run_supervised(&mut w, SuperviseOpts::default().with_fault(fault));
+    assert!(res.is_err(), "injected interpreter fault must surface");
+    drop(w); // no finish(): the crashed-recording signature is a missing footer
+
+    let (res, chunks, events) = drain(&path);
+    fs::remove_file(&path).unwrap();
+    assert!(
+        chunks >= 2 && events > 0,
+        "complete frames before the fault must replay (got {chunks} chunks, {events} events)"
+    );
+    let err = res.expect_err("missing footer must surface as an error");
+    match err.downcast_ref::<TraceError>() {
+        Some(TraceError::Truncated { what }) => {
+            assert_eq!(*what, "missing footer", "clean EOF at a frame boundary");
+        }
+        other => panic!("expected Truncated, got {other:?} ({err:#})"),
+    }
+}
+
+#[test]
+fn replaying_lane_starved_trace_names_missing_families() {
+    let k = pisa_nmc::workloads::by_name("gesummv").unwrap();
+    let p = k.build(16, 3);
+    let mix_only = MetricSet::from_names("mix").unwrap();
+    let lanes = required_lanes(mix_only);
+    assert_eq!(lanes, TraceLanes::TAGS, "mix needs only the op-tag lane");
+    let path = record(&p, "gesummv", "mix-only", lanes);
+
+    // replaying the full metric set against a tags-only recording must
+    // fail at plan time, naming the starved families and the lanes
+    let mut r = TraceReader::open(&path).unwrap();
+    let err = profile_source_opts(
+        &p,
+        &mut r,
+        MetricSet::all(),
+        PipelineMode::Inline,
+        TrafficOpts::default(),
+    )
+    .unwrap_err();
+    match err.downcast_ref::<TraceError>() {
+        Some(TraceError::MissingLanes { families, missing }) => {
+            assert!(families.iter().any(|f| f == "traffic"), "families: {families:?}");
+            assert!(missing.contains(TraceLanes::ADDRS));
+            assert!(!missing.contains(TraceLanes::TAGS), "tags are recorded");
+        }
+        other => panic!("expected MissingLanes, got {other:?} ({err:#})"),
+    }
+
+    // the selection the recording was made for still replays bit-identically
+    let direct = canon(profile_per_event_opts(&p, mix_only, TrafficOpts::default()).unwrap());
+    let mut r = TraceReader::open(&path).unwrap();
+    let replayed = profile_source_opts(
+        &p,
+        &mut r,
+        mix_only,
+        PipelineMode::Inline,
+        TrafficOpts::default(),
+    )
+    .unwrap();
+    assert_eq!(canon(replayed), direct, "mix-only replay diverged");
+    fs::remove_file(&path).unwrap();
+}
