@@ -9,7 +9,9 @@
 //!
 //! A further inline arm runs with the `traffic` family disabled, so the
 //! memory-traffic subsystem's events/s overhead (budget: ≤ 25% vs the
-//! default all-families stack) is measured on every run.
+//! default all-families stack) is measured on every run. A scheduler arm
+//! re-runs the inline suite with `--jobs auto` (concurrent per-app jobs
+//! under the shared worker budget) against the `--jobs 1` baseline.
 //!
 //! With `--bench-json` the suite numbers land in `BENCH_pipeline.json` at
 //! the repo root, so successive PRs have a perf trajectory to diff
@@ -24,11 +26,8 @@
 
 use std::time::Instant;
 
-use pisa_nmc::analysis::{
-    profile, profile_offload, profile_opts, profile_per_event, profile_sharded,
-    profile_source_opts, Metric, MetricSet,
-};
-use pisa_nmc::coordinator::{run_suite_opts, run_suite_select, AppResult};
+use pisa_nmc::analysis::{profile, profile_per_event, profile_source_opts, Metric, MetricSet};
+use pisa_nmc::coordinator::{AppResult, Jobs, ProfileRequest, RunCtx};
 use pisa_nmc::interp::{Machine, PipelineMode, Workers};
 use pisa_nmc::testkit::bench::bench_scale;
 use pisa_nmc::trace::{TraceLanes, TraceMeta, TraceReader, TraceWriter};
@@ -41,9 +40,14 @@ fn suite_arm(
     scale: f64,
     metrics: MetricSet,
     mode: PipelineMode,
+    jobs: Jobs,
 ) -> anyhow::Result<(Vec<AppResult>, f64)> {
     let t0 = Instant::now();
-    let apps = run_suite_select(scale, 42, 8, metrics, mode)?;
+    let apps = ProfileRequest::suite(scale, 42)
+        .metrics(metrics)
+        .mode(mode)
+        .jobs(jobs)
+        .run_apps(&RunCtx::new())?;
     let suite_s = t0.elapsed().as_secs_f64();
     let total_events: u64 = apps.iter().map(|a| a.metrics.exec.events()).sum();
     Ok((apps, total_events as f64 / suite_s))
@@ -56,13 +60,20 @@ fn main() -> anyhow::Result<()> {
 
     // end-to-end suite in every delivery mode: all analyzers + sims
     let sharded_mode = PipelineMode::Sharded { workers: Workers::Auto };
-    let (inline_apps, inline_eps) = suite_arm(scale, MetricSet::all(), PipelineMode::Inline)?;
-    let (offload_apps, offload_eps) = suite_arm(scale, MetricSet::all(), PipelineMode::Offload)?;
-    let (sharded_apps, sharded_eps) = suite_arm(scale, MetricSet::all(), sharded_mode)?;
+    let one = Jobs::Fixed(1);
+    let (inline_apps, inline_eps) = suite_arm(scale, MetricSet::all(), PipelineMode::Inline, one)?;
+    let (offload_apps, offload_eps) =
+        suite_arm(scale, MetricSet::all(), PipelineMode::Offload, one)?;
+    let (sharded_apps, sharded_eps) = suite_arm(scale, MetricSet::all(), sharded_mode, one)?;
     // the traffic-subsystem overhead arm: same inline suite minus the
     // traffic family (its budget: ≤ 25% events/s overhead vs this arm)
     let (_, no_traffic_eps) =
-        suite_arm(scale, MetricSet::all().without(Metric::Traffic), PipelineMode::Inline)?;
+        suite_arm(scale, MetricSet::all().without(Metric::Traffic), PipelineMode::Inline, one)?;
+    // suite scheduler arm (ISSUE 9): the same inline all-families suite
+    // through the concurrent scheduler — `--jobs auto` vs the `--jobs 1`
+    // baseline (inline_eps above). App-level parallelism, bit-identical
+    // results (prop_sched.rs), so the only question is wall-clock.
+    let (_, jobs_auto_eps) = suite_arm(scale, MetricSet::all(), PipelineMode::Inline, Jobs::Auto)?;
 
     println!(
         "{:<14} {:>14} {:>12} {:>12} {:>12} {:>8} {:>8}",
@@ -92,10 +103,16 @@ fn main() -> anyhow::Result<()> {
     let traffic_overhead_pct = (no_traffic_eps / inline_eps.max(1e-9) - 1.0) * 100.0;
     println!(
         "traffic overhead: enabled {:.2}M events/s vs disabled {:.2}M events/s → {:.1}% \
-         (budget ≤ 25%)\n",
+         (budget ≤ 25%)",
         inline_eps / 1e6,
         no_traffic_eps / 1e6,
         traffic_overhead_pct,
+    );
+    println!(
+        "suite scheduler: --jobs 1 {:.2}M events/s vs --jobs auto {:.2}M events/s ({:.2}x)\n",
+        inline_eps / 1e6,
+        jobs_auto_eps / 1e6,
+        jobs_auto_eps / inline_eps.max(1e-9),
     );
 
     // four-way dispatch comparison, single app at a time, analyzers only —
@@ -107,6 +124,7 @@ fn main() -> anyhow::Result<()> {
     );
     let (mut tot_ref, mut tot_inline, mut tot_offload, mut tot_sharded) =
         (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let ctx = RunCtx::new();
     for k in registry() {
         let n = scaled_n(k.as_ref(), scale);
         let prog = k.build(n, 42);
@@ -117,10 +135,10 @@ fn main() -> anyhow::Result<()> {
         let c = profile(&prog)?;
         let inline_s = t.elapsed().as_secs_f64();
         let t = Instant::now();
-        let o = profile_offload(&prog)?;
+        let o = ProfileRequest::program(&prog).mode(PipelineMode::Offload).run_metrics(&ctx)?;
         let offload_s = t.elapsed().as_secs_f64();
         let t = Instant::now();
-        let sh = profile_sharded(&prog)?;
+        let sh = ProfileRequest::program(&prog).mode(sharded_mode).run_metrics(&ctx)?;
         let sharded_s = t.elapsed().as_secs_f64();
         assert_eq!(r.exec.dyn_instrs, c.exec.dyn_instrs);
         assert_eq!(c.exec.dyn_instrs, o.exec.dyn_instrs);
@@ -159,11 +177,15 @@ fn main() -> anyhow::Result<()> {
     let sampled_opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 0.01 });
     let t = Instant::now();
     let exact_apps =
-        run_suite_opts(scale, 42, 8, traffic_only, PipelineMode::Inline, TrafficOpts::default())?;
+        ProfileRequest::suite(scale, 42).metrics(traffic_only).jobs(one).run_apps(&ctx)?;
     let mrc_exact_s = t.elapsed().as_secs_f64();
     let suite_events: u64 = exact_apps.iter().map(|a| a.metrics.exec.events()).sum();
     let t = Instant::now();
-    run_suite_opts(scale, 42, 8, traffic_only, PipelineMode::Inline, sampled_opts)?;
+    ProfileRequest::suite(scale, 42)
+        .metrics(traffic_only)
+        .traffic(sampled_opts)
+        .jobs(one)
+        .run_apps(&ctx)?;
     let mrc_sampled_s = t.elapsed().as_secs_f64();
     let mrc_exact_eps = suite_events as f64 / mrc_exact_s.max(1e-9);
     let mrc_sampled_eps = suite_events as f64 / mrc_sampled_s.max(1e-9);
@@ -184,10 +206,13 @@ fn main() -> anyhow::Result<()> {
         k.build(biggest.n, 42)
     };
     let t = Instant::now();
-    let ke = profile_opts(&kprog, traffic_only, PipelineMode::Inline, TrafficOpts::default())?;
+    let ke = ProfileRequest::program(&kprog).metrics(traffic_only).run_metrics(&ctx)?;
     let kernel_exact_s = t.elapsed().as_secs_f64();
     let t = Instant::now();
-    profile_opts(&kprog, traffic_only, PipelineMode::Inline, sampled_opts)?;
+    ProfileRequest::program(&kprog)
+        .metrics(traffic_only)
+        .traffic(sampled_opts)
+        .run_metrics(&ctx)?;
     let kernel_sampled_s = t.elapsed().as_secs_f64();
     let kernel_events = ke.exec.events() as f64;
     let kernel_exact_eps = kernel_events / kernel_exact_s.max(1e-9);
@@ -208,7 +233,7 @@ fn main() -> anyhow::Result<()> {
     let all_metrics = MetricSet::all();
     let dflt = TrafficOpts::default();
     let t = Instant::now();
-    let live = profile_opts(&kprog, all_metrics, PipelineMode::Inline, dflt)?;
+    let live = ProfileRequest::program(&kprog).metrics(all_metrics).run_metrics(&ctx)?;
     let interp_s = t.elapsed().as_secs_f64();
     let trace_path = std::env::temp_dir().join("pisa-bench-trace.pallas-trace");
     {
@@ -247,6 +272,14 @@ fn main() -> anyhow::Result<()> {
         suite.set("sharded_events_per_sec", sharded_eps);
         suite.set("sharded_speedup", sharded_eps / inline_eps.max(1e-9));
         j.set("suite", suite);
+        // suite scheduler wall-clock: `--jobs auto` vs the `--jobs 1`
+        // inline baseline — app-level parallelism under the shared
+        // worker budget, bit-identical results
+        let mut sched = Json::obj();
+        sched.set("jobs1_events_per_sec", inline_eps);
+        sched.set("jobs_auto_events_per_sec", jobs_auto_eps);
+        sched.set("jobs_auto_speedup", jobs_auto_eps / inline_eps.max(1e-9));
+        j.set("sched", sched);
         // traffic-subsystem overhead trend: events/s with the traffic
         // family enabled (the default stack) vs disabled, same inline
         // delivery — budget ≤ 25%

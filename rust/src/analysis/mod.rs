@@ -17,16 +17,19 @@
 //! code path; [`MetricSet`] selects a subset by name (the CLI `--metrics`
 //! flag ends up here).
 //!
-//! The stack can fold on the interpreter thread ([`profile`]), on one
-//! dedicated analysis thread overlapped with interpretation
-//! ([`profile_offload`] — see [`crate::interp::offload`]), or sharded by
-//! metric family across a pool of analyzer workers with every chunk
-//! broadcast to all of them ([`profile_sharded`] — plan and merge in
-//! [`shard`], mechanism in [`crate::interp::offload::sharded`]);
-//! [`profile_select_mode`] takes the delivery as a [`PipelineMode`] knob.
-//! [`profile_per_event`] keeps the un-batched delivery as the reference
-//! semantics; `rust/tests/prop_chunked.rs` proves all paths produce
-//! bit-identical metrics on seeded random programs.
+//! The stack can fold on the interpreter thread, on one dedicated
+//! analysis thread overlapped with interpretation (see
+//! [`crate::interp::offload`]), or sharded by metric family across a pool
+//! of analyzer workers with every chunk broadcast to all of them (plan
+//! and merge in [`shard`], mechanism in
+//! [`crate::interp::offload::sharded`]). The delivery, metric subset and
+//! traffic knobs are selected on a `coordinator::ProfileRequest`
+//! (`ProfileRequest::program(&prog).mode(...).run_metrics(&ctx)`), which
+//! lands on the one crate-internal `profile_run` engine; [`profile`] is
+//! the all-defaults shorthand and [`profile_per_event`] keeps the
+//! un-batched delivery as the reference semantics.
+//! `rust/tests/prop_chunked.rs` proves all paths produce bit-identical
+//! metrics on seeded random programs.
 //!
 //! | metric | module | paper figure |
 //! |---|---|---|
@@ -239,9 +242,9 @@ impl MetricSet {
     /// The effective set when the machine simulations will run: forces on
     /// every family the simulators consume (the host model's IPC comes
     /// from measured ILP_256 — simulating with a zeroed ILP would clamp
-    /// the host to its floor IPC and distort every EDP number). Both
-    /// `coordinator::profile_app_select` and the pipeline report derive
-    /// from this one place so they cannot desync.
+    /// the host to its floor IPC and distort every EDP number). Both the
+    /// coordinator's app pipeline and the pipeline report derive from
+    /// this one place so they cannot desync.
     pub fn with_simulation_requirements(self) -> Self {
         self.with(Metric::Ilp)
     }
@@ -502,9 +505,11 @@ impl Instrument for AnalyzerStack {
     }
 }
 
-/// How `profile_impl` delivers events to the analyzers.
-#[derive(Clone, Copy)]
-enum Delivery {
+/// How `profile_run` delivers events to the analyzers. Crate-internal:
+/// public callers pick a delivery through `coordinator::ProfileRequest`
+/// (or its [`PipelineMode`] + per-event knobs), never positionally.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Delivery {
     PerEvent,
     Chunked,
     Offload,
@@ -531,7 +536,7 @@ fn profile_impl(
 /// bit-identity across deliveries includes the per-level counters and,
 /// in sampled mode, the SHARDS estimates (the sampling hash is
 /// deterministic).
-fn profile_run(
+pub(crate) fn profile_run(
     prog: &Program,
     metrics: MetricSet,
     delivery: Delivery,
@@ -573,7 +578,7 @@ fn profile_run(
 }
 
 /// Map the CLI-facing [`PipelineMode`] onto the internal delivery enum.
-fn delivery_for(mode: PipelineMode) -> Delivery {
+pub(crate) fn delivery_for(mode: PipelineMode) -> Delivery {
     match mode {
         PipelineMode::Inline => Delivery::Chunked,
         PipelineMode::Offload => Delivery::Offload,
@@ -623,6 +628,7 @@ pub fn profile(prog: &Program) -> Result<AppMetrics> {
 
 /// [`profile`] restricted to a metric subset. Disabled families come back
 /// as shape-stable empty results.
+#[deprecated(note = "build a coordinator::ProfileRequest::program(..).metrics(..) instead")]
 pub fn profile_select(prog: &Program, metrics: MetricSet) -> Result<AppMetrics> {
     profile_impl(prog, metrics, Delivery::Chunked, TrafficOpts::default())
 }
@@ -630,6 +636,7 @@ pub fn profile_select(prog: &Program, metrics: MetricSet) -> Result<AppMetrics> 
 /// [`profile`] with the analyzers folding on a dedicated analysis thread,
 /// overlapped with interpretation (see [`crate::interp::offload`]).
 /// Metrics are bit-identical to [`profile`] and [`profile_per_event`].
+#[deprecated(note = "build a coordinator::ProfileRequest::program(..).mode(Offload) instead")]
 pub fn profile_offload(prog: &Program) -> Result<AppMetrics> {
     profile_impl(prog, MetricSet::all(), Delivery::Offload, TrafficOpts::default())
 }
@@ -638,13 +645,14 @@ pub fn profile_offload(prog: &Program) -> Result<AppMetrics> {
 /// auto-sized worker pool, every chunk broadcast to all of them (see
 /// [`shard`] and [`crate::interp::offload::sharded`]). Metrics are
 /// bit-identical to every other delivery path.
+#[deprecated(note = "build a coordinator::ProfileRequest::program(..).mode(Sharded) instead")]
 pub fn profile_sharded(prog: &Program) -> Result<AppMetrics> {
     let delivery = Delivery::Sharded(Workers::Auto);
     profile_impl(prog, MetricSet::all(), delivery, TrafficOpts::default())
 }
 
-/// [`profile_select`] with the delivery mode as a knob — the entry point
-/// the CLI `--pipeline` flag reaches through `coordinator::pipeline`.
+/// [`profile_select`] with the delivery mode as a knob.
+#[deprecated(note = "build a coordinator::ProfileRequest::program(..).mode(..) instead")]
 pub fn profile_select_mode(
     prog: &Program,
     metrics: MetricSet,
@@ -653,12 +661,12 @@ pub fn profile_select_mode(
     profile_impl(prog, metrics, delivery_for(mode), TrafficOpts::default())
 }
 
-/// The fully-parameterized pipeline entry point: metric subset, delivery
-/// mode *and* the traffic knobs — hierarchy replay policy and MRC kernel
-/// (the CLI `--metrics`, `--pipeline`, `--hierarchy` and `--mrc` flags
-/// respectively). Like every narrower `profile_*` wrapper, this lands on
-/// the one private `profile_impl`/`profile_run` implementation — the
-/// wrappers differ only in which knobs they default.
+/// The fully-parameterized positional entry point: metric subset, delivery
+/// mode *and* the traffic knobs. Superseded by the builder
+/// (`coordinator::ProfileRequest::program(&prog).metrics(..).mode(..)
+/// .traffic(..).run_metrics(&ctx)`), which reaches the same one
+/// `profile_run` engine without growing a positional signature per knob.
+#[deprecated(note = "build a coordinator::ProfileRequest::program(..) instead")]
 pub fn profile_opts(
     prog: &Program,
     metrics: MetricSet,
@@ -680,6 +688,9 @@ pub fn profile_per_event(prog: &Program) -> Result<AppMetrics> {
 /// reference arm for the parameterized equivalence tests (per-event ≡
 /// chunked ≡ offload ≡ sharded must hold for both replay policies and
 /// both MRC kernels).
+#[deprecated(
+    note = "build a coordinator::ProfileRequest::program(..).per_event(true) instead"
+)]
 pub fn profile_per_event_opts(
     prog: &Program,
     metrics: MetricSet,
@@ -736,7 +747,7 @@ pub fn profile_source_with_tasks(
 /// statistics are the source's (wall time stamped here — the driver owns
 /// the clock). Replay is strict: a source error or a dead analyzer thread
 /// fails the run; there is no fault-supervision arm on this path.
-fn profile_source_run(
+pub(crate) fn profile_source_run(
     prog: &Program,
     source: &mut dyn TraceSource,
     metrics: MetricSet,
@@ -896,11 +907,15 @@ mod tests {
         assert_eq!(a.exec.dyn_instrs, b.exec.dyn_instrs);
     }
 
+    fn profile_delivery(prog: &Program, delivery: Delivery) -> AppMetrics {
+        profile_impl(prog, MetricSet::all(), delivery, TrafficOpts::default()).unwrap()
+    }
+
     #[test]
     fn offload_profile_matches_inline() {
         let p = tiny_program();
         let a = profile(&p).unwrap();
-        let b = profile_offload(&p).unwrap();
+        let b = profile_delivery(&p, Delivery::Offload);
         assert_eq!(a.pca8_features().map(f64::to_bits), b.pca8_features().map(f64::to_bits));
         assert_eq!(a.mix.per_op, b.mix.per_op);
         assert_eq!(a.reuse.hist, b.reuse.hist);
@@ -912,7 +927,7 @@ mod tests {
     fn sharded_profile_matches_inline() {
         let p = tiny_program();
         let a = profile(&p).unwrap();
-        let b = profile_sharded(&p).unwrap();
+        let b = profile_delivery(&p, Delivery::Sharded(Workers::Auto));
         assert_eq!(a.pca8_features().map(f64::to_bits), b.pca8_features().map(f64::to_bits));
         assert_eq!(a.mix.per_op, b.mix.per_op);
         assert_eq!(a.reuse.hist, b.reuse.hist);
@@ -1059,7 +1074,7 @@ mod tests {
         let p = tiny_program();
         let sel = MetricSet::from_names("mix,dlp").unwrap();
         assert_eq!(sel.names(), vec!["mix", "dlp"]);
-        let m = profile_select(&p, sel).unwrap();
+        let m = profile_impl(&p, sel, Delivery::Chunked, TrafficOpts::default()).unwrap();
         assert!(m.mix.total() > 0);
         assert!(m.dlp.dlp > 1.0);
         // disabled families are shape-stable but empty
@@ -1077,7 +1092,7 @@ mod tests {
         let p = tiny_program();
         let sel = MetricSet::from_names("traffic").unwrap();
         assert_eq!(sel.names(), vec!["traffic"]);
-        let m = profile_select(&p, sel).unwrap();
+        let m = profile_impl(&p, sel, Delivery::Chunked, TrafficOpts::default()).unwrap();
         assert_eq!(m.traffic.accesses, 128);
         assert_eq!(m.traffic.read_bytes, 512);
         assert_eq!(m.traffic.write_bytes, 512);

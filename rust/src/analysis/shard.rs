@@ -370,7 +370,7 @@ fn adopt(dst: &mut AppMetrics, src: AppMetrics, spec: &ShardSpec) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::analysis::{profile, profile_select};
+    use crate::analysis::{profile, profile_impl, Delivery};
     use crate::fault::FaultPlan;
     use crate::ir::ProgramBuilder;
     use crate::traffic::{HierarchyPolicy, MrcMode};
@@ -535,7 +535,7 @@ mod tests {
     fn subset_run_keeps_disabled_families_empty() {
         let p = tiny_program();
         let sel = MetricSet::from_names("mix,traffic").unwrap();
-        let inline = profile_select(&p, sel).unwrap();
+        let inline = profile_impl(&p, sel, Delivery::Chunked, TrafficOpts::default()).unwrap();
         let (m, _) =
             profile_sharded_run(&p, sel, Workers::Auto, TrafficOpts::default(), clean(), false)
                 .unwrap();
@@ -551,7 +551,7 @@ mod tests {
         // different workers and the merge must still equal inline exactly
         let p = tiny_program();
         let sel = MetricSet::from_names("traffic").unwrap();
-        let inline = profile_select(&p, sel).unwrap();
+        let inline = profile_impl(&p, sel, Delivery::Chunked, TrafficOpts::default()).unwrap();
         let plan = ShardPlan::new(sel, Workers::Auto);
         assert_eq!(plan.workers(), 2, "traffic must split across two workers");
         let (m, _) =
@@ -565,12 +565,9 @@ mod tests {
         // the exclusive replay must produce the same per-level counters
         // sharded as it does inline — the policy travels into every
         // per-shard stack, not just the single-stack deliveries
-        use crate::interp::PipelineMode;
         let p = tiny_program();
         let opts = TrafficOpts::with_hierarchy(HierarchyPolicy::Exclusive);
-        let inline =
-            crate::analysis::profile_opts(&p, MetricSet::all(), PipelineMode::Inline, opts)
-                .unwrap();
+        let inline = profile_impl(&p, MetricSet::all(), Delivery::Chunked, opts).unwrap();
         let (m, _) =
             profile_sharded_run(&p, MetricSet::all(), Workers::Auto, opts, clean(), false).unwrap();
         assert_eq!(m.traffic.hierarchy_policy, HierarchyPolicy::Exclusive);
@@ -581,12 +578,9 @@ mod tests {
     fn sampled_mrc_mode_reaches_the_mem_shard() {
         // --mrc sampled must reach the (split) MRC half and merge back
         // bit-identically to the inline sampled run
-        use crate::interp::PipelineMode;
         let p = tiny_program();
         let opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 0.5 });
-        let inline =
-            crate::analysis::profile_opts(&p, MetricSet::all(), PipelineMode::Inline, opts)
-                .unwrap();
+        let inline = profile_impl(&p, MetricSet::all(), Delivery::Chunked, opts).unwrap();
         let (m, _) =
             profile_sharded_run(&p, MetricSet::all(), Workers::Auto, opts, clean(), false).unwrap();
         assert_eq!(m.traffic.mrc_mode, MrcMode::Sampled { rate: 0.5 });

@@ -1,8 +1,9 @@
 //! Hand-rolled CLI (no clap in the offline vendor set).
 //!
 //! ```text
-//! pisa-nmc pipeline [--scale F] [--seed N] [--threads N] [--no-pjrt] [--out FILE]
+//! pisa-nmc pipeline [--scale F] [--seed N] [--jobs N|auto] [--no-pjrt] [--out FILE]
 //! pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--json]
+//! pisa-nmc serve --listen ADDR [--jobs N|auto] [--queue-cap N]
 //! pisa-nmc figure {3a|3b|3c|4|5|6|mrc} [pipeline flags]
 //! pisa-nmc table {1|2} [--scale F]
 //! pisa-nmc validate [--n N]
@@ -38,6 +39,9 @@ const VALUE_FLAGS: &[&str] = &[
     "on-error",
     "record-out",
     "trace",
+    "jobs",
+    "listen",
+    "queue-cap",
 ];
 
 pub fn parse(argv: &[String]) -> Result<Args> {
@@ -150,7 +154,7 @@ pisa-nmc — Platform-Independent Software Analysis for Near-Memory Computing
 (reproduction of Corda et al., cs.PF 2019; see DESIGN.md)
 
 USAGE:
-  pisa-nmc pipeline [--scale F] [--seed N] [--threads N] [--metrics LIST]
+  pisa-nmc pipeline [--scale F] [--seed N] [--jobs N|auto] [--metrics LIST]
                     [--pipeline MODE] [--workers N|auto]
                     [--hierarchy inclusive|exclusive]
                     [--mrc exact|sampled:<rate>] [--mrc-smax N]
@@ -159,6 +163,12 @@ USAGE:
                     [--trace FILE] [--out FILE]
         full suite: profile 12 kernels, run host+NMC sims, PJRT analytics,
         print every table and figure (writes JSON report with --out)
+  pisa-nmc serve --listen ADDR [--jobs N|auto] [--queue-cap N]
+                 [--metrics LIST] [--pipeline MODE]
+                 [--hierarchy inclusive|exclusive]
+                 [--mrc exact|sampled:<rate>] [--app-timeout SECS]
+        profiling-as-a-service daemon: accept jobs as JSON lines over TCP
+        and stream each result back as it completes (details below)
   pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--metrics LIST]
                    [--pipeline MODE] [--workers N|auto]
                    [--hierarchy inclusive|exclusive]
@@ -223,6 +233,17 @@ cores) or `sharded` (analyzers shard by metric family across a pool of
 workers, every chunk broadcast to all of them; each app then uses
 2 + workers cores). Metrics are bit-identical across all modes.
 
+--jobs N|auto sets suite-level concurrency: how many apps profile at
+once, each driving its own inline/offload/sharded pipeline (`auto`, the
+default, matches the machine; `--threads N` is the deprecated spelling of
+`--jobs N`). Every concurrent app draws its pipeline threads from one
+process-global worker budget, so `--jobs 4 --pipeline sharded --workers
+auto` admits apps only as budget frees up instead of oversubscribing the
+machine. Results are streamed back into deterministic suite order, so any
+`--jobs` value is bit-identical to a sequential run (wall-clock timings
+aside). Under `--on-error fail-fast` the first failed app cancels every
+still-queued job.
+
 --workers N|auto sizes the sharded analyzer pool (`sharded` only).
 `auto` (default) plans one worker per enabled family group — tags
 (mix/branch), memory lanes (mem_entropy/reuse + the traffic MRC half),
@@ -263,6 +284,30 @@ report gains a \"trace\" provenance section.
   pisa-nmc record --kernel gesummv --n 64 --record-out g.pallas-trace
   pisa-nmc pipeline --trace g.pallas-trace --metrics all --out report.json
   pisa-nmc analyze --trace g.pallas-trace --pipeline sharded --json
+
+Serve mode: `serve` turns the same scheduler into a long-running daemon.
+Clients connect over TCP and exchange JSON lines: `{\"cmd\":\"profile\",
+\"app\":NAME}` plus optional `\"n\"`/`\"scale\"`/`\"seed\"`/`\"metrics\"`/
+`\"pipeline\"`/`\"workers\"`/`\"hierarchy\"`/`\"mrc\"` overrides (or
+`\"trace\":PATH` to replay a recording) queues a job and is answered with
+`{\"type\":\"accepted\",\"seq\":K}`; each result then streams back as
+`{\"type\":\"result\",\"seq\":K,\"app\":...,\"events_per_sec\":...}` the
+moment it completes. Invalid requests get `{\"type\":\"error\",...}`
+without poisoning the stream, a full queue answers
+`{\"type\":\"rejected\",...}` (backpressure — resubmit later), and
+`{\"cmd\":\"cancel\",\"seq\":K}` revokes a still-queued job. --queue-cap N
+bounds the per-connection queue (default 16); --jobs sizes the
+concurrent-job pool; --app-timeout arms the same per-job watchdog as the
+pipeline verb. SIGTERM drains in-flight jobs and exits cleanly.
+
+  # serve on a local port, submit a job and stream the reply with netcat
+  pisa-nmc serve --listen 127.0.0.1:7071 --jobs auto &
+  printf '%s\\n' '{\"cmd\":\"profile\",\"app\":\"gesummv\",\"n\":48}' \\
+    | nc 127.0.0.1 7071
+  # ... or with bash alone:
+  exec 3<>/dev/tcp/127.0.0.1/7071
+  printf '%s\\n' '{\"cmd\":\"profile\",\"app\":\"gesummv\",\"n\":48}' >&3
+  head -2 <&3   # accepted line, then the streamed result JSON
 
 Artifacts are searched in ./artifacts (or $PISA_NMC_ARTIFACTS); build them
 with `make artifacts`. --no-pjrt forces the native analytics fallback.
@@ -348,6 +393,28 @@ mod tests {
         let a = args(&["pipeline", "--on-error", "continue"]);
         assert_eq!(a.get("on-error"), Some("continue"));
         assert!(parse(&["pipeline".into(), "--on-error".into()]).is_err());
+    }
+
+    #[test]
+    fn jobs_flag_takes_a_value() {
+        let a = args(&["pipeline", "--jobs", "auto"]);
+        assert_eq!(a.get("jobs"), Some("auto"));
+        assert!(parse(&["pipeline".into(), "--jobs".into()]).is_err());
+    }
+
+    #[test]
+    fn listen_flag_takes_a_value() {
+        let a = args(&["serve", "--listen", "127.0.0.1:7071"]);
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.get("listen"), Some("127.0.0.1:7071"));
+        assert!(parse(&["serve".into(), "--listen".into()]).is_err());
+    }
+
+    #[test]
+    fn queue_cap_flag_takes_a_value() {
+        let a = args(&["serve", "--listen", "127.0.0.1:0", "--queue-cap", "4"]);
+        assert_eq!(a.get_usize("queue-cap", 16).unwrap(), 4);
+        assert!(parse(&["serve".into(), "--queue-cap".into()]).is_err());
     }
 
     #[test]

@@ -1,23 +1,48 @@
 //! L3 coordination: the PISA-NMC profiling pipeline.
 //!
-//! [`pipeline`] fans the workload suite across worker threads (one
-//! instrumented execution per app feeding all analyzers + the task trace,
-//! then both machine models); [`figures`] routes the numeric analytics
-//! through the AOT PJRT artifacts and regenerates every paper figure and
-//! table; [`pca`] is the native mirror of the PCA artifact used for
-//! fallback and cross-checking.
+//! The front door is [`request::ProfileRequest`] — one builder naming a
+//! target (`::app`, `::program`, `::source`, `::suite`, `::trace`) with
+//! every knob optional (`.metrics()`, `.mode()`, `.traffic()`,
+//! `.policy()`, `.jobs()`, `.budget()`) — executed against a
+//! [`request::RunCtx`] that carries process-global state: the
+//! [`sched::WorkerBudget`] every concurrent job draws shard workers from,
+//! the optional PJRT runtime, and a default supervision plan.
+//!
+//! Under it: [`pipeline`] runs *one app's* pipeline (instrumented
+//! execution feeding all analyzers + the task trace, then both machine
+//! models); [`sched`] fans K such apps out concurrently (`--jobs`) while
+//! the shared budget keeps `--jobs 4 --workers auto` from oversubscribing
+//! the machine, streaming completions back into deterministic suite
+//! order; [`serve`] exposes the same scheduler as a long-running daemon
+//! speaking JSON-lines over TCP (`pisa-nmc serve --listen ...`);
+//! [`figures`] routes the numeric analytics through the AOT PJRT
+//! artifacts and regenerates every paper figure and table; [`pca`] is the
+//! native mirror of the PCA artifact used for fallback and
+//! cross-checking.
+//!
+//! The pre-redesign positional entry points (`run_pipeline_select`,
+//! `run_suite_opts`, `profile_app_mode`, ...) survive as thin deprecated
+//! shims over the builder; new options flow only through
+//! [`ProfileRequest`]/[`PipelineCfg`], never new positional parameters.
 
 pub mod figures;
 pub mod pca;
 pub mod pipeline;
+pub mod request;
+pub mod sched;
+pub mod serve;
 
 pub use figures::{analyze_suite, Engine, SuiteAnalytics};
 pub use pca::{pca, Pca};
+#[allow(deprecated)] // the deprecated shims stay re-exported for one release
 pub use pipeline::{
     profile_app, profile_app_mode, profile_app_opts, profile_app_select, profile_app_supervised,
     replay_app, run_suite, run_suite_opts, run_suite_select, run_suite_supervised, AppFailure,
     AppOutcome, AppResult, OnError, ProfileError, SuitePolicy,
 };
+pub use request::{ProfileRequest, RunCtx};
+pub use sched::{Completion, JobKind, JobSpec, Jobs, Scheduler, SubmitError, WorkerBudget};
+pub use serve::{install_sigterm_handler, ServeCfg, Server};
 
 use std::path::Path;
 
@@ -57,12 +82,15 @@ pub struct PipelineReport {
 
 /// Every knob one pipeline run takes — bundled so the supervised entry
 /// point stays one call with one config, the same shape the CLI parses
-/// into.
+/// into. Future flags land here (or on [`ProfileRequest`]), never as new
+/// positional parameters; `PipelineCfg::default()` is a full-suite,
+/// all-metrics, inline, auto-jobs run.
 #[derive(Debug, Clone, Copy)]
 pub struct PipelineCfg {
     pub scale: f64,
     pub seed: u64,
-    pub threads: usize,
+    /// Suite-level concurrency (`--jobs`): how many apps profile at once.
+    pub jobs: Jobs,
     pub metrics: MetricSet,
     pub mode: PipelineMode,
     pub traffic: TrafficOpts,
@@ -71,18 +99,35 @@ pub struct PipelineCfg {
     pub policy: SuitePolicy,
 }
 
+impl Default for PipelineCfg {
+    fn default() -> Self {
+        PipelineCfg {
+            scale: 1.0,
+            seed: 42,
+            jobs: Jobs::Auto,
+            metrics: MetricSet::all(),
+            mode: PipelineMode::Inline,
+            traffic: TrafficOpts::default(),
+            policy: SuitePolicy::default(),
+        }
+    }
+}
+
 /// Run the full pipeline with every metric enabled, inline delivery.
+/// `threads` is the legacy name for the job concurrency; it maps to
+/// [`Jobs::Fixed`].
 pub fn run_pipeline(
     scale: f64,
     seed: u64,
     threads: usize,
     rt: Option<&Runtime>,
 ) -> Result<PipelineReport> {
-    run_pipeline_select(scale, seed, threads, rt, MetricSet::all(), PipelineMode::Inline)
+    let cfg = PipelineCfg { scale, seed, jobs: Jobs::Fixed(threads), ..PipelineCfg::default() };
+    run_pipeline_cfg(&cfg, rt)
 }
 
-/// [`run_pipeline_opts`] with the default traffic options (inclusive
-/// hierarchy replay, exact MRC).
+/// [`run_pipeline_cfg`] with the default traffic options.
+#[deprecated(note = "build a PipelineCfg and call run_pipeline_cfg instead")]
 pub fn run_pipeline_select(
     scale: f64,
     seed: u64,
@@ -91,14 +136,19 @@ pub fn run_pipeline_select(
     metrics: MetricSet,
     mode: PipelineMode,
 ) -> Result<PipelineReport> {
-    run_pipeline_opts(scale, seed, threads, rt, metrics, mode, TrafficOpts::default())
+    let cfg = PipelineCfg {
+        scale,
+        seed,
+        jobs: Jobs::Fixed(threads),
+        metrics,
+        mode,
+        ..PipelineCfg::default()
+    };
+    run_pipeline_cfg(&cfg, rt)
 }
 
-/// Run the full pipeline: profile suite (selected analyzer families,
-/// selected delivery mode, selected traffic options) → artifacts
-/// analytics → report. `metrics` is the CLI `--metrics` flag, `mode` the
-/// CLI `--pipeline` flag and `traffic` bundles the CLI `--hierarchy` and
-/// `--mrc` flags, all threaded into every worker's run.
+/// [`run_pipeline_cfg`] with the default supervision policy.
+#[deprecated(note = "build a PipelineCfg and call run_pipeline_cfg instead")]
 pub fn run_pipeline_opts(
     scale: f64,
     seed: u64,
@@ -111,73 +161,30 @@ pub fn run_pipeline_opts(
     let cfg = PipelineCfg {
         scale,
         seed,
-        threads,
+        jobs: Jobs::Fixed(threads),
         metrics,
         mode,
         traffic,
-        policy: SuitePolicy::default(),
+        ..PipelineCfg::default()
     };
     run_pipeline_cfg(&cfg, rt)
 }
 
 /// The fully-parameterized pipeline: profile the suite under `cfg`'s
-/// supervision plan and failure policy, then run the analytics over the
-/// apps that survived. Under fail-fast (the default policy) this is
-/// exactly [`run_pipeline_opts`]; under `--on-error continue`, failed
-/// apps land in [`PipelineReport::failures`] and the analytics cover the
-/// successes only.
+/// supervision plan, failure policy and job concurrency, then run the
+/// analytics over the apps that survived. Under fail-fast (the default
+/// policy) any app failure aborts the run; under `--on-error continue`,
+/// failed apps land in [`PipelineReport::failures`] and the analytics
+/// cover the successes only. This is sugar for [`ProfileRequest::suite`]
+/// + [`ProfileRequest::run`].
 pub fn run_pipeline_cfg(cfg: &PipelineCfg, rt: Option<&Runtime>) -> Result<PipelineReport> {
-    // same effective set the workers profile with, so the report's
-    // "metrics" list describes the families that actually ran
-    let metrics = cfg.metrics.with_simulation_requirements();
-    let outcomes = run_suite_supervised(
-        cfg.scale,
-        cfg.seed,
-        cfg.threads,
-        metrics,
-        cfg.mode,
-        cfg.traffic,
-        cfg.policy,
-    )?;
-    let mut apps = Vec::new();
-    let mut failures = Vec::new();
-    for out in outcomes {
-        match out {
-            AppOutcome::Ok(r) => apps.push(*r),
-            AppOutcome::Failed(f) => failures.push(*f),
-        }
-    }
-    let analytics = if apps.is_empty() {
-        // every app failed: synthesize an empty analytics block so the
-        // report still renders (fig6 indexes loadings/eigenvalues by
-        // feature and component, so those keep their static shapes)
-        SuiteAnalytics {
-            engine: Engine::Native,
-            entropies: Vec::new(),
-            entropy_diff: Vec::new(),
-            spatial: Vec::new(),
-            pca: Pca {
-                scores: Vec::new(),
-                loadings: vec![vec![0.0; 2]; 4],
-                eigenvalues: vec![0.0; 2],
-                explained_variance_ratio: vec![0.0; 2],
-            },
-            max_crosscheck_err: 0.0,
-        }
-    } else {
-        analyze_suite(&apps, rt)?
-    };
-    Ok(PipelineReport {
-        apps,
-        failures,
-        analytics,
-        scale: cfg.scale,
-        seed: cfg.seed,
-        metrics,
-        mode: cfg.mode,
-        traffic: cfg.traffic,
-        trace: None,
-    })
+    ProfileRequest::suite(cfg.scale, cfg.seed)
+        .metrics(cfg.metrics)
+        .mode(cfg.mode)
+        .traffic(cfg.traffic)
+        .policy(cfg.policy)
+        .jobs(cfg.jobs)
+        .run(&RunCtx::with_runtime(rt))
 }
 
 /// Replay one recorded `.pallas-trace` through the pipeline report shape:

@@ -1,40 +1,44 @@
-//! The profiling pipeline: fan the 12 workloads out over worker threads,
-//! run each through one instrumented execution (the full `AnalyzerStack`
-//! plus the task trace in a single chunked pass) and both machine models,
-//! then post-process the numeric analytics through the PJRT artifacts on
-//! the main thread.
+//! The per-app profiling pipeline: run one kernel (or one recorded
+//! trace) through a single instrumented execution — the full
+//! `AnalyzerStack` plus the task trace in one chunked pass — and both
+//! machine models, folding every failure mode into a structured
+//! [`AppOutcome`].
 //!
-//! Rust owns the event loop and process topology (L3 of the architecture);
-//! the PJRT artifacts own the batched numeric analytics (L2/L1). Worker
-//! count is bounded by `available_parallelism`; jobs stream through a
-//! bounded channel so a slow workload cannot pile up unbounded memory.
+//! Rust owns the event loop and process topology (L3 of the
+//! architecture); the PJRT artifacts own the batched numeric analytics
+//! (L2/L1). Suite-level fan-out lives in [`super::sched`]: the
+//! [`Scheduler`](super::sched::Scheduler) runs K apps concurrently
+//! (`--jobs`), each driving the per-app pipeline defined here, drawing
+//! analysis threads from one process-global
+//! [`WorkerBudget`](super::sched::WorkerBudget).
 //!
-//! With [`PipelineMode::Offload`] each worker additionally pairs its
-//! interpreter with a dedicated analysis thread (see
-//! [`crate::interp::offload`]), so one app occupies two cores while it
-//! runs; with [`PipelineMode::Sharded`] each app adds a broadcaster plus
-//! one analyzer worker per planned shard (up to 5 with every family
-//! enabled, now that the traffic family's MRC and hierarchy halves land
-//! on separate workers) — size `--threads` accordingly on small machines.
+//! With [`PipelineMode::Offload`] an app pairs its interpreter with a
+//! dedicated analysis thread (see [`crate::interp::offload`]), so it
+//! occupies two cores while it runs; with [`PipelineMode::Sharded`] it
+//! adds a broadcaster plus one analyzer worker per planned shard (up to 5
+//! with every family enabled, now that the traffic family's MRC and
+//! hierarchy halves land on separate workers). The worker budget accounts
+//! for exactly that appetite per running job.
 
 use std::fmt;
 use std::path::Path;
-use std::sync::mpsc;
-use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::analysis::{
-    profile_source_with_tasks, profile_with_tasks, profile_with_tasks_supervised, AppMetrics,
-    MetricSet,
+    delivery_for, profile_run, profile_source_with_tasks, AppMetrics, Delivery, MetricSet,
 };
 use crate::fault::{PanicError, SuperviseOpts, TimeoutError};
 use crate::interp::PipelineMode;
 use crate::sim::{self, EdpComparison, Region};
 use crate::trace::{TraceProvenance, TraceReader};
 use crate::traffic::TrafficOpts;
-use crate::workloads::{by_name, registry, scaled_n, Kernel};
+use crate::util::Json;
+use crate::workloads::{by_name, Kernel};
+
+use super::request::{ProfileRequest, RunCtx};
+use super::sched::Jobs;
 
 /// Per-application pipeline output.
 #[derive(Debug, Clone)]
@@ -51,6 +55,16 @@ impl AppResult {
     /// reports, not just in benches.
     pub fn events_per_sec(&self) -> f64 {
         self.metrics.exec.events_per_sec()
+    }
+
+    /// The single-app result object: the full metric JSON plus the
+    /// workload size and the host-vs-NMC EDP comparison — what the CLI
+    /// `analyze` verb prints and the `serve` daemon streams per job.
+    pub fn to_json(&self) -> Json {
+        let mut j = self.metrics.to_json();
+        j.set("n", self.n);
+        j.set("edp", self.cmp.to_json());
+        j
     }
 }
 
@@ -71,6 +85,9 @@ pub enum ProfileError {
     /// the listed families are lost, the rest stay bit-identical to a
     /// clean run. The salvaged metrics ride in [`AppFailure::partial`].
     Degraded { failed_families: Vec<String> },
+    /// The job never ran: it was still queued when the scheduler aborted
+    /// (fail-fast), shut down, or honored an explicit cancellation.
+    Cancelled,
 }
 
 impl ProfileError {
@@ -81,6 +98,7 @@ impl ProfileError {
             ProfileError::WorkerPanic { .. } => "worker-panic",
             ProfileError::Timeout { .. } => "timeout",
             ProfileError::Degraded { .. } => "degraded",
+            ProfileError::Cancelled => "cancelled",
         }
     }
 
@@ -93,7 +111,7 @@ impl ProfileError {
 
     /// Classify a profiling error by the typed faults the supervised
     /// pipeline embeds (see [`crate::fault`]).
-    fn classify(e: &anyhow::Error) -> ProfileError {
+    pub(crate) fn classify(e: &anyhow::Error) -> ProfileError {
         if let Some(t) = e.downcast_ref::<TimeoutError>() {
             ProfileError::Timeout { secs: t.secs }
         } else if let Some(p) = e.downcast_ref::<PanicError>() {
@@ -115,6 +133,7 @@ impl fmt::Display for ProfileError {
             ProfileError::Degraded { failed_families } => {
                 write!(f, "degraded; failed families: {}", failed_families.join(", "))
             }
+            ProfileError::Cancelled => write!(f, "cancelled before running"),
         }
     }
 }
@@ -152,7 +171,8 @@ impl AppOutcome {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum OnError {
     /// Abort the whole suite on the first failed app (the legacy
-    /// behavior and the default).
+    /// behavior and the default). Jobs still queued when the failure
+    /// surfaces are cancelled.
     #[default]
     FailFast,
     /// Profile every app regardless; failures land in the report's
@@ -186,23 +206,37 @@ pub struct SuitePolicy {
     pub on_error: OnError,
 }
 
-/// Profile one kernel with every metric enabled (inline delivery).
-pub fn profile_app(k: &dyn Kernel, n: usize, seed: u64) -> Result<AppResult> {
-    profile_app_select(k, n, seed, MetricSet::all())
+/// The delivery one scheduled job drives: `per_event` selects the
+/// un-batched reference path, otherwise the job's [`PipelineMode`] maps
+/// onto the chunked deliveries.
+pub(crate) fn job_delivery(mode: PipelineMode, per_event: bool) -> Delivery {
+    if per_event {
+        Delivery::PerEvent
+    } else {
+        delivery_for(mode)
+    }
 }
 
-/// [`profile_app_mode`] with inline delivery.
+/// Profile one kernel with every metric enabled (inline delivery) — the
+/// blessed shorthand; every other knob flows through
+/// [`ProfileRequest`](super::ProfileRequest).
+pub fn profile_app(k: &dyn Kernel, n: usize, seed: u64) -> Result<AppResult> {
+    ProfileRequest::app(k, n, seed).run_strict(&RunCtx::new())
+}
+
+/// [`profile_app`] restricted to a metric subset.
+#[deprecated(note = "build a coordinator::ProfileRequest::app(..).metrics(..) instead")]
 pub fn profile_app_select(
     k: &dyn Kernel,
     n: usize,
     seed: u64,
     metrics: MetricSet,
 ) -> Result<AppResult> {
-    profile_app_mode(k, n, seed, metrics, PipelineMode::Inline)
+    ProfileRequest::app(k, n, seed).metrics(metrics).run_strict(&RunCtx::new())
 }
 
-/// [`profile_app_opts`] with the default traffic options (inclusive
-/// hierarchy replay, exact MRC).
+/// [`profile_app`] with metric subset and delivery mode knobs.
+#[deprecated(note = "build a coordinator::ProfileRequest::app(..).mode(..) instead")]
 pub fn profile_app_mode(
     k: &dyn Kernel,
     n: usize,
@@ -210,22 +244,13 @@ pub fn profile_app_mode(
     metrics: MetricSet,
     mode: PipelineMode,
 ) -> Result<AppResult> {
-    profile_app_opts(k, n, seed, metrics, mode, TrafficOpts::default())
+    ProfileRequest::app(k, n, seed).metrics(metrics).mode(mode).run_strict(&RunCtx::new())
 }
 
-/// Profile one kernel: single instrumented execution feeding the selected
-/// analyzers *and* the task-trace collector, then both machine
-/// simulations. This is `analysis::profile_with_tasks` plus the
-/// simulation layer. `mode` selects whether the analyzers fold inline on
-/// the interpreter thread, on one dedicated analysis thread, or sharded
-/// by metric family across a worker pool (see [`crate::interp::offload`]);
-/// `opts` selects the traffic subsystem's replay policy and MRC mode (CLI
-/// `--hierarchy` / `--mrc`); exact-mode metrics are bit-identical on every
-/// path.
-///
-/// Sim-required families (ILP — see
-/// [`MetricSet::with_simulation_requirements`]) are force-enabled
-/// regardless of `metrics`.
+/// The fully-parameterized positional single-app entry point. Superseded
+/// by [`ProfileRequest`](super::ProfileRequest), which reaches the same
+/// engine without growing a positional signature per knob.
+#[deprecated(note = "build a coordinator::ProfileRequest::app(..) instead")]
 pub fn profile_app_opts(
     k: &dyn Kernel,
     n: usize,
@@ -234,12 +259,39 @@ pub fn profile_app_opts(
     mode: PipelineMode,
     opts: TrafficOpts,
 ) -> Result<AppResult> {
+    ProfileRequest::app(k, n, seed)
+        .metrics(metrics)
+        .mode(mode)
+        .traffic(opts)
+        .run_strict(&RunCtx::new())
+}
+
+/// The strict per-app engine: single instrumented execution feeding the
+/// selected analyzers *and* the task-trace collector, then both machine
+/// simulations. Any failure (including a degraded run — the machine
+/// models need the full task trace) is an `Err`. Sim-required families
+/// (ILP — see [`MetricSet::with_simulation_requirements`]) are
+/// force-enabled regardless of `metrics`.
+pub(crate) fn run_kernel(
+    k: &dyn Kernel,
+    n: usize,
+    seed: u64,
+    metrics: MetricSet,
+    delivery: Delivery,
+    opts: TrafficOpts,
+) -> Result<AppResult> {
     let metrics = metrics.with_simulation_requirements();
     let prog = k.build(n, seed);
-    let (metrics, regions): (AppMetrics, Vec<Region>) =
-        profile_with_tasks(&prog, metrics, mode, opts)
-            .with_context(|| format!("running {}", k.info().name))?;
-    Ok(simulate(metrics, n, &regions))
+    let (m, regions) = (|| -> Result<(AppMetrics, Vec<Region>)> {
+        let (m, regions) =
+            profile_run(&prog, metrics, delivery, opts, SuperviseOpts::default(), true)?;
+        if !m.failed.is_empty() {
+            bail!("analysis degraded; failed families: {}", m.failed.join(", "));
+        }
+        Ok((m, regions.expect("task trace enabled")))
+    })()
+    .with_context(|| format!("running {}", k.info().name))?;
+    Ok(simulate(m, n, &regions))
 }
 
 /// Run both machine models over the region trace and assemble the final
@@ -292,7 +344,7 @@ pub fn replay_app(
     Ok((simulate(m, n, &regions), reader.provenance()))
 }
 
-/// [`profile_app_opts`] under a supervision plan (`--inject-fault`,
+/// Profile one kernel under a supervision plan (`--inject-fault`,
 /// `--app-timeout`): never returns `Err` — every failure mode is folded
 /// into a structured [`AppOutcome::Failed`]. Analyzer-shard deaths come
 /// back as [`ProfileError::Degraded`] with the salvaged metrics attached;
@@ -306,8 +358,23 @@ pub fn profile_app_supervised(
     opts: TrafficOpts,
     sup: SuperviseOpts,
 ) -> AppOutcome {
+    run_kernel_supervised(k, n, seed, metrics, delivery_for(mode), opts, sup)
+}
+
+/// The supervised per-app engine every scheduled job lands on (the
+/// delivery is already resolved, so the per-event reference arm rides the
+/// same path as the chunked modes).
+pub(crate) fn run_kernel_supervised(
+    k: &dyn Kernel,
+    n: usize,
+    seed: u64,
+    metrics: MetricSet,
+    delivery: Delivery,
+    opts: TrafficOpts,
+    sup: SuperviseOpts,
+) -> AppOutcome {
     let start = Instant::now();
-    match try_profile_app_supervised(k, n, seed, metrics, mode, opts, sup) {
+    match try_run_kernel_supervised(k, n, seed, metrics, delivery, opts, sup) {
         Ok(outcome) => outcome,
         Err(e) => AppOutcome::Failed(Box::new(AppFailure {
             name: k.info().name.to_string(),
@@ -318,18 +385,18 @@ pub fn profile_app_supervised(
     }
 }
 
-fn try_profile_app_supervised(
+fn try_run_kernel_supervised(
     k: &dyn Kernel,
     n: usize,
     seed: u64,
     metrics: MetricSet,
-    mode: PipelineMode,
+    delivery: Delivery,
     opts: TrafficOpts,
     sup: SuperviseOpts,
 ) -> Result<AppOutcome> {
     let metrics = metrics.with_simulation_requirements();
     let prog = k.build(n, seed);
-    let (m, regions) = profile_with_tasks_supervised(&prog, metrics, mode, opts, sup)
+    let (m, regions) = profile_run(&prog, metrics, delivery, opts, sup, true)
         .with_context(|| format!("running {}", k.info().name))?;
     let Some(regions) = regions.filter(|_| m.failed.is_empty()) else {
         // degraded: the surviving families are intact, but the machine
@@ -345,13 +412,16 @@ fn try_profile_app_supervised(
     Ok(AppOutcome::Ok(Box::new(simulate(m, n, &regions))))
 }
 
-/// Run the whole suite with every metric enabled, inline delivery.
+/// Run the whole suite with every metric enabled, inline delivery,
+/// `threads` concurrent apps — the blessed shorthand; every other knob
+/// flows through [`ProfileRequest`](super::ProfileRequest) or
+/// [`PipelineCfg`](super::PipelineCfg).
 pub fn run_suite(scale: f64, seed: u64, threads: usize) -> Result<Vec<AppResult>> {
-    run_suite_select(scale, seed, threads, MetricSet::all(), PipelineMode::Inline)
+    ProfileRequest::suite(scale, seed).jobs(Jobs::Fixed(threads)).run_apps(&RunCtx::new())
 }
 
-/// [`run_suite_opts`] with the default traffic options (inclusive
-/// hierarchy replay, exact MRC).
+/// [`run_suite`] with metric subset and delivery mode knobs.
+#[deprecated(note = "build a coordinator::ProfileRequest::suite(..) instead")]
 pub fn run_suite_select(
     scale: f64,
     seed: u64,
@@ -359,14 +429,15 @@ pub fn run_suite_select(
     metrics: MetricSet,
     mode: PipelineMode,
 ) -> Result<Vec<AppResult>> {
-    run_suite_opts(scale, seed, threads, metrics, mode, TrafficOpts::default())
+    ProfileRequest::suite(scale, seed)
+        .jobs(Jobs::Fixed(threads))
+        .metrics(metrics)
+        .mode(mode)
+        .run_apps(&RunCtx::new())
 }
 
-/// Run the whole suite, `scale` applied to every kernel's default size,
-/// `metrics` selecting the analyzer families, `mode` the event delivery
-/// (inline, or overlapped on per-app analysis threads) and `opts` the
-/// traffic subsystem's replay policy and MRC mode. Results come back in
-/// registry order regardless of completion order.
+/// The fully-parameterized positional suite entry point.
+#[deprecated(note = "build a coordinator::ProfileRequest::suite(..) instead")]
 pub fn run_suite_opts(
     scale: f64,
     seed: u64,
@@ -375,24 +446,17 @@ pub fn run_suite_opts(
     mode: PipelineMode,
     opts: TrafficOpts,
 ) -> Result<Vec<AppResult>> {
-    let outcomes =
-        run_suite_supervised(scale, seed, threads, metrics, mode, opts, SuitePolicy::default())?;
-    outcomes
-        .into_iter()
-        .map(|o| match o {
-            AppOutcome::Ok(r) => Ok(*r),
-            // unreachable under the default fail-fast policy, which
-            // surfaces the first failure as the suite error above
-            AppOutcome::Failed(f) => bail!("{} failed: {}", f.name, f.error),
-        })
-        .collect()
+    ProfileRequest::suite(scale, seed)
+        .jobs(Jobs::Fixed(threads))
+        .metrics(metrics)
+        .mode(mode)
+        .traffic(opts)
+        .run_apps(&RunCtx::new())
 }
 
-/// [`run_suite_opts`] under a supervision plan and failure policy: each
-/// app comes back as an [`AppOutcome`] instead of aborting the suite.
-/// Under [`OnError::FailFast`] the first failed app still aborts (the
-/// legacy behavior); under [`OnError::Continue`] the remaining apps keep
-/// profiling and failures ride along structurally.
+/// The positional supervised-suite entry point: each app comes back as an
+/// [`AppOutcome`] instead of aborting the suite.
+#[deprecated(note = "build a coordinator::ProfileRequest::suite(..).policy(..) instead")]
 pub fn run_suite_supervised(
     scale: f64,
     seed: u64,
@@ -402,49 +466,13 @@ pub fn run_suite_supervised(
     opts: TrafficOpts,
     policy: SuitePolicy,
 ) -> Result<Vec<AppOutcome>> {
-    let kernels = registry();
-    let n_jobs = kernels.len();
-    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    let threads = threads.clamp(1, n_jobs.min(hw).max(1));
-
-    // job queue: indices into the registry, pulled by workers
-    let jobs: Mutex<Vec<usize>> = Mutex::new((0..n_jobs).rev().collect());
-    let (tx, rx) = mpsc::channel::<(usize, AppOutcome)>();
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let tx = tx.clone();
-            let jobs = &jobs;
-            scope.spawn(move || loop {
-                let Some(idx) = jobs.lock().unwrap().pop() else {
-                    break;
-                };
-                // fresh registry per thread: Kernel is stateless
-                let k = &registry()[idx];
-                let n = scaled_n(k.as_ref(), scale);
-                let out = profile_app_supervised(k.as_ref(), n, seed, metrics, mode, opts, policy.sup);
-                if tx.send((idx, out)).is_err() {
-                    break;
-                }
-            });
-        }
-        drop(tx);
-
-        let mut slots: Vec<Option<AppOutcome>> = (0..n_jobs).map(|_| None).collect();
-        for (idx, out) in rx {
-            if policy.on_error == OnError::FailFast {
-                if let AppOutcome::Failed(f) = &out {
-                    bail!("{} failed: {}", f.name, f.error);
-                }
-            }
-            slots[idx] = Some(out);
-        }
-        slots
-            .into_iter()
-            .enumerate()
-            .map(|(i, s)| s.with_context(|| format!("job {i} produced no result")))
-            .collect()
-    })
+    ProfileRequest::suite(scale, seed)
+        .jobs(Jobs::Fixed(threads))
+        .metrics(metrics)
+        .mode(mode)
+        .traffic(opts)
+        .policy(policy)
+        .outcomes(&RunCtx::new())
 }
 
 #[cfg(test)]
@@ -461,6 +489,11 @@ mod tests {
         assert!(r.cmp.host.time_s > 0.0 && r.cmp.nmc.time_s > 0.0);
         assert_eq!(r.cmp.host.dyn_instrs, r.cmp.nmc.dyn_instrs);
         assert!(r.events_per_sec() > 0.0, "throughput must be recorded");
+        // the result JSON carries the metric sections plus n and EDP
+        let s = r.to_json().to_string_compact();
+        for key in ["instruction_mix", "\"n\"", "\"edp\"", "events_per_sec"] {
+            assert!(s.contains(key), "missing {key}");
+        }
     }
 
     #[test]
@@ -477,8 +510,10 @@ mod tests {
     fn offload_app_matches_inline_bit_identically() {
         let k = by_name("gesummv").unwrap();
         let inline = profile_app(k.as_ref(), 20, 1).unwrap();
-        let offl =
-            profile_app_mode(k.as_ref(), 20, 1, MetricSet::all(), PipelineMode::Offload).unwrap();
+        let offl = ProfileRequest::app(k.as_ref(), 20, 1)
+            .mode(PipelineMode::Offload)
+            .run_strict(&RunCtx::new())
+            .unwrap();
         assert_eq!(
             inline.metrics.pca8_features().map(f64::to_bits),
             offl.metrics.pca8_features().map(f64::to_bits)
@@ -492,7 +527,11 @@ mod tests {
 
     #[test]
     fn tiny_suite_runs_offloaded() {
-        let rs = run_suite_select(0.05, 7, 2, MetricSet::all(), PipelineMode::Offload).unwrap();
+        let rs = ProfileRequest::suite(0.05, 7)
+            .mode(PipelineMode::Offload)
+            .jobs(Jobs::Fixed(2))
+            .run_apps(&RunCtx::new())
+            .unwrap();
         assert_eq!(rs.len(), 12);
         for r in &rs {
             assert!(r.metrics.exec.dyn_instrs > 0, "{}", r.name);
@@ -505,14 +544,10 @@ mod tests {
         use crate::interp::Workers;
         let k = by_name("gesummv").unwrap();
         let inline = profile_app(k.as_ref(), 20, 1).unwrap();
-        let sharded = profile_app_mode(
-            k.as_ref(),
-            20,
-            1,
-            MetricSet::all(),
-            PipelineMode::Sharded { workers: Workers::Fixed(3) },
-        )
-        .unwrap();
+        let sharded = ProfileRequest::app(k.as_ref(), 20, 1)
+            .mode(PipelineMode::Sharded { workers: Workers::Fixed(3) })
+            .run_strict(&RunCtx::new())
+            .unwrap();
         assert_eq!(
             inline.metrics.pca8_features().map(f64::to_bits),
             sharded.metrics.pca8_features().map(f64::to_bits)
@@ -528,8 +563,11 @@ mod tests {
     #[test]
     fn tiny_suite_runs_sharded() {
         use crate::interp::Workers;
-        let mode = PipelineMode::Sharded { workers: Workers::Auto };
-        let rs = run_suite_select(0.05, 7, 2, MetricSet::all(), mode).unwrap();
+        let rs = ProfileRequest::suite(0.05, 7)
+            .mode(PipelineMode::Sharded { workers: Workers::Auto })
+            .jobs(Jobs::Fixed(2))
+            .run_apps(&RunCtx::new())
+            .unwrap();
         assert_eq!(rs.len(), 12);
         for r in &rs {
             assert!(r.metrics.exec.dyn_instrs > 0, "{}", r.name);
@@ -541,15 +579,10 @@ mod tests {
     fn hierarchy_policy_threads_through_the_app_pipeline() {
         use crate::traffic::HierarchyPolicy;
         let k = by_name("gesummv").unwrap();
-        let excl = profile_app_opts(
-            k.as_ref(),
-            20,
-            1,
-            MetricSet::all(),
-            PipelineMode::Inline,
-            TrafficOpts::with_hierarchy(HierarchyPolicy::Exclusive),
-        )
-        .unwrap();
+        let excl = ProfileRequest::app(k.as_ref(), 20, 1)
+            .traffic(TrafficOpts::with_hierarchy(HierarchyPolicy::Exclusive))
+            .run_strict(&RunCtx::new())
+            .unwrap();
         assert_eq!(excl.metrics.traffic.hierarchy_policy, HierarchyPolicy::Exclusive);
         // the default wrapper stays inclusive
         let incl = profile_app(k.as_ref(), 20, 1).unwrap();
@@ -568,9 +601,10 @@ mod tests {
         use crate::traffic::MrcMode;
         let k = by_name("gesummv").unwrap();
         let opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 0.5 });
-        let sampled =
-            profile_app_opts(k.as_ref(), 20, 1, MetricSet::all(), PipelineMode::Inline, opts)
-                .unwrap();
+        let sampled = ProfileRequest::app(k.as_ref(), 20, 1)
+            .traffic(opts)
+            .run_strict(&RunCtx::new())
+            .unwrap();
         assert_eq!(sampled.metrics.traffic.mrc_mode, MrcMode::Sampled { rate: 0.5 });
         assert!(
             sampled.metrics.traffic.mrc_sampled_accesses < sampled.metrics.traffic.accesses,
@@ -585,11 +619,14 @@ mod tests {
 
     #[test]
     fn metric_subset_still_simulates() {
-        // ilp deliberately NOT selected: profile_app must force it on so
+        // ilp deliberately NOT selected: the pipeline must force it on so
         // the host model simulates with measured ILP, not a zeroed one
         let k = by_name("gesummv").unwrap();
         let sel = MetricSet::from_names("mix").unwrap();
-        let r = profile_app_select(k.as_ref(), 16, 1, sel).unwrap();
+        let r = ProfileRequest::app(k.as_ref(), 16, 1)
+            .metrics(sel)
+            .run_strict(&RunCtx::new())
+            .unwrap();
         assert!(r.metrics.mix.total() > 0);
         assert!(r.metrics.ilp.inf >= 1.0, "ILP must be force-enabled for sims");
         assert!(r.cmp.host.time_s > 0.0 && r.cmp.nmc.time_s > 0.0);
@@ -662,16 +699,11 @@ mod tests {
                 .with_fault(FaultPlan::from_spec("interp-error@interp").unwrap()),
             on_error: OnError::Continue,
         };
-        let outs = run_suite_supervised(
-            0.05,
-            7,
-            2,
-            MetricSet::all(),
-            PipelineMode::Inline,
-            TrafficOpts::default(),
-            policy,
-        )
-        .unwrap();
+        let outs = ProfileRequest::suite(0.05, 7)
+            .jobs(Jobs::Fixed(2))
+            .policy(policy)
+            .outcomes(&RunCtx::new())
+            .unwrap();
         assert_eq!(outs.len(), 12, "continue must still yield every slot");
         for o in &outs {
             match o {
@@ -685,15 +717,10 @@ mod tests {
         }
         // the same plan under fail-fast aborts the whole suite
         let ff = SuitePolicy { on_error: OnError::FailFast, ..policy };
-        let res = run_suite_supervised(
-            0.05,
-            7,
-            2,
-            MetricSet::all(),
-            PipelineMode::Inline,
-            TrafficOpts::default(),
-            ff,
-        );
+        let res = ProfileRequest::suite(0.05, 7)
+            .jobs(Jobs::Fixed(2))
+            .policy(ff)
+            .outcomes(&RunCtx::new());
         assert!(res.is_err());
     }
 

@@ -1,0 +1,578 @@
+//! The consolidated profiling API: one [`ProfileRequest`] builder plus a
+//! [`RunCtx`] of process-global state, replacing the positional
+//! `profile_*`/`run_suite_*`/`run_pipeline_*` ladder that grew one public
+//! signature per knob for eight PRs.
+//!
+//! A request names a *target* — one kernel ([`ProfileRequest::app`]), a
+//! raw program ([`ProfileRequest::program`]), an externally-produced
+//! event stream ([`ProfileRequest::source`]), the whole workload suite
+//! ([`ProfileRequest::suite`]) or a recorded `.pallas-trace`
+//! ([`ProfileRequest::trace`]) — and layers knobs on top with builder
+//! methods, every one of them optional:
+//!
+//! ```ignore
+//! let ctx = RunCtx::new();
+//! let report = ProfileRequest::suite(0.5, 42)
+//!     .metrics(MetricSet::from_names("traffic,mix")?)
+//!     .mode(PipelineMode::Sharded { workers: Workers::Auto })
+//!     .jobs(Jobs::Auto)
+//!     .run(&ctx)?;
+//! ```
+//!
+//! The context carries what outlives any one request: the process-global
+//! [`WorkerBudget`] every scheduled job draws on, the optional PJRT
+//! [`Runtime`] for the suite analytics, and a default supervision plan.
+//! Requests run through the [`super::sched::Scheduler`] when they fan out
+//! (suite targets) and hit the per-app engines in [`super::pipeline`]
+//! directly otherwise; either way the metrics are bit-identical to the
+//! legacy positional entry points, which are now thin deprecated shims
+//! over this builder.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::analysis::{profile_run, profile_source_run, AppMetrics, MetricSet};
+use crate::fault::SuperviseOpts;
+use crate::interp::PipelineMode;
+use crate::ir::Program;
+use crate::runtime::Runtime;
+use crate::trace::TraceSource;
+use crate::traffic::TrafficOpts;
+use crate::workloads::{registry, scaled_n, Kernel};
+
+use super::figures::{analyze_suite, Engine, SuiteAnalytics};
+use super::pca::Pca;
+use super::pipeline::{
+    job_delivery, replay_app, run_kernel, run_kernel_supervised, AppFailure, AppOutcome,
+    AppResult, OnError, ProfileError, SuitePolicy,
+};
+use super::sched::{JobKind, JobSpec, Jobs, Scheduler, WorkerBudget};
+use super::{PipelineCfg, PipelineReport};
+
+/// Process-global run state shared across profiling requests: the worker
+/// budget the scheduler accounts jobs against, the optional PJRT runtime
+/// the suite analytics use, and the default supervision plan a request
+/// inherits unless it sets its own.
+pub struct RunCtx<'rt> {
+    pub(crate) budget: Arc<WorkerBudget>,
+    rt: Option<&'rt Runtime>,
+    sup: SuperviseOpts,
+}
+
+impl Default for RunCtx<'static> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunCtx<'static> {
+    /// A fresh context: machine-sized worker budget, native analytics
+    /// (no PJRT runtime), no supervision.
+    pub fn new() -> Self {
+        RunCtx {
+            budget: WorkerBudget::machine(),
+            rt: None,
+            sup: SuperviseOpts::default(),
+        }
+    }
+}
+
+impl<'rt> RunCtx<'rt> {
+    /// A context wired to the PJRT runtime (the suite analytics prefer
+    /// the AOT artifacts when one is loaded).
+    pub fn with_runtime(rt: Option<&'rt Runtime>) -> RunCtx<'rt> {
+        RunCtx { budget: WorkerBudget::machine(), rt, sup: SuperviseOpts::default() }
+    }
+
+    /// Replace the worker budget (e.g. one shared budget across a daemon
+    /// and a foreground pipeline in the same process).
+    pub fn budget(mut self, budget: Arc<WorkerBudget>) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Default supervision plan for requests that don't carry their own.
+    pub fn supervise(mut self, sup: SuperviseOpts) -> Self {
+        self.sup = sup;
+        self
+    }
+
+    /// The process-global worker budget scheduled jobs draw on.
+    pub fn worker_budget(&self) -> &Arc<WorkerBudget> {
+        &self.budget
+    }
+
+    /// The PJRT runtime, when one is loaded.
+    pub fn runtime(&self) -> Option<&'rt Runtime> {
+        self.rt
+    }
+}
+
+/// What a [`ProfileRequest`] profiles.
+enum Target<'p> {
+    /// One registry (or user-supplied) kernel at an explicit size/seed.
+    App { k: &'p dyn Kernel, n: usize, seed: u64 },
+    /// A raw program — metrics only, no simulation layer.
+    Program { prog: &'p Program },
+    /// A program analyzed against an external event stream.
+    Source { prog: &'p Program, source: &'p mut dyn TraceSource },
+    /// The whole workload suite at a size scale.
+    Suite { scale: f64, seed: u64 },
+    /// A recorded `.pallas-trace` replay.
+    Trace { path: PathBuf },
+}
+
+/// One profiling request: a target plus every optional knob, finished by
+/// an exec method matching the target's shape (see the module doc).
+///
+/// | exec method | targets | returns |
+/// |---|---|---|
+/// | [`run`](Self::run) | suite, trace | [`PipelineReport`] |
+/// | [`outcomes`](Self::outcomes) | suite | `Vec<AppOutcome>` |
+/// | [`run_apps`](Self::run_apps) | suite | `Vec<AppResult>` (strict) |
+/// | [`run_app`](Self::run_app) | app, trace | [`AppOutcome`] |
+/// | [`run_strict`](Self::run_strict) | app, trace | [`AppResult`] |
+/// | [`run_metrics`](Self::run_metrics) | app, program, source | [`AppMetrics`] |
+pub struct ProfileRequest<'p> {
+    target: Target<'p>,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    traffic: TrafficOpts,
+    /// `None` inherits the context's supervision plan.
+    sup: Option<SuperviseOpts>,
+    on_error: OnError,
+    jobs: Jobs,
+    per_event: bool,
+    /// `None` inherits the context's budget.
+    budget: Option<Arc<WorkerBudget>>,
+}
+
+impl<'p> ProfileRequest<'p> {
+    fn with_target(target: Target<'p>) -> Self {
+        ProfileRequest {
+            target,
+            metrics: MetricSet::all(),
+            mode: PipelineMode::Inline,
+            traffic: TrafficOpts::default(),
+            sup: None,
+            on_error: OnError::default(),
+            jobs: Jobs::Auto,
+            per_event: false,
+            budget: None,
+        }
+    }
+
+    /// Profile one kernel (any [`Kernel`], registry or user-built) at an
+    /// explicit size and seed.
+    pub fn app(k: &'p dyn Kernel, n: usize, seed: u64) -> Self {
+        Self::with_target(Target::App { k, n, seed })
+    }
+
+    /// Analyze a raw program: metrics only, no task trace or simulation
+    /// layer (finish with [`run_metrics`](Self::run_metrics)).
+    pub fn program(prog: &'p Program) -> Self {
+        Self::with_target(Target::Program { prog })
+    }
+
+    /// Analyze `prog` against an externally-produced event stream (any
+    /// [`TraceSource`]); finish with [`run_metrics`](Self::run_metrics).
+    pub fn source(prog: &'p Program, source: &'p mut dyn TraceSource) -> Self {
+        Self::with_target(Target::Source { prog, source })
+    }
+
+    /// Profile the whole workload suite, `scale` applied to every
+    /// kernel's default size.
+    pub fn suite(scale: f64, seed: u64) -> Self {
+        Self::with_target(Target::Suite { scale, seed })
+    }
+
+    /// Replay a recorded `.pallas-trace` (workload identity comes from
+    /// the trace header).
+    pub fn trace(path: impl Into<PathBuf>) -> Self {
+        Self::with_target(Target::Trace { path: path.into() })
+    }
+
+    /// Select the analyzer families (CLI `--metrics`); defaults to all.
+    pub fn metrics(mut self, metrics: MetricSet) -> Self {
+        self.metrics = metrics;
+        self
+    }
+
+    /// Select the event delivery (CLI `--pipeline`); defaults to inline.
+    pub fn mode(mut self, mode: PipelineMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Traffic-family knobs: hierarchy replay policy + MRC kernel (CLI
+    /// `--hierarchy`, `--mrc`, `--mrc-smax`).
+    pub fn traffic(mut self, traffic: TrafficOpts) -> Self {
+        self.traffic = traffic;
+        self
+    }
+
+    /// Supervision plan plus suite failure policy in one bundle (CLI
+    /// `--inject-fault`, `--app-timeout`, `--on-error`).
+    pub fn policy(mut self, policy: SuitePolicy) -> Self {
+        self.sup = Some(policy.sup);
+        self.on_error = policy.on_error;
+        self
+    }
+
+    /// Per-request supervision plan, overriding the context default.
+    pub fn supervise(mut self, sup: SuperviseOpts) -> Self {
+        self.sup = Some(sup);
+        self
+    }
+
+    /// Suite failure policy alone (defaults to fail-fast).
+    pub fn on_error(mut self, on_error: OnError) -> Self {
+        self.on_error = on_error;
+        self
+    }
+
+    /// Suite-level concurrency (CLI `--jobs`); defaults to auto.
+    pub fn jobs(mut self, jobs: Jobs) -> Self {
+        self.jobs = jobs;
+        self
+    }
+
+    /// Deliver events un-batched (the reference semantics the chunked
+    /// pipeline is proven bit-identical to). Ignored for trace replays,
+    /// which select delivery by `mode` alone.
+    pub fn per_event(mut self, per_event: bool) -> Self {
+        self.per_event = per_event;
+        self
+    }
+
+    /// Per-request worker budget, overriding the context's.
+    pub fn budget(mut self, budget: Arc<WorkerBudget>) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    /// Run a suite or trace request to a full [`PipelineReport`]: profile
+    /// (through the scheduler for suites), run the analytics over the
+    /// surviving apps, and assemble the report the CLI renders. Errors on
+    /// app/program/source targets — those finish with
+    /// [`run_strict`](Self::run_strict)/[`run_metrics`](Self::run_metrics).
+    pub fn run(self, ctx: &RunCtx<'_>) -> Result<PipelineReport> {
+        let ProfileRequest {
+            target,
+            metrics,
+            mode,
+            traffic,
+            sup,
+            on_error,
+            jobs,
+            per_event,
+            budget,
+        } = self;
+        match target {
+            Target::Suite { scale, seed } => {
+                // same effective set the jobs profile with, so the
+                // report's "metrics" list names the families that ran
+                let metrics = metrics.with_simulation_requirements();
+                let req = ProfileRequest {
+                    target: Target::Suite { scale, seed },
+                    metrics,
+                    mode,
+                    traffic,
+                    sup,
+                    on_error,
+                    jobs,
+                    per_event,
+                    budget,
+                };
+                let outcomes = req.outcomes(ctx)?;
+                let mut apps = Vec::new();
+                let mut failures = Vec::new();
+                for out in outcomes {
+                    match out {
+                        AppOutcome::Ok(r) => apps.push(*r),
+                        AppOutcome::Failed(f) => failures.push(*f),
+                    }
+                }
+                let analytics = if apps.is_empty() {
+                    empty_analytics(0)
+                } else {
+                    analyze_suite(&apps, ctx.rt)?
+                };
+                Ok(PipelineReport {
+                    apps,
+                    failures,
+                    analytics,
+                    scale,
+                    seed,
+                    metrics,
+                    mode,
+                    traffic,
+                    trace: None,
+                })
+            }
+            Target::Trace { path } => {
+                let cfg = PipelineCfg {
+                    scale: 1.0,
+                    seed: 0, // the replay report takes its seed from the trace header
+                    jobs,
+                    metrics,
+                    mode,
+                    traffic,
+                    policy: SuitePolicy { sup: sup.unwrap_or(ctx.sup), on_error },
+                };
+                super::run_replay_cfg(&cfg, &path)
+            }
+            _ => bail!(
+                "run() produces a pipeline report and requires a suite or trace target; \
+                 finish app/program/source requests with run_strict()/run_app()/run_metrics()"
+            ),
+        }
+    }
+
+    /// Run a suite request to per-app [`AppOutcome`]s in registry order.
+    /// Under [`OnError::FailFast`] the first failed app aborts the suite
+    /// (queued jobs are cancelled); under [`OnError::Continue`] failures
+    /// ride along structurally.
+    pub fn outcomes(self, ctx: &RunCtx<'_>) -> Result<Vec<AppOutcome>> {
+        let ProfileRequest {
+            target,
+            metrics,
+            mode,
+            traffic,
+            sup,
+            on_error,
+            jobs,
+            per_event,
+            budget,
+        } = self;
+        let Target::Suite { scale, seed } = target else {
+            bail!("outcomes() requires a suite target (ProfileRequest::suite)");
+        };
+        let sup = sup.unwrap_or(ctx.sup);
+        let specs: Vec<JobSpec> = registry()
+            .iter()
+            .map(|k| {
+                let name = k.info().name.to_string();
+                JobSpec {
+                    name: name.clone(),
+                    kind: JobKind::Kernel { app: name, n: scaled_n(k.as_ref(), scale), seed },
+                    metrics,
+                    mode,
+                    traffic,
+                    sup,
+                    per_event,
+                }
+            })
+            .collect();
+        let workers = jobs.resolve(specs.len());
+        let budget = budget.unwrap_or_else(|| Arc::clone(&ctx.budget));
+        run_batch(specs, workers, on_error == OnError::FailFast, budget)
+    }
+
+    /// [`outcomes`](Self::outcomes) with every app required to succeed:
+    /// any failure aborts with that app's error.
+    pub fn run_apps(self, ctx: &RunCtx<'_>) -> Result<Vec<AppResult>> {
+        self.outcomes(ctx)?
+            .into_iter()
+            .map(|o| match o {
+                AppOutcome::Ok(r) => Ok(*r),
+                AppOutcome::Failed(f) => bail!("{} failed: {}", f.name, f.error),
+            })
+            .collect()
+    }
+
+    /// Run an app or trace request under supervision: never panics out
+    /// and never returns `Err` — every failure mode folds into a
+    /// structured [`AppOutcome::Failed`] (including a wrong target kind).
+    pub fn run_app(self, ctx: &RunCtx<'_>) -> AppOutcome {
+        let ProfileRequest { target, metrics, mode, traffic, sup, per_event, .. } = self;
+        let sup = sup.unwrap_or(ctx.sup);
+        match target {
+            Target::App { k, n, seed } => {
+                let delivery = job_delivery(mode, per_event);
+                run_kernel_supervised(k, n, seed, metrics, delivery, traffic, sup)
+            }
+            Target::Trace { path } => {
+                let start = Instant::now();
+                match replay_app(&path, metrics, mode, traffic) {
+                    Ok((r, _prov)) => AppOutcome::Ok(Box::new(r)),
+                    Err(e) => AppOutcome::Failed(Box::new(AppFailure {
+                        name: path.display().to_string(),
+                        error: ProfileError::classify(&e),
+                        wall_s: start.elapsed().as_secs_f64(),
+                        partial: None,
+                    })),
+                }
+            }
+            _ => AppOutcome::Failed(Box::new(AppFailure {
+                name: "<request>".to_string(),
+                error: ProfileError::InterpError {
+                    message: "run_app() requires an app or trace target".to_string(),
+                },
+                wall_s: 0.0,
+                partial: None,
+            })),
+        }
+    }
+
+    /// Run an app or trace request strictly: full pipeline (analyzers,
+    /// task trace, both machine models), any failure an `Err`.
+    pub fn run_strict(self, ctx: &RunCtx<'_>) -> Result<AppResult> {
+        let _ = ctx; // single-app runs don't draw on the budget
+        let ProfileRequest { target, metrics, mode, traffic, per_event, .. } = self;
+        match target {
+            Target::App { k, n, seed } => {
+                run_kernel(k, n, seed, metrics, job_delivery(mode, per_event), traffic)
+            }
+            Target::Trace { path } => replay_app(&path, metrics, mode, traffic).map(|(r, _)| r),
+            _ => bail!("run_strict() requires an app or trace target"),
+        }
+    }
+
+    /// Run an app, program or source request to bare [`AppMetrics`] — no
+    /// task trace, no simulation layer. This is what the deprecated
+    /// `analysis::profile_*` variants collapse onto.
+    pub fn run_metrics(self, ctx: &RunCtx<'_>) -> Result<AppMetrics> {
+        let ProfileRequest { target, metrics, mode, traffic, sup, per_event, .. } = self;
+        let sup = sup.unwrap_or(ctx.sup);
+        let delivery = job_delivery(mode, per_event);
+        match target {
+            Target::Program { prog } => {
+                Ok(profile_run(prog, metrics, delivery, traffic, sup, false)?.0)
+            }
+            Target::Source { prog, source } => {
+                Ok(profile_source_run(prog, source, metrics, delivery, traffic, false)?.0)
+            }
+            Target::App { k, n, seed } => {
+                let prog = k.build(n, seed);
+                Ok(profile_run(&prog, metrics, delivery, traffic, sup, false)?.0)
+            }
+            _ => bail!("run_metrics() requires an app, program or source target"),
+        }
+    }
+}
+
+/// Shape-stable empty analytics for reports with zero surviving apps
+/// (fig6 indexes loadings/eigenvalues by feature and component, so those
+/// keep their static shapes).
+pub(crate) fn empty_analytics(n_apps: usize) -> SuiteAnalytics {
+    SuiteAnalytics {
+        engine: Engine::Native,
+        entropies: Vec::new(),
+        entropy_diff: Vec::new(),
+        spatial: Vec::new(),
+        pca: Pca {
+            scores: vec![vec![0.0; 2]; n_apps],
+            loadings: vec![vec![0.0; 2]; 4],
+            eigenvalues: vec![0.0; 2],
+            explained_variance_ratio: vec![0.0; 2],
+        },
+        max_crosscheck_err: 0.0,
+    }
+}
+
+/// Drive one batch of jobs through a [`Scheduler`] and reorder the
+/// completion stream into submission (= registry) order, so concurrent
+/// suites are deterministic regardless of which app finishes first.
+fn run_batch(
+    specs: Vec<JobSpec>,
+    workers: usize,
+    fail_fast: bool,
+    budget: Arc<WorkerBudget>,
+) -> Result<Vec<AppOutcome>> {
+    let n = specs.len();
+    let (sched, rx) = Scheduler::new(workers, budget, n.max(1), fail_fast);
+    for spec in specs {
+        let name = spec.name.clone();
+        sched.submit(spec).map_err(|e| anyhow!("submitting {name}: {e}"))?;
+    }
+    sched.finish();
+    let mut slots: Vec<Option<AppOutcome>> = (0..n).map(|_| None).collect();
+    let mut first_failure: Option<String> = None;
+    for _ in 0..n {
+        let c = rx.recv().context("a scheduled job produced no completion")?;
+        if fail_fast && first_failure.is_none() {
+            if let AppOutcome::Failed(f) = &c.outcome {
+                // the cancellations are fallout from the real failure;
+                // report the cause, not the casualties
+                if !matches!(f.error, ProfileError::Cancelled) {
+                    first_failure = Some(format!("{} failed: {}", f.name, f.error));
+                }
+            }
+        }
+        slots[c.seq as usize] = Some(c.outcome);
+    }
+    if let Some(msg) = first_failure {
+        bail!("{msg}");
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.with_context(|| format!("job {i} produced no result")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::by_name;
+
+    #[test]
+    fn program_request_matches_profile() {
+        let k = by_name("gesummv").unwrap();
+        let prog = k.build(16, 1);
+        let a = crate::analysis::profile(&prog).unwrap();
+        let b = ProfileRequest::program(&prog).run_metrics(&RunCtx::new()).unwrap();
+        assert_eq!(
+            a.pca8_features().map(f64::to_bits),
+            b.pca8_features().map(f64::to_bits)
+        );
+        assert_eq!(a.exec.dyn_instrs, b.exec.dyn_instrs);
+    }
+
+    #[test]
+    fn per_event_request_matches_chunked() {
+        let k = by_name("gesummv").unwrap();
+        let prog = k.build(16, 1);
+        let chunked = ProfileRequest::program(&prog).run_metrics(&RunCtx::new()).unwrap();
+        let pe = ProfileRequest::program(&prog)
+            .per_event(true)
+            .run_metrics(&RunCtx::new())
+            .unwrap();
+        assert_eq!(
+            chunked.pca8_features().map(f64::to_bits),
+            pe.pca8_features().map(f64::to_bits)
+        );
+        assert_eq!(chunked.mix.per_op, pe.mix.per_op);
+    }
+
+    #[test]
+    fn mismatched_targets_error_cleanly() {
+        let ctx = RunCtx::new();
+        let k = by_name("gesummv").unwrap();
+        let prog = k.build(8, 1);
+        assert!(ProfileRequest::program(&prog).run(&ctx).is_err());
+        assert!(ProfileRequest::suite(0.05, 7).run_strict(&ctx).is_err());
+        assert!(ProfileRequest::suite(0.05, 7).run_metrics(&ctx).is_err());
+        assert!(ProfileRequest::program(&prog).outcomes(&ctx).is_err());
+        let out = ProfileRequest::suite(0.05, 7).run_app(&ctx);
+        let AppOutcome::Failed(f) = out else { panic!("expected a structured failure") };
+        assert_eq!(f.error.kind(), "interp-error");
+    }
+
+    #[test]
+    fn suite_request_produces_a_report() {
+        let report = ProfileRequest::suite(0.05, 7)
+            .jobs(Jobs::Fixed(2))
+            .run(&RunCtx::new())
+            .unwrap();
+        assert_eq!(report.apps.len(), 12);
+        assert!(report.failures.is_empty());
+        assert_eq!(report.scale, 0.05);
+        assert_eq!(report.seed, 7);
+        assert!(report.suite_events_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,658 @@
+//! Suite scheduler: run K profiling jobs concurrently under one
+//! process-global worker budget.
+//!
+//! Three pieces, layered:
+//!
+//! * [`WorkerBudget`] — a counting semaphore sized to the machine (or an
+//!   explicit cap). Every job *accounts* its thread appetite against the
+//!   budget before running, so `--jobs 4 --workers auto` throttles to the
+//!   hardware instead of oversubscribing it. A job whose appetite exceeds
+//!   the whole budget (one sharded app on a small machine) accounts the
+//!   full budget and still runs with its planned thread set — the budget
+//!   bounds *aggregate* concurrency, it never reshapes a single app's
+//!   pipeline (which keeps every delivery bit-identical to a solo run).
+//! * [`JobSpec`] — one fully-owned profiling job: a registry kernel (name
+//!   + size + seed) or a recorded `.pallas-trace`, plus the per-job knobs
+//!   (metric families, delivery, traffic options, supervision plan).
+//!   Owned and `'static` so jobs can outlive the request that queued them.
+//! * [`Scheduler`] — a fixed pool of job workers pulling from a bounded
+//!   queue, streaming [`Completion`]s (submission ordinal + outcome) over
+//!   a channel in completion order. Batch callers reorder by ordinal into
+//!   deterministic suite order; the `serve` daemon forwards them as they
+//!   arrive. Every submitted job yields exactly one completion: jobs
+//!   cancelled (explicitly, or by a fail-fast abort) complete with
+//!   [`ProfileError::Cancelled`].
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::analysis::{MetricSet, ShardPlan};
+use crate::fault::{panic_message, SuperviseOpts};
+use crate::interp::PipelineMode;
+use crate::traffic::TrafficOpts;
+use crate::workloads::by_name;
+
+use super::pipeline::{replay_app, AppFailure, AppOutcome, ProfileError};
+
+/// Process-global analysis-thread budget: a counting semaphore every
+/// scheduled job draws from before spinning up its pipeline threads.
+pub struct WorkerBudget {
+    total: usize,
+    free: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl WorkerBudget {
+    /// A budget of exactly `total` threads (clamped to at least 1).
+    pub fn new(total: usize) -> Arc<Self> {
+        let total = total.max(1);
+        Arc::new(WorkerBudget { total, free: Mutex::new(total), cv: Condvar::new() })
+    }
+
+    /// The default budget: one permit per hardware thread.
+    pub fn machine() -> Arc<Self> {
+        Self::new(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4))
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Currently unaccounted permits (diagnostic; racy by nature).
+    pub fn available(&self) -> usize {
+        *self.free.lock().unwrap()
+    }
+
+    /// Block until `want` permits (clamped to the budget's total — see the
+    /// module doc on overdraft) can be accounted, and take them. The
+    /// returned grant releases on drop.
+    pub fn acquire(self: &Arc<Self>, want: usize) -> BudgetGrant {
+        let accounted = want.clamp(1, self.total);
+        let mut free = self.free.lock().unwrap();
+        while *free < accounted {
+            free = self.cv.wait(free).unwrap();
+        }
+        *free -= accounted;
+        drop(free);
+        BudgetGrant { budget: Arc::clone(self), accounted }
+    }
+
+    fn release(&self, n: usize) {
+        *self.free.lock().unwrap() += n;
+        self.cv.notify_all();
+    }
+}
+
+/// RAII permit bundle from [`WorkerBudget::acquire`]; releases on drop.
+pub struct BudgetGrant {
+    budget: Arc<WorkerBudget>,
+    accounted: usize,
+}
+
+impl BudgetGrant {
+    /// Permits this grant accounts against the budget.
+    pub fn accounted(&self) -> usize {
+        self.accounted
+    }
+}
+
+impl Drop for BudgetGrant {
+    fn drop(&mut self) {
+        self.budget.release(self.accounted);
+    }
+}
+
+/// Suite-level concurrency — the CLI `--jobs` flag: how many apps profile
+/// at once (each app's own pipeline threads come on top, bounded by the
+/// [`WorkerBudget`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Jobs {
+    /// One job worker per hardware thread, capped at the job count.
+    #[default]
+    Auto,
+    /// Exactly this many concurrent jobs (clamped to `[1, hw]`).
+    Fixed(usize),
+}
+
+impl Jobs {
+    /// Parse the CLI `--jobs` value: `auto` or a positive integer.
+    pub fn from_name(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s == "auto" {
+            return Ok(Jobs::Auto);
+        }
+        match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(Jobs::Fixed(n)),
+            _ => bail!("--jobs expects 'auto' or a positive integer, got '{s}'"),
+        }
+    }
+
+    /// Concrete worker count for a queue of `n_jobs` jobs.
+    pub fn resolve(self, n_jobs: usize) -> usize {
+        let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        let cap = n_jobs.min(hw).max(1);
+        match self {
+            Jobs::Auto => cap,
+            Jobs::Fixed(n) => n.clamp(1, cap),
+        }
+    }
+}
+
+impl std::fmt::Display for Jobs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Jobs::Auto => write!(f, "auto"),
+            Jobs::Fixed(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+/// What one scheduled job profiles.
+#[derive(Debug, Clone)]
+pub enum JobKind {
+    /// A registry kernel, by name (the scheduler rebuilds the program —
+    /// kernels are stateless, so this is exactly a direct profile).
+    Kernel { app: String, n: usize, seed: u64 },
+    /// Replay a recorded `.pallas-trace`; the workload identity comes
+    /// from the trace header.
+    Trace { path: PathBuf },
+}
+
+/// One fully-owned profiling job: target plus every per-job knob. The
+/// per-request knobs a [`super::ProfileRequest`] carries map 1:1 onto
+/// these fields.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Display name for failure reports (successful results carry the
+    /// workload's own name).
+    pub name: String,
+    pub kind: JobKind,
+    pub metrics: MetricSet,
+    pub mode: PipelineMode,
+    pub traffic: TrafficOpts,
+    pub sup: SuperviseOpts,
+    /// Deliver per-event instead of `mode`'s chunked path — the reference
+    /// arm the bit-identity property tests sweep.
+    pub per_event: bool,
+}
+
+impl JobSpec {
+    /// A kernel job with default knobs (all metrics, inline delivery).
+    pub fn kernel(app: &str, n: usize, seed: u64) -> Self {
+        JobSpec {
+            name: app.to_string(),
+            kind: JobKind::Kernel { app: app.to_string(), n, seed },
+            metrics: MetricSet::all(),
+            mode: PipelineMode::Inline,
+            traffic: TrafficOpts::default(),
+            sup: SuperviseOpts::default(),
+            per_event: false,
+        }
+    }
+
+    /// A trace-replay job with default knobs.
+    pub fn trace(path: impl Into<PathBuf>) -> Self {
+        let path = path.into();
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        JobSpec {
+            name,
+            kind: JobKind::Trace { path },
+            metrics: MetricSet::all(),
+            mode: PipelineMode::Inline,
+            traffic: TrafficOpts::default(),
+            sup: SuperviseOpts::default(),
+            per_event: false,
+        }
+    }
+
+    /// Threads this job's pipeline occupies while running: the
+    /// interpreter, plus the delivery topology's analysis threads.
+    fn threads_wanted(&self) -> usize {
+        if self.per_event {
+            return 1;
+        }
+        match self.mode {
+            PipelineMode::Inline => 1,
+            PipelineMode::Offload => 2,
+            PipelineMode::Sharded { workers } => {
+                // interpreter + broadcaster + one thread per planned shard
+                2 + ShardPlan::new(self.metrics.with_simulation_requirements(), workers).workers()
+            }
+        }
+    }
+}
+
+/// Run one job against the budget: account its thread appetite, profile,
+/// release. Never panics out and never returns `Err` — every failure mode
+/// folds into a structured [`AppOutcome::Failed`].
+pub(crate) fn run_job(spec: &JobSpec, budget: &Arc<WorkerBudget>) -> AppOutcome {
+    let grant = budget.acquire(spec.threads_wanted());
+    let start = Instant::now();
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job_inner(spec)));
+    drop(grant);
+    match out {
+        Ok(outcome) => outcome,
+        Err(payload) => AppOutcome::Failed(Box::new(AppFailure {
+            name: spec.name.clone(),
+            error: ProfileError::WorkerPanic {
+                site: "scheduler",
+                message: panic_message(payload),
+            },
+            wall_s: start.elapsed().as_secs_f64(),
+            partial: None,
+        })),
+    }
+}
+
+fn run_job_inner(spec: &JobSpec) -> AppOutcome {
+    match &spec.kind {
+        JobKind::Kernel { app, n, seed } => {
+            let k = match by_name(app) {
+                Ok(k) => k,
+                Err(e) => {
+                    return AppOutcome::Failed(Box::new(AppFailure {
+                        name: spec.name.clone(),
+                        error: ProfileError::InterpError { message: format!("{e:#}") },
+                        wall_s: 0.0,
+                        partial: None,
+                    }))
+                }
+            };
+            super::pipeline::run_kernel_supervised(
+                k.as_ref(),
+                *n,
+                *seed,
+                spec.metrics,
+                super::pipeline::job_delivery(spec.mode, spec.per_event),
+                spec.traffic,
+                spec.sup,
+            )
+        }
+        JobKind::Trace { path } => {
+            let start = Instant::now();
+            match replay_app(path, spec.metrics, spec.mode, spec.traffic) {
+                Ok((r, _prov)) => AppOutcome::Ok(Box::new(r)),
+                Err(e) => AppOutcome::Failed(Box::new(AppFailure {
+                    name: spec.name.clone(),
+                    error: ProfileError::classify(&e),
+                    wall_s: start.elapsed().as_secs_f64(),
+                    partial: None,
+                })),
+            }
+        }
+    }
+}
+
+/// One finished (or cancelled) job: the submission ordinal plus its
+/// outcome. Ordinals are assigned by [`Scheduler::submit`] in order, so
+/// batch callers can reorder completions deterministically.
+pub struct Completion {
+    pub seq: u64,
+    pub outcome: AppOutcome,
+}
+
+/// Why [`Scheduler::submit`] refused a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is full — the daemon's backpressure signal.
+    QueueFull { cap: usize },
+    /// The scheduler is shutting down (aborted or draining).
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { cap } => write!(f, "job queue full (capacity {cap})"),
+            SubmitError::ShuttingDown => write!(f, "scheduler is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+struct SchedState {
+    queue: VecDeque<(u64, JobSpec)>,
+    next_seq: u64,
+    /// No more submissions: workers exit once the queue drains.
+    draining: bool,
+    /// Hard stop: queued jobs are cancelled, workers exit immediately.
+    aborted: bool,
+}
+
+struct SchedInner {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    budget: Arc<WorkerBudget>,
+    /// Completion sender for out-of-band completions (cancellations);
+    /// each worker thread owns its own clone for job results.
+    tx: Mutex<Sender<Completion>>,
+    queue_cap: usize,
+    /// Fail-fast: the first failed job aborts the scheduler, cancelling
+    /// everything still queued.
+    fail_fast: bool,
+}
+
+impl SchedInner {
+    /// Cancel every queued job, emitting a [`ProfileError::Cancelled`]
+    /// completion for each so submitted == completed always holds.
+    fn cancel_queued(&self) {
+        let drained: Vec<(u64, JobSpec)> = {
+            let mut st = self.state.lock().unwrap();
+            st.queue.drain(..).collect()
+        };
+        let tx = self.tx.lock().unwrap();
+        for (seq, spec) in drained {
+            let _ = tx.send(Completion {
+                seq,
+                outcome: AppOutcome::Failed(Box::new(AppFailure {
+                    name: spec.name,
+                    error: ProfileError::Cancelled,
+                    wall_s: 0.0,
+                    partial: None,
+                })),
+            });
+        }
+    }
+
+    fn abort(&self) {
+        self.state.lock().unwrap().aborted = true;
+        self.cv.notify_all();
+        self.cancel_queued();
+    }
+}
+
+/// A fixed pool of job workers over a bounded queue. Construction spawns
+/// the workers; they stream every job's [`Completion`] into the paired
+/// receiver and exit when the scheduler drains (after [`finish`]) or
+/// aborts (fail-fast failure, [`abort`], or drop).
+///
+/// [`finish`]: Scheduler::finish
+/// [`abort`]: Scheduler::abort
+pub struct Scheduler {
+    inner: Arc<SchedInner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Spawn `workers` job threads drawing on `budget`. `queue_cap` bounds
+    /// the submission queue (backpressure); `fail_fast` makes the first
+    /// failed job cancel everything still queued.
+    pub fn new(
+        workers: usize,
+        budget: Arc<WorkerBudget>,
+        queue_cap: usize,
+        fail_fast: bool,
+    ) -> (Self, Receiver<Completion>) {
+        let (tx, rx) = mpsc::channel::<Completion>();
+        let inner = Arc::new(SchedInner {
+            state: Mutex::new(SchedState {
+                queue: VecDeque::new(),
+                next_seq: 0,
+                draining: false,
+                aborted: false,
+            }),
+            cv: Condvar::new(),
+            budget,
+            tx: Mutex::new(tx),
+            queue_cap: queue_cap.max(1),
+            fail_fast,
+        });
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                let tx = inner.tx.lock().unwrap().clone();
+                std::thread::spawn(move || worker_loop(&inner, &tx))
+            })
+            .collect();
+        (Scheduler { inner, workers: handles }, rx)
+    }
+
+    /// Queue one job; returns its submission ordinal. Fails with
+    /// [`SubmitError::QueueFull`] instead of blocking — the caller owns
+    /// the backpressure policy (the daemon turns it into a typed reply).
+    pub fn submit(&self, spec: JobSpec) -> std::result::Result<u64, SubmitError> {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.aborted || st.draining {
+            return Err(SubmitError::ShuttingDown);
+        }
+        if st.queue.len() >= self.inner.queue_cap {
+            return Err(SubmitError::QueueFull { cap: self.inner.queue_cap });
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.queue.push_back((seq, spec));
+        drop(st);
+        self.inner.cv.notify_one();
+        Ok(seq)
+    }
+
+    /// Cancel a still-queued job. Returns `true` (and emits its
+    /// [`ProfileError::Cancelled`] completion) when the job had not
+    /// started; `false` when it is already running or finished — a
+    /// running pipeline is never interrupted mid-app (the watchdog owns
+    /// runaway apps).
+    pub fn cancel(&self, seq: u64) -> bool {
+        let spec = {
+            let mut st = self.inner.state.lock().unwrap();
+            match st.queue.iter().position(|(s, _)| *s == seq) {
+                Some(i) => st.queue.remove(i).map(|(_, spec)| spec),
+                None => None,
+            }
+        };
+        match spec {
+            Some(spec) => {
+                let _ = self.inner.tx.lock().unwrap().send(Completion {
+                    seq,
+                    outcome: AppOutcome::Failed(Box::new(AppFailure {
+                        name: spec.name,
+                        error: ProfileError::Cancelled,
+                        wall_s: 0.0,
+                        partial: None,
+                    })),
+                });
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// No further submissions: workers exit once the queue drains.
+    pub fn finish(&self) {
+        self.inner.state.lock().unwrap().draining = true;
+        self.inner.cv.notify_all();
+    }
+
+    /// Hard stop: cancel every queued job (each completes with
+    /// [`ProfileError::Cancelled`]); running jobs finish normally.
+    pub fn abort(&self) {
+        self.inner.abort();
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.inner.abort();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &SchedInner, tx: &Sender<Completion>) {
+    loop {
+        let (seq, spec) = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.aborted {
+                    return;
+                }
+                if let Some(job) = st.queue.pop_front() {
+                    break job;
+                }
+                if st.draining {
+                    return;
+                }
+                st = inner.cv.wait(st).unwrap();
+            }
+        };
+        let outcome = run_job(&spec, &inner.budget);
+        if inner.fail_fast && matches!(outcome, AppOutcome::Failed(_)) {
+            // cancel the queue *before* reporting the failure, so by the
+            // time the batch collector sees it nothing new can start
+            inner.abort();
+        }
+        if tx.send(Completion { seq, outcome }).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobs_parse_and_resolve() {
+        assert_eq!(Jobs::from_name("auto").unwrap(), Jobs::Auto);
+        assert_eq!(Jobs::from_name("3").unwrap(), Jobs::Fixed(3));
+        assert!(Jobs::from_name("0").is_err());
+        assert!(Jobs::from_name("lots").is_err());
+        // fixed counts clamp to the job count; everything is at least 1
+        assert_eq!(Jobs::Fixed(64).resolve(2), 2);
+        assert_eq!(Jobs::Fixed(1).resolve(100), 1);
+        assert!(Jobs::Auto.resolve(100) >= 1);
+        assert_eq!(Jobs::Auto.resolve(1), 1);
+        assert_eq!(Jobs::default(), Jobs::Auto);
+        assert_eq!(Jobs::Auto.to_string(), "auto");
+        assert_eq!(Jobs::Fixed(4).to_string(), "4");
+    }
+
+    #[test]
+    fn budget_accounts_and_releases() {
+        let b = WorkerBudget::new(4);
+        assert_eq!(b.total(), 4);
+        let g1 = b.acquire(3);
+        assert_eq!(g1.accounted(), 3);
+        assert_eq!(b.available(), 1);
+        // overdraft: a 10-thread appetite accounts the whole budget
+        drop(g1);
+        let g2 = b.acquire(10);
+        assert_eq!(g2.accounted(), 4);
+        assert_eq!(b.available(), 0);
+        drop(g2);
+        assert_eq!(b.available(), 4);
+    }
+
+    #[test]
+    fn budget_blocks_until_released() {
+        let b = WorkerBudget::new(2);
+        let g = b.acquire(2);
+        let b2 = Arc::clone(&b);
+        let t = std::thread::spawn(move || {
+            let g = b2.acquire(1);
+            g.accounted()
+        });
+        // the second acquire must be parked until the grant releases
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!t.is_finished(), "acquire must block while the budget is exhausted");
+        drop(g);
+        assert_eq!(t.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn scheduler_runs_jobs_and_orders_by_seq() {
+        let (sched, rx) = Scheduler::new(2, WorkerBudget::machine(), 8, false);
+        for (app, n) in [("gesummv", 16), ("atax", 16)] {
+            sched.submit(JobSpec::kernel(app, n, 1)).unwrap();
+        }
+        sched.finish();
+        let mut done: Vec<(u64, String)> = rx
+            .iter()
+            .take(2)
+            .map(|c| (c.seq, c.outcome.name().to_string()))
+            .collect();
+        done.sort();
+        assert_eq!(done[0], (0, "gesummv".to_string()));
+        assert_eq!(done[1], (1, "atax".to_string()));
+    }
+
+    #[test]
+    fn queue_cap_rejects_with_backpressure() {
+        // a 1-worker scheduler with a tiny queue: fill it without letting
+        // anything drain by never finishing submit before checking
+        let (sched, _rx) = Scheduler::new(1, WorkerBudget::new(1), 1, false);
+        // first job may be picked up immediately; flood until one sticks
+        // in the queue, then the next must bounce
+        let mut rejected = false;
+        for _ in 0..64 {
+            match sched.submit(JobSpec::kernel("gesummv", 8, 1)) {
+                Ok(_) => {}
+                Err(SubmitError::QueueFull { cap }) => {
+                    assert_eq!(cap, 1);
+                    rejected = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(rejected, "a capacity-1 queue must eventually reject");
+    }
+
+    #[test]
+    fn cancel_removes_queued_jobs_only() {
+        let (sched, rx) = Scheduler::new(1, WorkerBudget::new(1), 8, false);
+        let a = sched.submit(JobSpec::kernel("gesummv", 16, 1)).unwrap();
+        let b = sched.submit(JobSpec::kernel("atax", 16, 1)).unwrap();
+        let c = sched.submit(JobSpec::kernel("bicg", 16, 1)).unwrap();
+        // cancel the tail jobs while the head (likely) runs
+        assert!(sched.cancel(c), "queued job must cancel");
+        assert!(!sched.cancel(c), "double-cancel must report false");
+        let _ = b;
+        sched.finish();
+        let mut outcomes: Vec<(u64, &'static str)> = rx
+            .iter()
+            .take(3)
+            .map(|cmp| {
+                let kind = match &cmp.outcome {
+                    AppOutcome::Ok(_) => "ok",
+                    AppOutcome::Failed(f) => f.error.kind(),
+                };
+                (cmp.seq, kind)
+            })
+            .collect();
+        outcomes.sort();
+        assert_eq!(outcomes.iter().find(|(s, _)| *s == c).unwrap().1, "cancelled");
+        assert_eq!(outcomes.iter().find(|(s, _)| *s == a).unwrap().1, "ok");
+    }
+
+    #[test]
+    fn submit_after_finish_is_refused() {
+        let (sched, rx) = Scheduler::new(1, WorkerBudget::new(1), 8, false);
+        sched.finish();
+        assert_eq!(
+            sched.submit(JobSpec::kernel("gesummv", 8, 1)),
+            Err(SubmitError::ShuttingDown)
+        );
+        drop(rx);
+    }
+
+    #[test]
+    fn unknown_kernel_job_fails_structurally() {
+        let budget = WorkerBudget::new(1);
+        let out = run_job(&JobSpec::kernel("no-such-kernel", 8, 1), &budget);
+        let AppOutcome::Failed(f) = out else { panic!("expected failure") };
+        assert_eq!(f.error.kind(), "interp-error");
+        assert_eq!(f.name, "no-such-kernel");
+        assert_eq!(budget.available(), 1, "grant must release on failure");
+    }
+}

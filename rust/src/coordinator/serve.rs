@@ -1,0 +1,470 @@
+//! Profiling-as-a-service: the `pisa-nmc serve` daemon.
+//!
+//! A [`Server`] listens on a TCP address and speaks a JSON-lines
+//! protocol: every request is one JSON object on one line, every reply
+//! one JSON object on one line. Each connection gets its own
+//! [`Scheduler`], but every connection draws shard workers from the one
+//! process-global [`WorkerBudget`], so a busy daemon cannot oversubscribe
+//! the machine any more than a single `--jobs N` pipeline run can.
+//!
+//! Requests:
+//!
+//! ```text
+//! {"cmd":"profile","app":"gesummv","n":48,"seed":7}
+//! {"cmd":"profile","app":"atax","scale":0.1,"metrics":"mix,traffic","pipeline":"sharded","workers":"auto"}
+//! {"cmd":"profile","trace":"runs/gesummv.pallas-trace"}
+//! {"cmd":"cancel","seq":3}
+//! ```
+//!
+//! Replies (one line each; results stream as jobs complete, which under
+//! `--jobs > 1` need not be submission order — correlate on `"seq"`):
+//!
+//! ```text
+//! {"type":"accepted","seq":3,"app":"gesummv"}
+//! {"type":"result","seq":3,"app":"gesummv","events_per_sec":...,...}
+//! {"type":"error","error":"unknown kernel 'gesumvm' ..."}       // bad request, nothing queued
+//! {"type":"rejected","error":"job queue full (capacity 16)"}    // backpressure, resubmit later
+//! {"type":"job-error","seq":4,"app":"atax","error":"timeout","message":"..."}
+//! {"type":"cancel","seq":3,"ok":true}                           // queued jobs only
+//! ```
+//!
+//! Malformed or unknown-app requests get a typed `"error"` reply and the
+//! connection keeps serving — one bad job never poisons the stream. The
+//! daemon drains in-flight jobs and exits cleanly on SIGTERM (see
+//! [`install_sigterm_handler`]) or when [`Server::shutdown_flag`] is set.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::analysis::MetricSet;
+use crate::fault::SuperviseOpts;
+use crate::interp::{PipelineMode, Workers};
+use crate::traffic::{HierarchyPolicy, MrcMode, TrafficOpts};
+use crate::util::Json;
+use crate::workloads::{by_name, scaled_n};
+
+use super::pipeline::AppOutcome;
+use super::sched::{Completion, JobSpec, Jobs, Scheduler, SubmitError, WorkerBudget};
+
+/// Set by the SIGTERM handler; every [`Server::run`] loop polls it.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Install a SIGTERM handler that asks every running [`Server`] to drain
+/// and exit. Direct `signal(2)` registration — storing one flag from a
+/// handler is exactly the async-signal-safe case it supports, and it
+/// keeps the daemon dependency-free.
+#[cfg(unix)]
+pub fn install_sigterm_handler() {
+    const SIGTERM: i32 = 15;
+    extern "C" fn on_term(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(SIGTERM, on_term as extern "C" fn(i32) as usize);
+    }
+}
+
+/// Non-unix builds have no SIGTERM; shutdown comes from
+/// [`Server::shutdown_flag`] alone.
+#[cfg(not(unix))]
+pub fn install_sigterm_handler() {}
+
+/// Server-level defaults: per-request JSON fields override `metrics`,
+/// `mode` and the traffic knobs job by job; `jobs`, `queue_cap` and the
+/// supervision plan are fixed at startup.
+#[derive(Clone, Copy)]
+pub struct ServeCfg {
+    /// Concurrent jobs per connection (`--jobs`, capped at machine size).
+    pub jobs: Jobs,
+    /// Bounded queue depth per connection (`--queue-cap`); submissions
+    /// beyond it get a `"rejected"` backpressure reply.
+    pub queue_cap: usize,
+    pub metrics: MetricSet,
+    pub mode: PipelineMode,
+    pub traffic: TrafficOpts,
+    /// Supervision every served job runs under (`--app-timeout`).
+    pub sup: SuperviseOpts,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            jobs: Jobs::Auto,
+            queue_cap: 16,
+            metrics: MetricSet::all(),
+            mode: PipelineMode::Inline,
+            traffic: TrafficOpts::default(),
+            sup: SuperviseOpts::default(),
+        }
+    }
+}
+
+/// The profiling daemon: accepts connections, runs each one's jobs
+/// through a [`Scheduler`] against the shared [`WorkerBudget`], and
+/// streams result JSON back as each job completes.
+pub struct Server {
+    listener: TcpListener,
+    cfg: ServeCfg,
+    budget: Arc<WorkerBudget>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind the listen address (e.g. `127.0.0.1:7071`, or port `0` to
+    /// let the OS pick — read it back with [`Server::local_addr`]).
+    pub fn bind(addr: &str, cfg: ServeCfg, budget: Arc<WorkerBudget>) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding serve address {addr}"))?;
+        listener.set_nonblocking(true).context("setting the listener non-blocking")?;
+        Ok(Server { listener, cfg, budget, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Per-instance shutdown flag (the test-friendly twin of SIGTERM):
+    /// set it to true and `run()` drains and returns.
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    fn stopping(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || SHUTDOWN.load(Ordering::SeqCst)
+    }
+
+    /// Serve until SIGTERM or the shutdown flag; drains every accepted
+    /// connection's in-flight jobs before returning.
+    pub fn run(self) -> Result<()> {
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        loop {
+            if self.stopping() {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let cfg = self.cfg;
+                    let budget = Arc::clone(&self.budget);
+                    let shutdown = Arc::clone(&self.shutdown);
+                    conns.push(std::thread::spawn(move || {
+                        // a torn-down peer is not a server error
+                        let _ = handle_conn(stream, cfg, budget, shutdown);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => return Err(e).context("accepting a serve connection"),
+            }
+            conns.retain(|h| !h.is_finished());
+        }
+        for h in conns {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// How often blocked reads/receives wake up to poll shutdown flags.
+const POLL: Duration = Duration::from_millis(200);
+
+fn handle_conn(
+    stream: TcpStream,
+    cfg: ServeCfg,
+    budget: Arc<WorkerBudget>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_read_timeout(Some(POLL)).context("setting the connection read timeout")?;
+    let out = Arc::new(Mutex::new(stream.try_clone().context("cloning the reply stream")?));
+    // the queue cap is the backpressure bound; Jobs::resolve caps the
+    // worker pool at machine size
+    let (sched, rx) = Scheduler::new(
+        cfg.jobs.resolve(usize::MAX),
+        budget,
+        cfg.queue_cap,
+        /* fail_fast: one client's bad job must not cancel its others */ false,
+    );
+    let pending = Arc::new(AtomicUsize::new(0));
+    let closing = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let out = Arc::clone(&out);
+        let pending = Arc::clone(&pending);
+        let closing = Arc::clone(&closing);
+        std::thread::spawn(move || result_writer(rx, &out, &pending, &closing))
+    };
+
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) || SHUTDOWN.load(Ordering::SeqCst) {
+            break;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF: client is done submitting
+            Ok(_) => {
+                let reply = dispatch(line.trim(), &cfg, &sched, &pending);
+                line.clear();
+                if let Some(reply) = reply {
+                    if write_line(&out, &reply).is_err() {
+                        break;
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // timeout tick: `line` keeps any partial read; loop to
+                // re-poll the shutdown flags and continue the same line
+            }
+            Err(_) => break,
+        }
+    }
+
+    if shutdown.load(Ordering::SeqCst) || SHUTDOWN.load(Ordering::SeqCst) {
+        sched.abort(); // queued jobs complete as cancelled; writer drains them
+    } else {
+        sched.finish();
+    }
+    closing.store(true, Ordering::SeqCst);
+    let _ = writer.join();
+    Ok(())
+}
+
+/// Handle one request line; `None` means an empty line (ignored).
+fn dispatch(
+    line: &str,
+    cfg: &ServeCfg,
+    sched: &Scheduler,
+    pending: &Arc<AtomicUsize>,
+) -> Option<Json> {
+    if line.is_empty() {
+        return None;
+    }
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return Some(error_reply(&format!("malformed request: {e}"))),
+    };
+    match get_str(&req, "cmd") {
+        Some("profile") => {
+            let spec = match job_from_request(&req, cfg) {
+                Ok(spec) => spec,
+                Err(e) => return Some(error_reply(&format!("{e:#}"))),
+            };
+            let name = spec.name.clone();
+            // count before submit: the job may complete before this
+            // thread gets back from submit()
+            pending.fetch_add(1, Ordering::SeqCst);
+            match sched.submit(spec) {
+                Ok(seq) => {
+                    let mut j = Json::obj();
+                    j.set("type", "accepted");
+                    j.set("seq", seq);
+                    j.set("app", name);
+                    Some(j)
+                }
+                Err(e @ SubmitError::QueueFull { .. }) => {
+                    pending.fetch_sub(1, Ordering::SeqCst);
+                    let mut j = Json::obj();
+                    j.set("type", "rejected");
+                    j.set("error", e.to_string());
+                    Some(j)
+                }
+                Err(e @ SubmitError::ShuttingDown) => {
+                    pending.fetch_sub(1, Ordering::SeqCst);
+                    Some(error_reply(&e.to_string()))
+                }
+            }
+        }
+        Some("cancel") => {
+            let Some(seq) = get_num(&req, "seq") else {
+                return Some(error_reply("cancel needs a numeric \"seq\""));
+            };
+            let seq = seq as u64;
+            let mut j = Json::obj();
+            j.set("type", "cancel");
+            j.set("seq", seq);
+            // true only for still-queued jobs; the cancelled completion
+            // streams back as a "cancelled" job-error
+            j.set("ok", sched.cancel(seq));
+            Some(j)
+        }
+        Some(other) => Some(error_reply(&format!("unknown cmd '{other}' (profile|cancel)"))),
+        None => Some(error_reply("request needs a \"cmd\" field (profile|cancel)")),
+    }
+}
+
+/// Stream completions back to the client until the reader side says it is
+/// closing and every accepted job has been answered.
+fn result_writer(
+    rx: Receiver<Completion>,
+    out: &Arc<Mutex<TcpStream>>,
+    pending: &Arc<AtomicUsize>,
+    closing: &Arc<AtomicBool>,
+) {
+    loop {
+        match rx.recv_timeout(POLL) {
+            Ok(c) => {
+                let done = write_line(out, &completion_reply(&c)).is_err();
+                pending.fetch_sub(1, Ordering::SeqCst);
+                if done {
+                    return; // peer gone; completions drain into the void
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if closing.load(Ordering::SeqCst) && pending.load(Ordering::SeqCst) == 0 {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+fn completion_reply(c: &Completion) -> Json {
+    match &c.outcome {
+        AppOutcome::Ok(r) => {
+            let mut j = r.to_json();
+            j.set("type", "result");
+            j.set("seq", c.seq);
+            j.set("app", r.name.clone());
+            j.set("events_per_sec", r.events_per_sec());
+            j
+        }
+        AppOutcome::Failed(f) => {
+            let mut j = Json::obj();
+            j.set("type", "job-error");
+            j.set("seq", c.seq);
+            j.set("app", f.name.clone());
+            j.set("error", f.error.kind());
+            j.set("message", f.error.to_string());
+            j
+        }
+    }
+}
+
+fn error_reply(msg: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("type", "error");
+    j.set("error", msg);
+    j
+}
+
+fn write_line(out: &Arc<Mutex<TcpStream>>, j: &Json) -> std::io::Result<()> {
+    let mut s = out.lock().unwrap();
+    writeln!(s, "{}", j.to_string_compact())?;
+    s.flush()
+}
+
+fn get_str<'j>(j: &'j Json, key: &str) -> Option<&'j str> {
+    j.get(key).and_then(|v| v.as_str())
+}
+
+fn get_num(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(|v| v.as_f64())
+}
+
+/// Turn a `{"cmd":"profile",...}` request into a [`JobSpec`], validating
+/// everything up front so bad requests are refused before queueing.
+fn job_from_request(req: &Json, cfg: &ServeCfg) -> Result<JobSpec> {
+    let mut spec = if let Some(path) = get_str(req, "trace") {
+        JobSpec::trace(path)
+    } else {
+        let Some(app) = get_str(req, "app") else {
+            bail!("profile needs an \"app\" name or a \"trace\" path");
+        };
+        let k = by_name(app)?; // unknown app: typed error, nothing queued
+        let n = match get_num(req, "n") {
+            Some(n) if n >= 1.0 => n as usize,
+            Some(_) => bail!("\"n\" must be a positive integer"),
+            None => scaled_n(k.as_ref(), get_num(req, "scale").unwrap_or(1.0)),
+        };
+        let seed = get_num(req, "seed").map_or(42, |s| s as u64);
+        JobSpec::kernel(app, n, seed)
+    };
+    spec.metrics = match get_str(req, "metrics") {
+        Some(s) => MetricSet::from_names(s)?,
+        None => cfg.metrics,
+    };
+    spec.mode = match get_str(req, "pipeline") {
+        Some(s) => PipelineMode::from_name(s)?,
+        None => cfg.mode,
+    };
+    if let Some(w) = get_str(req, "workers") {
+        if !matches!(spec.mode, PipelineMode::Sharded { .. }) {
+            bail!("\"workers\" applies only to the sharded pipeline (got '{}')", spec.mode.name());
+        }
+        spec.mode = PipelineMode::Sharded { workers: Workers::from_name(w)? };
+    }
+    spec.traffic = cfg.traffic;
+    if let Some(h) = get_str(req, "hierarchy") {
+        spec.traffic.hierarchy = HierarchyPolicy::from_name(h)?;
+    }
+    if let Some(m) = get_str(req, "mrc") {
+        spec.traffic.mrc = MrcMode::from_name(m)?;
+    }
+    spec.sup = cfg.sup;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sched::JobKind;
+
+    fn parse(line: &str) -> Result<JobSpec> {
+        job_from_request(&Json::parse(line).unwrap(), &ServeCfg::default())
+    }
+
+    #[test]
+    fn profile_request_parses_to_a_job() {
+        let spec = parse(r#"{"cmd":"profile","app":"gesummv","n":48,"seed":7}"#).unwrap();
+        assert_eq!(spec.name, "gesummv");
+        let JobKind::Kernel { n, seed, .. } = spec.kind else { panic!("expected a kernel job") };
+        assert_eq!((n, seed), (48, 7));
+    }
+
+    #[test]
+    fn scale_resolves_against_the_kernel_default() {
+        let spec = parse(r#"{"cmd":"profile","app":"gesummv","scale":0.1}"#).unwrap();
+        let k = by_name("gesummv").unwrap();
+        let JobKind::Kernel { n, seed, .. } = spec.kind else { panic!("expected a kernel job") };
+        assert_eq!(n, scaled_n(k.as_ref(), 0.1));
+        assert_eq!(seed, 42);
+    }
+
+    #[test]
+    fn knobs_override_the_server_defaults() {
+        let spec = parse(
+            r#"{"cmd":"profile","app":"atax","n":8,"metrics":"mix,traffic","pipeline":"sharded","workers":"3","hierarchy":"exclusive"}"#,
+        )
+        .unwrap();
+        assert!(matches!(spec.mode, PipelineMode::Sharded { workers: Workers::Fixed(3) }));
+        assert_eq!(spec.traffic.hierarchy, HierarchyPolicy::Exclusive);
+        assert!(spec.metrics.contains(crate::analysis::Metric::Traffic));
+    }
+
+    #[test]
+    fn bad_requests_are_refused_before_queueing() {
+        assert!(parse(r#"{"cmd":"profile","app":"no-such-kernel"}"#).is_err());
+        assert!(parse(r#"{"cmd":"profile"}"#).is_err());
+        assert!(parse(r#"{"cmd":"profile","app":"atax","n":0}"#).is_err());
+        assert!(parse(r#"{"cmd":"profile","app":"atax","n":4,"workers":"2"}"#).is_err());
+    }
+
+    #[test]
+    fn trace_requests_become_replay_jobs() {
+        let spec = parse(r#"{"cmd":"profile","trace":"runs/gesummv.pallas-trace"}"#).unwrap();
+        assert!(matches!(spec.kind, JobKind::Trace { .. }));
+        assert_eq!(spec.name, "gesummv");
+    }
+}

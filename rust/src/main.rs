@@ -7,7 +7,9 @@ use anyhow::{bail, Result};
 
 use pisa_nmc::analysis::{AnalyzerStack, MetricSet};
 use pisa_nmc::cli::{self, Args};
-use pisa_nmc::coordinator::{self, figures, AppOutcome, OnError, PipelineCfg, SuitePolicy};
+use pisa_nmc::coordinator::{
+    self, figures, AppOutcome, Jobs, OnError, PipelineCfg, ServeCfg, SuitePolicy, WorkerBudget,
+};
 use pisa_nmc::fault::{FaultPlan, SuperviseOpts};
 use pisa_nmc::interp::{
     run_offload, run_sharded, ChunkLanes, Instrument, LaneMask, Machine, PipelineMode, TraceEvent,
@@ -119,6 +121,16 @@ fn suite_policy(args: &Args) -> Result<SuitePolicy> {
     Ok(SuitePolicy { sup: supervise_opts(args)?, on_error })
 }
 
+/// Parse the `--jobs` suite concurrency (default: auto). `--threads N`
+/// is the deprecated spelling of `--jobs N` and keeps working.
+fn jobs_flag(args: &Args) -> Result<Jobs> {
+    match (args.get("jobs"), args.get("threads")) {
+        (Some(s), _) => Jobs::from_name(s),
+        (None, Some(_)) => Ok(Jobs::Fixed(args.get_usize("threads", 8)?)),
+        (None, None) => Ok(Jobs::Auto),
+    }
+}
+
 /// Parse the `--pipeline` event-delivery mode (default: inline) and, for
 /// the sharded mode, the `--workers` pool size (default: auto).
 fn pipeline_mode(args: &Args) -> Result<PipelineMode> {
@@ -176,13 +188,10 @@ fn run(args: Args) -> Result<()> {
     cli::validate_trace_flags(&args)?;
     match args.command.as_str() {
         "pipeline" => {
-            let scale = args.get_f64("scale", 1.0)?;
-            let seed = args.get_u64("seed", 42)?;
-            let threads = args.get_usize("threads", 8)?;
             let cfg = PipelineCfg {
-                scale,
-                seed,
-                threads,
+                scale: args.get_f64("scale", 1.0)?,
+                seed: args.get_u64("seed", 42)?,
+                jobs: jobs_flag(&args)?,
                 metrics: metric_set(&args)?,
                 mode: pipeline_mode(&args)?,
                 traffic: traffic_opts(&args)?,
@@ -264,8 +273,7 @@ fn run(args: Args) -> Result<()> {
                 }
             };
             if args.has("json") {
-                let mut j = r.metrics.to_json();
-                j.set("edp", r.cmp.to_json());
+                let mut j = r.to_json();
                 if let Some(p) = &prov {
                     j.set("trace", p.to_json());
                 }
@@ -334,6 +342,28 @@ fn run(args: Args) -> Result<()> {
             }
             Ok(())
         }
+        "serve" => {
+            let addr = args.require("listen")?;
+            let cfg = ServeCfg {
+                jobs: jobs_flag(&args)?,
+                queue_cap: args.get_usize("queue-cap", 16)?,
+                metrics: metric_set(&args)?,
+                mode: pipeline_mode(&args)?,
+                traffic: traffic_opts(&args)?,
+                sup: supervise_opts(&args)?,
+            };
+            coordinator::install_sigterm_handler();
+            let server = coordinator::Server::bind(addr, cfg, WorkerBudget::machine())?;
+            eprintln!(
+                "[serve] listening on {} ({} jobs, queue cap {})",
+                server.local_addr()?,
+                cfg.jobs,
+                cfg.queue_cap
+            );
+            server.run()?;
+            eprintln!("[serve] drained and shut down");
+            Ok(())
+        }
         "record" => {
             let out_path = args.require("record-out")?;
             let name = args.require("kernel")?;
@@ -390,22 +420,17 @@ fn run(args: Args) -> Result<()> {
         }
         "figure" => {
             let which = args.positional1()?.to_string();
-            let scale = args.get_f64("scale", 1.0)?;
-            let seed = args.get_u64("seed", 42)?;
-            let threads = args.get_usize("threads", 8)?;
-            let metrics = metric_set(&args)?;
-            let mode = pipeline_mode(&args)?;
-            let traffic = traffic_opts(&args)?;
+            let cfg = PipelineCfg {
+                scale: args.get_f64("scale", 1.0)?,
+                seed: args.get_u64("seed", 42)?,
+                jobs: jobs_flag(&args)?,
+                metrics: metric_set(&args)?,
+                mode: pipeline_mode(&args)?,
+                traffic: traffic_opts(&args)?,
+                policy: SuitePolicy::default(),
+            };
             let rt = load_runtime(&args);
-            let report = coordinator::run_pipeline_opts(
-                scale,
-                seed,
-                threads,
-                rt.as_ref(),
-                metrics,
-                mode,
-                traffic,
-            )?;
+            let report = coordinator::run_pipeline_cfg(&cfg, rt.as_ref())?;
             let (text, _json) = match which.as_str() {
                 "3a" => figures::fig3a(&report.apps, &report.analytics, report.metrics),
                 "3b" => figures::fig3b(&report.apps, &report.analytics, report.metrics),

@@ -20,16 +20,29 @@
 
 use std::time::Duration;
 
-use pisa_nmc::analysis::{
-    profile, profile_offload, profile_opts, profile_per_event, profile_per_event_opts,
-    profile_sharded, AppMetrics, MetricSet,
-};
+use pisa_nmc::analysis::{profile, profile_per_event, AppMetrics};
+use pisa_nmc::coordinator::{ProfileRequest, RunCtx};
 use pisa_nmc::interp::{
     run_offload, run_sharded, Counter, Instrument, Machine, PipelineMode, TraceEvent, Workers,
 };
+use pisa_nmc::ir::Program;
 use pisa_nmc::prop_assert;
 use pisa_nmc::testkit::{check_seeded, random_program};
 use pisa_nmc::traffic::{HierarchyPolicy, TrafficOpts};
+
+/// Profile through a non-default delivery/traffic combination via the
+/// consolidated request builder (the positional variants are deprecated).
+fn profile_req(
+    p: &Program,
+    mode: PipelineMode,
+    traffic: TrafficOpts,
+) -> Result<AppMetrics, String> {
+    ProfileRequest::program(p)
+        .mode(mode)
+        .traffic(traffic)
+        .run_metrics(&RunCtx::new())
+        .map_err(|e| e.to_string())
+}
 
 /// Exact comparison of every metric surface. f64s are compared by bit
 /// pattern: the two paths must execute the *same arithmetic in the same
@@ -187,7 +200,7 @@ fn offload_profile_is_bit_identical_to_inline() {
     // chunks crossing the bounded channel — same bits, every seed
     check_seeded("offload == inline", 0x0FF1, 24, |rng| {
         let p = random_program(rng);
-        let offloaded = profile_offload(&p).map_err(|e| e.to_string())?;
+        let offloaded = profile_req(&p, PipelineMode::Offload, TrafficOpts::default())?;
         let inline = profile(&p).map_err(|e| e.to_string())?;
         assert_bit_identical(&offloaded, &inline)?;
         // and transitively against the per-event reference
@@ -203,7 +216,11 @@ fn sharded_profile_is_bit_identical_to_inline() {
     // countdown-return pool — same bits, every seed
     check_seeded("sharded == inline", 0x54A2, 24, |rng| {
         let p = random_program(rng);
-        let sharded = profile_sharded(&p).map_err(|e| e.to_string())?;
+        let sharded = profile_req(
+            &p,
+            PipelineMode::Sharded { workers: Workers::Auto },
+            TrafficOpts::default(),
+        )?;
         let inline = profile(&p).map_err(|e| e.to_string())?;
         assert_bit_identical(&sharded, &inline)?;
         // and transitively against the per-event reference
@@ -221,8 +238,14 @@ fn all_four_paths_bit_identical_on_real_kernels() {
         let p = k.build(n, 7);
         let chunked = profile(&p).unwrap();
         let reference = profile_per_event(&p).unwrap();
-        let offloaded = profile_offload(&p).unwrap();
-        let sharded = profile_sharded(&p).unwrap();
+        let offloaded =
+            profile_req(&p, PipelineMode::Offload, TrafficOpts::default()).unwrap();
+        let sharded = profile_req(
+            &p,
+            PipelineMode::Sharded { workers: Workers::Auto },
+            TrafficOpts::default(),
+        )
+        .unwrap();
         if let Err(msg) = assert_bit_identical(&chunked, &reference) {
             panic!("{name} (chunked vs per-event): {msg}");
         }
@@ -243,15 +266,15 @@ fn all_four_paths_bit_identical_under_exclusive_hierarchy() {
     // cross-thread reordering would surface here first
     check_seeded("exclusive hierarchy 4-way", 0xE8C2, 12, |rng| {
         let p = random_program(rng);
-        let all = MetricSet::all();
         let excl = TrafficOpts::with_hierarchy(HierarchyPolicy::Exclusive);
-        let reference = profile_per_event_opts(&p, all, excl).map_err(|e| e.to_string())?;
-        let chunked =
-            profile_opts(&p, all, PipelineMode::Inline, excl).map_err(|e| e.to_string())?;
-        let offloaded =
-            profile_opts(&p, all, PipelineMode::Offload, excl).map_err(|e| e.to_string())?;
-        let sharded = profile_opts(&p, all, PipelineMode::Sharded { workers: Workers::Auto }, excl)
+        let reference = ProfileRequest::program(&p)
+            .per_event(true)
+            .traffic(excl)
+            .run_metrics(&RunCtx::new())
             .map_err(|e| e.to_string())?;
+        let chunked = profile_req(&p, PipelineMode::Inline, excl)?;
+        let offloaded = profile_req(&p, PipelineMode::Offload, excl)?;
+        let sharded = profile_req(&p, PipelineMode::Sharded { workers: Workers::Auto }, excl)?;
         prop_assert!(
             chunked.traffic.hierarchy_policy == HierarchyPolicy::Exclusive,
             "policy did not reach the analyzer"

@@ -26,8 +26,8 @@
 //!    traffic is absorbed by upper levels — the double-counting the
 //!    hierarchy replay was built to remove.
 
-use pisa_nmc::analysis::{profile_opts, MetricSet};
-use pisa_nmc::interp::{Instrument, Machine, PipelineMode, TraceEvent};
+use pisa_nmc::coordinator::{ProfileRequest, RunCtx};
+use pisa_nmc::interp::{Instrument, Machine, TraceEvent};
 use pisa_nmc::ir::Program;
 use pisa_nmc::prop_assert;
 use pisa_nmc::testkit::{check_seeded, random_program};
@@ -305,7 +305,9 @@ fn assert_matches_naive(
 }
 
 fn profile_traffic(prog: &Program, policy: HierarchyPolicy) -> TrafficMetrics {
-    profile_opts(prog, MetricSet::all(), PipelineMode::Inline, TrafficOpts::with_hierarchy(policy))
+    ProfileRequest::program(prog)
+        .traffic(TrafficOpts::with_hierarchy(policy))
+        .run_metrics(&RunCtx::new())
         .unwrap()
         .traffic
 }

@@ -18,11 +18,10 @@
 //!    hash makes the sample a pure function of the line address, so
 //!    per-event / chunked / offload / sharded all agree bitwise.
 
-use pisa_nmc::analysis::{
-    profile, profile_offload, profile_opts, profile_per_event, profile_per_event_opts,
-    profile_sharded, MetricSet,
-};
+use pisa_nmc::analysis::{profile, profile_per_event, AppMetrics, MetricSet};
+use pisa_nmc::coordinator::{ProfileRequest, RunCtx};
 use pisa_nmc::interp::{PipelineMode, Workers};
+use pisa_nmc::ir::Program;
 use pisa_nmc::prop_assert;
 use pisa_nmc::testkit::{address_trace, check_seeded, random_program};
 use pisa_nmc::traffic::{
@@ -30,6 +29,33 @@ use pisa_nmc::traffic::{
     N_MRC_POINTS,
 };
 use pisa_nmc::util::Rng;
+
+/// Opts-threaded profiling via the consolidated request builder (the
+/// positional `profile_opts`/`profile_per_event_opts` are deprecated).
+fn profile_req(
+    p: &Program,
+    metrics: MetricSet,
+    mode: PipelineMode,
+    traffic: TrafficOpts,
+) -> anyhow::Result<AppMetrics> {
+    ProfileRequest::program(p)
+        .metrics(metrics)
+        .mode(mode)
+        .traffic(traffic)
+        .run_metrics(&RunCtx::new())
+}
+
+fn profile_req_pe(
+    p: &Program,
+    metrics: MetricSet,
+    traffic: TrafficOpts,
+) -> anyhow::Result<AppMetrics> {
+    ProfileRequest::program(p)
+        .metrics(metrics)
+        .per_event(true)
+        .traffic(traffic)
+        .run_metrics(&RunCtx::new())
+}
 
 fn assert_traffic_bits_equal(a: &TrafficMetrics, b: &TrafficMetrics, what: &str) {
     assert_eq!(a.accesses, b.accesses, "{what}: accesses");
@@ -58,24 +84,21 @@ fn exact_mode_is_bit_identical_to_the_pre_sampling_kernel() {
         // the historical entry points (no TrafficOpts anywhere)
         let legacy = profile(&p).map_err(|e| e.to_string())?;
         let legacy_pe = profile_per_event(&p).map_err(|e| e.to_string())?;
-        let legacy_off = profile_offload(&p).map_err(|e| e.to_string())?;
-        let legacy_sh = profile_sharded(&p).map_err(|e| e.to_string())?;
-        // the new opts-threaded ones, in explicit exact mode
+        // the opts-threaded request builder, in explicit exact mode
         let inline =
-            profile_opts(&p, all, PipelineMode::Inline, exact).map_err(|e| e.to_string())?;
-        let per_event = profile_per_event_opts(&p, all, exact).map_err(|e| e.to_string())?;
+            profile_req(&p, all, PipelineMode::Inline, exact).map_err(|e| e.to_string())?;
+        let per_event = profile_req_pe(&p, all, exact).map_err(|e| e.to_string())?;
         let offload =
-            profile_opts(&p, all, PipelineMode::Offload, exact).map_err(|e| e.to_string())?;
+            profile_req(&p, all, PipelineMode::Offload, exact).map_err(|e| e.to_string())?;
         let sharded =
-            profile_opts(&p, all, PipelineMode::Sharded { workers: Workers::Auto }, exact)
+            profile_req(&p, all, PipelineMode::Sharded { workers: Workers::Auto }, exact)
                 .map_err(|e| e.to_string())?;
         prop_assert!(inline.traffic.mrc_mode == MrcMode::Exact, "default mode must be exact");
         for (got, want, what) in [
             (&inline, &legacy, "inline"),
             (&per_event, &legacy_pe, "per-event"),
-            (&offload, &legacy_off, "offload"),
-            (&sharded, &legacy_sh, "sharded"),
-            // and the split-traffic sharded path against the unsplit inline
+            (&offload, &legacy, "offload"),
+            // the split-traffic sharded path against the unsplit inline
             (&sharded, &legacy, "sharded vs inline"),
         ] {
             assert_traffic_bits_equal(&got.traffic, &want.traffic, what);
@@ -96,12 +119,11 @@ fn sampled_rate_one_reproduces_exact_through_the_full_pipeline() {
     check_seeded("sampled:1.0 == exact", 0x10_F1, 10, |rng| {
         let p = random_program(rng);
         let all = MetricSet::all();
-        let exact =
-            profile_opts(&p, all, PipelineMode::Inline, TrafficOpts::default())
-                .map_err(|e| e.to_string())?;
+        let exact = profile_req(&p, all, PipelineMode::Inline, TrafficOpts::default())
+            .map_err(|e| e.to_string())?;
         let opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 1.0 });
         let sampled =
-            profile_opts(&p, all, PipelineMode::Inline, opts).map_err(|e| e.to_string())?;
+            profile_req(&p, all, PipelineMode::Inline, opts).map_err(|e| e.to_string())?;
         let (a, b) = (&exact.traffic, &sampled.traffic);
         prop_assert!(b.mrc_mode == MrcMode::Sampled { rate: 1.0 }, "mode must be recorded");
         prop_assert!(
@@ -165,11 +187,11 @@ fn sampled_rate_point_one_mae_on_suite_kernels() {
     for (name, n) in [("gesummv", 192usize), ("bfs", 4096usize)] {
         let k = pisa_nmc::workloads::by_name(name).unwrap();
         let p = k.build(n, 42);
-        let exact = profile_opts(&p, traffic_only, PipelineMode::Inline, TrafficOpts::default())
+        let exact = profile_req(&p, traffic_only, PipelineMode::Inline, TrafficOpts::default())
             .unwrap()
             .traffic;
         let sampled =
-            profile_opts(&p, traffic_only, PipelineMode::Inline, sampled_opts).unwrap().traffic;
+            profile_req(&p, traffic_only, PipelineMode::Inline, sampled_opts).unwrap().traffic;
         assert!(
             sampled.mrc_sampled_accesses < exact.accesses / 2,
             "{name}: sampling barely reduced the substream \
@@ -234,13 +256,13 @@ fn sampled_mode_is_bit_identical_across_all_four_deliveries() {
         let p = random_program(rng);
         let all = MetricSet::all();
         let opts = TrafficOpts::default().with_mrc(MrcMode::Sampled { rate: 0.5 });
-        let reference = profile_per_event_opts(&p, all, opts).map_err(|e| e.to_string())?;
+        let reference = profile_req_pe(&p, all, opts).map_err(|e| e.to_string())?;
         let inline =
-            profile_opts(&p, all, PipelineMode::Inline, opts).map_err(|e| e.to_string())?;
+            profile_req(&p, all, PipelineMode::Inline, opts).map_err(|e| e.to_string())?;
         let offload =
-            profile_opts(&p, all, PipelineMode::Offload, opts).map_err(|e| e.to_string())?;
+            profile_req(&p, all, PipelineMode::Offload, opts).map_err(|e| e.to_string())?;
         let sharded =
-            profile_opts(&p, all, PipelineMode::Sharded { workers: Workers::Auto }, opts)
+            profile_req(&p, all, PipelineMode::Sharded { workers: Workers::Auto }, opts)
                 .map_err(|e| e.to_string())?;
         prop_assert!(
             inline.traffic.mrc_mode == MrcMode::Sampled { rate: 0.5 },

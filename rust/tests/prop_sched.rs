@@ -1,0 +1,193 @@
+//! Scheduler and serve-daemon properties (ISSUE 9).
+//!
+//! The suite scheduler's contract is that `--jobs K` is purely a
+//! wall-clock knob: every per-app result must be bit-identical to the
+//! sequential run, in the same deterministic registry order, for every
+//! delivery mode. Fail-fast must cancel still-queued jobs instead of
+//! letting them run, and the `serve` daemon must keep streaming after a
+//! bad request, correlating results to submissions by `seq`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pisa_nmc::coordinator::{
+    AppOutcome, AppResult, JobSpec, Jobs, OnError, ProfileRequest, RunCtx, Scheduler, ServeCfg,
+    Server, SuitePolicy, WorkerBudget,
+};
+use pisa_nmc::fault::{FaultPlan, SuperviseOpts};
+use pisa_nmc::interp::{PipelineMode, Workers};
+use pisa_nmc::util::Json;
+
+const SCALE: f64 = 0.05;
+const SEED: u64 = 7;
+
+fn fault(spec: &str) -> SuperviseOpts {
+    SuperviseOpts::default().with_fault(FaultPlan::from_spec(spec).unwrap())
+}
+
+/// Canonical per-app result JSON: wall-clock zeroed, everything else
+/// bit-compared (same convention as prop_trace).
+fn canon(mut r: AppResult) -> String {
+    r.metrics.exec.wall_s = 0.0;
+    format!("{}:{}", r.name, r.to_json().to_string_compact())
+}
+
+fn suite_canon(mode: PipelineMode, per_event: bool, jobs: Jobs) -> Vec<String> {
+    ProfileRequest::suite(SCALE, SEED)
+        .mode(mode)
+        .per_event(per_event)
+        .jobs(jobs)
+        .run_apps(&RunCtx::new())
+        .unwrap()
+        .into_iter()
+        .map(canon)
+        .collect()
+}
+
+#[test]
+fn concurrent_suites_are_bit_identical_to_sequential_in_every_delivery() {
+    let arms: [(PipelineMode, bool, &str); 4] = [
+        (PipelineMode::Inline, true, "per-event"),
+        (PipelineMode::Inline, false, "inline"),
+        (PipelineMode::Offload, false, "offload"),
+        (PipelineMode::Sharded { workers: Workers::Auto }, false, "sharded"),
+    ];
+    for (mode, per_event, label) in arms {
+        let sequential = suite_canon(mode, per_event, Jobs::Fixed(1));
+        assert!(!sequential.is_empty(), "{label}: the suite must profile something");
+        for jobs in [Jobs::Fixed(2), Jobs::Auto] {
+            let parallel = suite_canon(mode, per_event, jobs);
+            assert_eq!(sequential, parallel, "{label} suite diverged under --jobs {jobs}");
+        }
+    }
+}
+
+#[test]
+fn fail_fast_cancels_queued_jobs_without_running_them() {
+    // Park the single job worker on an exhausted budget while all three
+    // jobs queue, so the submission order is deterministic: job 0 fails
+    // (injected interpreter fault), jobs 1–2 would each stall 5 s *if
+    // they ever ran* — fail-fast must cancel them off the queue instead.
+    let budget = WorkerBudget::new(1);
+    let (sched, rx) = Scheduler::new(1, Arc::clone(&budget), 8, /* fail_fast */ true);
+    let gate = budget.acquire(1);
+    let mut faulty = JobSpec::kernel("gesummv", 16, 1);
+    faulty.sup = fault("interp-error@interp");
+    sched.submit(faulty).unwrap();
+    for app in ["atax", "bicg"] {
+        let mut slow = JobSpec::kernel(app, 16, 1);
+        slow.sup = fault("stall:5000@interp");
+        sched.submit(slow).unwrap();
+    }
+    sched.finish();
+    let t0 = Instant::now();
+    drop(gate);
+    let mut kinds: Vec<(u64, String)> = rx
+        .iter()
+        .take(3)
+        .map(|c| {
+            let kind = match &c.outcome {
+                AppOutcome::Ok(_) => "ok".to_string(),
+                AppOutcome::Failed(f) => f.error.kind().to_string(),
+            };
+            (c.seq, kind)
+        })
+        .collect();
+    let elapsed = t0.elapsed();
+    kinds.sort();
+    assert_eq!(kinds[0], (0, "interp-error".to_string()), "the faulty job reports its own error");
+    assert_eq!(kinds[1], (1, "cancelled".to_string()));
+    assert_eq!(kinds[2], (2, "cancelled".to_string()));
+    // both stall jobs sleeping would take ≥ 10 s; cancellation is instant
+    assert!(elapsed < Duration::from_secs(4), "queued jobs must not run ({elapsed:?})");
+}
+
+#[test]
+fn suite_policy_failfast_aborts_and_continue_salvages() {
+    let sup = fault("interp-error@interp");
+    // fail-fast: the first interpreter fault aborts the whole request
+    let err = ProfileRequest::suite(SCALE, SEED)
+        .policy(SuitePolicy { sup, on_error: OnError::FailFast })
+        .jobs(Jobs::Fixed(2))
+        .run_apps(&RunCtx::new())
+        .unwrap_err();
+    assert!(err.to_string().contains("failed"), "{err}");
+    // continue: every failure rides along structurally, nothing is lost
+    let outcomes = ProfileRequest::suite(SCALE, SEED)
+        .policy(SuitePolicy { sup, on_error: OnError::Continue })
+        .jobs(Jobs::Auto)
+        .outcomes(&RunCtx::new())
+        .unwrap();
+    assert!(!outcomes.is_empty());
+    assert!(
+        outcomes.iter().all(|o| matches!(o, AppOutcome::Failed(_))),
+        "every app runs under the same injected fault"
+    );
+}
+
+fn reply_field<'j>(j: &'j Json, key: &str) -> &'j str {
+    j.get(key).and_then(|v| v.as_str()).unwrap_or_default()
+}
+
+fn reply_seq(j: &Json) -> u64 {
+    j.get("seq").and_then(|v| v.as_f64()).expect("reply carries a seq") as u64
+}
+
+#[test]
+fn serve_loopback_streams_results_and_survives_bad_requests() {
+    let cfg = ServeCfg { jobs: Jobs::Fixed(2), ..ServeCfg::default() };
+    let server = Server::bind("127.0.0.1:0", cfg, WorkerBudget::machine()).unwrap();
+    let addr = server.local_addr().unwrap();
+    let flag = server.shutdown_flag();
+    let daemon = std::thread::spawn(move || server.run());
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, r#"{{"cmd":"profile","app":"gesummv","n":32,"seed":7}}"#).unwrap();
+    writeln!(stream, r#"{{"cmd":"profile","app":"no-such-kernel"}}"#).unwrap();
+    writeln!(stream, r#"{{"cmd":"profile","app":"atax","n":32,"seed":7}}"#).unwrap();
+
+    // five replies: two accepted, one typed error (the connection keeps
+    // serving), two results — acceptance and result lines interleave
+    // freely, so classify by "type" and correlate on "seq"
+    let mut accepted: Vec<(u64, String)> = Vec::new();
+    let mut results: Vec<(u64, String)> = Vec::new();
+    let mut errors = 0;
+    for _ in 0..5 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        match reply_field(&j, "type") {
+            "accepted" => accepted.push((reply_seq(&j), reply_field(&j, "app").to_string())),
+            "result" => {
+                let eps = j.get("events_per_sec").and_then(|v| v.as_f64()).unwrap();
+                assert!(eps > 0.0, "results report profiler throughput");
+                results.push((reply_seq(&j), reply_field(&j, "app").to_string()));
+            }
+            "error" => errors += 1,
+            other => panic!("unexpected reply type '{other}': {line}"),
+        }
+    }
+    assert_eq!(errors, 1, "the unknown kernel gets a typed error and queues nothing");
+    accepted.sort();
+    results.sort();
+    assert_eq!(accepted, vec![(0, "gesummv".to_string()), (1, "atax".to_string())]);
+    assert_eq!(results, accepted, "seq metadata must correlate results to submissions");
+
+    // cancel of an already-finished seq is acknowledged, not fatal
+    writeln!(stream, r#"{{"cmd":"cancel","seq":0}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(reply_field(&j, "type"), "cancel");
+    assert!(line.contains("\"ok\":false"), "a finished job is past cancelling: {line}");
+
+    flag.store(true, Ordering::SeqCst);
+    drop(stream);
+    drop(reader);
+    daemon.join().unwrap().unwrap();
+}

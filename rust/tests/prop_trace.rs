@@ -18,9 +18,9 @@ use std::fs;
 use std::path::{Path, PathBuf};
 
 use pisa_nmc::analysis::{
-    profile_opts, profile_per_event_opts, profile_source_opts, profile_source_per_event,
-    AppMetrics, MetricSet,
+    profile_source_opts, profile_source_per_event, AppMetrics, MetricSet,
 };
+use pisa_nmc::coordinator::{ProfileRequest, RunCtx};
 use pisa_nmc::fault::{FaultPlan, SuperviseOpts};
 use pisa_nmc::interp::{EventChunk, Machine, PipelineMode, Workers};
 use pisa_nmc::ir::Program;
@@ -92,7 +92,14 @@ fn round_trip_is_bit_identical_on_real_kernels() {
         let p = k.build(n, 7);
         let all = MetricSet::all();
         let opts = TrafficOpts::default();
-        let direct = canon(profile_per_event_opts(&p, all, opts).unwrap());
+        let direct = canon(
+            ProfileRequest::program(&p)
+                .metrics(all)
+                .per_event(true)
+                .traffic(opts)
+                .run_metrics(&RunCtx::new())
+                .unwrap(),
+        );
         let path = record(&p, name, &format!("kern-{name}"), TraceLanes::ALL);
         for mode in REPLAY_MODES {
             let mut r = TraceReader::open(&path).unwrap();
@@ -117,8 +124,13 @@ fn round_trip_is_bit_identical_on_random_programs() {
         let p = random_program(rng);
         let all = MetricSet::all();
         let opts = TrafficOpts::default();
-        let direct =
-            canon(profile_opts(&p, all, PipelineMode::Inline, opts).map_err(|e| e.to_string())?);
+        let direct = canon(
+            ProfileRequest::program(&p)
+                .metrics(all)
+                .traffic(opts)
+                .run_metrics(&RunCtx::new())
+                .map_err(|e| e.to_string())?,
+        );
         let path = record(&p, "random", "rand", TraceLanes::ALL);
         for mode in REPLAY_MODES {
             let mut r = TraceReader::open(&path).map_err(|e| e.to_string())?;
@@ -296,7 +308,13 @@ fn replaying_lane_starved_trace_names_missing_families() {
     }
 
     // the selection the recording was made for still replays bit-identically
-    let direct = canon(profile_per_event_opts(&p, mix_only, TrafficOpts::default()).unwrap());
+    let direct = canon(
+        ProfileRequest::program(&p)
+            .metrics(mix_only)
+            .per_event(true)
+            .run_metrics(&RunCtx::new())
+            .unwrap(),
+    );
     let mut r = TraceReader::open(&path).unwrap();
     let replayed = profile_source_opts(
         &p,
