@@ -23,6 +23,13 @@
 //! | dep   | `ilp`, `dlp`           | —         | event slices (dataflow) |
 //! | block | `bblp`, `pbblp`        | —         | event slices (block structure) |
 //!
+//! The `--sweep` grid replays ([`TrafficOpts::sweep`]) ride the `hier`
+//! group: they are built exactly when the hierarchy half is enabled
+//! (`TrafficAnalyzer::with_opts_parts`), fold the same address/store
+//! lanes, and merge back through the same `HIERARCHY` adopt path — so a
+//! K-point grid sweeps one broadcast chunk stream on one worker instead
+//! of re-interpreting the app K times.
+//!
 //! `Workers::Auto` sizes the pool as one worker per non-empty group;
 //! `Workers::Fixed(n)` packs the groups contiguously into at most `n`
 //! shards (clamped so no shard is ever empty — `--metrics mix` collapses

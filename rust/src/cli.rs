@@ -32,6 +32,8 @@ const VALUE_FLAGS: &[&str] = &[
     "pipeline",
     "workers",
     "hierarchy",
+    "hierarchy-spec",
+    "sweep",
     "mrc",
     "mrc-smax",
     "inject-fault",
@@ -149,6 +151,60 @@ pub fn validate_trace_flags(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Traffic-family flag validation, applied up front like
+/// [`validate_trace_flags`]: `--hierarchy`/`--hierarchy-spec`/`--mrc`/
+/// `--mrc-smax`/`--sweep` configure the traffic analyzers, so they are
+/// rejected on verbs that never run them (`table`, `validate`, `ir`, …)
+/// and on runs whose `--metrics` selection excludes the traffic family —
+/// previously these combinations silently no-opped while `--workers`
+/// misuse errored, an inconsistency this closes. `--sweep` additionally
+/// re-profiles the registry suite, so it is pipeline/figure-only and
+/// cannot combine with `--trace` replay.
+pub fn validate_traffic_flags(a: &Args) -> Result<()> {
+    const TRAFFIC_FLAGS: &[&str] = &["hierarchy", "hierarchy-spec", "mrc", "mrc-smax", "sweep"];
+    const TRAFFIC_VERBS: &[&str] = &["pipeline", "analyze", "serve", "record", "figure"];
+    let Some(&flag) = TRAFFIC_FLAGS.iter().find(|f| a.has(f)) else {
+        return Ok(());
+    };
+    if !TRAFFIC_VERBS.contains(&a.command.as_str()) {
+        bail!(
+            "--{flag} configures the traffic analyzers, which the {} command never runs \
+             (traffic flags apply to: pipeline, analyze, serve, record, figure)",
+            a.command
+        );
+    }
+    if let Some(list) = a.get("metrics") {
+        let runs_traffic = list
+            .split(',')
+            .map(str::trim)
+            .any(|m| m == "traffic" || m == "all");
+        if !runs_traffic {
+            bail!(
+                "--{flag} configures the traffic analyzers but --metrics {list} deselects \
+                 the traffic family, so it would silently no-op; add `traffic` (or `all`)"
+            );
+        }
+    }
+    if a.has("hierarchy") && a.has("hierarchy-spec") {
+        bail!(
+            "--hierarchy and --hierarchy-spec both set the replay hierarchy; pick one \
+             (a spec carries its own per-level policy fields)"
+        );
+    }
+    if a.has("sweep") {
+        if !matches!(a.command.as_str(), "pipeline" | "figure") {
+            bail!("--sweep only applies to the pipeline and figure commands");
+        }
+        if a.has("trace") {
+            bail!(
+                "--sweep re-profiles the suite for its traffic-only grid pass and cannot \
+                 combine with --trace replay"
+            );
+        }
+    }
+    Ok(())
+}
+
 pub const HELP: &str = "\
 pisa-nmc — Platform-Independent Software Analysis for Near-Memory Computing
 (reproduction of Corda et al., cs.PF 2019; see DESIGN.md)
@@ -157,6 +213,7 @@ USAGE:
   pisa-nmc pipeline [--scale F] [--seed N] [--jobs N|auto] [--metrics LIST]
                     [--pipeline MODE] [--workers N|auto]
                     [--hierarchy inclusive|exclusive]
+                    [--hierarchy-spec FILE|JSON] [--sweep GRIDFILE]
                     [--mrc exact|sampled:<rate>] [--mrc-smax N]
                     [--inject-fault SPEC] [--app-timeout SECS]
                     [--on-error fail-fast|continue] [--no-pjrt]
@@ -172,6 +229,7 @@ USAGE:
   pisa-nmc analyze --kernel NAME [--n N] [--seed N] [--metrics LIST]
                    [--pipeline MODE] [--workers N|auto]
                    [--hierarchy inclusive|exclusive]
+                   [--hierarchy-spec FILE|JSON]
                    [--mrc exact|sampled:<rate>] [--mrc-smax N]
                    [--inject-fault SPEC] [--app-timeout SECS]
                    [--trace FILE] [--json]
@@ -183,8 +241,9 @@ USAGE:
                   [--mrc exact|sampled:<rate>] [--mrc-smax N] [--json]
         profile one kernel while streaming its event trace to a versioned
         .pallas-trace file (replay it later with --trace)
-  pisa-nmc figure {3a|3b|3c|4|5|6|mrc} [pipeline flags]
-        regenerate one paper figure (mrc: the miss-ratio-curve extension)
+  pisa-nmc figure {3a|3b|3c|4|5|6|mrc|sweep} [pipeline flags]
+        regenerate one paper figure (mrc: the miss-ratio-curve extension;
+        sweep: the offload-verdict grid, requires --sweep GRIDFILE)
   pisa-nmc table {1|2} [--scale F]
         print a paper table
   pisa-nmc validate [--n N]
@@ -207,6 +266,52 @@ levels, maintained by back-invalidation) or `exclusive` (a line lives in
 exactly one level; lower levels act as victim caches, so the aggregate
 capacity approaches the sum of the levels). Each level only sees the
 level above's misses; DRAM bytes count only what crosses the LLC.
+
+--hierarchy-spec FILE|JSON replaces the built-in host shape entirely
+with a user hierarchy (conflicts with --hierarchy, which only picks the
+policy of the built-in shape). The value is a path to a JSON file, or
+the JSON itself when it starts with `{`. Top-level keys: `levels` (1-8
+entries, required), `line_bytes` (power of two 8-4096, default 64),
+`policy` (`inclusive`|`exclusive` default for levels, default
+inclusive), `write_allocate` (default true; false sends store misses
+straight to DRAM without filling the hierarchy). Each level:
+`name` (unique, required), `capacity_bytes` or `capacity_kb`
+(required), `ways` (default 8), `policy` (per-level override),
+`replacement` (`lru`|`rrip`|`drrip`, default lru). Unknown keys and
+invalid shapes fail up front with a typed `hierarchy spec:` error, and
+the spec round-trips into the report JSON as provenance:
+
+  pisa-nmc analyze --kernel gesummv --metrics traffic --hierarchy-spec \\
+    '{\"levels\":[{\"name\":\"l1\",\"capacity_kb\":1,\"ways\":4},
+                {\"name\":\"llc\",\"capacity_kb\":16,\"replacement\":\"rrip\"}]}'
+
+--sweep GRIDFILE (pipeline and figure only) runs the design-space
+exploration advisor: after the normal profile pass, each app's address
+stream is replayed ONCE more with every grid configuration attached to
+the same chunk lanes — N small hierarchy replays sweeping one pass, no
+re-interpretation per grid point, each point's counters bit-identical
+to a standalone run at that config. Grid points whose aggregate
+capacity lands on a flat segment of the app's miss-ratio curve are
+pruned as dominated and inherit the nearest replayed neighbor's
+verdict. Each point's DRAM-line delta is folded through the host
+energy/latency model into a per-config EDP and compared against the
+NMC simulation, yielding a per-app offload verdict per grid point
+(figure `sweep`, plus a \"sweep\" section in --out JSON). The grid file
+holds hierarchy specs and an optional replacement-policy cross
+product:
+
+  {\"configs\": [
+     {\"levels\": [{\"name\": \"l1\", \"capacity_kb\": 1, \"ways\": 4}]},
+     {\"levels\": [{\"name\": \"l1\", \"capacity_kb\": 1, \"ways\": 4},
+                  {\"name\": \"llc\", \"capacity_kb\": 32, \"ways\": 8}]},
+     {\"policy\": \"exclusive\", \"levels\": [
+        {\"name\": \"l1\", \"capacity_kb\": 2},
+        {\"name\": \"llc\", \"capacity_kb\": 64}]}],
+   \"replacements\": [\"lru\", \"rrip\"]}
+
+  # 3 shapes x 2 replacement policies = 6 grid points per app
+  pisa-nmc pipeline --scale 0.1 --sweep grid.json --out report.json
+  pisa-nmc figure sweep --sweep grid.json
 
 --mrc MODE selects the stack-distance kernel behind the miss-ratio
 curves: `exact` (default — Olken/Fenwick over every access, bit-identical
@@ -480,5 +585,71 @@ mod tests {
     fn bad_number_is_error() {
         let a = args(&["pipeline", "--scale", "abc"]);
         assert!(a.get_f64("scale", 1.0).is_err());
+    }
+
+    #[test]
+    fn hierarchy_spec_and_sweep_flags_take_values() {
+        let a = args(&["pipeline", "--hierarchy-spec", "spec.json", "--sweep", "grid.json"]);
+        assert_eq!(a.get("hierarchy-spec"), Some("spec.json"));
+        assert_eq!(a.get("sweep"), Some("grid.json"));
+        assert!(parse(&["pipeline".into(), "--hierarchy-spec".into()]).is_err());
+        assert!(parse(&["pipeline".into(), "--sweep".into()]).is_err());
+    }
+
+    #[test]
+    fn traffic_flags_rejected_on_non_traffic_verbs() {
+        // previously these silently no-opped; now every traffic knob is
+        // checked against the verbs that actually run the traffic family
+        for flag in ["--hierarchy", "--hierarchy-spec", "--mrc", "--mrc-smax", "--sweep"] {
+            for cmd in ["table", "validate", "ir"] {
+                let a = args(&[cmd, flag, "x"]);
+                let err = validate_traffic_flags(&a).unwrap_err();
+                assert!(err.to_string().contains("traffic"), "{cmd} {flag}: {err}");
+            }
+        }
+        // the honoring verbs accept them
+        assert!(validate_traffic_flags(&args(&["pipeline", "--hierarchy", "exclusive"])).is_ok());
+        assert!(validate_traffic_flags(&args(&["serve", "--mrc", "sampled"])).is_ok());
+        assert!(validate_traffic_flags(&args(&["record", "--hierarchy", "inclusive"])).is_ok());
+        // flag-free commands validate clean
+        assert!(validate_traffic_flags(&args(&["table", "1"])).is_ok());
+    }
+
+    #[test]
+    fn traffic_flags_require_traffic_in_metrics() {
+        // e.g. `record --metrics mix --hierarchy ...` recorded a trace
+        // that never ran the hierarchy: reject instead of no-opping
+        let a = args(&["record", "--metrics", "mix", "--hierarchy", "exclusive"]);
+        let err = validate_traffic_flags(&a).unwrap_err();
+        assert!(err.to_string().contains("--metrics"), "{err}");
+        let a = args(&["analyze", "--metrics", "mix,reuse", "--mrc", "sampled"]);
+        assert!(validate_traffic_flags(&a).is_err());
+        // traffic or all in the list is fine, as is no --metrics (= all)
+        assert!(validate_traffic_flags(&args(&[
+            "analyze", "--metrics", "mix,traffic", "--mrc", "exact"
+        ]))
+        .is_ok());
+        assert!(validate_traffic_flags(&args(&["pipeline", "--metrics", "all", "--sweep", "g"]))
+            .is_ok());
+        assert!(validate_traffic_flags(&args(&["pipeline", "--hierarchy", "inclusive"])).is_ok());
+    }
+
+    #[test]
+    fn hierarchy_conflicts_with_hierarchy_spec() {
+        let a = args(&["pipeline", "--hierarchy", "exclusive", "--hierarchy-spec", "s.json"]);
+        let err = validate_traffic_flags(&a).unwrap_err();
+        assert!(err.to_string().contains("pick one"), "{err}");
+    }
+
+    #[test]
+    fn sweep_is_pipeline_or_figure_only_and_excludes_trace() {
+        assert!(validate_traffic_flags(&args(&["pipeline", "--sweep", "g.json"])).is_ok());
+        assert!(validate_traffic_flags(&args(&["figure", "sweep", "--sweep", "g.json"])).is_ok());
+        let a = args(&["analyze", "--sweep", "g.json"]);
+        let err = validate_traffic_flags(&a).unwrap_err();
+        assert!(err.to_string().contains("pipeline and figure"), "{err}");
+        let a = args(&["pipeline", "--sweep", "g.json", "--trace", "t.pallas-trace"]);
+        let err = validate_traffic_flags(&a).unwrap_err();
+        assert!(err.to_string().contains("--trace"), "{err}");
     }
 }

@@ -464,6 +464,17 @@ pub fn fig6(apps: &[AppResult], an: &SuiteAnalytics, metrics: MetricSet) -> (Str
     (text, out)
 }
 
+/// Format a ratio for a table cell. A non-finite value (e.g. 0/0 from an
+/// app the traffic family saw zero accesses for) renders as the grey
+/// dash instead of leaking "NaN" into the report.
+fn fmt_ratio(r: f64) -> String {
+    if r.is_finite() {
+        format!("{r:.3}")
+    } else {
+        "–".into()
+    }
+}
+
 /// The MRC figure (extension): miss-ratio curve per app across the
 /// geometric capacity family, the slope-based knee, byte-traffic rates
 /// and the per-level hierarchy series (each level's miss ratio over the
@@ -505,13 +516,13 @@ pub fn fig_mrc(apps: &[AppResult], metrics: MetricSet) -> (String, Json) {
     for a in apps {
         let tr = &a.metrics.traffic;
         let mut row = vec![a.name.clone()];
-        row.extend(tr.mrc_miss_ratio.iter().map(|r| format!("{r:.3}")));
+        row.extend(tr.mrc_miss_ratio.iter().map(|&r| fmt_ratio(r)));
         row.push(match tr.mrc_knee_bytes {
             Some(b) => capacity_label(b),
             None => "–".into(),
         });
         row.push(format!("{:.2}", tr.bytes_per_instr()));
-        row.extend(tr.levels.iter().map(|l| format!("{:.3}", l.miss_ratio())));
+        row.extend(tr.levels.iter().map(|l| fmt_ratio(l.miss_ratio())));
         row.push(format!("{:.2}", tr.dram_bytes_per_instr()));
         t.row(row);
         j.set(&a.name, tr.to_json());
@@ -537,6 +548,61 @@ pub fn fig_mrc(apps: &[AppResult], metrics: MetricSet) -> (String, Json) {
             "Fig MRC — miss-ratio curves ({} MRC), {} hierarchy and byte traffic (64B lines)\n{}",
             mrc_mode.describe(),
             policy.name(),
+            t.render()
+        ),
+        out,
+    )
+}
+
+/// The sweep figure (DSE advisor, `--sweep`): one row per app, one
+/// column per grid point, each cell the per-config
+/// `EDP_host(config)/EDP_nmc` ratio with the offload verdict — `✓` when
+/// NMC still wins at that hierarchy, `·` when the host does, `*` when
+/// the point was MRC-pruned and inherited its neighbor's verdict.
+pub fn fig_sweep(sw: &super::sweep::SweepReport) -> (String, Json) {
+    let mut headers = vec!["app".to_string()];
+    headers.extend(sw.labels.iter().cloned());
+    headers.push("offload@".into());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    let mut series = Json::obj();
+    for a in &sw.apps {
+        let mut row = vec![a.app.clone()];
+        let mut wins = 0usize;
+        let mut points = Vec::with_capacity(a.points.len());
+        for p in &a.points {
+            if p.offload {
+                wins += 1;
+            }
+            row.push(format!(
+                "{}{}{}",
+                if p.edp_vs_nmc.is_finite() { format!("{:.2}", p.edp_vs_nmc) } else { "–".into() },
+                if p.offload { "✓" } else { "·" },
+                if p.pruned { "*" } else { "" },
+            ));
+            let mut pj = Json::obj();
+            pj.set("edp_vs_nmc", p.edp_vs_nmc);
+            pj.set("offload", p.offload);
+            pj.set("pruned", p.pruned);
+            points.push(pj);
+        }
+        row.push(format!("{wins}/{}", a.points.len()));
+        t.row(row);
+        series.set(&a.app, points);
+    }
+    let mut out = Json::obj();
+    out.set("figure", "sweep");
+    out.set("metric", "EDP_host(config)/EDP_nmc per grid point (>1: offload wins)");
+    out.set(
+        "grid_labels",
+        sw.labels.iter().map(|l| Json::Str(l.clone())).collect::<Vec<Json>>(),
+    );
+    out.set("series", series);
+    (
+        format!(
+            "Fig SWEEP — per-app offload verdict across {} hierarchy configs\n\
+             (cell: EDP_host(cfg)/EDP_nmc; ✓ NMC wins, · host wins, * MRC-pruned/inherited)\n{}",
+            sw.labels.len(),
             t.render()
         ),
         out,
@@ -663,5 +729,55 @@ mod tests {
         let (s6, j6) = fig6(&apps, &an, sel);
         assert!(s6.contains("zeroed"));
         assert!(j6.get("deselected_features").is_some());
+    }
+
+    #[test]
+    fn non_finite_ratios_render_as_dash() {
+        assert_eq!(fmt_ratio(0.25), "0.250");
+        assert_eq!(fmt_ratio(f64::NAN), "–");
+        assert_eq!(fmt_ratio(f64::INFINITY), "–");
+    }
+
+    #[test]
+    fn sweep_figure_renders_offload_verdicts() {
+        use crate::coordinator::sweep::{run_sweep, SweepGrid};
+        use crate::coordinator::PipelineCfg;
+        let apps = tiny_apps();
+        let apps = &apps[..2]; // two apps keep the second replay pass cheap
+        let grid = SweepGrid::from_json_str(
+            r#"{"configs": [
+                 {"levels": [{"name": "l1", "capacity_kb": 1, "ways": 4}]},
+                 {"levels": [{"name": "l1", "capacity_kb": 1, "ways": 4},
+                             {"name": "llc", "capacity_kb": 16, "ways": 8}]},
+                 {"policy": "exclusive",
+                  "levels": [{"name": "l1", "capacity_kb": 2},
+                             {"name": "llc", "capacity_kb": 32}]}]}"#,
+        )
+        .unwrap();
+        // tiny_apps profiles at scale 0.08, seed 3 — the sweep pass must
+        // re-profile at the same seed for an identical address stream
+        let cfg = PipelineCfg { scale: 0.08, seed: 3, ..PipelineCfg::default() };
+        let sw = run_sweep(&cfg, apps, &grid).unwrap();
+        assert_eq!(sw.labels.len(), 3);
+        assert_eq!(sw.apps.len(), 2);
+        for a in &sw.apps {
+            assert_eq!(a.points.len(), 3);
+            assert!(a.replayed >= 1 && a.replayed <= 3);
+            for p in &a.points {
+                assert!(p.edp.is_finite() && p.edp > 0.0);
+                assert_eq!(p.pruned, p.counters.is_none());
+                assert_eq!(p.pruned, p.inherited_from.is_some());
+            }
+        }
+        let (text, json) = fig_sweep(&sw);
+        assert!(text.contains("offload verdict"), "{text}");
+        // the acceptance bar: >= 3 hierarchy columns in the rendered grid
+        assert!(text.contains("1K/incl·lru"), "{text}");
+        assert!(text.contains("1K+16K/incl·lru"), "{text}");
+        assert!(text.contains("2K+32K/excl·lru"), "{text}");
+        assert!(json.get("grid_labels").is_some());
+        let sj = sw.to_json();
+        assert!(sj.get("grid").is_some());
+        assert!(sj.to_string_compact().contains("\"offload\""));
     }
 }

@@ -31,6 +31,7 @@ pub mod pipeline;
 pub mod request;
 pub mod sched;
 pub mod serve;
+pub mod sweep;
 
 pub use figures::{analyze_suite, Engine, SuiteAnalytics};
 pub use pca::{pca, Pca};
@@ -43,6 +44,7 @@ pub use pipeline::{
 pub use request::{ProfileRequest, RunCtx};
 pub use sched::{Completion, JobKind, JobSpec, Jobs, Scheduler, SubmitError, WorkerBudget};
 pub use serve::{install_sigterm_handler, ServeCfg, Server};
+pub use sweep::{run_sweep, SweepGrid, SweepReport};
 
 use std::path::Path;
 
@@ -78,6 +80,12 @@ pub struct PipelineReport {
     /// `None` for every interpreting run. Rendered as the report's
     /// `"trace"` section.
     pub trace: Option<TraceProvenance>,
+    /// The design-space exploration result when the run carried a
+    /// `--sweep` grid: per-app, per-grid-point offload verdicts.
+    /// Attached by the CLI after the profile pass (see
+    /// [`sweep::run_sweep`]); rendered as the `"sweep"` section and the
+    /// sweep figure.
+    pub sweep: Option<SweepReport>,
 }
 
 /// Every knob one pipeline run takes — bundled so the supervised entry
@@ -225,6 +233,7 @@ pub fn run_replay_cfg(cfg: &PipelineCfg, trace_path: &Path) -> Result<PipelineRe
         mode: cfg.mode,
         traffic: cfg.traffic,
         trace: Some(provenance),
+        sweep: None,
     })
 }
 
@@ -256,6 +265,12 @@ impl PipelineReport {
         j.set("seed", self.seed);
         j.set("pipeline_mode", self.mode.name());
         j.set("hierarchy_policy", self.traffic.hierarchy.name());
+        if self.traffic.spec.is_some() {
+            // --hierarchy-spec provenance: the effective replay config in
+            // the exact shape from_spec_json accepts, so a reader can
+            // re-run the report's hierarchy verbatim
+            j.set("hierarchy_spec", self.traffic.main_config().to_json());
+        }
         j.set("mrc_mode", self.traffic.mrc.name());
         j.set("mrc_rate", self.traffic.mrc.rate());
         if let PipelineMode::Sharded { workers } = self.mode {
@@ -318,6 +333,10 @@ impl PipelineReport {
         j.set("fig3c", figures::fig3c(&self.apps, self.metrics).1);
         j.set("fig4", figures::fig4(&self.apps).1);
         j.set("fig_mrc", figures::fig_mrc(&self.apps, self.metrics).1);
+        if let Some(s) = &self.sweep {
+            j.set("sweep", s.to_json());
+            j.set("fig_sweep", figures::fig_sweep(s).1);
+        }
         j
     }
 
@@ -338,6 +357,10 @@ impl PipelineReport {
             figures::fig_mrc(&self.apps, self.metrics).0,
         ] {
             s.push_str(&text);
+            s.push('\n');
+        }
+        if let Some(sw) = &self.sweep {
+            s.push_str(&figures::fig_sweep(sw).0);
             s.push('\n');
         }
         s

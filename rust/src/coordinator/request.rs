@@ -311,6 +311,7 @@ impl<'p> ProfileRequest<'p> {
                     mode,
                     traffic,
                     trace: None,
+                    sweep: None,
                 })
             }
             Target::Trace { path } => {

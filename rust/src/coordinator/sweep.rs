@@ -1,0 +1,556 @@
+//! Design-space exploration advisor (`--sweep`): replay every app across
+//! a hierarchy-config × replacement-policy grid and report, per app and
+//! per grid point, whether the NMC side still wins on EDP.
+//!
+//! Two-phase by construction. The normal pipeline pass produces each
+//! app's miss-ratio curve plus its host/NMC simulations; this module then
+//! re-runs **only the traffic family once per app** with every kept grid
+//! config attached to the same chunk lanes ([`TrafficOpts::sweep`]), so a
+//! K-point grid costs one replay pass, not K — and each kept point's
+//! per-level counters are bit-identical to a standalone
+//! [`HierarchyReplay`](crate::traffic::HierarchyReplay) at that config
+//! (the differential oracle in `prop_hierarchy.rs` pins this).
+//!
+//! Between the phases the grid is pruned on the MRC: two configs of the
+//! same shape (same level count, ways, policies, replacement, line size)
+//! whose aggregate capacities land on the same flat segment of the app's
+//! miss-ratio curve cannot produce meaningfully different DRAM traffic,
+//! so the dominated point inherits its replayed neighbor's verdict
+//! instead of burning a replay slot.
+//!
+//! The verdict model charges each grid point's DRAM-line *delta* against
+//! the pass-1 host simulation: `ΔL` extra (or saved) 64 B-equivalent DRAM
+//! lines cost `ΔL × host_dram_line_pj` energy and `ΔL × dram_lat_ns /
+//! mlp` time on top of the simulated host, and the resulting per-config
+//! EDP is compared against the (hierarchy-independent) NMC EDP — the same
+//! `host EDP / NMC EDP > 1` offload rule the advisor already uses.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::analysis::MetricSet;
+use crate::sim::cache::ReplacementKind;
+use crate::sim::{EnergyConfig, HostConfig};
+use crate::traffic::{
+    capacity_label, HierarchyConfig, SweepCounters, MRC_CAPACITIES_BYTES, MRC_LINE_BYTES,
+};
+use crate::util::Json;
+use crate::workloads;
+
+use super::pipeline::AppResult;
+use super::request::{ProfileRequest, RunCtx};
+use super::PipelineCfg;
+
+/// Miss-ratio difference under which two grid capacities count as lying
+/// on the same flat MRC segment (the larger point is dominated and
+/// inherits the smaller's verdict). Half of
+/// [`MIN_KNEE_DROP`](crate::traffic::MIN_KNEE_DROP)'s noise floor.
+pub const SWEEP_FLAT_EPS: f64 = 0.01;
+
+/// Hard cap on grid points after the replacement cross product: the
+/// sweep is meant for tens of configs per pass, not a combinatorial
+/// explosion riding one address stream.
+pub const MAX_GRID_POINTS: usize = 64;
+
+/// A parsed `--sweep` grid: the config list after applying the optional
+/// replacement-policy cross product.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SweepGrid {
+    pub configs: Vec<HierarchyConfig>,
+}
+
+impl SweepGrid {
+    /// Parse a grid JSON document:
+    ///
+    /// ```json
+    /// {"configs": [<hierarchy spec>, ...],
+    ///  "replacements": ["lru", "rrip"]}
+    /// ```
+    ///
+    /// Each entry of `configs` is a full `--hierarchy-spec` object and is
+    /// validated by the same typed parser
+    /// ([`HierarchyConfig::from_spec_json`]). The optional `replacements`
+    /// list cross-products the grid: every config is duplicated per
+    /// policy with *all* its levels stamped to that replacement
+    /// (overriding any per-level `replacement` fields).
+    pub fn from_json_str(s: &str) -> Result<SweepGrid> {
+        let root = Json::parse(s).map_err(|e| anyhow!("sweep grid: {e}"))?;
+        let obj = root
+            .as_obj()
+            .ok_or_else(|| anyhow!("sweep grid: top level must be an object"))?;
+        for key in obj.keys() {
+            if key != "configs" && key != "replacements" {
+                bail!("sweep grid: unknown key '{key}' (expected configs, replacements)");
+            }
+        }
+        let configs_json = root
+            .get("configs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("sweep grid: requires a \"configs\" array"))?;
+        if configs_json.is_empty() {
+            bail!("sweep grid: \"configs\" must not be empty");
+        }
+        let mut base = Vec::with_capacity(configs_json.len());
+        for (i, c) in configs_json.iter().enumerate() {
+            // route through the spec parser so grid entries fail with the
+            // same typed `hierarchy spec:` errors as --hierarchy-spec
+            let cfg = HierarchyConfig::from_spec_json(&c.to_string_compact())
+                .map_err(|e| anyhow!("sweep grid: configs[{i}]: {e}"))?;
+            base.push(cfg);
+        }
+        let replacements = match root.get("replacements") {
+            None => Vec::new(),
+            Some(r) => {
+                let arr = r
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("sweep grid: \"replacements\" must be an array"))?;
+                arr.iter()
+                    .map(|v| {
+                        v.as_str()
+                            .and_then(ReplacementKind::from_name)
+                            .ok_or_else(|| {
+                                anyhow!(
+                                    "sweep grid: replacement '{}' is not lru|rrip|drrip",
+                                    v.to_string_compact()
+                                )
+                            })
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            }
+        };
+        let configs: Vec<HierarchyConfig> = if replacements.is_empty() {
+            base
+        } else {
+            base.iter()
+                .flat_map(|c| {
+                    replacements.iter().map(|&r| {
+                        let mut cc = c.clone();
+                        for l in &mut cc.levels {
+                            l.replacement = r;
+                        }
+                        cc
+                    })
+                })
+                .collect()
+        };
+        if configs.len() > MAX_GRID_POINTS {
+            bail!(
+                "sweep grid: {} grid points exceed the cap of {MAX_GRID_POINTS}",
+                configs.len()
+            );
+        }
+        Ok(SweepGrid { configs })
+    }
+
+    /// Load a grid from a file path, or parse it inline when the argument
+    /// itself starts with `{` (mirrors `--hierarchy-spec`).
+    pub fn load(arg: &str) -> Result<SweepGrid> {
+        let text = if arg.trim_start().starts_with('{') {
+            arg.to_string()
+        } else {
+            std::fs::read_to_string(arg).with_context(|| format!("sweep grid: reading {arg}"))?
+        };
+        Self::from_json_str(&text)
+    }
+}
+
+/// Compact column label for one grid point, e.g. `4K+32K/incl·rrip`
+/// (capacities per level, policy, replacement — `·nwa` marks
+/// no-write-allocate, `·mixed` a per-level mixture).
+pub fn config_label(c: &HierarchyConfig) -> String {
+    let caps: Vec<String> = c.levels.iter().map(|l| capacity_label(l.capacity_bytes)).collect();
+    let pol = if c.levels.iter().all(|l| l.policy == c.levels[0].policy) {
+        &c.levels[0].policy.name()[..4]
+    } else {
+        "mixd"
+    };
+    let repl = if c.levels.iter().all(|l| l.replacement == c.levels[0].replacement) {
+        c.levels[0].replacement.name().to_string()
+    } else {
+        "mixed".to_string()
+    };
+    let mut s = format!("{}/{}·{}", caps.join("+"), pol, repl);
+    if !c.write_allocate {
+        s.push_str("·nwa");
+    }
+    s
+}
+
+/// Per-grid-point plan for one app: replay it (consuming the next
+/// [`TrafficOpts::sweep`] slot) or inherit a replayed neighbor's result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PointPlan {
+    Replay { slot: usize },
+    Inherit { from: usize },
+}
+
+/// The app's miss ratio at an arbitrary capacity: log2-linear
+/// interpolation over the geometric MRC family, clamped at the ends.
+/// `None` when the curve is unusable (wrong length or non-finite — e.g.
+/// an app the traffic family never saw).
+fn mrc_at(mrc: &[f64], bytes: u64) -> Option<f64> {
+    if mrc.len() != MRC_CAPACITIES_BYTES.len() || mrc.iter().any(|r| !r.is_finite()) {
+        return None;
+    }
+    let caps = &MRC_CAPACITIES_BYTES;
+    if bytes <= caps[0] {
+        return Some(mrc[0]);
+    }
+    if bytes >= caps[caps.len() - 1] {
+        return Some(mrc[mrc.len() - 1]);
+    }
+    let x = (bytes as f64).log2();
+    for i in 1..caps.len() {
+        if bytes <= caps[i] {
+            let x0 = (caps[i - 1] as f64).log2();
+            let x1 = (caps[i] as f64).log2();
+            let t = (x - x0) / (x1 - x0);
+            return Some(mrc[i - 1] + t * (mrc[i] - mrc[i - 1]));
+        }
+    }
+    unreachable!("bytes bounded by the clamp above");
+}
+
+/// Everything about a config except its capacities: two grid points may
+/// only inherit from each other when their shapes match, since the MRC
+/// flatness argument speaks about capacity alone.
+fn shape_signature(c: &HierarchyConfig) -> String {
+    let levels: Vec<String> = c
+        .levels
+        .iter()
+        .map(|l| format!("{}:{}:{}", l.ways, l.policy.name(), l.replacement.name()))
+        .collect();
+    format!("{}|{}|{}", c.line_bytes, c.write_allocate, levels.join(","))
+}
+
+/// Decide, per grid point, replay vs inherit for one app. Within each
+/// shape group (sorted by aggregate capacity) a point whose interpolated
+/// miss ratio sits within [`SWEEP_FLAT_EPS`] of the previously kept
+/// point's is dominated: same curve segment, same DRAM traffic, same
+/// verdict. Unusable curves disable pruning entirely.
+fn plan_grid(configs: &[HierarchyConfig], mrc: &[f64]) -> Vec<PointPlan> {
+    let mut inherit_from: Vec<Option<usize>> = vec![None; configs.len()];
+    let mut order: Vec<usize> = (0..configs.len()).collect();
+    order.sort_by_key(|&i| (shape_signature(&configs[i]), configs[i].aggregate_capacity_bytes()));
+    let mut prev: Option<(String, usize, f64)> = None; // (signature, kept idx, kept mr)
+    for i in order {
+        let sig = shape_signature(&configs[i]);
+        let mr = mrc_at(mrc, configs[i].aggregate_capacity_bytes());
+        let dominated = matches!((&prev, mr),
+            (Some((psig, _, pmr)), Some(mr)) if *psig == sig && (mr - pmr).abs() < SWEEP_FLAT_EPS);
+        if dominated {
+            inherit_from[i] = prev.as_ref().map(|(_, kept, _)| *kept);
+        } else {
+            prev = Some((sig, i, mr.unwrap_or(f64::NAN)));
+        }
+    }
+    // Replay slots number the kept points in *grid* order — the same
+    // order `TrafficOpts::sweep` (and so `TrafficMetrics::sweep`) uses.
+    let mut slot = 0usize;
+    inherit_from
+        .into_iter()
+        .map(|inh| match inh {
+            Some(from) => PointPlan::Inherit { from },
+            None => {
+                let p = PointPlan::Replay { slot };
+                slot += 1;
+                p
+            }
+        })
+        .collect()
+}
+
+/// One app × one grid point: the replayed (or inherited) DRAM traffic
+/// and the EDP verdict derived from it.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    /// `true` when this point was MRC-pruned and inherited
+    /// [`inherited_from`](Self::inherited_from)'s numbers.
+    pub pruned: bool,
+    pub inherited_from: Option<usize>,
+    /// Per-level counters — `None` for pruned points (they were never
+    /// replayed; that is the point).
+    pub counters: Option<SweepCounters>,
+    /// Post-hierarchy DRAM traffic in 64 B-equivalent lines
+    /// (fills + writebacks, scaled by the config's line size).
+    pub dram_lines64: f64,
+    /// Host EDP under this hierarchy (delta model over the simulated
+    /// host).
+    pub edp: f64,
+    /// `edp / nmc_edp` — the per-config analog of
+    /// [`EdpComparison::edp_improvement`](crate::sim::EdpComparison::edp_improvement).
+    pub edp_vs_nmc: f64,
+    /// The offload verdict: NMC still wins at this hierarchy.
+    pub offload: bool,
+}
+
+/// One app's row of the sweep.
+#[derive(Debug, Clone)]
+pub struct AppSweep {
+    pub app: String,
+    pub points: Vec<GridPoint>,
+    /// Grid points actually replayed (the rest were MRC-pruned).
+    pub replayed: usize,
+}
+
+/// The full `--sweep` result: grid provenance plus one row per app.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub labels: Vec<String>,
+    pub configs: Vec<HierarchyConfig>,
+    pub apps: Vec<AppSweep>,
+}
+
+impl SweepReport {
+    /// The `"sweep"` section of the pipeline JSON: the grid (full spec
+    /// provenance per point) and per-app per-point verdicts.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        let grid: Vec<Json> = self
+            .configs
+            .iter()
+            .zip(&self.labels)
+            .map(|(c, l)| {
+                let mut g = Json::obj();
+                g.set("label", l.as_str());
+                g.set("config", c.to_json());
+                g.set("aggregate_capacity_bytes", c.aggregate_capacity_bytes());
+                g
+            })
+            .collect();
+        j.set("grid", grid);
+        let mut apps = Json::obj();
+        for a in &self.apps {
+            let mut o = Json::obj();
+            o.set("replayed", a.replayed as u64);
+            o.set("pruned", (a.points.len() - a.replayed) as u64);
+            let points: Vec<Json> = a
+                .points
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let mut pj = Json::obj();
+                    pj.set("label", self.labels[i].as_str());
+                    pj.set("pruned", p.pruned);
+                    if let Some(from) = p.inherited_from {
+                        pj.set("inherited_from", from as u64);
+                    }
+                    pj.set("dram_lines64", p.dram_lines64);
+                    pj.set("edp", p.edp);
+                    pj.set("edp_vs_nmc", p.edp_vs_nmc);
+                    pj.set("offload", p.offload);
+                    if let Some(c) = &p.counters {
+                        pj.set("counters", c.to_json());
+                    }
+                    pj
+                })
+                .collect();
+            o.set("points", points);
+            apps.set(&a.app, o);
+        }
+        j.set("apps", apps);
+        j
+    }
+}
+
+/// Run the sweep's second phase over an already-profiled suite: one
+/// traffic-only replay per app carrying every kept grid config, then the
+/// EDP verdict per grid point. `apps` must come from a live (non-trace)
+/// pipeline pass — the replay re-interprets each kernel by name at the
+/// same `n` and seed, so the address stream is identical to pass 1.
+pub fn run_sweep(cfg: &PipelineCfg, apps: &[AppResult], grid: &SweepGrid) -> Result<SweepReport> {
+    let labels: Vec<String> = grid.configs.iter().map(config_label).collect();
+    let hostc = HostConfig::default(); // latency knobs; caches live in the grid
+    let energy = EnergyConfig::default();
+    let mut out = Vec::with_capacity(apps.len());
+    for app in apps {
+        let plan = plan_grid(&grid.configs, &app.metrics.traffic.mrc_miss_ratio);
+        let kept: Vec<HierarchyConfig> = plan
+            .iter()
+            .zip(&grid.configs)
+            .filter(|(p, _)| matches!(p, PointPlan::Replay { .. }))
+            .map(|(_, c)| c.clone())
+            .collect();
+        let n_kept = kept.len();
+        // Leaked once per app per run: TrafficOpts stays Copy by carrying
+        // a 'static slice, and a CLI sweep leaks a handful of tiny
+        // configs exactly once.
+        let kept: &'static [HierarchyConfig] = Box::leak(kept.into_boxed_slice());
+        let k = workloads::by_name(&app.name)
+            .with_context(|| format!("sweep: app {} is not a registry kernel", app.name))?;
+        let m = ProfileRequest::app(k.as_ref(), app.n, cfg.seed)
+            .metrics(MetricSet::from_names("traffic")?)
+            .mode(cfg.mode)
+            .traffic(cfg.traffic.with_sweep(Some(kept)))
+            .run_metrics(&RunCtx::new())?;
+        let counters = &m.traffic.sweep;
+        if counters.len() != n_kept {
+            bail!(
+                "sweep: {} returned {} grid counters for {} kept configs",
+                app.name,
+                counters.len(),
+                n_kept
+            );
+        }
+        let host = &app.cmp.host;
+        let nmc_edp = app.cmp.nmc.edp();
+        let base_lines = host.dram_lines as f64;
+        let verdict = |lines64: f64| -> (f64, f64, bool) {
+            let delta = lines64 - base_lines;
+            let e = (host.energy_j + delta * energy.host_dram_line_pj * 1e-12)
+                .max(f64::MIN_POSITIVE);
+            let t = (host.time_s + delta * hostc.dram_lat_ns * 1e-9 / hostc.mlp)
+                .max(f64::MIN_POSITIVE);
+            let edp = e * t;
+            let vs = if nmc_edp > 0.0 { edp / nmc_edp } else { 0.0 };
+            (edp, vs, vs > 1.0)
+        };
+        let mut points: Vec<Option<GridPoint>> = vec![None; grid.configs.len()];
+        for (i, p) in plan.iter().enumerate() {
+            if let PointPlan::Replay { slot } = p {
+                let c = counters[*slot].clone();
+                let lines64 = (c.dram_fills + c.dram_writebacks) as f64
+                    * (c.config.line_bytes as f64 / MRC_LINE_BYTES as f64);
+                let (edp, vs, offload) = verdict(lines64);
+                points[i] = Some(GridPoint {
+                    pruned: false,
+                    inherited_from: None,
+                    counters: Some(c),
+                    dram_lines64: lines64,
+                    edp,
+                    edp_vs_nmc: vs,
+                    offload,
+                });
+            }
+        }
+        for (i, p) in plan.iter().enumerate() {
+            if let PointPlan::Inherit { from } = p {
+                let donor = points[*from]
+                    .as_ref()
+                    .expect("inherit targets are always replayed points");
+                points[i] = Some(GridPoint {
+                    pruned: true,
+                    inherited_from: Some(*from),
+                    counters: None,
+                    dram_lines64: donor.dram_lines64,
+                    edp: donor.edp,
+                    edp_vs_nmc: donor.edp_vs_nmc,
+                    offload: donor.offload,
+                });
+            }
+        }
+        out.push(AppSweep {
+            app: app.name.clone(),
+            points: points.into_iter().map(|p| p.expect("every point resolved")).collect(),
+            replayed: n_kept,
+        });
+    }
+    Ok(SweepReport { labels, configs: grid.configs.clone(), apps: out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::HierarchyPolicy;
+
+    fn grid3() -> SweepGrid {
+        SweepGrid::from_json_str(
+            r#"{"configs": [
+                 {"levels": [{"name": "l1", "capacity_kb": 1, "ways": 4}]},
+                 {"levels": [{"name": "l1", "capacity_kb": 1, "ways": 4},
+                             {"name": "llc", "capacity_kb": 32, "ways": 8}]},
+                 {"policy": "exclusive",
+                  "levels": [{"name": "l1", "capacity_kb": 2},
+                             {"name": "llc", "capacity_kb": 64}]}]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn grid_parses_and_cross_products() {
+        let g = grid3();
+        assert_eq!(g.configs.len(), 3);
+        assert_eq!(g.configs[0].levels.len(), 1);
+        assert_eq!(g.configs[2].policy, HierarchyPolicy::Exclusive);
+        // replacement cross product doubles the grid and stamps levels
+        let g2 = SweepGrid::from_json_str(
+            r#"{"configs": [{"levels": [{"name": "l1", "capacity_kb": 1}]},
+                            {"levels": [{"name": "l1", "capacity_kb": 4}]}],
+                "replacements": ["lru", "rrip"]}"#,
+        )
+        .unwrap();
+        assert_eq!(g2.configs.len(), 4);
+        assert_eq!(g2.configs[0].levels[0].replacement, ReplacementKind::Lru);
+        assert_eq!(g2.configs[1].levels[0].replacement, ReplacementKind::Rrip);
+        assert_eq!(g2.configs[3].levels[0].replacement, ReplacementKind::Rrip);
+    }
+
+    #[test]
+    fn grid_errors_are_typed() {
+        let e = SweepGrid::from_json_str("[]").unwrap_err();
+        assert!(e.to_string().contains("sweep grid"), "{e}");
+        let e = SweepGrid::from_json_str(r#"{"configs": []}"#).unwrap_err();
+        assert!(e.to_string().contains("must not be empty"), "{e}");
+        let e = SweepGrid::from_json_str(r#"{"configs": [{"levels": []}]}"#).unwrap_err();
+        // config entries fail with the spec parser's typed prefix
+        assert!(e.to_string().contains("hierarchy spec"), "{e}");
+        let e = SweepGrid::from_json_str(r#"{"grids": [1]}"#).unwrap_err();
+        assert!(e.to_string().contains("unknown key"), "{e}");
+        let e = SweepGrid::from_json_str(
+            r#"{"configs": [{"levels": [{"name": "l1", "capacity_kb": 1}]}],
+                "replacements": ["plru"]}"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("lru|rrip|drrip"), "{e}");
+        // a path that is not inline JSON and does not exist
+        assert!(SweepGrid::load("/nonexistent/grid.json").is_err());
+    }
+
+    #[test]
+    fn labels_are_compact_and_distinct() {
+        let g = grid3();
+        let labels: Vec<String> = g.configs.iter().map(config_label).collect();
+        assert_eq!(labels[0], "1K/incl·lru");
+        assert_eq!(labels[1], "1K+32K/incl·lru");
+        assert_eq!(labels[2], "2K+64K/excl·lru");
+    }
+
+    #[test]
+    fn mrc_interpolation_clamps_and_interpolates() {
+        let mrc = [1.0, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3];
+        assert_eq!(mrc_at(&mrc, 1), Some(1.0)); // below the family
+        assert_eq!(mrc_at(&mrc, 1 << 30), Some(0.3)); // above it
+        assert_eq!(mrc_at(&mrc, 4 << 10), Some(1.0)); // exact point
+        // halfway in log2 between 4K and 16K
+        let mid = mrc_at(&mrc, 8 << 10).unwrap();
+        assert!((mid - 0.95).abs() < 1e-12, "{mid}");
+        // unusable curves: wrong length or NaN
+        assert_eq!(mrc_at(&[0.5; 3], 4 << 10), None);
+        assert_eq!(mrc_at(&[f64::NAN; 8], 4 << 10), None);
+    }
+
+    #[test]
+    fn flat_segments_are_pruned_within_a_shape_group() {
+        // same shape, capacities 4K / 8K / 4M: the curve is flat between
+        // 4K and 8K, cliffs by 4M
+        let mk = |kb: u64| {
+            HierarchyConfig::from_spec_json(&format!(
+                r#"{{"levels": [{{"name": "l1", "capacity_kb": {kb}, "ways": 4}}]}}"#
+            ))
+            .unwrap()
+        };
+        let configs = vec![mk(4), mk(8), mk(4096)];
+        let mrc = [0.9, 0.9, 0.9, 0.9, 0.9, 0.2, 0.2, 0.2];
+        let plan = plan_grid(&configs, &mrc);
+        assert_eq!(plan[0], PointPlan::Replay { slot: 0 });
+        assert_eq!(plan[1], PointPlan::Inherit { from: 0 });
+        assert_eq!(plan[2], PointPlan::Replay { slot: 1 });
+        // different shape (ways) never inherits, even at equal capacity
+        let mut other = mk(8);
+        other.levels[0].ways = 2;
+        let plan = plan_grid(&[mk(4), other], &mrc);
+        assert!(plan.iter().all(|p| matches!(p, PointPlan::Replay { .. })));
+        // NaN curve disables pruning
+        let plan = plan_grid(&[mk(4), mk(8)], &[f64::NAN; 8]);
+        assert!(plan.iter().all(|p| matches!(p, PointPlan::Replay { .. })));
+    }
+}

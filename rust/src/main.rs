@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use pisa_nmc::analysis::{AnalyzerStack, MetricSet};
 use pisa_nmc::cli::{self, Args};
@@ -18,7 +18,7 @@ use pisa_nmc::interp::{
 use pisa_nmc::report::save_json;
 use pisa_nmc::runtime::Runtime;
 use pisa_nmc::trace::{required_lanes, TraceMeta, TraceWriter};
-use pisa_nmc::traffic::{HierarchyPolicy, MrcMode, TrafficOpts};
+use pisa_nmc::traffic::{HierarchyConfig, HierarchyPolicy, MrcMode, TrafficOpts};
 use pisa_nmc::workloads;
 
 fn main() {
@@ -76,8 +76,26 @@ fn mrc_mode(args: &Args) -> Result<MrcMode> {
     }
 }
 
-/// Bundle the traffic-family flags (`--hierarchy`, `--mrc`,
-/// `--mrc-smax`).
+/// Parse `--hierarchy-spec`: a file path, or the spec JSON itself when
+/// the value starts with `{`. The validated config is leaked to
+/// `'static` — [`TrafficOpts`] stays `Copy` by carrying a reference, and
+/// a CLI run parses exactly one spec for its whole lifetime.
+fn hierarchy_spec(args: &Args) -> Result<Option<&'static HierarchyConfig>> {
+    let Some(arg) = args.get("hierarchy-spec") else {
+        return Ok(None);
+    };
+    let text = if arg.trim_start().starts_with('{') {
+        arg.to_string()
+    } else {
+        std::fs::read_to_string(arg)
+            .with_context(|| format!("--hierarchy-spec: reading {arg}"))?
+    };
+    let cfg = HierarchyConfig::from_spec_json(&text).map_err(|e| anyhow!("{e}"))?;
+    Ok(Some(&*Box::leak(Box::new(cfg))))
+}
+
+/// Bundle the traffic-family flags (`--hierarchy`, `--hierarchy-spec`,
+/// `--mrc`, `--mrc-smax`).
 fn traffic_opts(args: &Args) -> Result<TrafficOpts> {
     let mrc = mrc_mode(args)?;
     let smax = match args.get("mrc-smax") {
@@ -95,7 +113,8 @@ fn traffic_opts(args: &Args) -> Result<TrafficOpts> {
     };
     Ok(TrafficOpts::with_hierarchy(hierarchy_policy(args)?)
         .with_mrc(mrc)
-        .with_mrc_smax(smax))
+        .with_mrc_smax(smax)
+        .with_spec(hierarchy_spec(args)?))
 }
 
 /// Parse the supervision flags (`--inject-fault`, `--app-timeout`).
@@ -186,6 +205,7 @@ impl Instrument for RecordSink<'_> {
 
 fn run(args: Args) -> Result<()> {
     cli::validate_trace_flags(&args)?;
+    cli::validate_traffic_flags(&args)?;
     match args.command.as_str() {
         "pipeline" => {
             let cfg = PipelineCfg {
@@ -197,13 +217,19 @@ fn run(args: Args) -> Result<()> {
                 traffic: traffic_opts(&args)?,
                 policy: suite_policy(&args)?,
             };
-            let report = match args.get("trace") {
+            let mut report = match args.get("trace") {
                 Some(tp) => coordinator::run_replay_cfg(&cfg, Path::new(tp))?,
                 None => {
                     let rt = load_runtime(&args);
                     coordinator::run_pipeline_cfg(&cfg, rt.as_ref())?
                 }
             };
+            if let Some(gridarg) = args.get("sweep") {
+                // phase 2 of the DSE advisor: one traffic-only replay per
+                // app with the (MRC-pruned) grid riding the chunk lanes
+                let grid = coordinator::SweepGrid::load(gridarg)?;
+                report.sweep = Some(coordinator::run_sweep(&cfg, &report.apps, &grid)?);
+            }
             print!("{}", report.render_all());
             // perf trend line for CI logs: suite-level profiler throughput
             eprintln!(
@@ -439,7 +465,15 @@ fn run(args: Args) -> Result<()> {
                 "5" => figures::fig5(&report.apps, &report.analytics, report.metrics),
                 "6" => figures::fig6(&report.apps, &report.analytics, report.metrics),
                 "mrc" => figures::fig_mrc(&report.apps, report.metrics),
-                other => bail!("unknown figure '{other}' (3a|3b|3c|4|5|6|mrc)"),
+                "sweep" => {
+                    let gridarg = args
+                        .get("sweep")
+                        .ok_or_else(|| anyhow!("figure sweep requires --sweep GRIDFILE"))?;
+                    let grid = coordinator::SweepGrid::load(gridarg)?;
+                    let sw = coordinator::run_sweep(&cfg, &report.apps, &grid)?;
+                    figures::fig_sweep(&sw)
+                }
+                other => bail!("unknown figure '{other}' (3a|3b|3c|4|5|6|mrc|sweep)"),
             };
             print!("{text}");
             Ok(())

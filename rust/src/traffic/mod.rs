@@ -62,7 +62,8 @@ pub mod mrc;
 pub mod sample;
 
 pub use hierarchy::{
-    HierarchyConfig, HierarchyPolicy, HierarchyReplay, LevelConfig, LevelStats, HIERARCHY_LEVELS,
+    HierarchyConfig, HierarchyPolicy, HierarchyReplay, LevelConfig, LevelStats, SpecError,
+    SweepCounters, HIERARCHY_LEVELS, MAX_LEVELS,
 };
 pub use mrc::{
     slope_knee, MrcBuilder, MIN_KNEE_DROP, MRC_CAPACITIES_BYTES, MRC_LINE_BYTES, N_MRC_POINTS,
@@ -87,6 +88,15 @@ pub struct TrafficOpts {
     /// lines (fixed-size mode). `None` keeps the mode's own kernel
     /// choice; only meaningful with a sampled [`MrcMode`].
     pub mrc_smax: Option<usize>,
+    /// CLI `--hierarchy-spec`: a fully custom hierarchy shape for the
+    /// main replay, overriding the host shape (and `hierarchy` above).
+    /// `'static` so the opts stay `Copy` all the way down the per-shard
+    /// fan-out: the CLI/coordinator leaks the one parsed config per run.
+    pub spec: Option<&'static HierarchyConfig>,
+    /// CLI `--sweep`: the DSE grid. Each config gets its own small
+    /// [`HierarchyReplay`] folding the same lanes as the main replay, in
+    /// the same single pass. Same leak-once `'static` pattern as `spec`.
+    pub sweep: Option<&'static [HierarchyConfig]>,
 }
 
 impl TrafficOpts {
@@ -104,6 +114,25 @@ impl TrafficOpts {
     pub fn with_mrc_smax(mut self, smax: Option<usize>) -> Self {
         self.mrc_smax = smax;
         self
+    }
+
+    pub fn with_spec(mut self, spec: Option<&'static HierarchyConfig>) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    pub fn with_sweep(mut self, sweep: Option<&'static [HierarchyConfig]>) -> Self {
+        self.sweep = sweep;
+        self
+    }
+
+    /// The shape the main replay runs under: the `--hierarchy-spec`
+    /// config when given, else the host chain under `hierarchy`.
+    pub fn main_config(&self) -> HierarchyConfig {
+        match self.spec {
+            Some(cfg) => cfg.clone(),
+            None => HierarchyConfig::host(self.hierarchy),
+        }
     }
 }
 
@@ -187,6 +216,10 @@ pub struct TrafficAnalyzer {
     mrc: Option<MrcEngine>,
     mrc_mode: MrcMode,
     hierarchy: Option<HierarchyReplay>,
+    /// The DSE grid (`--sweep`): one small replay per grid config, all
+    /// folding the same accesses as the main replay in the same pass.
+    /// Rides the hierarchy half of the family in the shard plan.
+    sweeps: Vec<HierarchyReplay>,
     reads: u64,
     writes: u64,
     read_bytes: u64,
@@ -215,6 +248,7 @@ impl TrafficAnalyzer {
             mrc: Some(MrcEngine::Exact(MrcBuilder::new())),
             mrc_mode: MrcMode::Exact,
             hierarchy: Some(HierarchyReplay::new(cfg)),
+            sweeps: Vec::new(),
             reads: 0,
             writes: 0,
             read_bytes: 0,
@@ -232,12 +266,18 @@ impl TrafficAnalyzer {
     /// a worker folding just the hierarchy replay allocates no MRC state
     /// and requests no sizes lane, and vice versa.
     pub fn with_opts_parts(opts: TrafficOpts, parts: TrafficParts) -> Self {
+        let sweeps = if parts.has_hierarchy() {
+            opts.sweep
+                .map(|grid| grid.iter().map(|c| HierarchyReplay::new(c.clone())).collect())
+                .unwrap_or_default()
+        } else {
+            Vec::new()
+        };
         TrafficAnalyzer {
             mrc: parts.has_mrc().then(|| MrcEngine::for_opts(opts)),
             mrc_mode: opts.mrc,
-            hierarchy: parts
-                .has_hierarchy()
-                .then(|| HierarchyReplay::new(HierarchyConfig::host(opts.hierarchy))),
+            hierarchy: parts.has_hierarchy().then(|| HierarchyReplay::new(opts.main_config())),
+            sweeps,
             reads: 0,
             writes: 0,
             read_bytes: 0,
@@ -264,6 +304,9 @@ impl TrafficAnalyzer {
         }
         if let Some(h) = &mut self.hierarchy {
             h.access(addr, is_store);
+        }
+        for s in &mut self.sweeps {
+            s.access(addr, is_store);
         }
     }
 
@@ -326,6 +369,7 @@ impl TrafficAnalyzer {
             m.dram_fills = h.dram_fills();
             m.dram_writebacks = h.dram_writebacks();
         }
+        m.sweep = self.sweeps.iter().map(|s| s.sweep_counters()).collect();
         m
     }
 }
@@ -384,6 +428,9 @@ impl Instrument for TrafficAnalyzer {
         if let Some(h) = &mut self.hierarchy {
             h.sweep(addrs, lanes);
         }
+        for s in &mut self.sweeps {
+            s.sweep(addrs, lanes);
+        }
     }
 
     fn wants_lanes(&self) -> bool {
@@ -398,7 +445,7 @@ impl Instrument for TrafficAnalyzer {
         if self.mrc.is_some() {
             needs |= LaneMask::ADDRS | LaneMask::SIZES | LaneMask::STORES;
         }
-        if self.hierarchy.is_some() {
+        if self.hierarchy.is_some() || !self.sweeps.is_empty() {
             needs |= LaneMask::ADDRS | LaneMask::STORES;
         }
         needs
@@ -447,6 +494,10 @@ pub struct TrafficMetrics {
     pub dram_fills: u64,
     /// Dirty lines written back to DRAM (== last level's writebacks).
     pub dram_writebacks: u64,
+    /// One [`SweepCounters`] per `--sweep` grid config, in grid order
+    /// (empty for non-sweep runs). Each entry's counters are bit-identical
+    /// to a standalone replay of the whole trace at that config.
+    pub sweep: Vec<SweepCounters>,
 }
 
 impl Default for TrafficMetrics {
@@ -483,6 +534,7 @@ impl Default for TrafficMetrics {
                 .collect(),
             dram_fills: 0,
             dram_writebacks: 0,
+            sweep: Vec::new(),
         }
     }
 }
@@ -520,6 +572,7 @@ impl TrafficMetrics {
             self.levels = src.levels;
             self.dram_fills = src.dram_fills;
             self.dram_writebacks = src.dram_writebacks;
+            self.sweep = src.sweep;
         }
     }
 
@@ -649,6 +702,10 @@ impl TrafficMetrics {
         dram.set("writeback_bytes", self.dram_writeback_bytes());
         dram.set("bytes_per_instr", self.dram_bytes_per_instr());
         j.set("dram", dram);
+        if !self.sweep.is_empty() {
+            let grid: Vec<Json> = self.sweep.iter().map(|s| s.to_json()).collect();
+            j.set("sweep", grid);
+        }
         j
     }
 }
@@ -939,6 +996,116 @@ mod tests {
         let s = t.finalize(10).to_json().to_string_pretty();
         assert!(s.contains("\"mode\": \"sampled\""), "{s}");
         assert!(s.contains("\"sample_rate\": 0.05"), "{s}");
+    }
+
+    #[test]
+    fn sweep_grid_matches_standalone_replays() {
+        // one-pass DSE: every grid config folded alongside the main
+        // replay must be bit-identical to a standalone HierarchyReplay
+        // fed the same trace — across per-event and lane delivery, and
+        // across the split-halves merge
+        use crate::sim::cache::ReplacementKind;
+        let mut no_alloc = HierarchyConfig::host(HierarchyPolicy::Inclusive);
+        no_alloc.write_allocate = false;
+        let mut rrip_l1 = LevelConfig::new("l1", 4 * 64, 2);
+        rrip_l1.replacement = ReplacementKind::Rrip;
+        let grid: &'static [HierarchyConfig] = Box::leak(
+            vec![
+                HierarchyConfig::uniform(
+                    vec![rrip_l1, LevelConfig::new("l2", 16 * 64, 4)],
+                    64,
+                    HierarchyPolicy::Inclusive,
+                ),
+                HierarchyConfig::uniform(
+                    vec![LevelConfig::new("l1", 8 * 64, 4)],
+                    64,
+                    HierarchyPolicy::Exclusive,
+                ),
+                no_alloc,
+            ]
+            .into_boxed_slice(),
+        );
+        let opts = TrafficOpts::default().with_sweep(Some(grid));
+        let mut rng = crate::util::Rng::new(59);
+        let events: Vec<TraceEvent> = (0..4000)
+            .map(|_| {
+                mem_ev(
+                    0x30_000 + rng.below(1 << 10) * 8,
+                    if rng.below(2) == 0 { 8 } else { 4 },
+                    rng.below(3) == 0,
+                )
+            })
+            .collect();
+
+        let mut per_event = TrafficAnalyzer::with_opts(opts);
+        let mut standalones: Vec<HierarchyReplay> =
+            grid.iter().map(|c| HierarchyReplay::new(c.clone())).collect();
+        for ev in &events {
+            per_event.on_event(ev);
+            if let TraceEvent::Instr(i) = ev {
+                let m = i.mem.unwrap();
+                for s in &mut standalones {
+                    s.access(m.addr, m.is_store);
+                }
+            }
+        }
+        let mut lane = TrafficAnalyzer::with_opts(opts);
+        let mut lanes = ChunkLanes::default();
+        for chunk in events.chunks(700) {
+            lanes.rebuild_masked(chunk, lane.lane_needs());
+            lane.on_chunk_lanes(chunk, &lanes);
+        }
+        let (a, b) = (per_event.finalize(4000), lane.finalize(4000));
+        assert_eq!(a, b, "sweep must be delivery-independent");
+        assert_eq!(a.sweep.len(), grid.len());
+        for (i, s) in standalones.iter().enumerate() {
+            assert_eq!(a.sweep[i], s.sweep_counters(), "grid point {i}");
+            assert_eq!(a.sweep[i].config, grid[i]);
+        }
+        // grid points genuinely differ from each other
+        assert!(a.sweep[0].dram_fills != a.sweep[1].dram_fills);
+
+        // the sweep rides the hierarchy half through the sharded merge
+        let mut mrc_half = TrafficAnalyzer::with_opts_parts(opts, TrafficParts::MRC);
+        let mut hier_half = TrafficAnalyzer::with_opts_parts(opts, TrafficParts::HIERARCHY);
+        for ev in &events {
+            mrc_half.on_event(ev);
+            hier_half.on_event(ev);
+        }
+        assert!(mrc_half.finalize(4000).sweep.is_empty());
+        let mut merged = mrc_half.finalize(4000);
+        merged.adopt_parts(hier_half.finalize(4000), TrafficParts::HIERARCHY);
+        assert_eq!(merged, a);
+
+        // JSON gains a "sweep" section only when a grid ran
+        let s = a.to_json().to_string_pretty();
+        assert!(s.contains("\"sweep\""), "{s}");
+        assert!(s.contains("write_allocate"), "{s}");
+        assert!(!TrafficMetrics::default().to_json().to_string_pretty().contains("\"sweep\""));
+    }
+
+    #[test]
+    fn spec_config_replaces_the_host_shape() {
+        let spec: &'static HierarchyConfig = Box::leak(Box::new(HierarchyConfig::uniform(
+            vec![LevelConfig::new("l1", 2 * 64, 2)],
+            64,
+            HierarchyPolicy::Exclusive,
+        )));
+        let opts = TrafficOpts::default().with_spec(Some(spec));
+        assert_eq!(opts.main_config(), *spec);
+        let mut t = TrafficAnalyzer::with_opts(opts);
+        for i in 0..64u64 {
+            t.record(0x1000 + i * 64, 8, false);
+        }
+        let m = t.finalize(64);
+        assert_eq!(m.levels.len(), 1);
+        assert_eq!(m.levels[0].capacity_bytes, 2 * 64);
+        assert_eq!(m.hierarchy_policy, HierarchyPolicy::Exclusive);
+        // no spec → exactly the host chain, bit for bit
+        assert_eq!(
+            TrafficOpts::default().main_config(),
+            HierarchyConfig::host(HierarchyPolicy::default())
+        );
     }
 
     #[test]

@@ -54,7 +54,10 @@ pub fn slope_knee(miss_ratio: &[f64]) -> Option<usize> {
     let mut best_drop = 0.0f64;
     for i in 1..miss_ratio.len() {
         let drop = miss_ratio[i - 1] - miss_ratio[i];
-        if drop > best_drop {
+        // A curve from a zero-access app is all 0/0 = NaN; NaN comparisons
+        // are false so such drops could never win, but be explicit: a knee
+        // must come from a finite slope.
+        if drop.is_finite() && drop > best_drop {
             best_i = i;
             best_drop = drop;
         }
@@ -229,6 +232,18 @@ mod tests {
         assert_eq!(slope_knee(&[0.50, 0.48, 0.46, 0.44]), None);
         assert_eq!(slope_knee(&[]), None);
         assert_eq!(slope_knee(&[0.7]), None);
+    }
+
+    #[test]
+    fn nan_curves_have_no_slope_knee() {
+        // an empty-traffic app divides 0 misses by 0 accesses everywhere
+        assert_eq!(slope_knee(&[f64::NAN; 8]), None);
+        // a NaN next to real points must neither win nor poison the scan:
+        // the NaN-adjacent drops are skipped, the real cliff still counts
+        assert_eq!(slope_knee(&[0.9, f64::NAN, 0.88, 0.2, 0.18]), Some(3));
+        // NaN drops alone (real points but flat) stay flat
+        assert_eq!(slope_knee(&[0.5, f64::NAN, 0.5, 0.5]), None);
+        assert_eq!(slope_knee(&[f64::INFINITY, 0.5, 0.5]), None);
     }
 
     #[test]

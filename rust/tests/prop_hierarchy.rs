@@ -25,9 +25,20 @@
 //!    on any suite kernel, and are strictly lower on a crafted trace whose
 //!    traffic is absorbed by upper levels — the double-counting the
 //!    hierarchy replay was built to remove.
+//! 6. **Spec defaulting ≡ host chain**: a `--hierarchy-spec` that spells
+//!    out the host shape (round-tripped through `from_spec_json`, exactly
+//!    the CLI path) produces bit-identical `TrafficMetrics` to the
+//!    spec-less default on all four deliveries (per-event, inline-chunked,
+//!    offload, sharded).
+//! 7. **Sweep ≡ standalone replays, end to end**: every `--sweep` grid
+//!    point folded through the full profile pipeline carries the same
+//!    `SweepCounters` as a standalone [`HierarchyReplay`] at that config
+//!    fed the captured access stream — the differential oracle behind the
+//!    one-pass DSE mode.
 
 use pisa_nmc::coordinator::{ProfileRequest, RunCtx};
-use pisa_nmc::interp::{Instrument, Machine, TraceEvent};
+use pisa_nmc::interp::{Instrument, Machine, PipelineMode, TraceEvent, Workers};
+use pisa_nmc::sim::cache::ReplacementKind;
 use pisa_nmc::ir::Program;
 use pisa_nmc::prop_assert;
 use pisa_nmc::testkit::{check_seeded, random_program};
@@ -359,15 +370,15 @@ fn inclusive_mode_never_hits_above_a_line_absent_below() {
     let mut rng = pisa_nmc::util::Rng::new(0x1C5);
     // footprint big enough to force evictions at every level of a scaled-
     // down chain, so back-invalidation actually fires
-    let mut h = HierarchyReplay::new(HierarchyConfig {
-        levels: vec![
-            LevelConfig { name: "l1", capacity_bytes: 8 * 64, ways: 2 },
-            LevelConfig { name: "l2", capacity_bytes: 32 * 64, ways: 4 },
-            LevelConfig { name: "llc", capacity_bytes: 128 * 64, ways: 8 },
+    let mut h = HierarchyReplay::new(HierarchyConfig::uniform(
+        vec![
+            LevelConfig::new("l1", 8 * 64, 2),
+            LevelConfig::new("l2", 32 * 64, 4),
+            LevelConfig::new("llc", 128 * 64, 8),
         ],
-        line_bytes: 64,
-        policy: HierarchyPolicy::Inclusive,
-    });
+        64,
+        HierarchyPolicy::Inclusive,
+    ));
     // span ~512 lines of footprint: bigger than every level, so evictions
     // and back-invalidations fire at L1, L2 *and* the LLC
     let trace = pisa_nmc::testkit::address_trace(&mut rng, 20_000, 4096);
@@ -410,14 +421,16 @@ fn exclusive_mode_reaches_aggregate_capacity_inclusive_does_not() {
     // the cold pass every access hits somewhere. Inclusive's effective
     // capacity is the last level (upper levels are subsets), and a 24-line
     // cyclic walk over a 16-line LRU misses every time (stack distance 23).
-    let shape = |policy| HierarchyConfig {
-        levels: vec![
-            LevelConfig { name: "l1", capacity_bytes: 4 * 64, ways: 4 },
-            LevelConfig { name: "l2", capacity_bytes: 8 * 64, ways: 8 },
-            LevelConfig { name: "llc", capacity_bytes: 16 * 64, ways: 16 },
-        ],
-        line_bytes: 64,
-        policy,
+    let shape = |policy| {
+        HierarchyConfig::uniform(
+            vec![
+                LevelConfig::new("l1", 4 * 64, 4),
+                LevelConfig::new("l2", 8 * 64, 8),
+                LevelConfig::new("llc", 16 * 64, 16),
+            ],
+            64,
+            policy,
+        )
     };
     const LINES: u64 = 24;
     const PASSES: u64 = 8;
@@ -525,4 +538,177 @@ fn hierarchy_is_strictly_below_the_bank_when_upper_levels_carry_the_traffic() {
     );
     // sanity: the default shapes make the collision argument above real
     assert_eq!(HIERARCHY_LEVELS[2].capacity_bytes / MRC_LINE_BYTES / 16, STRIDE);
+}
+
+// ---------------------------------------------------------------------------
+// 6. `--hierarchy-spec` defaulting ≡ the host chain, all four deliveries.
+
+/// Profile under one of the four deliveries: `None` = per-event, else the
+/// given chunked pipeline mode.
+fn profile_delivery(
+    p: &Program,
+    mode: Option<PipelineMode>,
+    traffic: TrafficOpts,
+) -> Result<TrafficMetrics, String> {
+    let req = ProfileRequest::program(p).traffic(traffic);
+    let req = match mode {
+        Some(m) => req.mode(m),
+        None => req.per_event(true),
+    };
+    req.run_metrics(&RunCtx::new()).map(|m| m.traffic).map_err(|e| e.to_string())
+}
+
+const DELIVERIES: [(Option<PipelineMode>, &str); 4] = [
+    (None, "per-event"),
+    (Some(PipelineMode::Inline), "inline"),
+    (Some(PipelineMode::Offload), "offload"),
+    (Some(PipelineMode::Sharded { workers: Workers::Auto }), "sharded"),
+];
+
+fn assert_traffic_bits_equal(
+    a: &TrafficMetrics,
+    b: &TrafficMetrics,
+    what: &str,
+) -> Result<(), String> {
+    prop_assert!(a.accesses == b.accesses, "{what}: accesses {} vs {}", a.accesses, b.accesses);
+    prop_assert!(a.cold_misses == b.cold_misses, "{what}: cold misses");
+    prop_assert!(a.footprint_lines == b.footprint_lines, "{what}: footprint");
+    prop_assert!(a.mrc_misses == b.mrc_misses, "{what}: MRC miss counts");
+    for (i, (x, y)) in a.mrc_miss_ratio.iter().zip(&b.mrc_miss_ratio).enumerate() {
+        prop_assert!(x.to_bits() == y.to_bits(), "{what}: ratio[{i}] {x} vs {y}");
+    }
+    prop_assert!(a.mrc_knee_bytes == b.mrc_knee_bytes, "{what}: knee");
+    prop_assert!(a.hierarchy_policy == b.hierarchy_policy, "{what}: policy label");
+    prop_assert!(a.levels == b.levels, "{what}: per-level counters");
+    prop_assert!(
+        (a.dram_fills, a.dram_writebacks) == (b.dram_fills, b.dram_writebacks),
+        "{what}: DRAM ({}, {}) vs ({}, {})",
+        a.dram_fills,
+        a.dram_writebacks,
+        b.dram_fills,
+        b.dram_writebacks
+    );
+    prop_assert!(
+        a.read_bytes == b.read_bytes && a.write_bytes == b.write_bytes,
+        "{what}: byte totals"
+    );
+    Ok(())
+}
+
+#[test]
+fn host_shaped_spec_is_bit_identical_to_the_default_on_all_four_deliveries() {
+    // the exact CLI path: serialize the host chain, re-parse the text as a
+    // --hierarchy-spec, leak it into the opts. A spec that merely *spells
+    // out* the defaults must not perturb a single bit of the metrics.
+    let host = HierarchyConfig::host(HierarchyPolicy::default());
+    let parsed = HierarchyConfig::from_spec_json(&host.to_json().to_string_compact())
+        .expect("the host chain's own serialization must parse as a spec");
+    assert_eq!(parsed, host, "spec round-trip must reproduce the host chain exactly");
+    let spec: &'static HierarchyConfig = Box::leak(Box::new(parsed));
+    check_seeded("host spec == default 4-way", 0x5EC5, 8, |rng| {
+        let p = random_program(rng);
+        for (mode, what) in DELIVERIES {
+            let with_spec =
+                profile_delivery(&p, mode, TrafficOpts::default().with_spec(Some(spec)))?;
+            let plain = profile_delivery(&p, mode, TrafficOpts::default())?;
+            assert_traffic_bits_equal(&with_spec, &plain, what)?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 7. Sweep grid points ≡ standalone replays through the full pipeline.
+
+/// A deliberately heterogeneous DSE grid: a small inclusive chain, an
+/// RRIP-fronted variant of the same shape (same aggregate capacity,
+/// different replacement — pruning must never conflate them), an
+/// exclusive two-level chain, and a no-write-allocate host chain.
+fn dse_grid() -> &'static [HierarchyConfig] {
+    let mut rrip_l1 = LevelConfig::new("l1", 8 * 64, 2);
+    rrip_l1.replacement = ReplacementKind::Rrip;
+    let mut no_alloc = HierarchyConfig::host(HierarchyPolicy::Inclusive);
+    no_alloc.write_allocate = false;
+    Box::leak(
+        vec![
+            HierarchyConfig::uniform(
+                vec![LevelConfig::new("l1", 8 * 64, 2), LevelConfig::new("l2", 64 * 64, 4)],
+                64,
+                HierarchyPolicy::Inclusive,
+            ),
+            HierarchyConfig::uniform(
+                vec![rrip_l1, LevelConfig::new("l2", 64 * 64, 4)],
+                64,
+                HierarchyPolicy::Inclusive,
+            ),
+            HierarchyConfig::uniform(
+                vec![LevelConfig::new("l1", 4 * 64, 4), LevelConfig::new("l2", 32 * 64, 8)],
+                64,
+                HierarchyPolicy::Exclusive,
+            ),
+            no_alloc,
+        ]
+        .into_boxed_slice(),
+    )
+}
+
+/// The sweep differential oracle: every grid point folded through the
+/// profile pipeline must carry exactly the counters of a standalone
+/// [`HierarchyReplay`] at that config fed the captured stream.
+fn assert_sweep_matches_standalone(
+    tr: &TrafficMetrics,
+    accs: &[(u64, u8, bool)],
+    grid: &[HierarchyConfig],
+) -> Result<(), String> {
+    prop_assert!(
+        tr.sweep.len() == grid.len(),
+        "sweep carried {} grid points, want {}",
+        tr.sweep.len(),
+        grid.len()
+    );
+    for (i, (cfg, got)) in grid.iter().zip(&tr.sweep).enumerate() {
+        prop_assert!(got.config == *cfg, "grid point {i} labeled with the wrong config");
+        let mut standalone = HierarchyReplay::new(cfg.clone());
+        for &(addr, _, is_store) in accs {
+            standalone.access(addr, is_store);
+        }
+        let want = standalone.sweep_counters();
+        prop_assert!(
+            *got == want,
+            "grid point {i} diverged from its standalone replay:\n  swept {:?}\n  want  {:?}",
+            got,
+            want
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn sweep_grid_matches_standalone_replays_on_random_programs() {
+    let grid = dse_grid();
+    check_seeded("sweep == standalone replays", 0xD5E, 8, |rng| {
+        let p = random_program(rng);
+        let tr = profile_delivery(&p, None, TrafficOpts::default().with_sweep(Some(grid)))?;
+        assert_sweep_matches_standalone(&tr, &capture_accesses(&p), grid)
+    });
+}
+
+#[test]
+fn sweep_grid_matches_standalone_replays_on_a_real_kernel_all_deliveries() {
+    // one-pass DSE acceptance: on a multi-chunk real kernel, every grid
+    // point is bit-identical to a standalone replay under *all four*
+    // deliveries — including sharded, where the sweep rides the `hier`
+    // shard group and merges back through the HIERARCHY adopt path
+    let grid = dse_grid();
+    let k = pisa_nmc::workloads::by_name("gesummv").unwrap();
+    let p = k.build(48, 7);
+    let accs = capture_accesses(&p);
+    assert!(accs.len() > 1000, "want a multi-chunk trace, got {}", accs.len());
+    for (mode, what) in DELIVERIES {
+        let tr = profile_delivery(&p, mode, TrafficOpts::default().with_sweep(Some(grid)))
+            .unwrap_or_else(|e| panic!("{what}: {e}"));
+        if let Err(msg) = assert_sweep_matches_standalone(&tr, &accs, grid) {
+            panic!("{what}: {msg}");
+        }
+    }
 }
